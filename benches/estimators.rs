@@ -1,0 +1,76 @@
+//! Estimator + parser latency benches against the paper's own budgets:
+//! GPUMemNet ≤ 16 ms (A100) / 32 ms (EPYC CPU); submission parsing ≤ 2.6 ms
+//! (paper §3.3 / §4.1).
+
+use carma::bench::{black_box, Bencher};
+use carma::estimators::gpumemnet::GpuMemNetEstimator;
+use carma::estimators::{FakeTensorEstimator, HorusEstimator, MemoryEstimator};
+use carma::workload::features::Arch;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::submission;
+use carma::workload::task::TaskSpec;
+
+fn main() {
+    let b = Bencher::default();
+    let zoo = ModelZoo::load();
+    let task = TaskSpec::from_zoo(0, zoo.find("resnet50", "imagenet", 64).unwrap(), 1, 0.0);
+
+    println!("== analytical estimators ==");
+    b.bench("estimate/horus", || {
+        black_box(HorusEstimator.estimate_gb(&task));
+    })
+    .report();
+    b.bench("estimate/faketensor", || {
+        black_box(FakeTensorEstimator.estimate_gb(&task));
+    })
+    .report();
+
+    println!("\n== submission parser (paper budget: 2.6 ms) ==");
+    let script = "#!/bin/bash\n#CARMA --model resnet50 --dataset imagenet --batch-size 64\n#CARMA --gpus 1 --epochs 1\npython train.py\n";
+    b.bench("parse_script+resolve", || {
+        let sub = submission::parse_script(script).unwrap();
+        black_box(submission::resolve(&zoo, &sub, 0, 0.0).unwrap());
+    })
+    .report();
+
+    println!("\n== GPUMemNet via PJRT (paper budget: 16 ms A100 / 32 ms CPU) ==");
+    match GpuMemNetEstimator::load("artifacts") {
+        Err(e) => println!("skipped (run `make artifacts`): {e}"),
+        Ok(est) => {
+            // uncached: defeat the feature cache by varying batch size
+            let mut f = task.features;
+            let mut bs = 0.0f32;
+            b.bench("gpumemnet/uncached_inference", || {
+                bs += 1.0;
+                f.batch_size = bs as f64;
+                let v = f.to_vec();
+                black_box(est.estimate_features(Arch::Cnn, &v).unwrap());
+            })
+            .report();
+            // cached (repeat models in a trace)
+            let v = task.features.to_vec();
+            b.bench("gpumemnet/cached_lookup", || {
+                black_box(est.estimate_features(Arch::Cnn, &v).unwrap());
+            })
+            .report();
+
+            // end-to-end budget check
+            let r = b.bench("gpumemnet/fresh_feature_vector", {
+                let mut i = 0.0f32;
+                move || {
+                    i += 1.0;
+                    let mut f2 = task.features;
+                    f2.acts_m += i as f64 * 1e-3;
+                    black_box(est.estimate_features(Arch::Cnn, &f2.to_vec()).unwrap());
+                }
+            });
+            r.report();
+            let ms = r.mean_ns() / 1e6;
+            println!(
+                "  -> {:.3} ms/inference vs paper budget 16 ms (A100) / 32 ms (CPU): {}",
+                ms,
+                if ms < 16.0 { "WITHIN A100 budget" } else if ms < 32.0 { "within CPU budget" } else { "OVER budget" }
+            );
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! L3 hot-path micro-benchmarks: mapping decisions, queues, monitor,
+//! allocator — the per-decision work CARMA does at each scheduling step.
+//! Target: decision latency ≪ the 60 s monitoring window (DESIGN.md §Perf).
+
+use carma::bench::{black_box, Bencher};
+use carma::cluster::allocator::SegmentAllocator;
+use carma::config::schema::PolicyKind;
+use carma::coordinator::monitor::Monitor;
+use carma::coordinator::policy::{self, GpuView, MappingRequest, Preconditions};
+use carma::coordinator::queue::TaskQueues;
+use carma::util::rng::Rng;
+
+fn views(n: usize) -> Vec<GpuView> {
+    let mut rng = Rng::new(1);
+    (0..n)
+        .map(|id| GpuView {
+            id,
+            free_gb: rng.range_f64(0.0, 40.0),
+            smact_window: rng.f64(),
+            n_tasks: rng.range_usize(0, 4),
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        })
+        .collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("== policy selection (per mapping decision) ==");
+    for policy in [
+        PolicyKind::Exclusive,
+        PolicyKind::RoundRobin,
+        PolicyKind::Magm,
+        PolicyKind::Lug,
+    ] {
+        let v = views(4);
+        let mut rr = 0;
+        let req = MappingRequest {
+            n_gpus: 1,
+            demand_gb: Some(8.0),
+            exclusive: false,
+        };
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: Some(5.0),
+        };
+        b.bench(&format!("select_gpus/{}", policy.name()), || {
+            black_box(policy::select_gpus(policy, &v, req, pre, &mut rr));
+        })
+        .report();
+    }
+
+    println!("\n== queues ==");
+    b.bench("queue/submit+pop x64", || {
+        let mut q = TaskQueues::new();
+        for i in 0..64 {
+            q.submit(i);
+        }
+        q.submit_recovery(99);
+        while black_box(q.pop_next()).is_some() {}
+    })
+    .report();
+
+    println!("\n== monitor (60s window @ 1Hz, 4 GPUs) ==");
+    let mut m = Monitor::new(4, 60.0);
+    let mut t = 0.0;
+    b.bench("monitor/push+windowed_smact", || {
+        t += 1.0;
+        for g in 0..4 {
+            m.push(g, t, 0.5);
+        }
+        black_box(m.windowed_smact(0));
+    })
+    .report();
+
+    println!("\n== segment allocator (task lifecycle: 3 slabs, scatter) ==");
+    let mut alloc = SegmentAllocator::new(40 * 1024);
+    let mut live: Vec<Vec<u64>> = Vec::new();
+    let mut rng = Rng::new(2);
+    b.bench("allocator/task_alloc_free_cycle", || {
+        if live.len() < 8 {
+            let mut segs = Vec::new();
+            for len in [665, rng.range_u64(256, 4096), rng.range_u64(256, 4096)] {
+                if let Some(s) = alloc.alloc_scatter(len, 4) {
+                    segs.extend(s);
+                }
+            }
+            live.push(segs);
+        } else {
+            let segs = live.remove(rng.range_usize(0, live.len()));
+            for s in segs {
+                alloc.free(s);
+            }
+        }
+        black_box(alloc.free_total());
+    })
+    .report();
+}

@@ -1,0 +1,67 @@
+//! End-to-end simulation throughput: one bench per paper experiment class.
+//! The whole 90-task trace must simulate in well under a second so the full
+//! `repro all` grid (~40 runs) stays interactive (DESIGN.md §Perf: the
+//! coordinator must never be the bottleneck).
+
+use carma::bench::{black_box, Bencher};
+use carma::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::run_trace;
+use carma::estimators;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{trace_60, trace_90};
+
+fn main() {
+    let b = Bencher::default();
+    let zoo = ModelZoo::load();
+    let t90 = trace_90(&zoo, 42);
+    let t60 = trace_60(&zoo, 42);
+
+    println!("== full-trace simulation (fig8/fig9/fig11 building block) ==");
+    for (name, policy, est) in [
+        ("exclusive_90task", PolicyKind::Exclusive, EstimatorKind::None),
+        ("magm_oracle_90task", PolicyKind::Magm, EstimatorKind::Oracle),
+        ("rr_blind_90task (OOM+recovery)", PolicyKind::RoundRobin, EstimatorKind::None),
+    ] {
+        let r = b.bench(name, || {
+            let mut cfg = CarmaConfig {
+                policy,
+                estimator: est,
+                colloc: CollocationMode::Mps,
+                ..Default::default()
+            };
+            if est == EstimatorKind::None {
+                cfg.smact_cap = None;
+            } else {
+                cfg.safety_margin_gb = 2.0;
+            }
+            let e = estimators::build(est, "artifacts").unwrap();
+            black_box(run_trace(cfg, e, &t90, "bench").report.completed);
+        });
+        r.report();
+        r.report_throughput(90.0, "tasks");
+    }
+
+    println!("\n== 60-task stress trace ==");
+    let r = b.bench("magm_horus_60task", || {
+        let cfg = CarmaConfig {
+            policy: PolicyKind::Magm,
+            estimator: EstimatorKind::Horus,
+            ..Default::default()
+        };
+        let e = estimators::build(EstimatorKind::Horus, "artifacts").unwrap();
+        black_box(run_trace(cfg, e, &t60, "bench").report.completed);
+    });
+    r.report();
+
+    println!("\n== trace generation ==");
+    b.bench("trace_90_generation", || {
+        black_box(trace_90(&zoo, 7).tasks.len());
+    })
+    .report();
+
+    println!("\n== zoo loading (embedded JSON parse) ==");
+    b.bench("model_zoo_load", || {
+        black_box(ModelZoo::load().entries.len());
+    })
+    .report();
+}

@@ -1,0 +1,24 @@
+use std::time::Instant;
+use carma::config::schema::*;
+use carma::coordinator::carma::run_trace;
+use carma::estimators;
+use carma::workload::{model_zoo::ModelZoo, trace::trace_90};
+
+fn main() {
+    let zoo = ModelZoo::load();
+    let trace = trace_90(&zoo, 42);
+    for period in [1.0, 5.0, 15.0] {
+        let mut cfg = CarmaConfig { policy: PolicyKind::Exclusive, estimator: EstimatorKind::None, ..Default::default() };
+        cfg.monitor.sample_period_s = period;
+        let est = estimators::build(EstimatorKind::None, "artifacts").unwrap();
+        let t = Instant::now();
+        let mut total = 0.0; let mut energy = 0.0;
+        for _ in 0..20 {
+            let est2 = estimators::build(EstimatorKind::None, "artifacts").unwrap();
+            let r = run_trace(cfg.clone(), est2, &trace, "p").report;
+            total = r.trace_total_min; energy = r.energy_mj;
+        }
+        let _ = est;
+        println!("period {period:>4}s: {:.2} ms/run  (total {total:.1}m energy {energy:.2}MJ)", t.elapsed().as_secs_f64()*1000.0/20.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Quickstart: submit a handful of training tasks to CARMA and watch the
+//! default setup (MAGM + GPUMemNet + SMACT<=80% + MPS, paper §4.4) place
+//! them on the simulated 4×A100 server.
+//!
+//! Run with artifacts built (`make artifacts`):
+//! ```
+//! cargo run --release --example quickstart
+//! ```
+
+use carma::config::schema::CarmaConfig;
+use carma::coordinator::carma::{run_label, run_trace};
+use carma::estimators;
+use carma::metrics::report::RunReport;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::submission;
+use carma::workload::trace::TraceSpec;
+
+const SCRIPTS: &[&str] = &[
+    "#CARMA --model resnet50 --dataset imagenet --batch-size 64 --epochs 1",
+    "#CARMA --model efficientnet_b0 --dataset cifar100 --batch-size 128 --epochs 20",
+    "#CARMA --model bert_base --dataset wikitext2 --batch-size 32 --epochs 1",
+    "#CARMA --model mobilenet_v2 --dataset imagenet --batch-size 32 --epochs 1",
+    "#CARMA --model resnet18 --dataset cifar100 --batch-size 64 --epochs 20",
+    "#CARMA --model xlnet_base --dataset wikitext2 --batch-size 8 --epochs 8",
+];
+
+fn main() -> Result<(), String> {
+    let zoo = ModelZoo::load();
+    let cfg = CarmaConfig::default();
+
+    // parse SLURM-like submissions into schedulable tasks, arriving 2 min apart
+    let mut tasks = Vec::new();
+    for (i, script) in SCRIPTS.iter().enumerate() {
+        let sub = submission::parse_script(script).map_err(|e| e.to_string())?;
+        let spec =
+            submission::resolve(&zoo, &sub, i, i as f64 * 120.0).map_err(|e| e.to_string())?;
+        println!(
+            "submitted {:<42} mem {:>5.1} GB  work {:>5.1} min  ({} GPU{})",
+            spec.label(),
+            spec.mem_gb,
+            spec.work_s / 60.0,
+            spec.n_gpus,
+            if spec.n_gpus > 1 { "s" } else { "" }
+        );
+        tasks.push(spec);
+    }
+    let trace = TraceSpec {
+        name: "quickstart".into(),
+        tasks,
+    };
+
+    // GPUMemNet runs through PJRT — estimates are produced by the AOT
+    // compiled JAX+Pallas classifier, not by Python
+    let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
+    println!("\nestimator: {} (served via PJRT CPU)", est.name());
+    for t in &trace.tasks {
+        if let Some(e) = est.estimate_gb(t) {
+            println!("  {:<42} estimated {e:>5.1} GB (actual {:>5.1})", t.label(), t.mem_gb);
+        }
+    }
+
+    let label = run_label(&cfg, est.name());
+    println!("\nrunning CARMA [{label}] ...\n");
+    let out = run_trace(cfg, est, &trace, &label);
+    println!("{}", RunReport::header());
+    println!("{}", out.report.row());
+    assert_eq!(out.report.completed, SCRIPTS.len());
+    println!("\nall {} tasks completed; {} OOM crash(es)", out.report.completed, out.report.oom_crashes);
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Reproduce every table and figure of the paper in one go (same as
+//! `carma repro all`) and print a final paper-vs-measured scorecard from
+//! the emitted result files.
+//!
+//! ```
+//! cargo run --release --example reproduce_paper
+//! ```
+
+use carma::experiments;
+use carma::util::json::Json;
+
+fn main() -> Result<(), String> {
+    let artifacts = "artifacts";
+    experiments::run("all", artifacts)?;
+
+    println!("\n================ scorecard (paper vs measured) ================\n");
+    let read = |name: &str| -> Option<Json> {
+        let text = std::fs::read_to_string(format!("{artifacts}/results/{name}.json")).ok()?;
+        Json::parse(&text).ok()
+    };
+
+    if let Some(fig8) = read("fig8") {
+        let rows = fig8.as_arr().unwrap();
+        let excl = rows[0].f64_of("trace_total_min");
+        let magm = rows[4].f64_of("trace_total_min");
+        score("Fig 8a  MAGM+MPS total vs Exclusive", -30.13, -(excl - magm) / excl * 100.0);
+        let ew = rows[0].f64_of("avg_waiting_min");
+        let sw = rows[2].f64_of("avg_waiting_min");
+        score("Fig 8b  streams waiting vs Exclusive", -53.0, -(ew - sw) / ew * 100.0);
+    }
+    if let Some(t4) = read("table4") {
+        let rows = t4.as_arr().unwrap();
+        score("Tab 4   RR blind #OOM", 8.0, rows[0].f64_of("oom_crashes"));
+        score("Tab 4   MAGM(75%,5GB) #OOM", 1.0, rows[5].f64_of("oom_crashes"));
+    }
+    if let Some(t5) = read("table5") {
+        let rows = t5.as_arr().unwrap();
+        score("Tab 5   GPUMemNet(80%) #OOM", 0.0, rows[5].f64_of("oom_crashes"));
+    }
+    if let Some(f11) = read("fig11") {
+        let rows = f11.as_arr().unwrap();
+        let excl = rows[0].f64_of("trace_total_min");
+        let gmn = rows[7].f64_of("trace_total_min");
+        score("Fig 11  MAGM+GPUMemNet total vs Excl", -26.7, -(excl - gmn) / excl * 100.0);
+        score("Tab 6   GPUMemNet #OOM", 1.0, rows[7].f64_of("oom_crashes"));
+    }
+    if let Some(t7) = read("table7_summary") {
+        score("Tab 7   energy reduction %", -14.16, -t7.f64_of("reduction_pct"));
+        score("Tab 7   Exclusive MJ", 33.2, t7.f64_of("exclusive_mj"));
+        score("Tab 7   MAGM+GPUMemNet MJ", 28.5, t7.f64_of("gpumemnet_mj"));
+    }
+    println!("\nfull details: artifacts/results/*.json|csv and EXPERIMENTS.md");
+    Ok(())
+}
+
+fn score(what: &str, paper: f64, ours: f64) {
+    println!("{what:<42} paper {paper:>8.2}   measured {ours:>8.2}");
+}

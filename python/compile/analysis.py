@@ -1,0 +1,131 @@
+"""Dataset analyses (paper Figs. 3 & 4) + cross-language golden files.
+
+* Fig. 3 — staircase growth: GPU memory vs MLP hidden width at bs=32
+  (ImageNet-dim input), showing the allocator-pool plateaus.
+* Fig. 4 — PCA of each dataset colored by memory class, showing that the
+  discretized classes are separable (classification is well-posed).
+* ``data/memsim_golden.json`` — random feature vectors + memsim outputs,
+  pinning the Rust `workload::memsim` mirror to the Python reference.
+
+Run as ``python -m compile.analysis`` from ``python/``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+import numpy as np
+
+from . import dataset as ds
+from . import memsim
+from .memsim import TaskFeatures
+
+
+def artifacts_dir() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", "artifacts"))
+
+
+def data_dir() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", "data"))
+
+
+def fig3_staircase(out_path: str) -> None:
+    """Memory vs MLP width sweep (depth=3, bs=32, ImageNet input)."""
+    rows = ["width,params_m,mem_gb"]
+    for width in range(64, 8192 + 1, 64):
+        dims = [150528, width, width, width, 1000]
+        params = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        acts = sum(dims[1:])
+        f = TaskFeatures(
+            arch="mlp",
+            n_linear=4.0,
+            params_m=params / 1e6,
+            acts_m=acts / 1e6,
+            batch_size=32.0,
+            input_dim=150528.0,
+            output_dim=1000.0,
+            depth_total=4.0,
+            width_max=float(width),
+        )
+        rows.append(f"{width},{params / 1e6:.3f},{memsim.measured_gb(f):.4f}")
+    with open(out_path, "w") as fh:
+        fh.write("\n".join(rows) + "\n")
+
+
+def _pca2(X: np.ndarray) -> np.ndarray:
+    Xc = X - X.mean(axis=0)
+    Xc = Xc / (Xc.std(axis=0) + 1e-9)
+    _u, _s, vt = np.linalg.svd(Xc, full_matrices=False)
+    return Xc @ vt[:2].T
+
+
+def fig4_pca(out_dir: str, n: int = 800) -> None:
+    for arch in ("mlp", "cnn", "transformer"):
+        samples = ds.generate(arch, n, seed=11)
+        X = np.array([s.features for s in samples], dtype=np.float64)
+        # normalize like the model does (log scales) for a meaningful PCA
+        Xn = X.copy()
+        for col in (4, 5, 10, 11, 12, 14):
+            Xn[:, col] = np.log1p(np.maximum(Xn[:, col], 0.0))
+        Xn[:, 6] = np.log2(np.maximum(Xn[:, 6], 1.0))
+        pcs = _pca2(Xn)
+        rg = 1.0 if arch == "mlp" else 8.0
+        rows = ["pc1,pc2,label"]
+        for i, s in enumerate(samples):
+            rows.append(
+                f"{pcs[i, 0]:.4f},{pcs[i, 1]:.4f},{memsim.label_for(s.mem_gb, rg)}"
+            )
+        with open(os.path.join(out_dir, f"fig4_{arch}.csv"), "w") as fh:
+            fh.write("\n".join(rows) + "\n")
+
+
+def memsim_golden(out_path: str, n: int = 64) -> None:
+    rng = random.Random(1234)
+    cases = []
+    for _ in range(n):
+        arch = rng.choice(["mlp", "cnn", "transformer"])
+        f = TaskFeatures(
+            arch=arch,
+            n_linear=float(rng.randint(0, 64)),
+            n_conv=float(rng.randint(0, 96) if arch == "cnn" else 0),
+            n_batchnorm=float(rng.randint(0, 64)),
+            n_dropout=float(rng.randint(0, 16)),
+            params_m=rng.uniform(0.1, 900.0),
+            acts_m=rng.uniform(0.01, 300.0),
+            batch_size=float(rng.choice([1, 4, 8, 16, 32, 64, 128, 256, 512])),
+            n_gpus=float(rng.choice([1, 1, 1, 2, 4])),
+            input_dim=float(rng.choice([784, 3072, 150528, 30522])),
+            output_dim=float(rng.choice([10, 100, 1000, 30522])),
+            seq_or_spatial=float(rng.choice([0, 32, 224, 512, 1024])),
+            depth_total=float(rng.randint(1, 96)),
+            width_max=float(rng.choice([64, 512, 1024, 2048])),
+        )
+        cases.append(
+            {
+                "arch": arch,
+                "features": f.to_vec(),
+                "mem_gb": memsim.measured_gb(f),
+                "label_1gb": memsim.label_for(memsim.measured_gb(f), 1.0),
+                "label_8gb": memsim.label_for(memsim.measured_gb(f), 8.0),
+            }
+        )
+    with open(out_path, "w") as fh:
+        json.dump(cases, fh, indent=1)
+
+
+def main() -> None:
+    out = os.path.join(artifacts_dir(), "analysis")
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(data_dir(), exist_ok=True)
+    fig3_staircase(os.path.join(out, "fig3_staircase.csv"))
+    fig4_pca(out)
+    memsim_golden(os.path.join(data_dir(), "memsim_golden.json"))
+    print(f"analysis written to {out}; memsim golden refreshed")
+
+
+if __name__ == "__main__":
+    main()

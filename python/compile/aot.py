@@ -1,0 +1,157 @@
+"""AOT export: lower the L2/L1 graphs to HLO *text* for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (``artifacts/``):
+  gpumemnet_mlp.hlo.txt / _cnn / _tfm   — MLP-ensemble estimators, weights
+                                          baked, Pallas ensemble kernel inside
+  gpumemnet_cnn_tf.hlo.txt / _tfm_tf    — Transformer-classifier estimators
+                                          (Pallas encoder kernel inside)
+  gpumemnet_manifest.json               — class count / bucket size per file
+  lm_init.hlo.txt, lm_step.hlo.txt      — live-mode LM trainer (init + one
+                                          Adam step) for examples/live_training
+  lm_manifest.json                      — flat parameter layout for Rust
+
+Run as ``python -m compile.aot`` from ``python/`` (``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import livemodel, model
+from .train import artifacts_dir, load_folded, load_transformer
+
+SHORTS = ("mlp", "cnn", "tfm")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently reads back as ZEROS — the baked GPUMemNet weights
+    # would vanish and the classifier would answer class 0 for everything.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constants in HLO export"
+    return text
+
+
+def write_hlo(path: str, lowered) -> None:
+    text = to_hlo_text(lowered)
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_gpumemnet(out_dir: str) -> None:
+    manifest = {}
+    for short in SHORTS:
+        wpath = os.path.join(out_dir, f"gpumemnet_{short}_weights.npz")
+        folded, n_classes, range_gb = load_folded(wpath)
+
+        def infer(x, folded=folded, n_classes=n_classes):
+            return (model.ensemble_infer(folded, x, n_classes, use_pallas=True),)
+
+        spec = jax.ShapeDtypeStruct((1, 16), jnp.float32)
+        write_hlo(
+            os.path.join(out_dir, f"gpumemnet_{short}.hlo.txt"),
+            jax.jit(infer).lower(spec),
+        )
+        manifest[f"gpumemnet_{short}.hlo.txt"] = {
+            "family": "mlp_ensemble",
+            "arch": short,
+            "n_classes": n_classes,
+            "range_gb": range_gb,
+            "inputs": [["f32", [1, 16]]],
+        }
+
+        # transformer-classifier variant (completeness / ablation benches)
+        tpath = os.path.join(out_dir, f"gpumemnet_{short}_tf.npz")
+        if os.path.exists(tpath):
+            params, tn_classes, trange = load_transformer(tpath)
+
+            def tinfer(x, seq, params=params):
+                return (model.transformer_forward(params, x, seq, use_pallas=True),)
+
+            sspec = jax.ShapeDtypeStruct((1, model.SEQ_LEN, 3), jnp.float32)
+            write_hlo(
+                os.path.join(out_dir, f"gpumemnet_{short}_tf.hlo.txt"),
+                jax.jit(tinfer).lower(spec, sspec),
+            )
+            manifest[f"gpumemnet_{short}_tf.hlo.txt"] = {
+                "family": "transformer",
+                "arch": short,
+                "n_classes": tn_classes,
+                "range_gb": trange,
+                "inputs": [["f32", [1, 16]], ["f32", [1, model.SEQ_LEN, 3]]],
+            }
+
+    with open(os.path.join(out_dir, "gpumemnet_manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+
+
+def export_lm(out_dir: str, large: bool = False) -> None:
+    cfg = livemodel.LARGE if large else livemodel.LmConfig()
+    names = livemodel.param_names(cfg)
+    n = len(names)
+
+    init_fn = functools.partial(livemodel.flat_init, cfg, 0)
+    write_hlo(os.path.join(out_dir, "lm_init.hlo.txt"), jax.jit(init_fn).lower())
+
+    flat_step = livemodel.make_flat_step(cfg)
+    p0 = livemodel.init(cfg, 0)
+    specs = [jax.ShapeDtypeStruct(p0[x].shape, jnp.float32) for x in names]
+    arg_specs = (
+        specs * 3
+        + [jax.ShapeDtypeStruct((), jnp.float32)]
+        + [jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)]
+    )
+    write_hlo(os.path.join(out_dir, "lm_step.hlo.txt"), jax.jit(flat_step).lower(*arg_specs))
+
+    n_params = int(sum(np.prod(p0[x].shape) for x in names))
+    manifest = {
+        "config": cfg._asdict(),
+        "n_arrays": n,
+        "param_names": names,
+        "param_shapes": {x: list(p0[x].shape) for x in names},
+        "n_params": n_params,
+        "arg_layout": "params*n, m*n, v*n, step_f32_scalar, tokens_i32[batch, seq_len+1]",
+        "out_layout": "params*n, m*n, v*n, loss_f32_scalar",
+    }
+    with open(os.path.join(out_dir, "lm_manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"  lm: {n} arrays, {n_params/1e6:.2f} M params")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true", help="export the ~110M-param LM")
+    ap.add_argument("--skip-lm", action="store_true")
+    ap.add_argument("--out", default=None, help="(compat) unused single-file output")
+    args = ap.parse_args(argv)
+
+    out_dir = artifacts_dir()
+    os.makedirs(out_dir, exist_ok=True)
+    print("exporting GPUMemNet estimators:")
+    export_gpumemnet(out_dir)
+    if not args.skip_lm:
+        print("exporting live-mode LM trainer:")
+        export_lm(out_dir, large=args.large)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Synthetic dataset generation for GPUMemNet (paper §3.1).
+
+Implements the paper's dataset-collection principles:
+
+* focus on *architecture types* (MLP / CNN / Transformer), not named models;
+* representative feature ranges (no thousand-layer MLPs);
+* approximately uniform coverage of the feature space;
+* diverse shapes (uniform, pyramid, hourglass topologies);
+* diverse layer mixes (batch-norm / dropout variants);
+* varying input and output sizes.
+
+Ground-truth "measured" memory comes from :mod:`memsim` (DESIGN.md §1),
+with a small multiplicative measurement noise, then discretized into
+fixed-size classes.
+
+Each sample is ``(features[16], layer_seq[SEQ_LEN, 3], label)``; the
+layer sequence feeds the Transformer-based estimator, the flat features
+feed both.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+
+from . import memsim
+from .memsim import TaskFeatures, activation_encoding
+
+SEQ_LEN = 32  # layer-sequence length fed to the transformer estimator
+# layer type ids used in the (type, acts, params) tuples
+LT_LINEAR, LT_CONV, LT_NORM, LT_ATTENTION, LT_FFN = 1.0, 2.0, 3.0, 4.0, 5.0
+
+NOISE_STD = 0.02  # multiplicative measurement noise (sigma)
+
+BATCH_SIZES = [8, 16, 32, 64, 128, 256, 512]
+ACTIVATIONS = list(memsim.ACTIVATION_ANGLE.keys())
+
+
+@dataclass
+class Sample:
+    features: list[float]  # 16 floats (DESIGN.md §6)
+    layer_seq: list[list[float]]  # SEQ_LEN x (type, acts_m, params_m)
+    mem_gb: float  # noisy "measured" memory
+    mem_gb_clean: float  # memsim without noise
+    arch: str
+
+
+def _pad_seq(seq: list[list[float]]) -> list[list[float]]:
+    """Pad/truncate the per-layer tuple sequence to SEQ_LEN.
+
+    Long networks are *pooled* (adjacent tuples merged) instead of
+    truncated so total params/acts are preserved.
+    """
+    if len(seq) > SEQ_LEN:
+        merged: list[list[float]] = []
+        group = max(1, math.ceil(len(seq) / SEQ_LEN))
+        for i in range(0, len(seq), group):
+            chunk = seq[i : i + group]
+            merged.append(
+                [
+                    chunk[0][0],
+                    sum(c[1] for c in chunk),
+                    sum(c[2] for c in chunk),
+                ]
+            )
+        seq = merged[:SEQ_LEN]
+    while len(seq) < SEQ_LEN:
+        seq.append([0.0, 0.0, 0.0])
+    return seq
+
+
+def _shape_widths(rng: random.Random, depth: int, w_max: int) -> list[int]:
+    """Uniform / pyramid / hourglass width profiles (paper §3.1)."""
+    kind = rng.choice(["uniform", "pyramid", "hourglass"])
+    if kind == "uniform" or depth == 1:
+        return [w_max] * depth
+    if kind == "pyramid":
+        # exponential decay towards the output
+        w_min = max(8, w_max // rng.choice([4, 8, 16]))
+        return [
+            max(w_min, int(w_max * (w_min / w_max) ** (i / max(1, depth - 1))))
+            for i in range(depth)
+        ]
+    # hourglass: narrow middle
+    w_min = max(8, w_max // rng.choice([4, 8]))
+    mid = (depth - 1) / 2.0
+    return [
+        max(
+            w_min,
+            int(w_min + (w_max - w_min) * abs(i - mid) / max(mid, 1.0)),
+        )
+        for i in range(depth)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Architecture samplers
+# ---------------------------------------------------------------------------
+
+
+def sample_mlp(rng: random.Random) -> Sample:
+    input_dim = rng.choice([784, 3072, 10240, 49152, 150528])
+    output_dim = rng.choice([2, 10, 100, 365, 1000])
+    depth = rng.randint(1, 10)
+    w_max = rng.choice([64, 128, 256, 512, 1024, 2048, 4096, 8192, 12288])
+    widths = _shape_widths(rng, depth, w_max)
+    use_bn = rng.random() < 0.5
+    n_dropout = rng.randint(0, depth)
+    act = rng.choice(ACTIVATIONS)
+    bs = rng.choice(BATCH_SIZES)
+
+    dims = [input_dim] + widths + [output_dim]
+    params = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+    acts = sum(dims[1:])  # per-sample activations stored for backward
+    if use_bn:
+        params += 2 * sum(widths)
+        acts += sum(widths)
+
+    seq = []
+    for i in range(len(dims) - 1):
+        seq.append(
+            [
+                LT_LINEAR,
+                dims[i + 1] / 1e6,
+                (dims[i] * dims[i + 1] + dims[i + 1]) / 1e6,
+            ]
+        )
+        if use_bn and i < len(widths):
+            seq.append([LT_NORM, dims[i + 1] / 1e6, 2 * dims[i + 1] / 1e6])
+
+    cos, sin = activation_encoding(act)
+    f = TaskFeatures(
+        arch="mlp",
+        n_linear=float(depth + 1),
+        n_batchnorm=float(depth if use_bn else 0),
+        n_dropout=float(n_dropout),
+        params_m=params / 1e6,
+        acts_m=acts / 1e6,
+        batch_size=float(bs),
+        n_gpus=1.0,
+        act_cos=cos,
+        act_sin=sin,
+        input_dim=float(input_dim),
+        output_dim=float(output_dim),
+        seq_or_spatial=0.0,
+        depth_total=float(depth + 1),
+        width_max=float(w_max),
+    )
+    return _finish(rng, f, seq)
+
+
+def sample_cnn(rng: random.Random) -> Sample:
+    spatial = rng.choice([32, 64, 128, 224, 299])
+    in_ch = 3
+    n_stages = rng.randint(2, 5)
+    convs_per_stage = rng.randint(1, 16)
+    base_ch = rng.choice([16, 24, 32, 48, 64, 96, 128])
+    output_dim = rng.choice([10, 100, 1000])
+    act = rng.choice(["relu", "gelu", "silu", "leaky_relu"])
+    # large batches only plausible at small resolutions
+    bs = rng.choice(BATCH_SIZES if spatial <= 64 else BATCH_SIZES[:6])
+    use_bn = rng.random() < 0.85
+    n_dropout = rng.randint(0, 2)
+    # some nets keep full resolution through the first stage(s), which
+    # blows up activation memory — needed to cover the >8 GB classes
+    late_downsample = rng.random() < 0.35
+
+    params = 0.0
+    acts = 0.0
+    n_conv = 0
+    seq = []
+    ch = in_ch
+    hw = spatial
+    for s in range(n_stages):
+        out_ch = base_ch * (2**s)
+        for c in range(convs_per_stage):
+            # downsample at stage start (unless late_downsample keeps the
+            # first stage at full resolution)
+            stride = 2 if c == 0 and not (late_downsample and s == 0) else 1
+            hw = max(1, hw // stride)
+            p = ch * out_ch * 9 + out_ch
+            a = out_ch * hw * hw
+            params += p
+            acts += a
+            n_conv += 1
+            seq.append([LT_CONV, a / 1e6, p / 1e6])
+            if use_bn:
+                params += 2 * out_ch
+                acts += a
+                seq.append([LT_NORM, a / 1e6, 2 * out_ch / 1e6])
+            ch = out_ch
+    # global-average-pool head
+    head_p = ch * output_dim + output_dim
+    params += head_p
+    acts += output_dim
+    seq.append([LT_LINEAR, output_dim / 1e6, head_p / 1e6])
+
+    cos, sin = activation_encoding(act)
+    f = TaskFeatures(
+        arch="cnn",
+        n_linear=1.0,
+        n_conv=float(n_conv),
+        n_batchnorm=float(n_conv if use_bn else 0),
+        n_dropout=float(n_dropout),
+        params_m=params / 1e6,
+        acts_m=acts / 1e6,
+        batch_size=float(bs),
+        n_gpus=1.0,
+        act_cos=cos,
+        act_sin=sin,
+        input_dim=float(3 * spatial * spatial),
+        output_dim=float(output_dim),
+        seq_or_spatial=float(spatial),
+        depth_total=float(n_conv + 1),
+        width_max=float(base_ch * (2 ** (n_stages - 1))),
+    )
+    return _finish(rng, f, seq)
+
+
+def sample_transformer(rng: random.Random) -> Sample:
+    d_model = rng.choice([64, 128, 256, 384, 512, 768, 1024, 1280, 1536, 2048])
+    n_layers = rng.randint(2, 48)
+    n_heads = max(1, d_model // 64)
+    d_ff = 4 * d_model
+    seq_len = rng.choice([128, 256, 512, 1024, 2048])
+    vocab = rng.choice([8192, 16384, 30522, 50257])
+    bs = rng.choice([1, 2, 4, 8, 16, 32, 64])
+    act = rng.choice(["gelu", "relu", "silu"])
+    n_dropout = rng.randint(0, 3 * n_layers)
+
+    embed_p = vocab * d_model + seq_len * d_model
+    attn_p = 4 * d_model * d_model + 4 * d_model
+    ffn_p = 2 * d_model * d_ff + d_model + d_ff
+    norm_p = 4 * d_model
+    params = embed_p + n_layers * (attn_p + ffn_p + norm_p) + d_model * vocab
+
+    # stored activations per sample: ~10 d-wide tensors per block plus the
+    # attention matrices (heads * seq^2)
+    acts_block = seq_len * d_model * 10.0 + n_heads * seq_len * seq_len
+    acts = seq_len * d_model + n_layers * acts_block + seq_len * vocab * 0.25
+
+    seq = []
+    seq.append([LT_LINEAR, seq_len * d_model / 1e6, embed_p / 1e6])
+    for _ in range(n_layers):
+        seq.append(
+            [
+                LT_ATTENTION,
+                (seq_len * d_model * 4 + n_heads * seq_len * seq_len) / 1e6,
+                attn_p / 1e6,
+            ]
+        )
+        seq.append([LT_FFN, seq_len * (d_ff + d_model) / 1e6, ffn_p / 1e6])
+        seq.append([LT_NORM, 2 * seq_len * d_model / 1e6, norm_p / 1e6])
+
+    cos, sin = activation_encoding(act)
+    f = TaskFeatures(
+        arch="transformer",
+        n_linear=float(6 * n_layers + 2),
+        n_batchnorm=float(2 * n_layers + 1),  # layer norms
+        n_dropout=float(n_dropout),
+        params_m=params / 1e6,
+        acts_m=acts / 1e6,
+        batch_size=float(bs),
+        n_gpus=1.0,
+        act_cos=cos,
+        act_sin=sin,
+        input_dim=float(vocab),
+        output_dim=float(vocab),
+        seq_or_spatial=float(seq_len),
+        depth_total=float(n_layers),
+        width_max=float(d_model),
+    )
+    return _finish(rng, f, seq)
+
+
+def _finish(rng: random.Random, f: TaskFeatures, seq: list[list[float]]) -> Sample:
+    clean = memsim.measured_gb(f)
+    noisy = clean * (1.0 + NOISE_STD * rng.gauss(0.0, 1.0))
+    return Sample(
+        features=f.to_vec(),
+        layer_seq=_pad_seq(seq),
+        mem_gb=max(noisy, 0.7),
+        mem_gb_clean=clean,
+        arch=f.arch,
+    )
+
+
+SAMPLERS = {"mlp": sample_mlp, "cnn": sample_cnn, "transformer": sample_transformer}
+
+
+def generate(arch: str, n: int, seed: int = 0) -> list[Sample]:
+    """Generate ``n`` samples for one architecture dataset.
+
+    Rejection-samples towards a flatter class histogram ("uniform feature
+    distribution", paper §3.1): over-full classes are resampled with
+    probability proportional to how over-represented they are.
+    """
+    rng = random.Random(seed ^ hash(arch) & 0xFFFFFFFF)
+    sampler = SAMPLERS[arch]
+    range_gb = 1.0 if arch == "mlp" else 8.0
+    n_classes = memsim.num_classes(range_gb)
+    target = n / n_classes
+    counts = [0] * n_classes
+    out: list[Sample] = []
+    attempts = 0
+    while len(out) < n and attempts < n * 30:
+        attempts += 1
+        s = sampler(rng)
+        c = memsim.label_for(s.mem_gb, range_gb)
+        # soft balancing: accept with decreasing probability once a class
+        # is over target (hard rejection starves classes that are simply
+        # unreachable for an architecture)
+        over = counts[c] / max(target, 1.0)
+        if over > 1.0 and rng.random() < min(0.95, 1.0 - 1.0 / over):
+            continue
+        counts[c] += 1
+        out.append(s)
+    return out

@@ -1,0 +1,118 @@
+"""Pallas kernel: fused ensemble-MLP classifier forward (GPUMemNet L1).
+
+The GPUMemNet estimator is an *ensemble* of small MLP classifiers whose
+predictions are averaged (paper §3.2 / Fig. 5a).  The naive formulation
+launches M independent forwards and reduces; this kernel fuses the whole
+ensemble into one pass:
+
+* grid = (M,) — one grid step per ensemble member;
+* each step keeps the member's full weight stack resident in VMEM
+  (weights are (D, D)-padded with D=64; one member's stack is
+  (2 + L)·D·D·4 B ≈ 96 KiB for L=4 — far under the ~16 MiB VMEM budget,
+  see DESIGN.md §Hardware-Adaptation);
+* the member's (L+2)-layer forward runs entirely in registers/VMEM —
+  the only HBM traffic is the weight stream and one [B, D] accumulation;
+* members accumulate into the output block, which stays revisited across
+  the sequential grid (the standard Pallas reduction idiom: initialize at
+  step 0 with ``pl.when``).
+
+Heterogeneous member depth/width (paper: 1–8 hidden layers, decaying
+widths) is encoded structurally: narrower members zero-pad weight columns;
+shallower members use identity (w=I, BN folded to s=1, t=0) padding
+layers, which are exact no-ops after ReLU since hidden activations are
+non-negative.
+
+On a real TPU the per-step work is D×D matmuls on the MXU; lowered here
+with ``interpret=True`` because CPU PJRT cannot execute Mosaic
+custom-calls (AOT recipe).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    x_ref,
+    w_in_ref,
+    b_in_ref,
+    s_in_ref,
+    t_in_ref,
+    w_h_ref,
+    b_h_ref,
+    s_h_ref,
+    t_h_ref,
+    w_out_ref,
+    b_out_ref,
+    o_ref,
+    *,
+    n_hidden: int,
+    n_members: int,
+):
+    m = pl.program_id(0)
+    x = x_ref[...]  # [B, D]
+    h = x @ w_in_ref[0] + b_in_ref[0]
+    h = jnp.maximum(h * s_in_ref[0] + t_in_ref[0], 0.0)
+    for l in range(n_hidden):  # static unroll: L is a compile-time constant
+        h2 = h @ w_h_ref[0, l] + b_h_ref[0, l]
+        h = jnp.maximum(h2 * s_h_ref[0, l] + t_h_ref[0, l], 0.0)
+    logits = h @ w_out_ref[0] + b_out_ref[0]
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += logits / n_members
+
+
+def ensemble_mlp_forward(x, p, *, interpret: bool = True):
+    """Fused ensemble forward; same contract as ``ref.ensemble_mlp_forward``.
+
+    x: f32[B, D]; p: folded parameter dict (see ref.py). Returns f32[B, D]
+    mean-over-members logits.
+    """
+    M, D, _ = p["w_in"].shape
+    L = p["w_h"].shape[1]
+    B = x.shape[0]
+
+    member = lambda m: (m, 0)  # noqa: E731 — block index maps
+    member3 = lambda m: (m, 0, 0)  # noqa: E731
+    member4 = lambda m: (m, 0, 0, 0)  # noqa: E731
+    whole = lambda m: (0, 0)  # noqa: E731
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_hidden=L, n_members=M),
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((B, D), whole),  # x — resident across all steps
+            pl.BlockSpec((1, D, D), member3),  # w_in
+            pl.BlockSpec((1, D), member),  # b_in
+            pl.BlockSpec((1, D), member),  # s_in
+            pl.BlockSpec((1, D), member),  # t_in
+            pl.BlockSpec((1, L, D, D), member4),  # w_h
+            pl.BlockSpec((1, L, D), member3),  # b_h
+            pl.BlockSpec((1, L, D), member3),  # s_h
+            pl.BlockSpec((1, L, D), member3),  # t_h
+            pl.BlockSpec((1, D, D), member3),  # w_out
+            pl.BlockSpec((1, D), member),  # b_out
+        ],
+        out_specs=pl.BlockSpec((B, D), whole),  # accumulated across steps
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=interpret,
+    )(
+        x,
+        p["w_in"],
+        p["b_in"],
+        p["s_in"],
+        p["t_in"],
+        p["w_h"],
+        p["b_h"],
+        p["s_h"],
+        p["t_h"],
+        p["w_out"],
+        p["b_out"],
+    )

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined *here*; pytest
+(``python/tests/test_kernel.py``) asserts the Pallas implementations match
+these references across hypothesis-generated shapes/dtypes.  The L2 model
+uses the reference path for training (fast on CPU) and the Pallas path for
+the exported inference graph.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ensemble_mlp_forward(x, p):
+    """Folded-BN inference forward for the MLP ensemble classifier.
+
+    x: f32[B, D]                     (already normalized + padded)
+    p: dict with
+       w_in f32[M, D, D], b_in f32[M, D], s_in f32[M, D], t_in f32[M, D]
+       w_h  f32[M, L, D, D], b_h f32[M, L, D], s_h f32[M, L, D], t_h f32[M, L, D]
+       w_out f32[M, D, D], b_out f32[M, D]
+    returns mean-over-members logits f32[B, D].
+
+    Layer semantics per member: relu(bn(linear(x))) with BN folded into the
+    affine (s, t); padding hidden layers are identity (w=I, s=1, t=0), which
+    ReLU leaves intact because post-ReLU activations are non-negative.
+    """
+    M = p["w_in"].shape[0]
+    L = p["w_h"].shape[1]
+    acc = jnp.zeros((x.shape[0], p["w_out"].shape[2]), dtype=x.dtype)
+    for m in range(M):
+        h = x @ p["w_in"][m] + p["b_in"][m]
+        h = jnp.maximum(h * p["s_in"][m] + p["t_in"][m], 0.0)
+        for l in range(L):
+            h2 = h @ p["w_h"][m, l] + p["b_h"][m, l]
+            h = jnp.maximum(h2 * p["s_h"][m, l] + p["t_h"][m, l], 0.0)
+        acc = acc + h @ p["w_out"][m] + p["b_out"][m]
+    return acc / M
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def encoder_block(x, p):
+    """Single-head pre-LN transformer encoder block.
+
+    x: f32[B, S, D]
+    p: dict with wq,wk,wv,wo f32[D, D]; ln1_g,ln1_b,ln2_g,ln2_b f32[D];
+       w1 f32[D, F], b1 f32[F], w2 f32[F, D], b2 f32[D]
+    returns f32[B, S, D]
+    """
+    d = x.shape[-1]
+    h = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    scores = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(jnp.asarray(d, x.dtype))
+    attn = jnp.einsum("bst,btd->bsd", softmax(scores), v) @ p["wo"]
+    x = x + attn
+    h2 = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    f = jnp.maximum(h2 @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
+    return x + f

@@ -1,0 +1,114 @@
+"""Pallas kernel: fused transformer encoder block (GPUMemNet L1).
+
+The Transformer-based GPUMemNet estimator (paper §3.2 / Fig. 5b) encodes
+the per-layer (type, activations, parameters) tuple sequence with a stack
+of single-head encoder blocks.  This kernel fuses one whole block —
+LN → QKᵀ → softmax → ·V → out-proj → residual → LN → FFN → residual —
+into a single pass so the [S, S] attention matrix and all intermediates
+live in VMEM and never round-trip to HBM (the CUDA analogue would stage
+them through shared memory; see DESIGN.md §Hardware-Adaptation).
+
+grid = (B,): one grid step per sequence (S and D are tiny — S=32, D=32 —
+so a full sequence's working set is ~24 KiB).  Weights use ``whole``
+index maps and stay resident across steps.
+
+Lowered with ``interpret=True`` for CPU PJRT (AOT recipe).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _kernel(
+    x_ref,
+    wq_ref,
+    wk_ref,
+    wv_ref,
+    wo_ref,
+    ln1_g_ref,
+    ln1_b_ref,
+    ln2_g_ref,
+    ln2_b_ref,
+    w1_ref,
+    b1_ref,
+    w2_ref,
+    b2_ref,
+    o_ref,
+):
+    x = x_ref[0]  # [S, D]
+    d = x.shape[-1]
+    h = _layer_norm(x, ln1_g_ref[...], ln1_b_ref[...])
+    q = h @ wq_ref[...]
+    k = h @ wk_ref[...]
+    v = h @ wv_ref[...]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, x.dtype))
+    att = (_softmax(scores) @ v) @ wo_ref[...]
+    x = x + att
+    h2 = _layer_norm(x, ln2_g_ref[...], ln2_b_ref[...])
+    f = jnp.maximum(h2 @ w1_ref[...] + b1_ref[...], 0.0) @ w2_ref[...] + b2_ref[...]
+    o_ref[0] = x + f
+
+
+def encoder_block(x, p, *, interpret: bool = True):
+    """Fused encoder block; same contract as ``ref.encoder_block``.
+
+    x: f32[B, S, D]; p: weight dict (see ref.py). Returns f32[B, S, D].
+    """
+    B, S, D = x.shape
+    F = p["w1"].shape[1]
+
+    sample = lambda b: (b, 0, 0)  # noqa: E731 — one sequence per grid step
+    whole2 = lambda b: (0, 0)  # noqa: E731
+    whole1 = lambda b: (0,)  # noqa: E731
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, D), sample),
+            pl.BlockSpec((D, D), whole2),  # wq
+            pl.BlockSpec((D, D), whole2),  # wk
+            pl.BlockSpec((D, D), whole2),  # wv
+            pl.BlockSpec((D, D), whole2),  # wo
+            pl.BlockSpec((D,), whole1),  # ln1_g
+            pl.BlockSpec((D,), whole1),  # ln1_b
+            pl.BlockSpec((D,), whole1),  # ln2_g
+            pl.BlockSpec((D,), whole1),  # ln2_b
+            pl.BlockSpec((D, F), whole2),  # w1
+            pl.BlockSpec((F,), whole1),  # b1
+            pl.BlockSpec((F, D), whole2),  # w2
+            pl.BlockSpec((D,), whole1),  # b2
+        ],
+        out_specs=pl.BlockSpec((1, S, D), sample),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
+        interpret=interpret,
+    )(
+        x,
+        p["wq"],
+        p["wk"],
+        p["wv"],
+        p["wo"],
+        p["ln1_g"],
+        p["ln1_b"],
+        p["ln2_g"],
+        p["ln2_b"],
+        p["w1"],
+        p["b1"],
+        p["w2"],
+        p["b2"],
+    )

@@ -1,0 +1,169 @@
+"""Live-mode training model: a small causal-transformer LM (L2).
+
+CARMA manages deep-learning *training* tasks.  The end-to-end example
+(``examples/live_training.rs``) proves the whole stack composes by making
+the Rust coordinator actually execute training steps through PJRT: this
+module defines the LM forward/backward + Adam update in JAX, and
+``aot.py`` lowers ``init`` and ``train_step`` to HLO text artifacts that
+the Rust runtime loads and drives for a few hundred steps on synthetic
+token data, logging the loss curve (EXPERIMENTS.md §E2E).
+
+Default config is ~6 M parameters so a few hundred steps complete in
+minutes on the CPU PJRT backend; ``--large`` in aot.py exports a ~110 M
+variant for real-hardware runs (DESIGN.md §1).
+
+The parameter pytree is flattened in a *fixed documented order* (see
+:func:`param_names`); ``artifacts/lm_manifest.json`` records names,
+shapes, and argument layout for the Rust side.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LmConfig(NamedTuple):
+    vocab: int = 4096
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+    batch: int = 8
+    lr: float = 1e-3
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+LARGE = LmConfig(vocab=32768, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=256, batch=8)
+
+
+def param_names(cfg: LmConfig) -> list[str]:
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_g", f"l{i}.ln1_b",
+            f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2_g", f"l{i}.ln2_b",
+            f"l{i}.w1", f"l{i}.b1", f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["lnf_g", "lnf_b", "head"]
+    return names
+
+
+def init(cfg: LmConfig, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o)) * math.sqrt(2.0 / (i + o))).astype(jnp.float32)
+
+    ks = iter(jax.random.split(key, 4 + 12 * cfg.n_layers))
+    p = {
+        "embed": (jax.random.normal(next(ks), (v, d)) * 0.02).astype(jnp.float32),
+        "pos": (jax.random.normal(next(ks), (cfg.seq_len, d)) * 0.02).astype(jnp.float32),
+    }
+    for i in range(cfg.n_layers):
+        p[f"l{i}.ln1_g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.ln1_b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{i}.wq"] = lin(next(ks), d, d)
+        p[f"l{i}.wk"] = lin(next(ks), d, d)
+        p[f"l{i}.wv"] = lin(next(ks), d, d)
+        p[f"l{i}.wo"] = lin(next(ks), d, d)
+        p[f"l{i}.ln2_g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.ln2_b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{i}.w1"] = lin(next(ks), d, f)
+        p[f"l{i}.b1"] = jnp.zeros((f,), jnp.float32)
+        p[f"l{i}.w2"] = lin(next(ks), f, d)
+        p[f"l{i}.b2"] = jnp.zeros((d,), jnp.float32)
+    p["lnf_g"] = jnp.ones((d,), jnp.float32)
+    p["lnf_b"] = jnp.zeros((d,), jnp.float32)
+    p["head"] = lin(next(ks), d, v)
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(p: dict, cfg: LmConfig, tokens):
+    """tokens: i32[B, S] -> logits f32[B, S, V] (causal)."""
+    B, S = tokens.shape
+    h = p["embed"][tokens] + p["pos"][:S]
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.asarray(-1e9, jnp.float32)
+    for i in range(cfg.n_layers):
+        x = _ln(h, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        q = (x @ p[f"l{i}.wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = (x @ p[f"l{i}.wk"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        v = (x @ p[f"l{i}.wv"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(cfg.d_head)
+        scores = jnp.where(mask[None, None] > 0, scores, neg)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(B, S, cfg.d_model)
+        h = h + ctx @ p[f"l{i}.wo"]
+        x = _ln(h, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        h = h + jnp.maximum(x @ p[f"l{i}.w1"] + p[f"l{i}.b1"], 0.0) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    h = _ln(h, p["lnf_g"], p["lnf_b"])
+    return h @ p["head"]
+
+
+def loss_fn(p: dict, cfg: LmConfig, tokens):
+    """tokens: i32[B, S+1]; next-token cross-entropy."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(p, cfg, inputs)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - true)
+
+
+def train_step(p: dict, m: dict, v: dict, step, cfg: LmConfig, tokens):
+    """One Adam step. step: f32 scalar (1-based). Returns (p', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda q: loss_fn(q, cfg, tokens))(p)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+    p = jax.tree.map(
+        lambda w, mm, vv: w - cfg.lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), p, m, v
+    )
+    return p, m, v, loss
+
+
+# -- flat (HLO-friendly) wrappers -------------------------------------------
+
+
+def flat_init(cfg: LmConfig, seed: int = 0):
+    """Returns the flat tuple (params..., m..., v...) in param_names order."""
+    p = init(cfg, seed)
+    names = param_names(cfg)
+    flat_p = [p[n] for n in names]
+    zeros = [jnp.zeros_like(a) for a in flat_p]
+    return tuple(flat_p + zeros + [jnp.zeros_like(a) for a in flat_p])
+
+
+def make_flat_step(cfg: LmConfig):
+    names = param_names(cfg)
+    n = len(names)
+
+    def flat_step(*args):
+        flat = args[: 3 * n]
+        step = args[3 * n]
+        tokens = args[3 * n + 1]
+        p = dict(zip(names, flat[:n]))
+        m = dict(zip(names, flat[n : 2 * n]))
+        v = dict(zip(names, flat[2 * n :]))
+        p, m, v, loss = train_step(p, m, v, step, cfg, tokens)
+        out = [p[x] for x in names] + [m[x] for x in names] + [v[x] for x in names]
+        return tuple(out + [loss])
+
+    return flat_step

@@ -1,0 +1,168 @@
+"""memsim — analytical GPU-memory *measurement* model.
+
+The paper measures the "actual" GPU memory of training tasks with
+``nvidia-smi`` on an A100. No GPU exists in this environment, so memsim is
+the substitute ground truth (see DESIGN.md §1): it models what the PyTorch
+CUDA caching allocator would *reserve* for a training task:
+
+    reserved = CUDA context
+             + weight/grad/optimizer pool   (rounded to 64 MiB)
+             + activation pool              (rounded to 256 MiB  -> staircase)
+             + cuDNN / cuBLAS workspace     (rounded to 64 MiB)
+
+The 256 MiB activation-pool rounding is what produces the paper's Fig. 3
+staircase growth pattern.
+
+IMPORTANT: this module is mirrored *exactly* (same constants, same op
+order) by ``rust/src/workload/memsim.rs``; ``tests/memsim_parity.rs``
+pins the two against ``data/memsim_golden.json``.  All arithmetic is on
+python floats (f64) — do not introduce numpy here.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Constants (mirrored in rust/src/workload/memsim.rs)
+# ---------------------------------------------------------------------------
+
+MIB = 1024.0 * 1024.0
+GIB = 1024.0 * MIB
+
+CTX_BYTES = 663.0 * MIB  # CUDA context + cuDNN handles on an A100
+BYTES_PER_PARAM = 16.0  # fp32 weight (4) + grad (4) + Adam m,v (8)
+WEIGHT_POOL_STEP = 64.0 * MIB
+ACT_POOL_STEP = 256.0 * MIB  # -> Fig. 3 staircase
+WORKSPACE_STEP = 64.0 * MIB
+CONV_WORKSPACE_PER_LAYER = 6.0 * MIB  # cuDNN algo workspace per conv layer
+GEMM_WORKSPACE = 96.0 * MIB  # cuBLAS workspace (MLP / Transformer)
+
+# Activation bookkeeping factor per architecture: frameworks keep extra
+# copies (autograd graph metadata, fused-op buffers, attention matrices
+# not counted in per-layer activation totals).
+ACT_FACTOR = {"mlp": 1.0, "cnn": 1.15, "transformer": 1.30}
+
+GPU_CAPACITY_GB = 40.0
+
+
+def _round_up(x: float, step: float) -> float:
+    """Round ``x`` up to a multiple of ``step`` (allocator pool growth)."""
+    if x <= 0.0:
+        return 0.0
+    return math.ceil(x / step) * step
+
+
+@dataclass
+class TaskFeatures:
+    """Shared 16-slot feature vector (DESIGN.md §6).
+
+    ``params_m``/``acts_m`` are millions of parameters / of forward
+    activations *per sample*.  ``seq_or_spatial`` is sequence length for
+    transformers, input spatial edge for CNNs, 0 for MLPs.
+    """
+
+    arch: str  # "mlp" | "cnn" | "transformer"
+    n_linear: float = 0.0
+    n_conv: float = 0.0
+    n_batchnorm: float = 0.0
+    n_dropout: float = 0.0
+    params_m: float = 0.0
+    acts_m: float = 0.0
+    batch_size: float = 32.0
+    n_gpus: float = 1.0
+    act_cos: float = 1.0  # cos/sin encoding of the activation function
+    act_sin: float = 0.0
+    input_dim: float = 0.0
+    output_dim: float = 0.0
+    seq_or_spatial: float = 0.0
+    depth_total: float = 0.0
+    width_max: float = 0.0
+    reserved: float = 0.0
+
+    def to_vec(self) -> list[float]:
+        return [
+            self.n_linear,
+            self.n_conv,
+            self.n_batchnorm,
+            self.n_dropout,
+            self.params_m,
+            self.acts_m,
+            self.batch_size,
+            self.n_gpus,
+            self.act_cos,
+            self.act_sin,
+            self.input_dim,
+            self.output_dim,
+            self.seq_or_spatial,
+            self.depth_total,
+            self.width_max,
+            self.reserved,
+        ]
+
+
+# Activation function -> angle for the cos/sin encoding (paper §3.2).
+ACTIVATION_ANGLE = {
+    "relu": 0.0,
+    "gelu": math.pi / 3.0,
+    "tanh": 2.0 * math.pi / 3.0,
+    "sigmoid": math.pi,
+    "silu": 4.0 * math.pi / 3.0,
+    "leaky_relu": 5.0 * math.pi / 3.0,
+}
+
+
+def activation_encoding(name: str) -> tuple[float, float]:
+    a = ACTIVATION_ANGLE[name]
+    return (math.cos(a), math.sin(a))
+
+
+def measured_bytes(f: TaskFeatures) -> float:
+    """The memsim ground truth: bytes the allocator reserves on one GPU."""
+    arch = f.arch
+    params = f.params_m * 1e6
+    acts = f.acts_m * 1e6
+    # Data-parallel multi-GPU training splits the batch; the full model
+    # replica (weights + optimizer) lives on every GPU.
+    per_gpu_batch = f.batch_size / max(f.n_gpus, 1.0)
+
+    weight_pool = _round_up(params * BYTES_PER_PARAM, WEIGHT_POOL_STEP)
+
+    act_bytes = 4.0 * acts * per_gpu_batch * ACT_FACTOR[arch]
+    act_pool = _round_up(act_bytes, ACT_POOL_STEP)
+
+    if arch == "cnn":
+        ws = CONV_WORKSPACE_PER_LAYER * f.n_conv * math.sqrt(
+            per_gpu_batch / 32.0
+        )
+    else:
+        ws = GEMM_WORKSPACE
+    ws_pool = _round_up(ws, WORKSPACE_STEP)
+
+    return CTX_BYTES + weight_pool + act_pool + ws_pool
+
+
+def measured_gb(f: TaskFeatures) -> float:
+    return measured_bytes(f) / GIB
+
+
+def label_for(mem_gb: float, range_gb: float, cap_gb: float = GPU_CAPACITY_GB) -> int:
+    """Discretize memory into fixed-size classes (paper §3.2).
+
+    Class c covers (c*range, (c+1)*range]; values above the cap are clamped
+    to the last class.
+    """
+    n_classes = int(math.ceil(cap_gb / range_gb))
+    c = int(math.ceil(mem_gb / range_gb)) - 1
+    return max(0, min(c, n_classes - 1))
+
+
+def num_classes(range_gb: float, cap_gb: float = GPU_CAPACITY_GB) -> int:
+    return int(math.ceil(cap_gb / range_gb))
+
+
+def estimate_from_label(label: int, range_gb: float) -> float:
+    """Estimate = upper edge of the predicted class (never underestimates
+    within the class)."""
+    return (label + 1) * range_gb

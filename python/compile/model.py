@@ -1,0 +1,440 @@
+"""L2 — GPUMemNet estimator models in JAX (paper §3.2, Fig. 5).
+
+Two classifier families, both formulated as *classification over
+fixed-size memory buckets* (the staircase growth of GPU memory makes
+regression ill-conditioned — paper Fig. 3):
+
+* :func:`mlp_ensemble` — an ensemble of M small feed-forward classifiers
+  with heterogeneous depth/width (1..L hidden layers, exponentially
+  decaying widths), ReLU + BatchNorm, predictions averaged (Fig. 5a).
+* :func:`transformer_classifier` — per-layer (type, acts, params) tuples
+  encoded by single-head transformer blocks, concatenated with the flat
+  feature vector, classified by an MLP head (Fig. 5b).
+
+Training runs on the pure-jnp reference path (fast on CPU, identical
+math); the exported inference graph calls the Pallas kernels
+(``kernels/ensemble_mlp.py``, ``kernels/transformer_encoder.py``) so the
+AOT artifact exercises the L1 hot path.  BatchNorm is trained with batch
+statistics + running stats and *folded* into per-layer affines for
+inference/export (:func:`fold_bn`).
+
+Feature normalization lives INSIDE the model (:func:`normalize_features`)
+so the Rust coordinator passes raw feature vectors (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import ensemble_mlp as k_ensemble
+from .kernels import transformer_encoder as k_encoder
+
+D_PAD = 64  # padded feature/hidden width for the ensemble
+N_MEMBERS = 8
+L_HIDDEN = 4  # max hidden layers per member (padded; members use 1..L)
+MEMBER_W_MAX = 32  # widest member (paper uses tiny members; we scale up
+MEMBER_W_MIN = 8  # slightly for the 40-class MLP dataset — DESIGN.md §5)
+
+SEQ_LEN = 32  # layer-tuple sequence length (matches dataset.SEQ_LEN)
+D_ENC = 32  # encoder embedding size
+F_ENC = 64  # encoder FFN size
+N_BLOCKS = 2
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Feature normalization (shared contract with the Rust feature extractor —
+# Rust sends RAW features, all scaling happens here)
+# ---------------------------------------------------------------------------
+
+
+def normalize_features(x):
+    """x: f32[B, 16] raw feature vectors (DESIGN.md §6) -> f32[B, 16]."""
+    n_linear, n_conv, n_bn, n_drop = x[:, 0], x[:, 1], x[:, 2], x[:, 3]
+    params_m, acts_m, bs, n_gpus = x[:, 4], x[:, 5], x[:, 6], x[:, 7]
+    act_cos, act_sin = x[:, 8], x[:, 9]
+    in_dim, out_dim, seq_sp = x[:, 10], x[:, 11], x[:, 12]
+    depth, wmax, reserved = x[:, 13], x[:, 14], x[:, 15]
+    return jnp.stack(
+        [
+            n_linear / 64.0,
+            n_conv / 64.0,
+            n_bn / 64.0,
+            n_drop / 64.0,
+            jnp.log1p(params_m) / 8.0,
+            jnp.log1p(acts_m) / 8.0,
+            jnp.log2(jnp.maximum(bs, 1.0)) / 10.0,
+            n_gpus / 4.0,
+            act_cos,
+            act_sin,
+            jnp.log1p(in_dim) / 12.0,
+            jnp.log1p(out_dim) / 12.0,
+            jnp.log1p(seq_sp) / 8.0,
+            depth / 64.0,
+            jnp.log1p(wmax) / 10.0,
+            reserved,
+        ],
+        axis=1,
+    )
+
+
+def pad_features(x):
+    """f32[B, 16] -> f32[B, D_PAD] (zero padding)."""
+    return jnp.pad(x, ((0, 0), (0, D_PAD - x.shape[1])))
+
+
+def normalize_layer_seq(s):
+    """s: f32[B, S, 3] raw (type, acts_m, params_m) tuples -> normalized."""
+    return jnp.stack(
+        [
+            s[..., 0] / 5.0,
+            jnp.log1p(jnp.maximum(s[..., 1], 0.0) * 1e6) / 20.0,
+            jnp.log1p(jnp.maximum(s[..., 2], 0.0) * 1e6) / 20.0,
+        ],
+        axis=-1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP ensemble (Fig. 5a)
+# ---------------------------------------------------------------------------
+
+
+class EnsembleParams(NamedTuple):
+    w_in: jax.Array  # [M, D, D]
+    b_in: jax.Array  # [M, D]
+    g_in: jax.Array  # [M, D]   BN gamma
+    be_in: jax.Array  # [M, D]  BN beta
+    w_h: jax.Array  # [M, L, D, D]
+    b_h: jax.Array  # [M, L, D]
+    g_h: jax.Array  # [M, L, D]
+    be_h: jax.Array  # [M, L, D]
+    w_out: jax.Array  # [M, D, D]
+    b_out: jax.Array  # [M, D]
+
+
+class EnsembleState(NamedTuple):
+    mu_in: jax.Array  # [M, D]  BN running mean
+    var_in: jax.Array  # [M, D]
+    mu_h: jax.Array  # [M, L, D]
+    var_h: jax.Array  # [M, L, D]
+
+
+class EnsembleStatic(NamedTuple):
+    """Structural (non-trained) description of the heterogeneous ensemble."""
+
+    depth: tuple  # per-member hidden-layer count (1..L)
+    width: tuple  # per-member hidden width (<= MEMBER_W_MAX)
+    n_classes: int
+
+
+def member_widths(rng_key) -> tuple:
+    """Per-member widths decaying exponentially MEMBER_W_MAX -> MEMBER_W_MIN
+    (paper: 'neurons per hidden layer decays exponentially')."""
+    ws = []
+    for m in range(N_MEMBERS):
+        frac = m / max(N_MEMBERS - 1, 1)
+        ws.append(
+            int(round(MEMBER_W_MAX * (MEMBER_W_MIN / MEMBER_W_MAX) ** frac))
+        )
+    return tuple(ws)
+
+
+def init_ensemble(key, n_classes: int):
+    """Random heterogeneous ensemble; returns (params, state, static, mask).
+
+    ``mask`` has the same structure as params; multiplying gradients by it
+    freezes the identity padding (depth) and zero padding (width) so the
+    structural encoding survives training.
+    """
+    k_depth, k_w = jax.random.split(key)
+    depth = tuple(
+        int(d) for d in jax.random.randint(k_depth, (N_MEMBERS,), 1, L_HIDDEN + 1)
+    )
+    width = member_widths(k_w)
+    static = EnsembleStatic(depth=depth, width=width, n_classes=n_classes)
+
+    M, L, D = N_MEMBERS, L_HIDDEN, D_PAD
+    keys = jax.random.split(key, 4)
+
+    def glorot(k, shape, fan_in, fan_out):
+        return jax.random.normal(k, shape) * math.sqrt(2.0 / (fan_in + fan_out))
+
+    w_in = jnp.zeros((M, D, D))
+    w_h = jnp.zeros((M, L, D, D))
+    w_out = jnp.zeros((M, D, D))
+    m_in = jnp.zeros((M, D, D))
+    m_h = jnp.zeros((M, L, D, D))
+    m_out = jnp.zeros((M, D, D))
+    g_h = jnp.ones((M, L, D))
+    mg_h = jnp.zeros((M, L, D))
+
+    eye = jnp.eye(D)
+    for m in range(N_MEMBERS):
+        w = width[m]
+        d = depth[m]
+        km = jax.random.fold_in(keys[0], m)
+        w_in = w_in.at[m, :16, :w].set(glorot(km, (16, w), 16, w))
+        m_in = m_in.at[m, :16, :w].set(1.0)
+        for l in range(L):
+            if l < d:
+                kl = jax.random.fold_in(km, l + 1)
+                w_h = w_h.at[m, l, :w, :w].set(glorot(kl, (w, w), w, w))
+                m_h = m_h.at[m, l, :w, :w].set(1.0)
+                mg_h = mg_h.at[m, l, :w].set(1.0)
+            else:
+                w_h = w_h.at[m, l].set(eye)  # identity padding layer
+        ko = jax.random.fold_in(km, 99)
+        w_out = w_out.at[m, :w, :n_classes].set(glorot(ko, (w, n_classes), w, n_classes))
+        m_out = m_out.at[m, :w, :n_classes].set(1.0)
+
+    params = EnsembleParams(
+        w_in=w_in,
+        b_in=jnp.zeros((M, D)),
+        g_in=jnp.ones((M, D)),
+        be_in=jnp.zeros((M, D)),
+        w_h=w_h,
+        b_h=jnp.zeros((M, L, D)),
+        g_h=g_h,
+        be_h=jnp.zeros((M, L, D)),
+        w_out=w_out,
+        b_out=jnp.zeros((M, D)),
+    )
+    state = EnsembleState(
+        mu_in=jnp.zeros((M, D)),
+        var_in=jnp.ones((M, D)),
+        mu_h=jnp.zeros((M, L, D)),
+        var_h=jnp.ones((M, L, D)),
+    )
+    width_vec = jnp.stack(
+        [(jnp.arange(D) < width[m]).astype(jnp.float32) for m in range(M)]
+    )  # [M, D]
+    depth_vec = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    width_vec[m] * (1.0 if l < depth[m] else 0.0)
+                    for l in range(L)
+                ]
+            )
+            for m in range(M)
+        ]
+    )  # [M, L, D]
+    mask = EnsembleParams(
+        w_in=m_in,
+        b_in=width_vec,
+        g_in=width_vec,
+        be_in=width_vec,
+        w_h=m_h,
+        b_h=depth_vec,
+        g_h=depth_vec,
+        be_h=depth_vec,
+        w_out=m_out,
+        b_out=jnp.stack(
+            [(jnp.arange(D) < n_classes).astype(jnp.float32)] * M
+        ),
+    )
+    return params, state, static, mask
+
+
+def _bn_train(h, gamma, beta, mu_run, var_run):
+    """BatchNorm with batch statistics; returns (y, new_mu, new_var)."""
+    mu = jnp.mean(h, axis=0)
+    var = jnp.var(h, axis=0)
+    y = (h - mu) / jnp.sqrt(var + BN_EPS) * gamma + beta
+    new_mu = (1.0 - BN_MOMENTUM) * mu_run + BN_MOMENTUM * mu
+    new_var = (1.0 - BN_MOMENTUM) * var_run + BN_MOMENTUM * var
+    return y, new_mu, new_var
+
+
+def ensemble_train_forward(params: EnsembleParams, state: EnsembleState, static, xraw):
+    """Training-mode forward (batch-stat BN). Returns (logits[B, C], state')."""
+    x = pad_features(normalize_features(xraw))
+    M, L = N_MEMBERS, L_HIDDEN
+    acc = 0.0
+    mu_in, var_in = [], []
+    mu_h = [[None] * L for _ in range(M)]
+    var_h = [[None] * L for _ in range(M)]
+    for m in range(M):
+        h = x @ params.w_in[m] + params.b_in[m]
+        h, nm, nv = _bn_train(h, params.g_in[m], params.be_in[m], state.mu_in[m], state.var_in[m])
+        mu_in.append(nm)
+        var_in.append(nv)
+        h = jnp.maximum(h, 0.0)
+        for l in range(L):
+            if l < static.depth[m]:
+                h2 = h @ params.w_h[m, l] + params.b_h[m, l]
+                h2, nm, nv = _bn_train(
+                    h2, params.g_h[m, l], params.be_h[m, l], state.mu_h[m, l], state.var_h[m, l]
+                )
+                h = jnp.maximum(h2, 0.0)
+            else:
+                nm, nv = state.mu_h[m, l], state.var_h[m, l]
+            mu_h[m][l] = nm
+            var_h[m][l] = nv
+        acc = acc + h @ params.w_out[m] + params.b_out[m]
+    logits = acc / M
+    new_state = EnsembleState(
+        mu_in=jnp.stack(mu_in),
+        var_in=jnp.stack(var_in),
+        mu_h=jnp.stack([jnp.stack(r) for r in mu_h]),
+        var_h=jnp.stack([jnp.stack(r) for r in var_h]),
+    )
+    return logits[:, : static.n_classes], new_state
+
+
+def fold_bn(params: EnsembleParams, state: EnsembleState, static) -> dict:
+    """Fold running BN stats into per-layer affines for the fused kernel.
+
+    Identity padding layers get (s=1, t=0); width padding keeps (s=0, t=0)
+    so dead units stay exactly zero.
+    """
+    M, L, D = N_MEMBERS, L_HIDDEN, D_PAD
+    inv_in = 1.0 / jnp.sqrt(state.var_in + BN_EPS)
+    s_in = params.g_in * inv_in
+    t_in = params.be_in - state.mu_in * s_in
+    width_vec = jnp.stack(
+        [(jnp.arange(D) < static.width[m]).astype(jnp.float32) for m in range(M)]
+    )
+    s_in = s_in * width_vec
+    t_in = t_in * width_vec
+
+    inv_h = 1.0 / jnp.sqrt(state.var_h + BN_EPS)
+    s_h = params.g_h * inv_h
+    t_h = params.be_h - state.mu_h * s_h
+    s_list, t_list = [], []
+    for m in range(M):
+        wv = width_vec[m]
+        sm, tm = [], []
+        for l in range(L):
+            if l < static.depth[m]:
+                sm.append(s_h[m, l] * wv)
+                tm.append(t_h[m, l] * wv)
+            else:
+                sm.append(jnp.ones((D,)))  # identity layer: relu(h*1+0)=h
+                tm.append(jnp.zeros((D,)))
+        s_list.append(jnp.stack(sm))
+        t_list.append(jnp.stack(tm))
+
+    return {
+        "w_in": params.w_in,
+        "b_in": params.b_in * width_vec,
+        "s_in": s_in,
+        "t_in": t_in,
+        "w_h": params.w_h,
+        "b_h": params.b_h,
+        "s_h": jnp.stack(s_list),
+        "t_h": jnp.stack(t_list),
+        "w_out": params.w_out,
+        "b_out": params.b_out,
+    }
+
+
+def ensemble_infer(folded: dict, xraw, n_classes: int, *, use_pallas: bool = True):
+    """Inference forward over folded params. This is the graph AOT-exported
+    for the Rust coordinator; ``use_pallas=True`` routes through the fused
+    L1 kernel."""
+    x = pad_features(normalize_features(xraw))
+    fwd = k_ensemble.ensemble_mlp_forward if use_pallas else ref.ensemble_mlp_forward
+    logits = fwd(x, folded)
+    return logits[:, :n_classes]
+
+
+# ---------------------------------------------------------------------------
+# Transformer classifier (Fig. 5b)
+# ---------------------------------------------------------------------------
+
+
+def init_transformer(key, n_classes: int) -> dict:
+    ks = jax.random.split(key, 8 + 4 * N_BLOCKS)
+    d, f = D_ENC, F_ENC
+
+    def lin(k, i, o):
+        return jax.random.normal(k, (i, o)) * math.sqrt(2.0 / (i + o))
+
+    params = {
+        "embed_w": lin(ks[0], 3, d),
+        "embed_b": jnp.zeros((d,)),
+        "blocks": [],
+        "head1_w": lin(ks[1], d + 16, f),
+        "head1_b": jnp.zeros((f,)),
+        "head2_w": lin(ks[2], f, n_classes),
+        "head2_b": jnp.zeros((n_classes,)),
+    }
+    for b in range(N_BLOCKS):
+        ko = ks[8 + 4 * b : 8 + 4 * b + 4]
+        params["blocks"].append(
+            {
+                "wq": lin(ko[0], d, d),
+                "wk": lin(jax.random.fold_in(ko[0], 1), d, d),
+                "wv": lin(ko[1], d, d),
+                "wo": lin(jax.random.fold_in(ko[1], 1), d, d),
+                "ln1_g": jnp.ones((d,)),
+                "ln1_b": jnp.zeros((d,)),
+                "ln2_g": jnp.ones((d,)),
+                "ln2_b": jnp.zeros((d,)),
+                "w1": lin(ko[2], d, f),
+                "b1": jnp.zeros((f,)),
+                "w2": lin(ko[3], f, d),
+                "b2": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def positional_encoding(seq_len: int = SEQ_LEN, d: int = D_ENC):
+    pos = jnp.arange(seq_len)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=1)
+
+
+def transformer_forward(params, xraw, seq_raw, *, use_pallas: bool = False):
+    """Full classifier forward. xraw f32[B,16], seq_raw f32[B,S,3]."""
+    s = normalize_layer_seq(seq_raw)
+    h = s @ params["embed_w"] + params["embed_b"] + positional_encoding()
+    block_fn = k_encoder.encoder_block if use_pallas else ref.encoder_block
+    for bp in params["blocks"]:
+        h = block_fn(h, bp)
+    pooled = jnp.mean(h, axis=1)  # [B, D_ENC]
+    aux = normalize_features(xraw)
+    z = jnp.concatenate([pooled, aux], axis=1)
+    z = jnp.maximum(z @ params["head1_w"] + params["head1_b"], 0.0)
+    return z @ params["head2_w"] + params["head2_b"]
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam (hand-rolled; optax is not in the image)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=1)
+    true = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - true)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return zeros, jax.tree.map(jnp.zeros_like, params)
+
+
+def adam_update(params, grads, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, m, v

@@ -1,0 +1,349 @@
+"""Train the GPUMemNet estimators (paper §3.2–3.3, Table 1).
+
+For each architecture dataset (MLP / CNN / Transformer) and each estimator
+family (MLP ensemble / Transformer classifier), runs stratified 3-fold
+cross-validation on a 70 % split (30 % held-out test), reports accuracy and
+macro-F1 (paper Table 1), then retrains on the full training split and
+exports folded weights for AOT lowering.
+
+Outputs (under ``artifacts/``):
+  table1.json                         — paper Table 1 reproduction
+  gpumemnet_{mlp,cnn,tfm}_weights.npz — folded MLP-ensemble weights (the
+                                        family CARMA serves, paper §3.3)
+  gpumemnet_{mlp,cnn,tfm}_tf.npz      — transformer-classifier weights
+  dataset_{arch}.npz                  — the generated datasets (reused by
+                                        analysis.py and tests)
+
+Run as ``python -m compile.train [--quick]`` from ``python/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from . import memsim
+from . import model
+
+ARCHS = ("mlp", "cnn", "transformer")
+SHORT = {"mlp": "mlp", "cnn": "cnn", "transformer": "tfm"}
+N_SAMPLES = {"mlp": 3000, "cnn": 2400, "transformer": 2400}
+RANGES = {"mlp": [1.0, 2.0], "cnn": [8.0], "transformer": [8.0]}
+SERVE_RANGE = {"mlp": 1.0, "cnn": 8.0, "transformer": 8.0}
+
+EPOCHS = 160
+BATCH = 256
+LR = 2e-3
+SEED = 7
+
+
+def artifacts_dir() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", "artifacts"))
+
+
+# ---------------------------------------------------------------------------
+# Data plumbing
+# ---------------------------------------------------------------------------
+
+
+def build_dataset(arch: str, n: int, seed: int):
+    samples = ds.generate(arch, n, seed=seed)
+    X = np.array([s.features for s in samples], dtype=np.float32)
+    S = np.array([s.layer_seq for s in samples], dtype=np.float32)
+    mem = np.array([s.mem_gb for s in samples], dtype=np.float32)
+    return X, S, mem
+
+
+def labels_for(mem: np.ndarray, range_gb: float) -> np.ndarray:
+    return np.array([memsim.label_for(float(m), range_gb) for m in mem], dtype=np.int32)
+
+
+def stratified_split(labels: np.ndarray, frac: float, seed: int):
+    """Index split keeping per-class proportions (paper: stratified)."""
+    rng = np.random.default_rng(seed)
+    a_idx, b_idx = [], []
+    for c in np.unique(labels):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        k = int(round(len(idx) * frac))
+        a_idx.extend(idx[:k])
+        b_idx.extend(idx[k:])
+    return np.array(sorted(a_idx)), np.array(sorted(b_idx))
+
+
+def kfold(labels: np.ndarray, k: int, seed: int):
+    """Stratified k-fold index generator."""
+    rng = np.random.default_rng(seed)
+    folds = [[] for _ in range(k)]
+    for c in np.unique(labels):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        for i, j in enumerate(idx):
+            folds[i % k].append(j)
+    for i in range(k):
+        val = np.array(sorted(folds[i]))
+        train = np.array(sorted([j for f in range(k) if f != i for j in folds[f]]))
+        yield train, val
+
+
+def macro_f1(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    f1s = []
+    for c in np.unique(y_true):
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        denom = 2 * tp + fp + fn
+        f1s.append(2 * tp / denom if denom > 0 else 0.0)
+    return float(np.mean(f1s))
+
+
+# ---------------------------------------------------------------------------
+# MLP-ensemble training
+# ---------------------------------------------------------------------------
+
+
+def train_ensemble(X, y, n_classes: int, seed: int, epochs: int):
+    key = jax.random.PRNGKey(seed)
+    params, state, static, mask = model.init_ensemble(key, n_classes)
+    m, v = model.adam_init(params)
+
+    def loss_fn(p, st, xb, yb):
+        logits, st2 = model.ensemble_train_forward(p, st, static, xb)
+        return model.cross_entropy(logits, yb), st2
+
+    @jax.jit
+    def step(p, st, m, v, i, xb, yb):
+        (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, st, xb, yb)
+        grads = jax.tree.map(lambda g, msk: g * msk, grads, mask)
+        p, m, v = model.adam_update(p, grads, m, v, i, lr=LR)
+        return p, st2, m, v, loss
+
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    i = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for b in range(0, n, BATCH):
+            idx = order[b : b + BATCH]
+            if len(idx) < 8:
+                continue
+            i += 1
+            params, state, m, v, _ = step(
+                params, state, m, v, i, jnp.asarray(X[idx]), jnp.asarray(y[idx])
+            )
+
+    folded = model.fold_bn(params, state, static)
+    return folded, static
+
+
+def ensemble_predict(folded, static, X) -> np.ndarray:
+    logits = model.ensemble_infer(folded, jnp.asarray(X), static.n_classes, use_pallas=False)
+    return np.asarray(jnp.argmax(logits, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Transformer-classifier training
+# ---------------------------------------------------------------------------
+
+
+def train_transformer(X, S, y, n_classes: int, seed: int, epochs: int):
+    key = jax.random.PRNGKey(seed + 1)
+    params = model.init_transformer(key, n_classes)
+    m, v = model.adam_init(params)
+
+    def loss_fn(p, xb, sb, yb):
+        logits = model.transformer_forward(p, xb, sb, use_pallas=False)
+        return model.cross_entropy(logits, yb)
+
+    @jax.jit
+    def step(p, m, v, i, xb, sb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, sb, yb)
+        p, m, v = model.adam_update(p, grads, m, v, i, lr=LR)
+        return p, m, v, loss
+
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    i = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for b in range(0, n, BATCH):
+            idx = order[b : b + BATCH]
+            if len(idx) < 8:
+                continue
+            i += 1
+            params, m, v, _ = step(
+                params, m, v, i, jnp.asarray(X[idx]), jnp.asarray(S[idx]), jnp.asarray(y[idx])
+            )
+    return params
+
+
+def transformer_predict(params, X, S) -> np.ndarray:
+    logits = model.transformer_forward(params, jnp.asarray(X), jnp.asarray(S), use_pallas=False)
+    return np.asarray(jnp.argmax(logits, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Weight export helpers
+# ---------------------------------------------------------------------------
+
+
+def save_folded(path: str, folded: dict, static, range_gb: float):
+    np.savez(
+        path,
+        n_classes=np.int32(static.n_classes),
+        range_gb=np.float32(range_gb),
+        depth=np.array(static.depth, dtype=np.int32),
+        width=np.array(static.width, dtype=np.int32),
+        **{k: np.asarray(a, dtype=np.float32) for k, a in folded.items()},
+    )
+
+
+def save_transformer(path: str, params: dict, n_classes: int, range_gb: float):
+    flat = {
+        "embed_w": params["embed_w"],
+        "embed_b": params["embed_b"],
+        "head1_w": params["head1_w"],
+        "head1_b": params["head1_b"],
+        "head2_w": params["head2_w"],
+        "head2_b": params["head2_b"],
+    }
+    for i, bp in enumerate(params["blocks"]):
+        for k, a in bp.items():
+            flat[f"block{i}_{k}"] = a
+    np.savez(
+        path,
+        n_classes=np.int32(n_classes),
+        range_gb=np.float32(range_gb),
+        n_blocks=np.int32(len(params["blocks"])),
+        **{k: np.asarray(a, dtype=np.float32) for k, a in flat.items()},
+    )
+
+
+def load_transformer(path: str):
+    z = np.load(path)
+    params = {
+        "embed_w": jnp.asarray(z["embed_w"]),
+        "embed_b": jnp.asarray(z["embed_b"]),
+        "head1_w": jnp.asarray(z["head1_w"]),
+        "head1_b": jnp.asarray(z["head1_b"]),
+        "head2_w": jnp.asarray(z["head2_w"]),
+        "head2_b": jnp.asarray(z["head2_b"]),
+        "blocks": [],
+    }
+    for i in range(int(z["n_blocks"])):
+        params["blocks"].append(
+            {
+                k: jnp.asarray(z[f"block{i}_{k}"])
+                for k in (
+                    "wq", "wk", "wv", "wo", "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+                    "w1", "b1", "w2", "b2",
+                )
+            }
+        )
+    return params, int(z["n_classes"]), float(z["range_gb"])
+
+
+def load_folded(path: str):
+    z = np.load(path)
+    folded = {
+        k: jnp.asarray(z[k])
+        for k in ("w_in", "b_in", "s_in", "t_in", "w_h", "b_h", "s_h", "t_h", "w_out", "b_out")
+    }
+    return folded, int(z["n_classes"]), float(z["range_gb"])
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small datasets / few epochs (CI smoke)")
+    args = ap.parse_args(argv)
+
+    epochs = 12 if args.quick else EPOCHS
+    cv_epochs = max(6, epochs // 2)
+    scale = 0.15 if args.quick else 1.0
+
+    out_dir = artifacts_dir()
+    os.makedirs(out_dir, exist_ok=True)
+    table1 = []
+
+    for arch in ARCHS:
+        n = max(300, int(N_SAMPLES[arch] * scale))
+        t0 = time.time()
+        X, S, mem = build_dataset(arch, n, SEED)
+        np.savez(os.path.join(out_dir, f"dataset_{arch}.npz"), X=X, S=S, mem=mem)
+        print(f"[{arch}] dataset n={len(X)} ({time.time()-t0:.1f}s)", flush=True)
+
+        for range_gb in RANGES[arch]:
+            y = labels_for(mem, range_gb)
+            n_classes = memsim.num_classes(range_gb)
+            train_idx, test_idx = stratified_split(y, 0.7, SEED)
+
+            for family in ("MLP", "Transformer"):
+                accs, f1s = [], []
+                for fold, (tr, _val) in enumerate(kfold(y[train_idx], 3, SEED)):
+                    tr_idx = train_idx[tr]
+                    if family == "MLP":
+                        folded, static = train_ensemble(
+                            X[tr_idx], y[tr_idx], n_classes, SEED + fold, cv_epochs
+                        )
+                        pred = ensemble_predict(folded, static, X[test_idx])
+                    else:
+                        params = train_transformer(
+                            X[tr_idx], S[tr_idx], y[tr_idx], n_classes, SEED + fold, cv_epochs
+                        )
+                        pred = transformer_predict(params, X[test_idx], S[test_idx])
+                    accs.append(float(np.mean(pred == y[test_idx])))
+                    f1s.append(macro_f1(y[test_idx], pred))
+                row = {
+                    "dataset": arch,
+                    "estimator": family,
+                    "range_gb": range_gb,
+                    "accuracy": round(float(np.mean(accs)), 4),
+                    "f1": round(float(np.mean(f1s)), 4),
+                }
+                table1.append(row)
+                print(f"  {row}", flush=True)
+
+        # final serve-model training on the full training split
+        range_gb = SERVE_RANGE[arch]
+        y = labels_for(mem, range_gb)
+        n_classes = memsim.num_classes(range_gb)
+        train_idx, test_idx = stratified_split(y, 0.7, SEED)
+        folded, static = train_ensemble(X[train_idx], y[train_idx], n_classes, SEED, epochs)
+        pred = ensemble_predict(folded, static, X[test_idx])
+        acc = float(np.mean(pred == y[test_idx]))
+        # the serve model must (almost) never under-estimate; log the rate
+        under = float(np.mean(pred < y[test_idx]))
+        print(f"[{arch}] serve model acc={acc:.3f} underestimate-rate={under:.3f}", flush=True)
+        save_folded(
+            os.path.join(out_dir, f"gpumemnet_{SHORT[arch]}_weights.npz"),
+            folded,
+            static,
+            range_gb,
+        )
+        tfm = train_transformer(X[train_idx], S[train_idx], y[train_idx], n_classes, SEED, epochs)
+        save_transformer(
+            os.path.join(out_dir, f"gpumemnet_{SHORT[arch]}_tf.npz"), tfm, n_classes, range_gb
+        )
+
+    with open(os.path.join(out_dir, "table1.json"), "w") as fh:
+        json.dump(table1, fh, indent=1)
+    print(f"wrote {os.path.join(out_dir, 'table1.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Dataset generator properties (paper §3.1 principles)."""
+
+import collections
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset as ds
+from compile import memsim
+
+
+class TestSamplers:
+    @pytest.mark.parametrize("arch", ["mlp", "cnn", "transformer"])
+    def test_feature_vector_shape(self, arch):
+        samples = ds.generate(arch, 50, seed=3)
+        assert len(samples) == 50
+        for s in samples:
+            assert len(s.features) == 16
+            assert len(s.layer_seq) == ds.SEQ_LEN
+            assert all(len(t) == 3 for t in s.layer_seq)
+            assert s.mem_gb > 0.5
+            assert s.arch == arch
+
+    def test_determinism(self):
+        a = ds.generate("cnn", 30, seed=9)
+        b = ds.generate("cnn", 30, seed=9)
+        assert [s.features for s in a] == [s.features for s in b]
+        assert [s.mem_gb for s in a] == [s.mem_gb for s in b]
+
+    def test_seeds_differ(self):
+        a = ds.generate("cnn", 30, seed=1)
+        b = ds.generate("cnn", 30, seed=2)
+        assert [s.features for s in a] != [s.features for s in b]
+
+    @pytest.mark.parametrize("arch", ["mlp", "cnn", "transformer"])
+    def test_noise_is_small(self, arch):
+        for s in ds.generate(arch, 60, seed=5):
+            assert abs(s.mem_gb - s.mem_gb_clean) / s.mem_gb_clean < 0.15
+
+    def test_mlp_counts_consistent(self):
+        for s in ds.generate("mlp", 60, seed=7):
+            f = s.features
+            n_linear, n_conv, depth = f[0], f[1], f[13]
+            assert n_conv == 0.0
+            assert n_linear == depth  # hidden layers + output layer
+
+    def test_cnn_has_convs(self):
+        for s in ds.generate("cnn", 60, seed=7):
+            assert s.features[1] >= 2.0  # n_conv
+            assert s.features[12] > 0.0  # spatial
+
+    def test_transformer_has_seq(self):
+        for s in ds.generate("transformer", 60, seed=7):
+            assert s.features[12] >= 128.0  # seq_len
+
+
+class TestClassBalance:
+    @pytest.mark.parametrize("arch,rg", [("mlp", 1.0), ("cnn", 8.0), ("transformer", 8.0)])
+    def test_soft_balancing_spreads_classes(self, arch, rg):
+        samples = ds.generate(arch, 400, seed=2)
+        hist = collections.Counter(memsim.label_for(s.mem_gb, rg) for s in samples)
+        # must cover at least 4 classes and no class may dominate > 75 %
+        assert len(hist) >= 4
+        assert max(hist.values()) / len(samples) < 0.75
+
+
+class TestPadSeq:
+    def test_pad_short(self):
+        seq = [[1.0, 2.0, 3.0]]
+        out = ds._pad_seq(list(seq))
+        assert len(out) == ds.SEQ_LEN
+        assert out[0] == [1.0, 2.0, 3.0]
+        assert out[-1] == [0.0, 0.0, 0.0]
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 400))
+    def test_pool_preserves_totals(self, n):
+        seq = [[1.0, float(i), float(2 * i)] for i in range(n)]
+        out = ds._pad_seq(list(seq))
+        assert len(out) == ds.SEQ_LEN
+        total_acts = sum(t[1] for t in seq)
+        total_params = sum(t[2] for t in seq)
+        assert abs(sum(t[1] for t in out) - total_acts) < 1e-6 * max(1.0, total_acts)
+        assert abs(sum(t[2] for t in out) - total_params) < 1e-6 * max(1.0, total_params)

@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py) — the core L1 correctness
+signal.  Hypothesis sweeps shapes/dtypes; assert_allclose against ref."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ensemble_mlp, ref, transformer_encoder
+
+RTOL = {np.float32: 2e-5, np.float64: 1e-12}
+ATOL = {np.float32: 2e-5, np.float64: 1e-12}
+
+
+def make_ensemble_params(rng, M, L, D, dtype):
+    def r(*shape, scale=0.1):
+        return (rng.normal(size=shape) * scale).astype(dtype)
+
+    return {
+        "w_in": r(M, D, D),
+        "b_in": r(M, D),
+        "s_in": (rng.normal(size=(M, D)) * 0.5 + 1.0).astype(dtype),
+        "t_in": r(M, D),
+        "w_h": r(M, L, D, D),
+        "b_h": r(M, L, D),
+        "s_h": (rng.normal(size=(M, L, D)) * 0.5 + 1.0).astype(dtype),
+        "t_h": r(M, L, D),
+        "w_out": r(M, D, D),
+        "b_out": r(M, D),
+    }
+
+
+def make_encoder_params(rng, D, F, dtype):
+    def r(*shape, scale=0.2):
+        return (rng.normal(size=shape) * scale).astype(dtype)
+
+    p = {k: r(D, D) for k in ("wq", "wk", "wv", "wo")}
+    p["ln1_g"] = (rng.normal(size=(D,)) * 0.1 + 1.0).astype(dtype)
+    p["ln2_g"] = (rng.normal(size=(D,)) * 0.1 + 1.0).astype(dtype)
+    p["ln1_b"] = r(D)
+    p["ln2_b"] = r(D)
+    p["w1"] = r(D, F)
+    p["b1"] = r(F)
+    p["w2"] = r(F, D)
+    p["b2"] = r(D)
+    return p
+
+
+class TestEnsembleMlpKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 12),
+        l=st.integers(1, 6),
+        d=st.sampled_from([8, 16, 32, 64]),
+        b=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_shapes(self, m, l, d, b, seed):
+        rng = np.random.default_rng(seed)
+        p = make_ensemble_params(rng, m, l, d, np.float32)
+        x = rng.normal(size=(b, d)).astype(np.float32)
+        got = ensemble_mlp.ensemble_mlp_forward(x, p)
+        want = ref.ensemble_mlp_forward(x, p)
+        np.testing.assert_allclose(got, want, rtol=RTOL[np.float32], atol=ATOL[np.float32])
+
+    def test_dtype_f32(self):
+        rng = np.random.default_rng(3)
+        p = make_ensemble_params(rng, 4, 2, 16, np.float32)
+        x = rng.normal(size=(5, 16)).astype(np.float32)
+        got = ensemble_mlp.ensemble_mlp_forward(x, p)
+        want = ref.ensemble_mlp_forward(x, p)
+        assert got.dtype == want.dtype
+        np.testing.assert_allclose(got, want, rtol=RTOL[np.float32], atol=ATOL[np.float32])
+
+    def test_dtype_f64(self):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            rng = np.random.default_rng(3)
+            p = make_ensemble_params(rng, 4, 2, 16, np.float64)
+            x = rng.normal(size=(5, 16)).astype(np.float64)
+            got = ensemble_mlp.ensemble_mlp_forward(x, p)
+            want = ref.ensemble_mlp_forward(x, p)
+            assert got.dtype == want.dtype
+            np.testing.assert_allclose(got, want, rtol=RTOL[np.float64], atol=ATOL[np.float64])
+
+    def test_identity_padding_is_noop(self):
+        """Identity hidden layers (w=I, s=1, t=0) must not change logits."""
+        rng = np.random.default_rng(5)
+        M, D, B = 3, 16, 4
+        p1 = make_ensemble_params(rng, M, 1, D, np.float32)
+        # same model with 3 extra identity layers appended
+        eye = np.broadcast_to(np.eye(D, dtype=np.float32), (M, 3, D, D))
+        p4 = dict(p1)
+        p4["w_h"] = np.concatenate([p1["w_h"], eye], axis=1)
+        p4["b_h"] = np.concatenate([p1["b_h"], np.zeros((M, 3, D), np.float32)], axis=1)
+        p4["s_h"] = np.concatenate([p1["s_h"], np.ones((M, 3, D), np.float32)], axis=1)
+        p4["t_h"] = np.concatenate([p1["t_h"], np.zeros((M, 3, D), np.float32)], axis=1)
+        x = rng.normal(size=(B, D)).astype(np.float32)
+        a = ensemble_mlp.ensemble_mlp_forward(x, p1)
+        b = ensemble_mlp.ensemble_mlp_forward(x, p4)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_mean_of_single_member_equals_member(self):
+        rng = np.random.default_rng(9)
+        p = make_ensemble_params(rng, 1, 2, 8, np.float32)
+        x = rng.normal(size=(3, 8)).astype(np.float32)
+        got = ensemble_mlp.ensemble_mlp_forward(x, p)
+        want = ref.ensemble_mlp_forward(x, p)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestEncoderKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 8),
+        s=st.sampled_from([4, 8, 16, 32]),
+        d=st.sampled_from([8, 16, 32]),
+        f=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_shapes(self, b, s, d, f, seed):
+        rng = np.random.default_rng(seed)
+        p = make_encoder_params(rng, d, f, np.float32)
+        x = rng.normal(size=(b, s, d)).astype(np.float32)
+        got = transformer_encoder.encoder_block(x, p)
+        want = ref.encoder_block(x, p)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+    def test_residual_structure(self):
+        """Zero weights -> block must reduce to (close to) identity + FFN bias."""
+        D, F = 16, 32
+        p = {k: np.zeros((D, D), np.float32) for k in ("wq", "wk", "wv", "wo")}
+        p.update(
+            ln1_g=np.ones(D, np.float32), ln1_b=np.zeros(D, np.float32),
+            ln2_g=np.ones(D, np.float32), ln2_b=np.zeros(D, np.float32),
+            w1=np.zeros((D, F), np.float32), b1=np.zeros(F, np.float32),
+            w2=np.zeros((F, D), np.float32), b2=np.zeros(D, np.float32),
+        )
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(2, 8, D)).astype(np.float32)
+        got = transformer_encoder.encoder_block(x, p)
+        np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+    def test_softmax_rows_sum_to_one_internally(self):
+        """Permuting batch order must permute outputs (no cross-sample mixing)."""
+        rng = np.random.default_rng(4)
+        p = make_encoder_params(rng, 16, 32, np.float32)
+        x = rng.normal(size=(4, 8, 16)).astype(np.float32)
+        perm = np.array([2, 0, 3, 1])
+        a = transformer_encoder.encoder_block(x[perm], p)
+        b = np.asarray(transformer_encoder.encoder_block(x, p))[perm]
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,72 @@
+"""Live-mode LM: training signal + flat-wrapper parity (the contract the
+Rust runtime drives through lm_step.hlo.txt)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import livemodel
+
+CFG = livemodel.LmConfig(vocab=128, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=4)
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    # learnable synthetic stream: next token = (token + 1) mod small-cycle
+    start = rng.integers(0, 16, (CFG.batch, 1))
+    steps = np.arange(CFG.seq_len + 1)[None, :]
+    return ((start + steps) % 16).astype(np.int32)
+
+
+class TestLm:
+    def test_forward_shape(self):
+        p = livemodel.init(CFG, 0)
+        tokens = jnp.asarray(batch()[:, :-1])
+        out = livemodel.forward(p, CFG, tokens)
+        assert out.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_causality(self):
+        """Changing a future token must not change earlier logits."""
+        p = livemodel.init(CFG, 0)
+        t1 = batch()[:, :-1].copy()
+        t2 = t1.copy()
+        t2[:, -1] = (t2[:, -1] + 5) % CFG.vocab
+        o1 = np.asarray(livemodel.forward(p, CFG, jnp.asarray(t1)))
+        o2 = np.asarray(livemodel.forward(p, CFG, jnp.asarray(t2)))
+        np.testing.assert_allclose(o1[:, :-1], o2[:, :-1], rtol=1e-5, atol=1e-5)
+
+    def test_loss_decreases(self):
+        p = livemodel.init(CFG, 0)
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        step = jax.jit(
+            lambda p, m, v, s, t: livemodel.train_step(p, m, v, s, CFG, t)
+        )
+        losses = []
+        for i in range(1, 31):
+            p, m, v, loss = step(p, m, v, jnp.asarray(float(i)), jnp.asarray(batch(i)))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7
+
+    def test_flat_wrapper_matches_dict_api(self):
+        names = livemodel.param_names(CFG)
+        n = len(names)
+        flat0 = livemodel.flat_init(CFG, 0)
+        assert len(flat0) == 3 * n
+
+        tokens = jnp.asarray(batch(3))
+        fs = livemodel.make_flat_step(CFG)
+        out = fs(*flat0, jnp.asarray(1.0), tokens)
+        assert len(out) == 3 * n + 1
+
+        p = dict(zip(names, flat0[:n]))
+        m = dict(zip(names, flat0[n : 2 * n]))
+        v = dict(zip(names, flat0[2 * n :]))
+        p2, m2, v2, loss = livemodel.train_step(p, m, v, jnp.asarray(1.0), CFG, tokens)
+        np.testing.assert_allclose(float(out[-1]), float(loss), rtol=1e-6)
+        for i, x in enumerate(names):
+            np.testing.assert_allclose(out[i], p2[x], rtol=1e-6, atol=1e-6)
+
+    def test_param_names_count_matches_init(self):
+        p = livemodel.init(CFG, 0)
+        assert sorted(livemodel.param_names(CFG)) == sorted(p.keys())

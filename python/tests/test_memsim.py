@@ -1,0 +1,129 @@
+"""memsim properties + golden-file self-consistency (mirrored in Rust)."""
+
+import json
+import math
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import memsim
+from compile.memsim import TaskFeatures
+
+DATA = os.path.join(os.path.dirname(__file__), "..", "..", "data")
+
+
+def features(arch="cnn", **kw):
+    base = dict(
+        arch=arch,
+        n_linear=2.0,
+        n_conv=20.0 if arch == "cnn" else 0.0,
+        params_m=25.0,
+        acts_m=20.0,
+        batch_size=32.0,
+        n_gpus=1.0,
+    )
+    base.update(kw)
+    return TaskFeatures(**base)
+
+
+class TestMeasuredGb:
+    def test_minimum_includes_context(self):
+        f = features(params_m=0.001, acts_m=0.001)
+        assert memsim.measured_gb(f) > 0.6  # CUDA context floor
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        p=st.floats(0.1, 500.0),
+        a=st.floats(0.01, 200.0),
+        bs=st.sampled_from([1, 8, 32, 128, 512]),
+        arch=st.sampled_from(["mlp", "cnn", "transformer"]),
+    )
+    def test_monotone_in_params_and_acts(self, p, a, bs, arch):
+        f1 = features(arch, params_m=p, acts_m=a, batch_size=float(bs))
+        f2 = features(arch, params_m=p * 1.5, acts_m=a, batch_size=float(bs))
+        f3 = features(arch, params_m=p, acts_m=a * 1.5, batch_size=float(bs))
+        m1 = memsim.measured_gb(f1)
+        assert memsim.measured_gb(f2) >= m1
+        assert memsim.measured_gb(f3) >= m1
+
+    @settings(max_examples=40, deadline=None)
+    @given(p=st.floats(1.0, 200.0), a=st.floats(1.0, 100.0))
+    def test_multi_gpu_reduces_per_gpu_memory(self, p, a):
+        f1 = features("transformer", params_m=p, acts_m=a, n_gpus=1.0)
+        f2 = features("transformer", params_m=p, acts_m=a, n_gpus=2.0)
+        assert memsim.measured_gb(f2) <= memsim.measured_gb(f1)
+
+    def test_staircase_quantization(self):
+        """Activation pool grows in 256 MiB steps -> plateaus exist."""
+        vals = set()
+        for a in [x / 100.0 for x in range(100, 200)]:
+            f = features("mlp", params_m=1.0, acts_m=a, batch_size=32.0)
+            vals.add(round(memsim.measured_gb(f), 9))
+        # 100 distinct acts values must collapse onto few plateaus
+        assert len(vals) < 25
+
+    def test_pool_alignment(self):
+        f = features("mlp", params_m=3.0, acts_m=2.0)
+        b = memsim.measured_bytes(f) - memsim.CTX_BYTES
+        assert b % (64.0 * memsim.MIB) == 0.0
+
+
+class TestLabels:
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.floats(0.01, 400.0), rg=st.sampled_from([1.0, 2.0, 8.0]))
+    def test_label_bounds(self, m, rg):
+        c = memsim.label_for(m, rg)
+        assert 0 <= c < memsim.num_classes(rg)
+
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.floats(0.01, 39.9), rg=st.sampled_from([1.0, 2.0, 8.0]))
+    def test_estimate_upper_bounds_memory(self, m, rg):
+        """Within the cap, the class upper edge never underestimates."""
+        c = memsim.label_for(m, rg)
+        assert memsim.estimate_from_label(c, rg) >= m - 1e-9
+
+    def test_bucket_edges(self):
+        assert memsim.label_for(0.5, 1.0) == 0
+        assert memsim.label_for(1.0, 1.0) == 0
+        assert memsim.label_for(1.0001, 1.0) == 1
+        assert memsim.label_for(7.9, 8.0) == 0
+        assert memsim.label_for(8.1, 8.0) == 1
+        assert memsim.label_for(500.0, 8.0) == memsim.num_classes(8.0) - 1
+
+
+class TestGolden:
+    def test_golden_file_matches_current_formula(self):
+        path = os.path.join(DATA, "memsim_golden.json")
+        if not os.path.exists(path):
+            pytest.skip("golden not generated yet (run compile.analysis)")
+        cases = json.load(open(path))
+        assert len(cases) >= 32
+        for c in cases:
+            f = TaskFeatures(
+                arch=c["arch"],
+                **dict(
+                    zip(
+                        [
+                            "n_linear", "n_conv", "n_batchnorm", "n_dropout",
+                            "params_m", "acts_m", "batch_size", "n_gpus",
+                            "act_cos", "act_sin", "input_dim", "output_dim",
+                            "seq_or_spatial", "depth_total", "width_max", "reserved",
+                        ],
+                        c["features"],
+                    )
+                ),
+            )
+            assert math.isclose(memsim.measured_gb(f), c["mem_gb"], rel_tol=1e-12)
+            assert memsim.label_for(c["mem_gb"], 1.0) == c["label_1gb"]
+            assert memsim.label_for(c["mem_gb"], 8.0) == c["label_8gb"]
+
+
+class TestZooCalibration:
+    def test_zoo_memsim_close_to_paper(self):
+        path = os.path.join(DATA, "model_zoo.json")
+        zoo = json.load(open(path))["models"]
+        assert len(zoo) == 35
+        for m in zoo:
+            # calibration keeps memsim within one activation-pool step
+            assert abs(m["memsim_gb"] - m["mem_gb"]) <= 0.26, m["name"]

@@ -1,0 +1,180 @@
+"""L2 model tests: BN folding, structural masks, training signal, and the
+pallas-vs-ref parity of the full exported inference graph."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile import train as T
+
+
+def tiny_data(n=256, n_classes=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = np.zeros((n, 16), np.float32)
+    X[:, 4] = rng.uniform(0.5, 500.0, n)  # params_m
+    X[:, 5] = rng.uniform(0.5, 200.0, n)  # acts_m
+    X[:, 6] = rng.choice([8, 32, 128], n)  # batch size
+    y = (np.log1p(X[:, 4] * X[:, 6]) * 0.45).astype(np.int32) % n_classes
+    return X, y
+
+
+class TestEnsemble:
+    def test_init_shapes_and_masks(self):
+        params, state, static, mask = model.init_ensemble(jax.random.PRNGKey(0), 5)
+        M, L, D = model.N_MEMBERS, model.L_HIDDEN, model.D_PAD
+        assert params.w_in.shape == (M, D, D)
+        assert params.w_h.shape == (M, L, D, D)
+        # identity padding layers must be exact identity and frozen
+        for m in range(M):
+            for l in range(static.depth[m], L):
+                np.testing.assert_array_equal(params.w_h[m, l], np.eye(D))
+                assert float(mask.w_h[m, l].sum()) == 0.0
+
+    def test_member_widths_decay(self):
+        ws = model.member_widths(None)
+        assert ws[0] == model.MEMBER_W_MAX
+        assert ws[-1] == model.MEMBER_W_MIN
+        assert all(a >= b for a, b in zip(ws, ws[1:]))
+
+    def test_train_reduces_loss(self):
+        X, y = tiny_data()
+        params, state, static, mask = model.init_ensemble(jax.random.PRNGKey(1), 5)
+        m, v = model.adam_init(params)
+
+        def loss_fn(p, st):
+            logits, st2 = model.ensemble_train_forward(p, st, static, jnp.asarray(X))
+            return model.cross_entropy(logits, jnp.asarray(y)), st2
+
+        (l0, state2), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, state)
+        for i in range(1, 40):
+            (li, state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, state)
+            grads = jax.tree.map(lambda g, msk: g * msk, grads, mask)
+            params, m, v = model.adam_update(params, grads, m, v, i, lr=3e-3)
+        (l1, _), _ = jax.value_and_grad(loss_fn, has_aux=True)(params, state)
+        assert float(l1) < float(l0) * 0.9
+
+    def test_masked_params_stay_fixed_under_masked_updates(self):
+        X, y = tiny_data(64)
+        params, state, static, mask = model.init_ensemble(jax.random.PRNGKey(2), 5)
+        m, v = model.adam_init(params)
+
+        def loss_fn(p, st):
+            logits, st2 = model.ensemble_train_forward(p, st, static, jnp.asarray(X))
+            return model.cross_entropy(logits, jnp.asarray(y)), st2
+
+        before = params.w_h
+        for i in range(1, 4):
+            (_, state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, state)
+            grads = jax.tree.map(lambda g, msk: g * msk, grads, mask)
+            params, m, v = model.adam_update(params, grads, m, v, i)
+        for mm in range(model.N_MEMBERS):
+            for l in range(static.depth[mm], model.L_HIDDEN):
+                np.testing.assert_array_equal(params.w_h[mm, l], before[mm, l])
+
+    def test_fold_bn_matches_eval_forward(self):
+        """Folded inference must equal a BN-eval-mode forward pass."""
+        X, y = tiny_data(128)
+        params, state, static, mask = model.init_ensemble(jax.random.PRNGKey(3), 5)
+        m, v = model.adam_init(params)
+
+        def loss_fn(p, st):
+            logits, st2 = model.ensemble_train_forward(p, st, static, jnp.asarray(X))
+            return model.cross_entropy(logits, jnp.asarray(y)), st2
+
+        # a few steps so running stats are non-trivial
+        for i in range(1, 6):
+            (_, state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, state)
+            grads = jax.tree.map(lambda g, msk: g * msk, grads, mask)
+            params, m, v = model.adam_update(params, grads, m, v, i)
+
+        folded = model.fold_bn(params, state, static)
+        got = model.ensemble_infer(folded, jnp.asarray(X[:16]), 5, use_pallas=False)
+
+        # manual eval-mode forward with running stats
+        x = model.pad_features(model.normalize_features(jnp.asarray(X[:16])))
+        acc = 0.0
+        for mm in range(model.N_MEMBERS):
+            h = x @ params.w_in[mm] + params.b_in[mm]
+            h = (h - state.mu_in[mm]) / jnp.sqrt(state.var_in[mm] + model.BN_EPS)
+            h = h * params.g_in[mm] + params.be_in[mm]
+            wv = (jnp.arange(model.D_PAD) < static.width[mm]).astype(jnp.float32)
+            h = jnp.maximum(h * wv, 0.0)
+            for l in range(model.L_HIDDEN):
+                if l < static.depth[mm]:
+                    h2 = h @ params.w_h[mm, l] + params.b_h[mm, l]
+                    h2 = (h2 - state.mu_h[mm, l]) / jnp.sqrt(state.var_h[mm, l] + model.BN_EPS)
+                    h2 = h2 * params.g_h[mm, l] + params.be_h[mm, l]
+                    h = jnp.maximum(h2 * wv, 0.0)
+            acc = acc + h @ params.w_out[mm] + params.b_out[mm]
+        want = (acc / model.N_MEMBERS)[:, :5]
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_pallas_and_ref_inference_agree(self):
+        params, state, static, _ = model.init_ensemble(jax.random.PRNGKey(4), 5)
+        folded = model.fold_bn(params, state, static)
+        X, _ = tiny_data(8)
+        a = model.ensemble_infer(folded, jnp.asarray(X), 5, use_pallas=False)
+        b = model.ensemble_infer(folded, jnp.asarray(X), 5, use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+class TestTransformerClassifier:
+    def test_forward_shapes(self):
+        p = model.init_transformer(jax.random.PRNGKey(0), 5)
+        X = np.zeros((4, 16), np.float32)
+        S = np.zeros((4, model.SEQ_LEN, 3), np.float32)
+        out = model.transformer_forward(p, jnp.asarray(X), jnp.asarray(S))
+        assert out.shape == (4, 5)
+
+    def test_pallas_and_ref_agree(self):
+        rng = np.random.default_rng(0)
+        p = model.init_transformer(jax.random.PRNGKey(1), 5)
+        X = rng.uniform(0, 10, (4, 16)).astype(np.float32)
+        S = rng.uniform(0, 3, (4, model.SEQ_LEN, 3)).astype(np.float32)
+        a = model.transformer_forward(p, jnp.asarray(X), jnp.asarray(S), use_pallas=False)
+        b = model.transformer_forward(p, jnp.asarray(X), jnp.asarray(S), use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=5e-5, atol=5e-5)
+
+
+class TestNormalization:
+    def test_normalized_range(self):
+        X = np.array(
+            [[64, 96, 64, 16, 900, 300, 512, 4, 1, 0, 150528, 50257, 2048, 96, 8192, 0]],
+            np.float32,
+        )
+        out = np.asarray(model.normalize_features(jnp.asarray(X)))
+        assert np.all(np.abs(out) < 4.0)
+
+    def test_padding(self):
+        X = np.ones((2, 16), np.float32)
+        out = model.pad_features(model.normalize_features(jnp.asarray(X)))
+        assert out.shape == (2, model.D_PAD)
+        assert np.all(np.asarray(out)[:, 16:] == 0.0)
+
+
+class TestTrainHelpers:
+    def test_stratified_split_preserves_classes(self):
+        y = np.array([0] * 50 + [1] * 30 + [2] * 20)
+        a, b = T.stratified_split(y, 0.7, 0)
+        assert len(a) + len(b) == 100
+        for c in (0, 1, 2):
+            frac = np.mean(y[a] == c)
+            assert abs(frac - np.mean(y == c)) < 0.05
+
+    def test_kfold_partitions(self):
+        y = np.array([0, 1] * 30)
+        seen = []
+        for tr, val in T.kfold(y, 3, 0):
+            assert set(tr) & set(val) == set()
+            seen.extend(val)
+        assert sorted(seen) == list(range(60))
+
+    def test_macro_f1_perfect(self):
+        y = np.array([0, 1, 2, 2])
+        assert T.macro_f1(y, y) == 1.0
+
+    def test_macro_f1_worst(self):
+        y = np.array([0, 0, 1, 1])
+        p = np.array([1, 1, 0, 0])
+        assert T.macro_f1(y, p) == 0.0

@@ -1,0 +1,161 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! Auto-tunes iteration count to a target measurement time, reports
+//! mean/median/p95/stddev, and supports throughput annotation.  Used by
+//! everything under `benches/`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        stats::stddev(&self.samples_ns)
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12}  median {:>12}  p95 {:>12}  (±{:>10}, {} samples × {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p95_ns()),
+            fmt_ns(self.stddev_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample,
+        );
+    }
+
+    pub fn report_throughput(&self, items: f64, unit: &str) {
+        let per_sec = items / (self.mean_ns() * 1e-9);
+        println!(
+            "{:<44} {:>12}  ->  {:>12.1} {unit}/s",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            per_sec
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Target wall-clock per benchmark (warmup + measurement).
+    pub target: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target: Duration::from_millis(800),
+            samples: 20,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            target: Duration::from_millis(200),
+            samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must do one unit of work per call.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup + calibration: how many iters fit in target/samples?
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.target / 10 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / calib_iters.max(1) as f64;
+        let budget_ns = self.target.as_nanos() as f64 / self.samples as f64;
+        let iters = ((budget_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(s.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples_ns,
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let r = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert_eq!(r.samples_ns.len(), 10);
+    }
+
+    #[test]
+    fn ordering_detected() {
+        let b = Bencher::quick();
+        let fast = b.bench("fast", || {
+            black_box((0..10).sum::<u64>());
+        });
+        let slow = b.bench("slow", || {
+            black_box((0..10_000).fold(0u64, |a, x| a ^ (x * 7)));
+        });
+        assert!(slow.mean_ns() > fast.mean_ns());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `carma <subcommand> [positional...] [--key value] [--flag]`.
+//! Flags and options may appear in any order after the subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Option names that take a value; everything else starting with `--` is a
+/// boolean flag.
+pub fn parse<I: IntoIterator<Item = String>>(
+    argv: I,
+    value_opts: &[&str],
+) -> Result<Args, CliError> {
+    let mut out = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            // --key=value form
+            if let Some((k, v)) = name.split_once('=') {
+                if !value_opts.contains(&k) {
+                    return Err(CliError(format!("unknown option --{k}")));
+                }
+                out.options.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            if value_opts.contains(&name) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| CliError(format!("option --{name} needs a value")))?;
+                out.options.insert(name.to_string(), v);
+            } else {
+                out.flags.push(name.to_string());
+            }
+        } else if out.subcommand.is_none() {
+            out.subcommand = Some(arg);
+        } else {
+            out.positional.push(arg);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects a number, got '{s}'"))),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    const OPTS: &[&str] = &["policy", "seed", "trace"];
+
+    #[test]
+    fn basic() {
+        let a = parse(argv("repro fig8 --policy magm --verbose"), OPTS).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["fig8"]);
+        assert_eq!(a.opt("policy"), Some("magm"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse(argv("run --seed=7"), OPTS).unwrap();
+        assert_eq!(a.opt_u64("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(argv("run --policy"), OPTS).is_err());
+    }
+
+    #[test]
+    fn unknown_eq_option_errors() {
+        assert!(parse(argv("run --nope=3"), OPTS).is_err());
+    }
+
+    #[test]
+    fn numeric_validation() {
+        let a = parse(argv("run --seed abc"), OPTS).unwrap();
+        assert!(a.opt_u64("seed").is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Segment allocator for simulated GPU memory (S2).
+//!
+//! GPUs lack virtual memory (paper §1): a training task that cannot get
+//! its reservation mapped crashes with OOM even when total free memory
+//! would suffice.  This allocator reproduces that failure mode honestly:
+//! best-fit over an explicit free list in 1 MiB granules (contiguous
+//! `alloc`) plus page-backed `alloc_scatter` (a slab may span a bounded
+//! number of holes), coalescing on free — so fragmentation *emerges* from
+//! the allocation history (paper §4.2's motivating scenario is pinned as
+//! a test below).
+
+use std::collections::BTreeMap;
+
+pub type SegId = u64;
+
+#[derive(Debug, Clone)]
+pub struct SegmentAllocator {
+    capacity: u64,
+    /// Free holes, keyed by offset -> length. BTreeMap keeps address order
+    /// for coalescing.
+    free: BTreeMap<u64, u64>,
+    /// Live segments: id -> (offset, length).
+    live: BTreeMap<SegId, (u64, u64)>,
+    next_id: SegId,
+    /// Cached Σ holes — read every monitor tick (hot path), updated on
+    /// alloc/free (§Perf: replaces an O(#holes) walk per sample).
+    free_sum: u64,
+}
+
+impl SegmentAllocator {
+    /// `capacity` in MiB granules.
+    pub fn new(capacity: u64) -> Self {
+        let mut free = BTreeMap::new();
+        if capacity > 0 {
+            free.insert(0, capacity);
+        }
+        SegmentAllocator {
+            capacity,
+            free,
+            live: BTreeMap::new(),
+            next_id: 1,
+            free_sum: capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Total free MiB (what `nvidia-smi` would report). O(1) — cached.
+    pub fn free_total(&self) -> u64 {
+        self.free_sum
+    }
+
+    pub fn used_total(&self) -> u64 {
+        self.capacity - self.free_total()
+    }
+
+    /// Largest contiguous hole — the real constraint for new allocations.
+    pub fn largest_hole(&self) -> u64 {
+        self.free.values().copied().max().unwrap_or(0)
+    }
+
+    pub fn live_segments(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Best-fit allocation (the CUDA driver/caching allocators approximate
+    /// best-fit to limit fragmentation). Returns None on OOM (no hole
+    /// fits), which for a GPU means the allocating task crashes.
+    pub fn alloc(&mut self, len: u64) -> Option<SegId> {
+        if len == 0 {
+            return None;
+        }
+        let (off, hole_len) = self
+            .free
+            .iter()
+            .filter(|(_, &l)| l >= len)
+            .min_by_key(|(&o, &l)| (l, o))
+            .map(|(&o, &l)| (o, l))?;
+        self.free.remove(&off);
+        if hole_len > len {
+            self.free.insert(off + len, hole_len - len);
+        }
+        self.free_sum -= len;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.insert(id, (off, len));
+        Some(id)
+    }
+
+    /// Scatter allocation: satisfy `len` from up to `max_frags` holes
+    /// (largest-first).  Models CUDA's page-backed physical memory: a
+    /// process's buffer need not be physically contiguous, but the mapping
+    /// hardware bounds how shredded a large slab may be.  Returns None —
+    /// an OOM for the allocating task — when the free memory is
+    /// insufficient OR too fragmented (the paper's §4.2 scenario).
+    pub fn alloc_scatter(&mut self, len: u64, max_frags: usize) -> Option<Vec<SegId>> {
+        if len == 0 {
+            return None;
+        }
+        if self.free_sum < len {
+            return None;
+        }
+        // feasibility: do the `max_frags` largest holes cover `len`?
+        let mut holes: Vec<u64> = self.free.values().copied().collect();
+        holes.sort_unstable_by(|a, b| b.cmp(a));
+        let coverage: u64 = holes.iter().take(max_frags).sum();
+        if coverage < len {
+            return None;
+        }
+        let mut remaining = len;
+        let mut segs = Vec::new();
+        while remaining > 0 {
+            // take the largest hole
+            let (&off, &hole_len) = self
+                .free
+                .iter()
+                .max_by_key(|(&o, &l)| (l, std::cmp::Reverse(o)))
+                .expect("feasibility checked");
+            let take = hole_len.min(remaining);
+            self.free.remove(&off);
+            if hole_len > take {
+                self.free.insert(off + take, hole_len - take);
+            }
+            self.free_sum -= take;
+            let id = self.next_id;
+            self.next_id += 1;
+            self.live.insert(id, (off, take));
+            segs.push(id);
+            remaining -= take;
+        }
+        Some(segs)
+    }
+
+    /// Free a segment, coalescing with adjacent holes.
+    pub fn free(&mut self, id: SegId) {
+        let (off, len) = match self.live.remove(&id) {
+            Some(x) => x,
+            None => return, // double-free tolerated (recovery path)
+        };
+        self.free_sum += len;
+        let mut new_off = off;
+        let mut new_len = len;
+        // coalesce with predecessor
+        if let Some((&prev_off, &prev_len)) = self.free.range(..off).next_back() {
+            if prev_off + prev_len == off {
+                self.free.remove(&prev_off);
+                new_off = prev_off;
+                new_len += prev_len;
+            }
+        }
+        // coalesce with successor
+        if let Some((&next_off, &next_len)) = self.free.range(off + len..).next() {
+            if off + len == next_off {
+                self.free.remove(&next_off);
+                new_len += next_len;
+            }
+        }
+        self.free.insert(new_off, new_len);
+    }
+
+    /// Invariant check (used by property tests): holes are sorted, disjoint,
+    /// non-adjacent (coalesced), and free+live cover exactly the capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut prev_end: Option<u64> = None;
+        for (&off, &len) in &self.free {
+            if len == 0 {
+                return Err(format!("zero-length hole at {off}"));
+            }
+            if let Some(pe) = prev_end {
+                if off < pe {
+                    return Err("overlapping holes".into());
+                }
+                if off == pe {
+                    return Err(format!("uncoalesced holes at {off}"));
+                }
+            }
+            prev_end = Some(off + len);
+        }
+        let mut spans: Vec<(u64, u64)> = self
+            .free
+            .iter()
+            .map(|(&o, &l)| (o, l))
+            .chain(self.live.values().copied())
+            .collect();
+        spans.sort_unstable();
+        let mut cursor = 0;
+        for (o, l) in spans {
+            if o != cursor {
+                return Err(format!("gap or overlap at {o} (expected {cursor})"));
+            }
+            cursor = o + l;
+        }
+        if cursor != self.capacity {
+            return Err(format!("coverage ends at {cursor}, capacity {}", self.capacity));
+        }
+        let computed: u64 = self.free.values().sum();
+        if computed != self.free_sum {
+            return Err(format!("free_sum cache {} != computed {computed}", self.free_sum));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = SegmentAllocator::new(100);
+        let s1 = a.alloc(40).unwrap();
+        let s2 = a.alloc(40).unwrap();
+        assert!(a.alloc(40).is_none()); // OOM
+        assert_eq!(a.free_total(), 20);
+        a.free(s1);
+        a.free(s2);
+        assert_eq!(a.free_total(), 100);
+        assert_eq!(a.largest_hole(), 100); // fully coalesced
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn paper_4_2_fragmentation_scenario() {
+        // "free GPU memory fragmented in two chunks like 5GB and 4GB and a
+        //  new task needs 8GB: monitors report 9GB free, but OOM happens."
+        let gb = 1024;
+        let mut a = SegmentAllocator::new(40 * gb);
+        let head = a.alloc(5 * gb).unwrap(); // will become the 5GB hole
+        let keep1 = a.alloc(26 * gb).unwrap(); // long-running resident task
+        let tail = a.alloc(4 * gb).unwrap(); // will become the 4GB hole
+        let _keep2 = a.alloc(5 * gb).unwrap();
+        a.free(head);
+        a.free(tail);
+        assert_eq!(a.free_total(), 9 * gb); // monitor sees 9 GB free
+        assert_eq!(a.largest_hole(), 5 * gb);
+        assert!(a.alloc(8 * gb).is_none()); // ...but the 8 GB task OOMs
+        let _ = keep1;
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_hole() {
+        let mut a = SegmentAllocator::new(100);
+        let s1 = a.alloc(10).unwrap();
+        let _s2 = a.alloc(10).unwrap();
+        a.free(s1); // 10-unit hole at 0, 80-unit hole at 20
+        let s3 = a.alloc(5).unwrap();
+        // best fit: s3 must sit in the tighter 10-unit hole (offset 0)
+        assert_eq!(a.live.get(&s3).unwrap().0, 0);
+        let s4 = a.alloc(8).unwrap();
+        // 5-unit hole left at 5 cannot take 8 -> goes to the big hole
+        assert_eq!(a.live.get(&s4).unwrap().0, 20);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        let mut a = SegmentAllocator::new(10);
+        assert!(a.alloc(0).is_none());
+    }
+
+    #[test]
+    fn double_free_is_noop() {
+        let mut a = SegmentAllocator::new(10);
+        let s = a.alloc(5).unwrap();
+        a.free(s);
+        a.free(s);
+        assert_eq!(a.free_total(), 10);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_invariants_under_random_workload() {
+        let gen = |rng: &mut Rng, size: usize| {
+            let ops: Vec<(bool, u64)> = (0..size * 4)
+                .map(|_| (rng.bool(0.6), rng.range_u64(1, 64)))
+                .collect();
+            ops
+        };
+        testkit::forall(&gen, |ops| {
+            let mut a = SegmentAllocator::new(1024);
+            let mut ids: Vec<SegId> = Vec::new();
+            for &(is_alloc, len) in ops {
+                if is_alloc {
+                    if let Some(id) = a.alloc(len) {
+                        ids.push(id);
+                    }
+                } else if !ids.is_empty() {
+                    let id = ids.remove((len as usize) % ids.len());
+                    a.free(id);
+                }
+                a.check_invariants()?;
+                if a.free_total() > 0 && a.largest_hole() == 0 {
+                    return Err("free>0 but no hole".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

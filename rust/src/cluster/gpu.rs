@@ -1,0 +1,297 @@
+//! GPU device + server model (S2).
+
+use crate::config::schema::{CollocationMode, InterferenceConfig, ServerConfig};
+use crate::sim::TaskId;
+use crate::util::units::{gb_to_mib, mib_to_gb};
+
+use super::allocator::{SegId, SegmentAllocator};
+use super::interference::{self, Demand};
+
+/// A task currently resident on (dispatched to) a GPU.
+#[derive(Debug, Clone)]
+pub struct ResidentTask {
+    pub task: TaskId,
+    /// Solo SM-activity demand (from the model zoo).
+    pub smact: f64,
+    /// Solo memory-bandwidth demand.
+    pub membw: f64,
+    /// MIG instance index (0 when MIG is off).
+    pub instance: usize,
+    /// Dispatch time — SM activity ramps up over the training warm-up
+    /// (data loading, cuDNN autotune), which is what the monitor's window
+    /// actually observes.
+    pub dispatched_at: f64,
+}
+
+/// Seconds for a freshly dispatched task's SM activity to reach its solo
+/// level. The monitor's 60 s window therefore *lags* — the reason the
+/// paper's preconditioned runs still admit a few tasks too many (Table 4/6).
+pub const SMACT_RAMP_S: f64 = 120.0;
+
+/// One simulated A100 (40 GB HBM2, Table 2).
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub id: usize,
+    pub alloc: SegmentAllocator,
+    pub resident: Vec<ResidentTask>,
+    /// MIG instance compute fractions (empty = MIG disabled). CARMA never
+    /// reconfigures instances, it only dispatches to them (paper §4.4).
+    pub mig_slices: Vec<f64>,
+    /// Which task occupies each MIG instance (exclusive dispatch).
+    pub mig_occupancy: Vec<Option<TaskId>>,
+}
+
+impl Gpu {
+    pub fn new(id: usize, mem_gb: f64, mig_slices: Vec<f64>) -> Self {
+        let occ = vec![None; mig_slices.len()];
+        Gpu {
+            id,
+            alloc: SegmentAllocator::new(gb_to_mib(mem_gb)),
+            resident: Vec::new(),
+            mig_slices,
+            mig_occupancy: occ,
+        }
+    }
+
+    pub fn mig_enabled(&self) -> bool {
+        !self.mig_slices.is_empty()
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        mib_to_gb(self.alloc.free_total())
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        mib_to_gb(self.alloc.used_total())
+    }
+
+    pub fn largest_hole_gb(&self) -> f64 {
+        mib_to_gb(self.alloc.largest_hole())
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Steady-state demands (interference / speed computation).
+    fn demands(&self) -> Vec<Demand> {
+        self.resident
+            .iter()
+            .map(|r| Demand {
+                smact: r.smact,
+                membw: r.membw,
+                instance_frac: if self.mig_enabled() {
+                    self.mig_slices[r.instance]
+                } else {
+                    1.0
+                },
+            })
+            .collect()
+    }
+
+    /// (task, speed factor) for every resident task under `mode`.
+    pub fn speeds(
+        &self,
+        mode: CollocationMode,
+        cfg: &InterferenceConfig,
+    ) -> Vec<(TaskId, f64)> {
+        let d = self.demands();
+        let f = interference::speed_factors(mode, &d, cfg);
+        self.resident
+            .iter()
+            .zip(f)
+            .map(|(r, s)| (r.task, s))
+            .collect()
+    }
+
+    /// Effective SM activity as a DCGM monitor would report it at `now`
+    /// (warm-up ramp included).  Allocation-free: this runs once per GPU
+    /// per 1 Hz monitor tick — the simulator's hottest loop (§Perf).
+    pub fn effective_smact(&self, mode: CollocationMode, now: f64) -> f64 {
+        if self.resident.is_empty() {
+            return 0.0;
+        }
+        let ramped = |r: &ResidentTask| {
+            r.smact * ((now - r.dispatched_at) / SMACT_RAMP_S).clamp(0.0, 1.0)
+        };
+        match mode {
+            CollocationMode::Mps => {
+                1.0 - self
+                    .resident
+                    .iter()
+                    .map(|r| 1.0 - ramped(r).min(1.0))
+                    .product::<f64>()
+            }
+            CollocationMode::Streams => {
+                self.resident.iter().map(ramped).sum::<f64>().min(1.0)
+            }
+            CollocationMode::Mig => self
+                .resident
+                .iter()
+                .map(|r| ramped(r).min(self.mig_slices[r.instance]))
+                .sum::<f64>()
+                .min(1.0),
+        }
+    }
+
+    /// Find a free MIG instance with at least `frac_needed` compute if any.
+    pub fn free_mig_instance(&self) -> Option<usize> {
+        self.mig_occupancy.iter().position(|o| o.is_none())
+    }
+
+    pub fn add_resident(&mut self, r: ResidentTask) {
+        if self.mig_enabled() {
+            debug_assert!(self.mig_occupancy[r.instance].is_none());
+            self.mig_occupancy[r.instance] = Some(r.task);
+        }
+        self.resident.push(r);
+    }
+
+    pub fn remove_resident(&mut self, task: TaskId) {
+        if let Some(pos) = self.resident.iter().position(|r| r.task == task) {
+            let r = self.resident.swap_remove(pos);
+            if self.mig_enabled() {
+                self.mig_occupancy[r.instance] = None;
+            }
+        }
+    }
+}
+
+/// The simulated server: N GPUs (DGX Station A100: 4).
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub gpus: Vec<Gpu>,
+}
+
+impl Server {
+    pub fn new(cfg: &ServerConfig) -> Self {
+        Server {
+            gpus: (0..cfg.n_gpus)
+                .map(|i| Gpu::new(i, cfg.mem_gb, cfg.mig_slices.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn idle_gpus(&self) -> Vec<usize> {
+        self.gpus
+            .iter()
+            .filter(|g| g.resident.is_empty())
+            .map(|g| g.id)
+            .collect()
+    }
+
+    /// Total segments live across the server (debug/metrics).
+    pub fn total_live_segments(&self) -> usize {
+        self.gpus.iter().map(|g| g.alloc.live_segments()).sum()
+    }
+}
+
+/// Segments a task holds on one GPU (owned by the task runtime so an OOM or
+/// completion can free everything it allocated).
+#[derive(Debug, Clone, Default)]
+pub struct TaskSegments {
+    pub gpu: usize,
+    pub segs: Vec<SegId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ServerConfig;
+
+    fn server() -> Server {
+        Server::new(&ServerConfig {
+            n_gpus: 4,
+            mem_gb: 40.0,
+            mig_slices: vec![],
+        })
+    }
+
+    #[test]
+    fn construction() {
+        let s = server();
+        assert_eq!(s.n_gpus(), 4);
+        assert_eq!(s.idle_gpus(), vec![0, 1, 2, 3]);
+        assert!((s.gpus[0].free_gb() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residency_tracking() {
+        let mut s = server();
+        s.gpus[1].add_resident(ResidentTask {
+            task: 7,
+            smact: 0.5,
+            membw: 0.4,
+            instance: 0,
+            dispatched_at: 0.0,
+        });
+        assert_eq!(s.idle_gpus(), vec![0, 2, 3]);
+        assert_eq!(s.gpus[1].n_tasks(), 1);
+        assert!(s.gpus[1].effective_smact(CollocationMode::Mps, 1e9) > 0.4);
+        s.gpus[1].remove_resident(7);
+        assert_eq!(s.idle_gpus(), vec![0, 1, 2, 3]);
+        assert_eq!(s.gpus[1].effective_smact(CollocationMode::Mps, 1e9), 0.0);
+    }
+
+    #[test]
+    fn speeds_collocated() {
+        let mut g = Gpu::new(0, 40.0, vec![]);
+        for t in 0..2 {
+            g.add_resident(ResidentTask {
+                task: t,
+                smact: 0.4,
+                membw: 0.3,
+                instance: 0,
+                dispatched_at: 0.0,
+            });
+        }
+        let sp = g.speeds(CollocationMode::Mps, &InterferenceConfig::default());
+        assert_eq!(sp.len(), 2);
+        assert!(sp[0].1 > 0.85 && sp[0].1 < 1.0);
+    }
+
+    #[test]
+    fn mig_instances() {
+        let mut g = Gpu::new(0, 40.0, vec![0.5, 0.25, 0.25]);
+        assert!(g.mig_enabled());
+        let i = g.free_mig_instance().unwrap();
+        g.add_resident(ResidentTask {
+            task: 1,
+            smact: 0.3,
+            membw: 0.2,
+            instance: i,
+            dispatched_at: 0.0,
+        });
+        assert_eq!(g.free_mig_instance(), Some(1));
+        g.add_resident(ResidentTask {
+            task: 2,
+            smact: 0.3,
+            membw: 0.2,
+            instance: 1,
+            dispatched_at: 0.0,
+        });
+        g.add_resident(ResidentTask {
+            task: 3,
+            smact: 0.3,
+            membw: 0.2,
+            instance: 2,
+            dispatched_at: 0.0,
+        });
+        assert_eq!(g.free_mig_instance(), None);
+        g.remove_resident(2);
+        assert_eq!(g.free_mig_instance(), Some(1));
+    }
+
+    #[test]
+    fn allocation_affects_free_gb() {
+        let mut g = Gpu::new(0, 40.0, vec![]);
+        let seg = g.alloc.alloc(gb_to_mib(13.5)).unwrap();
+        assert!((g.free_gb() - 26.5).abs() < 0.01);
+        g.alloc.free(seg);
+        assert!((g.free_gb() - 40.0).abs() < 1e-9);
+    }
+}

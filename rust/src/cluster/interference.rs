@@ -1,0 +1,269 @@
+//! Interference model: per-task speed factors under collocation (S3).
+//!
+//! Calibrated to the qualitative findings of [31] (paper §2.1 / §5.2):
+//!
+//! * **MPS** — fine-grained SM sharing.  Below compute saturation
+//!   (ΣSMACT ≤ 1) tasks run near full speed with a mild cache/bandwidth
+//!   interference term; above saturation each task's speed degrades to its
+//!   proportional compute share (1/Σ).  Memory-bandwidth oversubscription
+//!   adds a second contention term.
+//! * **streams** — default-stream submission serializes kernels: tasks
+//!   time-share the whole GPU, so n collocated tasks each run at ~1/n plus
+//!   a context-switch penalty ("execution time may become longer than
+//!   back-to-back", paper §2.1).  Waiting time still improves because
+//!   everything starts immediately — exactly the Fig. 8 streams result.
+//! * **MIG** — isolated instances: no cross-task interference; a task whose
+//!   solo SMACT exceeds its instance's compute fraction is slowed
+//!   proportionally (reduced capacity, paper §2.1).
+
+use crate::config::schema::{CollocationMode, InterferenceConfig};
+
+/// Per-task demand as observed when running alone.
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    /// Solo SM activity (0..1).
+    pub smact: f64,
+    /// Solo memory-bandwidth utilization (0..1).
+    pub membw: f64,
+    /// MIG compute fraction of the instance the task runs in (1.0 = whole
+    /// GPU / MIG off).
+    pub instance_frac: f64,
+}
+
+/// Speed factor (0..1] for every co-resident task on one GPU.
+pub fn speed_factors(
+    mode: CollocationMode,
+    tasks: &[Demand],
+    cfg: &InterferenceConfig,
+) -> Vec<f64> {
+    match mode {
+        CollocationMode::Mps => mps(tasks, cfg),
+        CollocationMode::Streams => streams(tasks, cfg),
+        CollocationMode::Mig => mig(tasks),
+    }
+}
+
+/// Per-co-runner MPS scheduling overhead (context switching, L2 thrash —
+/// grows with the *number* of clients, independent of their load).
+const MPS_PER_CLIENT_PENALTY: f64 = 0.05;
+
+fn mps(tasks: &[Demand], cfg: &InterferenceConfig) -> Vec<f64> {
+    let d: f64 = tasks.iter().map(|t| t.smact).sum();
+    let b: f64 = tasks.iter().map(|t| t.membw).sum();
+    let n = tasks.len() as f64;
+    tasks
+        .iter()
+        .map(|t| {
+            // compute share: full speed until the SMs saturate, then
+            // proportional sharing
+            let compute = if d <= 1.0 { 1.0 } else { 1.0 / d };
+            // cache / L2 / scheduler interference from co-runners
+            let others = (d - t.smact).max(0.0);
+            let interf =
+                1.0 / (1.0 + cfg.mps_alpha * others + MPS_PER_CLIENT_PENALTY * (n - 1.0));
+            // HBM bandwidth contention once oversubscribed
+            let bw = 1.0 / (1.0 + cfg.membw_alpha * (b - 1.0).max(0.0));
+            compute * interf * bw
+        })
+        .collect()
+}
+
+/// Streams contend far harder than MPS: no client-server QoS, kernels from
+/// different processes thrash SMs/L2 when they overlap and serialize when
+/// they don't.
+const STREAMS_ALPHA_FACTOR: f64 = 9.0;
+
+fn streams(tasks: &[Demand], cfg: &InterferenceConfig) -> Vec<f64> {
+    if tasks.len() <= 1 {
+        return vec![1.0; tasks.len()];
+    }
+    let n = tasks.len() as f64;
+    let d: f64 = tasks.iter().map(|t| t.smact).sum();
+    let b: f64 = tasks.iter().map(|t| t.membw).sum();
+    let alpha = cfg.mps_alpha * STREAMS_ALPHA_FACTOR;
+    tasks
+        .iter()
+        .map(|t| {
+            let compute = if d <= 1.0 { 1.0 } else { 1.0 / d };
+            // launch/sync serialization on top of the contention term —
+            // heavy pairs end at or below back-to-back throughput
+            // ("execution time may become longer than back-to-back", §2.1;
+            // Fig. 8a: streams ≈ marginal total-time benefit vs Exclusive)
+            let penalty = 1.0 / (1.0 + cfg.streams_penalty * (n - 1.0));
+            let others = (d - t.smact).max(0.0);
+            let interf = 1.0 / (1.0 + alpha * others);
+            let bw = 1.0 / (1.0 + cfg.membw_alpha * (b - 1.0).max(0.0));
+            compute * penalty * interf * bw
+        })
+        .collect()
+}
+
+fn mig(tasks: &[Demand]) -> Vec<f64> {
+    tasks
+        .iter()
+        .map(|t| {
+            // isolation: only the instance's reduced capacity matters
+            if t.smact <= t.instance_frac {
+                1.0
+            } else {
+                (t.instance_frac / t.smact).max(0.05)
+            }
+        })
+        .collect()
+}
+
+/// Effective GPU-level SM activity for monitoring/power: fraction of time at
+/// least one warp is active (paper §5.1.3).
+pub fn effective_smact(mode: CollocationMode, tasks: &[Demand]) -> f64 {
+    if tasks.is_empty() {
+        return 0.0;
+    }
+    match mode {
+        // SMACT = fraction of time at least one warp is active (§5.1.3);
+        // with MPS the tasks' active phases overlap ~independently, so the
+        // observed activity is 1 - Π(1 - s_i), NOT the sum — two 0.6-SMACT
+        // tasks read ~0.84, which is also why the paper's 80 % cap keeps
+        // collocated GPUs out of the >90 % high-power mode (§4.4)
+        CollocationMode::Mps => {
+            1.0 - tasks.iter().map(|t| 1.0 - t.smact.min(1.0)).product::<f64>()
+        }
+        // serialized default-stream kernels cannot overlap: active time
+        // accumulates additively up to saturation — the monitor reads high
+        // and the GPU burns power serving interleaved kernels
+        CollocationMode::Streams => tasks.iter().map(|t| t.smact).sum::<f64>().min(1.0),
+        // instances are independent; report aggregate occupied fraction
+        CollocationMode::Mig => tasks
+            .iter()
+            .map(|t| t.smact.min(t.instance_frac))
+            .sum::<f64>()
+            .min(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> InterferenceConfig {
+        InterferenceConfig::default()
+    }
+
+    fn d(smact: f64) -> Demand {
+        Demand {
+            smact,
+            membw: smact * 0.9,
+            instance_frac: 1.0,
+        }
+    }
+
+    #[test]
+    fn solo_task_full_speed() {
+        for mode in [CollocationMode::Mps, CollocationMode::Streams, CollocationMode::Mig] {
+            let f = speed_factors(mode, &[d(0.6)], &cfg());
+            assert!((f[0] - 1.0).abs() < 1e-9, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn mps_light_pair_near_full_speed() {
+        let f = speed_factors(CollocationMode::Mps, &[d(0.3), d(0.3)], &cfg());
+        assert!(f[0] > 0.9 && f[0] < 1.0, "light MPS pair should barely slow: {f:?}");
+    }
+
+    #[test]
+    fn mps_oversubscription_degrades_proportionally() {
+        let f = speed_factors(CollocationMode::Mps, &[d(0.8), d(0.8)], &cfg());
+        assert!(f[0] < 0.65, "oversubscribed MPS must slow: {f:?}");
+        assert!(f[0] > 0.4);
+    }
+
+    #[test]
+    fn mps_asymmetric_hurts_light_task_more() {
+        let f = speed_factors(CollocationMode::Mps, &[d(0.2), d(0.9)], &cfg());
+        // the light task suffers more interference from the heavy co-runner
+        assert!(f[0] < f[1], "{f:?}");
+    }
+
+    #[test]
+    fn streams_heavy_pair_at_most_back_to_back() {
+        // two medium tasks: aggregate throughput must not beat serial
+        // execution ("may become longer than back-to-back", §2.1)
+        let f = speed_factors(CollocationMode::Streams, &[d(0.6), d(0.6)], &cfg());
+        assert!(f[0] <= 0.5 + 1e-9, "streams thrash: {f:?}");
+        assert!((f[0] - f[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streams_worse_than_mps() {
+        for demand in [0.3, 0.6, 0.9] {
+            let s = speed_factors(CollocationMode::Streams, &[d(demand), d(demand)], &cfg());
+            let m = speed_factors(CollocationMode::Mps, &[d(demand), d(demand)], &cfg());
+            assert!(m[0] > s[0] * 1.15, "demand {demand}: mps={m:?} streams={s:?}");
+        }
+    }
+
+    #[test]
+    fn mig_isolated_no_interference() {
+        let t = Demand {
+            smact: 0.3,
+            membw: 0.3,
+            instance_frac: 0.5,
+        };
+        let f = speed_factors(CollocationMode::Mig, &[t, t, t], &cfg());
+        assert!(f.iter().all(|&x| (x - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn mig_reduced_capacity_slows_heavy_task() {
+        let t = Demand {
+            smact: 0.9,
+            membw: 0.5,
+            instance_frac: 0.4,
+        };
+        let f = speed_factors(CollocationMode::Mig, &[t], &cfg());
+        assert!((f[0] - 0.4 / 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_smact_modes() {
+        assert_eq!(effective_smact(CollocationMode::Mps, &[]), 0.0);
+        // MPS overlap model: 1 - (1-0.6)^2 = 0.84
+        let pair = [d(0.6), d(0.6)];
+        assert!((effective_smact(CollocationMode::Mps, &pair) - 0.84).abs() < 1e-9);
+        // streams accumulate additively: 0.6 + 0.6 capped at 1.0
+        assert!((effective_smact(CollocationMode::Streams, &pair) - 1.0).abs() < 1e-9);
+        let light = [d(0.3), d(0.3)];
+        assert!((effective_smact(CollocationMode::Mps, &light) - 0.51).abs() < 1e-9);
+        assert!((effective_smact(CollocationMode::Streams, &light) - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speed_factors_always_in_unit_interval() {
+        use crate::testkit;
+        use crate::util::rng::Rng;
+        let gen = |rng: &mut Rng, size: usize| {
+            let n = 1 + size % 6;
+            (0..n)
+                .map(|_| Demand {
+                    smact: rng.range_f64(0.05, 1.0),
+                    membw: rng.range_f64(0.0, 1.0),
+                    instance_frac: *rng.choice(&[1.0, 0.5, 0.25]),
+                })
+                .collect::<Vec<_>>()
+        };
+        testkit::forall(&gen, |tasks| {
+            for mode in [CollocationMode::Mps, CollocationMode::Streams, CollocationMode::Mig] {
+                for &f in &speed_factors(mode, tasks, &cfg()) {
+                    if !(f > 0.0 && f <= 1.0 + 1e-12) {
+                        return Err(format!("factor {f} out of range under {mode:?}"));
+                    }
+                }
+                let e = effective_smact(mode, tasks);
+                if !(0.0..=1.0 + 1e-12).contains(&e) {
+                    return Err(format!("effective smact {e} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

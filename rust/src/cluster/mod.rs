@@ -1,0 +1,13 @@
+//! Simulated DGX Station A100 substrate (S2–S4, DESIGN.md §1):
+//! GPU devices with a fragmentation-capable segment allocator, the
+//! per-collocation-mode interference model, and the power/energy model.
+
+pub mod allocator;
+pub mod gpu;
+pub mod interference;
+pub mod power;
+
+pub use allocator::{SegId, SegmentAllocator};
+pub use gpu::{Gpu, ResidentTask, Server};
+pub use interference::speed_factors;
+pub use power::gpu_power_w;

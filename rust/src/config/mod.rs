@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser + the typed CARMA config.
+//!
+//! Users configure CARMA the way they would configure SLURM: a server-wide
+//! config file (``carma.toml``) selects the collocation policy, estimator,
+//! preconditions and simulator constants; CLI flags override file values.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::CarmaConfig;
+pub use toml::TomlValue;

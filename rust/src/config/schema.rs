@@ -1,0 +1,384 @@
+//! Typed CARMA configuration (defaults = paper §4.4) + TOML loading.
+
+use super::toml::{self, TomlDoc};
+
+/// Task-to-GPU mapping policy (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// No collocation — the conventional baseline.
+    Exclusive,
+    /// Cyclic assignment across GPUs.
+    RoundRobin,
+    /// Most Available GPU Memory.
+    Magm,
+    /// Least Utilized GPU (lowest SMACT).
+    Lug,
+    /// Most Utilized GPU (consolidation; paper §4.3 notes it performs
+    /// poorly — kept for the ablation benches).
+    Mug,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "exclusive" => PolicyKind::Exclusive,
+            "rr" | "round_robin" | "roundrobin" => PolicyKind::RoundRobin,
+            "magm" => PolicyKind::Magm,
+            "lug" => PolicyKind::Lug,
+            "mug" => PolicyKind::Mug,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Exclusive => "Exclusive",
+            PolicyKind::RoundRobin => "RR",
+            PolicyKind::Magm => "MAGM",
+            PolicyKind::Lug => "LUG",
+            PolicyKind::Mug => "MUG",
+        }
+    }
+}
+
+/// NVIDIA collocation option (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollocationMode {
+    /// Default-stream submission: kernels of co-resident tasks serialize.
+    Streams,
+    /// Multi-Process Service: fine-grained compute sharing.
+    Mps,
+    /// Multi-Instance GPU: static isolated partitions (CARMA dispatches to
+    /// existing instances exclusively, paper §4.4).
+    Mig,
+}
+
+impl CollocationMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "streams" | "stream" | "multistream" => CollocationMode::Streams,
+            "mps" => CollocationMode::Mps,
+            "mig" => CollocationMode::Mig,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollocationMode::Streams => "streams",
+            CollocationMode::Mps => "MPS",
+            CollocationMode::Mig => "MIG",
+        }
+    }
+}
+
+/// GPU memory estimator selection (paper §2.3 / §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EstimatorKind {
+    /// No estimation: rely on preconditions + recovery only (§5.3).
+    None,
+    /// Memory needs known apriori (§5.2).
+    Oracle,
+    /// Horus analytical formula [42].
+    Horus,
+    /// FakeTensor-style symbolic propagation [4].
+    FakeTensor,
+    /// GPUMemNet (this paper) — served through PJRT.
+    GpuMemNet,
+}
+
+impl EstimatorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" => EstimatorKind::None,
+            "oracle" => EstimatorKind::Oracle,
+            "horus" => EstimatorKind::Horus,
+            "faketensor" | "fake_tensor" => EstimatorKind::FakeTensor,
+            "gpumemnet" | "gpumem_net" => EstimatorKind::GpuMemNet,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstimatorKind::None => "none",
+            EstimatorKind::Oracle => "oracle",
+            EstimatorKind::Horus => "Horus",
+            EstimatorKind::FakeTensor => "FakeTensor",
+            EstimatorKind::GpuMemNet => "GPUMemNet",
+        }
+    }
+}
+
+/// Simulated server (DGX Station A100 defaults, paper Table 2).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub n_gpus: usize,
+    pub mem_gb: f64,
+    /// MIG instance compute fractions per GPU (empty = MIG off).
+    pub mig_slices: Vec<f64>,
+}
+
+/// A100 power model (calibrated to Table 7 — DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    pub idle_w: f64,
+    pub base_w: f64,
+    pub peak_w: f64,
+    /// Extra draw in the >boost_threshold high-power mode (paper §4.4).
+    pub boost_w: f64,
+    pub boost_threshold: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig {
+            idle_w: 52.0,
+            base_w: 95.0,
+            peak_w: 335.0,
+            boost_w: 65.0,
+            boost_threshold: 0.90,
+        }
+    }
+}
+
+/// Interference model constants (cluster::interference).
+#[derive(Debug, Clone)]
+pub struct InterferenceConfig {
+    /// MPS cache/bandwidth interference slope below compute saturation.
+    pub mps_alpha: f64,
+    /// Extra serialization penalty for default-stream collocation.
+    pub streams_penalty: f64,
+    /// Memory-bandwidth contention slope (applies to all modes).
+    pub membw_alpha: f64,
+}
+
+impl Default for InterferenceConfig {
+    fn default() -> Self {
+        InterferenceConfig {
+            // MPS shares SMs with QoS; cross-task cache/scheduler
+            // interference is mild (calibrated to Fig. 8/11 slowdowns)
+            mps_alpha: 0.14,
+            streams_penalty: 0.08,
+            membw_alpha: 0.28,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// DCGM-like sampling period (seconds).
+    pub sample_period_s: f64,
+    /// Observation window before each mapping decision (paper §4.1: 1 min).
+    pub window_s: f64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            sample_period_s: 1.0,
+            window_s: 60.0,
+        }
+    }
+}
+
+/// Full CARMA configuration. `Default` = the paper's §4.4 default setup:
+/// MAGM + GPUMemNet + SMACT<=80% + MPS, no memory precondition.
+#[derive(Debug, Clone)]
+pub struct CarmaConfig {
+    pub seed: u64,
+    pub server: ServerConfig,
+    pub policy: PolicyKind,
+    pub colloc: CollocationMode,
+    pub estimator: EstimatorKind,
+    /// SMACT precondition: collocate only on GPUs with windowed SMACT <= cap.
+    pub smact_cap: Option<f64>,
+    /// Memory precondition: collocate only on GPUs with >= this much free.
+    pub min_free_gb: Option<f64>,
+    /// Safety margin added to estimates (fragmentation guard, §5.2 uses 2GB).
+    pub safety_margin_gb: f64,
+    pub monitor: MonitorConfig,
+    pub power: PowerConfig,
+    pub interference: InterferenceConfig,
+    pub artifacts_dir: String,
+}
+
+impl Default for CarmaConfig {
+    fn default() -> Self {
+        CarmaConfig {
+            seed: 42,
+            server: ServerConfig {
+                n_gpus: 4,
+                mem_gb: 40.0,
+                mig_slices: vec![],
+            },
+            policy: PolicyKind::Magm,
+            colloc: CollocationMode::Mps,
+            estimator: EstimatorKind::GpuMemNet,
+            smact_cap: Some(0.80),
+            min_free_gb: None,
+            safety_margin_gb: 0.0,
+            monitor: MonitorConfig::default(),
+            power: PowerConfig::default(),
+            interference: InterferenceConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl CarmaConfig {
+    /// Load from a TOML file, over the defaults.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = toml::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        let mut cfg = CarmaConfig::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed TOML document on top of the current values.
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        let f64_of = |k: &str| doc.get(k).and_then(|v| v.as_f64());
+        if let Some(v) = doc.get("seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.get("server.n_gpus").and_then(|v| v.as_i64()) {
+            self.server.n_gpus = v as usize;
+        }
+        if let Some(v) = f64_of("server.mem_gb") {
+            self.server.mem_gb = v;
+        }
+        if let Some(toml::TomlValue::Arr(a)) = doc.get("server.mig_slices") {
+            self.server.mig_slices = a.iter().filter_map(|v| v.as_f64()).collect();
+        }
+        if let Some(v) = doc.get("policy.kind").and_then(|v| v.as_str()) {
+            self.policy = PolicyKind::parse(v).ok_or_else(|| format!("unknown policy '{v}'"))?;
+        }
+        if let Some(v) = doc.get("policy.collocation").and_then(|v| v.as_str()) {
+            self.colloc =
+                CollocationMode::parse(v).ok_or_else(|| format!("unknown collocation '{v}'"))?;
+        }
+        if let Some(v) = doc.get("policy.estimator").and_then(|v| v.as_str()) {
+            self.estimator =
+                EstimatorKind::parse(v).ok_or_else(|| format!("unknown estimator '{v}'"))?;
+        }
+        if let Some(v) = f64_of("policy.smact_cap") {
+            self.smact_cap = if v >= 1.0 { None } else { Some(v) };
+        }
+        if let Some(v) = f64_of("policy.min_free_gb") {
+            self.min_free_gb = if v <= 0.0 { None } else { Some(v) };
+        }
+        if let Some(v) = f64_of("policy.safety_margin_gb") {
+            self.safety_margin_gb = v;
+        }
+        if let Some(v) = f64_of("monitor.sample_period_s") {
+            self.monitor.sample_period_s = v;
+        }
+        if let Some(v) = f64_of("monitor.window_s") {
+            self.monitor.window_s = v;
+        }
+        if let Some(v) = f64_of("power.idle_w") {
+            self.power.idle_w = v;
+        }
+        if let Some(v) = f64_of("power.base_w") {
+            self.power.base_w = v;
+        }
+        if let Some(v) = f64_of("power.peak_w") {
+            self.power.peak_w = v;
+        }
+        if let Some(v) = f64_of("power.boost_w") {
+            self.power.boost_w = v;
+        }
+        if let Some(v) = f64_of("power.boost_threshold") {
+            self.power.boost_threshold = v;
+        }
+        if let Some(v) = f64_of("interference.mps_alpha") {
+            self.interference.mps_alpha = v;
+        }
+        if let Some(v) = f64_of("interference.streams_penalty") {
+            self.interference.streams_penalty = v;
+        }
+        if let Some(v) = f64_of("interference.membw_alpha") {
+            self.interference.membw_alpha = v;
+        }
+        if let Some(v) = doc.get("artifacts_dir").and_then(|v| v.as_str()) {
+            self.artifacts_dir = v.to_string();
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.server.n_gpus == 0 {
+            return Err("server.n_gpus must be >= 1".into());
+        }
+        if self.server.mem_gb <= 0.0 {
+            return Err("server.mem_gb must be positive".into());
+        }
+        if let Some(c) = self.smact_cap {
+            if !(0.0..=1.0).contains(&c) {
+                return Err("policy.smact_cap must be in [0,1]".into());
+            }
+        }
+        if self.monitor.window_s < self.monitor.sample_period_s {
+            return Err("monitor.window_s must be >= sample period".into());
+        }
+        let frac: f64 = self.server.mig_slices.iter().sum();
+        if !self.server.mig_slices.is_empty() && frac > 1.0 + 1e-9 {
+            return Err("server.mig_slices must sum to <= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_4_4() {
+        let c = CarmaConfig::default();
+        assert_eq!(c.policy, PolicyKind::Magm);
+        assert_eq!(c.estimator, EstimatorKind::GpuMemNet);
+        assert_eq!(c.colloc, CollocationMode::Mps);
+        assert_eq!(c.smact_cap, Some(0.80));
+        assert_eq!(c.min_free_gb, None);
+        assert_eq!(c.server.n_gpus, 4);
+        assert_eq!(c.server.mem_gb, 40.0);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = toml::parse(
+            "[policy]\nkind = \"lug\"\nestimator = \"none\"\nsmact_cap = 0.75\nmin_free_gb = 5.0\n[server]\nn_gpus = 2\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.policy, PolicyKind::Lug);
+        assert_eq!(c.estimator, EstimatorKind::None);
+        assert_eq!(c.smact_cap, Some(0.75));
+        assert_eq!(c.min_free_gb, Some(5.0));
+        assert_eq!(c.server.n_gpus, 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = CarmaConfig::default();
+        c.server.n_gpus = 0;
+        assert!(c.validate().is_err());
+        let mut c = CarmaConfig::default();
+        c.smact_cap = Some(1.5);
+        assert!(c.validate().is_err());
+        let mut c = CarmaConfig::default();
+        c.server.mig_slices = vec![0.6, 0.6];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn parse_enum_names() {
+        assert_eq!(PolicyKind::parse("MAGM"), Some(PolicyKind::Magm));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(CollocationMode::parse("MPS"), Some(CollocationMode::Mps));
+        assert_eq!(EstimatorKind::parse("GPUMemNet"), Some(EstimatorKind::GpuMemNet));
+    }
+}

@@ -1,0 +1,216 @@
+//! TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = value` with strings,
+//! integers, floats, booleans, and homogeneous inline arrays, `#` comments.
+//! This covers everything `carma.toml` needs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flat map of "table.key" -> value.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::new();
+    let mut prefix = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                line: ln + 1,
+                msg: "unterminated table header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-')
+            {
+                return Err(TomlError {
+                    line: ln + 1,
+                    msg: format!("bad table name '{name}'"),
+                });
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: ln + 1,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: ln + 1,
+                msg: "empty key".into(),
+            });
+        }
+        let val = parse_value(line[eq + 1..].trim()).map_err(|msg| TomlError {
+            line: ln + 1,
+            msg,
+        })?;
+        doc.insert(format!("{prefix}{key}"), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' terminates the line unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(x) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(x));
+        }
+    }
+    if let Ok(x) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(x));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let doc = parse(
+            r#"
+# comment
+name = "carma"
+gpus = 4
+cap = 0.8   # inline comment
+debug = true
+
+[policy]
+kind = "magm"
+margins = [2.0, 5.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["name"].as_str().unwrap(), "carma");
+        assert_eq!(doc["gpus"].as_i64().unwrap(), 4);
+        assert_eq!(doc["cap"].as_f64().unwrap(), 0.8);
+        assert_eq!(doc["debug"].as_bool().unwrap(), true);
+        assert_eq!(doc["policy.kind"].as_str().unwrap(), "magm");
+        assert_eq!(
+            doc["policy.margins"],
+            TomlValue::Arr(vec![TomlValue::Float(2.0), TomlValue::Float(5.0)])
+        );
+    }
+
+    #[test]
+    fn nested_tables() {
+        let doc = parse("[a.b]\nx = 1\n[a.c]\nx = 2\n").unwrap();
+        assert_eq!(doc["a.b.x"].as_i64().unwrap(), 1);
+        assert_eq!(doc["a.c.x"].as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn int_is_f64_compatible() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc["x"].as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc["x"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line() {
+        let err = parse("x = 1\ny 2\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(parse("[open\n").is_err());
+        assert!(parse("k = \n").is_err());
+    }
+}

@@ -1,0 +1,699 @@
+//! The CARMA simulation driver: end-to-end task management (paper §4.1,
+//! Fig. 7) over the simulated DGX substrate.
+//!
+//! Event flow per task: arrival → primary queue → selection (recovery queue
+//! first) → 1-minute observation window → policy mapping (preconditions +
+//! estimator) → dispatch → staircase memory ramp (may OOM → recovery) →
+//! processor-sharing execution under the interference model → completion.
+
+use crate::cluster::gpu::{ResidentTask, Server};
+use crate::cluster::power::gpu_power_w;
+use crate::config::schema::{CarmaConfig, CollocationMode, PolicyKind};
+use crate::estimators::MemoryEstimator;
+use crate::metrics::recorder::Recorder;
+use crate::metrics::report::RunReport;
+use crate::sim::{Engine, Event, TaskId};
+use crate::util::units::GIB;
+use crate::workload::memsim;
+use crate::workload::task::TaskSpec;
+use crate::workload::trace::TraceSpec;
+
+use super::monitor::Monitor;
+use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions};
+use super::queue::TaskQueues;
+
+/// Seconds between memory-ramp stages (training warm-up allocations).
+const RAMP_INTERVAL_S: f64 = 8.0;
+/// Recovery loop's error-file polling delay (paper §4.2).
+const RECOVERY_DETECT_S: f64 = 5.0;
+/// Retry cadence when the selected task cannot be mapped yet.
+const RETRY_S: f64 = 15.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RunState {
+    Pending,  // not yet arrived
+    Queued,   // in a queue
+    Selected, // head-of-queue, being observed / awaiting mapping
+    Running,
+    Crashed, // OOM, awaiting recovery detection
+    Done,
+    /// Permanently unschedulable (demand exceeds every target's capacity)
+    /// or crashed more than MAX_OOM_RETRIES times — surfaced to the user
+    /// instead of looping forever.
+    Failed,
+}
+
+/// Bounded recovery (paper §6 lists "more adaptive recovery methods" as
+/// future work; we cap restarts so a pathological task cannot wedge the
+/// queue).
+const MAX_OOM_RETRIES: u32 = 3;
+
+struct TaskRun {
+    spec: TaskSpec,
+    state: RunState,
+    gpus: Vec<usize>,
+    instances: Vec<Option<usize>>,
+    /// Allocated segment ids per occupied GPU (parallel to `gpus`).
+    segs: Vec<Vec<crate::cluster::allocator::SegId>>,
+    /// Remaining ramp segment sizes (bytes, per GPU — same on each).
+    ramp: Vec<f64>,
+    next_ramp: usize,
+    remaining_s: f64,
+    speed: f64,
+    last_progress_t: f64,
+    version: u64,
+    in_recovery: bool,
+    /// Estimate the mapper admitted this task with (per GPU). While the
+    /// memory ramp is still in flight, the coordinator counts the not-yet-
+    /// allocated remainder as *reserved* so back-to-back admissions don't
+    /// overcommit the same free memory (Fig. 7 mapping step).
+    admitted_est_gb: Option<f64>,
+}
+
+/// Outcome of a full trace run.
+pub struct RunOutcome {
+    pub report: RunReport,
+    pub recorder: Recorder,
+}
+
+pub struct Carma {
+    pub cfg: CarmaConfig,
+    engine: Engine,
+    server: Server,
+    tasks: Vec<TaskRun>,
+    queues: TaskQueues,
+    selected: Option<TaskId>,
+    window_done: bool,
+    rr_cursor: usize,
+    estimator: Box<dyn MemoryEstimator>,
+    monitor: Monitor,
+    recorder: Recorder,
+    done_count: usize,
+    retry_scheduled: bool,
+}
+
+impl Carma {
+    pub fn new(cfg: CarmaConfig, estimator: Box<dyn MemoryEstimator>, trace: &TraceSpec) -> Carma {
+        let server = Server::new(&cfg.server);
+        let n = trace.tasks.len();
+        let monitor = Monitor::new(cfg.server.n_gpus, cfg.monitor.window_s);
+        let recorder = Recorder::new(n, cfg.server.n_gpus);
+        let tasks = trace
+            .tasks
+            .iter()
+            .map(|spec| TaskRun {
+                spec: spec.clone(),
+                state: RunState::Pending,
+                gpus: Vec::new(),
+                instances: Vec::new(),
+                segs: Vec::new(),
+                ramp: Vec::new(),
+                next_ramp: 0,
+                remaining_s: spec.work_s,
+                speed: 0.0,
+                last_progress_t: 0.0,
+                version: 0,
+                in_recovery: false,
+                admitted_est_gb: None,
+            })
+            .collect();
+        Carma {
+            cfg,
+            engine: Engine::new(),
+            server,
+            tasks,
+            queues: TaskQueues::new(),
+            selected: None,
+            window_done: false,
+            rr_cursor: 0,
+            estimator,
+            monitor,
+            recorder,
+            done_count: 0,
+            retry_scheduled: false,
+        }
+    }
+
+    /// Run the whole trace to completion; returns the paper's metric set.
+    pub fn run(mut self, label: &str) -> RunOutcome {
+        for t in &self.tasks {
+            self.engine
+                .schedule(t.spec.arrival_s, Event::TaskArrival(t.spec.id));
+        }
+        self.engine
+            .schedule_in(self.cfg.monitor.sample_period_s, Event::MonitorSample);
+
+        let mut guard: u64 = 0;
+        while let Some((_, ev)) = self.engine.pop() {
+            guard += 1;
+            assert!(
+                guard < 200_000_000,
+                "simulation did not converge (event storm)"
+            );
+            match ev {
+                Event::TaskArrival(id) => self.on_arrival(id),
+                Event::WindowDone(id) => self.on_window_done(id),
+                Event::RetryMapping => self.on_retry(),
+                Event::Ramp(id, stage) => self.on_ramp(id, stage),
+                Event::Completion(id, v) => self.on_completion(id, v),
+                Event::MonitorSample => self.on_monitor_sample(),
+                Event::RecoveryDetect(id) => self.on_recovery_detect(id),
+            }
+            if self.done_count == self.tasks.len() {
+                break;
+            }
+        }
+        assert_eq!(
+            self.done_count,
+            self.tasks.len(),
+            "trace ended with unfinished tasks (queue deadlock?)"
+        );
+        RunOutcome {
+            report: RunReport::from_recorder(label, &self.recorder),
+            recorder: self.recorder,
+        }
+    }
+
+    // -- event handlers -----------------------------------------------------
+
+    fn on_arrival(&mut self, id: TaskId) {
+        let t = self.engine.now();
+        self.recorder.on_arrival(id, t);
+        self.tasks[id].state = RunState::Queued;
+        self.queues.submit(id);
+        self.try_select();
+    }
+
+    fn try_select(&mut self) {
+        if self.selected.is_some() {
+            return;
+        }
+        if let Some((id, _rec)) = self.queues.pop_next() {
+            self.selected = Some(id);
+            self.window_done = false;
+            self.tasks[id].state = RunState::Selected;
+            // observe the GPUs for one window before deciding (paper §4.1)
+            self.engine
+                .schedule_in(self.cfg.monitor.window_s, Event::WindowDone(id));
+        }
+    }
+
+    fn on_window_done(&mut self, id: TaskId) {
+        if self.selected != Some(id) {
+            return; // stale (task got re-queued by recovery etc.)
+        }
+        self.window_done = true;
+        self.attempt_map();
+    }
+
+    fn on_retry(&mut self) {
+        self.retry_scheduled = false;
+        if self.selected.is_some() && self.window_done {
+            self.attempt_map();
+        }
+    }
+
+    fn schedule_retry(&mut self) {
+        if !self.retry_scheduled {
+            self.retry_scheduled = true;
+            self.engine.schedule_in(RETRY_S, Event::RetryMapping);
+        }
+    }
+
+    /// Try to map the selected task; on success dispatch + select next.
+    fn attempt_map(&mut self) {
+        let Some(id) = self.selected else { return };
+        let views = self.gpu_views();
+        let spec = &self.tasks[id].spec;
+
+        // estimator + safety margin; estimates at/above capacity degrade to
+        // exclusive placement (the estimator "takes the collocation
+        // potential away", §5.4)
+        let mut demand = self
+            .estimator
+            .estimate_gb(spec)
+            .map(|e| e + self.cfg.safety_margin_gb);
+        let mut force_exclusive = self.tasks[id].in_recovery;
+        if let Some(d) = demand {
+            if d >= self.cfg.server.mem_gb {
+                demand = Some(self.cfg.server.mem_gb);
+                force_exclusive = true;
+            }
+        }
+
+        let req = MappingRequest {
+            n_gpus: spec.n_gpus,
+            demand_gb: demand,
+            exclusive: force_exclusive,
+        };
+        let pre = Preconditions {
+            smact_cap: self.cfg.smact_cap,
+            min_free_gb: self.cfg.min_free_gb,
+        };
+        // permanently unschedulable? (e.g. demand larger than every MIG
+        // instance) — fail fast instead of retrying forever. Capacity is
+        // STATIC (largest configured instance / whole GPU), independent of
+        // current occupancy.
+        let max_capacity = if self.cfg.server.mig_slices.is_empty() {
+            self.cfg.server.mem_gb
+        } else {
+            self.cfg.server.mem_gb
+                * self
+                    .cfg
+                    .server
+                    .mig_slices
+                    .iter()
+                    .copied()
+                    .fold(0.0f64, f64::max)
+        };
+        if let Some(d) = demand {
+            if d > max_capacity + 1e-9 {
+                self.fail_task(id, "demand exceeds every schedulable target");
+                return;
+            }
+        }
+
+        match policy::select_gpus(self.cfg.policy, &views, req, pre, &mut self.rr_cursor) {
+            Some(p) => {
+                self.tasks[id].admitted_est_gb = demand;
+                self.dispatch(id, p);
+                self.selected = None;
+                self.window_done = false;
+                self.try_select();
+            }
+            None => self.schedule_retry(),
+        }
+    }
+
+    fn fail_task(&mut self, id: TaskId, why: &str) {
+        eprintln!("carma: task {} failed permanently: {why}", self.tasks[id].spec.label());
+        self.tasks[id].state = RunState::Failed;
+        self.recorder.on_failed(id);
+        self.done_count += 1;
+        if self.selected == Some(id) {
+            self.selected = None;
+            self.window_done = false;
+            self.try_select();
+        }
+    }
+
+    /// Reserved-but-not-yet-allocated memory on a GPU: for each resident
+    /// task admitted with an estimate, the part of the estimate its ramp
+    /// has not claimed yet.
+    fn pending_reserved_gb(&self, gpu: usize) -> f64 {
+        self.server.gpus[gpu]
+            .resident
+            .iter()
+            .map(|r| {
+                let t = &self.tasks[r.task];
+                match t.admitted_est_gb {
+                    Some(est) => {
+                        let allocated: f64 =
+                            t.ramp.iter().take(t.next_ramp).sum::<f64>() / GIB;
+                        (est - allocated).max(0.0)
+                    }
+                    None => 0.0,
+                }
+            })
+            .sum()
+    }
+
+    fn gpu_views(&self) -> Vec<GpuView> {
+        self.server
+            .gpus
+            .iter()
+            .map(|g| {
+                let inst = g.free_mig_instance();
+                GpuView {
+                    id: g.id,
+                    free_gb: (g.free_gb() - self.pending_reserved_gb(g.id)).max(0.0),
+                    smact_window: self.monitor.windowed_smact(g.id),
+                    n_tasks: g.n_tasks(),
+                    mig_free_instance: inst,
+                    mig_instance_mem_gb: inst
+                        .map(|i| self.cfg.server.mem_gb * g.mig_slices[i])
+                        .unwrap_or(0.0),
+                    mig_enabled: g.mig_enabled(),
+                }
+            })
+            .collect()
+    }
+
+    fn dispatch(&mut self, id: TaskId, p: Placement) {
+        let now = self.engine.now();
+        self.recorder.on_dispatch(id, now);
+
+        // staircase memory ramp: memsim's segment shape scaled so the total
+        // equals the task's true peak memory (paper Table 3 ground truth)
+        let (ramp, smact, membw, spec_id);
+        {
+            let spec = &self.tasks[id].spec;
+            let shape = memsim::ramp_segments_bytes(&spec.features);
+            let total: f64 = shape.iter().sum();
+            let scale = (spec.mem_gb * GIB) / total.max(1.0);
+            ramp = shape.into_iter().map(|b| b * scale).collect::<Vec<f64>>();
+            smact = spec.smact;
+            membw = spec.membw;
+            spec_id = spec.id;
+        }
+        debug_assert_eq!(spec_id, id);
+
+        let task = &mut self.tasks[id];
+        task.state = RunState::Running;
+        task.gpus = p.gpus.clone();
+        task.instances = p.instances.clone();
+        task.segs = vec![Vec::new(); p.gpus.len()];
+        task.ramp = ramp;
+        task.next_ramp = 0;
+        task.last_progress_t = now;
+
+        for (k, &g) in p.gpus.iter().enumerate() {
+            self.server.gpus[g].add_resident(ResidentTask {
+                task: id,
+                smact,
+                membw,
+                instance: p.instances[k].unwrap_or(0),
+                dispatched_at: now,
+            });
+        }
+        // first allocation (CUDA context) happens immediately
+        self.on_ramp(id, 0);
+        if self.tasks[id].state == RunState::Running {
+            let gpus = self.tasks[id].gpus.clone();
+            self.recompute_speeds(&gpus);
+        }
+    }
+
+    /// Allocate the next ramp segment on every occupied GPU. Any failure =
+    /// OOM for THIS task (the subsequently-arriving one), paper §1.
+    fn on_ramp(&mut self, id: TaskId, stage: u8) {
+        if self.tasks[id].state != RunState::Running || self.tasks[id].next_ramp != stage as usize {
+            return; // stale ramp event (task crashed / completed / restarted)
+        }
+        let seg_bytes = match self.tasks[id].ramp.get(stage as usize) {
+            Some(&b) => b,
+            None => return,
+        };
+        let seg_mib = (seg_bytes / (1024.0 * 1024.0)).ceil().max(1.0) as u64;
+        let gpus = self.tasks[id].gpus.clone();
+        for (k, &g) in gpus.iter().enumerate() {
+            // page-backed scatter allocation: a slab may span a few holes,
+            // but shredded-beyond-repair free memory still OOMs (§4.2)
+            match self.server.gpus[g].alloc.alloc_scatter(seg_mib, 4) {
+                Some(segs) => self.tasks[id].segs[k].extend(segs),
+                None => {
+                    self.oom(id);
+                    return;
+                }
+            }
+        }
+        self.tasks[id].next_ramp += 1;
+        if self.tasks[id].next_ramp < self.tasks[id].ramp.len() {
+            self.engine
+                .schedule_in(RAMP_INTERVAL_S, Event::Ramp(id, stage + 1));
+        }
+    }
+
+    fn oom(&mut self, id: TaskId) {
+        self.recorder.on_oom(id);
+        self.release(id);
+        let task = &mut self.tasks[id];
+        task.state = RunState::Crashed;
+        task.version += 1; // invalidate any scheduled completion
+        task.remaining_s = task.spec.work_s; // restart from scratch
+        task.in_recovery = true;
+        if self.recorder.tasks[id].oom_crashes > MAX_OOM_RETRIES {
+            self.fail_task(id, "exceeded OOM retry budget");
+            return;
+        }
+        self.engine
+            .schedule_in(RECOVERY_DETECT_S, Event::RecoveryDetect(id));
+        // freed memory may unblock the selected task
+        if self.selected.is_some() && self.window_done {
+            self.attempt_map();
+        }
+    }
+
+    fn on_recovery_detect(&mut self, id: TaskId) {
+        if self.tasks[id].state != RunState::Crashed {
+            return;
+        }
+        self.tasks[id].state = RunState::Queued;
+        self.queues.submit_recovery(id);
+        self.try_select();
+    }
+
+    /// Free all segments + residency of a task and update speeds.
+    fn release(&mut self, id: TaskId) {
+        let gpus = self.tasks[id].gpus.clone();
+        let segs = std::mem::take(&mut self.tasks[id].segs);
+        for (k, &g) in gpus.iter().enumerate() {
+            for seg in &segs[k] {
+                self.server.gpus[g].alloc.free(*seg);
+            }
+            self.server.gpus[g].remove_resident(id);
+        }
+        self.tasks[id].gpus.clear();
+        self.tasks[id].instances.clear();
+        self.recompute_speeds(&gpus);
+    }
+
+    fn on_completion(&mut self, id: TaskId, version: u64) {
+        if self.tasks[id].state != RunState::Running || self.tasks[id].version != version {
+            return; // stale
+        }
+        self.progress_update(id);
+        debug_assert!(
+            self.tasks[id].remaining_s < 1e-6,
+            "completion fired with {}s of work left",
+            self.tasks[id].remaining_s
+        );
+        self.release(id);
+        self.tasks[id].state = RunState::Done;
+        self.done_count += 1;
+        self.recorder.on_completion(id, self.engine.now());
+        if self.selected.is_some() && self.window_done {
+            self.attempt_map();
+        }
+    }
+
+    fn progress_update(&mut self, id: TaskId) {
+        let now = self.engine.now();
+        let t = &mut self.tasks[id];
+        t.remaining_s = (t.remaining_s - (now - t.last_progress_t) * t.speed).max(0.0);
+        t.last_progress_t = now;
+    }
+
+    /// Re-derive speed factors for every task touching `gpus` (including
+    /// multi-GPU tasks' partner devices) and reschedule their completions.
+    fn recompute_speeds(&mut self, gpus: &[usize]) {
+        use std::collections::BTreeSet;
+        let mut affected: BTreeSet<TaskId> = BTreeSet::new();
+        for &g in gpus {
+            for r in &self.server.gpus[g].resident {
+                affected.insert(r.task);
+            }
+        }
+        // include partner GPUs of multi-GPU tasks
+        let mut all_gpus: BTreeSet<usize> = gpus.iter().copied().collect();
+        for &id in &affected {
+            for &g in &self.tasks[id].gpus {
+                all_gpus.insert(g);
+            }
+        }
+        let mut more: BTreeSet<TaskId> = BTreeSet::new();
+        for &g in &all_gpus {
+            for r in &self.server.gpus[g].resident {
+                more.insert(r.task);
+            }
+        }
+
+        // per-GPU speed tables
+        let mut table: std::collections::BTreeMap<(usize, TaskId), f64> =
+            std::collections::BTreeMap::new();
+        for &g in &all_gpus {
+            for (tid, f) in self.server.gpus[g].speeds(self.cfg.colloc, &self.cfg.interference) {
+                table.insert((g, tid), f);
+            }
+        }
+
+        let now = self.engine.now();
+        for id in more {
+            if self.tasks[id].state != RunState::Running {
+                continue;
+            }
+            self.progress_update(id);
+            let speed = self.tasks[id]
+                .gpus
+                .iter()
+                .map(|&g| *table.get(&(g, id)).unwrap_or(&1.0))
+                .fold(f64::INFINITY, f64::min);
+            let speed = if speed.is_finite() { speed } else { 0.0 };
+            let t = &mut self.tasks[id];
+            t.speed = speed;
+            t.version += 1;
+            if speed > 1e-9 {
+                let eta = now + t.remaining_s / speed;
+                let v = t.version;
+                self.engine.schedule(eta, Event::Completion(id, v));
+            }
+        }
+    }
+
+    fn on_monitor_sample(&mut self) {
+        let now = self.engine.now();
+        let dt = self.cfg.monitor.sample_period_s;
+        for g in 0..self.server.gpus.len() {
+            let gpu = &self.server.gpus[g];
+            let smact = gpu.effective_smact(self.cfg.colloc, now);
+            let mem = gpu.used_gb();
+            let power = gpu_power_w(&self.cfg.power, gpu.n_tasks(), smact);
+            self.monitor.push(g, now, smact);
+            self.recorder.on_sample(g, now, dt, mem, smact, power);
+        }
+        if self.done_count < self.tasks.len() {
+            self.engine.schedule_in(dt, Event::MonitorSample);
+        }
+    }
+
+    // -- test/inspection hooks ------------------------------------------------
+
+    pub fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+}
+
+/// Convenience: run one configuration over a trace.
+pub fn run_trace(
+    cfg: CarmaConfig,
+    estimator: Box<dyn MemoryEstimator>,
+    trace: &TraceSpec,
+    label: &str,
+) -> RunOutcome {
+    Carma::new(cfg, estimator, trace).run(label)
+}
+
+/// Label helper used by the experiments: "MAGM+MPS+GPUMemNet(80%,5GB)".
+pub fn run_label(cfg: &CarmaConfig, estimator_name: &str) -> String {
+    let mut s = format!("{}+{}", cfg.policy.name(), cfg.colloc.name());
+    if estimator_name != "none" {
+        s.push('+');
+        s.push_str(estimator_name);
+    }
+    let mut pre = Vec::new();
+    if let Some(c) = cfg.smact_cap {
+        pre.push(format!("{:.0}%", c * 100.0));
+    }
+    if let Some(m) = cfg.min_free_gb {
+        pre.push(format!("{m:.0}GB"));
+    }
+    if cfg.safety_margin_gb > 0.0 {
+        pre.push(format!("+{:.0}GBmargin", cfg.safety_margin_gb));
+    }
+    if !pre.is_empty() {
+        s.push_str(&format!("({})", pre.join(",")));
+    }
+    if cfg.policy == PolicyKind::Exclusive {
+        return format!("Exclusive ({})", CollocationMode::Mps.name());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::EstimatorKind;
+    use crate::estimators;
+    use crate::workload::model_zoo::ModelZoo;
+    use crate::workload::trace::{trace_60, trace_90};
+
+    fn cfg(policy: PolicyKind, est: EstimatorKind) -> (CarmaConfig, Box<dyn MemoryEstimator>) {
+        let mut c = CarmaConfig::default();
+        c.policy = policy;
+        c.estimator = est;
+        let e = estimators::build(est, "artifacts").unwrap();
+        (c, e)
+    }
+
+    #[test]
+    fn exclusive_completes_trace_without_oom() {
+        let zoo = ModelZoo::load();
+        let trace = trace_90(&zoo, 1);
+        let (mut c, e) = cfg(PolicyKind::Exclusive, EstimatorKind::None);
+        c.smact_cap = None;
+        let out = run_trace(c, e, &trace, "excl");
+        assert_eq!(out.report.completed, 90);
+        assert_eq!(out.report.oom_crashes, 0, "exclusive can never OOM");
+        assert!(out.report.trace_total_min > 60.0);
+    }
+
+    #[test]
+    fn oracle_magm_beats_exclusive() {
+        let zoo = ModelZoo::load();
+        let trace = trace_90(&zoo, 1);
+
+        let (mut ce, ee) = cfg(PolicyKind::Exclusive, EstimatorKind::None);
+        ce.smact_cap = None;
+        let excl = run_trace(ce, ee, &trace, "excl");
+
+        let (mut cm, em) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        cm.safety_margin_gb = 2.0;
+        let magm = run_trace(cm, em, &trace, "magm");
+
+        assert_eq!(magm.report.completed, 90);
+        assert_eq!(magm.report.oom_crashes, 0, "oracle + margin must avoid OOM");
+        assert!(
+            magm.report.trace_total_min < excl.report.trace_total_min * 0.9,
+            "MAGM {:.1}m should beat Exclusive {:.1}m by >10%",
+            magm.report.trace_total_min,
+            excl.report.trace_total_min
+        );
+        assert!(magm.report.mean_smact > excl.report.mean_smact);
+    }
+
+    #[test]
+    fn blind_collocation_ooms_then_recovers() {
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 1);
+        let (mut c, e) = cfg(PolicyKind::RoundRobin, EstimatorKind::None);
+        c.smact_cap = None; // no preconditions at all
+        let out = run_trace(c, e, &trace, "rr-blind");
+        assert_eq!(out.report.completed, 60, "recovery must finish every task");
+        assert!(
+            out.report.oom_crashes > 0,
+            "blind RR on the heavy trace should hit OOMs"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 3);
+        let (c1, e1) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        let (c2, e2) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        let a = run_trace(c1, e1, &trace, "a");
+        let b = run_trace(c2, e2, &trace, "b");
+        assert_eq!(a.report.trace_total_min, b.report.trace_total_min);
+        assert_eq!(a.report.energy_mj, b.report.energy_mj);
+        assert_eq!(a.report.oom_crashes, b.report.oom_crashes);
+    }
+
+    #[test]
+    fn waiting_time_includes_window() {
+        let zoo = ModelZoo::load();
+        let trace = trace_90(&zoo, 5);
+        let (c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        let out = run_trace(c, e, &trace, "w");
+        // every task waits at least the 60s observation window
+        assert!(out.report.avg_waiting_min >= 1.0);
+    }
+
+    #[test]
+    fn labels() {
+        let mut c = CarmaConfig::default();
+        c.min_free_gb = Some(5.0);
+        assert_eq!(run_label(&c, "GPUMemNet"), "MAGM+MPS+GPUMemNet(80%,5GB)");
+        c.policy = PolicyKind::Exclusive;
+        assert!(run_label(&c, "none").starts_with("Exclusive"));
+    }
+}

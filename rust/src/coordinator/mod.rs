@@ -1,0 +1,16 @@
+//! CARMA coordinator (S8) — the paper's contribution (§4).
+//!
+//! End-to-end task management (Fig. 7): submission queue → parser/features →
+//! memory estimator → monitoring window → collocation-policy mapping →
+//! dispatch, plus the OOM recovery path (§4.2) with its higher-priority
+//! queue and exclusive re-execution.
+
+pub mod carma;
+pub mod monitor;
+pub mod policy;
+pub mod queue;
+
+pub use carma::{Carma, RunOutcome};
+pub use monitor::Monitor;
+pub use policy::{GpuView, MappingRequest};
+pub use queue::TaskQueues;

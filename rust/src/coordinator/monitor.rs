@@ -1,0 +1,79 @@
+//! Monitoring unit (paper §4.1, S5): DCGM-like per-GPU SMACT sampling with
+//! a sliding decision window.
+//!
+//! "One data point is not enough for making a decision about the load of a
+//! GPU, so we observe SMACT over 1 minute and use the average value."
+
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct Monitor {
+    window_s: f64,
+    /// Per-GPU (timestamp, smact) samples within the window.
+    samples: Vec<VecDeque<(f64, f64)>>,
+}
+
+impl Monitor {
+    pub fn new(n_gpus: usize, window_s: f64) -> Self {
+        Monitor {
+            window_s,
+            samples: vec![VecDeque::new(); n_gpus],
+        }
+    }
+
+    pub fn push(&mut self, gpu: usize, t: f64, smact: f64) {
+        let q = &mut self.samples[gpu];
+        q.push_back((t, smact));
+        let cutoff = t - self.window_s;
+        while q.front().is_some_and(|&(ts, _)| ts < cutoff) {
+            q.pop_front();
+        }
+    }
+
+    /// Windowed average SMACT — the value mapping decisions use.
+    pub fn windowed_smact(&self, gpu: usize) -> f64 {
+        let q = &self.samples[gpu];
+        if q.is_empty() {
+            return 0.0;
+        }
+        q.iter().map(|&(_, s)| s).sum::<f64>() / q.len() as f64
+    }
+
+    pub fn sample_count(&self, gpu: usize) -> usize {
+        self.samples[gpu].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_average() {
+        let mut m = Monitor::new(1, 60.0);
+        for i in 0..30 {
+            m.push(0, i as f64, 0.2);
+        }
+        for i in 30..60 {
+            m.push(0, i as f64, 0.8);
+        }
+        assert!((m.windowed_smact(0) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn window_evicts_old_samples() {
+        let mut m = Monitor::new(1, 60.0);
+        for i in 0..200 {
+            m.push(0, i as f64, if i < 140 { 1.0 } else { 0.0 });
+        }
+        // at t=199 the window is [139, 199]: one sample of 1.0, 60 of 0.0
+        assert!(m.windowed_smact(0) < 0.05);
+        assert!(m.sample_count(0) <= 62);
+    }
+
+    #[test]
+    fn empty_is_idle() {
+        let m = Monitor::new(2, 60.0);
+        assert_eq!(m.windowed_smact(1), 0.0);
+    }
+}

@@ -1,0 +1,429 @@
+//! Task→GPU mapping policies + preconditions (paper §4.3).
+//!
+//! Pure selection logic over monitor snapshots, so every policy is unit- and
+//! property-testable without the simulator.
+
+use crate::config::schema::PolicyKind;
+
+/// What the mapper knows about one GPU at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuView {
+    pub id: usize,
+    /// Free memory as the monitor reports it (total, NOT largest hole —
+    /// fragmentation is invisible to the monitor, paper §4.2).
+    pub free_gb: f64,
+    /// Windowed average SMACT (paper §4.1).
+    pub smact_window: f64,
+    pub n_tasks: usize,
+    /// MIG: a free instance index if one exists (None when MIG off or full).
+    pub mig_free_instance: Option<usize>,
+    /// MIG: memory capacity of that free instance.
+    pub mig_instance_mem_gb: f64,
+    pub mig_enabled: bool,
+}
+
+/// One mapping request.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingRequest {
+    pub n_gpus: usize,
+    /// Estimated memory demand per GPU (estimator output + safety margin);
+    /// None = no estimate (blind collocation, §5.3).
+    pub demand_gb: Option<f64>,
+    /// Force exclusive placement (Exclusive policy or recovery re-run §4.2).
+    pub exclusive: bool,
+}
+
+/// Preconditions (paper §4.3): GPUs must have ≤ u SMACT and ≥ m GB free to
+/// be collocation candidates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Preconditions {
+    pub smact_cap: Option<f64>,
+    pub min_free_gb: Option<f64>,
+}
+
+/// A mapping decision: chosen GPU ids (+ MIG instance per GPU if enabled).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub gpus: Vec<usize>,
+    pub instances: Vec<Option<usize>>,
+}
+
+/// Select GPUs for a request. `rr_cursor` carries Round-Robin state across
+/// calls. Returns None when no eligible set exists right now (the task
+/// waits and the mapper retries).
+pub fn select_gpus(
+    policy: PolicyKind,
+    views: &[GpuView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+) -> Option<Placement> {
+    if req.exclusive || policy == PolicyKind::Exclusive {
+        return exclusive(views, req);
+    }
+
+    let mut eligible: Vec<&GpuView> = views.iter().filter(|v| passes(v, req, pre)).collect();
+    if eligible.len() < req.n_gpus {
+        return None;
+    }
+
+    match policy {
+        PolicyKind::RoundRobin => {
+            // cyclic order starting after the last assignment
+            let n = views.len();
+            let mut chosen = Vec::new();
+            for off in 0..n {
+                let id = (*rr_cursor + off) % n;
+                if eligible.iter().any(|v| v.id == id) {
+                    chosen.push(id);
+                    if chosen.len() == req.n_gpus {
+                        *rr_cursor = (id + 1) % n;
+                        break;
+                    }
+                }
+            }
+            if chosen.len() < req.n_gpus {
+                return None;
+            }
+            Some(placement(views, chosen))
+        }
+        PolicyKind::Magm => {
+            // most available GPU memory first (paper: minimizes OOM odds)
+            eligible.sort_by(|a, b| b.free_gb.total_cmp(&a.free_gb).then(a.id.cmp(&b.id)));
+            Some(placement(
+                views,
+                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+            ))
+        }
+        PolicyKind::Lug => {
+            // least utilized first (minimizes interference)
+            eligible.sort_by(|a, b| {
+                a.smact_window
+                    .total_cmp(&b.smact_window)
+                    .then(a.id.cmp(&b.id))
+            });
+            Some(placement(
+                views,
+                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+            ))
+        }
+        PolicyKind::Mug => {
+            // most utilized first (consolidation; keeps idle GPUs idle)
+            eligible.sort_by(|a, b| {
+                b.smact_window
+                    .total_cmp(&a.smact_window)
+                    .then(a.id.cmp(&b.id))
+            });
+            Some(placement(
+                views,
+                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+            ))
+        }
+        PolicyKind::Exclusive => unreachable!(),
+    }
+}
+
+fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
+    if v.mig_enabled {
+        // MIG: needs a free instance whose memory fits the (known) demand;
+        // instances are dispatched exclusively (paper §4.4)
+        let Some(_) = v.mig_free_instance else {
+            return false;
+        };
+        if let Some(d) = req.demand_gb {
+            if d > v.mig_instance_mem_gb {
+                return false;
+            }
+        }
+        return true;
+    }
+    if let Some(cap) = pre.smact_cap {
+        if v.smact_window > cap {
+            return false;
+        }
+    }
+    if let Some(min_free) = pre.min_free_gb {
+        if v.free_gb < min_free {
+            return false;
+        }
+    }
+    if let Some(d) = req.demand_gb {
+        if v.free_gb < d {
+            return false;
+        }
+    }
+    true
+}
+
+fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
+    // idle GPUs only (or free MIG instances when MIG is on)
+    let idle: Vec<usize> = views
+        .iter()
+        .filter(|v| {
+            if v.mig_enabled {
+                v.mig_free_instance.is_some()
+                    && req.demand_gb.is_none_or(|d| d <= v.mig_instance_mem_gb)
+            } else {
+                v.n_tasks == 0
+            }
+        })
+        .map(|v| v.id)
+        .take(req.n_gpus)
+        .collect();
+    if idle.len() < req.n_gpus {
+        return None;
+    }
+    Some(placement(views, idle))
+}
+
+fn placement(views: &[GpuView], gpus: Vec<usize>) -> Placement {
+    let instances = gpus
+        .iter()
+        .map(|&g| {
+            let v = views.iter().find(|v| v.id == g).unwrap();
+            if v.mig_enabled {
+                v.mig_free_instance
+            } else {
+                None
+            }
+        })
+        .collect();
+    Placement { gpus, instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, free: f64, smact: f64, n: usize) -> GpuView {
+        GpuView {
+            id,
+            free_gb: free,
+            smact_window: smact,
+            n_tasks: n,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn req(n: usize, demand: Option<f64>) -> MappingRequest {
+        MappingRequest {
+            n_gpus: n,
+            demand_gb: demand,
+            exclusive: false,
+        }
+    }
+
+    #[test]
+    fn exclusive_needs_idle() {
+        let views = [view(0, 40.0, 0.0, 0), view(1, 20.0, 0.5, 1)];
+        let mut rr = 0;
+        let p = select_gpus(
+            PolicyKind::Exclusive,
+            &views,
+            req(1, Some(10.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![0]);
+        // two idle GPUs required but only one idle
+        assert!(select_gpus(
+            PolicyKind::Exclusive,
+            &views,
+            req(2, None),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn magm_picks_most_free_memory() {
+        let views = [view(0, 8.0, 0.3, 1), view(1, 30.0, 0.5, 1), view(2, 16.0, 0.1, 1)];
+        let mut rr = 0;
+        let p = select_gpus(
+            PolicyKind::Magm,
+            &views,
+            req(1, Some(5.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![1]);
+    }
+
+    #[test]
+    fn lug_picks_least_utilized() {
+        let views = [view(0, 8.0, 0.3, 1), view(1, 30.0, 0.5, 1), view(2, 16.0, 0.1, 1)];
+        let mut rr = 0;
+        let p = select_gpus(
+            PolicyKind::Lug,
+            &views,
+            req(1, None),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![2]);
+    }
+
+    #[test]
+    fn mug_picks_most_utilized() {
+        let views = [view(0, 8.0, 0.3, 1), view(1, 30.0, 0.5, 1), view(2, 16.0, 0.1, 1)];
+        let mut rr = 0;
+        let p = select_gpus(
+            PolicyKind::Mug,
+            &views,
+            req(1, None),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![1]);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let views = [view(0, 40.0, 0.0, 0), view(1, 40.0, 0.0, 0), view(2, 40.0, 0.0, 0)];
+        let mut rr = 0;
+        let mut order = Vec::new();
+        for _ in 0..5 {
+            let p = select_gpus(
+                PolicyKind::RoundRobin,
+                &views,
+                req(1, None),
+                Preconditions::default(),
+                &mut rr,
+            )
+            .unwrap();
+            order.push(p.gpus[0]);
+        }
+        assert_eq!(order, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn preconditions_filter() {
+        let views = [view(0, 3.0, 0.9, 2), view(1, 10.0, 0.5, 1)];
+        let mut rr = 0;
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: Some(5.0),
+        };
+        let p = select_gpus(PolicyKind::Magm, &views, req(1, None), pre, &mut rr).unwrap();
+        assert_eq!(p.gpus, vec![1]);
+        // nothing eligible -> None
+        let pre_tight = Preconditions {
+            smact_cap: Some(0.4),
+            min_free_gb: Some(20.0),
+        };
+        assert!(select_gpus(PolicyKind::Magm, &views, req(1, None), pre_tight, &mut rr).is_none());
+    }
+
+    #[test]
+    fn demand_check_uses_monitor_free_memory() {
+        let views = [view(0, 6.0, 0.2, 1)];
+        let mut rr = 0;
+        assert!(select_gpus(
+            PolicyKind::Magm,
+            &views,
+            req(1, Some(8.0)),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+        assert!(select_gpus(
+            PolicyKind::Magm,
+            &views,
+            req(1, Some(5.0)),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_some());
+    }
+
+    #[test]
+    fn mig_requires_free_instance_and_fit() {
+        let mig_view = GpuView {
+            id: 0,
+            free_gb: 40.0,
+            smact_window: 0.2,
+            n_tasks: 1,
+            mig_free_instance: Some(1),
+            mig_instance_mem_gb: 10.0,
+            mig_enabled: true,
+        };
+        let mut rr = 0;
+        let p = select_gpus(
+            PolicyKind::Magm,
+            &[mig_view],
+            req(1, Some(8.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.instances, vec![Some(1)]);
+        assert!(select_gpus(
+            PolicyKind::Magm,
+            &[mig_view],
+            req(1, Some(12.0)),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn prop_selection_respects_preconditions() {
+        use crate::testkit;
+        use crate::util::rng::Rng;
+        let gen = |rng: &mut Rng, size: usize| {
+            let n = 2 + size % 6;
+            let views: Vec<GpuView> = (0..n)
+                .map(|i| view(i, rng.range_f64(0.0, 40.0), rng.f64(), rng.range_usize(0, 4)))
+                .collect();
+            let demand = if rng.bool(0.5) {
+                Some(rng.range_f64(1.0, 30.0))
+            } else {
+                None
+            };
+            (views, demand, rng.f64(), rng.range_f64(0.0, 20.0))
+        };
+        testkit::forall(&gen, |(views, demand, cap, min_free)| {
+            let pre = Preconditions {
+                smact_cap: Some(*cap),
+                min_free_gb: Some(*min_free),
+            };
+            let mut rr = 0;
+            for policy in [PolicyKind::RoundRobin, PolicyKind::Magm, PolicyKind::Lug, PolicyKind::Mug]
+            {
+                if let Some(p) = select_gpus(
+                    policy,
+                    views,
+                    MappingRequest {
+                        n_gpus: 1,
+                        demand_gb: *demand,
+                        exclusive: false,
+                    },
+                    pre,
+                    &mut rr,
+                ) {
+                    let v = views.iter().find(|v| v.id == p.gpus[0]).unwrap();
+                    if v.smact_window > *cap {
+                        return Err(format!("{policy:?} violated smact cap"));
+                    }
+                    if v.free_gb < *min_free {
+                        return Err(format!("{policy:?} violated min free"));
+                    }
+                    if let Some(d) = demand {
+                        if v.free_gb < *d {
+                            return Err(format!("{policy:?} violated demand check"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Task queues (paper §4.1 / §4.2): FIFO primary queue + higher-priority
+//! recovery queue for OOM-crashed tasks.
+
+use std::collections::VecDeque;
+
+use crate::sim::TaskId;
+
+#[derive(Debug, Default)]
+pub struct TaskQueues {
+    main: VecDeque<TaskId>,
+    recovery: VecDeque<TaskId>,
+}
+
+impl TaskQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, task: TaskId) {
+        self.main.push_back(task);
+    }
+
+    /// OOM-crashed tasks are re-queued with priority (paper §4.2) so they
+    /// are rescheduled promptly.
+    pub fn submit_recovery(&mut self, task: TaskId) {
+        self.recovery.push_back(task);
+    }
+
+    /// FIFO within each queue; recovery drains first.
+    pub fn pop_next(&mut self) -> Option<(TaskId, bool)> {
+        if let Some(t) = self.recovery.pop_front() {
+            return Some((t, true));
+        }
+        self.main.pop_front().map(|t| (t, false))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.main.is_empty() && self.recovery.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.main.len() + self.recovery.len()
+    }
+
+    pub fn recovery_len(&self) -> usize {
+        self.recovery.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = TaskQueues::new();
+        q.submit(1);
+        q.submit(2);
+        q.submit(3);
+        assert_eq!(q.pop_next(), Some((1, false)));
+        assert_eq!(q.pop_next(), Some((2, false)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn recovery_has_priority() {
+        let mut q = TaskQueues::new();
+        q.submit(1);
+        q.submit(2);
+        q.submit_recovery(9);
+        assert_eq!(q.pop_next(), Some((9, true)));
+        assert_eq!(q.pop_next(), Some((1, false)));
+        assert_eq!(q.recovery_len(), 0);
+    }
+
+    #[test]
+    fn empty() {
+        let mut q = TaskQueues::new();
+        assert!(q.is_empty());
+        assert_eq!(q.pop_next(), None);
+    }
+}

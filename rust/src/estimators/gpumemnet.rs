@@ -1,0 +1,122 @@
+//! GPUMemNet estimator (paper §3) served through PJRT (S9/S10).
+//!
+//! Loads the AOT-compiled ensemble-classifier HLOs (weights baked in at
+//! export, Pallas ensemble kernel inside) and, per request, feeds the raw
+//! 16-feature vector, argmaxes the class logits, and returns the class
+//! *upper edge* — so within a correctly-predicted bucket the estimate never
+//! underestimates (paper §3.3 / Table 5).
+//!
+//! The executables are compiled once at load; per-request work is one
+//! literal upload + one execution (the paper's ≤16 ms budget; ours is
+//! tracked by `benches/estimators.rs`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::pjrt::{argmax_f32, literal_f32, Executable, Runtime};
+use crate::util::json::Json;
+use crate::workload::features::Arch;
+use crate::workload::task::TaskSpec;
+
+use super::MemoryEstimator;
+
+struct ArchModel {
+    exe: Executable,
+    n_classes: usize,
+    range_gb: f64,
+}
+
+pub struct GpuMemNetEstimator {
+    _rt: Runtime,
+    models: BTreeMap<&'static str, ArchModel>,
+    /// Estimation cache: trace models repeat, and the estimate is a pure
+    /// function of the feature vector.
+    cache: RefCell<BTreeMap<[u32; 16], f64>>,
+}
+
+impl GpuMemNetEstimator {
+    /// Load `gpumemnet_{mlp,cnn,tfm}.hlo.txt` per the manifest.
+    pub fn load(artifacts_dir: &str) -> Result<GpuMemNetEstimator, String> {
+        Self::load_inner(artifacts_dir).map_err(|e| format!("GPUMemNet load: {e:#}"))
+    }
+
+    fn load_inner(artifacts_dir: &str) -> Result<GpuMemNetEstimator> {
+        let manifest_path = format!("{artifacts_dir}/gpumemnet_manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("{manifest_path} missing — run `make artifacts` first")
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("{manifest_path}: {e}"))?;
+        let rt = Runtime::cpu()?;
+
+        let mut models = BTreeMap::new();
+        for (short, fname) in [
+            ("mlp", "gpumemnet_mlp.hlo.txt"),
+            ("cnn", "gpumemnet_cnn.hlo.txt"),
+            ("tfm", "gpumemnet_tfm.hlo.txt"),
+        ] {
+            let meta = manifest
+                .get(fname)
+                .ok_or_else(|| anyhow!("{fname} missing from manifest"))?;
+            let exe = rt.load_hlo(&format!("{artifacts_dir}/{fname}"))?;
+            models.insert(
+                short,
+                ArchModel {
+                    exe,
+                    n_classes: meta.f64_of("n_classes") as usize,
+                    range_gb: meta.f64_of("range_gb"),
+                },
+            );
+        }
+        Ok(GpuMemNetEstimator {
+            _rt: rt,
+            models,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    fn model_for(&self, arch: Arch) -> &ArchModel {
+        let key = match arch {
+            Arch::Mlp => "mlp",
+            Arch::Cnn => "cnn",
+            Arch::Transformer => "tfm",
+        };
+        &self.models[key]
+    }
+
+    /// Run the classifier on a raw feature vector.
+    pub fn classify(&self, arch: Arch, features: &[f32; 16]) -> Result<usize> {
+        let m = self.model_for(arch);
+        let x = literal_f32(features, &[1, 16])?;
+        let out = m.exe.run(&[x])?;
+        argmax_f32(&out[0], m.n_classes)
+    }
+
+    pub fn estimate_features(&self, arch: Arch, features: &[f32; 16]) -> Result<f64> {
+        let key: [u32; 16] = std::array::from_fn(|i| features[i].to_bits());
+        if let Some(&hit) = self.cache.borrow().get(&key) {
+            return Ok(hit);
+        }
+        let m = self.model_for(arch);
+        let class = self.classify(arch, features)?;
+        let est = ((class as f64 + 1.0) * m.range_gb).min(crate::workload::memsim::GPU_CAPACITY_GB);
+        self.cache.borrow_mut().insert(key, est);
+        Ok(est)
+    }
+
+    pub fn range_gb(&self, arch: Arch) -> f64 {
+        self.model_for(arch).range_gb
+    }
+}
+
+impl MemoryEstimator for GpuMemNetEstimator {
+    fn name(&self) -> &'static str {
+        "GPUMemNet"
+    }
+
+    fn estimate_gb(&self, task: &TaskSpec) -> Option<f64> {
+        let v = task.features.to_vec();
+        self.estimate_features(task.features.arch, &v).ok()
+    }
+}

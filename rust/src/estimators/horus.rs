@@ -1,0 +1,112 @@
+//! Horus analytical estimator [42] (paper §2.3, Fig. 1).
+//!
+//! The paper's Fig. 1 shows the Horus formula *underestimating* one-layer
+//! MLPs (it omits the CUDA context, framework pools and optimizer states)
+//! and *overestimating* deeper MLPs increasingly with width/depth — up to
+//! hundreds of GB — because the analytical model charges per-sample
+//! gradient storage for every layer (batch-size × parameter term) instead
+//! of the fused gradient buffers frameworks actually keep.  Fig. 6 shows
+//! moderate over/under-estimation for real CNNs/Transformers.
+//!
+//! We reproduce exactly that error profile (DESIGN.md §1):
+//!
+//! * MLP depth == 1:  `4P·2` (weights+grads only) → underestimate;
+//! * MLP depth >= 2:  `4P·2 + 4·bs·P` → overestimate growing with
+//!   neurons × layers (the Fig. 1 blow-up);
+//! * CNN/Transformer: `4P·3 + 4·bs·A·0.8` — no context/workspace/rounding,
+//!   optimizer counted as SGD-momentum (×3) instead of Adam (×4).
+
+use crate::util::units::GIB;
+use crate::workload::features::{Arch, TaskFeatures};
+use crate::workload::task::TaskSpec;
+
+use super::MemoryEstimator;
+
+pub struct HorusEstimator;
+
+/// The raw formula, exposed for Fig. 1 / Fig. 6 sweeps.
+pub fn horus_gb(f: &TaskFeatures) -> f64 {
+    let p = f.params_m * 1e6;
+    let a = f.acts_m * 1e6;
+    let bs = f.batch_size / f.n_gpus.max(1.0);
+    let bytes = match f.arch {
+        Arch::Mlp => {
+            if f.depth_total <= 2.0 {
+                // single hidden layer: weights + grads only
+                4.0 * p * 2.0
+            } else {
+                // per-sample gradient pathology
+                4.0 * p * 2.0 + 4.0 * bs * p
+            }
+        }
+        Arch::Cnn | Arch::Transformer => 4.0 * p * 3.0 + 4.0 * bs * a * 1.2,
+    };
+    bytes / GIB
+}
+
+impl MemoryEstimator for HorusEstimator {
+    fn name(&self) -> &'static str {
+        "Horus"
+    }
+
+    fn estimate_gb(&self, task: &TaskSpec) -> Option<f64> {
+        Some(horus_gb(&task.features))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::memsim;
+
+    fn mlp(depth: f64, width: f64) -> TaskFeatures {
+        let mut f = TaskFeatures::zeroed(Arch::Mlp);
+        let input = 150528.0;
+        // params for depth hidden layers of `width` neurons + output 1000
+        f.params_m = (input * width + (depth - 1.0).max(0.0) * width * width + width * 1000.0) / 1e6;
+        f.acts_m = (depth * width + 1000.0) / 1e6;
+        f.depth_total = depth + 1.0;
+        f.width_max = width;
+        f.n_linear = depth + 1.0;
+        f.batch_size = 32.0;
+        f
+    }
+
+    #[test]
+    fn fig1_shape_single_layer_underestimates() {
+        let f = mlp(1.0, 512.0);
+        assert!(horus_gb(&f) < memsim::measured_gb(&f));
+    }
+
+    #[test]
+    fn fig1_shape_deep_overestimates() {
+        let f = mlp(8.0, 1024.0);
+        assert!(horus_gb(&f) > memsim::measured_gb(&f) * 2.0);
+    }
+
+    #[test]
+    fn fig1_overestimate_grows_with_width_and_depth() {
+        let small = horus_gb(&mlp(4.0, 512.0));
+        let wider = horus_gb(&mlp(4.0, 4096.0));
+        let deeper = horus_gb(&mlp(12.0, 4096.0));
+        assert!(wider > small);
+        assert!(deeper > wider);
+        // the paper reports misestimates reaching hundreds of GB
+        assert!(deeper > 50.0, "deep/wide blow-up expected, got {deeper}");
+    }
+
+    #[test]
+    fn cnn_estimates_are_moderate() {
+        use crate::workload::model_zoo::ModelZoo;
+        let zoo = ModelZoo::load();
+        for e in zoo.entries.iter().filter(|e| e.arch == Arch::Cnn) {
+            let h = horus_gb(&e.features);
+            assert!(
+                h > e.mem_gb * 0.05 && h < e.mem_gb * 6.0,
+                "{}: horus {h} vs actual {}",
+                e.key(),
+                e.mem_gb
+            );
+        }
+    }
+}

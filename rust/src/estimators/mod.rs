@@ -1,0 +1,59 @@
+//! GPU memory estimators (paper §2.3 / §3).
+//!
+//! The coordinator consults a [`MemoryEstimator`] during mapping; each
+//! implementation reproduces the error *profile* the paper measured for it
+//! (Figs. 1, 2, 6 — see each module's docs), because those error profiles
+//! are what drive the OOM / lost-collocation trade-offs in §5.4.
+
+pub mod faketensor;
+pub mod gpumemnet;
+pub mod horus;
+pub mod oracle;
+
+use crate::config::schema::EstimatorKind;
+use crate::workload::task::TaskSpec;
+
+pub use faketensor::FakeTensorEstimator;
+pub use gpumemnet::GpuMemNetEstimator;
+pub use horus::HorusEstimator;
+pub use oracle::OracleEstimator;
+
+/// Estimate the peak GPU memory (GB, per GPU) of a training task before it
+/// runs.  `None` = the estimator cannot handle this task (e.g. FakeTensor on
+/// Transformers, paper Fig. 6) — the coordinator then falls back to
+/// preconditions + recovery.
+///
+/// Not `Send`: the GPUMemNet implementation holds PJRT handles (`Rc`
+/// internally in the `xla` crate); the coordinator is single-threaded.
+pub trait MemoryEstimator {
+    fn name(&self) -> &'static str;
+    fn estimate_gb(&self, task: &TaskSpec) -> Option<f64>;
+}
+
+/// No-estimator sentinel (paper §5.3: recovery + preconditions only).
+pub struct NoEstimator;
+
+impl MemoryEstimator for NoEstimator {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn estimate_gb(&self, _task: &TaskSpec) -> Option<f64> {
+        None
+    }
+}
+
+/// Instantiate by kind. GPUMemNet needs the artifacts directory (PJRT
+/// executables); all others are pure.
+pub fn build(
+    kind: EstimatorKind,
+    artifacts_dir: &str,
+) -> Result<Box<dyn MemoryEstimator>, String> {
+    Ok(match kind {
+        EstimatorKind::None => Box::new(NoEstimator),
+        EstimatorKind::Oracle => Box::new(OracleEstimator),
+        EstimatorKind::Horus => Box::new(HorusEstimator),
+        EstimatorKind::FakeTensor => Box::new(FakeTensorEstimator),
+        EstimatorKind::GpuMemNet => Box::new(GpuMemNetEstimator::load(artifacts_dir)?),
+    })
+}

@@ -1,0 +1,31 @@
+//! Oracle estimator: memory needs known apriori (paper §5.2).
+
+use crate::workload::task::TaskSpec;
+
+use super::MemoryEstimator;
+
+pub struct OracleEstimator;
+
+impl MemoryEstimator for OracleEstimator {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn estimate_gb(&self, task: &TaskSpec) -> Option<f64> {
+        Some(task.mem_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{model_zoo::ModelZoo, task::TaskSpec};
+
+    #[test]
+    fn returns_ground_truth() {
+        let zoo = ModelZoo::load();
+        let e = zoo.find("vgg16", "imagenet", 128).unwrap();
+        let t = TaskSpec::from_zoo(0, e, 1, 0.0);
+        assert_eq!(OracleEstimator.estimate_gb(&t), Some(24.41));
+    }
+}

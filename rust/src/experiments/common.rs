@@ -1,0 +1,140 @@
+//! Shared experiment plumbing: run configurations, comparison printing,
+//! JSON/CSV emission under `artifacts/results/`.
+
+use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use crate::coordinator::carma::{run_label, run_trace, RunOutcome};
+use crate::estimators;
+use crate::metrics::report::RunReport;
+use crate::util::json::{self, Json};
+use crate::workload::model_zoo::ModelZoo;
+use crate::workload::trace::TraceSpec;
+
+pub const DEFAULT_SEED: u64 = 42;
+
+/// One run configuration of an experiment grid.
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub policy: PolicyKind,
+    pub colloc: CollocationMode,
+    pub estimator: EstimatorKind,
+    pub smact_cap: Option<f64>,
+    pub min_free_gb: Option<f64>,
+    pub safety_margin_gb: f64,
+}
+
+impl RunCfg {
+    pub fn new(policy: PolicyKind, colloc: CollocationMode, estimator: EstimatorKind) -> Self {
+        RunCfg {
+            policy,
+            colloc,
+            estimator,
+            smact_cap: None,
+            min_free_gb: None,
+            safety_margin_gb: 0.0,
+        }
+    }
+
+    pub fn smact(mut self, cap: f64) -> Self {
+        self.smact_cap = Some(cap);
+        self
+    }
+
+    pub fn min_free(mut self, gb: f64) -> Self {
+        self.min_free_gb = Some(gb);
+        self
+    }
+
+    pub fn margin(mut self, gb: f64) -> Self {
+        self.safety_margin_gb = gb;
+        self
+    }
+
+    pub fn to_config(&self, artifacts_dir: &str) -> CarmaConfig {
+        let mut c = CarmaConfig {
+            policy: self.policy,
+            colloc: self.colloc,
+            estimator: self.estimator,
+            smact_cap: self.smact_cap,
+            min_free_gb: self.min_free_gb,
+            safety_margin_gb: self.safety_margin_gb,
+            artifacts_dir: artifacts_dir.to_string(),
+            ..CarmaConfig::default()
+        };
+        c.seed = DEFAULT_SEED;
+        c
+    }
+}
+
+/// The standard Exclusive baseline (no collocation).
+pub fn exclusive() -> RunCfg {
+    RunCfg::new(PolicyKind::Exclusive, CollocationMode::Mps, EstimatorKind::None)
+}
+
+/// Execute a grid of configurations over a trace, printing rows as they
+/// finish and returning all outcomes.
+pub fn run_grid(
+    trace: &TraceSpec,
+    runs: &[RunCfg],
+    artifacts_dir: &str,
+) -> Vec<(String, RunOutcome)> {
+    println!("{}", RunReport::header());
+    let mut out = Vec::new();
+    for rc in runs {
+        let cfg = rc.to_config(artifacts_dir);
+        let est = estimators::build(rc.estimator, artifacts_dir)
+            .unwrap_or_else(|e| panic!("estimator {:?}: {e}", rc.estimator));
+        let label = run_label(&cfg, est.name());
+        let outcome = run_trace(cfg, est, trace, &label);
+        println!("{}", outcome.report.row());
+        out.push((label, outcome));
+    }
+    out
+}
+
+/// Write results to `artifacts/results/<name>.json` for downstream plotting.
+pub fn save_results(name: &str, artifacts_dir: &str, rows: &[(String, RunOutcome)]) {
+    let dir = format!("{artifacts_dir}/results");
+    let _ = std::fs::create_dir_all(&dir);
+    let arr = json::arr(rows.iter().map(|(_, o)| o.report.to_json()).collect());
+    let path = format!("{dir}/{name}.json");
+    if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+        println!("  -> {path}");
+    }
+}
+
+pub fn save_json(name: &str, artifacts_dir: &str, value: &Json) {
+    let dir = format!("{artifacts_dir}/results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/{name}.json");
+    if std::fs::write(&path, value.to_string_pretty()).is_ok() {
+        println!("  -> {path}");
+    }
+}
+
+pub fn save_csv(name: &str, artifacts_dir: &str, header: &str, rows: &[String]) {
+    let dir = format!("{artifacts_dir}/results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/{name}.csv");
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    if std::fs::write(&path, text).is_ok() {
+        println!("  -> {path}");
+    }
+}
+
+pub fn zoo() -> ModelZoo {
+    ModelZoo::load()
+}
+
+/// % improvement of `b` over baseline `a` (positive = b is lower/better).
+pub fn improvement_pct(a: f64, b: f64) -> f64 {
+    if a == 0.0 {
+        0.0
+    } else {
+        (a - b) / a * 100.0
+    }
+}

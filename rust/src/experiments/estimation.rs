@@ -1,0 +1,277 @@
+//! Estimation-quality experiments: Figs. 1–4, 6 and Table 1.
+
+use crate::estimators::faketensor::faketensor_gb;
+use crate::estimators::gpumemnet::GpuMemNetEstimator;
+use crate::estimators::horus::horus_gb;
+use crate::util::json::Json;
+use crate::workload::features::{Arch, TaskFeatures};
+use crate::workload::memsim;
+
+use super::common::{save_csv, zoo};
+
+/// Fig. 1 — Horus vs actual for MLPs with varying neurons × layers.
+pub fn fig1(artifacts_dir: &str) -> Result<(), String> {
+    println!("Fig. 1: Horus estimation vs actual GPU memory (MLPs, bs=32, ImageNet input)\n");
+    println!(
+        "{:>8} {:>7} {:>12} {:>12} {:>9}",
+        "neurons", "layers", "actual(GB)", "horus(GB)", "ratio"
+    );
+    let mut rows = Vec::new();
+    for &width in &[128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0] {
+        for &layers in &[1.0, 2.0, 4.0, 8.0, 12.0] {
+            let f = mlp_features(width, layers, 32.0);
+            let actual = memsim::measured_gb(&f);
+            let horus = horus_gb(&f);
+            println!(
+                "{:>8} {:>7} {:>12.2} {:>12.2} {:>9.2}",
+                width,
+                layers,
+                actual,
+                horus,
+                horus / actual
+            );
+            rows.push(format!("{width},{layers},{actual:.4},{horus:.4}"));
+        }
+    }
+    save_csv("fig1", artifacts_dir, "neurons,layers,actual_gb,horus_gb", &rows);
+    println!("\nShape check: 1-layer rows underestimate (ratio < 1); deeper rows");
+    println!("overestimate increasingly with neurons × layers (paper: up to 395 GB).");
+    Ok(())
+}
+
+fn mlp_features(width: f64, hidden_layers: f64, bs: f64) -> TaskFeatures {
+    let input = 150528.0;
+    let out = 1000.0;
+    let mut f = TaskFeatures::zeroed(Arch::Mlp);
+    f.params_m = (input * width
+        + (hidden_layers - 1.0).max(0.0) * width * width
+        + width * out)
+        / 1e6;
+    f.acts_m = (hidden_layers * width + out) / 1e6;
+    f.batch_size = bs;
+    f.input_dim = input;
+    f.output_dim = out;
+    f.depth_total = hidden_layers + 1.0;
+    f.width_max = width;
+    f.n_linear = hidden_layers + 1.0;
+    f
+}
+
+/// Fig. 2 — FakeTensor vs actual for a TIMM-like CNN sweep.
+pub fn fig2(artifacts_dir: &str) -> Result<(), String> {
+    println!("Fig. 2: FakeTensor estimation vs actual (TIMM-like CNNs during training)\n");
+    println!(
+        "{:<34} {:>12} {:>14} {:>9}",
+        "model", "actual(GB)", "faketensor(GB)", "ratio"
+    );
+    let z = zoo();
+    let mut rows = Vec::new();
+    let mut under = 0;
+    let mut total = 0;
+    // real zoo CNNs + synthetic giants that trigger the blow-up tail
+    for e in z.entries.iter().filter(|e| e.arch == Arch::Cnn) {
+        let actual = e.mem_gb;
+        let ft = faketensor_gb(&e.features).unwrap();
+        print_fig2_row(&e.key(), actual, ft);
+        rows.push(format!("{},{actual:.4},{ft:.4}", e.key()));
+        total += 1;
+        if ft < actual {
+            under += 1;
+        }
+    }
+    for (name, acts_m, params_m, bs) in [
+        ("synthetic/vit_giant_514", 70.0, 1840.0, 64.0),
+        ("synthetic/convnext_xxl", 95.0, 850.0, 128.0),
+    ] {
+        let mut f = TaskFeatures::zeroed(Arch::Cnn);
+        f.acts_m = acts_m;
+        f.params_m = params_m;
+        f.batch_size = bs;
+        f.n_conv = 60.0;
+        let actual = memsim::measured_gb(&f);
+        let ft = faketensor_gb(&f).unwrap();
+        print_fig2_row(name, actual, ft);
+        rows.push(format!("{name},{actual:.4},{ft:.4}"));
+    }
+    save_csv("fig2", artifacts_dir, "model,actual_gb,faketensor_gb", &rows);
+    println!(
+        "\n{}/{} zoo CNNs underestimated (paper: 'generally underestimates'); the",
+        under, total
+    );
+    println!("synthetic giants show the paper's TB-scale overestimation tail.");
+    Ok(())
+}
+
+fn print_fig2_row(name: &str, actual: f64, ft: f64) {
+    println!(
+        "{:<34} {:>12.2} {:>14.2} {:>9.2}",
+        name,
+        actual,
+        ft,
+        ft / actual
+    );
+}
+
+/// Fig. 3 — staircase growth pattern (produced by compile.analysis).
+pub fn fig3(artifacts_dir: &str) -> Result<(), String> {
+    let path = format!("{artifacts_dir}/analysis/fig3_staircase.csv");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("{path}: {e} (run `make artifacts`)"))?;
+    println!("Fig. 3: staircase memory growth (MLPs on ImageNet-dim input, bs=32)\n");
+    let mut plateaus = 0usize;
+    let mut prev: Option<f64> = None;
+    let mut n = 0;
+    for line in text.lines().skip(1) {
+        let mem: f64 = line.split(',').nth(2).unwrap_or("0").parse().unwrap_or(0.0);
+        n += 1;
+        if let Some(p) = prev {
+            if (mem - p).abs() < 1e-9 {
+                plateaus += 1;
+            }
+        }
+        prev = Some(mem);
+    }
+    // print a coarse ascii rendering of the staircase
+    for line in text.lines().skip(1).step_by(8) {
+        let mut it = line.split(',');
+        let width = it.next().unwrap_or("");
+        let _params = it.next();
+        let mem: f64 = it.next().unwrap_or("0").parse().unwrap_or(0.0);
+        println!("width {:>5}  {:>7.2} GB  |{}", width, mem, "#".repeat((mem * 2.0) as usize));
+    }
+    println!(
+        "\n{plateaus}/{n} consecutive sweep points share a plateau -> staircase confirmed.\nFull series: {path}"
+    );
+    Ok(())
+}
+
+/// Fig. 4 — PCA class separability (produced by compile.analysis).
+pub fn fig4(artifacts_dir: &str) -> Result<(), String> {
+    println!("Fig. 4: PCA of the GPUMemNet datasets (class separability)\n");
+    for arch in ["mlp", "cnn", "transformer"] {
+        let path = format!("{artifacts_dir}/analysis/fig4_{arch}.csv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{path}: {e} (run `make artifacts`)"))?;
+        // quantify separability: between-class vs within-class variance on PC1
+        let mut by_class: std::collections::BTreeMap<i64, Vec<f64>> = Default::default();
+        for line in text.lines().skip(1) {
+            let mut it = line.split(',');
+            let pc1: f64 = it.next().unwrap_or("0").parse().unwrap_or(0.0);
+            let _pc2 = it.next();
+            let label: i64 = it.next().unwrap_or("0").parse().unwrap_or(0);
+            by_class.entry(label).or_default().push(pc1);
+        }
+        let overall: Vec<f64> = by_class.values().flatten().copied().collect();
+        let om = crate::util::stats::mean(&overall);
+        let total_var = crate::util::stats::stddev(&overall).powi(2);
+        let between: f64 = by_class
+            .values()
+            .map(|v| {
+                let m = crate::util::stats::mean(v);
+                v.len() as f64 * (m - om) * (m - om)
+            })
+            .sum::<f64>()
+            / overall.len().max(1) as f64;
+        println!(
+            "  {arch:<12} {} classes, {} points, between/total PC1 variance = {:.2}",
+            by_class.len(),
+            overall.len(),
+            between / total_var.max(1e-12)
+        );
+    }
+    println!("\n(ratio >> 0 means the discretized classes separate along PC1 —");
+    println!(" the paper's argument for the classification formulation)");
+    Ok(())
+}
+
+/// Table 1 — estimator accuracy/F1 (trained by compile.train).
+pub fn table1(artifacts_dir: &str) -> Result<(), String> {
+    let path = format!("{artifacts_dir}/table1.json");
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e} (run `make artifacts`)"))?;
+    let rows = Json::parse(&text).map_err(|e| e.to_string())?;
+    println!("Table 1: GPUMemNet estimator accuracy (3-fold CV, held-out test)\n");
+    println!(
+        "{:<14} {:<13} {:>7} {:>7} {:>9}",
+        "Dataset", "Estimator", "Range", "Acc.", "F1-score"
+    );
+    for r in rows.as_arr().ok_or("table1.json must be an array")? {
+        println!(
+            "{:<14} {:<13} {:>5}GB {:>7.2} {:>9.2}",
+            r.str_of("dataset"),
+            r.str_of("estimator"),
+            r.f64_of("range_gb"),
+            r.f64_of("accuracy"),
+            r.f64_of("f1"),
+        );
+    }
+    println!("\n(paper: MLP .95-.98, CNN .81-.83, Transformer .86-.88; our MLP dataset");
+    println!(" uses the full 40-class/1GB formulation — see EXPERIMENTS.md)");
+    Ok(())
+}
+
+/// Fig. 6 — Horus / FakeTensor / GPUMemNet vs actual on real unseen models.
+pub fn fig6(artifacts_dir: &str) -> Result<(), String> {
+    println!("Fig. 6: GPU memory estimation for real-world unseen CNN and Transformer models\n");
+    let gmn = GpuMemNetEstimator::load(artifacts_dir)?;
+    let z = zoo();
+    println!(
+        "{:<34} {:>10} {:>9} {:>11} {:>11}",
+        "model", "actual(GB)", "Horus", "FakeTensor", "GPUMemNet"
+    );
+    let mut rows = Vec::new();
+    let mut gmn_under = 0;
+    let mut gmn_abs_err = 0.0;
+    let mut horus_abs_err = 0.0;
+    let mut n = 0;
+    for e in z
+        .entries
+        .iter()
+        .filter(|e| e.arch == Arch::Cnn || e.arch == Arch::Transformer)
+    {
+        let actual = e.mem_gb;
+        let horus = horus_gb(&e.features);
+        let ft = faketensor_gb(&e.features);
+        let g = gmn
+            .estimate_features(e.arch, &e.features.to_vec())
+            .map_err(|err| format!("gpumemnet: {err:#}"))?;
+        println!(
+            "{:<34} {:>10.2} {:>9.2} {:>11} {:>11.2}",
+            e.key(),
+            actual,
+            horus,
+            ft.map(|x| format!("{x:.2}")).unwrap_or_else(|| "X".into()),
+            g
+        );
+        rows.push(format!(
+            "{},{:.4},{:.4},{},{:.4}",
+            e.key(),
+            actual,
+            horus,
+            ft.map(|x| format!("{x:.4}")).unwrap_or_else(|| "".into()),
+            g
+        ));
+        if g < actual {
+            gmn_under += 1;
+        }
+        gmn_abs_err += (g - actual).abs();
+        horus_abs_err += (horus - actual).abs();
+        n += 1;
+    }
+    save_csv(
+        "fig6",
+        artifacts_dir,
+        "model,actual_gb,horus_gb,faketensor_gb,gpumemnet_gb",
+        &rows,
+    );
+    println!(
+        "\nGPUMemNet: mean |err| {:.2} GB vs Horus {:.2} GB; underestimates {}/{} models",
+        gmn_abs_err / n as f64,
+        horus_abs_err / n as f64,
+        gmn_under,
+        n
+    );
+    println!("(paper: GPUMemNet estimates closest and almost never underestimates;");
+    println!(" FakeTensor reports X for Transformers)");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig. 8 — oracle scenario on the 90-task trace (paper §5.2).
+//!
+//! Memory needs known apriori + 2 GB fragmentation margin, SMACT ≤ 80 %.
+//! Compares collocation policies and NVIDIA collocation options:
+//! Exclusive, RR/MAGM on streams, RR/MAGM/LUG on MPS.
+
+use crate::config::schema::{CollocationMode, EstimatorKind, PolicyKind};
+use crate::workload::trace::trace_90;
+
+use super::common::{exclusive, improvement_pct, run_grid, save_results, zoo, RunCfg, DEFAULT_SEED};
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_90(&z, DEFAULT_SEED);
+    println!(
+        "Fig. 8: oracle runs over {} ({} tasks), SMACT<=80%, 2GB safety margin\n",
+        trace.name,
+        trace.tasks.len()
+    );
+
+    let oracle = |p: PolicyKind, m: CollocationMode| {
+        RunCfg::new(p, m, EstimatorKind::Oracle).smact(0.80).margin(2.0)
+    };
+    let runs = vec![
+        exclusive(),
+        oracle(PolicyKind::RoundRobin, CollocationMode::Streams),
+        oracle(PolicyKind::Magm, CollocationMode::Streams),
+        oracle(PolicyKind::RoundRobin, CollocationMode::Mps),
+        oracle(PolicyKind::Magm, CollocationMode::Mps),
+        oracle(PolicyKind::Lug, CollocationMode::Mps),
+    ];
+    let out = run_grid(&trace, &runs, artifacts_dir);
+    save_results("fig8", artifacts_dir, &out);
+
+    let excl = &out[0].1.report;
+    let magm_mps = &out[4].1.report;
+    let streams = &out[2].1.report;
+    println!(
+        "\nMAGM+MPS total time vs Exclusive: {:+.1}% (paper: -30.13%)",
+        -improvement_pct(excl.trace_total_min, magm_mps.trace_total_min)
+    );
+    println!(
+        "streams waiting vs Exclusive:     {:+.1}% (paper: -53%), JCT {:+.1}% (paper: -27%)",
+        -improvement_pct(excl.avg_waiting_min, streams.avg_waiting_min),
+        -improvement_pct(excl.avg_jct_min, streams.avg_jct_min)
+    );
+    for (_, o) in &out {
+        assert_eq!(o.report.oom_crashes, 0, "oracle runs must be OOM-free (paper §5.2)");
+    }
+    println!("no OOM errors in any oracle run ✓");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Experiment harness (S15): one module per paper table/figure.
+//!
+//! Every entry regenerates the corresponding result with
+//! `carma repro <id>` and drops machine-readable output under
+//! `artifacts/results/` (DESIGN.md §4 maps ids to modules).
+
+pub mod common;
+pub mod estimation; // fig1, fig2, fig6, table1, fig3, fig4
+pub mod fig12;
+pub mod fig8;
+pub mod recovery; // table4 + fig9
+pub mod sixty; // table6 + fig11 + table7
+pub mod table5; // table5 + fig10
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
+    "fig10", "table6", "fig11", "fig12", "table7",
+];
+
+/// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
+/// artifacts for GPUMemNet-dependent experiments.
+pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
+    match id {
+        "fig1" => estimation::fig1(artifacts_dir),
+        "fig2" => estimation::fig2(artifacts_dir),
+        "fig3" => estimation::fig3(artifacts_dir),
+        "fig4" => estimation::fig4(artifacts_dir),
+        "table1" => estimation::table1(artifacts_dir),
+        "fig6" => estimation::fig6(artifacts_dir),
+        "fig8" => fig8::run(artifacts_dir),
+        "table4" => recovery::table4(artifacts_dir),
+        "fig9" => recovery::fig9(artifacts_dir),
+        "table5" => table5::table5(artifacts_dir),
+        "fig10" => table5::fig10(artifacts_dir),
+        "table6" => sixty::table6(artifacts_dir),
+        "fig11" => sixty::fig11(artifacts_dir),
+        "fig12" => fig12::run(artifacts_dir),
+        "table7" => sixty::table7(artifacts_dir),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, artifacts_dir)?;
+            }
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown experiment '{other}' (known: {} or 'all')",
+            ALL.join(", ")
+        )),
+    }
+}

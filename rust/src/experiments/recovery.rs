@@ -1,0 +1,76 @@
+//! Table 4 + Fig. 9 — recovery method and preconditions without estimators
+//! (paper §5.3): collocation proceeds blindly until OOM or preconditions
+//! stop it; the recovery queue re-runs crashed tasks exclusively.
+
+use crate::config::schema::{CollocationMode, EstimatorKind, PolicyKind};
+use crate::workload::trace::trace_90;
+
+use super::common::{exclusive, run_grid, save_results, zoo, RunCfg, DEFAULT_SEED};
+
+fn grid() -> Vec<RunCfg> {
+    let blind = |p: PolicyKind| RunCfg::new(p, CollocationMode::Mps, EstimatorKind::None);
+    vec![
+        blind(PolicyKind::RoundRobin),                    // RR (no condition)
+        blind(PolicyKind::Magm),                          // MAGM (no condition)
+        blind(PolicyKind::Magm).smact(0.80),              // MAGM (SMACT<=80%)
+        blind(PolicyKind::Magm).smact(0.80).min_free(2.0),
+        blind(PolicyKind::Magm).smact(0.80).min_free(5.0),
+        blind(PolicyKind::Magm).smact(0.75).min_free(5.0),
+        blind(PolicyKind::Magm).smact(0.85).min_free(5.0),
+        blind(PolicyKind::Lug).smact(0.80).min_free(5.0),
+    ]
+}
+
+/// Table 4 — #OOM per policy/precondition combination.
+pub fn table4(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_90(&z, DEFAULT_SEED);
+    println!(
+        "Table 4: OOM errors without memory estimators (recovery only), {}\n",
+        trace.name
+    );
+    let out = run_grid(&trace, &grid(), artifacts_dir);
+    save_results("table4", artifacts_dir, &out);
+
+    println!("\n{:<44} {:>12}", "Policy", "#OOM Crashes");
+    for (label, o) in &out {
+        println!("{:<44} {:>12}", label, o.report.oom_crashes);
+    }
+    println!("\n(paper: RR 8 > MAGM 5 > +SMACT 4 > +GMem 2; 75% tightest at 1;");
+    println!(" all tasks still complete thanks to the recovery queue)");
+    for (label, o) in &out {
+        assert_eq!(
+            o.report.completed, o.report.total_tasks,
+            "{label}: recovery must complete every task"
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 9 — the same runs' timing profile vs Exclusive.
+pub fn fig9(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_90(&z, DEFAULT_SEED);
+    println!(
+        "Fig. 9: recovery-only collocation performance (all MPS), {}\n",
+        trace.name
+    );
+    let mut runs = vec![exclusive()];
+    runs.extend(grid());
+    let out = run_grid(&trace, &runs, artifacts_dir);
+    save_results("fig9", artifacts_dir, &out);
+
+    let excl = &out[0].1.report;
+    let best = out[1..]
+        .iter()
+        .min_by(|a, b| a.1.report.trace_total_min.total_cmp(&b.1.report.trace_total_min))
+        .unwrap();
+    println!(
+        "\nbest collocation run: {} at {:.1}m = {:+.1}% vs Exclusive {:.1}m (paper: LUG/MAGM(80%,5GB) ~ -28%)",
+        best.0,
+        best.1.report.trace_total_min,
+        -(excl.trace_total_min - best.1.report.trace_total_min) / excl.trace_total_min * 100.0,
+        excl.trace_total_min
+    );
+    Ok(())
+}

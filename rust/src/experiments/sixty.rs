@@ -1,0 +1,110 @@
+//! Table 6 + Fig. 11 + Table 7 — the heavier 60-task trace (paper §5.5) and
+//! its energy accounting (§5.6).
+
+use crate::config::schema::{CollocationMode, EstimatorKind, PolicyKind};
+use crate::util::json;
+use crate::workload::trace::trace_60;
+
+use super::common::{exclusive, run_grid, save_json, save_results, zoo, RunCfg, DEFAULT_SEED};
+
+fn grid() -> Vec<RunCfg> {
+    vec![
+        exclusive(),
+        RunCfg::new(PolicyKind::RoundRobin, CollocationMode::Streams, EstimatorKind::None),
+        RunCfg::new(PolicyKind::RoundRobin, CollocationMode::Mps, EstimatorKind::None),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::None)
+            .smact(0.80)
+            .min_free(2.0),
+        RunCfg::new(PolicyKind::Lug, CollocationMode::Mps, EstimatorKind::None)
+            .smact(0.80)
+            .min_free(2.0),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Horus).smact(0.80),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::FakeTensor).smact(0.80),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::GpuMemNet).smact(0.80),
+    ]
+}
+
+/// Table 6 — #OOM on the heavy trace.
+pub fn table6(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_60(&z, DEFAULT_SEED);
+    println!("Table 6: OOM errors on the heavier 60-task trace\n");
+    let out = run_grid(&trace, &grid(), artifacts_dir);
+    save_results("table6", artifacts_dir, &out);
+
+    println!("\n{:<44} {:>12}", "Policy", "#OOM Crashes");
+    for (label, o) in &out {
+        println!("{:<44} {:>12}", label, o.report.oom_crashes);
+    }
+    let excl = &out[0].1.report;
+    let gmn = &out[7].1.report;
+    assert_eq!(excl.oom_crashes, 0);
+    println!(
+        "\nGPUMemNet run: {} OOMs (paper: 1, the fewest among collocating runs)",
+        gmn.oom_crashes
+    );
+    Ok(())
+}
+
+/// Fig. 11 — timing on the 60-task trace.
+pub fn fig11(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_60(&z, DEFAULT_SEED);
+    println!("Fig. 11: policies, estimators and preconditions on the 60-task trace\n");
+    let out = run_grid(&trace, &grid(), artifacts_dir);
+    save_results("fig11", artifacts_dir, &out);
+
+    let excl = &out[0].1.report;
+    let gmn = &out[7].1.report;
+    println!(
+        "\nMAGM+GPUMemNet(80%) vs Exclusive: total {:+.1}% (paper: -26.7%), exec {:+.1}% \
+         (paper: increases), waiting {:+.1}% (paper: large reduction)",
+        -(excl.trace_total_min - gmn.trace_total_min) / excl.trace_total_min * 100.0,
+        (gmn.avg_execution_min - excl.avg_execution_min) / excl.avg_execution_min * 100.0,
+        -(excl.avg_waiting_min - gmn.avg_waiting_min) / excl.avg_waiting_min * 100.0,
+    );
+    Ok(())
+}
+
+/// Table 7 — accumulated 4-GPU energy per policy.
+pub fn table7(artifacts_dir: &str) -> Result<(), String> {
+    let z = zoo();
+    let trace = trace_60(&z, DEFAULT_SEED);
+    println!("Table 7: energy consumption under different policies (60-task trace)\n");
+    let runs = vec![
+        exclusive(),
+        RunCfg::new(PolicyKind::RoundRobin, CollocationMode::Streams, EstimatorKind::None),
+        RunCfg::new(PolicyKind::RoundRobin, CollocationMode::Mps, EstimatorKind::None),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::None)
+            .smact(0.80)
+            .min_free(2.0),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Horus).smact(0.80),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::FakeTensor).smact(0.80),
+        RunCfg::new(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::GpuMemNet).smact(0.80),
+    ];
+    let out = run_grid(&trace, &runs, artifacts_dir);
+    save_results("table7", artifacts_dir, &out);
+
+    println!("\n{:<44} {:>22}", "Policy", "Energy Consumption (MJ)");
+    for (label, o) in &out {
+        println!("{:<44} {:>22.2}", label, o.report.energy_mj);
+    }
+    let excl = &out[0].1.report;
+    let gmn = out.last().unwrap().1.report.clone();
+    let red = (excl.energy_mj - gmn.energy_mj) / excl.energy_mj * 100.0;
+    println!(
+        "\nMAGM+GPUMemNet on MPS: {:.2} MJ vs Exclusive {:.2} MJ = -{red:.1}% \
+         (paper: 28.5 vs 33.2 MJ, -14.16%)",
+        gmn.energy_mj, excl.energy_mj
+    );
+    save_json(
+        "table7_summary",
+        artifacts_dir,
+        &json::obj(vec![
+            ("exclusive_mj", json::num(excl.energy_mj)),
+            ("gpumemnet_mj", json::num(gmn.energy_mj)),
+            ("reduction_pct", json::num(red)),
+        ]),
+    );
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! CARMA — Collocation-Aware Resource Manager with GPU Memory Estimator.
+//!
+//! Reproduction of the paper's system as a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md):
+//!
+//! * [`coordinator`] — the paper's contribution: task-level collocation-aware
+//!   task→GPU mapping with policies, preconditions, monitoring and recovery;
+//! * [`cluster`] + [`sim`] — the simulated 4×A100 DGX substrate (segment
+//!   allocator with real fragmentation, interference + power models,
+//!   discrete-event engine);
+//! * [`estimators`] — Oracle / Horus / FakeTensor / GPUMemNet memory
+//!   estimators; GPUMemNet runs AOT-compiled JAX+Pallas graphs through
+//!   [`runtime`] (PJRT CPU, `xla` crate) — Python is never on this path;
+//! * [`workload`] — Table 3 model zoo, trace generators, submission parser,
+//!   the memsim ground-truth mirror;
+//! * [`experiments`] — one module per paper table/figure;
+//! * [`util`], [`config`], [`cli`], [`bench`], [`testkit`] — infrastructure
+//!   substrates built in-repo (the offline registry only carries the `xla`
+//!   crate closure; DESIGN.md §1).
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod estimators;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workload;

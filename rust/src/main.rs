@@ -1,0 +1,199 @@
+//! carma — CLI entrypoint.
+//!
+//! ```text
+//! carma repro <fig8|table4|...|all> [--artifacts DIR]
+//! carma run   [--trace 60|90] [--policy magm] [--estimator gpumemnet]
+//!             [--colloc mps] [--smact 0.8] [--min-free 5] [--margin 2]
+//!             [--seed N] [--config carma.toml]
+//! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
+//! carma zoo                                        (print the Table 3 zoo)
+//! ```
+
+use carma::cli;
+use carma::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::{run_label, run_trace};
+use carma::estimators;
+use carma::experiments;
+use carma::metrics::report::RunReport;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::submission;
+use carma::workload::trace::{trace_60, trace_90};
+
+const VALUE_OPTS: &[&str] = &[
+    "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
+    "seed", "config",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(argv, VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("repro") => cmd_repro(&args),
+        Some("run") => cmd_run(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("zoo") => cmd_zoo(),
+        Some("help") | None => {
+            usage();
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "CARMA — Collocation-Aware Resource Manager (paper reproduction)\n\n\
+         USAGE:\n  carma repro <id|all> [--artifacts DIR]     regenerate a paper table/figure\n\
+         \x20 carma run [options]                        run one configuration over a trace\n\
+         \x20 carma submit <script> [--config FILE]      parse a submission script + map it\n\
+         \x20 carma zoo                                  print the Table 3 model zoo\n\n\
+         RUN OPTIONS:\n  --trace 60|90      workload trace (default 60)\n\
+         \x20 --policy P         exclusive|rr|magm|lug|mug (default magm)\n\
+         \x20 --estimator E      none|oracle|horus|faketensor|gpumemnet (default gpumemnet)\n\
+         \x20 --colloc C         streams|mps|mig (default mps)\n\
+         \x20 --smact X          SMACT precondition 0..1 (default 0.8; >=1 disables)\n\
+         \x20 --min-free GB      memory precondition (default off)\n\
+         \x20 --margin GB        safety margin on estimates (default 0)\n\
+         \x20 --seed N           trace seed (default 42)\n\
+         \x20 --config FILE      carma.toml overriding the defaults\n\n\
+         EXPERIMENTS: {}",
+        experiments::ALL.join(", ")
+    );
+}
+
+fn artifacts_dir(args: &cli::Args) -> String {
+    args.opt("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn cmd_repro(args: &cli::Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    experiments::run(id, &artifacts_dir(args))
+}
+
+fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => CarmaConfig::from_file(path)?,
+        None => CarmaConfig::default(),
+    };
+    if let Some(p) = args.opt("policy") {
+        cfg.policy = PolicyKind::parse(p).ok_or_else(|| format!("unknown policy '{p}'"))?;
+    }
+    if let Some(e) = args.opt("estimator") {
+        cfg.estimator = EstimatorKind::parse(e).ok_or_else(|| format!("unknown estimator '{e}'"))?;
+    }
+    if let Some(c) = args.opt("colloc") {
+        cfg.colloc = CollocationMode::parse(c).ok_or_else(|| format!("unknown colloc '{c}'"))?;
+    }
+    if let Some(x) = args.opt_f64("smact").map_err(|e| e.to_string())? {
+        cfg.smact_cap = if x >= 1.0 { None } else { Some(x) };
+    }
+    if let Some(x) = args.opt_f64("min-free").map_err(|e| e.to_string())? {
+        cfg.min_free_gb = if x <= 0.0 { None } else { Some(x) };
+    }
+    if let Some(x) = args.opt_f64("margin").map_err(|e| e.to_string())? {
+        cfg.safety_margin_gb = x;
+    }
+    if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
+        cfg.seed = s;
+    }
+    cfg.artifacts_dir = artifacts_dir(args);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &cli::Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let zoo = ModelZoo::load();
+    let trace = match args.opt("trace").unwrap_or("60") {
+        "60" => trace_60(&zoo, cfg.seed),
+        "90" => trace_90(&zoo, cfg.seed),
+        other => return Err(format!("unknown trace '{other}' (60|90)")),
+    };
+    let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
+    let label = run_label(&cfg, est.name());
+    println!(
+        "running {} over {} ({} tasks, seed {})\n",
+        label,
+        trace.name,
+        trace.tasks.len(),
+        cfg.seed
+    );
+    let out = run_trace(cfg, est, &trace, &label);
+    println!("{}", RunReport::header());
+    println!("{}", out.report.row());
+    Ok(())
+}
+
+fn cmd_submit(args: &cli::Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .ok_or("usage: carma submit <script.carma>")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let t0 = std::time::Instant::now();
+    let sub = submission::parse_script(&text).map_err(|e| e.to_string())?;
+    let zoo = ModelZoo::load();
+    let spec = submission::resolve(&zoo, &sub, 0, 0.0).map_err(|e| e.to_string())?;
+    let parse_us = t0.elapsed().as_micros();
+
+    let cfg = build_config(args)?;
+    let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
+    let t1 = std::time::Instant::now();
+    let estimate = est.estimate_gb(&spec);
+    let est_us = t1.elapsed().as_micros();
+
+    println!("submission: {}", spec.label());
+    println!("  parsed in {parse_us} µs (paper budget: 2.6 ms)");
+    println!(
+        "  {} estimate: {} (actual Table 3: {:.2} GB, {est_us} µs; paper budget: 16 ms)",
+        est.name(),
+        estimate
+            .map(|e| format!("{e:.2} GB"))
+            .unwrap_or_else(|| "n/a".into()),
+        spec.mem_gb
+    );
+    println!(
+        "  requires {} GPU(s), estimated work {:.1} min",
+        spec.n_gpus,
+        spec.work_s / 60.0
+    );
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<(), String> {
+    let zoo = ModelZoo::load();
+    println!(
+        "{:<20} {:<10} {:<7} {:>4} {:>5} {:>7} {:>7} {:>8} {:>6}",
+        "model", "dataset", "class", "bs", "gpus", "ET(m)", "epochs", "mem(GB)", "SMACT"
+    );
+    for e in &zoo.entries {
+        println!(
+            "{:<20} {:<10} {:<7} {:>4} {:>5} {:>7.2} {:>7} {:>8.2} {:>6.2}",
+            e.name,
+            e.dataset,
+            e.weight_class,
+            e.batch_size,
+            e.n_gpus,
+            e.epoch_time_min,
+            e.epochs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("/"),
+            e.mem_gb,
+            e.smact
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Metrics (S14): per-task timing, GPU timelines, energy, OOM counts, and
+//! the report type every experiment prints (paper §5.1.3 metric set).
+
+pub mod recorder;
+pub mod report;
+
+pub use recorder::{Recorder, TimelinePoint};
+pub use report::RunReport;

@@ -1,0 +1,231 @@
+//! Run-time metric collection (paper §5.1.3).
+
+use crate::sim::TaskId;
+
+/// One downsampled monitoring sample for one GPU (drives Fig. 12).
+#[derive(Debug, Clone, Copy)]
+pub struct TimelinePoint {
+    pub t: f64,
+    pub mem_used_gb: f64,
+    pub smact: f64,
+    pub power_w: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TaskTiming {
+    pub arrival_s: f64,
+    pub dispatched_s: Option<f64>,
+    pub completed_s: Option<f64>,
+    pub oom_crashes: u32,
+}
+
+/// Collects everything the evaluation section reports.
+#[derive(Debug)]
+pub struct Recorder {
+    pub tasks: Vec<TaskTiming>,
+    pub timelines: Vec<Vec<TimelinePoint>>, // per GPU
+    pub energy_j: Vec<f64>,                 // per GPU
+    /// Time-weighted SMACT integral per GPU (for mean utilization).
+    smact_integral: Vec<f64>,
+    mem_integral: Vec<f64>,
+    pub oom_total: u64,
+    pub failed_total: u64,
+    pub first_arrival_s: Option<f64>,
+    pub last_completion_s: f64,
+    /// Keep every k-th monitor sample in the timeline (1 Hz base rate).
+    pub timeline_stride: u64,
+    sample_count: u64,
+    integrated_until: f64,
+}
+
+impl Recorder {
+    pub fn new(n_tasks: usize, n_gpus: usize) -> Self {
+        Recorder {
+            tasks: vec![TaskTiming::default(); n_tasks],
+            timelines: vec![Vec::new(); n_gpus],
+            energy_j: vec![0.0; n_gpus],
+            smact_integral: vec![0.0; n_gpus],
+            mem_integral: vec![0.0; n_gpus],
+            oom_total: 0,
+            failed_total: 0,
+            first_arrival_s: None,
+            last_completion_s: 0.0,
+            timeline_stride: 15,
+            sample_count: 0,
+        integrated_until: 0.0,
+        }
+    }
+
+    pub fn on_arrival(&mut self, task: TaskId, t: f64) {
+        self.tasks[task].arrival_s = t;
+        self.first_arrival_s = Some(self.first_arrival_s.map_or(t, |x: f64| x.min(t)));
+    }
+
+    pub fn on_dispatch(&mut self, task: TaskId, t: f64) {
+        // re-dispatches after OOM keep the FIRST dispatch for waiting time?
+        // No — the paper counts waiting as time in queue before execution
+        // *begins*; a recovered task waits again, so we keep the LAST
+        // dispatch for execution-time accounting and the first for waiting.
+        let tt = &mut self.tasks[task];
+        if tt.dispatched_s.is_none() {
+            tt.dispatched_s = Some(t);
+        } else {
+            // recovered task: execution restarts
+            tt.dispatched_s = Some(tt.dispatched_s.unwrap().min(t));
+        }
+    }
+
+    pub fn on_completion(&mut self, task: TaskId, t: f64) {
+        self.tasks[task].completed_s = Some(t);
+        self.last_completion_s = self.last_completion_s.max(t);
+    }
+
+    /// Task permanently failed (unschedulable / retry budget exhausted).
+    pub fn on_failed(&mut self, _task: TaskId) {
+        self.failed_total += 1;
+    }
+
+    pub fn on_oom(&mut self, task: TaskId) {
+        self.tasks[task].oom_crashes += 1;
+        self.oom_total += 1;
+    }
+
+    /// Integrate one monitoring interval `dt` for GPU `gpu`.
+    pub fn on_sample(
+        &mut self,
+        gpu: usize,
+        t: f64,
+        dt: f64,
+        mem_used_gb: f64,
+        smact: f64,
+        power_w: f64,
+    ) {
+        self.energy_j[gpu] += power_w * dt;
+        self.smact_integral[gpu] += smact * dt;
+        self.mem_integral[gpu] += mem_used_gb * dt;
+        if gpu == 0 {
+            self.sample_count += 1;
+        }
+        if self.sample_count % self.timeline_stride == 0 {
+            self.timelines[gpu].push(TimelinePoint {
+                t,
+                mem_used_gb,
+                smact,
+                power_w,
+            });
+        }
+        if gpu + 1 == self.energy_j.len() {
+            self.integrated_until = t;
+        }
+    }
+
+    // -- aggregates ---------------------------------------------------------
+
+    pub fn trace_total_s(&self) -> f64 {
+        self.last_completion_s - self.first_arrival_s.unwrap_or(0.0)
+    }
+
+    pub fn avg_waiting_s(&self) -> f64 {
+        avg(self.tasks.iter().filter_map(|t| {
+            t.dispatched_s.map(|d| d - t.arrival_s)
+        }))
+    }
+
+    pub fn avg_execution_s(&self) -> f64 {
+        avg(self.tasks.iter().filter_map(|t| {
+            match (t.dispatched_s, t.completed_s) {
+                (Some(d), Some(c)) => Some(c - d),
+                _ => None,
+            }
+        }))
+    }
+
+    pub fn avg_jct_s(&self) -> f64 {
+        avg(self.tasks.iter().filter_map(|t| {
+            t.completed_s.map(|c| c - t.arrival_s)
+        }))
+    }
+
+    pub fn total_energy_mj(&self) -> f64 {
+        self.energy_j.iter().sum::<f64>() / 1e6
+    }
+
+    /// Mean SM activity across GPUs over the trace (paper's "GPU
+    /// utilization over time").
+    pub fn mean_smact(&self) -> f64 {
+        let t = self.integrated_until.max(1e-9);
+        self.smact_integral.iter().sum::<f64>() / (t * self.smact_integral.len() as f64)
+    }
+
+    pub fn mean_mem_used_gb(&self) -> f64 {
+        let t = self.integrated_until.max(1e-9);
+        self.mem_integral.iter().sum::<f64>() / (t * self.mem_integral.len() as f64)
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.tasks.iter().filter(|t| t.completed_s.is_some()).count()
+    }
+}
+
+fn avg(it: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = it.collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_pipeline() {
+        let mut r = Recorder::new(2, 1);
+        r.on_arrival(0, 10.0);
+        r.on_arrival(1, 20.0);
+        r.on_dispatch(0, 70.0);
+        r.on_completion(0, 170.0);
+        r.on_dispatch(1, 200.0);
+        r.on_completion(1, 260.0);
+        assert_eq!(r.avg_waiting_s(), (60.0 + 180.0) / 2.0);
+        assert_eq!(r.avg_execution_s(), (100.0 + 60.0) / 2.0);
+        assert_eq!(r.avg_jct_s(), (160.0 + 240.0) / 2.0);
+        assert_eq!(r.trace_total_s(), 250.0);
+        assert_eq!(r.completed_count(), 2);
+    }
+
+    #[test]
+    fn energy_and_utilization_integrals() {
+        let mut r = Recorder::new(1, 2);
+        for i in 0..100 {
+            let t = (i + 1) as f64;
+            r.on_sample(0, t, 1.0, 10.0, 0.5, 200.0);
+            r.on_sample(1, t, 1.0, 0.0, 0.0, 50.0);
+        }
+        assert!((r.total_energy_mj() - (200.0 + 50.0) * 100.0 / 1e6).abs() < 1e-12);
+        assert!((r.mean_smact() - 0.25).abs() < 1e-9);
+        assert!((r.mean_mem_used_gb() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_counting() {
+        let mut r = Recorder::new(3, 1);
+        r.on_oom(1);
+        r.on_oom(1);
+        r.on_oom(2);
+        assert_eq!(r.oom_total, 3);
+        assert_eq!(r.tasks[1].oom_crashes, 2);
+    }
+
+    #[test]
+    fn timeline_downsampling() {
+        let mut r = Recorder::new(1, 1);
+        r.timeline_stride = 10;
+        for i in 0..100 {
+            r.on_sample(0, i as f64, 1.0, 1.0, 0.1, 60.0);
+        }
+        assert_eq!(r.timelines[0].len(), 10);
+    }
+}

@@ -1,0 +1,100 @@
+//! Run report: the metric set every paper experiment prints.
+
+use crate::util::json::{self, Json};
+use crate::util::units::to_minutes;
+
+use super::recorder::Recorder;
+
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub trace_total_min: f64,
+    pub avg_waiting_min: f64,
+    pub avg_execution_min: f64,
+    pub avg_jct_min: f64,
+    pub oom_crashes: u64,
+    pub energy_mj: f64,
+    pub mean_smact: f64,
+    pub mean_mem_used_gb: f64,
+    pub completed: usize,
+    pub total_tasks: usize,
+}
+
+impl RunReport {
+    pub fn from_recorder(label: &str, r: &Recorder) -> RunReport {
+        RunReport {
+            label: label.to_string(),
+            trace_total_min: to_minutes(r.trace_total_s()),
+            avg_waiting_min: to_minutes(r.avg_waiting_s()),
+            avg_execution_min: to_minutes(r.avg_execution_s()),
+            avg_jct_min: to_minutes(r.avg_jct_s()),
+            oom_crashes: r.oom_total,
+            energy_mj: r.total_energy_mj(),
+            mean_smact: r.mean_smact(),
+            mean_mem_used_gb: r.mean_mem_used_gb(),
+            completed: r.completed_count(),
+            total_tasks: r.tasks.len(),
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<42} {:>9} {:>9} {:>9} {:>9} {:>6} {:>9} {:>7} {:>8}",
+            "run", "total(m)", "wait(m)", "exec(m)", "JCT(m)", "#OOM", "E(MJ)", "SMACT", "mem(GB)"
+        )
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>9.2} {:>6.1}% {:>8.1}",
+            self.label,
+            self.trace_total_min,
+            self.avg_waiting_min,
+            self.avg_execution_min,
+            self.avg_jct_min,
+            self.oom_crashes,
+            self.energy_mj,
+            self.mean_smact * 100.0,
+            self.mean_mem_used_gb,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::s(&self.label)),
+            ("trace_total_min", json::num(self.trace_total_min)),
+            ("avg_waiting_min", json::num(self.avg_waiting_min)),
+            ("avg_execution_min", json::num(self.avg_execution_min)),
+            ("avg_jct_min", json::num(self.avg_jct_min)),
+            ("oom_crashes", json::num(self.oom_crashes as f64)),
+            ("energy_mj", json::num(self.energy_mj)),
+            ("mean_smact", json::num(self.mean_smact)),
+            ("mean_mem_used_gb", json::num(self.mean_mem_used_gb)),
+            ("completed", json::num(self.completed as f64)),
+            ("total_tasks", json::num(self.total_tasks as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_from_recorder() {
+        let mut r = Recorder::new(1, 1);
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 60.0);
+        r.on_completion(0, 660.0);
+        r.on_sample(0, 1.0, 660.0, 5.0, 0.5, 200.0);
+        let rep = RunReport::from_recorder("test", &r);
+        assert!((rep.trace_total_min - 11.0).abs() < 1e-9);
+        assert!((rep.avg_waiting_min - 1.0).abs() < 1e-9);
+        assert!((rep.avg_execution_min - 10.0).abs() < 1e-9);
+        assert_eq!(rep.completed, 1);
+        let j = rep.to_json();
+        assert_eq!(j.f64_of("oom_crashes"), 0.0);
+        assert!(!rep.row().is_empty());
+        assert!(!RunReport::header().is_empty());
+    }
+}

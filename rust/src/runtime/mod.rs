@@ -1,0 +1,12 @@
+//! PJRT runtime (S10): load AOT-compiled HLO-text artifacts and execute
+//! them from the Rust hot path — Python is never involved at run time.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API).  Interchange is
+//! HLO *text*: jax ≥ 0.5 emits protos with 64-bit instruction ids that this
+//! XLA rejects; the text parser reassigns ids (see aot.py / DESIGN.md §2).
+
+pub mod pjrt;
+pub mod trainstep;
+
+pub use pjrt::{Executable, Runtime};
+pub use trainstep::LmTrainer;

@@ -1,0 +1,121 @@
+//! PJRT CPU client + compiled-executable wrapper.
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client.  Compile once at startup; executables are
+/// reused for every request (no recompilation on the hot path — DESIGN.md
+/// §Perf).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable {
+            exe,
+            path: path.to_string(),
+        })
+    }
+}
+
+/// A compiled computation. All our AOT graphs are lowered with
+/// `return_tuple=True`, so outputs are always unpacked from a tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Executable {
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with host literals; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("copying result to host")?;
+        lit.to_tuple().context("unpacking output tuple")
+    }
+
+    /// Execute keeping outputs on device (zero host copies between steps) —
+    /// used by the live trainer's hot loop.
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        Ok(result.swap_remove(0))
+    }
+
+    /// `run` over borrowed literals (mixed owned/state argument lists).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("copying result to host")?;
+        lit.to_tuple().context("unpacking output tuple")
+    }
+
+    /// `run_b` over borrowed buffers (mixed owned/state argument lists).
+    pub fn run_b_refs(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        Ok(result.swap_remove(0))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        self.exe.client()
+    }
+}
+
+/// Build a f32 literal of the given shape from host data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from host data.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Argmax over an f32 literal's flattened data.
+pub fn argmax_f32(lit: &xla::Literal, limit: usize) -> Result<usize> {
+    let v = lit.to_vec::<f32>()?;
+    let n = limit.min(v.len());
+    let mut best = 0usize;
+    for i in 1..n {
+        if v[i] > v[best] {
+            best = i;
+        }
+    }
+    Ok(best)
+}

@@ -1,0 +1,128 @@
+//! Live-mode LM trainer (S17): the Rust coordinator actually *training* a
+//! small transformer through PJRT — the end-to-end proof that L3→L2→L1
+//! compose (examples/live_training.rs, EXPERIMENTS.md §E2E).
+//!
+//! Drives `artifacts/lm_init.hlo.txt` + `lm_step.hlo.txt` (exported by
+//! aot.py from livemodel.py).  The parameter/optimizer state stays in
+//! PJRT device buffers between steps; only the scalar loss is copied to
+//! host each step.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::pjrt::{literal_i32, Executable, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct LmManifest {
+    pub n_arrays: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_params: u64,
+}
+
+impl LmManifest {
+    pub fn load(path: &str) -> Result<LmManifest> {
+        let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        Ok(LmManifest {
+            n_arrays: j.f64_of("n_arrays") as usize,
+            batch: cfg.f64_of("batch") as usize,
+            seq_len: cfg.f64_of("seq_len") as usize,
+            vocab: cfg.f64_of("vocab") as usize,
+            n_params: j.f64_of("n_params") as u64,
+        })
+    }
+}
+
+pub struct LmTrainer {
+    step_exe: Executable,
+    pub manifest: LmManifest,
+    /// params ++ m ++ v (3 × n_arrays).  Kept as host literals: PJRT hands
+    /// multi-output results back as ONE tuple buffer, so the state crosses
+    /// the host boundary each step anyway; literals avoid a re-upload pass.
+    state: Vec<xla::Literal>,
+    step: u64,
+    rng: Rng,
+}
+
+impl LmTrainer {
+    /// Load artifacts and run `lm_init` to materialize the initial state.
+    pub fn load(rt: &Runtime, artifacts_dir: &str, seed: u64) -> Result<LmTrainer> {
+        let manifest = LmManifest::load(&format!("{artifacts_dir}/lm_manifest.json"))?;
+        let init_exe = rt.load_hlo(&format!("{artifacts_dir}/lm_init.hlo.txt"))?;
+        let step_exe = rt.load_hlo(&format!("{artifacts_dir}/lm_step.hlo.txt"))?;
+
+        // init takes no inputs and returns (params..., m..., v...)
+        let state = init_exe.run(&[])?;
+        if state.len() != 3 * manifest.n_arrays {
+            return Err(anyhow!(
+                "lm_init returned {} arrays, manifest says {}",
+                state.len(),
+                3 * manifest.n_arrays
+            ));
+        }
+        Ok(LmTrainer {
+            step_exe,
+            manifest,
+            state,
+            step: 0,
+            rng: Rng::new(seed),
+        })
+    }
+
+    /// Synthetic-but-learnable token stream: cyclic ramps with noise — the
+    /// LM must learn `next = (cur + 1) mod cycle`, so the loss curve falls
+    /// well below ln(vocab) within a few hundred steps.
+    pub fn synth_batch(&mut self) -> Vec<i32> {
+        let b = self.manifest.batch;
+        let s = self.manifest.seq_len + 1;
+        let mut out = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let cycle = 8 + (self.rng.range_u64(0, 4) * 8) as i32; // 8..32
+            let start = self.rng.range_u64(0, cycle as u64) as i32;
+            for i in 0..s {
+                let mut tok = (start + i as i32) % cycle;
+                if self.rng.bool(0.02) {
+                    tok = self.rng.range_u64(0, self.manifest.vocab as u64) as i32;
+                }
+                out.push(tok);
+            }
+        }
+        out
+    }
+
+    /// One training step on the given tokens (len = batch × (seq_len+1)).
+    /// Returns the loss.
+    pub fn step_tokens(&mut self, tokens: &[i32]) -> Result<f32> {
+        self.step += 1;
+        let b = self.manifest.batch as i64;
+        let s = self.manifest.seq_len as i64 + 1;
+        assert_eq!(tokens.len() as i64, b * s, "token batch shape");
+
+        let step_lit = xla::Literal::scalar(self.step as f32);
+        let tok_lit = literal_i32(tokens, &[b, s])?;
+
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&step_lit);
+        inputs.push(&tok_lit);
+        let mut outputs = self.step_exe.run_refs(&inputs)?;
+        let loss_lit = outputs.pop().ok_or_else(|| anyhow!("empty step output"))?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.state = outputs;
+        Ok(loss)
+    }
+
+    /// Convenience: one step on a fresh synthetic batch.
+    pub fn step_synthetic(&mut self) -> Result<f32> {
+        let toks = self.synth_batch();
+        self.step_tokens(&toks)
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.step
+    }
+}

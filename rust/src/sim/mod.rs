@@ -1,0 +1,11 @@
+//! Discrete-event simulation engine (S1, DESIGN.md §3).
+//!
+//! Continuous-time processor-sharing semantics with event-driven analytic
+//! integration: between events every running task advances at a constant
+//! speed factor (from the interference model); whenever GPU residency
+//! changes, speeds are recomputed and completion events are re-scheduled.
+//! Stale completions are guarded by per-task versions.
+
+pub mod engine;
+
+pub use engine::{Engine, Event, TaskId};

@@ -1,0 +1,144 @@
+//! Mini property-testing kit (proptest is unavailable offline — DESIGN.md §1).
+//!
+//! `forall` drives a generator through N cases; on failure it attempts a
+//! bounded greedy shrink (re-generating with smaller size hints) and panics
+//! with the seed + minimal counterexample debug string, so failures are
+//! reproducible with `CARMA_PROP_SEED`.
+
+use crate::util::rng::Rng;
+
+/// Size-aware generator: `size` starts small and grows across cases, so
+/// early cases are simple and later ones stress.
+pub trait Gen {
+    type Item: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Item;
+}
+
+impl<T, F> Gen for F
+where
+    T: std::fmt::Debug + Clone,
+    F: Fn(&mut Rng, usize) -> T,
+{
+    type Item = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("CARMA_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config {
+            cases: 64,
+            seed,
+            max_size: 50,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panic on first failure with
+/// a shrunk counterexample.
+pub fn forall_cfg<G, P>(cfg: &Config, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Item) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let input = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // bounded shrink: try progressively smaller sizes with forked rngs
+            let mut best: (G::Item, String) = (input, msg);
+            'shrink: for shrink_size in (1..size).rev() {
+                for attempt in 0..8 {
+                    let mut r2 = Rng::new(cfg.seed ^ (attempt + 1) ^ ((shrink_size as u64) << 32));
+                    let candidate = gen.generate(&mut r2, shrink_size);
+                    if let Err(m) = prop(&candidate) {
+                        best = (candidate, m);
+                        continue 'shrink;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={}, case={}, rerun with CARMA_PROP_SEED={}):\n  input: {:?}\n  error: {}",
+                cfg.seed, case, cfg.seed, best.0, best.1
+            );
+        }
+    }
+}
+
+pub fn forall<G, P>(gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Item) -> Result<(), String>,
+{
+    forall_cfg(&Config::default(), gen, prop)
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = |rng: &mut Rng, size: usize| rng.range_usize(0, size + 1);
+        forall(&gen, |&x| {
+            if x <= 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 50"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        let gen = |rng: &mut Rng, size: usize| rng.range_usize(0, size + 2);
+        forall(&gen, |&x| {
+            if x < 3 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_grow_within_bounds() {
+        let cfg = Config {
+            cases: 10,
+            seed: 1,
+            max_size: 100,
+        };
+        let gen = |_: &mut Rng, size: usize| size;
+        forall_cfg(&cfg, &gen, |&s| {
+            if (1..=100).contains(&s) {
+                Ok(())
+            } else {
+                Err("size out of bounds".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! Infrastructure substrates built in-repo (the offline crate registry only
+//! carries the `xla` crate's dependency closure — DESIGN.md §1).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod units;

@@ -1,0 +1,45 @@
+//! Unit constants + conversions shared across the simulator and memsim.
+
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * MIB;
+
+/// Megabytes used as the allocator's address-space unit (1 MiB granules).
+pub const MIB_PER_GIB: u64 = 1024;
+
+pub fn gb_to_mib(gb: f64) -> u64 {
+    (gb * MIB_PER_GIB as f64).round() as u64
+}
+
+pub fn mib_to_gb(mib: u64) -> f64 {
+    mib as f64 / MIB_PER_GIB as f64
+}
+
+pub fn minutes(m: f64) -> f64 {
+    m * 60.0
+}
+
+pub fn to_minutes(secs: f64) -> f64 {
+    secs / 60.0
+}
+
+/// Joules -> megajoules.
+pub fn to_mj(joules: f64) -> f64 {
+    joules / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_gb_mib() {
+        assert_eq!(gb_to_mib(40.0), 40 * 1024);
+        assert!((mib_to_gb(gb_to_mib(13.57)) - 13.57).abs() < 1e-3);
+    }
+
+    #[test]
+    fn time_units() {
+        assert_eq!(minutes(2.0), 120.0);
+        assert_eq!(to_minutes(90.0), 1.5);
+    }
+}

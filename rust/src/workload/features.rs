@@ -1,0 +1,172 @@
+//! Shared GPUMemNet feature vector (DESIGN.md §6).
+//!
+//! The 16-slot layout is a cross-language contract with
+//! `python/compile/memsim.py::TaskFeatures.to_vec` — the Python side trains
+//! on it, the Rust side serves it (raw; normalization lives inside the
+//! exported model).  `data/memsim_golden.json` pins the agreement.
+
+use std::f64::consts::PI;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Mlp,
+    Cnn,
+    Transformer,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        Some(match s {
+            "mlp" => Arch::Mlp,
+            "cnn" => Arch::Cnn,
+            "transformer" => Arch::Transformer,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Mlp => "mlp",
+            Arch::Cnn => "cnn",
+            Arch::Transformer => "transformer",
+        }
+    }
+}
+
+/// Activation-function sin/cos encoding (paper §3.2): two continuous
+/// features instead of a one-hot. Mirrors memsim.ACTIVATION_ANGLE.
+pub fn activation_encoding(name: &str) -> Option<(f64, f64)> {
+    let angle = match name {
+        "relu" => 0.0,
+        "gelu" => PI / 3.0,
+        "tanh" => 2.0 * PI / 3.0,
+        "sigmoid" => PI,
+        "silu" => 4.0 * PI / 3.0,
+        "leaky_relu" => 5.0 * PI / 3.0,
+        _ => return None,
+    };
+    Some((angle.cos(), angle.sin()))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskFeatures {
+    pub arch: Arch,
+    pub n_linear: f64,
+    pub n_conv: f64,
+    pub n_batchnorm: f64,
+    pub n_dropout: f64,
+    pub params_m: f64,
+    pub acts_m: f64,
+    pub batch_size: f64,
+    pub n_gpus: f64,
+    pub act_cos: f64,
+    pub act_sin: f64,
+    pub input_dim: f64,
+    pub output_dim: f64,
+    pub seq_or_spatial: f64,
+    pub depth_total: f64,
+    pub width_max: f64,
+    pub reserved: f64,
+}
+
+impl TaskFeatures {
+    pub fn zeroed(arch: Arch) -> Self {
+        TaskFeatures {
+            arch,
+            n_linear: 0.0,
+            n_conv: 0.0,
+            n_batchnorm: 0.0,
+            n_dropout: 0.0,
+            params_m: 0.0,
+            acts_m: 0.0,
+            batch_size: 32.0,
+            n_gpus: 1.0,
+            act_cos: 1.0,
+            act_sin: 0.0,
+            input_dim: 0.0,
+            output_dim: 0.0,
+            seq_or_spatial: 0.0,
+            depth_total: 0.0,
+            width_max: 0.0,
+            reserved: 0.0,
+        }
+    }
+
+    /// The wire layout fed to the GPUMemNet HLO executable (f32[1,16]).
+    pub fn to_vec(&self) -> [f32; 16] {
+        [
+            self.n_linear as f32,
+            self.n_conv as f32,
+            self.n_batchnorm as f32,
+            self.n_dropout as f32,
+            self.params_m as f32,
+            self.acts_m as f32,
+            self.batch_size as f32,
+            self.n_gpus as f32,
+            self.act_cos as f32,
+            self.act_sin as f32,
+            self.input_dim as f32,
+            self.output_dim as f32,
+            self.seq_or_spatial as f32,
+            self.depth_total as f32,
+            self.width_max as f32,
+            self.reserved as f32,
+        ]
+    }
+
+    pub fn from_vec(arch: Arch, v: &[f64]) -> Self {
+        assert_eq!(v.len(), 16, "feature vector must have 16 slots");
+        TaskFeatures {
+            arch,
+            n_linear: v[0],
+            n_conv: v[1],
+            n_batchnorm: v[2],
+            n_dropout: v[3],
+            params_m: v[4],
+            acts_m: v[5],
+            batch_size: v[6],
+            n_gpus: v[7],
+            act_cos: v[8],
+            act_sin: v[9],
+            input_dim: v[10],
+            output_dim: v[11],
+            seq_or_spatial: v[12],
+            depth_total: v[13],
+            width_max: v[14],
+            reserved: v[15],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_vec() {
+        let mut f = TaskFeatures::zeroed(Arch::Cnn);
+        f.n_conv = 53.0;
+        f.params_m = 25.6;
+        let v: Vec<f64> = f.to_vec().iter().map(|&x| x as f64).collect();
+        let g = TaskFeatures::from_vec(Arch::Cnn, &v);
+        assert_eq!(g.n_conv, 53.0);
+        assert!((g.params_m - 25.6).abs() < 1e-5); // f32 wire precision
+    }
+
+    #[test]
+    fn activation_angles_match_python() {
+        let (c, s) = activation_encoding("relu").unwrap();
+        assert!((c - 1.0).abs() < 1e-12 && s.abs() < 1e-12);
+        let (c, s) = activation_encoding("gelu").unwrap();
+        assert!((c - 0.5).abs() < 1e-12);
+        assert!((s - (3.0f64).sqrt() / 2.0).abs() < 1e-12);
+        assert!(activation_encoding("swishy").is_none());
+    }
+
+    #[test]
+    fn arch_parse() {
+        assert_eq!(Arch::parse("cnn"), Some(Arch::Cnn));
+        assert_eq!(Arch::parse("transformer"), Some(Arch::Transformer));
+        assert_eq!(Arch::parse("rnn"), None);
+    }
+}

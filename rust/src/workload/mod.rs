@@ -1,0 +1,15 @@
+//! Workload substrate (S6, S7): Table 3 model zoo, task specs, trace
+//! generators, the SLURM-like submission parser, and the Rust mirror of the
+//! memsim ground-truth memory model.
+
+pub mod features;
+pub mod memsim;
+pub mod model_zoo;
+pub mod submission;
+pub mod task;
+pub mod trace;
+
+pub use features::{Arch, TaskFeatures};
+pub use model_zoo::{ModelZoo, ZooEntry};
+pub use task::{TaskSpec, WeightClass};
+pub use trace::{trace_60, trace_90, TraceSpec};

@@ -1,0 +1,184 @@
+//! SLURM-like submission script parser (paper §4.1: "users submit their
+//! training tasks … after describing them in a format similar to SLURM").
+//!
+//! ```text
+//! #!/bin/bash
+//! #CARMA --model resnet50 --dataset imagenet --batch-size 64
+//! #CARMA --gpus 1 --epochs 1
+//! python train.py ...
+//! ```
+//!
+//! The parser extracts the directives, resolves the model against the zoo,
+//! and produces a [`TaskSpec`].  The paper reports a 2.6 ms parse bound;
+//! `benches/estimators.rs` tracks ours.
+
+use crate::sim::TaskId;
+
+use super::model_zoo::ModelZoo;
+use super::task::TaskSpec;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Submission {
+    pub model: String,
+    pub dataset: String,
+    pub batch_size: u32,
+    pub gpus: Option<usize>,
+    pub epochs: Option<u32>,
+}
+
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "submission parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse the `#CARMA` directives of a submission script.
+pub fn parse_script(text: &str) -> Result<Submission, ParseError> {
+    let mut sub = Submission::default();
+    let mut saw_directive = false;
+    for line in text.lines() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("#CARMA") else {
+            continue;
+        };
+        saw_directive = true;
+        let mut it = rest.split_whitespace().peekable();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| ParseError(format!("expected --option, got '{tok}'")))?;
+            let val = it
+                .next()
+                .ok_or_else(|| ParseError(format!("--{key} needs a value")))?;
+            match key {
+                "model" => sub.model = val.to_string(),
+                "dataset" => sub.dataset = val.to_string(),
+                "batch-size" | "bs" => {
+                    sub.batch_size = val
+                        .parse()
+                        .map_err(|_| ParseError(format!("bad batch size '{val}'")))?
+                }
+                "gpus" => {
+                    sub.gpus = Some(
+                        val.parse()
+                            .map_err(|_| ParseError(format!("bad gpu count '{val}'")))?,
+                    )
+                }
+                "epochs" => {
+                    sub.epochs = Some(
+                        val.parse()
+                            .map_err(|_| ParseError(format!("bad epochs '{val}'")))?,
+                    )
+                }
+                other => return Err(ParseError(format!("unknown directive --{other}"))),
+            }
+        }
+    }
+    if !saw_directive {
+        return Err(ParseError("no #CARMA directives found".into()));
+    }
+    if sub.model.is_empty() || sub.dataset.is_empty() || sub.batch_size == 0 {
+        return Err(ParseError(
+            "--model, --dataset and --batch-size are required".into(),
+        ));
+    }
+    Ok(sub)
+}
+
+/// Resolve a parsed submission against the zoo into a schedulable task.
+pub fn resolve(
+    zoo: &ModelZoo,
+    sub: &Submission,
+    id: TaskId,
+    arrival_s: f64,
+) -> Result<TaskSpec, ParseError> {
+    let e = zoo
+        .find(&sub.model, &sub.dataset, sub.batch_size)
+        .ok_or_else(|| {
+            ParseError(format!(
+                "unknown model configuration {}:{} bs{}",
+                sub.model, sub.dataset, sub.batch_size
+            ))
+        })?;
+    let epochs = sub.epochs.unwrap_or(e.epochs[0]);
+    let mut spec = TaskSpec::from_zoo(id, e, epochs, arrival_s);
+    if let Some(g) = sub.gpus {
+        if g != e.n_gpus {
+            return Err(ParseError(format!(
+                "model {} requires {} GPU(s), submission asked for {g}",
+                sub.model, e.n_gpus
+            )));
+        }
+    }
+    spec.arrival_s = arrival_s;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCRIPT: &str = "#!/bin/bash\n\
+        #CARMA --model resnet50 --dataset imagenet --batch-size 64\n\
+        #CARMA --gpus 1 --epochs 1\n\
+        python train.py --data /data/imagenet\n";
+
+    #[test]
+    fn parses_directives() {
+        let s = parse_script(SCRIPT).unwrap();
+        assert_eq!(s.model, "resnet50");
+        assert_eq!(s.dataset, "imagenet");
+        assert_eq!(s.batch_size, 64);
+        assert_eq!(s.gpus, Some(1));
+        assert_eq!(s.epochs, Some(1));
+    }
+
+    #[test]
+    fn resolves_against_zoo() {
+        let zoo = ModelZoo::load();
+        let s = parse_script(SCRIPT).unwrap();
+        let t = resolve(&zoo, &s, 5, 12.0).unwrap();
+        assert_eq!(t.id, 5);
+        assert_eq!(t.mem_gb, 8.54);
+        assert_eq!(t.arrival_s, 12.0);
+    }
+
+    #[test]
+    fn missing_required_fields() {
+        assert!(parse_script("#CARMA --model resnet50\n").is_err());
+        assert!(parse_script("python train.py\n").is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse_script("#CARMA --model x --dataset y --batch-size 8 --turbo yes\n").is_err());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let zoo = ModelZoo::load();
+        let s = parse_script("#CARMA --model llama --dataset web --batch-size 1\n").unwrap();
+        assert!(resolve(&zoo, &s, 0, 0.0).is_err());
+    }
+
+    #[test]
+    fn gpu_mismatch_rejected() {
+        let zoo = ModelZoo::load();
+        let s = parse_script("#CARMA --model gpt2_large --dataset wikitext2 --batch-size 8 --gpus 1\n")
+            .unwrap();
+        assert!(resolve(&zoo, &s, 0, 0.0).is_err()); // gpt2_large needs 2
+    }
+
+    #[test]
+    fn defaults_epochs_from_zoo() {
+        let zoo = ModelZoo::load();
+        let s = parse_script("#CARMA --model resnet18 --dataset cifar100 --batch-size 32\n").unwrap();
+        let t = resolve(&zoo, &s, 0, 0.0).unwrap();
+        assert!((t.work_s - 0.33 * 60.0 * 20.0).abs() < 1e-9); // first epochs option
+    }
+}

@@ -1,0 +1,98 @@
+//! Task specification: one deep-learning training job as CARMA sees it.
+
+use crate::sim::TaskId;
+
+use super::features::TaskFeatures;
+use super::model_zoo::ZooEntry;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightClass {
+    Light,
+    Medium,
+    Heavy,
+}
+
+impl WeightClass {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "light" => WeightClass::Light,
+            "medium" => WeightClass::Medium,
+            "heavy" => WeightClass::Heavy,
+            _ => return None,
+        })
+    }
+}
+
+/// A submitted training task (trace row / submission script).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub name: String,
+    pub dataset: String,
+    pub weight_class: WeightClass,
+    pub n_gpus: usize,
+    /// True peak GPU memory per GPU (paper Table 3) — the oracle/ground
+    /// truth the simulator enforces. The coordinator must NOT read this
+    /// except through the Oracle estimator.
+    pub mem_gb: f64,
+    /// Exclusive-execution work in seconds (= epoch time × epochs).
+    pub work_s: f64,
+    /// Solo SM-activity / memory-bandwidth demands.
+    pub smact: f64,
+    pub membw: f64,
+    /// What the parser extracts for the estimators.
+    pub features: TaskFeatures,
+    /// Submission time (seconds into the trace).
+    pub arrival_s: f64,
+}
+
+impl TaskSpec {
+    /// Build from a zoo entry + chosen epoch count + arrival time.
+    pub fn from_zoo(id: TaskId, e: &ZooEntry, epochs: u32, arrival_s: f64) -> TaskSpec {
+        TaskSpec {
+            id,
+            name: e.name.clone(),
+            dataset: e.dataset.clone(),
+            weight_class: WeightClass::parse(&e.weight_class).expect("zoo weight class"),
+            n_gpus: e.n_gpus,
+            mem_gb: e.mem_gb,
+            work_s: e.epoch_time_min * 60.0 * epochs as f64,
+            smact: e.smact,
+            membw: e.membw,
+            features: e.features,
+            arrival_s,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("#{} {}:{} bs{}", self.id, self.name, self.dataset, self.features.batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::model_zoo::ModelZoo;
+
+    #[test]
+    fn from_zoo_computes_work() {
+        let zoo = ModelZoo::load();
+        let e = zoo.find("resnet18", "cifar100", 32).unwrap();
+        let t = TaskSpec::from_zoo(3, e, 20, 100.0);
+        assert_eq!(t.id, 3);
+        assert!((t.work_s - 0.33 * 60.0 * 20.0).abs() < 1e-9);
+        assert_eq!(t.weight_class, WeightClass::Light);
+        assert_eq!(t.arrival_s, 100.0);
+        assert_eq!(t.mem_gb, 1.96);
+    }
+
+    #[test]
+    fn heavy_transformer_work() {
+        let zoo = ModelZoo::load();
+        let e = zoo.find("xlnet_base", "wikitext2", 8).unwrap();
+        let t = TaskSpec::from_zoo(0, e, 8, 0.0);
+        // 8.95 min/epoch × 8 epochs ≈ 71.6 min
+        assert!((t.work_s / 60.0 - 71.6).abs() < 0.1);
+        assert_eq!(t.n_gpus, 2);
+    }
+}

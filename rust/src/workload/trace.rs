@@ -1,0 +1,167 @@
+//! Trace generators (paper §5.1.2).
+//!
+//! The paper models its traces on the Philly trace [30] trimmed to one
+//! server, with model types drawn from Table 3 following the execution-time
+//! distribution of [41].  We mirror the published composition:
+//!
+//! * **90-task trace** — 65 % light / 27 % medium / 8 % heavy: benefits
+//!   easily from collocation;
+//! * **60-task trace** — 83 % medium / 17 % heavy: the collocation
+//!   stress-test.
+//!
+//! Arrivals are bursty (Philly-like): geometric burst sizes at exponential
+//! gaps, fully deterministic from the seed.
+
+use crate::util::rng::Rng;
+
+use super::model_zoo::ModelZoo;
+use super::task::TaskSpec;
+
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TraceSpec {
+    pub fn total_work_s(&self) -> f64 {
+        self.tasks.iter().map(|t| t.work_s).sum()
+    }
+
+    pub fn makespan_lower_bound_s(&self, n_gpus: usize) -> f64 {
+        // perfect packing bound, ignoring memory: total gpu-seconds / gpus
+        let gpu_s: f64 = self.tasks.iter().map(|t| t.work_s * t.n_gpus as f64).sum();
+        gpu_s / n_gpus as f64
+    }
+}
+
+/// The 90-task trace (paper §5.1.2): mostly light models.
+pub fn trace_90(zoo: &ModelZoo, seed: u64) -> TraceSpec {
+    // 65 % / 27 % / 8 % of 90 -> 59 / 24 / 7; Philly-like bursts at a mean
+    // gap that keeps the server busy but not hopelessly backlogged
+    compose(zoo, "trace-90", &[("light", 59), ("medium", 24), ("heavy", 7)], 240.0, seed)
+}
+
+/// The 60-task trace: heavier mix, collocation stress-test.
+pub fn trace_60(zoo: &ModelZoo, seed: u64) -> TraceSpec {
+    // 83 % / 17 % of 60 -> 50 / 10
+    compose(zoo, "trace-60", &[("medium", 50), ("heavy", 10)], 300.0, seed)
+}
+
+fn compose(
+    zoo: &ModelZoo,
+    name: &str,
+    counts: &[(&str, usize)],
+    mean_gap_s: f64,
+    seed: u64,
+) -> TraceSpec {
+    let mut rng = Rng::new(seed ^ 0xCA12_AA00);
+    let mut picks = Vec::new();
+    for &(class, n) in counts {
+        let pool = zoo.by_class(class);
+        assert!(!pool.is_empty(), "no zoo entries of class {class}");
+        for _ in 0..n {
+            let e = *rng.choice(&pool);
+            let epochs = *rng.choice(&e.epochs);
+            picks.push((e.clone(), epochs));
+        }
+    }
+    rng.shuffle(&mut picks);
+
+    // bursty arrivals: geometric burst sizes, exponential inter-burst gaps
+    let mut tasks = Vec::with_capacity(picks.len());
+    let mut t = 0.0f64;
+    let mut burst_left = 0usize;
+    for (id, (e, epochs)) in picks.into_iter().enumerate() {
+        if burst_left == 0 {
+            t += rng.exponential(mean_gap_s);
+            // geometric(0.45): mostly 1-3 tasks per burst
+            burst_left = 1;
+            while burst_left < 4 && rng.bool(0.45) {
+                burst_left += 1;
+            }
+        }
+        burst_left -= 1;
+        tasks.push(TaskSpec::from_zoo(id, &e, epochs, t));
+    }
+    TraceSpec {
+        name: name.to_string(),
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::task::WeightClass;
+
+    fn zoo() -> ModelZoo {
+        ModelZoo::load()
+    }
+
+    fn class_counts(t: &TraceSpec) -> (usize, usize, usize) {
+        let l = t.tasks.iter().filter(|t| t.weight_class == WeightClass::Light).count();
+        let m = t.tasks.iter().filter(|t| t.weight_class == WeightClass::Medium).count();
+        let h = t.tasks.iter().filter(|t| t.weight_class == WeightClass::Heavy).count();
+        (l, m, h)
+    }
+
+    #[test]
+    fn trace_90_composition() {
+        let t = trace_90(&zoo(), 42);
+        assert_eq!(t.tasks.len(), 90);
+        assert_eq!(class_counts(&t), (59, 24, 7));
+    }
+
+    #[test]
+    fn trace_60_composition() {
+        let t = trace_60(&zoo(), 42);
+        assert_eq!(t.tasks.len(), 60);
+        assert_eq!(class_counts(&t), (0, 50, 10));
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bursty() {
+        let t = trace_90(&zoo(), 7);
+        let arr: Vec<f64> = t.tasks.iter().map(|x| x.arrival_s).collect();
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        // bursts: some identical timestamps must exist
+        let bursts = arr.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(bursts > 5, "expected bursty arrivals, got {bursts} ties");
+        // spread across a realistic submission window (> 1 h)
+        assert!(arr.last().unwrap() - arr[0] > 3600.0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = trace_60(&zoo(), 9);
+        let b = trace_60(&zoo(), 9);
+        assert_eq!(
+            a.tasks.iter().map(|t| (t.name.clone(), t.arrival_s as u64)).collect::<Vec<_>>(),
+            b.tasks.iter().map(|t| (t.name.clone(), t.arrival_s as u64)).collect::<Vec<_>>()
+        );
+        let c = trace_60(&zoo(), 10);
+        assert_ne!(
+            a.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>(),
+            c.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn trace_60_is_heavier_per_task() {
+        let z = zoo();
+        let t60 = trace_60(&z, 42);
+        let t90 = trace_90(&z, 42);
+        let avg60 = t60.total_work_s() / 60.0;
+        let avg90 = t90.total_work_s() / 90.0;
+        assert!(avg60 > 1.5 * avg90, "60-task avg {avg60}s vs 90-task {avg90}s");
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let t = trace_90(&zoo(), 1);
+        for (i, task) in t.tasks.iter().enumerate() {
+            assert_eq!(task.id, i);
+        }
+    }
+}

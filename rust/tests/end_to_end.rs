@@ -1,0 +1,257 @@
+//! Integration tests: whole-simulation invariants across policies, traces
+//! and failure injection, plus property tests over random mini-traces.
+
+use carma::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::run_trace;
+use carma::estimators;
+use carma::testkit;
+use carma::util::rng::Rng;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::task::TaskSpec;
+use carma::workload::trace::{trace_60, trace_90, TraceSpec};
+
+fn cfg(policy: PolicyKind, colloc: CollocationMode, est: EstimatorKind) -> CarmaConfig {
+    CarmaConfig {
+        policy,
+        colloc,
+        estimator: est,
+        ..Default::default()
+    }
+}
+
+fn run(c: CarmaConfig, trace: &TraceSpec) -> carma::metrics::report::RunReport {
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_trace(c, est, trace, "test").report
+}
+
+#[test]
+fn every_policy_completes_both_traces() {
+    let zoo = ModelZoo::load();
+    for trace in [trace_90(&zoo, 7), trace_60(&zoo, 7)] {
+        for policy in [
+            PolicyKind::Exclusive,
+            PolicyKind::RoundRobin,
+            PolicyKind::Magm,
+            PolicyKind::Lug,
+            PolicyKind::Mug,
+        ] {
+            let r = run(cfg(policy, CollocationMode::Mps, EstimatorKind::Oracle), &trace);
+            assert_eq!(
+                r.completed, r.total_tasks,
+                "{policy:?} on {} left tasks unfinished",
+                trace.name
+            );
+            assert!(r.trace_total_min > 0.0);
+            assert!(r.energy_mj > 0.0);
+        }
+    }
+}
+
+#[test]
+fn every_collocation_mode_completes() {
+    let zoo = ModelZoo::load();
+    let trace = trace_90(&zoo, 11);
+    for colloc in [CollocationMode::Streams, CollocationMode::Mps] {
+        let r = run(cfg(PolicyKind::Magm, colloc, EstimatorKind::Oracle), &trace);
+        assert_eq!(r.completed, 90, "{colloc:?}");
+    }
+    // MIG with 2 half instances per GPU
+    let mut c = cfg(PolicyKind::Magm, CollocationMode::Mig, EstimatorKind::Oracle);
+    c.server.mig_slices = vec![0.75, 0.25];
+    let r = run(c, &trace);
+    assert_eq!(r.completed, 90, "MIG");
+    assert_eq!(r.oom_crashes, 0, "MIG instances are isolated + demand-checked");
+}
+
+#[test]
+fn timing_identities_hold() {
+    let zoo = ModelZoo::load();
+    let trace = trace_60(&zoo, 3);
+    let r = run(cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle), &trace);
+    // JCT = waiting + execution (for completed tasks, averages add)
+    assert!(
+        (r.avg_jct_min - (r.avg_waiting_min + r.avg_execution_min)).abs() < 0.51,
+        "JCT {} != wait {} + exec {}",
+        r.avg_jct_min,
+        r.avg_waiting_min,
+        r.avg_execution_min
+    );
+    // the observation window bounds waiting from below
+    assert!(r.avg_waiting_min >= 1.0);
+    // execution can't beat the exclusive work time
+    let min_work: f64 = trace.tasks.iter().map(|t| t.work_s).sum::<f64>() / 60.0 / 60.0;
+    assert!(r.avg_execution_min >= min_work / 60.0);
+}
+
+#[test]
+fn recovery_restores_every_crash() {
+    let zoo = ModelZoo::load();
+    let trace = trace_60(&zoo, 13);
+    // worst case: blind RR, no preconditions -> many OOMs, all recovered
+    let mut c = cfg(PolicyKind::RoundRobin, CollocationMode::Mps, EstimatorKind::None);
+    c.smact_cap = None;
+    let r = run(c, &trace);
+    assert!(r.oom_crashes > 0, "blind RR should crash tasks");
+    assert_eq!(r.completed, 60, "recovery must complete them all");
+}
+
+#[test]
+fn estimator_reduces_oom_vs_blind() {
+    let zoo = ModelZoo::load();
+    let trace = trace_60(&zoo, 42);
+    let blind = run(
+        {
+            let mut c = cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::None);
+            c.smact_cap = None;
+            c
+        },
+        &trace,
+    );
+    let oracle = run(cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle), &trace);
+    assert!(
+        oracle.oom_crashes < blind.oom_crashes,
+        "oracle {} !< blind {}",
+        oracle.oom_crashes,
+        blind.oom_crashes
+    );
+}
+
+#[test]
+fn collocation_beats_exclusive_on_both_traces() {
+    let zoo = ModelZoo::load();
+    for (trace, min_gain) in [(trace_90(&zoo, 42), 0.15), (trace_60(&zoo, 42), 0.10)] {
+        let excl = run(
+            cfg(PolicyKind::Exclusive, CollocationMode::Mps, EstimatorKind::None),
+            &trace,
+        );
+        let mut c = cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle);
+        c.safety_margin_gb = 2.0;
+        let magm = run(c, &trace);
+        assert!(
+            magm.trace_total_min < excl.trace_total_min * (1.0 - min_gain),
+            "{}: MAGM {:.0}m vs Exclusive {:.0}m",
+            trace.name,
+            magm.trace_total_min,
+            excl.trace_total_min
+        );
+        assert!(magm.mean_smact > excl.mean_smact, "{}", trace.name);
+    }
+}
+
+#[test]
+fn smact_cap_lowers_utilization_ceiling() {
+    let zoo = ModelZoo::load();
+    let trace = trace_90(&zoo, 5);
+    let tight = run(
+        {
+            let mut c = cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle);
+            c.smact_cap = Some(0.40);
+            c
+        },
+        &trace,
+    );
+    let loose = run(
+        {
+            let mut c = cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle);
+            c.smact_cap = Some(0.95);
+            c
+        },
+        &trace,
+    );
+    assert!(
+        tight.mean_smact < loose.mean_smact + 1e-9,
+        "tight {} vs loose {}",
+        tight.mean_smact,
+        loose.mean_smact
+    );
+}
+
+// -- property tests over random mini-traces ---------------------------------
+
+fn random_trace(rng: &mut Rng, size: usize) -> TraceSpec {
+    let zoo = ModelZoo::load();
+    let n = 3 + size % 20;
+    let mut t = 0.0;
+    let tasks = (0..n)
+        .map(|id| {
+            let e = zoo.entries[rng.range_usize(0, zoo.entries.len())].clone();
+            let epochs = *rng.choice(&e.epochs);
+            t += rng.exponential(120.0);
+            TaskSpec::from_zoo(id, &e, epochs, t)
+        })
+        .collect();
+    TraceSpec {
+        name: format!("prop-{n}"),
+        tasks,
+    }
+}
+
+#[test]
+fn prop_all_tasks_complete_under_any_policy() {
+    let gen = |rng: &mut Rng, size: usize| {
+        let trace = random_trace(rng, size);
+        let policy = *rng.choice(&[
+            PolicyKind::Exclusive,
+            PolicyKind::RoundRobin,
+            PolicyKind::Magm,
+            PolicyKind::Lug,
+            PolicyKind::Mug,
+        ]);
+        let est = *rng.choice(&[EstimatorKind::None, EstimatorKind::Oracle, EstimatorKind::Horus]);
+        let colloc = *rng.choice(&[CollocationMode::Streams, CollocationMode::Mps]);
+        let smact_cap = if rng.bool(0.5) { Some(rng.range_f64(0.3, 0.95)) } else { None };
+        (trace.tasks.len(), policy, est, colloc, smact_cap, rng.next_u64())
+    };
+    testkit::forall_cfg(
+        &testkit::Config {
+            cases: 24,
+            ..Default::default()
+        },
+        &gen,
+        |&(n, policy, est, colloc, smact_cap, seed)| {
+            let mut rng = Rng::new(seed);
+            let trace = random_trace(&mut rng, n);
+            let mut c = cfg(policy, colloc, est);
+            c.smact_cap = smact_cap;
+            let r = run(c, &trace);
+            if r.completed != r.total_tasks {
+                return Err(format!(
+                    "{policy:?}/{est:?}/{colloc:?}: {}/{} completed",
+                    r.completed, r.total_tasks
+                ));
+            }
+            if r.avg_waiting_min < 0.0 || r.avg_execution_min < 0.0 {
+                return Err("negative timing".into());
+            }
+            if r.mean_smact < 0.0 || r.mean_smact > 1.0 {
+                return Err(format!("smact {} out of range", r.mean_smact));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_oracle_with_margin_never_underestimates_admission() {
+    // with the oracle + 2GB margin, OOMs can only come from extreme
+    // fragmentation; over random traces they must be rare (≈0)
+    let gen = |rng: &mut Rng, size: usize| (size, rng.next_u64());
+    testkit::forall_cfg(
+        &testkit::Config {
+            cases: 12,
+            ..Default::default()
+        },
+        &gen,
+        |&(size, seed)| {
+            let mut rng = Rng::new(seed);
+            let trace = random_trace(&mut rng, size);
+            let mut c = cfg(PolicyKind::Magm, CollocationMode::Mps, EstimatorKind::Oracle);
+            c.safety_margin_gb = 2.0;
+            let r = run(c, &trace);
+            if r.oom_crashes > 0 {
+                return Err(format!("{} OOMs under oracle+margin", r.oom_crashes));
+            }
+            Ok(())
+        },
+    );
+}
