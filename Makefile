@@ -1,0 +1,24 @@
+# Data + artifact regeneration. The checked-in data/ files are enough for
+# the default (surrogate) build; `artifacts` needs JAX and enables the
+# PJRT-served estimator path (DESIGN.md §1–§2).
+
+.PHONY: all data zoo golden artifacts ci
+
+all: data
+
+data: zoo golden
+
+zoo:
+	cd python && python3 -m compile.zoo
+
+golden:
+	cd python && python3 -c "import os; from compile import analysis; \
+	os.makedirs(analysis.data_dir(), exist_ok=True); \
+	analysis.memsim_golden(os.path.join(analysis.data_dir(), 'memsim_golden.json')); \
+	print('data/memsim_golden.json refreshed')"
+
+artifacts:
+	cd python && python3 -m compile.aot
+
+ci:
+	./ci.sh

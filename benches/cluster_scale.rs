@@ -1,0 +1,59 @@
+//! Engine throughput as the cluster grows: simulated events per wall-clock
+//! second for 1→8 servers under the default MAGM+MPS setup (DESIGN.md §Perf:
+//! the coordinator must never be the bottleneck; this is the baseline the
+//! ROADMAP's sharded-engine work has to beat).
+
+use std::time::Instant;
+
+use carma::bench::black_box;
+use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::run_trace;
+use carma::estimators;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::trace_cluster;
+
+fn main() {
+    let zoo = ModelZoo::load();
+    println!(
+        "{:<18} {:>6} {:>7} {:>12} {:>10} {:>12} {:>12}",
+        "cluster", "gpus", "tasks", "sim-events", "wall(s)", "events/s", "tasks/s"
+    );
+    for servers in [1usize, 2, 4, 8] {
+        let mut cfg = CarmaConfig {
+            policy: PolicyKind::Magm,
+            estimator: EstimatorKind::Oracle,
+            safety_margin_gb: 2.0,
+            ..Default::default()
+        };
+        cfg.cluster = ClusterConfig::homogeneous(servers, 4, 40.0);
+        let gpus = cfg.cluster.total_gpus();
+        let n_tasks = 8 * gpus;
+        let trace = trace_cluster(&zoo, n_tasks, gpus, 42);
+
+        // one warm-up + three measured runs (whole-trace granularity: a run
+        // is seconds, not microseconds — the Bencher's calibration loop
+        // would only add noise here)
+        let est = estimators::build(cfg.estimator, "artifacts").unwrap();
+        black_box(run_trace(cfg.clone(), est, &trace, "warmup").report.completed);
+        let mut events = 0u64;
+        let t0 = Instant::now();
+        const RUNS: u32 = 3;
+        for _ in 0..RUNS {
+            let est = estimators::build(cfg.estimator, "artifacts").unwrap();
+            let out = run_trace(cfg.clone(), est, &trace, "bench");
+            assert_eq!(out.report.completed, n_tasks);
+            events += out.events;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<18} {:>6} {:>7} {:>12} {:>10.2} {:>12.0} {:>12.1}",
+            format!("{servers}x4-server"),
+            gpus,
+            n_tasks,
+            events / RUNS as u64,
+            wall / RUNS as f64,
+            events as f64 / wall,
+            (RUNS as usize * n_tasks) as f64 / wall,
+        );
+    }
+}

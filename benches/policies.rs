@@ -6,7 +6,7 @@ use carma::bench::{black_box, Bencher};
 use carma::cluster::allocator::SegmentAllocator;
 use carma::config::schema::PolicyKind;
 use carma::coordinator::monitor::Monitor;
-use carma::coordinator::policy::{self, GpuView, MappingRequest, Preconditions};
+use carma::coordinator::policy::{self, GpuView, MappingRequest, Preconditions, ServerView};
 use carma::coordinator::queue::TaskQueues;
 use carma::util::rng::Rng;
 
@@ -15,6 +15,7 @@ fn views(n: usize) -> Vec<GpuView> {
     (0..n)
         .map(|id| GpuView {
             id,
+            server: 0,
             free_gb: rng.range_f64(0.0, 40.0),
             smact_window: rng.f64(),
             n_tasks: rng.range_usize(0, 4),
@@ -47,6 +48,40 @@ fn main() {
         };
         b.bench(&format!("select_gpus/{}", policy.name()), || {
             black_box(policy::select_gpus(policy, &v, req, pre, &mut rr));
+        })
+        .report();
+    }
+
+    println!("\n== two-level cluster selection (8 servers × 4 GPUs) ==");
+    let servers: Vec<ServerView> = (0..8)
+        .map(|sid| ServerView {
+            id: sid,
+            power_w: 600.0,
+            power_cap_w: Some(1400.0),
+            gpus: views(4)
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut v)| {
+                    v.id = sid * 4 + i;
+                    v.server = sid;
+                    v
+                })
+                .collect(),
+        })
+        .collect();
+    for policy in [PolicyKind::Magm, PolicyKind::Lug, PolicyKind::RoundRobin] {
+        let mut rr = 0;
+        let req = MappingRequest {
+            n_gpus: 1,
+            demand_gb: Some(8.0),
+            exclusive: false,
+        };
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: Some(5.0),
+        };
+        b.bench(&format!("select_two_level/{}", policy.name()), || {
+            black_box(policy::select_two_level(policy, &servers, req, pre, &mut rr));
         })
         .report();
     }

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tier-1 tests, and a cluster-scale smoke run
+# that doubles as the determinism acceptance check (DESIGN.md §3/§8).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n==== %s ====\n' "$*"; }
+
+step "cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt unavailable — skipping (install rustfmt for full CI)"
+fi
+
+step "cargo clippy -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    # -A: style lints the existing codebase idiomatically trips (builder-less
+    # config mutation, 7-arg recorder hook); correctness lints stay -D
+    cargo clippy --all-targets -- -D warnings \
+        -A clippy::field-reassign-with-default \
+        -A clippy::too-many-arguments \
+        -A clippy::needless-range-loop
+else
+    echo "clippy unavailable — skipping (install clippy for full CI)"
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q (tier-1)"
+cargo test -q
+
+step "cluster-scale smoke: 8x4 servers, 256 tasks, identical seeded reports"
+BIN=target/release/carma
+SMOKE_ARGS=(run --servers 8 --gpus-per-server 4 --estimator oracle --margin 2 --seed 7)
+A="$("$BIN" "${SMOKE_ARGS[@]}")"
+B="$("$BIN" "${SMOKE_ARGS[@]}")"
+if [ "$A" != "$B" ]; then
+    echo "DETERMINISM FAILURE: two identical seeded runs diverged" >&2
+    diff <(printf '%s\n' "$A") <(printf '%s\n' "$B") >&2 || true
+    exit 1
+fi
+printf '%s\n' "$A" | tail -n 4
+echo "smoke OK: identical makespan/energy report across both runs"
+
+echo
+echo "CI green."

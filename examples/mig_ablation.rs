@@ -40,7 +40,9 @@ fn main() -> Result<(), String> {
             safety_margin_gb: 2.0,
             ..Default::default()
         };
-        cfg.server.mig_slices = mig;
+        for server in &mut cfg.cluster.servers {
+            server.mig_slices = mig.clone();
+        }
         let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
         let label = format!("{name}: {}", run_label(&cfg, est.name()));
         let out = run_trace(cfg, est, &trace, &label);

@@ -2,7 +2,8 @@
 //! default setup (MAGM + GPUMemNet + SMACT<=80% + MPS, paper §4.4) place
 //! them on the simulated 4×A100 server.
 //!
-//! Run with artifacts built (`make artifacts`):
+//! Works out of the box (GPUMemNet surrogate); with `make artifacts` and
+//! `--features pjrt` the estimates come from the AOT classifier instead:
 //! ```
 //! cargo run --release --example quickstart
 //! ```
@@ -49,10 +50,11 @@ fn main() -> Result<(), String> {
         tasks,
     };
 
-    // GPUMemNet runs through PJRT — estimates are produced by the AOT
-    // compiled JAX+Pallas classifier, not by Python
+    // GPUMemNet estimates come from the AOT-compiled JAX+Pallas classifier
+    // through PJRT when artifacts are built (`--features pjrt`), or from the
+    // bit-deterministic classifier surrogate otherwise — never from Python
     let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
-    println!("\nestimator: {} (served via PJRT CPU)", est.name());
+    println!("\nestimator: {}", est.name());
     for t in &trace.tasks {
         if let Some(e) = est.estimate_gb(t) {
             println!("  {:<42} estimated {e:>5.1} GB (actual {:>5.1})", t.label(), t.mem_gb);

@@ -69,6 +69,11 @@ impl Gpu {
         mib_to_gb(self.alloc.largest_hole())
     }
 
+    /// Total HBM capacity of this GPU (GB).
+    pub fn capacity_gb(&self) -> f64 {
+        mib_to_gb(self.alloc.capacity())
+    }
+
     pub fn n_tasks(&self) -> usize {
         self.resident.len()
     }
@@ -157,7 +162,9 @@ impl Gpu {
     }
 }
 
-/// The simulated server: N GPUs (DGX Station A100: 4).
+/// The simulated server: N GPUs (DGX Station A100: 4). In a cluster the
+/// GPUs carry *global* ids (see `cluster::topology`, which owns the
+/// id-offset bookkeeping).
 #[derive(Debug, Clone)]
 pub struct Server {
     pub gpus: Vec<Gpu>,
@@ -165,9 +172,14 @@ pub struct Server {
 
 impl Server {
     pub fn new(cfg: &ServerConfig) -> Self {
+        Self::with_gpu_offset(cfg, 0)
+    }
+
+    /// Build with globally numbered GPUs: ids `offset..offset + n_gpus`.
+    pub fn with_gpu_offset(cfg: &ServerConfig, offset: usize) -> Self {
         Server {
             gpus: (0..cfg.n_gpus)
-                .map(|i| Gpu::new(i, cfg.mem_gb, cfg.mig_slices.clone()))
+                .map(|i| Gpu::new(offset + i, cfg.mem_gb, cfg.mig_slices.clone()))
                 .collect(),
         }
     }

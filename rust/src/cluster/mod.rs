@@ -1,13 +1,15 @@
-//! Simulated DGX Station A100 substrate (S2–S4, DESIGN.md §1):
-//! GPU devices with a fragmentation-capable segment allocator, the
+//! Simulated cluster substrate (S2–S4, DESIGN.md §1, §8): N servers of
+//! A100 GPUs with a fragmentation-capable segment allocator, the
 //! per-collocation-mode interference model, and the power/energy model.
 
 pub mod allocator;
 pub mod gpu;
 pub mod interference;
 pub mod power;
+pub mod topology;
 
 pub use allocator::{SegId, SegmentAllocator};
 pub use gpu::{Gpu, ResidentTask, Server};
 pub use interference::speed_factors;
 pub use power::gpu_power_w;
+pub use topology::{Cluster, ClusterTopology, ServerSpec};

@@ -1,0 +1,265 @@
+//! Cluster topology (DESIGN.md §8): N heterogeneous servers, globally
+//! numbered GPUs.
+//!
+//! The substrate generalizes the paper's single DGX Station to a cluster:
+//! every GPU carries a *global* id (server 0's GPUs first, then server 1's,
+//! …), so the coordinator, monitor and recorder keep indexing by one flat id
+//! while mapping decisions gain a server dimension (two-level mapping,
+//! `coordinator::policy::select_two_level`). Multi-GPU tasks are always
+//! placed within one server — cross-server data parallelism would cross the
+//! NVLink boundary the paper's task model assumes away.
+
+use crate::config::schema::{ClusterConfig, ServerConfig};
+
+use super::gpu::{Gpu, Server};
+
+/// Static description of one server in the cluster.
+#[derive(Debug, Clone)]
+pub struct ServerSpec {
+    pub id: usize,
+    /// Global id of this server's first GPU.
+    pub gpu_offset: usize,
+    pub cfg: ServerConfig,
+    /// Power envelope (W) shared by every server (from `ClusterConfig`).
+    pub power_cap_w: Option<f64>,
+}
+
+impl ServerSpec {
+    pub fn n_gpus(&self) -> usize {
+        self.cfg.n_gpus
+    }
+
+    /// Does this server own global GPU id `g`?
+    pub fn owns_gpu(&self, g: usize) -> bool {
+        g >= self.gpu_offset && g < self.gpu_offset + self.cfg.n_gpus
+    }
+}
+
+/// Immutable cluster shape derived from [`ClusterConfig`].
+///
+/// ```
+/// use carma::config::schema::ClusterConfig;
+/// use carma::cluster::topology::ClusterTopology;
+///
+/// let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(8, 4, 40.0));
+/// assert_eq!(topo.n_servers(), 8);
+/// assert_eq!(topo.total_gpus(), 32);
+/// // GPU 13 lives on server 3 (global numbering: server 0 owns GPUs 0..4)
+/// assert_eq!(topo.server_of_gpu(13), 3);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ClusterTopology {
+    pub servers: Vec<ServerSpec>,
+    total_gpus: usize,
+}
+
+impl ClusterTopology {
+    pub fn from_config(cfg: &ClusterConfig) -> ClusterTopology {
+        let mut servers = Vec::with_capacity(cfg.servers.len());
+        let mut offset = 0;
+        for (id, s) in cfg.servers.iter().enumerate() {
+            servers.push(ServerSpec {
+                id,
+                gpu_offset: offset,
+                cfg: s.clone(),
+                power_cap_w: cfg.power_cap_w,
+            });
+            offset += s.n_gpus;
+        }
+        ClusterTopology {
+            servers,
+            total_gpus: offset,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.total_gpus
+    }
+
+    /// Server index owning global GPU id `g`. Panics on out-of-range ids —
+    /// those indicate a coordinator bug, not a recoverable condition.
+    pub fn server_of_gpu(&self, g: usize) -> usize {
+        assert!(g < self.total_gpus, "gpu {g} outside cluster ({} GPUs)", self.total_gpus);
+        // clusters are small (≤ hundreds of servers); linear scan beats a
+        // binary search for the sizes we simulate and stays trivially correct
+        self.servers
+            .iter()
+            .position(|s| s.owns_gpu(g))
+            .expect("offsets cover every gpu id")
+    }
+
+    /// Largest per-GPU memory on any server.
+    pub fn max_server_mem_gb(&self) -> f64 {
+        self.servers.iter().map(|s| s.cfg.mem_gb).fold(0.0, f64::max)
+    }
+
+    /// Static scheduling ceilings — `(max GPUs on one server, max memory one
+    /// schedulable target offers)` — over servers that can ever admit work.
+    /// A server whose idle draw (`idle_w × n_gpus`) already meets its power
+    /// envelope is permanently filtered by the two-level mapper, so it must
+    /// not count toward capacity: a task that only fits there would wait
+    /// forever instead of failing fast.
+    pub fn admissible_ceilings(&self, idle_w: f64) -> (usize, f64) {
+        let mut max_gpus = 0usize;
+        let mut max_gb = 0.0f64;
+        for s in &self.servers {
+            let idle_floor = idle_w * s.cfg.n_gpus as f64;
+            if s.power_cap_w.is_some_and(|cap| idle_floor >= cap) {
+                continue;
+            }
+            max_gpus = max_gpus.max(s.cfg.n_gpus);
+            max_gb = max_gb.max(s.cfg.max_target_gb());
+        }
+        (max_gpus, max_gb)
+    }
+}
+
+/// The live cluster: one [`Server`] of [`Gpu`]s per [`ServerSpec`], GPUs
+/// globally numbered.
+///
+/// ```
+/// use carma::config::schema::ClusterConfig;
+/// use carma::cluster::topology::{Cluster, ClusterTopology};
+///
+/// let cluster = Cluster::new(ClusterTopology::from_config(
+///     &ClusterConfig::homogeneous(2, 4, 40.0),
+/// ));
+/// assert_eq!(cluster.n_gpus(), 8);
+/// // ids are global: server 1's first GPU is id 4
+/// assert_eq!(cluster.servers[1].gpus[0].id, 4);
+/// assert_eq!(cluster.gpu(6).id, 6);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub topo: ClusterTopology,
+    pub servers: Vec<Server>,
+}
+
+impl Cluster {
+    pub fn new(topo: ClusterTopology) -> Cluster {
+        let servers = topo
+            .servers
+            .iter()
+            .map(|s| Server::with_gpu_offset(&s.cfg, s.gpu_offset))
+            .collect();
+        Cluster { topo, servers }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.topo.total_gpus()
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// GPU by global id.
+    pub fn gpu(&self, g: usize) -> &Gpu {
+        let s = self.topo.server_of_gpu(g);
+        let srv = &self.servers[s];
+        &srv.gpus[g - self.topo.servers[s].gpu_offset]
+    }
+
+    pub fn gpu_mut(&mut self, g: usize) -> &mut Gpu {
+        let s = self.topo.server_of_gpu(g);
+        let off = self.topo.servers[s].gpu_offset;
+        &mut self.servers[s].gpus[g - off]
+    }
+
+    /// All GPUs in global-id order.
+    pub fn iter_gpus(&self) -> impl Iterator<Item = &Gpu> {
+        self.servers.iter().flat_map(|s| s.gpus.iter())
+    }
+
+    /// Total live allocator segments across the cluster (debug/metrics).
+    pub fn total_live_segments(&self) -> usize {
+        self.servers.iter().map(|s| s.total_live_segments()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ClusterConfig;
+
+    #[test]
+    fn homogeneous_numbering() {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(3, 4, 40.0));
+        assert_eq!(topo.total_gpus(), 12);
+        assert_eq!(topo.server_of_gpu(0), 0);
+        assert_eq!(topo.server_of_gpu(3), 0);
+        assert_eq!(topo.server_of_gpu(4), 1);
+        assert_eq!(topo.server_of_gpu(11), 2);
+        assert_eq!(topo.servers[2].gpu_offset, 8);
+    }
+
+    #[test]
+    fn heterogeneous_numbering() {
+        let mut cfg = ClusterConfig::homogeneous(2, 4, 40.0);
+        cfg.servers[0].n_gpus = 2;
+        cfg.servers[1].mem_gb = 80.0;
+        let topo = ClusterTopology::from_config(&cfg);
+        assert_eq!(topo.total_gpus(), 6);
+        assert_eq!(topo.server_of_gpu(1), 0);
+        assert_eq!(topo.server_of_gpu(2), 1);
+        assert_eq!(topo.max_server_mem_gb(), 80.0);
+
+        let cluster = Cluster::new(topo);
+        assert_eq!(cluster.gpu(2).id, 2);
+        assert!((cluster.gpu(2).free_gb() - 80.0).abs() < 1e-9);
+        assert!((cluster.gpu(1).free_gb() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside cluster")]
+    fn out_of_range_gpu_panics() {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        topo.server_of_gpu(4);
+    }
+
+    #[test]
+    fn mig_capacity() {
+        let mut cfg = ClusterConfig::homogeneous(2, 4, 40.0);
+        cfg.servers[1].mig_slices = vec![0.5, 0.25, 0.25];
+        let topo = ClusterTopology::from_config(&cfg);
+        assert_eq!(topo.admissible_ceilings(52.0), (4, 40.0)); // server 0 whole GPU
+        cfg.servers[0].mig_slices = vec![0.5, 0.5];
+        let topo = ClusterTopology::from_config(&cfg);
+        assert_eq!(topo.admissible_ceilings(52.0), (4, 20.0));
+    }
+
+    #[test]
+    fn power_capped_servers_excluded_from_ceilings() {
+        // a big server whose idle draw meets the envelope can never admit —
+        // it must not count toward the scheduling ceilings
+        let mut cfg = ClusterConfig::homogeneous(2, 2, 40.0);
+        cfg.servers[1] = crate::config::schema::ServerConfig {
+            n_gpus: 8,
+            mem_gb: 80.0,
+            mig_slices: vec![],
+        };
+        cfg.power_cap_w = Some(300.0); // idle floors: 104 W (ok), 416 W (never)
+        let topo = ClusterTopology::from_config(&cfg);
+        assert_eq!(topo.admissible_ceilings(52.0), (2, 40.0));
+        // without a cap both count
+        cfg.power_cap_w = None;
+        let topo = ClusterTopology::from_config(&cfg);
+        assert_eq!(topo.admissible_ceilings(52.0), (8, 80.0));
+    }
+
+    #[test]
+    fn gpu_mut_reaches_the_same_device() {
+        let mut cluster = Cluster::new(ClusterTopology::from_config(
+            &ClusterConfig::homogeneous(2, 2, 40.0),
+        ));
+        let seg = cluster.gpu_mut(3).alloc.alloc(1024).unwrap();
+        assert!(cluster.gpu(3).free_gb() < 40.0);
+        assert!((cluster.gpu(2).free_gb() - 40.0).abs() < 1e-9);
+        cluster.gpu_mut(3).alloc.free(seg);
+        assert!((cluster.gpu(3).free_gb() - 40.0).abs() < 1e-9);
+    }
+}

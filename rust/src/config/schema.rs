@@ -110,13 +110,83 @@ impl EstimatorKind {
     }
 }
 
-/// Simulated server (DGX Station A100 defaults, paper Table 2).
-#[derive(Debug, Clone)]
+/// One simulated server (DGX Station A100 defaults, paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     pub n_gpus: usize,
     pub mem_gb: f64,
     /// MIG instance compute fractions per GPU (empty = MIG off).
     pub mig_slices: Vec<f64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_gpus: 4,
+            mem_gb: 40.0,
+            mig_slices: vec![],
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Largest memory a single schedulable target on this server offers: a
+    /// whole GPU, or the biggest configured MIG instance when MIG is on.
+    /// Static — independent of occupancy.
+    pub fn max_target_gb(&self) -> f64 {
+        if self.mig_slices.is_empty() {
+            self.mem_gb
+        } else {
+            self.mem_gb * self.mig_slices.iter().copied().fold(0.0f64, f64::max)
+        }
+    }
+}
+
+/// The simulated cluster: one [`ServerConfig`] per server (heterogeneous
+/// mixes allowed), plus the per-server power envelope used by the
+/// two-level mapping's server filter (DESIGN.md §8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub servers: Vec<ServerConfig>,
+    /// Per-server power envelope in watts. A server whose instantaneous
+    /// draw reaches the envelope is filtered out of mapping decisions
+    /// (no new work until it cools down). `None` = unlimited.
+    pub power_cap_w: Option<f64>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            servers: vec![ServerConfig::default()],
+            power_cap_w: None,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// N identical servers of `gpus_per_server` GPUs each.
+    pub fn homogeneous(n_servers: usize, gpus_per_server: usize, mem_gb: f64) -> Self {
+        ClusterConfig {
+            servers: vec![
+                ServerConfig {
+                    n_gpus: gpus_per_server,
+                    mem_gb,
+                    mig_slices: vec![],
+                };
+                n_servers
+            ],
+            power_cap_w: None,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.servers.iter().map(|s| s.n_gpus).sum()
+    }
+
 }
 
 /// A100 power model (calibrated to Table 7 — DESIGN.md §7).
@@ -187,7 +257,7 @@ impl Default for MonitorConfig {
 #[derive(Debug, Clone)]
 pub struct CarmaConfig {
     pub seed: u64,
-    pub server: ServerConfig,
+    pub cluster: ClusterConfig,
     pub policy: PolicyKind,
     pub colloc: CollocationMode,
     pub estimator: EstimatorKind,
@@ -207,11 +277,7 @@ impl Default for CarmaConfig {
     fn default() -> Self {
         CarmaConfig {
             seed: 42,
-            server: ServerConfig {
-                n_gpus: 4,
-                mem_gb: 40.0,
-                mig_slices: vec![],
-            },
+            cluster: ClusterConfig::default(),
             policy: PolicyKind::Magm,
             colloc: CollocationMode::Mps,
             estimator: EstimatorKind::GpuMemNet,
@@ -242,14 +308,98 @@ impl CarmaConfig {
         if let Some(v) = doc.get("seed").and_then(|v| v.as_i64()) {
             self.seed = v as u64;
         }
-        if let Some(v) = doc.get("server.n_gpus").and_then(|v| v.as_i64()) {
-            self.server.n_gpus = v as usize;
-        }
-        if let Some(v) = f64_of("server.mem_gb") {
-            self.server.mem_gb = v;
-        }
-        if let Some(toml::TomlValue::Arr(a)) = doc.get("server.mig_slices") {
-            self.server.mig_slices = a.iter().filter_map(|v| v.as_f64()).collect();
+        // substrate: `[server]` sets the per-server baseline (back-compat),
+        // `[cluster]` replicates it across N servers; `[cluster.serverK]`
+        // overrides individual servers for heterogeneous mixes.
+        let touches_substrate = doc
+            .keys()
+            .any(|k| k.starts_with("server.") || k.starts_with("cluster."));
+        if touches_substrate {
+            // counts go through a range check before any allocation — a
+            // negative i64 would wrap to an astronomical usize and abort on
+            // the vec! below instead of reporting a config error
+            let count_of = |key: &str, max: i64| -> Result<Option<usize>, String> {
+                match doc.get(key).and_then(|v| v.as_i64()) {
+                    None => Ok(None),
+                    Some(v) if (1..=max).contains(&v) => Ok(Some(v as usize)),
+                    Some(v) => Err(format!("{key} must be in 1..={max}, got {v}")),
+                }
+            };
+            let mut base = self.cluster.servers.first().cloned().unwrap_or_default();
+            if let Some(v) = count_of("server.n_gpus", 1024)? {
+                base.n_gpus = v;
+            }
+            if let Some(v) = f64_of("server.mem_gb") {
+                base.mem_gb = v;
+            }
+            if let Some(toml::TomlValue::Arr(a)) = doc.get("server.mig_slices") {
+                base.mig_slices = a.iter().filter_map(|v| v.as_f64()).collect();
+            }
+            if let Some(v) = count_of("cluster.gpus_per_server", 1024)? {
+                base.n_gpus = v;
+            }
+            if let Some(v) = f64_of("cluster.mem_gb") {
+                base.mem_gb = v;
+            }
+            if let Some(toml::TomlValue::Arr(a)) = doc.get("cluster.mig_slices") {
+                base.mig_slices = a.iter().filter_map(|v| v.as_f64()).collect();
+            }
+            let n_servers = count_of("cluster.servers", 10_000)?
+                .unwrap_or_else(|| self.cluster.servers.len().max(1));
+            self.cluster.servers = vec![base; n_servers];
+            for (i, srv) in self.cluster.servers.iter_mut().enumerate() {
+                if let Some(v) = count_of(&format!("cluster.server{i}.n_gpus"), 1024)? {
+                    srv.n_gpus = v;
+                }
+                if let Some(v) = f64_of(&format!("cluster.server{i}.mem_gb")) {
+                    srv.mem_gb = v;
+                }
+                if let Some(toml::TomlValue::Arr(a)) =
+                    doc.get(&format!("cluster.server{i}.mig_slices"))
+                {
+                    srv.mig_slices = a.iter().filter_map(|v| v.as_f64()).collect();
+                }
+            }
+            if let Some(v) = f64_of("cluster.power_cap_w") {
+                self.cluster.power_cap_w = if v <= 0.0 { None } else { Some(v) };
+            }
+            // reject [cluster.serverK] sections that name no existing server —
+            // silently dropping one would run a different cluster than the
+            // user configured (e.g. a forgotten `servers = N`)
+            for key in doc.keys() {
+                let Some(rest) = key.strip_prefix("cluster.server") else {
+                    continue;
+                };
+                let digits: String =
+                    rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if digits.is_empty() {
+                    if key == "cluster.servers" {
+                        continue; // the count key, not a section
+                    }
+                    // e.g. [cluster.serverA] or [cluster.server_1] — a typo'd
+                    // section must not be silently dropped
+                    return Err(format!("unrecognized cluster section in '{key}'"));
+                }
+                if !rest[digits.len()..].starts_with('.') {
+                    return Err(format!("unrecognized cluster section in '{key}'"));
+                }
+                let idx: usize = digits
+                    .parse()
+                    .map_err(|_| format!("bad server index in '{key}'"))?;
+                if digits != idx.to_string() {
+                    // the application loop looks up the canonical form
+                    // (`server5`, not `server05`) — reject rather than drop
+                    return Err(format!(
+                        "server index in '{key}' must not have leading zeros"
+                    ));
+                }
+                if idx >= n_servers {
+                    return Err(format!(
+                        "[cluster.server{idx}] is out of range — the cluster has \
+                         {n_servers} server(s) (set cluster.servers)"
+                    ));
+                }
+            }
         }
         if let Some(v) = doc.get("policy.kind").and_then(|v| v.as_str()) {
             self.policy = PolicyKind::parse(v).ok_or_else(|| format!("unknown policy '{v}'"))?;
@@ -308,11 +458,43 @@ impl CarmaConfig {
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if self.server.n_gpus == 0 {
-            return Err("server.n_gpus must be >= 1".into());
+        if self.cluster.servers.is_empty() {
+            return Err("cluster must have at least one server".into());
         }
-        if self.server.mem_gb <= 0.0 {
-            return Err("server.mem_gb must be positive".into());
+        for (i, s) in self.cluster.servers.iter().enumerate() {
+            if s.n_gpus == 0 {
+                return Err(format!("server {i}: n_gpus must be >= 1"));
+            }
+            if s.mem_gb <= 0.0 {
+                return Err(format!("server {i}: mem_gb must be positive"));
+            }
+            let frac: f64 = s.mig_slices.iter().sum();
+            if !s.mig_slices.is_empty() && frac > 1.0 + 1e-9 {
+                return Err(format!("server {i}: mig_slices must sum to <= 1"));
+            }
+        }
+        if let Some(cap) = self.cluster.power_cap_w {
+            if cap <= 0.0 {
+                return Err("cluster.power_cap_w must be positive".into());
+            }
+            // the mapper livelocks only if EVERY server sits at/above the
+            // envelope forever; idle draw is the floor a server always
+            // returns to, so the cap must exceed at least one server's floor
+            // (a cap below an individual server's floor just excludes that
+            // server permanently, which is a legal — if odd — configuration)
+            let min_idle_floor = self
+                .cluster
+                .servers
+                .iter()
+                .map(|s| self.power.idle_w * s.n_gpus as f64)
+                .fold(f64::INFINITY, f64::min);
+            if cap <= min_idle_floor {
+                return Err(format!(
+                    "cluster.power_cap_w ({cap} W) must exceed every server's idle \
+                     draw (smallest server idles at {min_idle_floor} W) — no server \
+                     could ever admit work"
+                ));
+            }
         }
         if let Some(c) = self.smact_cap {
             if !(0.0..=1.0).contains(&c) {
@@ -321,10 +503,6 @@ impl CarmaConfig {
         }
         if self.monitor.window_s < self.monitor.sample_period_s {
             return Err("monitor.window_s must be >= sample period".into());
-        }
-        let frac: f64 = self.server.mig_slices.iter().sum();
-        if !self.server.mig_slices.is_empty() && frac > 1.0 + 1e-9 {
-            return Err("server.mig_slices must sum to <= 1".into());
         }
         Ok(())
     }
@@ -342,8 +520,10 @@ mod tests {
         assert_eq!(c.colloc, CollocationMode::Mps);
         assert_eq!(c.smact_cap, Some(0.80));
         assert_eq!(c.min_free_gb, None);
-        assert_eq!(c.server.n_gpus, 4);
-        assert_eq!(c.server.mem_gb, 40.0);
+        // one DGX Station A100 (paper Table 2)
+        assert_eq!(c.cluster.n_servers(), 1);
+        assert_eq!(c.cluster.total_gpus(), 4);
+        assert_eq!(c.cluster.servers[0].mem_gb, 40.0);
     }
 
     #[test]
@@ -358,19 +538,70 @@ mod tests {
         assert_eq!(c.estimator, EstimatorKind::None);
         assert_eq!(c.smact_cap, Some(0.75));
         assert_eq!(c.min_free_gb, Some(5.0));
-        assert_eq!(c.server.n_gpus, 2);
+        assert_eq!(c.cluster.servers[0].n_gpus, 2);
+        assert_eq!(c.cluster.total_gpus(), 2);
+    }
+
+    #[test]
+    fn cluster_section_scales_servers() {
+        let doc = toml::parse(
+            "[cluster]\nservers = 8\ngpus_per_server = 4\nmem_gb = 40.0\npower_cap_w = 1200.0\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.cluster.n_servers(), 8);
+        assert_eq!(c.cluster.total_gpus(), 32);
+        assert_eq!(c.cluster.power_cap_w, Some(1200.0));
+    }
+
+    #[test]
+    fn cluster_per_server_overrides_make_heterogeneous() {
+        let doc = toml::parse(
+            "[cluster]\nservers = 3\ngpus_per_server = 4\n\
+             [cluster.server1]\nn_gpus = 8\nmem_gb = 80.0\n\
+             [cluster.server2]\nmig_slices = [0.5, 0.5]\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.cluster.servers[0].n_gpus, 4);
+        assert_eq!(c.cluster.servers[1].n_gpus, 8);
+        assert_eq!(c.cluster.servers[1].mem_gb, 80.0);
+        assert_eq!(c.cluster.servers[2].mig_slices, vec![0.5, 0.5]);
+        assert_eq!(c.cluster.total_gpus(), 16);
+        // capacity aggregation lives on ClusterTopology; the per-server rule:
+        assert_eq!(c.cluster.servers[1].max_target_gb(), 80.0);
+        assert_eq!(c.cluster.servers[2].max_target_gb(), 20.0);
+    }
+
+    #[test]
+    fn out_of_range_server_override_rejected() {
+        // only 1 server configured -> [cluster.server1] must not be dropped
+        let doc = toml::parse("[cluster.server1]\nmem_gb = 80.0\n").unwrap();
+        let mut c = CarmaConfig::default();
+        assert!(c.apply(&doc).is_err());
+        // in range once the count says so
+        let doc =
+            toml::parse("[cluster]\nservers = 2\n[cluster.server1]\nmem_gb = 80.0\n").unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.cluster.servers[1].mem_gb, 80.0);
     }
 
     #[test]
     fn validation_rejects_bad() {
         let mut c = CarmaConfig::default();
-        c.server.n_gpus = 0;
+        c.cluster.servers[0].n_gpus = 0;
         assert!(c.validate().is_err());
         let mut c = CarmaConfig::default();
         c.smact_cap = Some(1.5);
         assert!(c.validate().is_err());
         let mut c = CarmaConfig::default();
-        c.server.mig_slices = vec![0.6, 0.6];
+        c.cluster.servers[0].mig_slices = vec![0.6, 0.6];
+        assert!(c.validate().is_err());
+        let mut c = CarmaConfig::default();
+        c.cluster.servers.clear();
         assert!(c.validate().is_err());
     }
 

@@ -1,14 +1,16 @@
 //! The CARMA simulation driver: end-to-end task management (paper §4.1,
-//! Fig. 7) over the simulated DGX substrate.
+//! Fig. 7) over the simulated cluster substrate (DESIGN.md §8).
 //!
 //! Event flow per task: arrival → primary queue → selection (recovery queue
-//! first) → 1-minute observation window → policy mapping (preconditions +
-//! estimator) → dispatch → staircase memory ramp (may OOM → recovery) →
-//! processor-sharing execution under the interference model → completion.
+//! first) → 1-minute observation window → two-level mapping (server filter →
+//! preconditions + estimator → per-GPU policy) → dispatch → staircase memory
+//! ramp (may OOM → recovery) → processor-sharing execution under the
+//! interference model → completion.
 
-use crate::cluster::gpu::{ResidentTask, Server};
+use crate::cluster::gpu::ResidentTask;
 use crate::cluster::power::gpu_power_w;
-use crate::config::schema::{CarmaConfig, CollocationMode, PolicyKind};
+use crate::cluster::topology::{Cluster, ClusterTopology};
+use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
 use crate::estimators::MemoryEstimator;
 use crate::metrics::recorder::Recorder;
 use crate::metrics::report::RunReport;
@@ -19,7 +21,7 @@ use crate::workload::task::TaskSpec;
 use crate::workload::trace::TraceSpec;
 
 use super::monitor::Monitor;
-use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions};
+use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions, ServerView};
 use super::queue::TaskQueues;
 
 /// Seconds between memory-ramp stages (training warm-up allocations).
@@ -74,12 +76,14 @@ struct TaskRun {
 pub struct RunOutcome {
     pub report: RunReport,
     pub recorder: Recorder,
+    /// Simulation events processed (throughput accounting, `benches/`).
+    pub events: u64,
 }
 
 pub struct Carma {
     pub cfg: CarmaConfig,
     engine: Engine,
-    server: Server,
+    cluster: Cluster,
     tasks: Vec<TaskRun>,
     queues: TaskQueues,
     selected: Option<TaskId>,
@@ -94,10 +98,10 @@ pub struct Carma {
 
 impl Carma {
     pub fn new(cfg: CarmaConfig, estimator: Box<dyn MemoryEstimator>, trace: &TraceSpec) -> Carma {
-        let server = Server::new(&cfg.server);
+        let cluster = Cluster::new(ClusterTopology::from_config(&cfg.cluster));
         let n = trace.tasks.len();
-        let monitor = Monitor::new(cfg.server.n_gpus, cfg.monitor.window_s);
-        let recorder = Recorder::new(n, cfg.server.n_gpus);
+        let monitor = Monitor::new(cluster.n_gpus(), cfg.monitor.window_s);
+        let recorder = Recorder::new(n, cluster.n_gpus());
         let tasks = trace
             .tasks
             .iter()
@@ -119,8 +123,8 @@ impl Carma {
             .collect();
         Carma {
             cfg,
-            engine: Engine::new(),
-            server,
+            engine: Engine::with_capacity(2 * n + 16),
+            cluster,
             tasks,
             queues: TaskQueues::new(),
             selected: None,
@@ -171,6 +175,7 @@ impl Carma {
         RunOutcome {
             report: RunReport::from_recorder(label, &self.recorder),
             recorder: self.recorder,
+            events: self.engine.events_processed(),
         }
     }
 
@@ -223,22 +228,31 @@ impl Carma {
     /// Try to map the selected task; on success dispatch + select next.
     fn attempt_map(&mut self) {
         let Some(id) = self.selected else { return };
-        let views = self.gpu_views();
+        let views = self.server_views();
         let spec = &self.tasks[id].spec;
 
-        // estimator + safety margin; estimates at/above capacity degrade to
-        // exclusive placement (the estimator "takes the collocation
-        // potential away", §5.4)
-        let mut demand = self
-            .estimator
-            .estimate_gb(spec)
-            .map(|e| e + self.cfg.safety_margin_gb);
+        // estimator + safety margin; estimates at/above every server's GPU
+        // capacity degrade to exclusive placement (the estimator "takes the
+        // collocation potential away", §5.4)
+        let max_mem = self.cluster.topo.max_server_mem_gb();
+        let raw_est = self.estimator.estimate_gb(spec);
+        let mut demand = raw_est.map(|e| e + self.cfg.safety_margin_gb);
         let mut force_exclusive = self.tasks[id].in_recovery;
         if let Some(d) = demand {
-            if d >= self.cfg.server.mem_gb {
-                demand = Some(self.cfg.server.mem_gb);
+            if d >= max_mem {
+                demand = Some(max_mem);
                 force_exclusive = true;
             }
+        }
+        // GPUMemNet's class grid tops out at the 40 GB training capacity
+        // (DESIGN.md §5); on servers with more memory a *saturated* raw
+        // estimate means "at least this much", not a point estimate —
+        // degrade to exclusive instead of collocating on it (margin excluded:
+        // a 39 GB point estimate + 2 GB margin is not saturation)
+        if self.cfg.estimator == EstimatorKind::GpuMemNet
+            && raw_est.is_some_and(|e| e >= memsim::GPU_CAPACITY_GB)
+        {
+            force_exclusive = true;
         }
 
         let req = MappingRequest {
@@ -250,30 +264,27 @@ impl Carma {
             smact_cap: self.cfg.smact_cap,
             min_free_gb: self.cfg.min_free_gb,
         };
-        // permanently unschedulable? (e.g. demand larger than every MIG
-        // instance) — fail fast instead of retrying forever. Capacity is
-        // STATIC (largest configured instance / whole GPU), independent of
-        // current occupancy.
-        let max_capacity = if self.cfg.server.mig_slices.is_empty() {
-            self.cfg.server.mem_gb
-        } else {
-            self.cfg.server.mem_gb
-                * self
-                    .cfg
-                    .server
-                    .mig_slices
-                    .iter()
-                    .copied()
-                    .fold(0.0f64, f64::max)
-        };
+        // permanently unschedulable? — fail fast instead of retrying forever.
+        // Two static checks, independent of current occupancy: memory demand
+        // larger than every schedulable target (largest configured MIG
+        // instance / whole GPU), and GPU count larger than any single server
+        // owns (multi-GPU tasks never span servers, so no amount of waiting
+        // frees up a big-enough host). Both ceilings exclude servers whose
+        // idle power draw already meets the envelope — those never admit.
+        let (max_gpus, max_capacity) =
+            self.cluster.topo.admissible_ceilings(self.cfg.power.idle_w);
         if let Some(d) = demand {
             if d > max_capacity + 1e-9 {
                 self.fail_task(id, "demand exceeds every schedulable target");
                 return;
             }
         }
+        if req.n_gpus > max_gpus {
+            self.fail_task(id, "needs more GPUs than any admissible server owns");
+            return;
+        }
 
-        match policy::select_gpus(self.cfg.policy, &views, req, pre, &mut self.rr_cursor) {
+        match policy::select_two_level(self.cfg.policy, &views, req, pre, &mut self.rr_cursor) {
             Some(p) => {
                 self.tasks[id].admitted_est_gb = demand;
                 self.dispatch(id, p);
@@ -301,7 +312,8 @@ impl Carma {
     /// task admitted with an estimate, the part of the estimate its ramp
     /// has not claimed yet.
     fn pending_reserved_gb(&self, gpu: usize) -> f64 {
-        self.server.gpus[gpu]
+        self.cluster
+            .gpu(gpu)
             .resident
             .iter()
             .map(|r| {
@@ -318,22 +330,55 @@ impl Carma {
             .sum()
     }
 
-    fn gpu_views(&self) -> Vec<GpuView> {
-        self.server
-            .gpus
+    /// Build the two-level mapping input: per-server power draw + per-GPU
+    /// monitor snapshots (global GPU ids).
+    fn server_views(&self) -> Vec<ServerView> {
+        let now = self.engine.now();
+        self.cluster
+            .servers
             .iter()
-            .map(|g| {
-                let inst = g.free_mig_instance();
-                GpuView {
-                    id: g.id,
-                    free_gb: (g.free_gb() - self.pending_reserved_gb(g.id)).max(0.0),
-                    smact_window: self.monitor.windowed_smact(g.id),
-                    n_tasks: g.n_tasks(),
-                    mig_free_instance: inst,
-                    mig_instance_mem_gb: inst
-                        .map(|i| self.cfg.server.mem_gb * g.mig_slices[i])
-                        .unwrap_or(0.0),
-                    mig_enabled: g.mig_enabled(),
+            .zip(&self.cluster.topo.servers)
+            .map(|(srv, spec)| {
+                let gpus: Vec<GpuView> = srv
+                    .gpus
+                    .iter()
+                    .map(|g| {
+                        let inst = g.free_mig_instance();
+                        GpuView {
+                            id: g.id,
+                            server: spec.id,
+                            free_gb: (g.free_gb() - self.pending_reserved_gb(g.id)).max(0.0),
+                            smact_window: self.monitor.windowed_smact(g.id),
+                            n_tasks: g.n_tasks(),
+                            mig_free_instance: inst,
+                            mig_instance_mem_gb: inst
+                                .map(|i| g.capacity_gb() * g.mig_slices[i])
+                                .unwrap_or(0.0),
+                            mig_enabled: g.mig_enabled(),
+                        }
+                    })
+                    .collect();
+                // instantaneous draw is only consulted by the power-envelope
+                // filter; skip the O(GPUs × residents) walk when no cap is set
+                let power_w: f64 = if spec.power_cap_w.is_some() {
+                    srv.gpus
+                        .iter()
+                        .map(|g| {
+                            gpu_power_w(
+                                &self.cfg.power,
+                                g.n_tasks(),
+                                g.effective_smact(self.cfg.colloc, now),
+                            )
+                        })
+                        .sum()
+                } else {
+                    0.0
+                };
+                ServerView {
+                    id: spec.id,
+                    power_w,
+                    power_cap_w: spec.power_cap_w,
+                    gpus,
                 }
             })
             .collect()
@@ -368,7 +413,7 @@ impl Carma {
         task.last_progress_t = now;
 
         for (k, &g) in p.gpus.iter().enumerate() {
-            self.server.gpus[g].add_resident(ResidentTask {
+            self.cluster.gpu_mut(g).add_resident(ResidentTask {
                 task: id,
                 smact,
                 membw,
@@ -399,7 +444,7 @@ impl Carma {
         for (k, &g) in gpus.iter().enumerate() {
             // page-backed scatter allocation: a slab may span a few holes,
             // but shredded-beyond-repair free memory still OOMs (§4.2)
-            match self.server.gpus[g].alloc.alloc_scatter(seg_mib, 4) {
+            match self.cluster.gpu_mut(g).alloc.alloc_scatter(seg_mib, 4) {
                 Some(segs) => self.tasks[id].segs[k].extend(segs),
                 None => {
                     self.oom(id);
@@ -449,9 +494,9 @@ impl Carma {
         let segs = std::mem::take(&mut self.tasks[id].segs);
         for (k, &g) in gpus.iter().enumerate() {
             for seg in &segs[k] {
-                self.server.gpus[g].alloc.free(*seg);
+                self.cluster.gpu_mut(g).alloc.free(*seg);
             }
-            self.server.gpus[g].remove_resident(id);
+            self.cluster.gpu_mut(g).remove_resident(id);
         }
         self.tasks[id].gpus.clear();
         self.tasks[id].instances.clear();
@@ -490,7 +535,7 @@ impl Carma {
         use std::collections::BTreeSet;
         let mut affected: BTreeSet<TaskId> = BTreeSet::new();
         for &g in gpus {
-            for r in &self.server.gpus[g].resident {
+            for r in &self.cluster.gpu(g).resident {
                 affected.insert(r.task);
             }
         }
@@ -503,7 +548,7 @@ impl Carma {
         }
         let mut more: BTreeSet<TaskId> = BTreeSet::new();
         for &g in &all_gpus {
-            for r in &self.server.gpus[g].resident {
+            for r in &self.cluster.gpu(g).resident {
                 more.insert(r.task);
             }
         }
@@ -512,7 +557,7 @@ impl Carma {
         let mut table: std::collections::BTreeMap<(usize, TaskId), f64> =
             std::collections::BTreeMap::new();
         for &g in &all_gpus {
-            for (tid, f) in self.server.gpus[g].speeds(self.cfg.colloc, &self.cfg.interference) {
+            for (tid, f) in self.cluster.gpu(g).speeds(self.cfg.colloc, &self.cfg.interference) {
                 table.insert((g, tid), f);
             }
         }
@@ -543,8 +588,8 @@ impl Carma {
     fn on_monitor_sample(&mut self) {
         let now = self.engine.now();
         let dt = self.cfg.monitor.sample_period_s;
-        for g in 0..self.server.gpus.len() {
-            let gpu = &self.server.gpus[g];
+        for g in 0..self.cluster.n_gpus() {
+            let gpu = self.cluster.gpu(g);
             let smact = gpu.effective_smact(self.cfg.colloc, now);
             let mem = gpu.used_gb();
             let power = gpu_power_w(&self.cfg.power, gpu.n_tasks(), smact);
@@ -560,6 +605,10 @@ impl Carma {
 
     pub fn queue_len(&self) -> usize {
         self.queues.len()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
     }
 }
 
@@ -686,6 +735,31 @@ mod tests {
         let out = run_trace(c, e, &trace, "w");
         // every task waits at least the 60s observation window
         assert!(out.report.avg_waiting_min >= 1.0);
+    }
+
+    #[test]
+    fn cluster_run_completes_and_spreads_load() {
+        use crate::config::schema::ClusterConfig;
+        use crate::workload::trace::trace_cluster;
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 96, 8, 1);
+        let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+        c.safety_margin_gb = 2.0;
+        let out = run_trace(c, e, &trace, "cluster-2x4");
+        assert_eq!(out.report.completed, 96);
+        assert_eq!(out.report.oom_crashes, 0);
+        assert!(out.events > 96, "events counter must track the run");
+        // both servers' GPUs must have done real work: the recorder holds 8
+        // per-GPU energy integrals and idle-only GPUs sit at idle power
+        assert_eq!(out.recorder.energy_j.len(), 8);
+        let idle_only: f64 = out.recorder.energy_j.iter().cloned().fold(f64::INFINITY, f64::min);
+        let busiest: f64 = out.recorder.energy_j.iter().cloned().fold(0.0, f64::max);
+        assert!(busiest > idle_only, "load must spread beyond one GPU");
+        assert!(
+            out.recorder.energy_j[4..].iter().sum::<f64>() > 0.0,
+            "server 1's GPUs never sampled"
+        );
     }
 
     #[test]

@@ -12,5 +12,5 @@ pub mod queue;
 
 pub use carma::{Carma, RunOutcome};
 pub use monitor::Monitor;
-pub use policy::{GpuView, MappingRequest};
+pub use policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 pub use queue::TaskQueues;

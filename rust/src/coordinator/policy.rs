@@ -1,4 +1,7 @@
-//! Task→GPU mapping policies + preconditions (paper §4.3).
+//! Task→GPU mapping policies + preconditions (paper §4.3), generalized to
+//! the cluster's two-level decision (DESIGN.md §8): a *server filter*
+//! (power envelope, enough GPUs for the request) followed by the per-GPU
+//! policy over the surviving servers' devices.
 //!
 //! Pure selection logic over monitor snapshots, so every policy is unit- and
 //! property-testable without the simulator.
@@ -8,7 +11,10 @@ use crate::config::schema::PolicyKind;
 /// What the mapper knows about one GPU at decision time.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuView {
+    /// Global GPU id (cluster-wide numbering, `cluster::topology`).
     pub id: usize,
+    /// Server this GPU belongs to.
+    pub server: usize,
     /// Free memory as the monitor reports it (total, NOT largest hole —
     /// fragmentation is invisible to the monitor, paper §4.2).
     pub free_gb: f64,
@@ -20,6 +26,34 @@ pub struct GpuView {
     /// MIG: memory capacity of that free instance.
     pub mig_instance_mem_gb: f64,
     pub mig_enabled: bool,
+}
+
+/// What the mapper knows about one server at decision time (the first level
+/// of the two-level mapping).
+#[derive(Debug, Clone)]
+pub struct ServerView {
+    pub id: usize,
+    /// Instantaneous power draw across the server's GPUs (W).
+    pub power_w: f64,
+    /// Power envelope (W); a server drawing at/above it is filtered out.
+    pub power_cap_w: Option<f64>,
+    /// Per-GPU views, global ids.
+    pub gpus: Vec<GpuView>,
+}
+
+impl ServerView {
+    /// First-level filter: can this server accept the request at all?
+    /// Multi-GPU tasks never span servers, so a server must own enough
+    /// GPUs; a server at its power envelope takes no new work.
+    pub fn admits(&self, req: MappingRequest) -> bool {
+        if self.gpus.len() < req.n_gpus {
+            return false;
+        }
+        match self.power_cap_w {
+            Some(cap) => self.power_w < cap,
+            None => true,
+        }
+    }
 }
 
 /// One mapping request.
@@ -69,15 +103,19 @@ pub fn select_gpus(
 
     match policy {
         PolicyKind::RoundRobin => {
-            // cyclic order starting after the last assignment
-            let n = views.len();
+            // cyclic order over the ids actually present, starting at the
+            // cursor — ids need not be contiguous or 0-based (per-server
+            // slices carry global ids)
+            let mut ids: Vec<usize> = views.iter().map(|v| v.id).collect();
+            ids.sort_unstable();
+            let start = ids.iter().position(|&id| id >= *rr_cursor).unwrap_or(0);
             let mut chosen = Vec::new();
-            for off in 0..n {
-                let id = (*rr_cursor + off) % n;
+            for off in 0..ids.len() {
+                let id = ids[(start + off) % ids.len()];
                 if eligible.iter().any(|v| v.id == id) {
                     chosen.push(id);
                     if chosen.len() == req.n_gpus {
-                        *rr_cursor = (id + 1) % n;
+                        *rr_cursor = id + 1;
                         break;
                     }
                 }
@@ -123,6 +161,115 @@ pub fn select_gpus(
     }
 }
 
+/// Two-level cluster mapping (DESIGN.md §8): filter servers (power
+/// envelope, capacity for the request), then run the per-GPU policy and
+/// pick the best server by the same criterion. Multi-GPU requests are
+/// always satisfied within a single server.
+///
+/// ```
+/// use carma::config::schema::PolicyKind;
+/// use carma::coordinator::policy::{
+///     select_two_level, GpuView, MappingRequest, Preconditions, ServerView,
+/// };
+///
+/// let gpu = |id, server, free_gb| GpuView {
+///     id, server, free_gb,
+///     smact_window: 0.2, n_tasks: 1,
+///     mig_free_instance: None, mig_instance_mem_gb: 0.0, mig_enabled: false,
+/// };
+/// let servers = [
+///     ServerView { id: 0, power_w: 400.0, power_cap_w: None,
+///                  gpus: vec![gpu(0, 0, 10.0), gpu(1, 0, 12.0)] },
+///     ServerView { id: 1, power_w: 400.0, power_cap_w: None,
+///                  gpus: vec![gpu(2, 1, 30.0), gpu(3, 1, 5.0)] },
+/// ];
+/// let req = MappingRequest { n_gpus: 1, demand_gb: Some(8.0), exclusive: false };
+/// let mut rr = 0;
+/// let p = select_two_level(PolicyKind::Magm, &servers, req, Preconditions::default(), &mut rr)
+///     .unwrap();
+/// assert_eq!(p.gpus, vec![2]); // most free memory across the whole cluster
+/// ```
+pub fn select_two_level(
+    policy: PolicyKind,
+    servers: &[ServerView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+) -> Option<Placement> {
+    let admitted: Vec<&ServerView> = servers.iter().filter(|s| s.admits(req)).collect();
+    if admitted.is_empty() {
+        return None;
+    }
+
+    if req.exclusive || policy == PolicyKind::Exclusive {
+        // lowest-id admitted server with enough idle targets
+        return admitted.iter().find_map(|s| exclusive(&s.gpus, req));
+    }
+
+    if policy == PolicyKind::RoundRobin {
+        // cycle over eligible GPUs cluster-wide; the first pick fixes the
+        // host server, the remaining GPUs of a multi-GPU request come from
+        // that same server
+        let mut flat: Vec<&GpuView> = admitted
+            .iter()
+            .flat_map(|s| s.gpus.iter())
+            .filter(|v| passes(v, req, pre))
+            .collect();
+        flat.sort_unstable_by_key(|v| v.id);
+        if flat.is_empty() {
+            return None;
+        }
+        let start = flat.iter().position(|v| v.id >= *rr_cursor).unwrap_or(0);
+        for off in 0..flat.len() {
+            let first = flat[(start + off) % flat.len()];
+            let host = admitted.iter().find(|s| s.id == first.server)?;
+            let mut cursor = first.id; // the first pick itself starts the cycle
+            if let Some(p) =
+                select_gpus(PolicyKind::RoundRobin, &host.gpus, req, pre, &mut cursor)
+            {
+                *rr_cursor = cursor;
+                return Some(p);
+            }
+        }
+        return None;
+    }
+
+    // sortable policies (MAGM / LUG / MUG): per-server candidate via the
+    // single-server policy, then the best server by the same criterion
+    // summed over its chosen GPUs; ties go to the lower server id
+    let mut best: Option<(f64, Placement)> = None;
+    for s in &admitted {
+        let mut throwaway = 0usize;
+        let Some(p) = select_gpus(policy, &s.gpus, req, pre, &mut throwaway) else {
+            continue;
+        };
+        let score: f64 = p
+            .gpus
+            .iter()
+            .map(|&g| {
+                let v = s.gpus.iter().find(|v| v.id == g).expect("chosen gpu in view");
+                match policy {
+                    PolicyKind::Magm => v.free_gb,
+                    PolicyKind::Lug => -v.smact_window,
+                    PolicyKind::Mug => v.smact_window,
+                    PolicyKind::RoundRobin | PolicyKind::Exclusive => unreachable!(),
+                }
+            })
+            .sum();
+        if best.as_ref().is_none_or(|(b, _)| score > *b) {
+            best = Some((score, p));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Allocator-granularity slack for demand-vs-free comparisons: free memory
+/// is reported in whole MiB, so a demand derived from the exact configured
+/// capacity (e.g. the force-exclusive clamp to `mem_gb`) can sit up to one
+/// MiB above the reported value — without slack such a task never fits
+/// anywhere and the serial mapper livelocks.
+const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
+
 fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
     if v.mig_enabled {
         // MIG: needs a free instance whose memory fits the (known) demand;
@@ -131,7 +278,7 @@ fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
             return false;
         };
         if let Some(d) = req.demand_gb {
-            if d > v.mig_instance_mem_gb {
+            if d > v.mig_instance_mem_gb + FIT_SLACK_GB {
                 return false;
             }
         }
@@ -148,7 +295,7 @@ fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
         }
     }
     if let Some(d) = req.demand_gb {
-        if v.free_gb < d {
+        if v.free_gb + FIT_SLACK_GB < d {
             return false;
         }
     }
@@ -156,15 +303,17 @@ fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
 }
 
 fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
-    // idle GPUs only (or free MIG instances when MIG is on)
+    // idle GPUs only (or free MIG instances when MIG is on); the device must
+    // also be big enough for a known demand — on heterogeneous clusters an
+    // idle small GPU is not a valid exclusive target for a large task
     let idle: Vec<usize> = views
         .iter()
         .filter(|v| {
             if v.mig_enabled {
                 v.mig_free_instance.is_some()
-                    && req.demand_gb.is_none_or(|d| d <= v.mig_instance_mem_gb)
+                    && req.demand_gb.is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB)
             } else {
-                v.n_tasks == 0
+                v.n_tasks == 0 && req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB)
             }
         })
         .map(|v| v.id)
@@ -198,12 +347,25 @@ mod tests {
     fn view(id: usize, free: f64, smact: f64, n: usize) -> GpuView {
         GpuView {
             id,
+            server: 0,
             free_gb: free,
             smact_window: smact,
             n_tasks: n,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
+        }
+    }
+
+    fn sview(id: usize, gpus: Vec<GpuView>) -> ServerView {
+        ServerView {
+            id,
+            power_w: 0.0,
+            power_cap_w: None,
+            gpus: gpus.into_iter().map(|mut v| {
+                v.server = id;
+                v
+            }).collect(),
         }
     }
 
@@ -347,6 +509,7 @@ mod tests {
     fn mig_requires_free_instance_and_fit() {
         let mig_view = GpuView {
             id: 0,
+            server: 0,
             free_gb: 40.0,
             smact_window: 0.2,
             n_tasks: 1,
@@ -372,6 +535,137 @@ mod tests {
             &mut rr
         )
         .is_none());
+    }
+
+    // -- two-level (cluster) mapping -----------------------------------------
+
+    #[test]
+    fn two_level_magm_picks_best_gpu_cluster_wide() {
+        let servers = [
+            sview(0, vec![view(0, 8.0, 0.2, 1), view(1, 12.0, 0.2, 1)]),
+            sview(1, vec![view(2, 30.0, 0.2, 1), view(3, 5.0, 0.2, 1)]),
+        ];
+        let mut rr = 0;
+        let p = select_two_level(
+            PolicyKind::Magm,
+            &servers,
+            req(1, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![2]);
+    }
+
+    #[test]
+    fn two_level_multi_gpu_never_spans_servers() {
+        // best two GPUs by free memory sit on *different* servers; a 2-GPU
+        // task must take the best same-server pair instead
+        let servers = [
+            sview(0, vec![view(0, 39.0, 0.1, 0), view(1, 10.0, 0.1, 1)]),
+            sview(1, vec![view(2, 38.0, 0.1, 0), view(3, 30.0, 0.1, 1)]),
+        ];
+        let mut rr = 0;
+        let p = select_two_level(
+            PolicyKind::Magm,
+            &servers,
+            req(2, Some(5.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![2, 3], "39+10 < 38+30: server 1 hosts the pair");
+    }
+
+    #[test]
+    fn two_level_power_envelope_filters_servers() {
+        let mut hot = sview(0, vec![view(0, 40.0, 0.0, 0)]);
+        hot.power_w = 1300.0;
+        hot.power_cap_w = Some(1200.0);
+        let mut cool = sview(1, vec![view(1, 20.0, 0.0, 0)]);
+        cool.power_w = 400.0;
+        cool.power_cap_w = Some(1200.0);
+        let servers = [hot, cool];
+        let mut rr = 0;
+        let p = select_two_level(
+            PolicyKind::Magm,
+            &servers,
+            req(1, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![1], "server 0 is over its power envelope");
+        // both over cap -> nothing schedulable
+        let mut all_hot = servers.clone();
+        all_hot[1].power_w = 1250.0;
+        assert!(select_two_level(
+            PolicyKind::Magm,
+            &all_hot,
+            req(1, None),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn two_level_round_robin_cycles_across_servers() {
+        let servers = [
+            sview(0, vec![view(0, 40.0, 0.0, 0), view(1, 40.0, 0.0, 0)]),
+            sview(1, vec![view(2, 40.0, 0.0, 0), view(3, 40.0, 0.0, 0)]),
+        ];
+        let mut rr = 0;
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let p = select_two_level(
+                PolicyKind::RoundRobin,
+                &servers,
+                req(1, None),
+                Preconditions::default(),
+                &mut rr,
+            )
+            .unwrap();
+            order.push(p.gpus[0]);
+        }
+        assert_eq!(order, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn two_level_exclusive_takes_first_idle_server() {
+        let servers = [
+            sview(0, vec![view(0, 40.0, 0.3, 1), view(1, 40.0, 0.3, 1)]),
+            sview(1, vec![view(2, 40.0, 0.0, 0), view(3, 40.0, 0.0, 0)]),
+        ];
+        let mut rr = 0;
+        let p = select_two_level(
+            PolicyKind::Exclusive,
+            &servers,
+            req(2, None),
+            Preconditions::default(),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(p.gpus, vec![2, 3]);
+    }
+
+    #[test]
+    fn two_level_single_server_matches_flat_selection() {
+        // a 1-server cluster must behave exactly like the flat mapper
+        let gpus = vec![view(0, 8.0, 0.3, 1), view(1, 30.0, 0.5, 1), view(2, 16.0, 0.1, 1)];
+        for policy in [PolicyKind::Magm, PolicyKind::Lug, PolicyKind::Mug] {
+            let mut rr1 = 0;
+            let mut rr2 = 0;
+            let flat = select_gpus(policy, &gpus, req(1, None), Preconditions::default(), &mut rr1);
+            let two = select_two_level(
+                policy,
+                &[sview(0, gpus.clone())],
+                req(1, None),
+                Preconditions::default(),
+                &mut rr2,
+            );
+            assert_eq!(flat, two, "{policy:?}");
+        }
     }
 
     #[test]
@@ -417,7 +711,8 @@ mod tests {
                         return Err(format!("{policy:?} violated min free"));
                     }
                     if let Some(d) = demand {
-                        if v.free_gb < *d {
+                        // allow the allocator-granularity fit slack
+                        if v.free_gb + 2.0 * FIT_SLACK_GB < *d {
                             return Err(format!("{policy:?} violated demand check"));
                         }
                     }

@@ -8,7 +8,7 @@
 //! of the fused gradient buffers frameworks actually keep.  Fig. 6 shows
 //! moderate over/under-estimation for real CNNs/Transformers.
 //!
-//! We reproduce exactly that error profile (DESIGN.md §1):
+//! We reproduce exactly that error profile (DESIGN.md §5):
 //!
 //! * MLP depth == 1:  `4P·2` (weights+grads only) → underestimate;
 //! * MLP depth >= 2:  `4P·2 + 4·bs·P` → overestimate growing with

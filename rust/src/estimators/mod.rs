@@ -43,8 +43,9 @@ impl MemoryEstimator for NoEstimator {
     }
 }
 
-/// Instantiate by kind. GPUMemNet needs the artifacts directory (PJRT
-/// executables); all others are pure.
+/// Instantiate by kind. GPUMemNet consults the artifacts directory for the
+/// AOT-compiled PJRT executables (`pjrt` feature) and falls back to its
+/// pure-Rust classifier surrogate when they are absent; all others are pure.
 pub fn build(
     kind: EstimatorKind,
     artifacts_dir: &str,

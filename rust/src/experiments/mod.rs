@@ -4,6 +4,7 @@
 //! `carma repro <id>` and drops machine-readable output under
 //! `artifacts/results/` (DESIGN.md §4 maps ids to modules).
 
+pub mod cluster_scale; // beyond the paper: N-server scaling sweep
 pub mod common;
 pub mod estimation; // fig1, fig2, fig6, table1, fig3, fig4
 pub mod fig12;
@@ -12,10 +13,11 @@ pub mod recovery; // table4 + fig9
 pub mod sixty; // table6 + fig11 + table7
 pub mod table5; // table5 + fig10
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's tables/figures in paper order, then the
+/// repo's own scaling studies.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
-    "fig10", "table6", "fig11", "fig12", "table7",
+    "fig10", "table6", "fig11", "fig12", "table7", "cluster_scale",
 ];
 
 /// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
@@ -37,6 +39,7 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
         "fig11" => sixty::fig11(artifacts_dir),
         "fig12" => fig12::run(artifacts_dir),
         "table7" => sixty::table7(artifacts_dir),
+        "cluster_scale" => cluster_scale::run(artifacts_dir),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

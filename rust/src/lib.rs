@@ -5,12 +5,15 @@
 //!
 //! * [`coordinator`] — the paper's contribution: task-level collocation-aware
 //!   task→GPU mapping with policies, preconditions, monitoring and recovery;
-//! * [`cluster`] + [`sim`] — the simulated 4×A100 DGX substrate (segment
-//!   allocator with real fragmentation, interference + power models,
-//!   discrete-event engine);
+//! * [`cluster`] + [`sim`] — the simulated substrate: an N-server cluster of
+//!   A100 servers (DGX Station by default; segment allocator with real
+//!   fragmentation, interference + power models, discrete-event engine,
+//!   topology in DESIGN.md §8);
 //! * [`estimators`] — Oracle / Horus / FakeTensor / GPUMemNet memory
-//!   estimators; GPUMemNet runs AOT-compiled JAX+Pallas graphs through
-//!   [`runtime`] (PJRT CPU, `xla` crate) — Python is never on this path;
+//!   estimators; with the `pjrt` feature GPUMemNet runs AOT-compiled
+//!   JAX+Pallas graphs through [`runtime`] (PJRT CPU, `xla` crate) — Python
+//!   is never on this path; the default build serves the bit-deterministic
+//!   classifier surrogate instead (DESIGN.md §5);
 //! * [`workload`] — Table 3 model zoo, trace generators, submission parser,
 //!   the memsim ground-truth mirror;
 //! * [`experiments`] — one module per paper table/figure;
@@ -26,6 +29,7 @@ pub mod coordinator;
 pub mod estimators;
 pub mod experiments;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

@@ -2,26 +2,29 @@
 //!
 //! ```text
 //! carma repro <fig8|table4|...|all> [--artifacts DIR]
-//! carma run   [--trace 60|90] [--policy magm] [--estimator gpumemnet]
+//! carma run   [--trace 60|90|N] [--policy magm] [--estimator gpumemnet]
 //!             [--colloc mps] [--smact 0.8] [--min-free 5] [--margin 2]
+//!             [--servers N] [--gpus-per-server G] [--power-cap W]
 //!             [--seed N] [--config carma.toml]
 //! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
 //! carma zoo                                        (print the Table 3 zoo)
 //! ```
 
 use carma::cli;
-use carma::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use carma::config::schema::{
+    CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, ServerConfig,
+};
 use carma::coordinator::carma::{run_label, run_trace};
 use carma::estimators;
 use carma::experiments;
 use carma::metrics::report::RunReport;
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::submission;
-use carma::workload::trace::{trace_60, trace_90};
+use carma::workload::trace::{trace_60, trace_90, trace_cluster};
 
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
-    "seed", "config",
+    "servers", "gpus-per-server", "power-cap", "seed", "config",
 ];
 
 fn main() {
@@ -58,13 +61,17 @@ fn usage() {
          \x20 carma run [options]                        run one configuration over a trace\n\
          \x20 carma submit <script> [--config FILE]      parse a submission script + map it\n\
          \x20 carma zoo                                  print the Table 3 model zoo\n\n\
-         RUN OPTIONS:\n  --trace 60|90      workload trace (default 60)\n\
+         RUN OPTIONS:\n  --trace 60|90|N    paper trace, or an N-task cluster-scaled trace\n\
+         \x20                    (default: 60 on a single server, 8×GPUs tasks on a multi-server cluster)\n\
          \x20 --policy P         exclusive|rr|magm|lug|mug (default magm)\n\
          \x20 --estimator E      none|oracle|horus|faketensor|gpumemnet (default gpumemnet)\n\
          \x20 --colloc C         streams|mps|mig (default mps)\n\
          \x20 --smact X          SMACT precondition 0..1 (default 0.8; >=1 disables)\n\
          \x20 --min-free GB      memory precondition (default off)\n\
          \x20 --margin GB        safety margin on estimates (default 0)\n\
+         \x20 --servers N        number of servers in the cluster (default 1)\n\
+         \x20 --gpus-per-server G  GPUs per server (default 4)\n\
+         \x20 --power-cap W      per-server power envelope in watts (default off)\n\
          \x20 --seed N           trace seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\n\
          EXPERIMENTS: {}",
@@ -108,6 +115,40 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
     if let Some(x) = args.opt_f64("margin").map_err(|e| e.to_string())? {
         cfg.safety_margin_gb = x;
     }
+    let servers = args.opt_u64("servers").map_err(|e| e.to_string())?;
+    let gpus_per_server = args.opt_u64("gpus-per-server").map_err(|e| e.to_string())?;
+    if servers.is_some() || gpus_per_server.is_some() {
+        // these flags rebuild a homogeneous cluster from server 0; silently
+        // flattening a heterogeneous [cluster.serverK] config would run a
+        // different cluster than the user configured
+        if cfg.cluster.servers.windows(2).any(|w| w[0] != w[1]) {
+            return Err(
+                "--servers/--gpus-per-server would discard the config file's \
+                 heterogeneous [cluster.serverK] layout; edit the TOML instead"
+                    .into(),
+            );
+        }
+        let base = cfg
+            .cluster
+            .servers
+            .first()
+            .cloned()
+            .unwrap_or_else(ServerConfig::default);
+        // same ranges the TOML path enforces — an absurd count must be a
+        // config error, not an allocation abort
+        let n = servers.unwrap_or(cfg.cluster.servers.len() as u64) as usize;
+        if !(1..=10_000).contains(&n) {
+            return Err(format!("--servers must be in 1..=10000, got {n}"));
+        }
+        let g = gpus_per_server.map(|x| x as usize).unwrap_or(base.n_gpus);
+        if !(1..=1024).contains(&g) {
+            return Err(format!("--gpus-per-server must be in 1..=1024, got {g}"));
+        }
+        cfg.cluster.servers = vec![ServerConfig { n_gpus: g, ..base }; n];
+    }
+    if let Some(w) = args.opt_f64("power-cap").map_err(|e| e.to_string())? {
+        cfg.cluster.power_cap_w = if w <= 0.0 { None } else { Some(w) };
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
     }
@@ -119,23 +160,39 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
 fn cmd_run(args: &cli::Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let zoo = ModelZoo::load();
-    let trace = match args.opt("trace").unwrap_or("60") {
-        "60" => trace_60(&zoo, cfg.seed),
-        "90" => trace_90(&zoo, cfg.seed),
-        other => return Err(format!("unknown trace '{other}' (60|90)")),
+    let total_gpus = cfg.cluster.total_gpus();
+    let trace = match args.opt("trace") {
+        Some("60") => trace_60(&zoo, cfg.seed),
+        Some("90") => trace_90(&zoo, cfg.seed),
+        Some(n) => {
+            let n: usize = n
+                .parse()
+                .map_err(|_| format!("unknown trace '{n}' (60|90|<task count>)"))?;
+            if n == 0 {
+                return Err("--trace task count must be >= 1".into());
+            }
+            trace_cluster(&zoo, n, total_gpus, cfg.seed)
+        }
+        // default: the paper trace on a single server, a proportionally
+        // loaded trace (8 tasks per GPU) on a multi-server cluster
+        None if cfg.cluster.n_servers() == 1 => trace_60(&zoo, cfg.seed),
+        None => trace_cluster(&zoo, 8 * total_gpus, total_gpus, cfg.seed),
     };
     let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
     let label = run_label(&cfg, est.name());
     println!(
-        "running {} over {} ({} tasks, seed {})\n",
+        "running {} over {} ({} tasks, {} server(s) / {} GPUs, seed {})\n",
         label,
         trace.name,
         trace.tasks.len(),
+        cfg.cluster.n_servers(),
+        total_gpus,
         cfg.seed
     );
     let out = run_trace(cfg, est, &trace, &label);
     println!("{}", RunReport::header());
     println!("{}", out.report.row());
+    println!("\n{} simulation events processed", out.events);
     Ok(())
 }
 

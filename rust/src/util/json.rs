@@ -105,6 +105,17 @@ impl Json {
             .unwrap_or_else(|| panic!("missing/invalid string field '{key}'"))
     }
 
+    /// Insert/overwrite a field on an object (writer-path sugar). Panics on
+    /// non-objects — that is a caller bug, not data-dependent.
+    pub fn set(&mut self, key: &str, v: Json) {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), v);
+            }
+            other => panic!("Json::set on non-object {other:?}"),
+        }
+    }
+
     // -- writer ---------------------------------------------------------------
 
     pub fn to_string_pretty(&self) -> String {
@@ -425,6 +436,15 @@ mod tests {
         let v = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo ✓");
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn set_inserts_and_overwrites() {
+        let mut v = Json::parse(r#"{"a": 1}"#).unwrap();
+        v.set("b", num(2.0));
+        v.set("a", num(3.0));
+        assert_eq!(v.f64_of("a"), 3.0);
+        assert_eq!(v.f64_of("b"), 2.0);
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod trace;
 pub use features::{Arch, TaskFeatures};
 pub use model_zoo::{ModelZoo, ZooEntry};
 pub use task::{TaskSpec, WeightClass};
-pub use trace::{trace_60, trace_90, TraceSpec};
+pub use trace::{trace_60, trace_90, trace_cluster, TraceSpec};

@@ -48,6 +48,27 @@ pub fn trace_60(zoo: &ModelZoo, seed: u64) -> TraceSpec {
     compose(zoo, "trace-60", &[("medium", 50), ("heavy", 10)], 300.0, seed)
 }
 
+/// Cluster-scale trace: the 90-task trace's 65/27/8 light/medium/heavy
+/// composition scaled to `n_tasks`, with the mean inter-burst gap shrunk in
+/// proportion to the GPU pool so an N-server cluster sees the same pressure
+/// per GPU as the paper's single DGX (Philly-style multi-tenant load).
+/// Fully deterministic from `seed`.
+pub fn trace_cluster(zoo: &ModelZoo, n_tasks: usize, total_gpus: usize, seed: u64) -> TraceSpec {
+    assert!(n_tasks > 0 && total_gpus > 0);
+    let light = ((n_tasks as f64 * 0.65).round() as usize).min(n_tasks);
+    let medium = ((n_tasks as f64 * 0.27).round() as usize).min(n_tasks - light);
+    let heavy = n_tasks - light - medium;
+    // trace-90's 240 s mean gap kept 4 GPUs loaded; scale per-GPU pressure
+    let mean_gap_s = (240.0 * 4.0 / total_gpus as f64).max(1.0);
+    compose(
+        zoo,
+        &format!("trace-cluster-{n_tasks}x{total_gpus}gpu"),
+        &[("light", light), ("medium", medium), ("heavy", heavy)],
+        mean_gap_s,
+        seed,
+    )
+}
+
 fn compose(
     zoo: &ModelZoo,
     name: &str,
@@ -163,5 +184,51 @@ mod tests {
         for (i, task) in t.tasks.iter().enumerate() {
             assert_eq!(task.id, i);
         }
+    }
+
+    #[test]
+    fn cluster_trace_scales_count_and_composition() {
+        let t = trace_cluster(&zoo(), 256, 32, 42);
+        assert_eq!(t.tasks.len(), 256);
+        let (l, m, h) = class_counts(&t);
+        assert_eq!(l, 166); // 0.65 × 256, rounded
+        assert_eq!(m, 69); // 0.27 × 256, rounded
+        assert_eq!(h, 21);
+        for (i, task) in t.tasks.iter().enumerate() {
+            assert_eq!(task.id, i);
+        }
+        let arr: Vec<f64> = t.tasks.iter().map(|x| x.arrival_s).collect();
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn cluster_trace_is_deterministic_by_seed() {
+        let a = trace_cluster(&zoo(), 200, 32, 9);
+        let b = trace_cluster(&zoo(), 200, 32, 9);
+        assert_eq!(
+            a.tasks.iter().map(|t| (t.name.clone(), t.arrival_s.to_bits())).collect::<Vec<_>>(),
+            b.tasks.iter().map(|t| (t.name.clone(), t.arrival_s.to_bits())).collect::<Vec<_>>()
+        );
+        let c = trace_cluster(&zoo(), 200, 32, 10);
+        assert_ne!(
+            a.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>(),
+            c.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn cluster_trace_arrival_rate_scales_with_gpus() {
+        // same task count, bigger pool -> denser arrivals
+        let small = trace_cluster(&zoo(), 120, 4, 3);
+        let big = trace_cluster(&zoo(), 120, 32, 3);
+        let span = |t: &TraceSpec| {
+            t.tasks.last().unwrap().arrival_s - t.tasks[0].arrival_s
+        };
+        assert!(
+            span(&big) < span(&small) / 2.0,
+            "32-GPU span {} !<< 4-GPU span {}",
+            span(&big),
+            span(&small)
+        );
     }
 }

@@ -57,7 +57,7 @@ fn every_collocation_mode_completes() {
     }
     // MIG with 2 half instances per GPU
     let mut c = cfg(PolicyKind::Magm, CollocationMode::Mig, EstimatorKind::Oracle);
-    c.server.mig_slices = vec![0.75, 0.25];
+    c.cluster.servers[0].mig_slices = vec![0.75, 0.25];
     let r = run(c, &trace);
     assert_eq!(r.completed, 90, "MIG");
     assert_eq!(r.oom_crashes, 0, "MIG instances are isolated + demand-checked");
