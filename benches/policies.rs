@@ -19,6 +19,7 @@ fn views(n: usize) -> Vec<GpuView> {
             free_gb: rng.range_f64(0.0, 40.0),
             smact_window: rng.f64(),
             n_tasks: rng.range_usize(0, 4),
+            pinned: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,

@@ -44,5 +44,17 @@ fi
 printf '%s\n' "$A" | tail -n 4
 echo "smoke OK: identical makespan/energy report across both runs"
 
+step "sharded smoke: --shards 4 on the same trace, identical seeded reports"
+SHARDED_ARGS=(run --servers 8 --gpus-per-server 4 --shards 4 --estimator oracle --margin 2 --seed 7)
+C="$("$BIN" "${SHARDED_ARGS[@]}")"
+D="$("$BIN" "${SHARDED_ARGS[@]}")"
+if [ "$C" != "$D" ]; then
+    echo "DETERMINISM FAILURE: two identical seeded --shards 4 runs diverged" >&2
+    diff <(printf '%s\n' "$C") <(printf '%s\n' "$D") >&2 || true
+    exit 1
+fi
+printf '%s\n' "$C" | tail -n 8
+echo "sharded smoke OK: identical report at 4 shards across both runs"
+
 echo
 echo "CI green."

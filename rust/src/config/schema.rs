@@ -110,6 +110,60 @@ impl EstimatorKind {
     }
 }
 
+/// Shard-assignment strategy of the sharded coordinator's admission layer
+/// (DESIGN.md §9): which per-shard mapper an arriving task is routed to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardAssign {
+    /// Cyclic routing over shards in arrival order.
+    RoundRobin,
+    /// The shard with the fewest queued + in-observation tasks (ties go to
+    /// the lowest shard id).
+    LeastLoaded,
+    /// Sticky modulo routing by task id (`id % shards`): a task always
+    /// lands on the same mapper for a given shard count (stable across
+    /// recovery re-queues, which never migrate a task anyway).
+    Locality,
+}
+
+impl ShardAssign {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "round_robin" | "roundrobin" | "rr" => ShardAssign::RoundRobin,
+            "least-loaded" | "least_loaded" | "leastloaded" => ShardAssign::LeastLoaded,
+            "locality" | "sticky" => ShardAssign::Locality,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardAssign::RoundRobin => "round-robin",
+            ShardAssign::LeastLoaded => "least-loaded",
+            ShardAssign::Locality => "locality",
+        }
+    }
+}
+
+/// Sharded-coordinator configuration (TOML `[coordinator]`, DESIGN.md §9).
+/// The default — one shard — is the paper's serial select→observe→map
+/// pipeline, bit-identical to the pre-sharding coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Number of concurrent mapper workers (observation windows in flight).
+    pub shards: usize,
+    /// How admission routes arriving tasks to shards.
+    pub assign: ShardAssign,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            shards: 1,
+            assign: ShardAssign::RoundRobin,
+        }
+    }
+}
+
 /// One simulated server (DGX Station A100 defaults, paper Table 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -258,6 +312,7 @@ impl Default for MonitorConfig {
 pub struct CarmaConfig {
     pub seed: u64,
     pub cluster: ClusterConfig,
+    pub coordinator: CoordinatorConfig,
     pub policy: PolicyKind,
     pub colloc: CollocationMode,
     pub estimator: EstimatorKind,
@@ -278,6 +333,7 @@ impl Default for CarmaConfig {
         CarmaConfig {
             seed: 42,
             cluster: ClusterConfig::default(),
+            coordinator: CoordinatorConfig::default(),
             policy: PolicyKind::Magm,
             colloc: CollocationMode::Mps,
             estimator: EstimatorKind::GpuMemNet,
@@ -401,6 +457,16 @@ impl CarmaConfig {
                 }
             }
         }
+        if let Some(v) = doc.get("coordinator.shards").and_then(|v| v.as_i64()) {
+            // range-checked centrally in validate(); only guard the
+            // negative-to-usize wrap here
+            self.coordinator.shards = usize::try_from(v)
+                .map_err(|_| format!("coordinator.shards must be positive, got {v}"))?;
+        }
+        if let Some(v) = doc.get("coordinator.assign").and_then(|v| v.as_str()) {
+            self.coordinator.assign = ShardAssign::parse(v)
+                .ok_or_else(|| format!("unknown shard-assignment strategy '{v}'"))?;
+        }
         if let Some(v) = doc.get("policy.kind").and_then(|v| v.as_str()) {
             self.policy = PolicyKind::parse(v).ok_or_else(|| format!("unknown policy '{v}'"))?;
         }
@@ -495,6 +561,15 @@ impl CarmaConfig {
                      could ever admit work"
                 ));
             }
+        }
+        // capped at 256: every engine pop scans one lane head per shard
+        // (sim::Engine::pop), so absurd counts would quietly turn the run
+        // O(shards) per event instead of erroring
+        if !(1..=256).contains(&self.coordinator.shards) {
+            return Err(format!(
+                "coordinator.shards must be in 1..=256, got {}",
+                self.coordinator.shards
+            ));
         }
         if let Some(c) = self.smact_cap {
             if !(0.0..=1.0).contains(&c) {
@@ -611,5 +686,43 @@ mod tests {
         assert_eq!(PolicyKind::parse("nope"), None);
         assert_eq!(CollocationMode::parse("MPS"), Some(CollocationMode::Mps));
         assert_eq!(EstimatorKind::parse("GPUMemNet"), Some(EstimatorKind::GpuMemNet));
+        assert_eq!(ShardAssign::parse("round-robin"), Some(ShardAssign::RoundRobin));
+        assert_eq!(ShardAssign::parse("least_loaded"), Some(ShardAssign::LeastLoaded));
+        assert_eq!(ShardAssign::parse("sticky"), Some(ShardAssign::Locality));
+        assert_eq!(ShardAssign::parse("nope"), None);
+    }
+
+    #[test]
+    fn coordinator_section_sets_shards() {
+        // the default stays the paper's serial pipeline
+        let c = CarmaConfig::default();
+        assert_eq!(c.coordinator.shards, 1);
+        assert_eq!(c.coordinator.assign, ShardAssign::RoundRobin);
+
+        let doc =
+            toml::parse("[coordinator]\nshards = 4\nassign = \"least-loaded\"\n").unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.coordinator.shards, 4);
+        assert_eq!(c.coordinator.assign, ShardAssign::LeastLoaded);
+
+        // out-of-range counts and typo'd strategies are config errors
+        let doc = toml::parse("[coordinator]\nshards = 0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[coordinator]\nshards = -3\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[coordinator]\nassign = \"hash\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        // validate() owns the range rule, so programmatic configs are
+        // covered too (the engine pop scans one lane head per shard)
+        let mut c = CarmaConfig::default();
+        c.coordinator.shards = 0;
+        assert!(c.validate().is_err());
+        let mut c = CarmaConfig::default();
+        c.coordinator.shards = 100_000;
+        assert!(c.validate().is_err());
+        let mut c = CarmaConfig::default();
+        c.coordinator.shards = 256;
+        assert!(c.validate().is_ok());
     }
 }

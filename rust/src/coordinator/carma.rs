@@ -1,11 +1,17 @@
 //! The CARMA simulation driver: end-to-end task management (paper §4.1,
 //! Fig. 7) over the simulated cluster substrate (DESIGN.md §8).
 //!
-//! Event flow per task: arrival → primary queue → selection (recovery queue
-//! first) → 1-minute observation window → two-level mapping (server filter →
-//! preconditions + estimator → per-GPU policy) → dispatch → staircase memory
-//! ramp (may OOM → recovery) → processor-sharing execution under the
-//! interference model → completion.
+//! Event flow per task: arrival → admission (shard routing) → per-shard
+//! queue → selection (recovery queue first) → 1-minute observation window →
+//! two-level mapping (server filter → preconditions + estimator → per-GPU
+//! policy) → dispatch → staircase memory ramp (may OOM → recovery) →
+//! processor-sharing execution under the interference model → completion.
+//!
+//! Mapping is sharded (DESIGN.md §9): `cfg.coordinator.shards` mapper
+//! workers each run their own observe→map state machine on their own event
+//! lane, so K shards keep K observation windows open concurrently instead
+//! of serializing them. One shard — the default — reproduces the paper's
+//! serial pipeline event-for-event.
 
 use crate::cluster::gpu::ResidentTask;
 use crate::cluster::power::gpu_power_w;
@@ -22,14 +28,22 @@ use crate::workload::trace::TraceSpec;
 
 use super::monitor::Monitor;
 use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions, ServerView};
-use super::queue::TaskQueues;
+use super::shard::{Admission, Mapper};
 
 /// Seconds between memory-ramp stages (training warm-up allocations).
 const RAMP_INTERVAL_S: f64 = 8.0;
-/// Recovery loop's error-file polling delay (paper §4.2).
+/// Recovery loop's error-file polling delay (paper §4.2). Repeat offenders
+/// back off exponentially from this base: 5 s, 10 s, 20 s, … (ROADMAP
+/// "Adaptive recovery").
 const RECOVERY_DETECT_S: f64 = 5.0;
 /// Retry cadence when the selected task cannot be mapped yet.
 const RETRY_S: f64 = 15.0;
+
+/// Event lane of a coordinator shard (lane 0 is the global lane: arrivals,
+/// monitor samples, recovery detection).
+fn lane(shard: usize) -> usize {
+    1 + shard
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum RunState {
@@ -70,6 +84,10 @@ struct TaskRun {
     /// allocated remainder as *reserved* so back-to-back admissions don't
     /// overcommit the same free memory (Fig. 7 mapping step).
     admitted_est_gb: Option<f64>,
+    /// Final-retry recovery demotion (§4.2 + DESIGN.md §9): the task holds
+    /// its GPUs exclusively — no collocation is admitted onto them — so the
+    /// last permitted attempt cannot be re-crashed by a newcomer's ramp.
+    pinned: bool,
 }
 
 /// Outcome of a full trace run.
@@ -85,15 +103,14 @@ pub struct Carma {
     engine: Engine,
     cluster: Cluster,
     tasks: Vec<TaskRun>,
-    queues: TaskQueues,
-    selected: Option<TaskId>,
-    window_done: bool,
-    rr_cursor: usize,
+    /// Global admission layer: intake, per-shard queues, capacity ceilings.
+    admission: Admission,
+    /// Per-shard mapper workers (observe→map state machines).
+    mappers: Vec<Mapper>,
     estimator: Box<dyn MemoryEstimator>,
     monitor: Monitor,
     recorder: Recorder,
     done_count: usize,
-    retry_scheduled: bool,
 }
 
 impl Carma {
@@ -101,7 +118,15 @@ impl Carma {
         let cluster = Cluster::new(ClusterTopology::from_config(&cfg.cluster));
         let n = trace.tasks.len();
         let monitor = Monitor::new(cluster.n_gpus(), cfg.monitor.window_s);
-        let recorder = Recorder::new(n, cluster.n_gpus());
+        let shards = cfg.coordinator.shards;
+        let mut recorder = Recorder::new(n, cluster.n_gpus());
+        recorder.n_shards = shards;
+        let admission = Admission::new(
+            shards,
+            n,
+            cfg.coordinator.assign,
+            cluster.topo.admissible_ceilings(cfg.power.idle_w),
+        );
         let tasks = trace
             .tasks
             .iter()
@@ -119,22 +144,20 @@ impl Carma {
                 version: 0,
                 in_recovery: false,
                 admitted_est_gb: None,
+                pinned: false,
             })
             .collect();
         Carma {
             cfg,
-            engine: Engine::with_capacity(2 * n + 16),
+            engine: Engine::with_lanes(1 + shards, 2 * n + 16),
             cluster,
             tasks,
-            queues: TaskQueues::new(),
-            selected: None,
-            window_done: false,
-            rr_cursor: 0,
+            admission,
+            mappers: vec![Mapper::new(); shards],
             estimator,
             monitor,
             recorder,
             done_count: 0,
-            retry_scheduled: false,
         }
     }
 
@@ -157,7 +180,7 @@ impl Carma {
             match ev {
                 Event::TaskArrival(id) => self.on_arrival(id),
                 Event::WindowDone(id) => self.on_window_done(id),
-                Event::RetryMapping => self.on_retry(),
+                Event::RetryMapping(shard) => self.on_retry(shard),
                 Event::Ramp(id, stage) => self.on_ramp(id, stage),
                 Event::Completion(id, v) => self.on_completion(id, v),
                 Event::MonitorSample => self.on_monitor_sample(),
@@ -185,50 +208,78 @@ impl Carma {
         let t = self.engine.now();
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
-        self.queues.submit(id);
-        self.try_select();
+        let loads = self.shard_loads();
+        let shard = self.admission.submit(id, &loads);
+        self.recorder.on_assigned(id, shard);
+        self.feed(shard);
     }
 
-    fn try_select(&mut self) {
-        if self.selected.is_some() {
+    /// Per-shard load (queued + under observation) for least-loaded routing.
+    fn shard_loads(&self) -> Vec<usize> {
+        self.mappers
+            .iter()
+            .enumerate()
+            .map(|(s, m)| self.admission.queue_len(s) + usize::from(m.selected.is_some()))
+            .collect()
+    }
+
+    /// Hand shard `shard`'s mapper its next task, if it is idle and one is
+    /// queued (the sharded generalization of the serial "select next").
+    fn feed(&mut self, shard: usize) {
+        if self.mappers[shard].selected.is_some() {
             return;
         }
-        if let Some((id, _rec)) = self.queues.pop_next() {
-            self.selected = Some(id);
-            self.window_done = false;
+        if let Some((id, _rec)) = self.admission.pop_next(shard) {
+            self.mappers[shard].select(id);
             self.tasks[id].state = RunState::Selected;
             // observe the GPUs for one window before deciding (paper §4.1)
             self.engine
-                .schedule_in(self.cfg.monitor.window_s, Event::WindowDone(id));
+                .schedule_in_on(lane(shard), self.cfg.monitor.window_s, Event::WindowDone(id));
         }
     }
 
     fn on_window_done(&mut self, id: TaskId) {
-        if self.selected != Some(id) {
+        let Some(shard) = self.admission.shard_of(id) else {
+            return;
+        };
+        if self.mappers[shard].selected != Some(id) {
             return; // stale (task got re-queued by recovery etc.)
         }
-        self.window_done = true;
-        self.attempt_map();
+        self.mappers[shard].window_done = true;
+        self.attempt_map(shard);
     }
 
-    fn on_retry(&mut self) {
-        self.retry_scheduled = false;
-        if self.selected.is_some() && self.window_done {
-            self.attempt_map();
+    fn on_retry(&mut self, shard: usize) {
+        self.mappers[shard].retry_scheduled = false;
+        if self.mappers[shard].ready() {
+            self.attempt_map(shard);
         }
     }
 
-    fn schedule_retry(&mut self) {
-        if !self.retry_scheduled {
-            self.retry_scheduled = true;
-            self.engine.schedule_in(RETRY_S, Event::RetryMapping);
+    fn schedule_retry(&mut self, shard: usize) {
+        if !self.mappers[shard].retry_scheduled {
+            self.mappers[shard].retry_scheduled = true;
+            self.engine
+                .schedule_in_on(lane(shard), RETRY_S, Event::RetryMapping(shard));
         }
     }
 
-    /// Try to map the selected task; on success dispatch + select next.
-    fn attempt_map(&mut self) {
-        let Some(id) = self.selected else { return };
+    /// Re-attempt every shard whose selected task already finished its
+    /// window — resources just changed (completion / OOM release).
+    fn kick_mappers(&mut self) {
+        for shard in 0..self.mappers.len() {
+            if self.mappers[shard].ready() {
+                self.attempt_map(shard);
+            }
+        }
+    }
+
+    /// Try to map shard `shard`'s selected task; on success dispatch + feed
+    /// the shard its next task.
+    fn attempt_map(&mut self, shard: usize) {
+        let Some(id) = self.mappers[shard].selected else { return };
         let views = self.server_views();
+        let crashes = self.recorder.tasks[id].oom_crashes;
         let spec = &self.tasks[id].spec;
 
         // estimator + safety margin; estimates at/above every server's GPU
@@ -237,7 +288,11 @@ impl Carma {
         let max_mem = self.cluster.topo.max_server_mem_gb();
         let raw_est = self.estimator.estimate_gb(spec);
         let mut demand = raw_est.map(|e| e + self.cfg.safety_margin_gb);
-        let mut force_exclusive = self.tasks[id].in_recovery;
+        // adaptive recovery (ROADMAP): early retries re-enter normal
+        // collocation-aware mapping; the FINAL permitted retry is demoted to
+        // a *pinned* exclusive slot, so it cannot be crashed again
+        let demoted = self.tasks[id].in_recovery && crashes >= MAX_OOM_RETRIES;
+        let mut force_exclusive = demoted;
         if let Some(d) = demand {
             if d >= max_mem {
                 demand = Some(max_mem);
@@ -264,35 +319,36 @@ impl Carma {
             smact_cap: self.cfg.smact_cap,
             min_free_gb: self.cfg.min_free_gb,
         };
-        // permanently unschedulable? — fail fast instead of retrying forever.
-        // Two static checks, independent of current occupancy: memory demand
-        // larger than every schedulable target (largest configured MIG
-        // instance / whole GPU), and GPU count larger than any single server
-        // owns (multi-GPU tasks never span servers, so no amount of waiting
-        // frees up a big-enough host). Both ceilings exclude servers whose
-        // idle power draw already meets the envelope — those never admit.
-        let (max_gpus, max_capacity) =
-            self.cluster.topo.admissible_ceilings(self.cfg.power.idle_w);
-        if let Some(d) = demand {
-            if d > max_capacity + 1e-9 {
-                self.fail_task(id, "demand exceeds every schedulable target");
-                return;
-            }
-        }
-        if req.n_gpus > max_gpus {
-            self.fail_task(id, "needs more GPUs than any admissible server owns");
+        // permanently unschedulable? — fail fast instead of retrying
+        // forever. Admission owns the static ceilings (capacity accounting
+        // across servers, power-envelope-dead servers excluded): a demand
+        // larger than every schedulable target, or a GPU count no single
+        // admissible server owns (multi-GPU tasks never span servers), can
+        // never be placed no matter how long the task waits.
+        if let Err(why) = self.admission.admissible(req.n_gpus, demand) {
+            self.fail_task(id, why);
             return;
         }
 
-        match policy::select_two_level(self.cfg.policy, &views, req, pre, &mut self.rr_cursor) {
+        match policy::select_two_level(
+            self.cfg.policy,
+            &views,
+            req,
+            pre,
+            &mut self.mappers[shard].rr_cursor,
+        ) {
             Some(p) => {
                 self.tasks[id].admitted_est_gb = demand;
+                self.tasks[id].pinned = demoted;
+                // clear BEFORE dispatch: a first-ramp OOM inside dispatch
+                // reaches kick_mappers, which must not re-enter this shard
+                // for the task it is mid-dispatching (clear emits no events,
+                // so the schedule order is unchanged)
+                self.mappers[shard].clear();
                 self.dispatch(id, p);
-                self.selected = None;
-                self.window_done = false;
-                self.try_select();
+                self.feed(shard);
             }
-            None => self.schedule_retry(),
+            None => self.schedule_retry(shard),
         }
     }
 
@@ -301,10 +357,11 @@ impl Carma {
         self.tasks[id].state = RunState::Failed;
         self.recorder.on_failed(id);
         self.done_count += 1;
-        if self.selected == Some(id) {
-            self.selected = None;
-            self.window_done = false;
-            self.try_select();
+        if let Some(shard) = self.admission.shard_of(id) {
+            if self.mappers[shard].selected == Some(id) {
+                self.mappers[shard].clear();
+                self.feed(shard);
+            }
         }
     }
 
@@ -350,6 +407,7 @@ impl Carma {
                             free_gb: (g.free_gb() - self.pending_reserved_gb(g.id)).max(0.0),
                             smact_window: self.monitor.windowed_smact(g.id),
                             n_tasks: g.n_tasks(),
+                            pinned: g.resident.iter().any(|r| self.tasks[r.task].pinned),
                             mig_free_instance: inst,
                             mig_instance_mem_gb: inst
                                 .map(|i| g.capacity_gb() * g.mig_slices[i])
@@ -454,9 +512,16 @@ impl Carma {
         }
         self.tasks[id].next_ramp += 1;
         if self.tasks[id].next_ramp < self.tasks[id].ramp.len() {
+            let l = self.task_lane(id);
             self.engine
-                .schedule_in(RAMP_INTERVAL_S, Event::Ramp(id, stage + 1));
+                .schedule_in_on(l, RAMP_INTERVAL_S, Event::Ramp(id, stage + 1));
         }
+    }
+
+    /// Event lane of the shard owning `id` (admission routing is sticky, so
+    /// every admitted task has one).
+    fn task_lane(&self, id: TaskId) -> usize {
+        lane(self.admission.shard_of(id).expect("task was admitted"))
     }
 
     fn oom(&mut self, id: TaskId) {
@@ -467,16 +532,22 @@ impl Carma {
         task.version += 1; // invalidate any scheduled completion
         task.remaining_s = task.spec.work_s; // restart from scratch
         task.in_recovery = true;
-        if self.recorder.tasks[id].oom_crashes > MAX_OOM_RETRIES {
+        let crashes = self.recorder.tasks[id].oom_crashes;
+        if crashes > MAX_OOM_RETRIES {
             self.fail_task(id, "exceeded OOM retry budget");
+            // the failed task's memory was released above — waiting mappers
+            // get the same immediate kick the recoverable path gives them
+            self.kick_mappers();
             return;
         }
-        self.engine
-            .schedule_in(RECOVERY_DETECT_S, Event::RecoveryDetect(id));
-        // freed memory may unblock the selected task
-        if self.selected.is_some() && self.window_done {
-            self.attempt_map();
-        }
+        // adaptive backoff (ROADMAP "Adaptive recovery"): a repeat offender
+        // waits 2× longer before each re-queue — 5 s, 10 s, 20 s — giving
+        // the GPUs it keeps crashing on time to drain before the final,
+        // demoted-to-exclusive attempt
+        let backoff = RECOVERY_DETECT_S * (1u64 << (crashes - 1).min(6)) as f64;
+        self.engine.schedule_in(backoff, Event::RecoveryDetect(id));
+        // freed memory may unblock a waiting mapper
+        self.kick_mappers();
     }
 
     fn on_recovery_detect(&mut self, id: TaskId) {
@@ -484,8 +555,8 @@ impl Carma {
             return;
         }
         self.tasks[id].state = RunState::Queued;
-        self.queues.submit_recovery(id);
-        self.try_select();
+        let shard = self.admission.submit_recovery(id);
+        self.feed(shard);
     }
 
     /// Free all segments + residency of a task and update speeds.
@@ -517,9 +588,7 @@ impl Carma {
         self.tasks[id].state = RunState::Done;
         self.done_count += 1;
         self.recorder.on_completion(id, self.engine.now());
-        if self.selected.is_some() && self.window_done {
-            self.attempt_map();
-        }
+        self.kick_mappers();
     }
 
     fn progress_update(&mut self, id: TaskId) {
@@ -580,7 +649,8 @@ impl Carma {
             if speed > 1e-9 {
                 let eta = now + t.remaining_s / speed;
                 let v = t.version;
-                self.engine.schedule(eta, Event::Completion(id, v));
+                let l = self.task_lane(id);
+                self.engine.schedule_on(l, eta, Event::Completion(id, v));
             }
         }
     }
@@ -603,8 +673,13 @@ impl Carma {
 
     // -- test/inspection hooks ------------------------------------------------
 
+    /// Total queued tasks across every shard.
     pub fn queue_len(&self) -> usize {
-        self.queues.len()
+        self.admission.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.mappers.len()
     }
 
     pub fn cluster(&self) -> &Cluster {
@@ -654,7 +729,7 @@ mod tests {
     use crate::config::schema::EstimatorKind;
     use crate::estimators;
     use crate::workload::model_zoo::ModelZoo;
-    use crate::workload::trace::{trace_60, trace_90};
+    use crate::workload::trace::{trace_60, trace_90, trace_cluster};
 
     fn cfg(policy: PolicyKind, est: EstimatorKind) -> (CarmaConfig, Box<dyn MemoryEstimator>) {
         let mut c = CarmaConfig::default();
@@ -760,6 +835,82 @@ mod tests {
             out.recorder.energy_j[4..].iter().sum::<f64>() > 0.0,
             "server 1's GPUs never sampled"
         );
+    }
+
+    #[test]
+    fn sharded_mapping_overlaps_windows() {
+        use crate::config::schema::ClusterConfig;
+        // 4 mappers on a 2×4 cluster: everything completes, the per-shard
+        // counters are populated, and overlapping observation windows cut
+        // queueing delay vs the serial coordinator
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 64, 8, 1);
+        let mk = |shards: usize| {
+            let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+            c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+            c.safety_margin_gb = 2.0;
+            c.coordinator.shards = shards;
+            run_trace(c, e, &trace, &format!("{shards}-shard"))
+        };
+        let serial = mk(1);
+        let sharded = mk(4);
+        assert_eq!(serial.report.completed, 64);
+        assert_eq!(sharded.report.completed, 64);
+        assert_eq!(serial.report.per_shard.len(), 1);
+        assert_eq!(sharded.report.per_shard.len(), 4);
+        assert_eq!(
+            sharded.report.per_shard.iter().map(|s| s.tasks).sum::<usize>(),
+            64,
+            "admission routes every task to exactly one shard"
+        );
+        assert!(
+            sharded.report.avg_waiting_min < serial.report.avg_waiting_min,
+            "4 shards {:.1}m waiting !< serial {:.1}m",
+            sharded.report.avg_waiting_min,
+            serial.report.avg_waiting_min
+        );
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic() {
+        use crate::config::schema::{ClusterConfig, ShardAssign};
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 48, 8, 5);
+        for assign in [ShardAssign::RoundRobin, ShardAssign::LeastLoaded, ShardAssign::Locality] {
+            let mk = || {
+                let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+                c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+                c.safety_margin_gb = 2.0;
+                c.coordinator.shards = 4;
+                c.coordinator.assign = assign;
+                run_trace(c, e, &trace, "det")
+            };
+            let a = mk();
+            let b = mk();
+            assert_eq!(a.report.completed, 48, "{assign:?}");
+            assert_eq!(
+                a.report.trace_total_min.to_bits(),
+                b.report.trace_total_min.to_bits(),
+                "{assign:?}"
+            );
+            assert_eq!(a.report.energy_mj.to_bits(), b.report.energy_mj.to_bits());
+            assert_eq!(a.events, b.events, "{assign:?}: event streams must match");
+        }
+    }
+
+    #[test]
+    fn adaptive_recovery_completes_blind_collocation() {
+        // blind RR, no preconditions: tasks OOM, retry collocated with
+        // doubled detection delays, and the final demoted (pinned exclusive)
+        // attempt always lands — nothing may exhaust the retry budget
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 1);
+        let (mut c, e) = cfg(PolicyKind::RoundRobin, EstimatorKind::None);
+        c.smact_cap = None;
+        let out = run_trace(c, e, &trace, "rr-adaptive");
+        assert_eq!(out.report.completed, 60, "adaptive recovery must finish every task");
+        assert!(out.report.oom_crashes > 0);
+        assert_eq!(out.recorder.failed_total, 0, "no task may fail its retry budget");
     }
 
     #[test]

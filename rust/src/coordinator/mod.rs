@@ -3,14 +3,21 @@
 //! End-to-end task management (Fig. 7): submission queue → parser/features →
 //! memory estimator → monitoring window → collocation-policy mapping →
 //! dispatch, plus the OOM recovery path (§4.2) with its higher-priority
-//! queue and exclusive re-execution.
+//! queue and adaptive backoff/demotion.
+//!
+//! Mapping runs behind the sharded subsystem ([`shard`], DESIGN.md §9): a
+//! global admission layer feeds N per-shard mapper workers whose
+//! observation windows overlap; `shards = 1` (the default) is the paper's
+//! serial pipeline, event-for-event.
 
 pub mod carma;
 pub mod monitor;
 pub mod policy;
 pub mod queue;
+pub mod shard;
 
 pub use carma::{Carma, RunOutcome};
 pub use monitor::Monitor;
 pub use policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 pub use queue::TaskQueues;
+pub use shard::{Admission, Mapper};

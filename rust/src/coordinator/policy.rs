@@ -21,6 +21,11 @@ pub struct GpuView {
     /// Windowed average SMACT (paper §4.1).
     pub smact_window: f64,
     pub n_tasks: usize,
+    /// A resident task holds this GPU exclusively (recovery demotion,
+    /// §4.2 + DESIGN.md §9): no collocation is admitted until it leaves —
+    /// otherwise a newcomer's ramp could re-OOM the very task the final
+    /// recovery attempt promised a safe slot.
+    pub pinned: bool,
     /// MIG: a free instance index if one exists (None when MIG off or full).
     pub mig_free_instance: Option<usize>,
     /// MIG: memory capacity of that free instance.
@@ -174,7 +179,7 @@ pub fn select_gpus(
 ///
 /// let gpu = |id, server, free_gb| GpuView {
 ///     id, server, free_gb,
-///     smact_window: 0.2, n_tasks: 1,
+///     smact_window: 0.2, n_tasks: 1, pinned: false,
 ///     mig_free_instance: None, mig_instance_mem_gb: 0.0, mig_enabled: false,
 /// };
 /// let servers = [
@@ -271,6 +276,14 @@ pub fn select_two_level(
 const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
 
 fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
+    if v.pinned {
+        // exclusively-held GPU (recovery demotion): never a placement
+        // target while the pinned task is resident. Checked before the MIG
+        // branch — MIG instances share the device's allocator in the
+        // simulation, so a newcomer on a sibling instance could still
+        // re-crash the pinned task's ramp.
+        return false;
+    }
     if v.mig_enabled {
         // MIG: needs a free instance whose memory fits the (known) demand;
         // instances are dispatched exclusively (paper §4.4)
@@ -309,6 +322,11 @@ fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
     let idle: Vec<usize> = views
         .iter()
         .filter(|v| {
+            if v.pinned {
+                // a pinned resident owns the whole device (shared allocator
+                // even under MIG) — not an exclusive target either
+                return false;
+            }
             if v.mig_enabled {
                 v.mig_free_instance.is_some()
                     && req.demand_gb.is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB)
@@ -351,6 +369,7 @@ mod tests {
             free_gb: free,
             smact_window: smact,
             n_tasks: n,
+            pinned: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
@@ -484,6 +503,60 @@ mod tests {
     }
 
     #[test]
+    fn pinned_gpu_rejects_all_collocation() {
+        // even a blind request (no demand, no preconditions) must not land
+        // on a GPU held exclusively by a recovery-demoted task
+        let mut held = view(0, 35.0, 0.1, 1);
+        held.pinned = true;
+        let views = [held, view(1, 5.0, 0.9, 3)];
+        let mut rr = 0;
+        for policy in [PolicyKind::RoundRobin, PolicyKind::Magm, PolicyKind::Lug, PolicyKind::Mug] {
+            let p = select_gpus(policy, &views, req(1, None), Preconditions::default(), &mut rr)
+                .unwrap();
+            assert_eq!(p.gpus, vec![1], "{policy:?} must avoid the pinned GPU");
+        }
+    }
+
+    #[test]
+    fn pinned_mig_gpu_rejects_instances_and_exclusive() {
+        // MIG instances share the device allocator in the sim: a pinned
+        // resident blocks sibling-instance placement AND exclusive targeting
+        let pinned_mig = GpuView {
+            id: 0,
+            server: 0,
+            free_gb: 30.0,
+            smact_window: 0.1,
+            n_tasks: 1,
+            pinned: true,
+            mig_free_instance: Some(1),
+            mig_instance_mem_gb: 10.0,
+            mig_enabled: true,
+        };
+        let mut rr = 0;
+        assert!(select_gpus(
+            PolicyKind::Magm,
+            &[pinned_mig],
+            req(1, Some(8.0)),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+        let excl = MappingRequest {
+            n_gpus: 1,
+            demand_gb: Some(8.0),
+            exclusive: true,
+        };
+        assert!(select_gpus(
+            PolicyKind::Magm,
+            &[pinned_mig],
+            excl,
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+    }
+
+    #[test]
     fn demand_check_uses_monitor_free_memory() {
         let views = [view(0, 6.0, 0.2, 1)];
         let mut rr = 0;
@@ -513,6 +586,7 @@ mod tests {
             free_gb: 40.0,
             smact_window: 0.2,
             n_tasks: 1,
+            pinned: false,
             mig_free_instance: Some(1),
             mig_instance_mem_gb: 10.0,
             mig_enabled: true,

@@ -1,0 +1,223 @@
+//! Global admission layer (DESIGN.md §9): arrival intake, per-shard
+//! primary/recovery queues, shard routing, and cluster-wide capacity
+//! accounting.
+//!
+//! Admission is the single front door: every arriving task is routed to
+//! exactly one shard (per the configured [`ShardAssign`] strategy) and
+//! stays there — recovery re-queues return to the same shard's
+//! higher-priority queue, so FIFO order and recovery priority hold *within*
+//! a shard exactly as the paper's single queue pair did (§4.1/§4.2).
+//! Admission also owns the static scheduling ceilings (largest admissible
+//! GPU count / memory target across servers, power envelopes excluded), so
+//! permanently-unschedulable work fails fast in one place.
+
+use crate::config::schema::ShardAssign;
+use crate::sim::TaskId;
+
+use crate::coordinator::queue::TaskQueues;
+
+#[derive(Debug)]
+pub struct Admission {
+    strategy: ShardAssign,
+    /// One FIFO primary + priority recovery queue pair per shard.
+    queues: Vec<TaskQueues>,
+    /// Shard each task was routed to (sticky for the task's lifetime).
+    shard_of: Vec<Option<usize>>,
+    /// Round-robin routing cursor (fresh arrivals only).
+    rr_next: usize,
+    /// Static ceilings from `ClusterTopology::admissible_ceilings`:
+    /// (max GPUs on one admissible server, max memory one target offers).
+    max_gpus: usize,
+    max_target_gb: f64,
+}
+
+impl Admission {
+    pub fn new(
+        n_shards: usize,
+        n_tasks: usize,
+        strategy: ShardAssign,
+        ceilings: (usize, f64),
+    ) -> Self {
+        assert!(n_shards >= 1, "admission needs at least one shard");
+        Admission {
+            strategy,
+            queues: (0..n_shards).map(|_| TaskQueues::new()).collect(),
+            shard_of: vec![None; n_tasks],
+            rr_next: 0,
+            max_gpus: ceilings.0,
+            max_target_gb: ceilings.1,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Route an arriving task to a shard and enqueue it. `mapper_load[s]`
+    /// is shard `s`'s current load (queued + under observation), consulted
+    /// by the least-loaded strategy.
+    pub fn submit(&mut self, id: TaskId, mapper_load: &[usize]) -> usize {
+        let n = self.queues.len();
+        let shard = match self.strategy {
+            ShardAssign::RoundRobin => {
+                let s = self.rr_next % n;
+                self.rr_next += 1;
+                s
+            }
+            ShardAssign::LeastLoaded => {
+                debug_assert_eq!(mapper_load.len(), n);
+                let mut best = 0usize;
+                for s in 1..n {
+                    if mapper_load[s] < mapper_load[best] {
+                        best = s;
+                    }
+                }
+                best
+            }
+            ShardAssign::Locality => id % n,
+        };
+        self.shard_of[id] = Some(shard);
+        self.queues[shard].submit(id);
+        shard
+    }
+
+    /// Re-queue an OOM-crashed task with priority (paper §4.2) on the shard
+    /// that already owns it — recovery never migrates a task.
+    pub fn submit_recovery(&mut self, id: TaskId) -> usize {
+        let shard = self.shard_of[id].expect("recovery of a never-admitted task");
+        self.queues[shard].submit_recovery(id);
+        shard
+    }
+
+    /// Next task for shard `shard`: recovery queue first, then FIFO primary.
+    pub fn pop_next(&mut self, shard: usize) -> Option<(TaskId, bool)> {
+        self.queues[shard].pop_next()
+    }
+
+    pub fn shard_of(&self, id: TaskId) -> Option<usize> {
+        self.shard_of.get(id).copied().flatten()
+    }
+
+    pub fn queue_len(&self, shard: usize) -> usize {
+        self.queues[shard].len()
+    }
+
+    /// Total queued tasks across every shard.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Cluster-wide capacity accounting: can this request EVER be placed?
+    /// Both checks are static (independent of occupancy): a per-GPU demand
+    /// above every schedulable target, or a GPU count no single admissible
+    /// server owns (multi-GPU tasks never span servers), can never succeed
+    /// no matter how long the task waits.
+    pub fn admissible(
+        &self,
+        n_gpus: usize,
+        demand_gb: Option<f64>,
+    ) -> Result<(), &'static str> {
+        if let Some(d) = demand_gb {
+            if d > self.max_target_gb + 1e-9 {
+                return Err("demand exceeds every schedulable target");
+            }
+        }
+        if n_gpus > self.max_gpus {
+            return Err("needs more GPUs than any admissible server owns");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adm(n_shards: usize, strategy: ShardAssign) -> Admission {
+        Admission::new(n_shards, 16, strategy, (4, 40.0))
+    }
+
+    #[test]
+    fn round_robin_cycles_shards() {
+        let mut a = adm(3, ShardAssign::RoundRobin);
+        let shards: Vec<usize> = (0..6).map(|id| a.submit(id, &[0; 3])).collect();
+        assert_eq!(shards, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a.queue_len(1), 2);
+        assert_eq!(a.shard_of(4), Some(1));
+        assert_eq!(a.shard_of(9), None, "not yet admitted");
+    }
+
+    #[test]
+    fn least_loaded_picks_emptiest_with_low_id_ties() {
+        let mut a = adm(3, ShardAssign::LeastLoaded);
+        assert_eq!(a.submit(0, &[2, 1, 1]), 1, "ties break to the lower id");
+        assert_eq!(a.submit(1, &[2, 2, 1]), 2);
+        assert_eq!(a.submit(2, &[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn locality_is_sticky_by_task_id() {
+        let mut a = adm(4, ShardAssign::Locality);
+        assert_eq!(a.submit(5, &[0; 4]), 1);
+        assert_eq!(a.submit(8, &[0; 4]), 0);
+        assert_eq!(a.submit(11, &[0; 4]), 3);
+    }
+
+    #[test]
+    fn recovery_returns_to_the_same_shard_with_priority() {
+        let mut a = adm(2, ShardAssign::RoundRobin);
+        a.submit(0, &[0; 2]); // shard 0
+        a.submit(1, &[0; 2]); // shard 1
+        a.submit(2, &[0; 2]); // shard 0
+        let (t, rec) = a.pop_next(0).unwrap();
+        assert_eq!((t, rec), (0, false));
+        assert_eq!(a.submit_recovery(0), 0, "recovery never migrates");
+        // recovery drains before the shard's primary queue
+        assert_eq!(a.pop_next(0), Some((0, true)));
+        assert_eq!(a.pop_next(0), Some((2, false)));
+        assert_eq!(a.pop_next(0), None);
+        assert_eq!(a.pop_next(1), Some((1, false)));
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn fifo_within_each_shard() {
+        let mut a = adm(2, ShardAssign::RoundRobin);
+        for id in 0..8 {
+            a.submit(id, &[0; 2]);
+        }
+        // shard 0 got 0,2,4,6; shard 1 got 1,3,5,7 — each pops in order
+        let order0: Vec<TaskId> =
+            std::iter::from_fn(|| a.pop_next(0)).map(|(t, _)| t).collect();
+        assert_eq!(order0, vec![0, 2, 4, 6]);
+        let order1: Vec<TaskId> =
+            std::iter::from_fn(|| a.pop_next(1)).map(|(t, _)| t).collect();
+        assert_eq!(order1, vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn capacity_accounting_rejects_impossible_requests() {
+        let a = adm(1, ShardAssign::RoundRobin);
+        assert!(a.admissible(4, Some(39.0)).is_ok());
+        assert!(a.admissible(1, Some(40.5)).is_err());
+        assert!(a.admissible(5, None).is_err());
+        assert!(a.admissible(1, None).is_ok());
+    }
+
+    #[test]
+    fn one_shard_is_one_queue_pair() {
+        // the serial degenerate case: everything lands on shard 0
+        let mut a = adm(1, ShardAssign::Locality);
+        for id in 0..4 {
+            assert_eq!(a.submit(id, &[0]), 0);
+        }
+        let order: Vec<TaskId> =
+            std::iter::from_fn(|| a.pop_next(0)).map(|(t, _)| t).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+}

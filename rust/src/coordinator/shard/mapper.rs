@@ -1,0 +1,74 @@
+//! Per-shard mapper worker state (DESIGN.md §9).
+//!
+//! Each mapper runs the paper's select → observe → map loop (§4.1) for its
+//! own head-of-queue task: at most one task is under observation per shard,
+//! so K shards hold K observation windows open concurrently. The mapping
+//! decision itself (preconditions, estimator demand, per-GPU policy) stays
+//! in the driver — the mapper is the replicated piece of coordinator state
+//! that used to be the serial `selected`/`window_done`/`rr_cursor` fields.
+
+use crate::sim::TaskId;
+
+/// A mapper's shard index is its position in the driver's mapper vector
+/// (not stored here — derivable state can't desynchronize).
+#[derive(Debug, Clone, Default)]
+pub struct Mapper {
+    /// Head-of-queue task under observation / awaiting mapping.
+    pub selected: Option<TaskId>,
+    /// The observation window for `selected` has elapsed.
+    pub window_done: bool,
+    /// A RetryMapping event for this shard is already in flight.
+    pub retry_scheduled: bool,
+    /// Round-Robin policy cursor — per shard, so concurrent mappers keep
+    /// independent cycles (with one shard this is the old global cursor).
+    pub rr_cursor: usize,
+}
+
+impl Mapper {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.selected.is_none()
+    }
+
+    /// Ready to (re-)attempt a mapping decision: a task is selected and its
+    /// observation window has elapsed.
+    pub fn ready(&self) -> bool {
+        self.selected.is_some() && self.window_done
+    }
+
+    /// Start observing `id` (a fresh window begins).
+    pub fn select(&mut self, id: TaskId) {
+        debug_assert!(self.selected.is_none(), "mapper already busy");
+        self.selected = Some(id);
+        self.window_done = false;
+    }
+
+    /// The selected task was dispatched (or failed) — back to idle.
+    pub fn clear(&mut self) {
+        self.selected = None;
+        self.window_done = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_observe_clear_cycle() {
+        let mut m = Mapper::new();
+        assert!(m.idle());
+        assert!(!m.ready());
+        m.select(7);
+        assert_eq!(m.selected, Some(7));
+        assert!(!m.ready(), "window not elapsed yet");
+        m.window_done = true;
+        assert!(m.ready());
+        m.clear();
+        assert!(m.idle());
+        assert!(!m.window_done, "clear resets the window");
+    }
+}

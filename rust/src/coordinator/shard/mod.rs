@@ -1,0 +1,18 @@
+//! Sharded coordination (DESIGN.md §9): a global [`Admission`] front-end
+//! that owns arrival intake, the per-shard primary/recovery queues and
+//! cluster-wide capacity accounting, feeding N per-shard [`Mapper`] workers.
+//!
+//! The paper's pipeline observes ONE selected task for a full monitoring
+//! window before every mapping decision (§4.1, Fig. 7), capping mapping
+//! throughput at one task per window regardless of cluster size. Sharding
+//! overlaps K observation windows: each mapper runs its own select →
+//! observe → map state machine over the shared cluster view, while
+//! admission keeps task routing deterministic and FIFO within a shard.
+//! With `shards = 1` the subsystem degenerates to the paper's serial
+//! coordinator, event-for-event.
+
+pub mod admission;
+pub mod mapper;
+
+pub use admission::Admission;
+pub use mapper::Mapper;

@@ -120,7 +120,7 @@ pub fn run(artifacts_dir: &str) -> Result<(), String> {
         "Reading: collocation gains persist at every size; the serial\n\
          select→observe→map pipeline (60 s window per decision) increasingly\n\
          dominates waiting time as the cluster grows — the bottleneck the\n\
-         ROADMAP's sharded-coordinator work removes."
+         sharded coordinator removes (`repro shard_scale`, `--shards K`)."
     );
     Ok(())
 }

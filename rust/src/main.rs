@@ -5,6 +5,7 @@
 //! carma run   [--trace 60|90|N] [--policy magm] [--estimator gpumemnet]
 //!             [--colloc mps] [--smact 0.8] [--min-free 5] [--margin 2]
 //!             [--servers N] [--gpus-per-server G] [--power-cap W]
+//!             [--shards K] [--shard-assign round-robin|least-loaded|locality]
 //!             [--seed N] [--config carma.toml]
 //! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
 //! carma zoo                                        (print the Table 3 zoo)
@@ -12,7 +13,7 @@
 
 use carma::cli;
 use carma::config::schema::{
-    CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, ServerConfig,
+    CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, ServerConfig, ShardAssign,
 };
 use carma::coordinator::carma::{run_label, run_trace};
 use carma::estimators;
@@ -24,7 +25,7 @@ use carma::workload::trace::{trace_60, trace_90, trace_cluster};
 
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
-    "servers", "gpus-per-server", "power-cap", "seed", "config",
+    "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "seed", "config",
 ];
 
 fn main() {
@@ -72,6 +73,8 @@ fn usage() {
          \x20 --servers N        number of servers in the cluster (default 1)\n\
          \x20 --gpus-per-server G  GPUs per server (default 4)\n\
          \x20 --power-cap W      per-server power envelope in watts (default off)\n\
+         \x20 --shards K         concurrent mapper shards (default 1 = serial paper pipeline)\n\
+         \x20 --shard-assign S   round-robin|least-loaded|locality (default round-robin)\n\
          \x20 --seed N           trace seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\n\
          EXPERIMENTS: {}",
@@ -149,6 +152,14 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
     if let Some(w) = args.opt_f64("power-cap").map_err(|e| e.to_string())? {
         cfg.cluster.power_cap_w = if w <= 0.0 { None } else { Some(w) };
     }
+    if let Some(k) = args.opt_u64("shards").map_err(|e| e.to_string())? {
+        // range (1..=256) is enforced by cfg.validate() below
+        cfg.coordinator.shards = k as usize;
+    }
+    if let Some(s) = args.opt("shard-assign") {
+        cfg.coordinator.assign =
+            ShardAssign::parse(s).ok_or_else(|| format!("unknown shard-assign '{s}'"))?;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
     }
@@ -180,18 +191,33 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
     };
     let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
     let label = run_label(&cfg, est.name());
+    let shards = cfg.coordinator.shards;
     println!(
-        "running {} over {} ({} tasks, {} server(s) / {} GPUs, seed {})\n",
+        "running {} over {} ({} tasks, {} server(s) / {} GPUs, {} shard(s), seed {})\n",
         label,
         trace.name,
         trace.tasks.len(),
         cfg.cluster.n_servers(),
         total_gpus,
+        shards,
         cfg.seed
     );
     let out = run_trace(cfg, est, &trace, &label);
     println!("{}", RunReport::header());
     println!("{}", out.report.row());
+    if shards > 1 {
+        println!();
+        for s in &out.report.per_shard {
+            println!(
+                "  shard {:>2}: {:>4} tasks, {:>4} decisions ({:.2}/min), mean wait {:.1} m",
+                s.shard,
+                s.tasks,
+                s.decisions,
+                s.decisions_per_min(out.report.trace_total_min),
+                s.mean_wait_min
+            );
+        }
+    }
     println!("\n{} simulation events processed", out.events);
     Ok(())
 }

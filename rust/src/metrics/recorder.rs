@@ -17,6 +17,10 @@ pub struct TaskTiming {
     pub dispatched_s: Option<f64>,
     pub completed_s: Option<f64>,
     pub oom_crashes: u32,
+    /// Coordinator shard admission routed this task to (DESIGN.md §9).
+    pub assigned_shard: Option<usize>,
+    /// Mapping decisions that dispatched this task (> 1 after recovery).
+    pub dispatches: u32,
 }
 
 /// Collects everything the evaluation section reports.
@@ -30,6 +34,10 @@ pub struct Recorder {
     mem_integral: Vec<f64>,
     pub oom_total: u64,
     pub failed_total: u64,
+    /// Configured coordinator shard count (DESIGN.md §9) — the report's
+    /// per-shard stats cover all of them, including shards that never
+    /// received a task (e.g. least-loaded routing under light arrivals).
+    pub n_shards: usize,
     pub first_arrival_s: Option<f64>,
     pub last_completion_s: f64,
     /// Keep every k-th monitor sample in the timeline (1 Hz base rate).
@@ -48,6 +56,7 @@ impl Recorder {
             mem_integral: vec![0.0; n_gpus],
             oom_total: 0,
             failed_total: 0,
+            n_shards: 1,
             first_arrival_s: None,
             last_completion_s: 0.0,
             timeline_stride: 15,
@@ -61,18 +70,22 @@ impl Recorder {
         self.first_arrival_s = Some(self.first_arrival_s.map_or(t, |x: f64| x.min(t)));
     }
 
-    pub fn on_dispatch(&mut self, task: TaskId, t: f64) {
-        // re-dispatches after OOM keep the FIRST dispatch for waiting time?
-        // No — the paper counts waiting as time in queue before execution
-        // *begins*; a recovered task waits again, so we keep the LAST
-        // dispatch for execution-time accounting and the first for waiting.
+    /// Admission routed `task` to `shard` (recorded once, at first intake).
+    pub fn on_assigned(&mut self, task: TaskId, shard: usize) {
         let tt = &mut self.tasks[task];
-        if tt.dispatched_s.is_none() {
-            tt.dispatched_s = Some(t);
-        } else {
-            // recovered task: execution restarts
-            tt.dispatched_s = Some(tt.dispatched_s.unwrap().min(t));
+        if tt.assigned_shard.is_none() {
+            tt.assigned_shard = Some(shard);
         }
+    }
+
+    pub fn on_dispatch(&mut self, task: TaskId, t: f64) {
+        // waiting time keeps the FIRST dispatch (the paper counts time in
+        // queue before execution first begins); re-dispatches after OOM only
+        // bump the decision counter. map_or keeps this total: a re-dispatch
+        // recorded before the first set is just taken as the first.
+        let tt = &mut self.tasks[task];
+        tt.dispatches += 1;
+        tt.dispatched_s = Some(tt.dispatched_s.map_or(t, |d| d.min(t)));
     }
 
     pub fn on_completion(&mut self, task: TaskId, t: f64) {
@@ -207,6 +220,27 @@ mod tests {
         assert!((r.total_energy_mj() - (200.0 + 50.0) * 100.0 / 1e6).abs() < 1e-12);
         assert!((r.mean_smact() - 0.25).abs() < 1e-9);
         assert!((r.mean_mem_used_gb() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_keeps_first_time_and_counts_decisions() {
+        let mut r = Recorder::new(1, 1);
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 60.0);
+        r.on_dispatch(0, 200.0); // recovery re-dispatch
+        assert_eq!(r.tasks[0].dispatched_s, Some(60.0));
+        assert_eq!(r.tasks[0].dispatches, 2);
+        assert_eq!(r.avg_waiting_s(), 60.0);
+    }
+
+    #[test]
+    fn shard_assignment_is_sticky() {
+        let mut r = Recorder::new(2, 1);
+        r.on_assigned(0, 3);
+        r.on_assigned(0, 1); // later calls don't reroute the record
+        r.on_assigned(1, 0);
+        assert_eq!(r.tasks[0].assigned_shard, Some(3));
+        assert_eq!(r.tasks[1].assigned_shard, Some(0));
     }
 
     #[test]

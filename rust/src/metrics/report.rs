@@ -5,6 +5,31 @@ use crate::util::units::to_minutes;
 
 use super::recorder::Recorder;
 
+/// Per-shard counters of the sharded coordinator (DESIGN.md §9). A serial
+/// run reports exactly one entry (shard 0).
+#[derive(Debug, Clone)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Tasks admission routed to this shard.
+    pub tasks: usize,
+    /// Mapping decisions this shard's mapper dispatched (re-dispatches
+    /// after recovery included).
+    pub decisions: u64,
+    /// Mean queueing delay (first dispatch − arrival) of this shard's tasks.
+    pub mean_wait_min: f64,
+}
+
+impl ShardStat {
+    /// Mapping throughput in decisions per simulated minute.
+    pub fn decisions_per_min(&self, trace_total_min: f64) -> f64 {
+        if trace_total_min <= 0.0 {
+            0.0
+        } else {
+            self.decisions as f64 / trace_total_min
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub label: String,
@@ -18,6 +43,9 @@ pub struct RunReport {
     pub mean_mem_used_gb: f64,
     pub completed: usize,
     pub total_tasks: usize,
+    /// Per-shard queueing delay and mapping throughput — one entry per
+    /// configured coordinator shard (idle shards report zero tasks).
+    pub per_shard: Vec<ShardStat>,
 }
 
 impl RunReport {
@@ -34,7 +62,13 @@ impl RunReport {
             mean_mem_used_gb: r.mean_mem_used_gb(),
             completed: r.completed_count(),
             total_tasks: r.tasks.len(),
+            per_shard: shard_stats(r),
         }
+    }
+
+    /// Total mapping decisions across shards (dispatches incl. recovery).
+    pub fn total_decisions(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.decisions).sum()
     }
 
     pub fn header() -> String {
@@ -60,6 +94,18 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
+        let shards = self
+            .per_shard
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("shard", json::num(s.shard as f64)),
+                    ("tasks", json::num(s.tasks as f64)),
+                    ("decisions", json::num(s.decisions as f64)),
+                    ("mean_wait_min", json::num(s.mean_wait_min)),
+                ])
+            })
+            .collect();
         json::obj(vec![
             ("label", json::s(&self.label)),
             ("trace_total_min", json::num(self.trace_total_min)),
@@ -72,8 +118,48 @@ impl RunReport {
             ("mean_mem_used_gb", json::num(self.mean_mem_used_gb)),
             ("completed", json::num(self.completed as f64)),
             ("total_tasks", json::num(self.total_tasks as f64)),
+            ("per_shard", json::arr(shards)),
         ])
     }
+}
+
+/// Aggregate the recorder's per-task shard routing into per-shard counters.
+/// Covers every configured shard — idle shards report zero tasks rather
+/// than vanishing (least-loaded routing can leave trailing shards unused).
+fn shard_stats(r: &Recorder) -> Vec<ShardStat> {
+    let n_shards = r
+        .tasks
+        .iter()
+        .filter_map(|t| t.assigned_shard)
+        .max()
+        .map_or(0, |m| m + 1)
+        .max(r.n_shards);
+    (0..n_shards)
+        .map(|s| {
+            let mut tasks = 0usize;
+            let mut decisions = 0u64;
+            let mut wait_sum = 0.0f64;
+            let mut waited = 0usize;
+            for t in r.tasks.iter().filter(|t| t.assigned_shard == Some(s)) {
+                tasks += 1;
+                decisions += t.dispatches as u64;
+                if let Some(d) = t.dispatched_s {
+                    wait_sum += d - t.arrival_s;
+                    waited += 1;
+                }
+            }
+            ShardStat {
+                shard: s,
+                tasks,
+                decisions,
+                mean_wait_min: if waited == 0 {
+                    0.0
+                } else {
+                    to_minutes(wait_sum / waited as f64)
+                },
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -96,5 +182,48 @@ mod tests {
         assert_eq!(j.f64_of("oom_crashes"), 0.0);
         assert!(!rep.row().is_empty());
         assert!(!RunReport::header().is_empty());
+    }
+
+    #[test]
+    fn per_shard_stats_aggregate_routing() {
+        let mut r = Recorder::new(4, 1);
+        for (task, shard, arr, disp) in
+            [(0usize, 0usize, 0.0, 60.0), (1, 1, 0.0, 120.0), (2, 0, 30.0, 150.0)]
+        {
+            r.on_arrival(task, arr);
+            r.on_assigned(task, shard);
+            r.on_dispatch(task, disp);
+        }
+        r.on_dispatch(2, 400.0); // recovery re-dispatch: decision #2, wait unchanged
+        r.on_arrival(3, 5.0); // never assigned/dispatched (failed fast)
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.per_shard.len(), 2);
+        assert_eq!(rep.per_shard[0].tasks, 2);
+        assert_eq!(rep.per_shard[0].decisions, 3);
+        // shard 0 waits: 60 and 120 s -> mean 1.5 min
+        assert!((rep.per_shard[0].mean_wait_min - 1.5).abs() < 1e-9);
+        assert_eq!(rep.per_shard[1].tasks, 1);
+        assert_eq!(rep.per_shard[1].decisions, 1);
+        assert!((rep.per_shard[1].mean_wait_min - 2.0).abs() < 1e-9);
+        assert_eq!(rep.total_decisions(), 4);
+        assert!((rep.per_shard[0].decisions_per_min(3.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_trailing_shards_still_reported() {
+        // least-loaded routing can park everything on shard 0; a 4-shard
+        // run must still report 4 entries, not 1
+        let mut r = Recorder::new(2, 1);
+        r.n_shards = 4;
+        r.on_arrival(0, 0.0);
+        r.on_assigned(0, 0);
+        r.on_dispatch(0, 60.0);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.per_shard.len(), 4);
+        assert_eq!(rep.per_shard[0].tasks, 1);
+        for s in &rep.per_shard[1..] {
+            assert_eq!((s.tasks, s.decisions), (0, 0));
+            assert_eq!(s.mean_wait_min, 0.0);
+        }
     }
 }

@@ -1,4 +1,11 @@
 //! Event heap + simulated clock.
+//!
+//! The engine supports multiple *lanes* — independent event sources (one per
+//! coordinator shard plus a global lane) merged deterministically on pop by
+//! `(time, seq)` with a single global sequence counter. Because the merge
+//! order is a total order independent of which lane an event sits in, a
+//! multi-lane engine pops the exact same stream a single-heap engine would —
+//! fixed-seed runs stay bit-identical at any shard count (DESIGN.md §9).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -13,8 +20,9 @@ pub enum Event {
     /// The 1-minute observation window for the selected task elapsed
     /// (paper §4.1); the mapper may now decide.
     WindowDone(TaskId),
-    /// Periodic re-attempt at mapping a selected-but-unmappable task.
-    RetryMapping,
+    /// Periodic re-attempt at mapping the named shard's selected-but-
+    /// unmappable task.
+    RetryMapping(usize),
     /// Memory-ramp stage `k` of a dispatched task (staircase allocation).
     Ramp(TaskId, u8),
     /// Task finished its work. Version-guarded: stale completions (scheduled
@@ -60,12 +68,26 @@ impl PartialOrd for Entry {
 
 /// The event queue + clock. Monotonicity is enforced: scheduling in the past
 /// panics (it would silently corrupt causality).
-#[derive(Debug, Default)]
+///
+/// One or more lanes back the queue; `schedule`/`schedule_in` target lane 0,
+/// the sharded coordinator gives each shard its own lane via `schedule_on`.
+#[derive(Debug)]
 pub struct Engine {
-    heap: BinaryHeap<Entry>,
+    lanes: Vec<BinaryHeap<Entry>>,
     now: f64,
     seq: u64,
     pops: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine {
+            lanes: vec![BinaryHeap::new()],
+            now: 0.0,
+            seq: 0,
+            pops: 0,
+        }
+    }
 }
 
 impl Engine {
@@ -78,9 +100,28 @@ impl Engine {
     /// work at 32+ GPU scale).
     pub fn with_capacity(n: usize) -> Self {
         Engine {
-            heap: BinaryHeap::with_capacity(n),
+            lanes: vec![BinaryHeap::with_capacity(n)],
             ..Self::default()
         }
+    }
+
+    /// `n_lanes` independent event sources (>= 1); lane 0 is pre-sized for
+    /// `capacity` events (the arrival bulk always lands there).
+    pub fn with_lanes(n_lanes: usize, capacity: usize) -> Self {
+        let n = n_lanes.max(1);
+        let mut lanes = Vec::with_capacity(n);
+        lanes.push(BinaryHeap::with_capacity(capacity));
+        for _ in 1..n {
+            lanes.push(BinaryHeap::new());
+        }
+        Engine {
+            lanes,
+            ..Self::default()
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
     }
 
     pub fn now(&self) -> f64 {
@@ -93,41 +134,70 @@ impl Engine {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.lanes.iter().map(|l| l.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.lanes.iter().all(|l| l.is_empty())
     }
 
-    /// Schedule `ev` at absolute time `t` (>= now).
+    /// Schedule `ev` at absolute time `t` (>= now) on lane 0.
     pub fn schedule(&mut self, t: f64, ev: Event) {
+        self.schedule_on(0, t, ev);
+    }
+
+    pub fn schedule_in(&mut self, dt: f64, ev: Event) {
+        self.schedule_in_on(0, dt, ev);
+    }
+
+    /// Schedule on a specific lane. The global `seq` counter makes the merge
+    /// order identical to a single shared heap.
+    pub fn schedule_on(&mut self, lane: usize, t: f64, ev: Event) {
         assert!(
             t >= self.now - 1e-9,
             "scheduling into the past: t={t} now={}",
             self.now
         );
         self.seq += 1;
-        self.heap.push(Entry {
+        self.lanes[lane].push(Entry {
             t: t.max(self.now),
             seq: self.seq,
             ev,
         });
     }
 
-    pub fn schedule_in(&mut self, dt: f64, ev: Event) {
+    pub fn schedule_in_on(&mut self, lane: usize, dt: f64, ev: Event) {
         assert!(dt >= 0.0, "negative delay {dt}");
-        self.schedule(self.now + dt, ev);
+        self.schedule_on(lane, self.now + dt, ev);
     }
 
-    /// Pop the next event, advancing the clock.
+    /// Pop the globally next event — the minimum `(t, seq)` across all lane
+    /// heads — advancing the clock.
+    ///
+    /// The head scan is linear in the lane count; callers keep lane counts
+    /// small (the coordinator caps `shards` at 256). A tournament tree over
+    /// lane heads is the upgrade path if lane counts ever grow past that.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|e| {
-            debug_assert!(e.t >= self.now - 1e-9);
-            self.now = e.t.max(self.now);
-            self.pops += 1;
-            (self.now, e.ev)
-        })
+        let mut best: Option<usize> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let Some(head) = lane.peek() else { continue };
+            let earlier = match best {
+                None => true,
+                Some(b) => {
+                    let bh = self.lanes[b].peek().expect("best lane has a head");
+                    head.t.total_cmp(&bh.t).then_with(|| head.seq.cmp(&bh.seq))
+                        == Ordering::Less
+                }
+            };
+            if earlier {
+                best = Some(i);
+            }
+        }
+        let e = self.lanes[best?].pop().expect("peeked lane pops");
+        debug_assert!(e.t >= self.now - 1e-9);
+        self.now = e.t.max(self.now);
+        self.pops += 1;
+        Some((self.now, e.ev))
     }
 }
 
@@ -241,6 +311,56 @@ mod tests {
         // the two 0.5s ties keep submission order (ids 1 then 3)
         assert_eq!(popped[0].1, 1);
         assert_eq!(popped[1].1, 3);
+    }
+
+    #[test]
+    fn lanes_merge_by_time_then_seq() {
+        // per-shard lanes must pop the exact stream one shared heap would
+        let mut e = Engine::with_lanes(3, 8);
+        e.schedule_on(1, 5.0, Event::TaskArrival(0)); // seq 1
+        e.schedule_on(2, 3.0, Event::TaskArrival(1)); // seq 2
+        e.schedule_on(0, 5.0, Event::TaskArrival(2)); // seq 3 (ties with seq 1)
+        e.schedule_on(2, 1.0, Event::TaskArrival(3)); // seq 4
+        let ids: Vec<_> = std::iter::from_fn(|| e.pop())
+            .map(|(_, ev)| match ev {
+                Event::TaskArrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![3, 1, 0, 2], "time order, FIFO-by-seq on ties");
+        assert_eq!(e.events_processed(), 4);
+    }
+
+    #[test]
+    fn lane_stream_identical_to_single_heap() {
+        // same schedule sequence through 1 lane and through 4 lanes must pop
+        // identically — the bit-determinism guarantee the sharded
+        // coordinator relies on (DESIGN.md §9)
+        let times = [7.0, 2.0, 2.0, 9.5, 0.0, 7.0, 3.25, 2.0];
+        let mut single = Engine::new();
+        let mut sharded = Engine::with_lanes(4, 8);
+        for (i, &t) in times.iter().enumerate() {
+            single.schedule(t, Event::TaskArrival(i));
+            sharded.schedule_on(i % 4, t, Event::TaskArrival(i));
+        }
+        let drain = |e: &mut Engine| -> Vec<(u64, Event)> {
+            std::iter::from_fn(|| e.pop()).map(|(t, ev)| (t.to_bits(), ev)).collect()
+        };
+        assert_eq!(drain(&mut single), drain(&mut sharded));
+    }
+
+    #[test]
+    fn lanes_advance_one_clock() {
+        let mut e = Engine::with_lanes(2, 4);
+        e.schedule_on(1, 10.0, Event::MonitorSample);
+        e.pop();
+        assert_eq!(e.now(), 10.0);
+        // now lane 0 scheduling is relative to the shared clock
+        e.schedule_in_on(0, 5.0, Event::MonitorSample);
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 15.0);
+        assert!(e.is_empty());
+        assert_eq!(e.n_lanes(), 2);
     }
 
     #[test]
