@@ -1,59 +1,152 @@
 //! Engine throughput as the cluster grows: simulated events per wall-clock
 //! second for 1→8 servers under the default MAGM+MPS setup (DESIGN.md §Perf:
-//! the coordinator must never be the bottleneck; this is the baseline the
-//! ROADMAP's sharded-engine work has to beat).
+//! the coordinator must never be the bottleneck).
+//!
+//! Two sweeps:
+//!  * the serial baseline (shards = 1, threads = 1) the PR-2 bench tracked;
+//!  * the parallel engine at shards = 4 with threads ∈ {1, 4} — the PR-3
+//!    acceptance row: at 8 servers, `--engine-threads 4` must deliver ≥ 2×
+//!    events/sec over the threaded-off run on a ≥ 4-core machine, with
+//!    byte-identical results (asserted here on the makespan bits).
+//!
+//! Every row is appended to the machine-readable `BENCH_sim.json` ledger so
+//! the perf trajectory is tracked across PRs. `CARMA_BENCH_SMOKE=1` runs a
+//! 1-iteration subset (ci.sh's bit-rot guard).
 
 use std::time::Instant;
 
-use carma::bench::black_box;
+use carma::bench::{black_box, save_bench_section, smoke_mode};
 use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
 use carma::coordinator::carma::run_trace;
 use carma::estimators;
+use carma::util::json::{self, Json};
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::trace::trace_cluster;
 
-fn main() {
-    let zoo = ModelZoo::load();
-    println!(
-        "{:<18} {:>6} {:>7} {:>12} {:>10} {:>12} {:>12}",
-        "cluster", "gpus", "tasks", "sim-events", "wall(s)", "events/s", "tasks/s"
-    );
-    for servers in [1usize, 2, 4, 8] {
-        let mut cfg = CarmaConfig {
-            policy: PolicyKind::Magm,
-            estimator: EstimatorKind::Oracle,
-            safety_margin_gb: 2.0,
-            ..Default::default()
-        };
-        cfg.cluster = ClusterConfig::homogeneous(servers, 4, 40.0);
-        let gpus = cfg.cluster.total_gpus();
-        let n_tasks = 8 * gpus;
-        let trace = trace_cluster(&zoo, n_tasks, gpus, 42);
+struct Row {
+    servers: usize,
+    gpus: usize,
+    tasks: usize,
+    shards: usize,
+    threads: usize,
+    events: u64,
+    wall_s: f64,
+    events_per_s: f64,
+    makespan_min: f64,
+    makespan_bits: u64,
+}
 
-        // one warm-up + three measured runs (whole-trace granularity: a run
-        // is seconds, not microseconds — the Bencher's calibration loop
-        // would only add noise here)
+fn measure(servers: usize, shards: usize, threads: usize, runs: u32, warmup: bool) -> Row {
+    let zoo = ModelZoo::load();
+    let mut cfg = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    cfg.cluster = ClusterConfig::homogeneous(servers, 4, 40.0);
+    cfg.coordinator.shards = shards;
+    cfg.engine.threads = threads;
+    let gpus = cfg.cluster.total_gpus();
+    let n_tasks = 8 * gpus;
+    let trace = trace_cluster(&zoo, n_tasks, gpus, 42);
+
+    // whole-trace granularity: a run is seconds, not microseconds — the
+    // Bencher's calibration loop would only add noise here
+    if warmup {
         let est = estimators::build(cfg.estimator, "artifacts").unwrap();
         black_box(run_trace(cfg.clone(), est, &trace, "warmup").report.completed);
-        let mut events = 0u64;
-        let t0 = Instant::now();
-        const RUNS: u32 = 3;
-        for _ in 0..RUNS {
-            let est = estimators::build(cfg.estimator, "artifacts").unwrap();
-            let out = run_trace(cfg.clone(), est, &trace, "bench");
-            assert_eq!(out.report.completed, n_tasks);
-            events += out.events;
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "{:<18} {:>6} {:>7} {:>12} {:>10.2} {:>12.0} {:>12.1}",
-            format!("{servers}x4-server"),
-            gpus,
-            n_tasks,
-            events / RUNS as u64,
-            wall / RUNS as f64,
-            events as f64 / wall,
-            (RUNS as usize * n_tasks) as f64 / wall,
-        );
     }
+    let mut events = 0u64;
+    let mut makespan_min = 0.0f64;
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        let est = estimators::build(cfg.estimator, "artifacts").unwrap();
+        let out = run_trace(cfg.clone(), est, &trace, "bench");
+        assert_eq!(out.report.completed, n_tasks);
+        events += out.events;
+        makespan_min = out.report.trace_total_min;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Row {
+        servers,
+        gpus,
+        tasks: n_tasks,
+        shards,
+        threads,
+        events: events / runs as u64,
+        wall_s: wall / runs as f64,
+        events_per_s: events as f64 / wall,
+        makespan_min,
+        makespan_bits: makespan_min.to_bits(),
+    }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<18} {:>6} {:>7} {:>7} {:>8} {:>12} {:>10.2} {:>12.0} {:>11.1}",
+        format!("{}x4-server", r.servers),
+        r.gpus,
+        r.tasks,
+        r.shards,
+        r.threads,
+        r.events,
+        r.wall_s,
+        r.events_per_s,
+        r.makespan_min,
+    );
+}
+
+fn to_json(r: &Row) -> Json {
+    json::obj(vec![
+        ("servers", json::num(r.servers as f64)),
+        ("gpus", json::num(r.gpus as f64)),
+        ("tasks", json::num(r.tasks as f64)),
+        ("shards", json::num(r.shards as f64)),
+        ("threads", json::num(r.threads as f64)),
+        ("events", json::num(r.events as f64)),
+        ("wall_s", json::num(r.wall_s)),
+        ("events_per_s", json::num(r.events_per_s)),
+        ("makespan_min", json::num(r.makespan_min)),
+    ])
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let runs: u32 = if smoke { 1 } else { 3 };
+    println!(
+        "{:<18} {:>6} {:>7} {:>7} {:>8} {:>12} {:>10} {:>12} {:>11}",
+        "cluster", "gpus", "tasks", "shards", "threads", "sim-events", "wall(s)", "events/s", "total(m)"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // serial baseline sweep (the PR-2 rows)
+    let server_sweep: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+    for &servers in server_sweep {
+        let r = measure(servers, 1, 1, runs, !smoke);
+        print_row(&r);
+        rows.push(r);
+    }
+
+    // parallel engine at the acceptance point: 8 servers, shards = 4
+    let par_servers = if smoke { 2 } else { 8 };
+    let serial4 = measure(par_servers, 4, 1, runs, !smoke);
+    print_row(&serial4);
+    let threaded4 = measure(par_servers, 4, 4, runs, !smoke);
+    print_row(&threaded4);
+    assert_eq!(
+        serial4.makespan_bits, threaded4.makespan_bits,
+        "threaded results must be byte-identical to serial"
+    );
+    println!(
+        "\n{}x4-server, 4 shards: threads 1→4 events/sec x{:.2} \
+         (>= 2.0 expected on a >= 4-core runner)",
+        par_servers,
+        threaded4.events_per_s / serial4.events_per_s.max(1e-9),
+    );
+
+    rows.push(serial4);
+    rows.push(threaded4);
+    save_bench_section("cluster_scale", rows.iter().map(to_json).collect());
 }

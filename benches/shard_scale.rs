@@ -1,70 +1,114 @@
-//! Mapping throughput as the coordinator shards: decisions per simulated
-//! minute (the metric the serial pipeline caps at 1/min — paper §4.1) and
-//! wall-clock cost per run for shards ∈ {1, 2, 4, 8} on the 8×4-server,
-//! 256-task cluster trace (DESIGN.md §9 / §Perf).
+//! Mapping throughput as the coordinator shards and the engine threads:
+//! decisions per simulated minute (the metric the serial pipeline caps at
+//! 1/min — paper §4.1) and wall-clock cost per run for shards ∈ {1, 2, 4, 8}
+//! × engine threads ∈ {1, 4} on the 8×4-server, 256-task cluster trace
+//! (DESIGN.md §9/§10). Threads never change results — only wall time — and
+//! this bench asserts that on the makespan bits.
+//!
+//! Rows land in `BENCH_sim.json` (perf trajectory across PRs);
+//! `CARMA_BENCH_SMOKE=1` runs a 1-iteration subset for CI.
 
 use std::time::Instant;
 
-use carma::bench::black_box;
+use carma::bench::{black_box, save_bench_section, smoke_mode};
 use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
 use carma::coordinator::carma::run_trace;
 use carma::estimators;
+use carma::util::json::{self, Json};
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::trace::trace_cluster;
 
+const SERVERS: usize = 8;
+const GPUS_PER_SERVER: usize = 4;
+const TASKS: usize = 256;
+
 fn main() {
+    let smoke = smoke_mode();
+    let runs: u32 = if smoke { 1 } else { 3 };
     let zoo = ModelZoo::load();
-    const SERVERS: usize = 8;
-    const GPUS_PER_SERVER: usize = 4;
-    const TASKS: usize = 256;
     let total_gpus = SERVERS * GPUS_PER_SERVER;
     let trace = trace_cluster(&zoo, TASKS, total_gpus, 42);
 
     println!(
-        "{:<8} {:>9} {:>9} {:>10} {:>13} {:>12} {:>10}",
-        "shards", "total(m)", "wait(m)", "decisions", "dec/sim-min", "dec/wall-s", "wall(s)"
+        "{:<8} {:>8} {:>9} {:>9} {:>10} {:>13} {:>12} {:>10}",
+        "shards", "threads", "total(m)", "wait(m)", "decisions", "dec/sim-min", "dec/wall-s", "wall(s)"
     );
-    for shards in [1usize, 2, 4, 8] {
-        let mk_cfg = || {
-            let mut cfg = CarmaConfig {
-                policy: PolicyKind::Magm,
-                estimator: EstimatorKind::Oracle,
-                safety_margin_gb: 2.0,
-                ..Default::default()
-            };
-            cfg.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
-            cfg.coordinator.shards = shards;
-            cfg
-        };
 
-        // one warm-up + three measured whole-trace runs (same granularity
-        // rationale as benches/cluster_scale.rs)
-        let est = estimators::build(EstimatorKind::Oracle, "artifacts").unwrap();
-        black_box(run_trace(mk_cfg(), est, &trace, "warmup").report.completed);
-        const RUNS: u32 = 3;
-        let mut decisions = 0u64;
-        let mut last_total_min = 0.0;
-        let mut last_wait_min = 0.0;
-        let t0 = Instant::now();
-        for _ in 0..RUNS {
-            let est = estimators::build(EstimatorKind::Oracle, "artifacts").unwrap();
-            let out = run_trace(mk_cfg(), est, &trace, "bench");
-            assert_eq!(out.report.completed, TASKS);
-            decisions += out.report.total_decisions();
-            last_total_min = out.report.trace_total_min;
-            last_wait_min = out.report.avg_waiting_min;
+    let shard_sweep: &[usize] = if smoke { &[4] } else { &[1, 2, 4, 8] };
+    let thread_sweep: &[usize] = &[1, 4];
+    let mut rows: Vec<Json> = Vec::new();
+    for &shards in shard_sweep {
+        let mut makespan_bits: Option<u64> = None;
+        for &threads in thread_sweep {
+            let mk_cfg = || {
+                let mut cfg = CarmaConfig {
+                    policy: PolicyKind::Magm,
+                    estimator: EstimatorKind::Oracle,
+                    safety_margin_gb: 2.0,
+                    ..Default::default()
+                };
+                cfg.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+                cfg.coordinator.shards = shards;
+                cfg.engine.threads = threads;
+                cfg
+            };
+
+            // one warm-up + `runs` measured whole-trace runs (same
+            // granularity rationale as benches/cluster_scale.rs)
+            if !smoke {
+                let est = estimators::build(EstimatorKind::Oracle, "artifacts").unwrap();
+                black_box(run_trace(mk_cfg(), est, &trace, "warmup").report.completed);
+            }
+            let mut decisions = 0u64;
+            let mut events = 0u64;
+            let mut last_total_min = 0.0;
+            let mut last_wait_min = 0.0;
+            let t0 = Instant::now();
+            for _ in 0..runs {
+                let est = estimators::build(EstimatorKind::Oracle, "artifacts").unwrap();
+                let out = run_trace(mk_cfg(), est, &trace, "bench");
+                assert_eq!(out.report.completed, TASKS);
+                decisions += out.report.total_decisions();
+                events += out.events;
+                last_total_min = out.report.trace_total_min;
+                last_wait_min = out.report.avg_waiting_min;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            // bit-determinism across thread counts, per shard level
+            match makespan_bits {
+                None => makespan_bits = Some(last_total_min.to_bits()),
+                Some(bits) => assert_eq!(
+                    bits,
+                    last_total_min.to_bits(),
+                    "{shards} shards: threads changed the results"
+                ),
+            }
+            let per_run_decisions = decisions / runs as u64;
+            println!(
+                "{:<8} {:>8} {:>9.1} {:>9.1} {:>10} {:>13.2} {:>12.0} {:>10.2}",
+                shards,
+                threads,
+                last_total_min,
+                last_wait_min,
+                per_run_decisions,
+                per_run_decisions as f64 / last_total_min.max(1e-9),
+                decisions as f64 / wall,
+                wall / runs as f64,
+            );
+            rows.push(json::obj(vec![
+                ("servers", json::num(SERVERS as f64)),
+                ("gpus", json::num(total_gpus as f64)),
+                ("tasks", json::num(TASKS as f64)),
+                ("shards", json::num(shards as f64)),
+                ("threads", json::num(threads as f64)),
+                ("decisions", json::num(per_run_decisions as f64)),
+                ("events", json::num((events / runs as u64) as f64)),
+                ("events_per_s", json::num(events as f64 / wall)),
+                ("wall_s", json::num(wall / runs as f64)),
+                ("makespan_min", json::num(last_total_min)),
+                ("wait_min", json::num(last_wait_min)),
+            ]));
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let per_run_decisions = decisions / RUNS as u64;
-        println!(
-            "{:<8} {:>9.1} {:>9.1} {:>10} {:>13.2} {:>12.0} {:>10.2}",
-            shards,
-            last_total_min,
-            last_wait_min,
-            per_run_decisions,
-            per_run_decisions as f64 / last_total_min.max(1e-9),
-            decisions as f64 / wall,
-            wall / RUNS as f64,
-        );
     }
+    save_bench_section("shard_scale", rows);
 }

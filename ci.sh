@@ -56,5 +56,26 @@ fi
 printf '%s\n' "$C" | tail -n 8
 echo "sharded smoke OK: identical report at 4 shards across both runs"
 
+step "threaded smoke: --engine-threads 4 results JSON vs serial, byte-for-byte"
+THREAD_BASE=(run --servers 8 --gpus-per-server 4 --shards 4 --estimator oracle --margin 2 --seed 7 --json)
+E="$("$BIN" "${THREAD_BASE[@]}")"
+F="$("$BIN" "${THREAD_BASE[@]}" --engine-threads 4)"
+if [ "$E" != "$F" ]; then
+    echo "DETERMINISM FAILURE: --engine-threads 4 diverged from the serial engine" >&2
+    diff <(printf '%s\n' "$E") <(printf '%s\n' "$F") >&2 || true
+    exit 1
+fi
+printf '%s\n' "$F" | head -n 6
+echo "threaded smoke OK: byte-identical results JSON at 1 and 4 engine threads"
+
+step "bench smoke: 1-iteration bench binaries (bit-rot guard)"
+# write the smoke rows to a throwaway ledger — the repo-root BENCH_sim.json
+# accumulates real full-sweep measurements across PRs and must not be
+# clobbered by the 1-iteration subset
+SMOKE_JSON="$(mktemp -t carma-bench-smoke-XXXXXX.json)"
+CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench cluster_scale
+CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench shard_scale
+rm -f "$SMOKE_JSON"
+
 echo
 echo "CI green."

@@ -6,7 +6,38 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{self, Json};
 use crate::util::stats;
+
+/// Where the perf-trajectory ledger lives (repo root when run via cargo);
+/// override with the `CARMA_BENCH_JSON` env var.
+pub fn bench_json_path() -> String {
+    std::env::var("CARMA_BENCH_JSON").unwrap_or_else(|_| "BENCH_sim.json".to_string())
+}
+
+/// Benches run one measured iteration instead of their full sweep when
+/// `CARMA_BENCH_SMOKE` is set (ci.sh uses this so the bench binaries cannot
+/// bit-rot without anyone noticing).
+pub fn smoke_mode() -> bool {
+    std::env::var("CARMA_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Merge `rows` under `section` into the machine-readable bench ledger
+/// (`BENCH_sim.json`), preserving every other section so the perf
+/// trajectory accumulates across benches and PRs.
+pub fn save_bench_section(section: &str, rows: Vec<Json>) {
+    let path = bench_json_path();
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|j| j.as_obj().is_some())
+        .unwrap_or_else(|| json::obj(vec![]));
+    doc.set(section, json::arr(rows));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  -> {path} [{section}]"),
+        Err(e) => eprintln!("  !! could not write {path}: {e}"),
+    }
+}
 
 pub struct BenchResult {
     pub name: String,

@@ -164,6 +164,25 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Parallel-engine configuration (TOML `[engine]`, DESIGN.md §10).
+///
+/// The engine stays bit-deterministic at every thread count: worker threads
+/// only run speculative monitor-snapshot and policy-scan work, and every
+/// result commits on the driver thread in `(time, seq)` order. `threads`
+/// therefore only changes wall-clock speed, never results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Threads the simulation engine runs on. 1 = serial (the default);
+    /// 0 = auto (one per available core, capped at 8).
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: 1 }
+    }
+}
+
 /// One simulated server (DGX Station A100 defaults, paper Table 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -313,6 +332,7 @@ pub struct CarmaConfig {
     pub seed: u64,
     pub cluster: ClusterConfig,
     pub coordinator: CoordinatorConfig,
+    pub engine: EngineConfig,
     pub policy: PolicyKind,
     pub colloc: CollocationMode,
     pub estimator: EstimatorKind,
@@ -334,6 +354,7 @@ impl Default for CarmaConfig {
             seed: 42,
             cluster: ClusterConfig::default(),
             coordinator: CoordinatorConfig::default(),
+            engine: EngineConfig::default(),
             policy: PolicyKind::Magm,
             colloc: CollocationMode::Mps,
             estimator: EstimatorKind::GpuMemNet,
@@ -467,6 +488,12 @@ impl CarmaConfig {
             self.coordinator.assign = ShardAssign::parse(v)
                 .ok_or_else(|| format!("unknown shard-assignment strategy '{v}'"))?;
         }
+        if let Some(v) = doc.get("engine.threads").and_then(|v| v.as_i64()) {
+            // range-checked centrally in validate(); only guard the
+            // negative-to-usize wrap here
+            self.engine.threads = usize::try_from(v)
+                .map_err(|_| format!("engine.threads must be >= 0, got {v}"))?;
+        }
         if let Some(v) = doc.get("policy.kind").and_then(|v| v.as_str()) {
             self.policy = PolicyKind::parse(v).ok_or_else(|| format!("unknown policy '{v}'"))?;
         }
@@ -569,6 +596,15 @@ impl CarmaConfig {
             return Err(format!(
                 "coordinator.shards must be in 1..=256, got {}",
                 self.coordinator.shards
+            ));
+        }
+        // 0 = auto-detect; anything past 64 is certainly a typo — the
+        // engine's fan-out width (servers + shards per quantum) saturates
+        // far below that
+        if self.engine.threads > 64 {
+            return Err(format!(
+                "engine.threads must be in 0..=64 (0 = auto), got {}",
+                self.engine.threads
             ));
         }
         if let Some(c) = self.smact_cap {
@@ -690,6 +726,35 @@ mod tests {
         assert_eq!(ShardAssign::parse("least_loaded"), Some(ShardAssign::LeastLoaded));
         assert_eq!(ShardAssign::parse("sticky"), Some(ShardAssign::Locality));
         assert_eq!(ShardAssign::parse("nope"), None);
+    }
+
+    #[test]
+    fn engine_section_sets_threads() {
+        // the default stays the serial engine
+        let c = CarmaConfig::default();
+        assert_eq!(c.engine.threads, 1);
+
+        let doc = toml::parse("[engine]\nthreads = 4\n").unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.engine.threads, 4);
+
+        // 0 = auto-detect is a legal setting
+        let doc = toml::parse("[engine]\nthreads = 0\n").unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.engine.threads, 0);
+
+        // negatives and absurd counts are config errors
+        let doc = toml::parse("[engine]\nthreads = -2\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[engine]\nthreads = 1000\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let mut c = CarmaConfig::default();
+        c.engine.threads = 64;
+        assert!(c.validate().is_ok());
+        c.engine.threads = 65;
+        assert!(c.validate().is_err());
     }
 
     #[test]

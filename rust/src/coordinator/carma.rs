@@ -12,6 +12,19 @@
 //! lane, so K shards keep K observation windows open concurrently instead
 //! of serializing them. One shard — the default — reproduces the paper's
 //! serial pipeline event-for-event.
+//!
+//! With `cfg.engine.threads > 1` the driver additionally runs the
+//! conservative parallel step (DESIGN.md §10): at each merge barrier it
+//! drains the frontier of events sharing the current time quantum, fans the
+//! per-shard mapper work — the O(GPUs) monitor-snapshot build and the
+//! policy scans — out across a [`WorkerPool`], and commits every result on
+//! this thread in strict `(time, seq)` order. Speculative plans are tagged
+//! with the `(state_epoch, now)` they were computed against and are
+//! discarded (and recomputed inline) whenever a commit moved the cluster
+//! under them, which is what makes a threaded run byte-identical to the
+//! serial one rather than merely statistically close.
+
+use std::sync::Arc;
 
 use crate::cluster::gpu::ResidentTask;
 use crate::cluster::power::gpu_power_w;
@@ -20,6 +33,7 @@ use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyK
 use crate::estimators::MemoryEstimator;
 use crate::metrics::recorder::Recorder;
 use crate::metrics::report::RunReport;
+use crate::sim::parallel::{resolve_threads, WorkerPool};
 use crate::sim::{Engine, Event, TaskId};
 use crate::util::units::GIB;
 use crate::workload::memsim;
@@ -28,7 +42,7 @@ use crate::workload::trace::TraceSpec;
 
 use super::monitor::Monitor;
 use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions, ServerView};
-use super::shard::{Admission, Mapper};
+use super::shard::{Admission, MapPlan, Mapper, PlanOutcome};
 
 /// Seconds between memory-ramp stages (training warm-up allocations).
 const RAMP_INTERVAL_S: f64 = 8.0;
@@ -98,6 +112,30 @@ pub struct RunOutcome {
     pub events: u64,
 }
 
+/// Inputs of one shard's speculative mapping scan — everything the pure
+/// [`compute_plan`] needs besides the shared snapshot. Built on the driver
+/// thread (the estimator is not `Sync`); plain owned data, so it crosses
+/// into the worker pool freely.
+struct PlanJob {
+    shard: usize,
+    task: TaskId,
+    req: MappingRequest,
+    demoted: bool,
+    cursor_in: usize,
+    admissible: Result<(), &'static str>,
+}
+
+/// The `(epoch, now)`-keyed monitor snapshot the mapping scans read. Shared
+/// (`Arc`) so parallel plan rounds reference one copy, and cached so
+/// back-to-back attempts within an unchanged quantum — the common case in a
+/// `kick_mappers` sweep — skip the O(GPUs) rebuild entirely (this is also a
+/// serial-path win; DESIGN.md §10).
+struct ViewsCache {
+    epoch: u64,
+    now_bits: u64,
+    views: Arc<Vec<ServerView>>,
+}
+
 pub struct Carma {
     pub cfg: CarmaConfig,
     engine: Engine,
@@ -111,6 +149,18 @@ pub struct Carma {
     monitor: Monitor,
     recorder: Recorder,
     done_count: usize,
+    /// Events handled by the driver (== events popped in a full run; kept
+    /// separately so the parallel frontier drain cannot over-count events
+    /// that were popped but never processed after the final completion).
+    processed: u64,
+    /// Monotone state-version counter: bumped (`touch`) on every mutation
+    /// that can change a mapping decision's inputs — GPU residency,
+    /// allocations, ramp progress, pinning, monitor samples. Snapshot and
+    /// plan validity are keyed on `(state_epoch, now)`.
+    state_epoch: u64,
+    views_cache: Option<ViewsCache>,
+    /// Worker pool of the parallel engine (None ⇒ serial, the default).
+    pool: Option<WorkerPool>,
 }
 
 impl Carma {
@@ -119,6 +169,7 @@ impl Carma {
         let n = trace.tasks.len();
         let monitor = Monitor::new(cluster.n_gpus(), cfg.monitor.window_s);
         let shards = cfg.coordinator.shards;
+        let threads = resolve_threads(cfg.engine.threads);
         let mut recorder = Recorder::new(n, cluster.n_gpus());
         recorder.n_shards = shards;
         let admission = Admission::new(
@@ -149,7 +200,14 @@ impl Carma {
             .collect();
         Carma {
             cfg,
-            engine: Engine::with_lanes(1 + shards, 2 * n + 16),
+            // lane 0 carries the arrival bulk + monitor/recovery traffic;
+            // each shard lane sees its share of the window/ramp/completion
+            // churn (~8 events per task in flight across reschedules)
+            engine: Engine::with_lane_capacities(
+                1 + shards,
+                2 * n + 16,
+                (8 * n) / shards.max(1) + 16,
+            ),
             cluster,
             tasks,
             admission,
@@ -158,7 +216,16 @@ impl Carma {
             monitor,
             recorder,
             done_count: 0,
+            processed: 0,
+            state_epoch: 0,
+            views_cache: None,
+            pool: (threads > 1).then(|| WorkerPool::new(threads)),
         }
+    }
+
+    /// Threads the engine actually runs on (1 = serial).
+    pub fn engine_threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
     }
 
     /// Run the whole trace to completion; returns the paper's metric set.
@@ -170,25 +237,10 @@ impl Carma {
         self.engine
             .schedule_in(self.cfg.monitor.sample_period_s, Event::MonitorSample);
 
-        let mut guard: u64 = 0;
-        while let Some((_, ev)) = self.engine.pop() {
-            guard += 1;
-            assert!(
-                guard < 200_000_000,
-                "simulation did not converge (event storm)"
-            );
-            match ev {
-                Event::TaskArrival(id) => self.on_arrival(id),
-                Event::WindowDone(id) => self.on_window_done(id),
-                Event::RetryMapping(shard) => self.on_retry(shard),
-                Event::Ramp(id, stage) => self.on_ramp(id, stage),
-                Event::Completion(id, v) => self.on_completion(id, v),
-                Event::MonitorSample => self.on_monitor_sample(),
-                Event::RecoveryDetect(id) => self.on_recovery_detect(id),
-            }
-            if self.done_count == self.tasks.len() {
-                break;
-            }
+        if self.pool.is_some() {
+            self.run_parallel();
+        } else {
+            self.run_serial();
         }
         assert_eq!(
             self.done_count,
@@ -198,8 +250,63 @@ impl Carma {
         RunOutcome {
             report: RunReport::from_recorder(label, &self.recorder),
             recorder: self.recorder,
-            events: self.engine.events_processed(),
+            events: self.processed,
         }
+    }
+
+    fn run_serial(&mut self) {
+        while let Some((_, ev)) = self.engine.pop() {
+            self.count_event();
+            self.handle_event(ev);
+            if self.done_count == self.tasks.len() {
+                break;
+            }
+        }
+    }
+
+    /// The conservative parallel loop (DESIGN.md §10): drain the frontier of
+    /// the current time quantum, speculatively plan the quantum's mapper
+    /// work on the pool, then commit the events one by one in `(time, seq)`
+    /// order exactly as the serial loop would.
+    fn run_parallel(&mut self) {
+        let mut buf: Vec<(f64, Event)> = Vec::new();
+        'quantum: while self.engine.pop_frontier(&mut buf) > 0 {
+            self.preplan_frontier(&buf);
+            for (_, ev) in buf.drain(..) {
+                self.count_event();
+                self.handle_event(ev);
+                if self.done_count == self.tasks.len() {
+                    break 'quantum;
+                }
+            }
+        }
+    }
+
+    fn count_event(&mut self) {
+        self.processed += 1;
+        assert!(
+            self.processed < 200_000_000,
+            "simulation did not converge (event storm)"
+        );
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::TaskArrival(id) => self.on_arrival(id),
+            Event::WindowDone(id) => self.on_window_done(id),
+            Event::RetryMapping(shard) => self.on_retry(shard),
+            Event::Ramp(id, stage) => self.on_ramp(id, stage),
+            Event::Completion(id, v) => self.on_completion(id, v),
+            Event::MonitorSample => self.on_monitor_sample(),
+            Event::RecoveryDetect(id) => self.on_recovery_detect(id),
+        }
+    }
+
+    /// Mark the mapping-relevant simulation state as changed: invalidates
+    /// the shared snapshot and every speculative plan in flight.
+    fn touch(&mut self) {
+        self.state_epoch += 1;
+        self.views_cache = None;
     }
 
     // -- event handlers -----------------------------------------------------
@@ -266,31 +373,128 @@ impl Carma {
 
     /// Re-attempt every shard whose selected task already finished its
     /// window — resources just changed (completion / OOM release).
+    ///
+    /// Parallel mode plans all ready shards in one pool round, commits in
+    /// ascending shard order, and re-plans the remainder whenever a commit
+    /// dispatched something (moving the cluster under the open plans). The
+    /// commit sequence is exactly the serial sweep's, so outcomes are
+    /// bit-identical; only the redundant scans are elided.
     fn kick_mappers(&mut self) {
-        for shard in 0..self.mappers.len() {
-            if self.mappers[shard].ready() {
-                self.attempt_map(shard);
+        let k = self.mappers.len();
+        if k == 1 {
+            // serial-coordinator fast path: no round bookkeeping to allocate
+            if self.mappers[0].ready() {
+                self.attempt_map(0);
+            }
+            return;
+        }
+        let mut attempted = vec![false; k];
+        loop {
+            let pending: Vec<usize> = (0..k)
+                .filter(|&s| !attempted[s] && self.mappers[s].ready())
+                .collect();
+            if pending.is_empty() {
+                return;
+            }
+            self.preplan(&pending);
+            let epoch0 = self.state_epoch;
+            let mut invalidated = false;
+            for &s in &pending {
+                attempted[s] = true;
+                // a nested kick (first-ramp OOM inside a dispatch) may have
+                // already dispatched or failed this shard's task
+                if !self.mappers[s].ready() {
+                    continue;
+                }
+                self.attempt_map(s);
+                if self.state_epoch != epoch0 {
+                    invalidated = true;
+                    break;
+                }
+            }
+            if !invalidated {
+                return;
             }
         }
     }
 
-    /// Try to map shard `shard`'s selected task; on success dispatch + feed
-    /// the shard its next task.
-    fn attempt_map(&mut self, shard: usize) {
-        let Some(id) = self.mappers[shard].selected else { return };
-        let views = self.server_views();
+    /// Speculatively plan the named shards' mapping scans on the worker
+    /// pool against the current snapshot. Pure fan-out: plans are only
+    /// consumed by `attempt_map` after validating that the state they were
+    /// computed against is still live.
+    fn preplan(&mut self, shards: &[usize]) {
+        if self.pool.is_none() || shards.len() < 2 {
+            return;
+        }
+        let views = self.snapshot();
+        let jobs: Vec<PlanJob> = shards.iter().filter_map(|&s| self.plan_job(s)).collect();
+        if jobs.len() < 2 {
+            return;
+        }
+        let epoch = self.state_epoch;
+        let now_bits = self.engine.now().to_bits();
+        let policy = self.cfg.policy;
+        let pre = self.preconditions();
+        let plans: Vec<MapPlan> = {
+            let pool = self.pool.as_ref().expect("pool checked above");
+            let views_ref: &[ServerView] = &views;
+            let jobs_ref = &jobs;
+            pool.map(jobs_ref.len(), &|i| {
+                compute_plan(views_ref, policy, pre, &jobs_ref[i], epoch, now_bits)
+            })
+        };
+        for (job, plan) in jobs.iter().zip(plans) {
+            self.mappers[job.shard].plan = Some(plan);
+        }
+    }
+
+    /// Plan ahead for a whole drained time quantum: shards whose
+    /// WindowDone/RetryMapping events sit in the frontier will attempt a
+    /// mapping when their event commits — scan for them all at once.
+    fn preplan_frontier(&mut self, batch: &[(f64, Event)]) {
+        if self.pool.is_none() || batch.len() < 2 {
+            return;
+        }
+        let mut shards: Vec<usize> = Vec::new();
+        for (_, ev) in batch {
+            let s = match ev {
+                Event::WindowDone(id) => match self.admission.shard_of(*id) {
+                    Some(s) if self.mappers[s].selected == Some(*id) => s,
+                    _ => continue,
+                },
+                Event::RetryMapping(s) if self.mappers[*s].ready() => *s,
+                _ => continue,
+            };
+            if !shards.contains(&s) {
+                shards.push(s);
+            }
+        }
+        self.preplan(&shards);
+    }
+
+    fn preconditions(&self) -> Preconditions {
+        Preconditions {
+            smact_cap: self.cfg.smact_cap,
+            min_free_gb: self.cfg.min_free_gb,
+        }
+    }
+
+    /// Demand + placement-mode derivation for one task (paper §4.1/§5.4):
+    /// estimator + safety margin; estimates at/above every server's GPU
+    /// capacity degrade to exclusive placement (the estimator "takes the
+    /// collocation potential away"); the final permitted recovery retry is
+    /// demoted to a *pinned* exclusive slot (ROADMAP "Adaptive recovery").
+    /// Shared verbatim by the serial and speculative paths — one source of
+    /// truth, so the two cannot drift.
+    fn mapping_request(&self, id: TaskId) -> (MappingRequest, bool) {
         let crashes = self.recorder.tasks[id].oom_crashes;
         let spec = &self.tasks[id].spec;
-
-        // estimator + safety margin; estimates at/above every server's GPU
-        // capacity degrade to exclusive placement (the estimator "takes the
-        // collocation potential away", §5.4)
         let max_mem = self.cluster.topo.max_server_mem_gb();
         let raw_est = self.estimator.estimate_gb(spec);
         let mut demand = raw_est.map(|e| e + self.cfg.safety_margin_gb);
-        // adaptive recovery (ROADMAP): early retries re-enter normal
-        // collocation-aware mapping; the FINAL permitted retry is demoted to
-        // a *pinned* exclusive slot, so it cannot be crashed again
+        // adaptive recovery: early retries re-enter normal collocation-aware
+        // mapping; the FINAL permitted retry is demoted to a pinned
+        // exclusive slot, so it cannot be crashed again
         let demoted = self.tasks[id].in_recovery && crashes >= MAX_OOM_RETRIES;
         let mut force_exclusive = demoted;
         if let Some(d) = demand {
@@ -302,44 +506,68 @@ impl Carma {
         // GPUMemNet's class grid tops out at the 40 GB training capacity
         // (DESIGN.md §5); on servers with more memory a *saturated* raw
         // estimate means "at least this much", not a point estimate —
-        // degrade to exclusive instead of collocating on it (margin excluded:
-        // a 39 GB point estimate + 2 GB margin is not saturation)
+        // degrade to exclusive instead of collocating on it (margin
+        // excluded: a 39 GB point estimate + 2 GB margin is not saturation)
         if self.cfg.estimator == EstimatorKind::GpuMemNet
             && raw_est.is_some_and(|e| e >= memsim::GPU_CAPACITY_GB)
         {
             force_exclusive = true;
         }
+        (
+            MappingRequest {
+                n_gpus: spec.n_gpus,
+                demand_gb: demand,
+                exclusive: force_exclusive,
+            },
+            demoted,
+        )
+    }
 
-        let req = MappingRequest {
-            n_gpus: spec.n_gpus,
-            demand_gb: demand,
-            exclusive: force_exclusive,
-        };
-        let pre = Preconditions {
-            smact_cap: self.cfg.smact_cap,
-            min_free_gb: self.cfg.min_free_gb,
-        };
+    /// Everything one shard's mapping scan needs besides the snapshot.
+    /// Runs on the driver thread (the estimator holds a `RefCell` cache).
+    fn plan_job(&self, shard: usize) -> Option<PlanJob> {
+        let id = self.mappers[shard].selected?;
+        let (req, demoted) = self.mapping_request(id);
         // permanently unschedulable? — fail fast instead of retrying
         // forever. Admission owns the static ceilings (capacity accounting
         // across servers, power-envelope-dead servers excluded): a demand
         // larger than every schedulable target, or a GPU count no single
         // admissible server owns (multi-GPU tasks never span servers), can
         // never be placed no matter how long the task waits.
-        if let Err(why) = self.admission.admissible(req.n_gpus, demand) {
-            self.fail_task(id, why);
-            return;
-        }
-
-        match policy::select_two_level(
-            self.cfg.policy,
-            &views,
+        let admissible = self.admission.admissible(req.n_gpus, req.demand_gb);
+        Some(PlanJob {
+            shard,
+            task: id,
             req,
-            pre,
-            &mut self.mappers[shard].rr_cursor,
-        ) {
-            Some(p) => {
-                self.tasks[id].admitted_est_gb = demand;
-                self.tasks[id].pinned = demoted;
+            demoted,
+            cursor_in: self.mappers[shard].rr_cursor,
+            admissible,
+        })
+    }
+
+    /// Try to map shard `shard`'s selected task: consume a still-valid
+    /// speculative plan, or compute the decision inline against the shared
+    /// snapshot; then commit — dispatch + feed the shard its next task,
+    /// schedule a retry, or fail the task fast.
+    fn attempt_map(&mut self, shard: usize) {
+        let Some(id) = self.mappers[shard].selected else { return };
+        let epoch = self.state_epoch;
+        let now_bits = self.engine.now().to_bits();
+        let plan = match self.mappers[shard].take_valid_plan(epoch, now_bits, id) {
+            Some(p) => p,
+            None => {
+                let job = self.plan_job(shard).expect("selected task plans");
+                let views = self.snapshot();
+                compute_plan(&views, self.cfg.policy, self.preconditions(), &job, epoch, now_bits)
+            }
+        };
+        match plan.outcome {
+            PlanOutcome::Inadmissible(why) => self.fail_task(id, why),
+            PlanOutcome::NoFit => self.schedule_retry(shard),
+            PlanOutcome::Place(p, cursor_out) => {
+                self.mappers[shard].rr_cursor = cursor_out;
+                self.tasks[id].admitted_est_gb = plan.demand_gb;
+                self.tasks[id].pinned = plan.demoted;
                 // clear BEFORE dispatch: a first-ramp OOM inside dispatch
                 // reaches kick_mappers, which must not re-enter this shard
                 // for the task it is mid-dispatching (clear emits no events,
@@ -348,7 +576,6 @@ impl Carma {
                 self.dispatch(id, p);
                 self.feed(shard);
             }
-            None => self.schedule_retry(shard),
         }
     }
 
@@ -365,84 +592,43 @@ impl Carma {
         }
     }
 
-    /// Reserved-but-not-yet-allocated memory on a GPU: for each resident
-    /// task admitted with an estimate, the part of the estimate its ramp
-    /// has not claimed yet.
-    fn pending_reserved_gb(&self, gpu: usize) -> f64 {
-        self.cluster
-            .gpu(gpu)
-            .resident
-            .iter()
-            .map(|r| {
-                let t = &self.tasks[r.task];
-                match t.admitted_est_gb {
-                    Some(est) => {
-                        let allocated: f64 =
-                            t.ramp.iter().take(t.next_ramp).sum::<f64>() / GIB;
-                        (est - allocated).max(0.0)
-                    }
-                    None => 0.0,
-                }
-            })
-            .sum()
-    }
-
-    /// Build the two-level mapping input: per-server power draw + per-GPU
-    /// monitor snapshots (global GPU ids).
-    fn server_views(&self) -> Vec<ServerView> {
+    /// Build (or reuse) the `(epoch, now)` snapshot of per-server power and
+    /// per-GPU monitor views the mapping scans read. With a pool, the
+    /// per-server construction — the O(GPUs) hot path — fans out.
+    fn snapshot(&mut self) -> Arc<Vec<ServerView>> {
         let now = self.engine.now();
-        self.cluster
-            .servers
-            .iter()
-            .zip(&self.cluster.topo.servers)
-            .map(|(srv, spec)| {
-                let gpus: Vec<GpuView> = srv
-                    .gpus
-                    .iter()
-                    .map(|g| {
-                        let inst = g.free_mig_instance();
-                        GpuView {
-                            id: g.id,
-                            server: spec.id,
-                            free_gb: (g.free_gb() - self.pending_reserved_gb(g.id)).max(0.0),
-                            smact_window: self.monitor.windowed_smact(g.id),
-                            n_tasks: g.n_tasks(),
-                            pinned: g.resident.iter().any(|r| self.tasks[r.task].pinned),
-                            mig_free_instance: inst,
-                            mig_instance_mem_gb: inst
-                                .map(|i| g.capacity_gb() * g.mig_slices[i])
-                                .unwrap_or(0.0),
-                            mig_enabled: g.mig_enabled(),
-                        }
-                    })
-                    .collect();
-                // instantaneous draw is only consulted by the power-envelope
-                // filter; skip the O(GPUs × residents) walk when no cap is set
-                let power_w: f64 = if spec.power_cap_w.is_some() {
-                    srv.gpus
-                        .iter()
-                        .map(|g| {
-                            gpu_power_w(
-                                &self.cfg.power,
-                                g.n_tasks(),
-                                g.effective_smact(self.cfg.colloc, now),
-                            )
-                        })
-                        .sum()
-                } else {
-                    0.0
-                };
-                ServerView {
-                    id: spec.id,
-                    power_w,
-                    power_cap_w: spec.power_cap_w,
-                    gpus,
-                }
-            })
-            .collect()
+        if let Some(c) = &self.views_cache {
+            if c.epoch == self.state_epoch && c.now_bits == now.to_bits() {
+                return c.views.clone();
+            }
+        }
+        let n_servers = self.cluster.servers.len();
+        let views: Vec<ServerView> = {
+            let cluster = &self.cluster;
+            let monitor = &self.monitor;
+            let tasks = &self.tasks;
+            let cfg = &self.cfg;
+            match self.pool.as_ref() {
+                Some(pool) if n_servers >= 2 => pool.map(n_servers, &|i| {
+                    build_server_view(cluster, monitor, tasks, cfg, i, now)
+                }),
+                _ => (0..n_servers)
+                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, i, now))
+                    .collect(),
+            }
+        };
+        let views = Arc::new(views);
+        self.views_cache = Some(ViewsCache {
+            epoch: self.state_epoch,
+            now_bits: now.to_bits(),
+            views: views.clone(),
+        });
+        views
     }
 
     fn dispatch(&mut self, id: TaskId, p: Placement) {
+        // residency, reservations and pinning are about to change
+        self.touch();
         let now = self.engine.now();
         self.recorder.on_dispatch(id, now);
 
@@ -497,6 +683,8 @@ impl Carma {
             Some(&b) => b,
             None => return,
         };
+        // free memory is about to shrink (or the task to crash)
+        self.touch();
         let seg_mib = (seg_bytes / (1024.0 * 1024.0)).ceil().max(1.0) as u64;
         let gpus = self.tasks[id].gpus.clone();
         for (k, &g) in gpus.iter().enumerate() {
@@ -561,6 +749,7 @@ impl Carma {
 
     /// Free all segments + residency of a task and update speeds.
     fn release(&mut self, id: TaskId) {
+        self.touch();
         let gpus = self.tasks[id].gpus.clone();
         let segs = std::mem::take(&mut self.tasks[id].segs);
         for (k, &g) in gpus.iter().enumerate() {
@@ -656,6 +845,8 @@ impl Carma {
     }
 
     fn on_monitor_sample(&mut self) {
+        // the windowed-SMACT inputs of every future mapping decision change
+        self.touch();
         let now = self.engine.now();
         let dt = self.cfg.monitor.sample_period_s;
         for g in 0..self.cluster.n_gpus() {
@@ -685,6 +876,118 @@ impl Carma {
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }
+}
+
+/// The pure mapping scan (runs on worker threads): preconditions + the
+/// O(GPUs) two-level policy selection over the shared snapshot. Everything
+/// here is a function of `(views, job)` only — no driver state — so the
+/// speculative and inline paths are the same code.
+fn compute_plan(
+    views: &[ServerView],
+    policy: PolicyKind,
+    pre: Preconditions,
+    job: &PlanJob,
+    epoch: u64,
+    now_bits: u64,
+) -> MapPlan {
+    let outcome = match job.admissible {
+        Err(why) => PlanOutcome::Inadmissible(why),
+        Ok(()) => {
+            let mut cursor = job.cursor_in;
+            match policy::select_two_level(policy, views, job.req, pre, &mut cursor) {
+                Some(p) => PlanOutcome::Place(p, cursor),
+                None => PlanOutcome::NoFit,
+            }
+        }
+    };
+    MapPlan {
+        epoch,
+        now_bits,
+        task: job.task,
+        cursor_in: job.cursor_in,
+        demand_gb: job.req.demand_gb,
+        demoted: job.demoted,
+        outcome,
+    }
+}
+
+/// One server's slice of the two-level mapping input: instantaneous power
+/// draw + per-GPU monitor snapshots (global GPU ids). A free function over
+/// the driver's `Sync` fields so snapshot construction can fan out across
+/// the pool without capturing the (non-`Sync`) estimator.
+fn build_server_view(
+    cluster: &Cluster,
+    monitor: &Monitor,
+    tasks: &[TaskRun],
+    cfg: &CarmaConfig,
+    server: usize,
+    now: f64,
+) -> ServerView {
+    let srv = &cluster.servers[server];
+    let spec = &cluster.topo.servers[server];
+    let gpus: Vec<GpuView> = srv
+        .gpus
+        .iter()
+        .map(|g| {
+            let inst = g.free_mig_instance();
+            GpuView {
+                id: g.id,
+                server: spec.id,
+                free_gb: (g.free_gb() - pending_reserved_gb(cluster, tasks, g.id)).max(0.0),
+                smact_window: monitor.windowed_smact(g.id),
+                n_tasks: g.n_tasks(),
+                pinned: g.resident.iter().any(|r| tasks[r.task].pinned),
+                mig_free_instance: inst,
+                mig_instance_mem_gb: inst
+                    .map(|i| g.capacity_gb() * g.mig_slices[i])
+                    .unwrap_or(0.0),
+                mig_enabled: g.mig_enabled(),
+            }
+        })
+        .collect();
+    // instantaneous draw is only consulted by the power-envelope filter;
+    // skip the O(GPUs × residents) walk when no cap is set
+    let power_w: f64 = if spec.power_cap_w.is_some() {
+        srv.gpus
+            .iter()
+            .map(|g| {
+                gpu_power_w(
+                    &cfg.power,
+                    g.n_tasks(),
+                    g.effective_smact(cfg.colloc, now),
+                )
+            })
+            .sum()
+    } else {
+        0.0
+    };
+    ServerView {
+        id: spec.id,
+        power_w,
+        power_cap_w: spec.power_cap_w,
+        gpus,
+    }
+}
+
+/// Reserved-but-not-yet-allocated memory on a GPU: for each resident task
+/// admitted with an estimate, the part of the estimate its ramp has not
+/// claimed yet.
+fn pending_reserved_gb(cluster: &Cluster, tasks: &[TaskRun], gpu: usize) -> f64 {
+    cluster
+        .gpu(gpu)
+        .resident
+        .iter()
+        .map(|r| {
+            let t = &tasks[r.task];
+            match t.admitted_est_gb {
+                Some(est) => {
+                    let allocated: f64 = t.ramp.iter().take(t.next_ramp).sum::<f64>() / GIB;
+                    (est - allocated).max(0.0)
+                }
+                None => 0.0,
+            }
+        })
+        .sum()
 }
 
 /// Convenience: run one configuration over a trace.
@@ -896,6 +1199,58 @@ mod tests {
             assert_eq!(a.report.energy_mj.to_bits(), b.report.energy_mj.to_bits());
             assert_eq!(a.events, b.events, "{assign:?}: event streams must match");
         }
+    }
+
+    #[test]
+    fn threaded_run_is_byte_identical_to_serial() {
+        use crate::config::schema::ClusterConfig;
+        // the §10 guarantee in unit form: same trace, shards=4, threads 1
+        // vs 4 — every reported metric matches to the bit, including the
+        // handled-event count (the merge barrier must not re-order or
+        // over-count)
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 64, 8, 13);
+        let mk = |threads: usize| {
+            let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+            c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+            c.safety_margin_gb = 2.0;
+            c.coordinator.shards = 4;
+            c.engine.threads = threads;
+            run_trace(c, e, &trace, "threaded")
+        };
+        let serial = mk(1);
+        let threaded = mk(4);
+        assert_eq!(serial.report.completed, 64);
+        assert_eq!(threaded.report.completed, 64);
+        assert_eq!(serial.events, threaded.events, "event streams must match");
+        assert_eq!(
+            serial.report.trace_total_min.to_bits(),
+            threaded.report.trace_total_min.to_bits()
+        );
+        assert_eq!(serial.report.energy_mj.to_bits(), threaded.report.energy_mj.to_bits());
+        assert_eq!(
+            serial.report.avg_waiting_min.to_bits(),
+            threaded.report.avg_waiting_min.to_bits()
+        );
+        assert_eq!(serial.report.oom_crashes, threaded.report.oom_crashes);
+        assert_eq!(
+            serial.report.to_json().to_string_pretty(),
+            threaded.report.to_json().to_string_pretty(),
+            "full results JSON must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn snapshot_inputs_are_sync() {
+        // the parallel snapshot/plan closures capture exactly these; a
+        // non-Sync field sneaking in would break the build far from here
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<Cluster>();
+        assert_sync::<Monitor>();
+        assert_sync::<CarmaConfig>();
+        assert_sync::<TaskRun>();
+        fn assert_send<T: Send>() {}
+        assert_send::<PlanJob>();
     }
 
     #[test]

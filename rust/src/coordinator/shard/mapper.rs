@@ -1,4 +1,5 @@
-//! Per-shard mapper worker state (DESIGN.md §9).
+//! Per-shard mapper worker state (DESIGN.md §9) and speculative mapping
+//! plans (DESIGN.md §10).
 //!
 //! Each mapper runs the paper's select → observe → map loop (§4.1) for its
 //! own head-of-queue task: at most one task is under observation per shard,
@@ -6,8 +7,51 @@
 //! decision itself (preconditions, estimator demand, per-GPU policy) stays
 //! in the driver — the mapper is the replicated piece of coordinator state
 //! that used to be the serial `selected`/`window_done`/`rr_cursor` fields.
+//!
+//! Under the parallel engine a mapper may additionally hold a [`MapPlan`]:
+//! a mapping decision computed *speculatively* on a worker thread against a
+//! read snapshot of the cluster. A plan is committed only if the snapshot
+//! it was computed against is still current — otherwise it is discarded and
+//! the decision is recomputed inline, which is what keeps threaded runs
+//! byte-identical to serial ones. `Mapper` is plain owned data (`Send`), so
+//! plan inputs can cross threads freely.
 
+use crate::coordinator::policy::Placement;
 use crate::sim::TaskId;
+
+/// What a speculative mapping computation decided for one shard.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOutcome {
+    /// A placement was found; the second field is the shard's Round-Robin
+    /// cursor *after* the pick (applied on commit only).
+    Place(Placement, usize),
+    /// Nothing eligible right now — the shard schedules a retry.
+    NoFit,
+    /// Statically unschedulable (admission ceilings) — fail the task fast.
+    Inadmissible(&'static str),
+}
+
+/// A speculative mapping decision for one shard, tagged with the exact
+/// state it was computed against. Commit-time validation requires all four
+/// tags to match the live state; any mismatch means the cluster moved under
+/// the plan and the serial recompute path runs instead (DESIGN.md §10).
+#[derive(Debug, Clone)]
+pub struct MapPlan {
+    /// Driver state-epoch the snapshot belonged to.
+    pub epoch: u64,
+    /// Simulated clock (bit pattern) the snapshot belonged to.
+    pub now_bits: u64,
+    /// Task the plan maps (must still be the shard's selected task).
+    pub task: TaskId,
+    /// RR cursor the scan started from (must be unchanged on commit).
+    pub cursor_in: usize,
+    /// Memory demand the task was admitted with (estimate + margin, after
+    /// the capacity clamp) — recorded on the task at dispatch.
+    pub demand_gb: Option<f64>,
+    /// Final-retry recovery demotion: dispatch pinned-exclusive (§4.2).
+    pub demoted: bool,
+    pub outcome: PlanOutcome,
+}
 
 /// A mapper's shard index is its position in the driver's mapper vector
 /// (not stored here — derivable state can't desynchronize).
@@ -22,6 +66,8 @@ pub struct Mapper {
     /// Round-Robin policy cursor — per shard, so concurrent mappers keep
     /// independent cycles (with one shard this is the old global cursor).
     pub rr_cursor: usize,
+    /// Speculative mapping plan awaiting validation + commit, if any.
+    pub plan: Option<MapPlan>,
 }
 
 impl Mapper {
@@ -44,12 +90,25 @@ impl Mapper {
         debug_assert!(self.selected.is_none(), "mapper already busy");
         self.selected = Some(id);
         self.window_done = false;
+        self.plan = None;
     }
 
     /// The selected task was dispatched (or failed) — back to idle.
     pub fn clear(&mut self) {
         self.selected = None;
         self.window_done = false;
+        self.plan = None;
+    }
+
+    /// Consume the cached plan if it matches the live `(epoch, now, task,
+    /// cursor)` state; a stale plan is dropped either way.
+    pub fn take_valid_plan(&mut self, epoch: u64, now_bits: u64, task: TaskId) -> Option<MapPlan> {
+        let plan = self.plan.take()?;
+        let valid = plan.epoch == epoch
+            && plan.now_bits == now_bits
+            && plan.task == task
+            && plan.cursor_in == self.rr_cursor;
+        valid.then_some(plan)
     }
 }
 
@@ -70,5 +129,43 @@ mod tests {
         m.clear();
         assert!(m.idle());
         assert!(!m.window_done, "clear resets the window");
+    }
+
+    #[test]
+    fn plan_validation_rejects_every_stale_dimension() {
+        let plan = |cursor_in| MapPlan {
+            epoch: 5,
+            now_bits: 42.0f64.to_bits(),
+            task: 3,
+            cursor_in,
+            demand_gb: Some(10.0),
+            demoted: false,
+            outcome: PlanOutcome::NoFit,
+        };
+        let mut m = Mapper::new();
+        m.select(3);
+        m.window_done = true;
+
+        m.plan = Some(plan(0));
+        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 3).is_some());
+        assert!(m.plan.is_none(), "plan is consumed");
+
+        m.plan = Some(plan(0));
+        assert!(m.take_valid_plan(6, 42.0f64.to_bits(), 3).is_none(), "stale epoch");
+        m.plan = Some(plan(0));
+        assert!(m.take_valid_plan(5, 43.0f64.to_bits(), 3).is_none(), "clock moved");
+        m.plan = Some(plan(0));
+        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 4).is_none(), "different task");
+        m.plan = Some(plan(9));
+        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 3).is_none(), "cursor moved");
+        assert!(m.plan.is_none(), "stale plans are dropped, not kept");
+    }
+
+    #[test]
+    fn mapper_and_plans_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Mapper>();
+        assert_send::<MapPlan>();
+        assert_send::<PlanOutcome>();
     }
 }

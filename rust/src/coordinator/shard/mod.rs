@@ -15,4 +15,4 @@ pub mod admission;
 pub mod mapper;
 
 pub use admission::Admission;
-pub use mapper::Mapper;
+pub use mapper::{MapPlan, Mapper, PlanOutcome};

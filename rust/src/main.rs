@@ -25,7 +25,8 @@ use carma::workload::trace::{trace_60, trace_90, trace_cluster};
 
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
-    "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "seed", "config",
+    "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
+    "seed", "config",
 ];
 
 fn main() {
@@ -75,6 +76,9 @@ fn usage() {
          \x20 --power-cap W      per-server power envelope in watts (default off)\n\
          \x20 --shards K         concurrent mapper shards (default 1 = serial paper pipeline)\n\
          \x20 --shard-assign S   round-robin|least-loaded|locality (default round-robin)\n\
+         \x20 --engine-threads T sim-engine worker threads (default 1 = serial; 0 = auto;\n\
+         \x20                    results are byte-identical at any thread count)\n\
+         \x20 --json             print the run report as JSON only (determinism diffing)\n\
          \x20 --seed N           trace seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\n\
          EXPERIMENTS: {}",
@@ -160,6 +164,10 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
         cfg.coordinator.assign =
             ShardAssign::parse(s).ok_or_else(|| format!("unknown shard-assign '{s}'"))?;
     }
+    if let Some(t) = args.opt_u64("engine-threads").map_err(|e| e.to_string())? {
+        // range (0..=64, 0 = auto) is enforced by cfg.validate() below
+        cfg.engine.threads = t as usize;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
     }
@@ -192,14 +200,25 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
     let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
     let label = run_label(&cfg, est.name());
     let shards = cfg.coordinator.shards;
+    let json_only = args.flag("json");
+    if json_only {
+        // results JSON only — byte-diffable across engine thread counts
+        // (ci.sh's threaded-determinism smoke relies on this)
+        let out = run_trace(cfg, est, &trace, &label);
+        let mut j = out.report.to_json();
+        j.set("events", carma::util::json::num(out.events as f64));
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
     println!(
-        "running {} over {} ({} tasks, {} server(s) / {} GPUs, {} shard(s), seed {})\n",
+        "running {} over {} ({} tasks, {} server(s) / {} GPUs, {} shard(s), {} engine thread(s), seed {})\n",
         label,
         trace.name,
         trace.tasks.len(),
         cfg.cluster.n_servers(),
         total_gpus,
         shards,
+        cfg.engine.threads,
         cfg.seed
     );
     let out = run_trace(cfg, est, &trace, &label);

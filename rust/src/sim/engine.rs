@@ -6,6 +6,11 @@
 //! order is a total order independent of which lane an event sits in, a
 //! multi-lane engine pops the exact same stream a single-heap engine would —
 //! fixed-seed runs stay bit-identical at any shard count (DESIGN.md §9).
+//!
+//! Lane heads are merged through a *tournament index*: a small binary
+//! min-heap of lane ids keyed by each lane's head `(time, seq)`. A pop or
+//! push touches O(log lanes) index nodes instead of scanning every lane
+//! head, so the merge stays cheap at the 256-shard ceiling (DESIGN.md §10).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -66,6 +71,9 @@ impl PartialOrd for Entry {
     }
 }
 
+/// `pos[lane]` sentinel: the lane is empty and absent from the index heap.
+const ABSENT: usize = usize::MAX;
+
 /// The event queue + clock. Monotonicity is enforced: scheduling in the past
 /// panics (it would silently corrupt causality).
 ///
@@ -74,6 +82,11 @@ impl PartialOrd for Entry {
 #[derive(Debug)]
 pub struct Engine {
     lanes: Vec<BinaryHeap<Entry>>,
+    /// Tournament index: binary min-heap of lane ids, ordered by each
+    /// lane's head `(t, seq)`. Only non-empty lanes appear.
+    index: Vec<usize>,
+    /// `pos[lane]` = the lane's slot in `index` (ABSENT when empty).
+    pos: Vec<usize>,
     now: f64,
     seq: u64,
     pops: u64,
@@ -83,6 +96,8 @@ impl Default for Engine {
     fn default() -> Self {
         Engine {
             lanes: vec![BinaryHeap::new()],
+            index: Vec::with_capacity(1),
+            pos: vec![ABSENT],
             now: 0.0,
             seq: 0,
             pops: 0,
@@ -106,17 +121,31 @@ impl Engine {
     }
 
     /// `n_lanes` independent event sources (>= 1); lane 0 is pre-sized for
-    /// `capacity` events (the arrival bulk always lands there).
+    /// `capacity` events (the arrival bulk always lands there) and every
+    /// other lane for an even share of the same volume.
     pub fn with_lanes(n_lanes: usize, capacity: usize) -> Self {
         let n = n_lanes.max(1);
+        Self::with_lane_capacities(n, capacity, (capacity / n).max(16))
+    }
+
+    /// Fully explicit pre-sizing: lane 0 (the global lane) holds `lane0`
+    /// events, each per-shard lane holds `per_lane`. The sharded driver
+    /// passes its expected per-shard event volume here so high shard counts
+    /// never reallocate lane heaps on the hot path (DESIGN.md §10).
+    pub fn with_lane_capacities(n_lanes: usize, lane0: usize, per_lane: usize) -> Self {
+        let n = n_lanes.max(1);
         let mut lanes = Vec::with_capacity(n);
-        lanes.push(BinaryHeap::with_capacity(capacity));
+        lanes.push(BinaryHeap::with_capacity(lane0));
         for _ in 1..n {
-            lanes.push(BinaryHeap::new());
+            lanes.push(BinaryHeap::with_capacity(per_lane));
         }
         Engine {
             lanes,
-            ..Self::default()
+            index: Vec::with_capacity(n),
+            pos: vec![ABSENT; n],
+            now: 0.0,
+            seq: 0,
+            pops: 0,
         }
     }
 
@@ -138,7 +167,7 @@ impl Engine {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.lanes.iter().all(|l| l.is_empty())
+        self.index.is_empty()
     }
 
     /// Schedule `ev` at absolute time `t` (>= now) on lane 0.
@@ -164,6 +193,12 @@ impl Engine {
             seq: self.seq,
             ev,
         });
+        // the lane's head can only get earlier (or stay) on push
+        if self.pos[lane] == ABSENT {
+            self.pos[lane] = self.index.len();
+            self.index.push(lane);
+        }
+        self.sift_up(self.pos[lane]);
     }
 
     pub fn schedule_in_on(&mut self, lane: usize, dt: f64, ev: Event) {
@@ -172,32 +207,118 @@ impl Engine {
     }
 
     /// Pop the globally next event — the minimum `(t, seq)` across all lane
-    /// heads — advancing the clock.
-    ///
-    /// The head scan is linear in the lane count; callers keep lane counts
-    /// small (the coordinator caps `shards` at 256). A tournament tree over
-    /// lane heads is the upgrade path if lane counts ever grow past that.
+    /// heads, read off the tournament index root — advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let mut best: Option<usize> = None;
-        for (i, lane) in self.lanes.iter().enumerate() {
-            let Some(head) = lane.peek() else { continue };
-            let earlier = match best {
-                None => true,
-                Some(b) => {
-                    let bh = self.lanes[b].peek().expect("best lane has a head");
-                    head.t.total_cmp(&bh.t).then_with(|| head.seq.cmp(&bh.seq))
-                        == Ordering::Less
-                }
-            };
-            if earlier {
-                best = Some(i);
-            }
+        let best = *self.index.first()?;
+        let e = self.lanes[best].pop().expect("indexed lane is non-empty");
+        if self.lanes[best].is_empty() {
+            self.remove_root();
+        } else {
+            // the lane's head got later (or equal): restore downwards
+            self.sift_down(0);
         }
-        let e = self.lanes[best?].pop().expect("peeked lane pops");
         debug_assert!(e.t >= self.now - 1e-9);
         self.now = e.t.max(self.now);
         self.pops += 1;
         Some((self.now, e.ev))
+    }
+
+    /// Timestamp of the globally next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        let best = *self.index.first()?;
+        Some(self.lanes[best].peek().expect("indexed lane head").t)
+    }
+
+    /// Drain the *frontier* — every pending event sharing the earliest
+    /// timestamp (the current time quantum) — into `buf` in `(time, seq)`
+    /// order, advancing the clock to that timestamp. Returns the number of
+    /// events drained (0 when the queue is empty).
+    ///
+    /// This is the merge barrier of the parallel engine (DESIGN.md §10):
+    /// the caller may plan work for the whole quantum at once, but must
+    /// still commit results in the order `buf` delivers them. Events
+    /// scheduled *at* the frontier time while the batch is being processed
+    /// carry higher sequence numbers than everything drained here, so the
+    /// next `pop_frontier` call delivers them in exactly the position a
+    /// serial `pop` loop would have.
+    pub fn pop_frontier(&mut self, buf: &mut Vec<(f64, Event)>) -> usize {
+        buf.clear();
+        let Some((t, ev)) = self.pop() else { return 0 };
+        buf.push((t, ev));
+        while let Some(head_t) = self.peek_time() {
+            if head_t.total_cmp(&t).is_gt() {
+                break;
+            }
+            let e = self.pop().expect("peeked engine pops");
+            buf.push(e);
+        }
+        buf.len()
+    }
+
+    // -- tournament index maintenance ----------------------------------------
+
+    /// `(t, seq)` key of a lane's head. Only called for indexed lanes.
+    #[inline]
+    fn head_key(&self, lane: usize) -> (f64, u64) {
+        let h = self.lanes[lane].peek().expect("indexed lane head");
+        (h.t, h.seq)
+    }
+
+    #[inline]
+    fn head_lt(&self, a: usize, b: usize) -> bool {
+        let (ta, sa) = self.head_key(a);
+        let (tb, sb) = self.head_key(b);
+        ta.total_cmp(&tb).then_with(|| sa.cmp(&sb)) == Ordering::Less
+    }
+
+    #[inline]
+    fn swap_nodes(&mut self, i: usize, j: usize) {
+        self.index.swap(i, j);
+        self.pos[self.index[i]] = i;
+        self.pos[self.index[j]] = j;
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.head_lt(self.index[i], self.index[parent]) {
+                self.swap_nodes(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut smallest = i;
+            if l < self.index.len() && self.head_lt(self.index[l], self.index[smallest]) {
+                smallest = l;
+            }
+            if r < self.index.len() && self.head_lt(self.index[r], self.index[smallest]) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.swap_nodes(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Remove the index root (its lane just became empty).
+    fn remove_root(&mut self) {
+        let root_lane = self.index[0];
+        self.pos[root_lane] = ABSENT;
+        let last = self.index.pop().expect("root exists");
+        if !self.index.is_empty() {
+            self.index[0] = last;
+            self.pos[last] = 0;
+            self.sift_down(0);
+        }
     }
 }
 
@@ -379,5 +500,119 @@ mod tests {
             }
         }
         assert_eq!(fired, 1);
+    }
+
+    #[test]
+    fn tournament_index_matches_single_lane_under_random_interleaving() {
+        // the index heap must produce exactly the single-heap stream under
+        // arbitrary schedule/pop interleavings at many lane counts — this is
+        // the invariant that keeps threaded runs byte-identical
+        use crate::util::rng::Rng;
+        for lanes in [2usize, 3, 7, 16, 64] {
+            let mut rng = Rng::new(0xBEEF ^ lanes as u64);
+            let mut single = Engine::new();
+            let mut multi = Engine::with_lanes(lanes, 32);
+            let mut popped_s = Vec::new();
+            let mut popped_m = Vec::new();
+            let mut id = 0usize;
+            for _ in 0..2_000 {
+                if rng.bool(0.6) || single.is_empty() {
+                    // schedule at/after the current clock; coarse timestamps
+                    // force plenty of exact ties
+                    let t = single.now() + (rng.range_usize(0, 8) as f64) * 0.5;
+                    single.schedule(t, Event::TaskArrival(id));
+                    multi.schedule_on(rng.range_usize(0, lanes), t, Event::TaskArrival(id));
+                    id += 1;
+                } else {
+                    popped_s.push(single.pop().map(|(t, ev)| (t.to_bits(), ev)));
+                    popped_m.push(multi.pop().map(|(t, ev)| (t.to_bits(), ev)));
+                }
+            }
+            while let Some(e) = single.pop() {
+                popped_s.push(Some((e.0.to_bits(), e.1)));
+            }
+            while let Some(e) = multi.pop() {
+                popped_m.push(Some((e.0.to_bits(), e.1)));
+            }
+            assert_eq!(popped_s, popped_m, "{lanes} lanes diverged");
+            assert!(multi.is_empty() && single.is_empty());
+        }
+    }
+
+    #[test]
+    fn pop_frontier_drains_exactly_one_time_quantum() {
+        let mut e = Engine::with_lanes(3, 8);
+        e.schedule_on(0, 5.0, Event::TaskArrival(0));
+        e.schedule_on(1, 5.0, Event::TaskArrival(1));
+        e.schedule_on(2, 9.0, Event::TaskArrival(2));
+        e.schedule_on(1, 5.0, Event::TaskArrival(3));
+        let mut buf = Vec::new();
+        assert_eq!(e.pop_frontier(&mut buf), 3);
+        assert_eq!(e.now(), 5.0);
+        let ids: Vec<usize> = buf
+            .iter()
+            .map(|(t, ev)| {
+                assert_eq!(*t, 5.0);
+                match ev {
+                    Event::TaskArrival(i) => *i,
+                    _ => unreachable!(),
+                }
+            })
+            .collect();
+        assert_eq!(ids, vec![0, 1, 3], "frontier keeps (time, seq) order");
+        // an event scheduled AT the frontier time lands in the next quantum,
+        // after everything already drained — exactly where a serial pop loop
+        // would deliver it
+        e.schedule_on(0, 5.0, Event::TaskArrival(4));
+        assert_eq!(e.pop_frontier(&mut buf), 1);
+        assert_eq!(e.now(), 5.0);
+        assert!(matches!(buf[0], (_, Event::TaskArrival(4))));
+        assert_eq!(e.pop_frontier(&mut buf), 1);
+        assert!(matches!(buf[0], (_, Event::TaskArrival(2))));
+        assert_eq!(e.pop_frontier(&mut buf), 0);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn frontier_stream_equals_pop_stream() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let mut a = Engine::with_lanes(5, 16);
+        let mut b = Engine::with_lanes(5, 16);
+        for i in 0..500 {
+            let lane = rng.range_usize(0, 5);
+            let t = (rng.range_usize(0, 40) as f64) * 0.25;
+            a.schedule_on(lane, t, Event::TaskArrival(i));
+            b.schedule_on(lane, t, Event::TaskArrival(i));
+        }
+        let mut via_pop = Vec::new();
+        while let Some((t, ev)) = a.pop() {
+            via_pop.push((t.to_bits(), ev));
+        }
+        let mut via_frontier = Vec::new();
+        let mut buf = Vec::new();
+        while b.pop_frontier(&mut buf) > 0 {
+            for (t, ev) in buf.drain(..) {
+                via_frontier.push((t.to_bits(), ev));
+            }
+        }
+        assert_eq!(via_pop, via_frontier);
+    }
+
+    #[test]
+    fn lane_capacities_pre_size_every_lane() {
+        // all lanes must be usable and pre-sized (no panics, normal merge)
+        let mut e = Engine::with_lane_capacities(4, 128, 32);
+        assert_eq!(e.n_lanes(), 4);
+        for i in 0..64 {
+            e.schedule_on(i % 4, (i / 4) as f64, Event::TaskArrival(i));
+        }
+        assert_eq!(e.len(), 64);
+        let mut last = -1.0f64;
+        while let Some((t, _)) = e.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(e.events_processed(), 64);
     }
 }

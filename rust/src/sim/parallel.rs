@@ -1,0 +1,342 @@
+//! Zero-dependency worker pool for the parallel deterministic engine
+//! (DESIGN.md §10).
+//!
+//! The simulator's parallel mode never runs *event handlers* concurrently —
+//! that would destroy bit-determinism. Instead the driver fans out the
+//! expensive **pure** work (per-server monitor-snapshot construction and
+//! per-shard mapping-policy scans) across this pool, then commits the
+//! results on the calling thread in strict `(time, seq)` order. The pool
+//! therefore only needs one primitive: an *ordered parallel map* — run
+//! `f(i)` for `i in 0..n` on any thread, return the results indexed.
+//!
+//! Workers are spawned once and parked on a condvar between rounds; each
+//! round allocates a fresh `Arc<RoundState>` so a straggler from a previous
+//! round can never grab an index of (or otherwise observe) a newer round.
+//! Jobs borrow the caller's stack — the erased pointers are only
+//! dereferenced while `map` is still blocked waiting for the round's
+//! completion latch, which is what makes the lifetime erasure sound.
+
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Erased description of one round's job: `call(job, out, i)` invokes the
+/// caller's closure for index `i` and writes the result into slot `i`.
+#[derive(Clone, Copy)]
+struct Round {
+    job: *const (),
+    out: *mut (),
+    call: unsafe fn(*const (), *mut (), usize),
+    n: usize,
+}
+
+// SAFETY: the raw pointers reference the `map` caller's stack. They are
+// only dereferenced by `Round::call` for indices `i < n`, every index is
+// claimed exactly once, and `map` does not return until all `n` indices
+// have completed — so the pointees outlive every dereference. After the
+// round completes, workers may still *hold* copies of these pointers (via
+// their `Arc<RoundState>`), but `next >= n` guarantees they never
+// dereference them again.
+unsafe impl Send for Round {}
+unsafe impl Sync for Round {}
+
+/// Per-round shared state. Fresh per `map` call: a worker that wakes up
+/// late and still holds the previous round's `Arc` can only touch that old
+/// round's counters (whose indices are exhausted), never the new round's.
+struct RoundState {
+    desc: Round,
+    /// Next index to claim (grows past `n` when the round is drained).
+    next: AtomicUsize,
+    /// Completed indices; the round is done when this reaches `n`.
+    finished: AtomicUsize,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers park here between rounds.
+    start: Condvar,
+    /// The `map` caller parks here until `finished == n`.
+    done: Condvar,
+}
+
+struct Slot {
+    /// Bumped once per round; workers use it to detect fresh work.
+    generation: u64,
+    round: Option<Arc<RoundState>>,
+    shutdown: bool,
+}
+
+/// A fixed-size pool of `threads - 1` workers; the thread calling [`map`]
+/// participates as the final worker. Single-caller by design: `map` must
+/// not be re-entered from inside a job (the driver never does — jobs are
+/// pure policy/snapshot computation).
+///
+/// [`map`]: WorkerPool::map
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool executing rounds on `threads` threads total (including the
+    /// caller). `threads <= 1` spawns no workers — `map` then runs inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                generation: 0,
+                round: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("carma-sim-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn sim worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Total threads participating in a round (workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the pool (the calling thread
+    /// participates) and return the results in index order. Blocks until
+    /// every index has completed. `f` runs concurrently from several
+    /// threads, hence `Sync`; results are `Send` back to the caller.
+    pub fn map<T, F>(&self, n: usize, f: &F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.handles.is_empty() || n == 1 {
+            return (0..n).map(f).collect();
+        }
+
+        let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+        // SAFETY: MaybeUninit slots are valid uninitialized.
+        unsafe { out.set_len(n) };
+
+        // monomorphized trampoline recovering the erased closure + output
+        unsafe fn call_one<T, F: Fn(usize) -> T + Sync>(
+            job: *const (),
+            out: *mut (),
+            i: usize,
+        ) {
+            let f = &*(job as *const F);
+            let slot = (out as *mut MaybeUninit<T>).add(i);
+            (*slot).write(f(i));
+        }
+
+        let round = Arc::new(RoundState {
+            desc: Round {
+                job: f as *const F as *const (),
+                out: out.as_mut_ptr() as *mut (),
+                call: call_one::<T, F>,
+                n,
+            },
+            next: AtomicUsize::new(0),
+            finished: AtomicUsize::new(0),
+        });
+
+        {
+            let mut slot = self.shared.slot.lock().expect("pool lock");
+            slot.generation += 1;
+            slot.round = Some(round.clone());
+            self.shared.start.notify_all();
+        }
+
+        // participate in the round
+        run_round(&round);
+
+        // wait for stragglers (workers notify under the slot lock when the
+        // finished counter reaches n, so this check-then-wait cannot miss)
+        let mut slot = self.shared.slot.lock().expect("pool lock");
+        while round.finished.load(Ordering::Acquire) < n {
+            slot = self.shared.done.wait(slot).expect("pool wait");
+        }
+        drop(slot);
+
+        // SAFETY: every index in 0..n was claimed exactly once via
+        // `next.fetch_add` and written before the corresponding `finished`
+        // increment (Release); the Acquire load above saw `finished == n`,
+        // so all writes are visible and every slot is initialized.
+        let ptr = out.as_mut_ptr() as *mut T;
+        let cap = out.capacity();
+        std::mem::forget(out);
+        unsafe { Vec::from_raw_parts(ptr, n, cap) }
+    }
+}
+
+/// Claim and execute indices of `round` until it is drained, signalling the
+/// completion latch for the final index.
+///
+/// A panicking job aborts the process: unwinding would either free the
+/// caller's results buffer while other threads still write through raw
+/// pointers into it (caller-side panic) or strand the completion latch
+/// short of `n` forever (worker-side panic). The jobs are pure, seeded
+/// simulation reads — a panic in one is a bug, never data-dependent flow.
+fn run_round(round: &RoundState) {
+    let n = round.desc.n;
+    loop {
+        let i = round.next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            return;
+        }
+        // SAFETY: i < n, claimed exclusively by the fetch_add above; the
+        // caller of `map` keeps job/out alive until `finished == n`.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (round.desc.call)(round.desc.job, round.desc.out, i)
+        }));
+        if ok.is_err() {
+            eprintln!("carma sim worker: parallel job panicked — aborting");
+            std::process::abort();
+        }
+        round.finished.fetch_add(1, Ordering::Release);
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let round: Arc<RoundState> = {
+            let mut slot = shared.slot.lock().expect("pool lock");
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.generation != seen_gen {
+                    if let Some(r) = &slot.round {
+                        seen_gen = slot.generation;
+                        break r.clone();
+                    }
+                }
+                slot = shared.start.wait(slot).expect("pool wait");
+            }
+        };
+        run_round(&round);
+        if round.finished.load(Ordering::Acquire) >= round.desc.n {
+            // this worker may have completed the final index — wake the
+            // caller. Taking the slot lock orders the notify after the
+            // caller's check-then-wait.
+            let _slot = shared.slot.lock().expect("pool lock");
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().expect("pool lock");
+            slot.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Resolve a configured thread count: `0` = one thread per available core,
+/// capped at 8 (the sim's fan-out width saturates well before that on the
+/// cluster sizes the benches sweep).
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    } else {
+        configured
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_returns_results_in_index_order() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let out = pool.map(100, &|i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let pool = WorkerPool::new(3);
+        assert!(pool.map(0, &|i| i).is_empty());
+        assert_eq!(pool.map(1, &|i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.map(5, &|i| i * 2), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn jobs_may_borrow_the_callers_stack() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let out = pool.map(10, &|i| data[i * 100] + 1);
+        assert_eq!(out, vec![1, 101, 201, 301, 401, 501, 601, 701, 801, 901]);
+    }
+
+    #[test]
+    fn repeated_rounds_reuse_the_same_workers() {
+        // many small rounds: exercises the generation handshake and the
+        // straggler-isolation (fresh RoundState per round)
+        let pool = WorkerPool::new(4);
+        for round in 0..200u64 {
+            let out = pool.map(8, &|i| round * 1_000 + i as u64);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, round * 1_000 + i as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_work_still_completes() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map(32, &|i| {
+            // skew: a few indices are much heavier
+            let spins: u64 = if i % 7 == 0 { 200_000 } else { 10 };
+            (0..spins).fold(i as u64, |a, x| a.wrapping_add(x ^ a.rotate_left(3)))
+        });
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn results_deterministic_regardless_of_scheduling() {
+        let pool = WorkerPool::new(4);
+        let a = pool.map(64, &|i| (i as u64).wrapping_mul(0x9E37_79B9));
+        let b = pool.map(64, &|i| (i as u64).wrapping_mul(0x9E37_79B9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(4), 4);
+        let auto = resolve_threads(0);
+        assert!((1..=8).contains(&auto), "auto resolved to {auto}");
+    }
+}

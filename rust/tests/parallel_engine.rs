@@ -1,0 +1,167 @@
+//! Parallel-engine determinism invariants (DESIGN.md §10): a fixed-seed
+//! threaded run must be *byte-identical* to the serial run — same results
+//! JSON, same event count, same energy bits — including on the hardest
+//! ordering cases: OOM-heavy recovery traces (RecoveryDetect + Ramp
+//! interleavings under adaptive backoff and pinned demotion) and
+//! equal-timestamp arrival bursts (FIFO ties across the merge barrier).
+
+use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::{run_trace, RunOutcome};
+use carma::estimators;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{trace_cluster, TraceSpec};
+
+fn run_with(
+    threads: usize,
+    shards: usize,
+    policy: PolicyKind,
+    est: EstimatorKind,
+    smact_cap: Option<f64>,
+    margin: f64,
+    trace: &TraceSpec,
+) -> RunOutcome {
+    let mut c = CarmaConfig {
+        policy,
+        estimator: est,
+        smact_cap,
+        safety_margin_gb: margin,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    let e = estimators::build(est, "artifacts").unwrap();
+    run_trace(c, e, trace, "parallel-test")
+}
+
+/// Full byte-level comparison of two runs: the results JSON (the artifact
+/// ci.sh diffs), the handled-event count, and the energy/makespan bits.
+fn assert_byte_identical(a: &RunOutcome, b: &RunOutcome, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: event streams diverged");
+    assert_eq!(
+        a.report.trace_total_min.to_bits(),
+        b.report.trace_total_min.to_bits(),
+        "{what}: makespan bits diverged"
+    );
+    assert_eq!(
+        a.report.energy_mj.to_bits(),
+        b.report.energy_mj.to_bits(),
+        "{what}: energy bits diverged"
+    );
+    assert_eq!(
+        a.report.avg_waiting_min.to_bits(),
+        b.report.avg_waiting_min.to_bits(),
+        "{what}: queueing-delay bits diverged"
+    );
+    assert_eq!(a.report.oom_crashes, b.report.oom_crashes, "{what}: OOM counts diverged");
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty(),
+        "{what}: results JSON is not byte-identical"
+    );
+    // per-task timings, to the bit: dispatches, waits, completions
+    assert_eq!(a.recorder.tasks.len(), b.recorder.tasks.len());
+    for (i, (ta, tb)) in a.recorder.tasks.iter().zip(&b.recorder.tasks).enumerate() {
+        assert_eq!(ta.assigned_shard, tb.assigned_shard, "{what}: task {i} shard");
+        assert_eq!(ta.dispatches, tb.dispatches, "{what}: task {i} dispatches");
+        assert_eq!(
+            ta.dispatched_s.map(f64::to_bits),
+            tb.dispatched_s.map(f64::to_bits),
+            "{what}: task {i} dispatch time"
+        );
+        assert_eq!(ta.oom_crashes, tb.oom_crashes, "{what}: task {i} crashes");
+    }
+}
+
+#[test]
+fn threaded_matches_serial_on_oom_heavy_recovery_trace() {
+    // blind Round-Robin with no preconditions on an overloaded 8-GPU pool:
+    // the OOM storm exercises RecoveryDetect backoff, Ramp interleavings,
+    // retry-budget demotion to pinned slots — the hardest ordering case the
+    // commit protocol has to reproduce exactly
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 96, 8, 1);
+    let serial = run_with(1, 4, PolicyKind::RoundRobin, EstimatorKind::None, None, 0.0, &trace);
+    assert_eq!(serial.report.completed + serial.recorder.failed_total as usize, 96);
+    assert!(
+        serial.report.oom_crashes > 0,
+        "trace must actually stress recovery (got no OOMs)"
+    );
+    let threaded = run_with(4, 4, PolicyKind::RoundRobin, EstimatorKind::None, None, 0.0, &trace);
+    assert_byte_identical(&serial, &threaded, "oom-heavy threads=4");
+    // and at an odd thread count that cannot divide the work evenly
+    let threaded3 = run_with(3, 4, PolicyKind::RoundRobin, EstimatorKind::None, None, 0.0, &trace);
+    assert_byte_identical(&serial, &threaded3, "oom-heavy threads=3");
+}
+
+#[test]
+fn threaded_matches_serial_on_clean_oracle_trace() {
+    // the no-OOM path: oracle + margin, default preconditions
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 96, 8, 7);
+    let serial = run_with(1, 4, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_eq!(serial.report.completed, 96);
+    assert_eq!(serial.report.oom_crashes, 0);
+    let threaded = run_with(4, 4, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_byte_identical(&serial, &threaded, "oracle threads=4");
+}
+
+#[test]
+fn threads_never_reorder_equal_timestamp_fifo_ties() {
+    // stress: every task arrives at the same instant, so the whole trace is
+    // one giant equal-timestamp frontier — submission FIFO must survive the
+    // merge barrier at every thread count, byte for byte
+    let zoo = ModelZoo::load();
+    let mut trace = trace_cluster(&zoo, 64, 8, 3);
+    for t in &mut trace.tasks {
+        t.arrival_s = 0.0;
+    }
+    let serial = run_with(1, 4, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_eq!(serial.report.completed, 64);
+    let threaded = run_with(4, 4, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_byte_identical(&serial, &threaded, "burst threads=4");
+
+    // FIFO within each shard: among tasks routed to one shard, first
+    // dispatches must follow submission order (ids here, as all arrivals
+    // tie at t=0 and round-robin admission preserves id order per shard)
+    for shard in 0..4usize {
+        let mut mine: Vec<(usize, f64)> = threaded
+            .recorder
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.assigned_shard == Some(shard))
+            .map(|(i, t)| (i, t.dispatched_s.expect("completed trace")))
+            .collect();
+        mine.sort_by_key(|&(i, _)| i);
+        let dispatches: Vec<f64> = mine.iter().map(|&(_, d)| d).collect();
+        assert!(
+            dispatches.windows(2).all(|w| w[0] <= w[1]),
+            "shard {shard} reordered equal-timestamp ties: {dispatches:?}"
+        );
+    }
+}
+
+#[test]
+fn auto_thread_count_completes_and_matches() {
+    // threads = 0 (auto-detect) must behave like any other thread count:
+    // same bytes, whatever the host's core count resolves to
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 48, 8, 11);
+    let serial = run_with(1, 2, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    let auto = run_with(0, 2, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_eq!(serial.report.completed, 48);
+    assert_byte_identical(&serial, &auto, "auto threads");
+}
+
+#[test]
+fn threading_a_single_shard_is_still_identical() {
+    // shards = 1 leaves no mapper fan-out, but the snapshot build still
+    // runs through the pool — the degenerate case must stay byte-identical
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 32, 8, 5);
+    let serial = run_with(1, 1, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    let threaded = run_with(4, 1, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
+    assert_eq!(serial.report.completed, 32);
+    assert_byte_identical(&serial, &threaded, "1-shard threads=4");
+}
