@@ -1,0 +1,100 @@
+//! Gang-lane throughput: events/sec and wall cost of the fabric-aware
+//! gang-scheduling run vs the server-local baseline on the 4×4-server,
+//! 96-task mixed trace (DESIGN.md §11), plus the thread sweep on the gang
+//! path (threads never change results — only wall time — asserted on the
+//! full results JSON).
+//!
+//! Rows land in `BENCH_sim.json` (perf trajectory across PRs);
+//! `CARMA_BENCH_SMOKE=1` runs a 1-iteration subset for CI.
+
+use std::time::Instant;
+
+use carma::bench::{black_box, save_bench_section, smoke_mode};
+use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
+use carma::coordinator::carma::run_trace;
+use carma::estimators;
+use carma::util::json::{self, Json};
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{server_localize, trace_gang, TraceSpec};
+
+const SERVERS: usize = 4;
+const GPUS_PER_SERVER: usize = 4;
+const TASKS: usize = 96;
+const GANG_GPUS: usize = 2 * GPUS_PER_SERVER;
+
+fn cfg(threads: usize) -> CarmaConfig {
+    let mut cfg = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    cfg.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    cfg.coordinator.shards = 4;
+    cfg.engine.threads = threads;
+    cfg
+}
+
+/// Run one configuration `runs` times; returns (bench row, results JSON).
+fn one(system: &str, trace: &TraceSpec, threads: usize, runs: u32) -> (Json, String) {
+    let mut best_wall = f64::INFINITY;
+    let mut events = 0u64;
+    let mut makespan = 0.0f64;
+    let mut json_text = String::new();
+    for _ in 0..runs {
+        let c = cfg(threads);
+        let est = estimators::build(c.estimator, "artifacts").expect("estimator");
+        let t0 = Instant::now();
+        let out = run_trace(c, est, trace, system);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(out.report.completed, TASKS, "{system}: trace must complete");
+        assert_eq!(
+            out.report.gang.partial_dispatches, 0,
+            "{system}: all-or-nothing violated"
+        );
+        best_wall = best_wall.min(wall);
+        events = out.events;
+        makespan = out.report.trace_total_min;
+        json_text = out.report.to_json().to_string_pretty();
+        black_box(&json_text);
+    }
+    println!(
+        "{system:<22} threads {threads}: {makespan:>8.1} m makespan, {events:>8} events, \
+         {:>8.0} ev/s wall {best_wall:.2}s",
+        events as f64 / best_wall.max(1e-9)
+    );
+    let row = json::obj(vec![
+        ("system", json::s(system)),
+        ("threads", json::num(threads as f64)),
+        ("makespan_min", json::num(makespan)),
+        ("events", json::num(events as f64)),
+        ("events_per_sec", json::num(events as f64 / best_wall.max(1e-9))),
+        ("wall_s", json::num(best_wall)),
+    ]);
+    (row, json_text)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let runs: u32 = if smoke { 1 } else { 3 };
+    let zoo = ModelZoo::load();
+    let total_gpus = SERVERS * GPUS_PER_SERVER;
+    let gang_trace = trace_gang(&zoo, TASKS, total_gpus, GANG_GPUS, 42);
+    let local_trace = server_localize(&gang_trace, GPUS_PER_SERVER);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let thread_sweep: &[usize] = if smoke { &[1] } else { &[1, 4] };
+    let mut gang_json: Option<String> = None;
+    for &threads in thread_sweep {
+        let (row, j) = one("gang", &gang_trace, threads, runs);
+        // §10 on the gang path: threads change wall-clock only
+        match &gang_json {
+            None => gang_json = Some(j),
+            Some(prev) => assert_eq!(*prev, j, "threads changed the gang results"),
+        }
+        rows.push(row);
+    }
+    let (row, _) = one("server-local", &local_trace, 1, runs);
+    rows.push(row);
+    save_bench_section("gang_scale", rows);
+}

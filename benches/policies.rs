@@ -20,6 +20,7 @@ fn views(n: usize) -> Vec<GpuView> {
             smact_window: rng.f64(),
             n_tasks: rng.range_usize(0, 4),
             pinned: false,
+            held: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,

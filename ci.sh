@@ -68,6 +68,26 @@ fi
 printf '%s\n' "$F" | head -n 6
 echo "threaded smoke OK: byte-identical results JSON at 1 and 4 engine threads"
 
+step "gang smoke: distributed-job trace, threaded vs serial --json, byte-for-byte"
+GANG_BASE=(run --servers 4 --gpus-per-server 4 --trace gang96 --shards 4 \
+    --estimator oracle --margin 2 --seed 7 --json)
+G="$("$BIN" "${GANG_BASE[@]}")"
+H="$("$BIN" "${GANG_BASE[@]}" --engine-threads 4)"
+if [ "$G" != "$H" ]; then
+    echo "DETERMINISM FAILURE: gang trace diverged between serial and threaded engine" >&2
+    diff <(printf '%s\n' "$G") <(printf '%s\n' "$H") >&2 || true
+    exit 1
+fi
+if ! printf '%s\n' "$G" | grep -q '"partial_dispatches": 0'; then
+    echo "GANG FAILURE: partial dispatch observed in results JSON (all-or-nothing violated)" >&2
+    exit 1
+fi
+if printf '%s\n' "$G" | grep -q '"cross_server": 0,'; then
+    echo "GANG FAILURE: no gang placed across servers" >&2
+    exit 1
+fi
+echo "gang smoke OK: byte-identical JSON, cross-server gangs, zero partial dispatches"
+
 step "bench smoke: 1-iteration bench binaries (bit-rot guard)"
 # write the smoke rows to a throwaway ledger — the repo-root BENCH_sim.json
 # accumulates real full-sweep measurements across PRs and must not be
@@ -75,6 +95,7 @@ step "bench smoke: 1-iteration bench binaries (bit-rot guard)"
 SMOKE_JSON="$(mktemp -t carma-bench-smoke-XXXXXX.json)"
 CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench cluster_scale
 CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench shard_scale
+CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench gang_scale
 rm -f "$SMOKE_JSON"
 
 echo

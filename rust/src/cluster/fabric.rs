@@ -1,0 +1,306 @@
+//! Interconnect fabric model (DESIGN.md §11): NVLink islands within a
+//! server, PCIe across islands, NIC hops across servers.
+//!
+//! The cluster substrate (§8) models interference at the device level only;
+//! distributed (gang-scheduled) jobs additionally contend on *links* — the
+//! NVLink domain inside a server, the PCIe switch between islands, and the
+//! server NIC for cross-server collectives (Elvinger et al.: interference
+//! extends "one level deeper" than the SM). The fabric gives placement a
+//! path-cost function to rank candidate GPU sets (fewer links crossed =
+//! cheaper collectives) and tracks per-server NIC occupancy so concurrent
+//! gangs sharing an uplink slow each other (`interference::fabric_factor`).
+//!
+//! Everything here is pure bookkeeping over the static topology — no
+//! floating-point accumulation ordering depends on thread count, so the
+//! deterministic-engine guarantee (§10) extends to fabric-aware runs.
+
+use crate::config::schema::{FabricConfig, FabricProfile};
+use crate::sim::TaskId;
+
+use super::interference;
+use super::topology::ClusterTopology;
+
+/// Link classes a pair of GPUs can communicate over, cheapest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Same device (no fabric traffic).
+    Local,
+    /// Same NVLink island (intra-server, full-bandwidth domain).
+    NvLink,
+    /// Same server, different island (through the PCIe switch).
+    Pcie,
+    /// Different servers (through both NICs).
+    Nic,
+}
+
+/// Static fabric shape + per-server NIC occupancy.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    /// Server owning each global GPU id.
+    gpu_server: Vec<usize>,
+    /// Global island id of each GPU (islands numbered server 0 first).
+    gpu_island: Vec<usize>,
+    /// Server owning each island.
+    island_server: Vec<usize>,
+    n_servers: usize,
+    /// Per-GB transfer cost (1/bandwidth) for each link class.
+    cost_intra_island: f64,
+    cost_cross_island: f64,
+    cost_cross_server: f64,
+    /// Aggregate membw demand of running gangs on each server's NIC.
+    nic_load: Vec<f64>,
+    /// Contention slope / per-extra-server sync penalty (from `[fabric]`).
+    contention_alpha: f64,
+    cross_penalty: f64,
+}
+
+impl Fabric {
+    pub fn new(topo: &ClusterTopology, cfg: &FabricConfig) -> Fabric {
+        let mut gpu_server = Vec::with_capacity(topo.total_gpus());
+        let mut gpu_island = Vec::with_capacity(topo.total_gpus());
+        let mut island_server = Vec::new();
+        for s in &topo.servers {
+            let isl = cfg.island_gpus(s.cfg.n_gpus);
+            let first_island = island_server.len();
+            let n_islands = s.cfg.n_gpus.div_ceil(isl);
+            for _ in 0..n_islands {
+                island_server.push(s.id);
+            }
+            for i in 0..s.cfg.n_gpus {
+                gpu_server.push(s.id);
+                gpu_island.push(first_island + i / isl);
+            }
+        }
+        // FlatPcie has no NVLink domain: intra-island pairs pay PCIe cost
+        let intra = match cfg.profile {
+            FabricProfile::FlatPcie => 1.0 / cfg.pcie_gbps,
+            _ => 1.0 / cfg.nvlink_gbps,
+        };
+        Fabric {
+            gpu_server,
+            gpu_island,
+            island_server,
+            n_servers: topo.n_servers(),
+            cost_intra_island: intra,
+            cost_cross_island: 1.0 / cfg.pcie_gbps,
+            cost_cross_server: 1.0 / cfg.nic_gbps,
+            nic_load: vec![0.0; topo.n_servers()],
+            contention_alpha: cfg.contention_alpha,
+            cross_penalty: cfg.cross_penalty,
+        }
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.island_server.len()
+    }
+
+    pub fn island_of(&self, gpu: usize) -> usize {
+        self.gpu_island[gpu]
+    }
+
+    pub fn server_of(&self, gpu: usize) -> usize {
+        self.gpu_server[gpu]
+    }
+
+    /// Link class connecting two GPUs.
+    pub fn link_class(&self, a: usize, b: usize) -> LinkClass {
+        if a == b {
+            LinkClass::Local
+        } else if self.gpu_island[a] == self.gpu_island[b] {
+            LinkClass::NvLink
+        } else if self.gpu_server[a] == self.gpu_server[b] {
+            LinkClass::Pcie
+        } else {
+            LinkClass::Nic
+        }
+    }
+
+    /// Per-GB transfer cost between two GPUs (0 for the same device).
+    pub fn path_cost(&self, a: usize, b: usize) -> f64 {
+        match self.link_class(a, b) {
+            LinkClass::Local => 0.0,
+            LinkClass::NvLink => self.cost_intra_island,
+            LinkClass::Pcie => self.cost_cross_island,
+            // cross-server traffic leaves one NIC and enters another
+            LinkClass::Nic => 2.0 * self.cost_cross_server,
+        }
+    }
+
+    /// Cost of a candidate gang placement: the ring-all-reduce
+    /// approximation — per-GB cost summed over consecutive pairs of the
+    /// id-sorted set (plus the wrap link). Lower = tighter placement.
+    pub fn gang_cost(&self, gpus: &[usize]) -> f64 {
+        if gpus.len() < 2 {
+            return 0.0;
+        }
+        let mut sorted = gpus.to_vec();
+        sorted.sort_unstable();
+        let mut cost = 0.0;
+        for w in sorted.windows(2) {
+            cost += self.path_cost(w[0], w[1]);
+        }
+        cost + self.path_cost(sorted[0], sorted[sorted.len() - 1])
+    }
+
+    /// Distinct servers a GPU set touches.
+    pub fn servers_spanned(&self, gpus: &[usize]) -> usize {
+        let mut seen = vec![false; self.n_servers];
+        let mut n = 0;
+        for &g in gpus {
+            let s = self.gpu_server[g];
+            if !seen[s] {
+                seen[s] = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Home-server affinity for shard routing (DESIGN.md §11): arrivals
+    /// cycle over fabric islands, islands belong to servers — so the
+    /// `locality` strategy groups tasks by server topology rather than raw
+    /// id stickiness. `None` on a single-server cluster (no affinity: the
+    /// caller falls back to the sticky id-modulo rule).
+    pub fn home_server(&self, task: TaskId) -> Option<usize> {
+        if self.n_servers <= 1 {
+            return None;
+        }
+        Some(self.island_server[task % self.island_server.len()])
+    }
+
+    // -- link occupancy -----------------------------------------------------
+
+    /// A gang spanning several servers starts driving collectives over
+    /// every spanned server's NIC: add its bandwidth demand there.
+    pub fn occupy_links(&mut self, gpus: &[usize], membw: f64) {
+        for s in self.spanned_list(gpus) {
+            self.nic_load[s] += membw;
+        }
+    }
+
+    /// Inverse of [`Fabric::occupy_links`] — called when the gang releases.
+    pub fn release_links(&mut self, gpus: &[usize], membw: f64) {
+        for s in self.spanned_list(gpus) {
+            self.nic_load[s] = (self.nic_load[s] - membw).max(0.0);
+        }
+    }
+
+    pub fn nic_load(&self, server: usize) -> f64 {
+        self.nic_load[server]
+    }
+
+    /// Speed factor of a *running* gang on this placement: the cross-server
+    /// synchronization penalty plus NIC contention from other gangs sharing
+    /// any of its uplinks (`interference::fabric_factor`). 1.0 for
+    /// server-local placements.
+    pub fn gang_speed_factor(&self, gpus: &[usize], own_membw: f64) -> f64 {
+        let spanned = self.spanned_list(gpus);
+        if spanned.len() <= 1 {
+            return 1.0;
+        }
+        let mut other = 0.0f64;
+        for &s in &spanned {
+            other = other.max((self.nic_load[s] - own_membw).max(0.0));
+        }
+        interference::fabric_factor(spanned.len(), other, self.cross_penalty, self.contention_alpha)
+    }
+
+    /// Sorted distinct servers of a GPU set.
+    fn spanned_list(&self, gpus: &[usize]) -> Vec<usize> {
+        let mut servers: Vec<usize> = gpus.iter().map(|&g| self.gpu_server[g]).collect();
+        servers.sort_unstable();
+        servers.dedup();
+        servers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ClusterConfig;
+
+    fn fabric(profile: FabricProfile, servers: usize, gpus: usize) -> Fabric {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(servers, gpus, 40.0));
+        let cfg = FabricConfig {
+            profile,
+            ..FabricConfig::default()
+        };
+        Fabric::new(&topo, &cfg)
+    }
+
+    #[test]
+    fn link_classes_by_distance() {
+        // 2 servers × 4 GPUs, dual islands of 2: 0-1 nvlink, 0-2 pcie, 0-4 nic
+        let f = fabric(FabricProfile::DualIsland, 2, 4);
+        assert_eq!(f.link_class(0, 0), LinkClass::Local);
+        assert_eq!(f.link_class(0, 1), LinkClass::NvLink);
+        assert_eq!(f.link_class(0, 2), LinkClass::Pcie);
+        assert_eq!(f.link_class(0, 4), LinkClass::Nic);
+        assert!(f.path_cost(0, 1) < f.path_cost(0, 2));
+        assert!(f.path_cost(0, 2) < f.path_cost(0, 4));
+        assert_eq!(f.path_cost(3, 3), 0.0);
+    }
+
+    #[test]
+    fn default_profile_is_one_island_per_server() {
+        let f = fabric(FabricProfile::NvlinkIsland, 2, 4);
+        assert_eq!(f.n_islands(), 2);
+        assert_eq!(f.link_class(0, 3), LinkClass::NvLink);
+        assert_eq!(f.link_class(0, 4), LinkClass::Nic);
+    }
+
+    #[test]
+    fn flat_pcie_has_no_nvlink_advantage() {
+        let f = fabric(FabricProfile::FlatPcie, 1, 4);
+        // every intra-server pair pays the PCIe cost
+        assert_eq!(f.path_cost(0, 1), f.path_cost(0, 3));
+        assert!(f.path_cost(0, 1) > 1.0 / 300.0);
+    }
+
+    #[test]
+    fn gang_cost_prefers_tighter_placements() {
+        let f = fabric(FabricProfile::NvlinkIsland, 2, 4);
+        let local = f.gang_cost(&[0, 1, 2, 3]);
+        let split = f.gang_cost(&[0, 1, 4, 5]);
+        assert!(local < split, "server-local {local} !< cross-server {split}");
+        assert_eq!(f.gang_cost(&[2]), 0.0);
+        assert_eq!(f.servers_spanned(&[0, 1, 2, 3]), 1);
+        assert_eq!(f.servers_spanned(&[0, 1, 4, 5]), 2);
+    }
+
+    #[test]
+    fn home_server_cycles_islands_and_falls_back_when_single() {
+        let f = fabric(FabricProfile::DualIsland, 2, 4);
+        // 4 islands: tasks 0..4 land on servers 0,0,1,1 then wrap
+        assert_eq!(f.home_server(0), Some(0));
+        assert_eq!(f.home_server(1), Some(0));
+        assert_eq!(f.home_server(2), Some(1));
+        assert_eq!(f.home_server(3), Some(1));
+        assert_eq!(f.home_server(4), Some(0));
+        let single = fabric(FabricProfile::NvlinkIsland, 1, 4);
+        assert_eq!(single.home_server(7), None, "no affinity on one server");
+    }
+
+    #[test]
+    fn link_occupancy_roundtrip_and_contention() {
+        let mut f = fabric(FabricProfile::NvlinkIsland, 2, 4);
+        let gang = [0usize, 1, 4, 5]; // spans both servers
+        f.occupy_links(&gang, 0.4);
+        assert!((f.nic_load(0) - 0.4).abs() < 1e-12);
+        assert!((f.nic_load(1) - 0.4).abs() < 1e-12);
+        // alone on the link: sync penalty only, no contention term
+        let solo = f.gang_speed_factor(&gang, 0.4);
+        assert!(solo < 1.0 && solo > 0.5, "cross-server sync penalty: {solo}");
+        // a second gang on the same uplinks adds contention
+        let gang2 = [2usize, 3, 6, 7];
+        f.occupy_links(&gang2, 0.5);
+        let contended = f.gang_speed_factor(&gang, 0.4);
+        assert!(contended < solo, "shared NIC must slow the gang: {contended} !< {solo}");
+        f.release_links(&gang2, 0.5);
+        assert!((f.gang_speed_factor(&gang, 0.4) - solo).abs() < 1e-12);
+        f.release_links(&gang, 0.4);
+        assert_eq!(f.nic_load(0), 0.0);
+        // server-local placements never pay fabric costs
+        assert_eq!(f.gang_speed_factor(&[0, 1, 2, 3], 0.9), 1.0);
+    }
+}

@@ -112,6 +112,31 @@ fn mig(tasks: &[Demand]) -> Vec<f64> {
         .collect()
 }
 
+/// Cross-GPU (fabric) interference term (DESIGN.md §11): the speed factor a
+/// *distributed* gang pays for running across servers. Two components, both
+/// below the SM level (Elvinger et al.):
+///
+/// * a synchronization penalty growing with the number of servers spanned —
+///   every collective crosses the NIC instead of staying in the NVLink
+///   domain;
+/// * a contention term from *other* gangs' aggregate bandwidth demand on
+///   the busiest NIC this gang shares (`Fabric` tracks link occupancy).
+///
+/// Server-local placements (spanned <= 1) never pay either term.
+pub fn fabric_factor(
+    spanned_servers: usize,
+    other_nic_load: f64,
+    cross_penalty: f64,
+    contention_alpha: f64,
+) -> f64 {
+    if spanned_servers <= 1 {
+        return 1.0;
+    }
+    let sync = 1.0 / (1.0 + cross_penalty * (spanned_servers as f64 - 1.0));
+    let contention = 1.0 / (1.0 + contention_alpha * other_nic_load.max(0.0));
+    sync * contention
+}
+
 /// Effective GPU-level SM activity for monitoring/power: fraction of time at
 /// least one warp is active (paper §5.1.3).
 pub fn effective_smact(mode: CollocationMode, tasks: &[Demand]) -> f64 {
@@ -235,6 +260,23 @@ mod tests {
         let light = [d(0.3), d(0.3)];
         assert!((effective_smact(CollocationMode::Mps, &light) - 0.51).abs() < 1e-9);
         assert!((effective_smact(CollocationMode::Streams, &light) - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fabric_factor_penalizes_span_and_contention() {
+        // server-local gangs pay nothing, regardless of link load
+        assert_eq!(fabric_factor(1, 5.0, 0.15, 0.5), 1.0);
+        assert_eq!(fabric_factor(0, 5.0, 0.15, 0.5), 1.0);
+        // spanning servers costs sync; more servers cost more
+        let two = fabric_factor(2, 0.0, 0.15, 0.5);
+        let four = fabric_factor(4, 0.0, 0.15, 0.5);
+        assert!(two < 1.0 && four < two, "two={two} four={four}");
+        // co-runner bandwidth on the shared NIC adds contention
+        let contended = fabric_factor(2, 0.8, 0.15, 0.5);
+        assert!(contended < two);
+        // negative "other load" is clamped, never a speedup
+        assert_eq!(fabric_factor(2, -1.0, 0.15, 0.5), two);
+        assert!(fabric_factor(8, 10.0, 0.15, 0.5) > 0.0);
     }
 
     #[test]

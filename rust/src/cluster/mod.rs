@@ -3,12 +3,14 @@
 //! per-collocation-mode interference model, and the power/energy model.
 
 pub mod allocator;
+pub mod fabric;
 pub mod gpu;
 pub mod interference;
 pub mod power;
 pub mod topology;
 
 pub use allocator::{SegId, SegmentAllocator};
+pub use fabric::{Fabric, LinkClass};
 pub use gpu::{Gpu, ResidentTask, Server};
 pub use interference::speed_factors;
 pub use power::gpu_power_w;

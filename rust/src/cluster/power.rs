@@ -32,6 +32,17 @@ pub fn gpu_power_w(cfg: &PowerConfig, active_tasks: usize, smact: f64) -> f64 {
     p
 }
 
+/// Anticipated draw of reserved-but-not-yet-dispatched gang slots
+/// (DESIGN.md §11). A gang hold promises the GPU to a pending gang: when
+/// the gang commits, the device jumps from its idle floor to at least the
+/// active base draw. The power-envelope filter must count that headroom
+/// *now* — otherwise singleton admissions can fill the envelope while the
+/// gang is accumulating holds, and the gang's own commit would overshoot
+/// `--power-cap` at dispatch time.
+pub fn reserved_w(cfg: &PowerConfig, reserved_slots: usize) -> f64 {
+    reserved_slots as f64 * (cfg.base_w - cfg.idle_w).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +91,20 @@ mod tests {
     fn active_but_low_util_above_idle() {
         let c = cfg();
         assert!(gpu_power_w(&c, 1, 0.0) > c.idle_w);
+    }
+
+    #[test]
+    fn reserved_slots_count_toward_the_envelope() {
+        let c = cfg();
+        // each held slot anticipates the idle -> base jump (43 W default)
+        assert_eq!(reserved_w(&c, 0), 0.0);
+        assert!((reserved_w(&c, 2) - 2.0 * (c.base_w - c.idle_w)).abs() < 1e-9);
+        // a degenerate config (base below idle) must not go negative
+        let weird = PowerConfig {
+            base_w: 10.0,
+            idle_w: 52.0,
+            ..cfg()
+        };
+        assert_eq!(reserved_w(&weird, 3), 0.0);
     }
 }

@@ -5,9 +5,10 @@
 //! every GPU carries a *global* id (server 0's GPUs first, then server 1's,
 //! …), so the coordinator, monitor and recorder keep indexing by one flat id
 //! while mapping decisions gain a server dimension (two-level mapping,
-//! `coordinator::policy::select_two_level`). Multi-GPU tasks are always
-//! placed within one server — cross-server data parallelism would cross the
-//! NVLink boundary the paper's task model assumes away.
+//! `coordinator::policy::select_two_level`). Non-gang multi-GPU tasks are
+//! placed within one server — crossing the NVLink boundary is reserved for
+//! explicitly gang-scheduled distributed jobs, which pay the fabric's
+//! link costs for it (`cluster::fabric`, DESIGN.md §11).
 
 use crate::config::schema::{ClusterConfig, ServerConfig};
 

@@ -183,6 +183,111 @@ impl Default for EngineConfig {
     }
 }
 
+/// Interconnect fabric profile (DESIGN.md §11): how a server's GPUs are
+/// grouped into NVLink islands, and what crossing an island/server costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricProfile {
+    /// One NVLink island per server (DGX-style all-to-all NVLink).
+    NvlinkIsland,
+    /// No NVLink: every intra-server pair goes through the PCIe switch.
+    FlatPcie,
+    /// Two NVLink islands per server bridged by PCIe (PCIe-switch pairs).
+    DualIsland,
+}
+
+impl FabricProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "nvlink-island" | "nvlink_island" | "nvlink" => FabricProfile::NvlinkIsland,
+            "flat-pcie" | "flat_pcie" | "pcie" => FabricProfile::FlatPcie,
+            "dual-island" | "dual_island" | "dual" => FabricProfile::DualIsland,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricProfile::NvlinkIsland => "nvlink-island",
+            FabricProfile::FlatPcie => "flat-pcie",
+            FabricProfile::DualIsland => "dual-island",
+        }
+    }
+}
+
+/// Fabric model configuration (TOML `[fabric]`, `--fabric-profile`;
+/// DESIGN.md §11). Bandwidth classes default to A100-era numbers: NVLink
+/// 300 GB/s per direction, PCIe Gen4 x16 32 GB/s, 200 Gb/s NIC ≈ 25 GB/s.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    pub profile: FabricProfile,
+    /// GPUs per NVLink island; 0 = derive from the profile (whole server
+    /// for nvlink-island, 1 for flat-pcie, half a server for dual-island).
+    pub island_size: usize,
+    pub nvlink_gbps: f64,
+    pub pcie_gbps: f64,
+    pub nic_gbps: f64,
+    /// NIC contention slope of the cross-GPU interference term.
+    pub contention_alpha: f64,
+    /// Per-extra-server synchronization penalty of a spanning gang.
+    pub cross_penalty: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            profile: FabricProfile::NvlinkIsland,
+            island_size: 0,
+            nvlink_gbps: 300.0,
+            pcie_gbps: 32.0,
+            nic_gbps: 25.0,
+            contention_alpha: 0.5,
+            cross_penalty: 0.15,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Effective island size on a server of `n_gpus` devices.
+    pub fn island_gpus(&self, n_gpus: usize) -> usize {
+        let raw = if self.island_size > 0 {
+            self.island_size
+        } else {
+            match self.profile {
+                FabricProfile::NvlinkIsland => n_gpus,
+                FabricProfile::FlatPcie => 1,
+                FabricProfile::DualIsland => n_gpus.div_ceil(2),
+            }
+        };
+        raw.clamp(1, n_gpus.max(1))
+    }
+}
+
+/// Gang-scheduling configuration (TOML `[gang]`, `--gang-hold-ttl`;
+/// DESIGN.md §11): all-or-nothing reservations for distributed jobs.
+#[derive(Debug, Clone)]
+pub struct GangConfig {
+    /// How long a partial hold may sit without progress before it is torn
+    /// down and its GPUs returned to the backfill pool (seconds).
+    pub hold_ttl_s: f64,
+    /// Re-attempt cadence while a gang waits for capacity (seconds).
+    pub retry_s: f64,
+    /// After this many TTL teardowns the lane-head gang's holds become
+    /// sticky (no further teardown) — the anti-starvation floor under
+    /// continuous singleton arrivals. The budget is per lane headship,
+    /// never refunded by re-acquisition.
+    pub max_hold_expiries: u32,
+}
+
+impl Default for GangConfig {
+    fn default() -> Self {
+        GangConfig {
+            hold_ttl_s: 120.0,
+            retry_s: 15.0,
+            max_hold_expiries: 3,
+        }
+    }
+}
+
 /// One simulated server (DGX Station A100 defaults, paper Table 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -333,6 +438,8 @@ pub struct CarmaConfig {
     pub cluster: ClusterConfig,
     pub coordinator: CoordinatorConfig,
     pub engine: EngineConfig,
+    pub fabric: FabricConfig,
+    pub gang: GangConfig,
     pub policy: PolicyKind,
     pub colloc: CollocationMode,
     pub estimator: EstimatorKind,
@@ -355,6 +462,8 @@ impl Default for CarmaConfig {
             cluster: ClusterConfig::default(),
             coordinator: CoordinatorConfig::default(),
             engine: EngineConfig::default(),
+            fabric: FabricConfig::default(),
+            gang: GangConfig::default(),
             policy: PolicyKind::Magm,
             colloc: CollocationMode::Mps,
             estimator: EstimatorKind::GpuMemNet,
@@ -494,6 +603,39 @@ impl CarmaConfig {
             self.engine.threads = usize::try_from(v)
                 .map_err(|_| format!("engine.threads must be >= 0, got {v}"))?;
         }
+        if let Some(v) = doc.get("fabric.profile").and_then(|v| v.as_str()) {
+            self.fabric.profile = FabricProfile::parse(v)
+                .ok_or_else(|| format!("unknown fabric profile '{v}'"))?;
+        }
+        if let Some(v) = doc.get("fabric.island_size").and_then(|v| v.as_i64()) {
+            self.fabric.island_size = usize::try_from(v)
+                .map_err(|_| format!("fabric.island_size must be >= 0, got {v}"))?;
+        }
+        if let Some(v) = f64_of("fabric.nvlink_gbps") {
+            self.fabric.nvlink_gbps = v;
+        }
+        if let Some(v) = f64_of("fabric.pcie_gbps") {
+            self.fabric.pcie_gbps = v;
+        }
+        if let Some(v) = f64_of("fabric.nic_gbps") {
+            self.fabric.nic_gbps = v;
+        }
+        if let Some(v) = f64_of("fabric.contention_alpha") {
+            self.fabric.contention_alpha = v;
+        }
+        if let Some(v) = f64_of("fabric.cross_penalty") {
+            self.fabric.cross_penalty = v;
+        }
+        if let Some(v) = f64_of("gang.hold_ttl_s") {
+            self.gang.hold_ttl_s = v;
+        }
+        if let Some(v) = f64_of("gang.retry_s") {
+            self.gang.retry_s = v;
+        }
+        if let Some(v) = doc.get("gang.max_hold_expiries").and_then(|v| v.as_i64()) {
+            self.gang.max_hold_expiries = u32::try_from(v)
+                .map_err(|_| format!("gang.max_hold_expiries must be >= 0, got {v}"))?;
+        }
         if let Some(v) = doc.get("policy.kind").and_then(|v| v.as_str()) {
             self.policy = PolicyKind::parse(v).ok_or_else(|| format!("unknown policy '{v}'"))?;
         }
@@ -612,6 +754,30 @@ impl CarmaConfig {
                 return Err("policy.smact_cap must be in [0,1]".into());
             }
         }
+        for (name, v) in [
+            ("fabric.nvlink_gbps", self.fabric.nvlink_gbps),
+            ("fabric.pcie_gbps", self.fabric.pcie_gbps),
+            ("fabric.nic_gbps", self.fabric.nic_gbps),
+        ] {
+            if v <= 0.0 {
+                return Err(format!("{name} must be positive, got {v}"));
+            }
+        }
+        if self.fabric.contention_alpha < 0.0 || self.fabric.cross_penalty < 0.0 {
+            return Err("fabric contention/penalty slopes must be >= 0".into());
+        }
+        if self.fabric.island_size > 1024 {
+            return Err(format!(
+                "fabric.island_size must be in 0..=1024 (0 = profile default), got {}",
+                self.fabric.island_size
+            ));
+        }
+        if self.gang.hold_ttl_s <= 0.0 {
+            return Err("gang.hold_ttl_s must be positive".into());
+        }
+        if self.gang.retry_s <= 0.0 {
+            return Err("gang.retry_s must be positive".into());
+        }
         if self.monitor.window_s < self.monitor.sample_period_s {
             return Err("monitor.window_s must be >= sample period".into());
         }
@@ -726,6 +892,56 @@ mod tests {
         assert_eq!(ShardAssign::parse("least_loaded"), Some(ShardAssign::LeastLoaded));
         assert_eq!(ShardAssign::parse("sticky"), Some(ShardAssign::Locality));
         assert_eq!(ShardAssign::parse("nope"), None);
+    }
+
+    #[test]
+    fn fabric_and_gang_sections_apply() {
+        let c = CarmaConfig::default();
+        assert_eq!(c.fabric.profile, FabricProfile::NvlinkIsland);
+        assert_eq!(c.fabric.island_size, 0);
+        assert_eq!(c.gang.hold_ttl_s, 120.0);
+
+        let doc = toml::parse(
+            "[fabric]\nprofile = \"dual-island\"\nnic_gbps = 12.5\ncontention_alpha = 0.8\n\
+             [gang]\nhold_ttl_s = 45.0\nretry_s = 10.0\nmax_hold_expiries = 2\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.fabric.profile, FabricProfile::DualIsland);
+        assert_eq!(c.fabric.nic_gbps, 12.5);
+        assert_eq!(c.fabric.contention_alpha, 0.8);
+        assert_eq!(c.gang.hold_ttl_s, 45.0);
+        assert_eq!(c.gang.retry_s, 10.0);
+        assert_eq!(c.gang.max_hold_expiries, 2);
+
+        // typo'd profiles and non-positive knobs are config errors
+        let doc = toml::parse("[fabric]\nprofile = \"infiniband\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[fabric]\nnic_gbps = 0.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[gang]\nhold_ttl_s = -5.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+    }
+
+    #[test]
+    fn fabric_island_sizes_follow_profile() {
+        let mut f = FabricConfig::default();
+        assert_eq!(f.island_gpus(4), 4, "nvlink-island spans the server");
+        f.profile = FabricProfile::FlatPcie;
+        assert_eq!(f.island_gpus(4), 1);
+        f.profile = FabricProfile::DualIsland;
+        assert_eq!(f.island_gpus(4), 2);
+        assert_eq!(f.island_gpus(5), 3, "odd servers round the split up");
+        // explicit island_size overrides the profile and clamps to the server
+        f.island_size = 8;
+        assert_eq!(f.island_gpus(4), 4);
+        f.island_size = 3;
+        assert_eq!(f.island_gpus(8), 3);
+        assert_eq!(FabricProfile::parse("nvlink"), Some(FabricProfile::NvlinkIsland));
+        assert_eq!(FabricProfile::parse("pcie"), Some(FabricProfile::FlatPcie));
+        assert_eq!(FabricProfile::parse("ethernet"), None);
+        assert_eq!(FabricProfile::DualIsland.name(), "dual-island");
     }
 
     #[test]

@@ -26,8 +26,9 @@
 
 use std::sync::Arc;
 
+use crate::cluster::fabric::Fabric;
 use crate::cluster::gpu::ResidentTask;
-use crate::cluster::power::gpu_power_w;
+use crate::cluster::power::{self, gpu_power_w};
 use crate::cluster::topology::{Cluster, ClusterTopology};
 use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
 use crate::estimators::MemoryEstimator;
@@ -40,6 +41,7 @@ use crate::workload::memsim;
 use crate::workload::task::TaskSpec;
 use crate::workload::trace::TraceSpec;
 
+use super::gang::{self, GangLane, GangPlan, ReservationBook};
 use super::monitor::Monitor;
 use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions, ServerView};
 use super::shard::{Admission, MapPlan, Mapper, PlanOutcome};
@@ -155,12 +157,18 @@ pub struct Carma {
     processed: u64,
     /// Monotone state-version counter: bumped (`touch`) on every mutation
     /// that can change a mapping decision's inputs — GPU residency,
-    /// allocations, ramp progress, pinning, monitor samples. Snapshot and
-    /// plan validity are keyed on `(state_epoch, now)`.
+    /// allocations, ramp progress, pinning, holds, monitor samples.
+    /// Snapshot and plan validity are keyed on `(state_epoch, now)`.
     state_epoch: u64,
     views_cache: Option<ViewsCache>,
     /// Worker pool of the parallel engine (None ⇒ serial, the default).
     pool: Option<WorkerPool>,
+    /// Interconnect topology + NIC occupancy (DESIGN.md §11).
+    fabric: Fabric,
+    /// The gang lane's select → observe → place state machine.
+    gang_lane: GangLane,
+    /// Pending gang holds (per-GPU reservations the mappers must respect).
+    book: ReservationBook,
 }
 
 impl Carma {
@@ -172,12 +180,22 @@ impl Carma {
         let threads = resolve_threads(cfg.engine.threads);
         let mut recorder = Recorder::new(n, cluster.n_gpus());
         recorder.n_shards = shards;
+        // gang fail-fast ceiling: best-case assemblable whole-GPU capacity,
+        // intersected per server (MIG partitioning, power-dead servers and
+        // power-slot headroom all on the same server subset) — a gang wider
+        // than this can never be placed, even on a drained cluster
+        // (DESIGN.md §11)
+        let gang_ceiling =
+            gang::gang_gpu_ceiling(&cluster.topo, &cfg.power, cfg.cluster.power_cap_w);
         let admission = Admission::new(
             shards,
             n,
             cfg.coordinator.assign,
             cluster.topo.admissible_ceilings(cfg.power.idle_w),
+            gang_ceiling,
         );
+        let fabric = Fabric::new(&cluster.topo, &cfg.fabric);
+        let book = ReservationBook::new(&cluster.topo);
         let tasks = trace
             .tasks
             .iter()
@@ -220,6 +238,9 @@ impl Carma {
             state_epoch: 0,
             views_cache: None,
             pool: (threads > 1).then(|| WorkerPool::new(threads)),
+            fabric,
+            gang_lane: GangLane::new(),
+            book,
         }
     }
 
@@ -299,6 +320,8 @@ impl Carma {
             Event::Completion(id, v) => self.on_completion(id, v),
             Event::MonitorSample => self.on_monitor_sample(),
             Event::RecoveryDetect(id) => self.on_recovery_detect(id),
+            Event::GangRetry => self.on_gang_retry(),
+            Event::GangHoldExpire(id, epoch) => self.on_gang_hold_expire(id, epoch),
         }
     }
 
@@ -315,8 +338,17 @@ impl Carma {
         let t = self.engine.now();
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
+        if self.tasks[id].spec.gang {
+            // distributed jobs bypass the shards: dedicated lane + the
+            // all-or-nothing gang scheduler (DESIGN.md §11)
+            self.recorder.on_gang_arrival(id);
+            self.admission.submit_gang(id);
+            self.feed_gang();
+            return;
+        }
         let loads = self.shard_loads();
-        let shard = self.admission.submit(id, &loads);
+        let home = self.fabric.home_server(id);
+        let shard = self.admission.submit(id, &loads, home);
         self.recorder.on_assigned(id, shard);
         self.feed(shard);
     }
@@ -346,6 +378,13 @@ impl Carma {
     }
 
     fn on_window_done(&mut self, id: TaskId) {
+        if self.tasks[id].spec.gang {
+            if self.gang_lane.active == Some(id) {
+                self.gang_lane.window_done = true;
+                self.attempt_gang();
+            }
+            return;
+        }
         let Some(shard) = self.admission.shard_of(id) else {
             return;
         };
@@ -369,6 +408,173 @@ impl Carma {
             self.engine
                 .schedule_in_on(lane(shard), RETRY_S, Event::RetryMapping(shard));
         }
+    }
+
+    // -- gang lane (DESIGN.md §11) -------------------------------------------
+
+    /// Promote the next queued gang to the lane head, if the lane is idle.
+    /// Like the shard mappers, a gang is observed for one monitoring window
+    /// before its first placement attempt (paper §4.1).
+    fn feed_gang(&mut self) {
+        if self.gang_lane.active.is_some() {
+            return;
+        }
+        if let Some((id, _rec)) = self.admission.pop_next_gang() {
+            self.gang_lane.select(id);
+            self.tasks[id].state = RunState::Selected;
+            self.engine
+                .schedule_in(self.cfg.monitor.window_s, Event::WindowDone(id));
+        }
+    }
+
+    /// Resources changed (completion / OOM release): give the gang lane the
+    /// first claim on them, before the singleton mappers sweep.
+    fn kick_gang(&mut self) {
+        if self.gang_lane.active.is_none() {
+            self.feed_gang();
+        } else if self.gang_lane.ready() {
+            self.attempt_gang();
+        }
+    }
+
+    fn schedule_gang_retry(&mut self) {
+        if !self.gang_lane.retry_scheduled {
+            self.gang_lane.retry_scheduled = true;
+            self.engine
+                .schedule_in(self.cfg.gang.retry_s, Event::GangRetry);
+        }
+    }
+
+    fn on_gang_retry(&mut self) {
+        self.gang_lane.retry_scheduled = false;
+        if self.gang_lane.ready() {
+            self.attempt_gang();
+        }
+    }
+
+    /// One all-or-nothing placement attempt for the lane-head gang: place
+    /// the full worker set atomically, or extend the partial holds and keep
+    /// waiting. Runs entirely on the driver thread in event order, so the
+    /// byte-determinism guarantee (§10) holds untouched.
+    fn attempt_gang(&mut self) {
+        let Some(id) = self.gang_lane.active else { return };
+        if !self.gang_lane.window_done {
+            return;
+        }
+        let (req, demoted) = self.mapping_request(id);
+        if let Err(why) = self.admission.admissible(req.n_gpus, req.demand_gb, true) {
+            self.fail_task(id, why);
+            return;
+        }
+        let views = self.snapshot();
+        let plan = gang::plan_gang(
+            &views,
+            &self.fabric,
+            &self.book,
+            &self.cfg.power,
+            req,
+            self.preconditions(),
+            id,
+        );
+        drop(views);
+        match plan {
+            GangPlan::Place(gpus) => {
+                debug_assert_eq!(gpus.len(), req.n_gpus, "all-or-nothing violated");
+                let spanned = self.fabric.servers_spanned(&gpus);
+                let min_span = self.min_span(req.n_gpus);
+                let cost = self.fabric.gang_cost(&gpus);
+                let freed = self.book.release_all(id);
+                if !freed.is_empty() {
+                    self.touch();
+                }
+                self.recorder
+                    .on_gang_dispatch(id, gpus.len(), req.n_gpus, spanned, min_span, cost);
+                self.tasks[id].admitted_est_gb = req.demand_gb;
+                self.tasks[id].pinned = demoted;
+                // clear BEFORE dispatch (same re-entrancy rule as the shard
+                // mappers): a first-ramp OOM inside dispatch reaches the
+                // kick path, which must not re-enter the in-flight gang
+                self.gang_lane.clear();
+                if spanned > 1 {
+                    let membw = self.tasks[id].spec.membw;
+                    self.fabric.occupy_links(&gpus, membw);
+                }
+                let n = gpus.len();
+                self.dispatch(id, Placement { gpus, instances: vec![None; n] });
+                self.feed_gang();
+            }
+            GangPlan::Hold(new_holds) => {
+                if !new_holds.is_empty() {
+                    self.touch();
+                    self.recorder.on_gang_holds(new_holds.len() as u64);
+                    for &g in &new_holds {
+                        self.book.hold(g, id);
+                    }
+                    // every acquisition re-arms a fresh TTL under a new
+                    // epoch — progress IS the lease renewal; the expiry
+                    // armed for the previous epoch becomes a dropped stale.
+                    // Once the teardown budget is spent the holds are
+                    // sticky: no further expiry is armed.
+                    self.gang_lane.hold_epoch += 1;
+                    if self.gang_lane.expiries < self.cfg.gang.max_hold_expiries {
+                        let epoch = self.gang_lane.hold_epoch;
+                        self.engine
+                            .schedule_in(self.cfg.gang.hold_ttl_s, Event::GangHoldExpire(id, epoch));
+                    }
+                }
+                self.schedule_gang_retry();
+            }
+        }
+    }
+
+    /// Fewest servers a `n_gpus`-wide gang could possibly span (for the
+    /// fragmentation counter): the packing bound over the largest server.
+    fn min_span(&self, n_gpus: usize) -> usize {
+        let biggest = self
+            .cluster
+            .topo
+            .servers
+            .iter()
+            .map(|s| s.cfg.n_gpus)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        n_gpus.div_ceil(biggest)
+    }
+
+    /// A partial hold reached its TTL with no progress since it was armed
+    /// (DESIGN.md §11) — acquisitions bump the epoch, so an expiry that
+    /// still matches means nothing new was claimed for a full TTL. Tear
+    /// the holds down so the backfill pool gets its GPUs back. The
+    /// teardown budget is never refunded; once spent, no further expiry is
+    /// armed and the holds are sticky (the anti-starvation floor under
+    /// continuous singleton arrivals).
+    fn on_gang_hold_expire(&mut self, id: TaskId, epoch: u64) {
+        if self.gang_lane.active != Some(id) || self.gang_lane.hold_epoch != epoch {
+            return; // stale: re-acquisitions bumped the epoch, or dispatched
+        }
+        self.gang_lane.expiries += 1;
+        let freed = self.book.release_all(id);
+        if !freed.is_empty() {
+            self.touch();
+            self.recorder.on_gang_holds_expired(freed.len() as u64);
+            // the released devices are fair game for waiting singletons
+            self.kick_mappers();
+        }
+        self.schedule_gang_retry();
+    }
+
+    /// Running gang tasks' GPUs, excluding `except` — the devices whose
+    /// speeds depend on shared NIC links and must be recomputed when
+    /// fabric occupancy changes.
+    fn other_gang_gpus(&self, except: TaskId) -> Vec<usize> {
+        let mut gpus = Vec::new();
+        for t in &self.tasks {
+            if t.spec.id != except && t.spec.gang && t.state == RunState::Running {
+                gpus.extend(t.gpus.iter().copied());
+            }
+        }
+        gpus
     }
 
     /// Re-attempt every shard whose selected task already finished its
@@ -532,9 +738,9 @@ impl Carma {
         // forever. Admission owns the static ceilings (capacity accounting
         // across servers, power-envelope-dead servers excluded): a demand
         // larger than every schedulable target, or a GPU count no single
-        // admissible server owns (multi-GPU tasks never span servers), can
-        // never be placed no matter how long the task waits.
-        let admissible = self.admission.admissible(req.n_gpus, req.demand_gb);
+        // admissible server owns (non-gang multi-GPU tasks never span
+        // servers), can never be placed no matter how long the task waits.
+        let admissible = self.admission.admissible(req.n_gpus, req.demand_gb, false);
         Some(PlanJob {
             shard,
             task: id,
@@ -584,6 +790,17 @@ impl Carma {
         self.tasks[id].state = RunState::Failed;
         self.recorder.on_failed(id);
         self.done_count += 1;
+        if self.tasks[id].spec.gang {
+            if self.gang_lane.active == Some(id) {
+                let freed = self.book.release_all(id);
+                if !freed.is_empty() {
+                    self.touch();
+                }
+                self.gang_lane.clear();
+                self.feed_gang();
+            }
+            return;
+        }
         if let Some(shard) = self.admission.shard_of(id) {
             if self.mappers[shard].selected == Some(id) {
                 self.mappers[shard].clear();
@@ -608,12 +825,13 @@ impl Carma {
             let monitor = &self.monitor;
             let tasks = &self.tasks;
             let cfg = &self.cfg;
+            let book = &self.book;
             match self.pool.as_ref() {
                 Some(pool) if n_servers >= 2 => pool.map(n_servers, &|i| {
-                    build_server_view(cluster, monitor, tasks, cfg, i, now)
+                    build_server_view(cluster, monitor, tasks, cfg, book, i, now)
                 }),
                 _ => (0..n_servers)
-                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, i, now))
+                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, book, i, now))
                     .collect(),
             }
         };
@@ -668,7 +886,12 @@ impl Carma {
         // first allocation (CUDA context) happens immediately
         self.on_ramp(id, 0);
         if self.tasks[id].state == RunState::Running {
-            let gpus = self.tasks[id].gpus.clone();
+            let mut gpus = self.tasks[id].gpus.clone();
+            if self.tasks[id].spec.gang {
+                // a spanning gang's NIC load slows other gangs on shared
+                // uplinks — recompute them in the same sweep
+                gpus.extend(self.other_gang_gpus(id));
+            }
             self.recompute_speeds(&gpus);
         }
     }
@@ -707,9 +930,13 @@ impl Carma {
     }
 
     /// Event lane of the shard owning `id` (admission routing is sticky, so
-    /// every admitted task has one).
+    /// every shard-admitted task has one). Gang-lane tasks live on the
+    /// global lane 0 — the merge order is a total order either way (§9).
     fn task_lane(&self, id: TaskId) -> usize {
-        lane(self.admission.shard_of(id).expect("task was admitted"))
+        match self.admission.shard_of(id) {
+            Some(s) => lane(s),
+            None => 0,
+        }
     }
 
     fn oom(&mut self, id: TaskId) {
@@ -723,8 +950,10 @@ impl Carma {
         let crashes = self.recorder.tasks[id].oom_crashes;
         if crashes > MAX_OOM_RETRIES {
             self.fail_task(id, "exceeded OOM retry budget");
-            // the failed task's memory was released above — waiting mappers
-            // get the same immediate kick the recoverable path gives them
+            // the failed task's memory was released above — the gang lane
+            // and waiting mappers get the same immediate kick the
+            // recoverable path gives them
+            self.kick_gang();
             self.kick_mappers();
             return;
         }
@@ -734,7 +963,8 @@ impl Carma {
         // demoted-to-exclusive attempt
         let backoff = RECOVERY_DETECT_S * (1u64 << (crashes - 1).min(6)) as f64;
         self.engine.schedule_in(backoff, Event::RecoveryDetect(id));
-        // freed memory may unblock a waiting mapper
+        // freed memory may unblock the gang lane or a waiting mapper
+        self.kick_gang();
         self.kick_mappers();
     }
 
@@ -743,6 +973,11 @@ impl Carma {
             return;
         }
         self.tasks[id].state = RunState::Queued;
+        if self.tasks[id].spec.gang {
+            self.admission.submit_gang_recovery(id);
+            self.feed_gang();
+            return;
+        }
         let shard = self.admission.submit_recovery(id);
         self.feed(shard);
     }
@@ -760,7 +995,15 @@ impl Carma {
         }
         self.tasks[id].gpus.clear();
         self.tasks[id].instances.clear();
-        self.recompute_speeds(&gpus);
+        let mut affected = gpus.clone();
+        if self.tasks[id].spec.gang && self.fabric.servers_spanned(&gpus) > 1 {
+            // the departing gang's NIC load disappears: every other gang
+            // sharing its uplinks speeds up — fold them into the recompute
+            let membw = self.tasks[id].spec.membw;
+            self.fabric.release_links(&gpus, membw);
+            affected.extend(self.other_gang_gpus(id));
+        }
+        self.recompute_speeds(&affected);
     }
 
     fn on_completion(&mut self, id: TaskId, version: u64) {
@@ -777,6 +1020,9 @@ impl Carma {
         self.tasks[id].state = RunState::Done;
         self.done_count += 1;
         self.recorder.on_completion(id, self.engine.now());
+        // the gang lane gets first claim on the freed devices (§11), then
+        // the singleton mappers sweep
+        self.kick_gang();
         self.kick_mappers();
     }
 
@@ -832,6 +1078,14 @@ impl Carma {
                 .map(|&g| *table.get(&(g, id)).unwrap_or(&1.0))
                 .fold(f64::INFINITY, f64::min);
             let speed = if speed.is_finite() { speed } else { 0.0 };
+            // cross-GPU fabric term (§11): a spanning gang pays the
+            // synchronization + shared-NIC contention factor on top of the
+            // per-device interference model
+            let speed = if self.tasks[id].spec.gang {
+                speed * self.fabric.gang_speed_factor(&self.tasks[id].gpus, self.tasks[id].spec.membw)
+            } else {
+                speed
+            };
             let t = &mut self.tasks[id];
             t.speed = speed;
             t.version += 1;
@@ -864,7 +1118,7 @@ impl Carma {
 
     // -- test/inspection hooks ------------------------------------------------
 
-    /// Total queued tasks across every shard.
+    /// Total queued tasks across every shard and the gang lane.
     pub fn queue_len(&self) -> usize {
         self.admission.len()
     }
@@ -875,6 +1129,11 @@ impl Carma {
 
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
+    }
+
+    /// Live gang holds across the cluster (test/inspection).
+    pub fn gang_holds(&self) -> usize {
+        self.book.total()
     }
 }
 
@@ -920,6 +1179,7 @@ fn build_server_view(
     monitor: &Monitor,
     tasks: &[TaskRun],
     cfg: &CarmaConfig,
+    book: &ReservationBook,
     server: usize,
     now: f64,
 ) -> ServerView {
@@ -937,6 +1197,7 @@ fn build_server_view(
                 smact_window: monitor.windowed_smact(g.id),
                 n_tasks: g.n_tasks(),
                 pinned: g.resident.iter().any(|r| tasks[r.task].pinned),
+                held: book.is_held(g.id),
                 mig_free_instance: inst,
                 mig_instance_mem_gb: inst
                     .map(|i| g.capacity_gb() * g.mig_slices[i])
@@ -946,7 +1207,9 @@ fn build_server_view(
         })
         .collect();
     // instantaneous draw is only consulted by the power-envelope filter;
-    // skip the O(GPUs × residents) walk when no cap is set
+    // skip the O(GPUs × residents) walk when no cap is set. Reserved gang
+    // slots count toward the envelope (power::reserved_w, §11): singleton
+    // admissions must not fill the headroom a pending gang's commit needs.
     let power_w: f64 = if spec.power_cap_w.is_some() {
         srv.gpus
             .iter()
@@ -957,7 +1220,8 @@ fn build_server_view(
                     g.effective_smact(cfg.colloc, now),
                 )
             })
-            .sum()
+            .sum::<f64>()
+            + power::reserved_w(&cfg.power, book.server_slots(spec.id))
     } else {
         0.0
     };
@@ -1249,6 +1513,8 @@ mod tests {
         assert_sync::<Monitor>();
         assert_sync::<CarmaConfig>();
         assert_sync::<TaskRun>();
+        assert_sync::<ReservationBook>();
+        assert_sync::<Fabric>();
         fn assert_send<T: Send>() {}
         assert_send::<PlanJob>();
     }

@@ -1,0 +1,603 @@
+//! Fabric-aware gang scheduling (DESIGN.md §11): all-or-nothing placement
+//! of distributed jobs across servers.
+//!
+//! The paper's task model caps every multi-GPU task to one server; real
+//! multi-tenant traces are dominated by gang-scheduled distributed jobs
+//! with locality constraints (Jeon et al.). This subsystem adds a dedicated
+//! *gang lane* beside the sharded mappers: arrivals flagged `gang` are
+//! routed here by admission, observed for one monitoring window, and then
+//! placed **atomically** — either every worker dispatches in the same event
+//! or nothing does; a partial dispatch is unrepresentable.
+//!
+//! While a gang waits for capacity it may take **partial holds**: per-GPU
+//! reservations (the [`ReservationBook`]) that block newcomers from the
+//! held devices, so continuously arriving singletons cannot starve a large
+//! gang — they backfill *around* the holds instead. Holds carry a TTL: a
+//! hold that makes no progress for `gang.hold_ttl_s` is torn down and its
+//! GPUs returned to the backfill pool (a gang must not deadlock the
+//! admission layer); after `gang.max_hold_expiries` teardowns the holds
+//! turn sticky — the anti-starvation floor.
+//!
+//! Placement packs candidate GPU sets for minimum fabric cost
+//! (`cluster::fabric`): fill the fewest servers, and within a server the
+//! fewest NVLink islands, so collectives cross as few links as possible —
+//! with one uniform cost per link class this structural greedy IS the
+//! `gang_cost` minimizer, and the achieved cost of every dispatch is
+//! recorded in the run metrics. Per-server power envelopes are honored at
+//! *commit* time including reserved slots (`power::reserved_w`), so a
+//! gang dispatch can never overshoot the cap.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::power;
+use crate::cluster::topology::ClusterTopology;
+use crate::config::schema::PowerConfig;
+use crate::coordinator::policy::{self, GpuView, MappingRequest, Preconditions, ServerView};
+use crate::sim::TaskId;
+
+pub use crate::cluster::Fabric;
+
+/// Per-GPU reservation ledger of pending gang holds. One gang is in the
+/// placing state at a time (the lane head), so holders never conflict —
+/// the per-task indirection keeps release idempotent and auditable.
+#[derive(Debug, Clone)]
+pub struct ReservationBook {
+    holder: Vec<Option<TaskId>>,
+    /// Server owning each GPU — an immutable cache of
+    /// `ClusterTopology::server_of_gpu`, captured at construction from the
+    /// same topology every other component derives from.
+    server_of: Vec<usize>,
+    /// Reserved-but-not-dispatched slots per server (power accounting).
+    server_slots: Vec<usize>,
+}
+
+impl ReservationBook {
+    pub fn new(topo: &ClusterTopology) -> ReservationBook {
+        let server_of: Vec<usize> =
+            (0..topo.total_gpus()).map(|g| topo.server_of_gpu(g)).collect();
+        ReservationBook {
+            holder: vec![None; topo.total_gpus()],
+            server_slots: vec![0; topo.n_servers()],
+            server_of,
+        }
+    }
+
+    pub fn holder(&self, gpu: usize) -> Option<TaskId> {
+        self.holder[gpu]
+    }
+
+    pub fn is_held(&self, gpu: usize) -> bool {
+        self.holder[gpu].is_some()
+    }
+
+    /// Reserved slots on `server` (counted by the power-envelope filter).
+    pub fn server_slots(&self, server: usize) -> usize {
+        self.server_slots[server]
+    }
+
+    /// Total holds across the cluster.
+    pub fn total(&self) -> usize {
+        self.server_slots.iter().sum()
+    }
+
+    pub fn holds_of(&self, task: TaskId) -> usize {
+        self.holder.iter().filter(|h| **h == Some(task)).count()
+    }
+
+    /// Place a hold. The hold claims the whole device against newcomers
+    /// (`GpuView::held`), so no per-GPU demand needs tracking here —
+    /// `gang_eligible` re-validates the memory fit on held devices at
+    /// every attempt (an underestimating resident can outgrow what was
+    /// seen at acquisition). Panics on a double-hold — that is a scheduler
+    /// bug, not a recoverable condition.
+    pub fn hold(&mut self, gpu: usize, task: TaskId) {
+        assert!(
+            self.holder[gpu].is_none(),
+            "gpu {gpu} already held by {:?}",
+            self.holder[gpu]
+        );
+        self.holder[gpu] = Some(task);
+        self.server_slots[self.server_of[gpu]] += 1;
+    }
+
+    /// Release every hold `task` owns; returns the freed GPU ids.
+    pub fn release_all(&mut self, task: TaskId) -> Vec<usize> {
+        let mut freed = Vec::new();
+        for g in 0..self.holder.len() {
+            if self.holder[g] == Some(task) {
+                self.holder[g] = None;
+                self.server_slots[self.server_of[g]] -= 1;
+                freed.push(g);
+            }
+        }
+        freed
+    }
+}
+
+/// The gang lane's select → observe → place state machine (the gang-side
+/// analog of [`crate::coordinator::shard::Mapper`]). At most one gang — the
+/// lane head — is in the placing state, so holds never deadlock across
+/// gangs by construction.
+#[derive(Debug, Clone, Default)]
+pub struct GangLane {
+    /// Lane-head gang under observation / accumulating holds.
+    pub active: Option<TaskId>,
+    /// Its observation window has elapsed.
+    pub window_done: bool,
+    /// A GangRetry event is already in flight.
+    pub retry_scheduled: bool,
+    /// Hold-generation counter: every (re-)acquisition bumps it and arms a
+    /// fresh TTL expiry carrying the new epoch — so progress renews the
+    /// lease by construction, and stale expiry events (older epochs) are
+    /// dropped on arrival.
+    pub hold_epoch: u64,
+    /// TTL teardowns suffered by the lane head so far. Never refunded while
+    /// the same gang stays active — at `gang.max_hold_expiries` the holds
+    /// turn sticky, which is what makes starvation impossible.
+    pub expiries: u32,
+}
+
+impl GangLane {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn ready(&self) -> bool {
+        self.active.is_some() && self.window_done
+    }
+
+    pub fn select(&mut self, id: TaskId) {
+        debug_assert!(self.active.is_none(), "gang lane already busy");
+        self.active = Some(id);
+        self.window_done = false;
+        self.expiries = 0;
+    }
+
+    /// The active gang dispatched or failed — back to idle. (Holds are
+    /// released by the caller, which owns the book.) Bumps the hold epoch:
+    /// an expiry armed during this headship must not fire into a later
+    /// headship of the *same* gang (OOM recovery re-selects it) and burn
+    /// the fresh teardown budget on zero actual holds.
+    pub fn clear(&mut self) {
+        self.active = None;
+        self.window_done = false;
+        self.expiries = 0;
+        self.hold_epoch += 1;
+    }
+}
+
+/// What one placement attempt decided.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GangPlan {
+    /// A full worker set exists: dispatch these GPUs atomically.
+    Place(Vec<usize>),
+    /// Not enough eligible GPUs yet: newly acquire holds on these (may be
+    /// empty — then the gang just waits for the next retry/kick).
+    Hold(Vec<usize>),
+}
+
+/// One placement attempt for the active gang: collect eligible GPUs under
+/// the same preconditions the singleton mappers use, cap each server's
+/// contribution by its power envelope (reserved slots included), and rank
+/// candidates by fabric cost — fewest servers, then fewest islands, then
+/// the quietest devices. Pure function of its inputs, so it is unit-
+/// testable without the simulator and trivially deterministic.
+pub fn plan_gang(
+    views: &[ServerView],
+    fabric: &Fabric,
+    book: &ReservationBook,
+    power_cfg: &PowerConfig,
+    req: MappingRequest,
+    pre: Preconditions,
+    task: TaskId,
+) -> GangPlan {
+    // per server: fabric-ranked eligible GPU ids, power-capped
+    let mut cands: Vec<(usize, Vec<usize>)> = Vec::new();
+    for s in views {
+        let own_slots = s
+            .gpus
+            .iter()
+            .filter(|v| book.holder(v.id) == Some(task))
+            .count();
+        let mut elig: Vec<&GpuView> = s
+            .gpus
+            .iter()
+            .filter(|v| gang_eligible(v, req, pre, book, task))
+            .collect();
+        if elig.is_empty() {
+            continue;
+        }
+        // islands with the most eligible devices first: a set that fills
+        // whole islands crosses the fewest links (fabric cost ranking)
+        let mut island_count: BTreeMap<usize, usize> = BTreeMap::new();
+        for v in &elig {
+            *island_count.entry(fabric.island_of(v.id)).or_insert(0) += 1;
+        }
+        elig.sort_by_key(|v| {
+            let island = fabric.island_of(v.id);
+            (
+                book.holder(v.id) != Some(task), // keep what we already hold
+                std::cmp::Reverse(island_count[&island]),
+                island,
+                v.n_tasks,
+                v.id,
+            )
+        });
+        // power envelope: adding k freshly-activated GPUs must keep the
+        // server under its cap; `s.power_w` already includes the reserve
+        // for our own holds, which the dispatch merely converts to real
+        // draw — so only slots beyond `own_slots` need headroom.
+        let k_max = match s.power_cap_w {
+            None => elig.len(),
+            Some(cap) => {
+                let slot_w = power::reserved_w(power_cfg, 1);
+                let extra = if slot_w <= 0.0 {
+                    elig.len()
+                } else {
+                    ((cap - s.power_w) / slot_w).max(0.0).floor() as usize
+                };
+                (own_slots + extra).min(elig.len())
+            }
+        };
+        elig.truncate(k_max);
+        if !elig.is_empty() {
+            cands.push((s.id, elig.iter().map(|v| v.id).collect()));
+        }
+    }
+
+    // fewest servers spanned: fill the best-stocked server first
+    cands.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+    let available: usize = cands.iter().map(|(_, g)| g.len()).sum();
+    if available >= req.n_gpus {
+        let mut chosen = Vec::with_capacity(req.n_gpus);
+        'fill: for (_, gpus) in &cands {
+            for &g in gpus {
+                chosen.push(g);
+                if chosen.len() == req.n_gpus {
+                    break 'fill;
+                }
+            }
+        }
+        return GangPlan::Place(chosen);
+    }
+    // partial: claim everything eligible we do not hold yet
+    let new_holds: Vec<usize> = cands
+        .iter()
+        .flat_map(|(_, gpus)| gpus.iter().copied())
+        .filter(|&g| book.holder(g) != Some(task))
+        .collect();
+    GangPlan::Hold(new_holds)
+}
+
+/// Static best-case GPU capacity the gang scheduler can ever assemble: per
+/// server, zero if the server is MIG-partitioned (gangs target whole GPUs)
+/// or its idle draw already meets the power envelope, else its GPU count
+/// capped by the slots an *idle* server's power headroom admits; summed
+/// over servers. The per-server intersection matters — taking cluster-wide
+/// minima of independently-computed bounds would over-estimate capacity on
+/// heterogeneous mixes (e.g. a MIG server with power headroom next to a
+/// power-dead whole-GPU server) and let a permanently unplaceable gang
+/// retry forever instead of failing fast (DESIGN.md §11).
+pub fn gang_gpu_ceiling(
+    topo: &ClusterTopology,
+    power_cfg: &PowerConfig,
+    cap_w: Option<f64>,
+) -> usize {
+    let slot_w = power::reserved_w(power_cfg, 1);
+    topo.servers
+        .iter()
+        .map(|s| {
+            if !s.cfg.mig_slices.is_empty() {
+                return 0;
+            }
+            let Some(cap) = cap_w else { return s.cfg.n_gpus };
+            let idle_floor = power_cfg.idle_w * s.cfg.n_gpus as f64;
+            if idle_floor >= cap {
+                0
+            } else if slot_w <= 0.0 {
+                s.cfg.n_gpus
+            } else {
+                (((cap - idle_floor) / slot_w).floor() as usize).min(s.cfg.n_gpus)
+            }
+        })
+        .sum()
+}
+
+/// Gang-worker eligibility. The gang's own holds block newcomers, but a
+/// resident that *underestimated* can still outgrow the capacity seen at
+/// acquisition (the same hazard that OOMs singletons, §4.2) — so a held
+/// device re-validates the demand fit and drops out of the dispatchable
+/// set while overfull, instead of committing the whole gang onto a
+/// known-doomed allocation; it stays held, and the fit recovers as the
+/// resident drains. An unheld device must be unpinned, non-MIG (gangs
+/// target whole GPUs), and pass the same preconditions + fit the singleton
+/// mappers apply — idle-only when the request is exclusive (recovery
+/// demotion).
+fn gang_eligible(
+    v: &GpuView,
+    req: MappingRequest,
+    pre: Preconditions,
+    book: &ReservationBook,
+    task: TaskId,
+) -> bool {
+    let fits = |v: &GpuView| {
+        req.demand_gb.is_none_or(|d| d <= v.free_gb + policy::FIT_SLACK_GB)
+    };
+    if book.holder(v.id) == Some(task) {
+        // preconditions were checked at acquisition; only the memory fit
+        // can regress underneath a hold (nothing new is admitted onto it)
+        return fits(v) && (!req.exclusive || v.n_tasks == 0);
+    }
+    if v.held || v.pinned || v.mig_enabled {
+        return false;
+    }
+    if req.exclusive {
+        return v.n_tasks == 0 && fits(v);
+    }
+    policy::passes(v, req, pre)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::{ClusterConfig, FabricConfig, PowerConfig};
+
+    fn topo(servers: usize, gpus: usize) -> ClusterTopology {
+        ClusterTopology::from_config(&ClusterConfig::homogeneous(servers, gpus, 40.0))
+    }
+
+    fn fabric(servers: usize, gpus: usize) -> Fabric {
+        Fabric::new(&topo(servers, gpus), &FabricConfig::default())
+    }
+
+    fn view(id: usize, server: usize, free: f64, n: usize) -> GpuView {
+        GpuView {
+            id,
+            server,
+            free_gb: free,
+            smact_window: 0.1,
+            n_tasks: n,
+            pinned: false,
+            held: false,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn sview(id: usize, gpus: Vec<GpuView>) -> ServerView {
+        ServerView {
+            id,
+            power_w: 0.0,
+            power_cap_w: None,
+            gpus,
+        }
+    }
+
+    fn req(n: usize, demand: Option<f64>) -> MappingRequest {
+        MappingRequest {
+            n_gpus: n,
+            demand_gb: demand,
+            exclusive: false,
+        }
+    }
+
+    fn two_by_four() -> Vec<ServerView> {
+        vec![
+            sview(0, (0..4).map(|g| view(g, 0, 40.0, 0)).collect()),
+            sview(1, (4..8).map(|g| view(g, 1, 40.0, 0)).collect()),
+        ]
+    }
+
+    #[test]
+    fn reservation_book_roundtrip() {
+        let mut b = ReservationBook::new(&topo(2, 4));
+        assert_eq!(b.total(), 0);
+        b.hold(1, 9);
+        b.hold(5, 9);
+        assert!(b.is_held(1) && b.is_held(5) && !b.is_held(0));
+        assert_eq!(b.holder(5), Some(9));
+        assert_eq!(b.server_slots(0), 1);
+        assert_eq!(b.server_slots(1), 1);
+        assert_eq!(b.holds_of(9), 2);
+        let freed = b.release_all(9);
+        assert_eq!(freed, vec![1, 5]);
+        assert_eq!(b.total(), 0);
+        assert!(b.release_all(9).is_empty(), "release is idempotent");
+    }
+
+    #[test]
+    #[should_panic(expected = "already held")]
+    fn double_hold_panics() {
+        let mut b = ReservationBook::new(&topo(1, 4));
+        b.hold(0, 1);
+        b.hold(0, 2);
+    }
+
+    #[test]
+    fn lane_state_machine() {
+        let mut l = GangLane::new();
+        assert!(!l.ready());
+        l.select(3);
+        assert!(!l.ready(), "window not elapsed");
+        l.window_done = true;
+        assert!(l.ready());
+        l.expiries = 2;
+        let epoch_before = l.hold_epoch;
+        l.clear();
+        assert!(l.active.is_none() && !l.window_done);
+        assert_eq!(l.expiries, 0, "the teardown budget is per headship");
+        assert!(
+            l.hold_epoch > epoch_before,
+            "ending a headship must invalidate its in-flight expiries"
+        );
+    }
+
+    #[test]
+    fn place_fills_one_server_before_spanning() {
+        let f = fabric(2, 4);
+        let b = ReservationBook::new(&topo(2, 4));
+        let views = two_by_four();
+        // 4-wide gang fits entirely on one server: never spans
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(4, Some(8.0)),
+                             Preconditions::default(), 7);
+        assert_eq!(plan, GangPlan::Place(vec![0, 1, 2, 3]));
+        // 6-wide gang must span; it fills server 0 then takes 2 from server 1
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(6, Some(8.0)),
+                             Preconditions::default(), 7);
+        match plan {
+            GangPlan::Place(g) => {
+                assert_eq!(g.len(), 6);
+                assert_eq!(f.servers_spanned(&g), 2);
+                assert_eq!(g[..4], [0, 1, 2, 3]);
+            }
+            other => panic!("expected Place, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_capacity_becomes_holds() {
+        let f = fabric(2, 4);
+        let mut b = ReservationBook::new(&topo(2, 4));
+        let mut views = two_by_four();
+        // only 3 GPUs can take the demand right now
+        for v in views[0].gpus.iter_mut().skip(2) {
+            v.free_gb = 1.0;
+        }
+        for v in views[1].gpus.iter_mut().skip(1) {
+            v.free_gb = 1.0;
+        }
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(6, Some(8.0)),
+                             Preconditions::default(), 7);
+        let GangPlan::Hold(new) = plan else { panic!("expected Hold") };
+        let mut sorted = new.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 4]);
+        // book the holds; a re-plan proposes no duplicates
+        for &g in &new {
+            b.hold(g, 7);
+        }
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(6, Some(8.0)),
+                             Preconditions::default(), 7);
+        assert_eq!(plan, GangPlan::Hold(vec![]), "already holding everything eligible");
+    }
+
+    #[test]
+    fn held_and_pinned_devices_are_not_eligible_for_others() {
+        let f = fabric(2, 4);
+        let mut b = ReservationBook::new(&topo(2, 4));
+        b.hold(0, 99); // another gang's hold (defensive: lane
+                                  // heads rotate, stale holds must block)
+        let mut views = two_by_four();
+        views[0].gpus[0].held = true;
+        views[0].gpus[1].pinned = true;
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(8, Some(8.0)),
+                             Preconditions::default(), 7);
+        let GangPlan::Hold(new) = plan else { panic!("expected Hold") };
+        assert!(!new.contains(&0), "held by another task");
+        assert!(!new.contains(&1), "pinned");
+        assert_eq!(new.len(), 6);
+    }
+
+    #[test]
+    fn exclusive_request_needs_idle_devices() {
+        let f = fabric(2, 4);
+        let b = ReservationBook::new(&topo(2, 4));
+        let mut views = two_by_four();
+        for v in views[0].gpus.iter_mut() {
+            v.n_tasks = 1; // busy but roomy
+        }
+        let excl = MappingRequest {
+            n_gpus: 4,
+            demand_gb: Some(8.0),
+            exclusive: true,
+        };
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), excl,
+                             Preconditions::default(), 7);
+        assert_eq!(plan, GangPlan::Place(vec![4, 5, 6, 7]), "only server 1 is idle");
+    }
+
+    #[test]
+    fn power_envelope_caps_per_server_slots() {
+        let f = fabric(2, 4);
+        let b = ReservationBook::new(&topo(2, 4));
+        let pw = PowerConfig::default(); // slot = 43 W
+        let mut views = two_by_four();
+        for s in views.iter_mut() {
+            s.power_cap_w = Some(300.0);
+        }
+        views[0].power_w = 250.0; // headroom 50 W -> 1 slot
+        views[1].power_w = 100.0; // headroom 200 W -> 4 slots
+        let plan = plan_gang(&views, &f, &b, &pw, req(5, Some(8.0)),
+                             Preconditions::default(), 7);
+        match plan {
+            GangPlan::Place(g) => {
+                assert_eq!(g.len(), 5);
+                assert_eq!(g[..4], [4, 5, 6, 7], "server 1 first (more slots)");
+                assert_eq!(f.servers_spanned(&g), 2);
+            }
+            other => panic!("expected Place, got {other:?}"),
+        }
+        // 6 wide cannot fit under the envelopes: 4 + 1 slots available
+        let plan = plan_gang(&views, &f, &b, &pw, req(6, Some(8.0)),
+                             Preconditions::default(), 7);
+        let GangPlan::Hold(new) = plan else { panic!("expected Hold") };
+        assert_eq!(new.len(), 5);
+    }
+
+    #[test]
+    fn gang_ceiling_bounds_width_per_server() {
+        let t = topo(2, 4);
+        let pw = PowerConfig::default(); // idle 52, slot 43
+        assert_eq!(gang_gpu_ceiling(&t, &pw, None), 8, "no cap: whole pool");
+        // idle floor 208 W; (400-208)/43 = 4.46 -> 4 slots, but capped at 4 GPUs
+        assert_eq!(gang_gpu_ceiling(&t, &pw, Some(400.0)), 8);
+        // (300-208)/43 = 2.1 -> 2 slots per server
+        assert_eq!(gang_gpu_ceiling(&t, &pw, Some(300.0)), 4);
+        // cap below the idle floor: the server can never admit anything
+        assert_eq!(gang_gpu_ceiling(&t, &pw, Some(200.0)), 0);
+    }
+
+    #[test]
+    fn gang_ceiling_intersects_mig_and_power_per_server() {
+        // the review-found livelock shape: a MIG server with power headroom
+        // next to a power-dead whole-GPU server — independently computed
+        // bounds would each report capacity, but NO gang worker can ever be
+        // placed; the per-server intersection reports zero so admission
+        // fails such a gang fast instead of retrying forever
+        let mut cfg = ClusterConfig::homogeneous(2, 4, 40.0);
+        cfg.servers[0].mig_slices = vec![0.5, 0.5]; // MIG: no gang targets
+        cfg.servers[1].n_gpus = 16; // idle floor 832 W >= 500 W cap: dead
+        cfg.power_cap_w = Some(500.0);
+        let t = ClusterTopology::from_config(&cfg);
+        let pw = PowerConfig::default();
+        assert_eq!(gang_gpu_ceiling(&t, &pw, Some(500.0)), 0);
+        // make server 1 healthy again: only ITS capacity counts
+        cfg.servers[1].n_gpus = 4;
+        let t = ClusterTopology::from_config(&cfg);
+        // (500-208)/43 = 6.8 -> capped at the server's 4 GPUs
+        assert_eq!(gang_gpu_ceiling(&t, &pw, Some(500.0)), 4);
+        // MIG alone zeroes a server even without any power cap
+        assert_eq!(gang_gpu_ceiling(&t, &pw, None), 4);
+    }
+
+    #[test]
+    fn island_packing_prefers_filled_islands() {
+        // dual-island server: 2 eligible GPUs on island 0, 1 on island 1 —
+        // the pair is taken first so collectives stay on NVLink
+        let t = topo(1, 4);
+        let f = Fabric::new(
+            &t,
+            &FabricConfig {
+                profile: crate::config::schema::FabricProfile::DualIsland,
+                ..FabricConfig::default()
+            },
+        );
+        let b = ReservationBook::new(&t);
+        let mut views = vec![sview(0, (0..4).map(|g| view(g, 0, 40.0, 0)).collect())];
+        views[0].gpus[1].free_gb = 1.0; // island 0 = {0,1}: gpu 1 ineligible
+        let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(2, Some(8.0)),
+                             Preconditions::default(), 7);
+        assert_eq!(plan, GangPlan::Place(vec![2, 3]), "whole island beats a split pair");
+    }
+}

@@ -11,12 +11,14 @@
 //! serial pipeline, event-for-event.
 
 pub mod carma;
+pub mod gang;
 pub mod monitor;
 pub mod policy;
 pub mod queue;
 pub mod shard;
 
 pub use carma::{Carma, RunOutcome};
+pub use gang::{GangLane, GangPlan, ReservationBook};
 pub use monitor::Monitor;
 pub use policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 pub use queue::TaskQueues;

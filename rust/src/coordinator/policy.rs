@@ -26,6 +26,10 @@ pub struct GpuView {
     /// otherwise a newcomer's ramp could re-OOM the very task the final
     /// recovery attempt promised a safe slot.
     pub pinned: bool,
+    /// A pending gang reserves this GPU (DESIGN.md §11): singleton mappers
+    /// must backfill *around* it, never onto it — otherwise continuous
+    /// arrivals could erode the capacity the gang already accumulated.
+    pub held: bool,
     /// MIG: a free instance index if one exists (None when MIG off or full).
     pub mig_free_instance: Option<usize>,
     /// MIG: memory capacity of that free instance.
@@ -179,7 +183,7 @@ pub fn select_gpus(
 ///
 /// let gpu = |id, server, free_gb| GpuView {
 ///     id, server, free_gb,
-///     smact_window: 0.2, n_tasks: 1, pinned: false,
+///     smact_window: 0.2, n_tasks: 1, pinned: false, held: false,
 ///     mig_free_instance: None, mig_instance_mem_gb: 0.0, mig_enabled: false,
 /// };
 /// let servers = [
@@ -273,15 +277,15 @@ pub fn select_two_level(
 /// capacity (e.g. the force-exclusive clamp to `mem_gb`) can sit up to one
 /// MiB above the reported value — without slack such a task never fits
 /// anywhere and the serial mapper livelocks.
-const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
+pub(crate) const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
 
-fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
-    if v.pinned {
-        // exclusively-held GPU (recovery demotion): never a placement
-        // target while the pinned task is resident. Checked before the MIG
-        // branch — MIG instances share the device's allocator in the
-        // simulation, so a newcomer on a sibling instance could still
-        // re-crash the pinned task's ramp.
+pub(crate) fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
+    if v.pinned || v.held {
+        // exclusively-held GPU — by a pinned resident (recovery demotion)
+        // or by a pending gang's reservation (§11) — is never a placement
+        // target. Checked before the MIG branch: MIG instances share the
+        // device's allocator in the simulation, so a newcomer on a sibling
+        // instance could still re-crash the pinned task's ramp.
         return false;
     }
     if v.mig_enabled {
@@ -322,9 +326,10 @@ fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
     let idle: Vec<usize> = views
         .iter()
         .filter(|v| {
-            if v.pinned {
-                // a pinned resident owns the whole device (shared allocator
-                // even under MIG) — not an exclusive target either
+            if v.pinned || v.held {
+                // a pinned resident or a pending gang owns the whole device
+                // (shared allocator even under MIG) — not an exclusive
+                // target either
                 return false;
             }
             if v.mig_enabled {
@@ -370,6 +375,7 @@ mod tests {
             smact_window: smact,
             n_tasks: n,
             pinned: false,
+            held: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
@@ -518,6 +524,30 @@ mod tests {
     }
 
     #[test]
+    fn gang_held_gpu_rejects_backfill_and_exclusive() {
+        // a pending gang's hold must deflect every singleton policy — the
+        // backfill rule of DESIGN.md §11: around the holds, never onto them
+        let mut held = view(0, 40.0, 0.0, 0);
+        held.held = true;
+        let views = [held, view(1, 5.0, 0.9, 3)];
+        let mut rr = 0;
+        for policy in [PolicyKind::RoundRobin, PolicyKind::Magm, PolicyKind::Lug, PolicyKind::Mug] {
+            let p = select_gpus(policy, &views, req(1, None), Preconditions::default(), &mut rr)
+                .unwrap();
+            assert_eq!(p.gpus, vec![1], "{policy:?} must avoid the held GPU");
+        }
+        // exclusive placement is blocked too, even though the device is idle
+        assert!(select_gpus(
+            PolicyKind::Exclusive,
+            &views[..1],
+            req(1, None),
+            Preconditions::default(),
+            &mut rr
+        )
+        .is_none());
+    }
+
+    #[test]
     fn pinned_mig_gpu_rejects_instances_and_exclusive() {
         // MIG instances share the device allocator in the sim: a pinned
         // resident blocks sibling-instance placement AND exclusive targeting
@@ -528,6 +558,7 @@ mod tests {
             smact_window: 0.1,
             n_tasks: 1,
             pinned: true,
+            held: false,
             mig_free_instance: Some(1),
             mig_instance_mem_gb: 10.0,
             mig_enabled: true,
@@ -587,6 +618,7 @@ mod tests {
             smact_window: 0.2,
             n_tasks: 1,
             pinned: false,
+            held: false,
             mig_free_instance: Some(1),
             mig_instance_mem_gb: 10.0,
             mig_enabled: true,

@@ -1,15 +1,19 @@
-//! Global admission layer (DESIGN.md §9): arrival intake, per-shard
-//! primary/recovery queues, shard routing, and cluster-wide capacity
-//! accounting.
+//! Global admission layer (DESIGN.md §9/§11): arrival intake, per-shard
+//! primary/recovery queues, shard routing, the dedicated gang lane, and
+//! cluster-wide capacity accounting.
 //!
-//! Admission is the single front door: every arriving task is routed to
-//! exactly one shard (per the configured [`ShardAssign`] strategy) and
-//! stays there — recovery re-queues return to the same shard's
-//! higher-priority queue, so FIFO order and recovery priority hold *within*
-//! a shard exactly as the paper's single queue pair did (§4.1/§4.2).
-//! Admission also owns the static scheduling ceilings (largest admissible
-//! GPU count / memory target across servers, power envelopes excluded), so
-//! permanently-unschedulable work fails fast in one place.
+//! Admission is the single front door: every arriving singleton task is
+//! routed to exactly one shard (per the configured [`ShardAssign`]
+//! strategy) and stays there — recovery re-queues return to the same
+//! shard's higher-priority queue, so FIFO order and recovery priority hold
+//! *within* a shard exactly as the paper's single queue pair did
+//! (§4.1/§4.2). Tasks flagged `gang` bypass the shards entirely: they join
+//! the gang lane, a single FIFO (+ recovery priority) queue drained by the
+//! driver's all-or-nothing gang scheduler (DESIGN.md §11). Admission also
+//! owns the static scheduling ceilings (largest admissible GPU count /
+//! memory target across servers, power envelopes excluded — and the
+//! cluster-wide GPU pool for gangs), so permanently-unschedulable work
+//! fails fast in one place.
 
 use crate::config::schema::ShardAssign;
 use crate::sim::TaskId;
@@ -21,7 +25,10 @@ pub struct Admission {
     strategy: ShardAssign,
     /// One FIFO primary + priority recovery queue pair per shard.
     queues: Vec<TaskQueues>,
-    /// Shard each task was routed to (sticky for the task's lifetime).
+    /// The dedicated gang lane (DESIGN.md §11): FIFO + recovery priority.
+    gang: TaskQueues,
+    /// Shard each task was routed to (sticky for the task's lifetime;
+    /// gang-lane tasks never get one).
     shard_of: Vec<Option<usize>>,
     /// Round-robin routing cursor (fresh arrivals only).
     rr_next: usize,
@@ -29,6 +36,10 @@ pub struct Admission {
     /// (max GPUs on one admissible server, max memory one target offers).
     max_gpus: usize,
     max_target_gb: f64,
+    /// Best-case assemblable whole-GPU pool — the gang fail-fast bound
+    /// (`gang::gang_gpu_ceiling`: MIG partitioning, power-dead servers and
+    /// power-slot headroom intersected per server).
+    max_cluster_gpus: usize,
 }
 
 impl Admission {
@@ -37,15 +48,18 @@ impl Admission {
         n_tasks: usize,
         strategy: ShardAssign,
         ceilings: (usize, f64),
+        cluster_gpus: usize,
     ) -> Self {
         assert!(n_shards >= 1, "admission needs at least one shard");
         Admission {
             strategy,
             queues: (0..n_shards).map(|_| TaskQueues::new()).collect(),
+            gang: TaskQueues::new(),
             shard_of: vec![None; n_tasks],
             rr_next: 0,
             max_gpus: ceilings.0,
             max_target_gb: ceilings.1,
+            max_cluster_gpus: cluster_gpus,
         }
     }
 
@@ -53,10 +67,13 @@ impl Admission {
         self.queues.len()
     }
 
-    /// Route an arriving task to a shard and enqueue it. `mapper_load[s]`
-    /// is shard `s`'s current load (queued + under observation), consulted
-    /// by the least-loaded strategy.
-    pub fn submit(&mut self, id: TaskId, mapper_load: &[usize]) -> usize {
+    /// Route an arriving singleton task to a shard and enqueue it.
+    /// `mapper_load[s]` is shard `s`'s current load (queued + under
+    /// observation), consulted by the least-loaded strategy. `home` is the
+    /// task's home-server affinity from the fabric model (DESIGN.md §11),
+    /// consulted by the locality strategy — `None` (no affinity, e.g. a
+    /// single-server cluster) falls back to sticky id-modulo routing.
+    pub fn submit(&mut self, id: TaskId, mapper_load: &[usize], home: Option<usize>) -> usize {
         let n = self.queues.len();
         let shard = match self.strategy {
             ShardAssign::RoundRobin => {
@@ -74,11 +91,20 @@ impl Admission {
                 }
                 best
             }
-            ShardAssign::Locality => id % n,
+            // server-topology-aware stickiness: tasks sharing a home server
+            // land on the same mapper, so its observation windows and RR
+            // cursor stay warm for that server's devices; id-modulo remains
+            // the fallback when the fabric offers no affinity
+            ShardAssign::Locality => home.unwrap_or(id) % n,
         };
         self.shard_of[id] = Some(shard);
         self.queues[shard].submit(id);
         shard
+    }
+
+    /// Enqueue an arriving gang task on the dedicated lane (DESIGN.md §11).
+    pub fn submit_gang(&mut self, id: TaskId) {
+        self.gang.submit(id);
     }
 
     /// Re-queue an OOM-crashed task with priority (paper §4.2) on the shard
@@ -89,9 +115,19 @@ impl Admission {
         shard
     }
 
+    /// Re-queue an OOM-crashed gang with priority on the gang lane.
+    pub fn submit_gang_recovery(&mut self, id: TaskId) {
+        self.gang.submit_recovery(id);
+    }
+
     /// Next task for shard `shard`: recovery queue first, then FIFO primary.
     pub fn pop_next(&mut self, shard: usize) -> Option<(TaskId, bool)> {
         self.queues[shard].pop_next()
+    }
+
+    /// Next gang off the dedicated lane (recovery first, then FIFO).
+    pub fn pop_next_gang(&mut self) -> Option<(TaskId, bool)> {
+        self.gang.pop_next()
     }
 
     pub fn shard_of(&self, id: TaskId) -> Option<usize> {
@@ -102,31 +138,40 @@ impl Admission {
         self.queues[shard].len()
     }
 
-    /// Total queued tasks across every shard.
+    pub fn gang_queue_len(&self) -> usize {
+        self.gang.len()
+    }
+
+    /// Total queued tasks across every shard and the gang lane.
     pub fn len(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queues.iter().map(|q| q.len()).sum::<usize>() + self.gang.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(|q| q.is_empty())
+        self.queues.iter().all(|q| q.is_empty()) && self.gang.is_empty()
     }
 
     /// Cluster-wide capacity accounting: can this request EVER be placed?
-    /// Both checks are static (independent of occupancy): a per-GPU demand
-    /// above every schedulable target, or a GPU count no single admissible
-    /// server owns (multi-GPU tasks never span servers), can never succeed
-    /// no matter how long the task waits.
+    /// All checks are static (independent of occupancy). Singleton /
+    /// server-local multi-GPU requests are bounded by the largest
+    /// admissible server; gang requests lift the server-local constraint,
+    /// so their bound is the whole admissible GPU pool (DESIGN.md §11).
     pub fn admissible(
         &self,
         n_gpus: usize,
         demand_gb: Option<f64>,
+        gang: bool,
     ) -> Result<(), &'static str> {
         if let Some(d) = demand_gb {
             if d > self.max_target_gb + 1e-9 {
                 return Err("demand exceeds every schedulable target");
             }
         }
-        if n_gpus > self.max_gpus {
+        if gang {
+            if n_gpus > self.max_cluster_gpus {
+                return Err("gang needs more GPUs than the admissible cluster pool");
+            }
+        } else if n_gpus > self.max_gpus {
             return Err("needs more GPUs than any admissible server owns");
         }
         Ok(())
@@ -138,13 +183,13 @@ mod tests {
     use super::*;
 
     fn adm(n_shards: usize, strategy: ShardAssign) -> Admission {
-        Admission::new(n_shards, 16, strategy, (4, 40.0))
+        Admission::new(n_shards, 16, strategy, (4, 40.0), 8)
     }
 
     #[test]
     fn round_robin_cycles_shards() {
         let mut a = adm(3, ShardAssign::RoundRobin);
-        let shards: Vec<usize> = (0..6).map(|id| a.submit(id, &[0; 3])).collect();
+        let shards: Vec<usize> = (0..6).map(|id| a.submit(id, &[0; 3], None)).collect();
         assert_eq!(shards, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(a.len(), 6);
         assert_eq!(a.queue_len(1), 2);
@@ -155,25 +200,39 @@ mod tests {
     #[test]
     fn least_loaded_picks_emptiest_with_low_id_ties() {
         let mut a = adm(3, ShardAssign::LeastLoaded);
-        assert_eq!(a.submit(0, &[2, 1, 1]), 1, "ties break to the lower id");
-        assert_eq!(a.submit(1, &[2, 2, 1]), 2);
-        assert_eq!(a.submit(2, &[0, 0, 0]), 0);
+        assert_eq!(a.submit(0, &[2, 1, 1], None), 1, "ties break to the lower id");
+        assert_eq!(a.submit(1, &[2, 2, 1], None), 2);
+        assert_eq!(a.submit(2, &[0, 0, 0], None), 0);
     }
 
     #[test]
-    fn locality_is_sticky_by_task_id() {
+    fn locality_is_sticky_by_task_id_without_affinity() {
         let mut a = adm(4, ShardAssign::Locality);
-        assert_eq!(a.submit(5, &[0; 4]), 1);
-        assert_eq!(a.submit(8, &[0; 4]), 0);
-        assert_eq!(a.submit(11, &[0; 4]), 3);
+        assert_eq!(a.submit(5, &[0; 4], None), 1);
+        assert_eq!(a.submit(8, &[0; 4], None), 0);
+        assert_eq!(a.submit(11, &[0; 4], None), 3);
+    }
+
+    #[test]
+    fn locality_routes_by_home_server_affinity() {
+        // fabric affinity overrides the raw id: tasks sharing a home server
+        // land on the same mapper regardless of their ids
+        let mut a = adm(4, ShardAssign::Locality);
+        assert_eq!(a.submit(5, &[0; 4], Some(2)), 2);
+        assert_eq!(a.submit(8, &[0; 4], Some(2)), 2);
+        assert_eq!(a.submit(11, &[0; 4], Some(7)), 3, "server id wraps over shards");
+        // other strategies ignore affinity entirely
+        let mut rr = adm(2, ShardAssign::RoundRobin);
+        assert_eq!(rr.submit(0, &[0; 2], Some(1)), 0);
+        assert_eq!(rr.submit(1, &[0; 2], Some(1)), 1);
     }
 
     #[test]
     fn recovery_returns_to_the_same_shard_with_priority() {
         let mut a = adm(2, ShardAssign::RoundRobin);
-        a.submit(0, &[0; 2]); // shard 0
-        a.submit(1, &[0; 2]); // shard 1
-        a.submit(2, &[0; 2]); // shard 0
+        a.submit(0, &[0; 2], None); // shard 0
+        a.submit(1, &[0; 2], None); // shard 1
+        a.submit(2, &[0; 2], None); // shard 0
         let (t, rec) = a.pop_next(0).unwrap();
         assert_eq!((t, rec), (0, false));
         assert_eq!(a.submit_recovery(0), 0, "recovery never migrates");
@@ -189,7 +248,7 @@ mod tests {
     fn fifo_within_each_shard() {
         let mut a = adm(2, ShardAssign::RoundRobin);
         for id in 0..8 {
-            a.submit(id, &[0; 2]);
+            a.submit(id, &[0; 2], None);
         }
         // shard 0 got 0,2,4,6; shard 1 got 1,3,5,7 — each pops in order
         let order0: Vec<TaskId> =
@@ -201,12 +260,34 @@ mod tests {
     }
 
     #[test]
+    fn gang_lane_is_fifo_with_recovery_priority() {
+        let mut a = adm(2, ShardAssign::RoundRobin);
+        a.submit_gang(4);
+        a.submit_gang(7);
+        a.submit(0, &[0; 2], None);
+        assert_eq!(a.gang_queue_len(), 2);
+        assert_eq!(a.len(), 3, "gang lane counts toward total backlog");
+        assert_eq!(a.shard_of(4), None, "gangs never bind to a shard");
+        assert_eq!(a.pop_next_gang(), Some((4, false)));
+        a.submit_gang_recovery(4);
+        assert_eq!(a.pop_next_gang(), Some((4, true)), "recovery drains first");
+        assert_eq!(a.pop_next_gang(), Some((7, false)));
+        assert_eq!(a.pop_next_gang(), None);
+        assert!(!a.is_empty(), "singleton still queued");
+    }
+
+    #[test]
     fn capacity_accounting_rejects_impossible_requests() {
         let a = adm(1, ShardAssign::RoundRobin);
-        assert!(a.admissible(4, Some(39.0)).is_ok());
-        assert!(a.admissible(1, Some(40.5)).is_err());
-        assert!(a.admissible(5, None).is_err());
-        assert!(a.admissible(1, None).is_ok());
+        assert!(a.admissible(4, Some(39.0), false).is_ok());
+        assert!(a.admissible(1, Some(40.5), false).is_err());
+        assert!(a.admissible(5, None, false).is_err());
+        assert!(a.admissible(1, None, false).is_ok());
+        // gangs are bounded by the cluster pool, not one server
+        assert!(a.admissible(5, Some(39.0), true).is_ok());
+        assert!(a.admissible(8, None, true).is_ok());
+        assert!(a.admissible(9, None, true).is_err());
+        assert!(a.admissible(5, Some(40.5), true).is_err(), "demand cap still applies");
     }
 
     #[test]
@@ -214,7 +295,7 @@ mod tests {
         // the serial degenerate case: everything lands on shard 0
         let mut a = adm(1, ShardAssign::Locality);
         for id in 0..4 {
-            assert_eq!(a.submit(id, &[0]), 0);
+            assert_eq!(a.submit(id, &[0], None), 0);
         }
         let order: Vec<TaskId> =
             std::iter::from_fn(|| a.pop_next(0)).map(|(t, _)| t).collect();

@@ -13,7 +13,8 @@
 
 use carma::cli;
 use carma::config::schema::{
-    CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, ServerConfig, ShardAssign,
+    CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, PolicyKind, ServerConfig,
+    ShardAssign,
 };
 use carma::coordinator::carma::{run_label, run_trace};
 use carma::estimators;
@@ -21,12 +22,12 @@ use carma::experiments;
 use carma::metrics::report::RunReport;
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::submission;
-use carma::workload::trace::{trace_60, trace_90, trace_cluster};
+use carma::workload::trace::{trace_60, trace_90, trace_cluster, trace_gang};
 
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
-    "seed", "config",
+    "fabric-profile", "gang-hold-ttl", "seed", "config",
 ];
 
 fn main() {
@@ -75,12 +76,17 @@ fn usage() {
          \x20 --gpus-per-server G  GPUs per server (default 4)\n\
          \x20 --power-cap W      per-server power envelope in watts (default off)\n\
          \x20 --shards K         concurrent mapper shards (default 1 = serial paper pipeline)\n\
-         \x20 --shard-assign S   round-robin|least-loaded|locality (default round-robin)\n\
+         \x20 --shard-assign S   round-robin|least-loaded|locality (default round-robin;\n\
+         \x20                    locality routes by fabric home-server affinity)\n\
          \x20 --engine-threads T sim-engine worker threads (default 1 = serial; 0 = auto;\n\
          \x20                    results are byte-identical at any thread count)\n\
+         \x20 --fabric-profile P nvlink-island|flat-pcie|dual-island interconnect model\n\
+         \x20                    (default nvlink-island; see [fabric] in carma.toml)\n\
+         \x20 --gang-hold-ttl S  gang partial-hold TTL in seconds (default 120)\n\
          \x20 --json             print the run report as JSON only (determinism diffing)\n\
          \x20 --seed N           trace seed (default 42)\n\
-         \x20 --config FILE      carma.toml overriding the defaults\n\n\
+         \x20 --config FILE      carma.toml overriding the defaults\n\
+         \x20 --trace gangN      N-task mixed trace with distributed (gang) jobs\n\n\
          EXPERIMENTS: {}",
         experiments::ALL.join(", ")
     );
@@ -168,6 +174,14 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
         // range (0..=64, 0 = auto) is enforced by cfg.validate() below
         cfg.engine.threads = t as usize;
     }
+    if let Some(p) = args.opt("fabric-profile") {
+        cfg.fabric.profile =
+            FabricProfile::parse(p).ok_or_else(|| format!("unknown fabric profile '{p}'"))?;
+    }
+    if let Some(t) = args.opt_f64("gang-hold-ttl").map_err(|e| e.to_string())? {
+        // positivity is enforced by cfg.validate() below
+        cfg.gang.hold_ttl_s = t;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
     }
@@ -183,10 +197,31 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
     let trace = match args.opt("trace") {
         Some("60") => trace_60(&zoo, cfg.seed),
         Some("90") => trace_90(&zoo, cfg.seed),
+        Some(g) if g.starts_with("gang") => {
+            // "gangN": N-task mixed trace where every 12th submission is a
+            // distributed job twice as wide as the largest server
+            // (DESIGN.md §11); bare "gang" sizes N as 6 tasks per GPU
+            let n: usize = if g == "gang" {
+                6 * total_gpus
+            } else {
+                g[4..]
+                    .parse()
+                    .map_err(|_| format!("unknown trace '{g}' (gang|gang<count>)"))?
+            };
+            if n == 0 {
+                return Err("--trace gang task count must be >= 1".into());
+            }
+            if total_gpus < 2 {
+                return Err("--trace gang needs a cluster of at least 2 GPUs".into());
+            }
+            let widest = cfg.cluster.servers.iter().map(|s| s.n_gpus).max().unwrap_or(1);
+            let gang_gpus = (2 * widest).min(total_gpus).max(2);
+            trace_gang(&zoo, n, total_gpus, gang_gpus, cfg.seed)
+        }
         Some(n) => {
             let n: usize = n
                 .parse()
-                .map_err(|_| format!("unknown trace '{n}' (60|90|<task count>)"))?;
+                .map_err(|_| format!("unknown trace '{n}' (60|90|gangN|<task count>)"))?;
             if n == 0 {
                 return Err("--trace task count must be >= 1".into());
             }
@@ -236,6 +271,22 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
                 s.mean_wait_min
             );
         }
+    }
+    let g = &out.report.gang;
+    if g.gangs > 0 {
+        println!(
+            "\n  gang lane: {}/{} gangs completed, {} cross-server (max {} servers), \
+             mean wait {:.1} m, frag excess {}, holds {}/{} expired, {} partial dispatches",
+            g.completed,
+            g.gangs,
+            g.cross_server,
+            g.max_servers_spanned,
+            g.mean_wait_min,
+            g.frag_excess,
+            g.holds_expired,
+            g.holds_placed,
+            g.partial_dispatches,
+        );
     }
     println!("\n{} simulation events processed", out.events);
     Ok(())

@@ -21,6 +21,17 @@ pub struct TaskTiming {
     pub assigned_shard: Option<usize>,
     /// Mapping decisions that dispatched this task (> 1 after recovery).
     pub dispatches: u32,
+    /// Routed to the gang lane (distributed job, DESIGN.md §11).
+    pub gang: bool,
+    /// Servers the (last) gang dispatch spanned.
+    pub servers_spanned: usize,
+    /// Spanned servers beyond the packing minimum at dispatch — the
+    /// placement-fragmentation count of this gang.
+    pub span_excess: usize,
+    /// Fabric ring cost of the placed set (`Fabric::gang_cost`): per-GB
+    /// collective transfer cost, a function of the `[fabric]` bandwidth
+    /// classes and how many islands/servers the placement crosses.
+    pub fabric_cost: f64,
 }
 
 /// Collects everything the evaluation section reports.
@@ -34,6 +45,13 @@ pub struct Recorder {
     mem_integral: Vec<f64>,
     pub oom_total: u64,
     pub failed_total: u64,
+    /// Gang-lane counters (DESIGN.md §11).
+    pub gang_holds_placed: u64,
+    pub gang_holds_expired: u64,
+    /// Dispatches whose placed GPU count differed from the request — MUST
+    /// stay zero; a nonzero value means all-or-nothing was violated and the
+    /// results JSON makes that observable.
+    pub gang_partial_dispatches: u64,
     /// Configured coordinator shard count (DESIGN.md §9) — the report's
     /// per-shard stats cover all of them, including shards that never
     /// received a task (e.g. least-loaded routing under light arrivals).
@@ -56,6 +74,9 @@ impl Recorder {
             mem_integral: vec![0.0; n_gpus],
             oom_total: 0,
             failed_total: 0,
+            gang_holds_placed: 0,
+            gang_holds_expired: 0,
+            gang_partial_dispatches: 0,
             n_shards: 1,
             first_arrival_s: None,
             last_completion_s: 0.0,
@@ -96,6 +117,40 @@ impl Recorder {
     /// Task permanently failed (unschedulable / retry budget exhausted).
     pub fn on_failed(&mut self, _task: TaskId) {
         self.failed_total += 1;
+    }
+
+    /// Admission routed `task` to the gang lane (DESIGN.md §11).
+    pub fn on_gang_arrival(&mut self, task: TaskId) {
+        self.tasks[task].gang = true;
+    }
+
+    /// A gang dispatched: `placed` GPUs of `requested` across `spanned`
+    /// servers (`min_span` = the packing minimum for this width) at fabric
+    /// ring cost `fabric_cost`.
+    pub fn on_gang_dispatch(
+        &mut self,
+        task: TaskId,
+        placed: usize,
+        requested: usize,
+        spanned: usize,
+        min_span: usize,
+        fabric_cost: f64,
+    ) {
+        if placed != requested {
+            self.gang_partial_dispatches += 1;
+        }
+        let tt = &mut self.tasks[task];
+        tt.servers_spanned = spanned;
+        tt.span_excess = spanned.saturating_sub(min_span);
+        tt.fabric_cost = fabric_cost;
+    }
+
+    pub fn on_gang_holds(&mut self, n: u64) {
+        self.gang_holds_placed += n;
+    }
+
+    pub fn on_gang_holds_expired(&mut self, n: u64) {
+        self.gang_holds_expired += n;
     }
 
     pub fn on_oom(&mut self, task: TaskId) {
@@ -241,6 +296,28 @@ mod tests {
         r.on_assigned(1, 0);
         assert_eq!(r.tasks[0].assigned_shard, Some(3));
         assert_eq!(r.tasks[1].assigned_shard, Some(0));
+    }
+
+    #[test]
+    fn gang_counters() {
+        let mut r = Recorder::new(3, 1);
+        r.on_gang_arrival(2);
+        assert!(r.tasks[2].gang && !r.tasks[0].gang);
+        r.on_gang_holds(3);
+        r.on_gang_holds_expired(2);
+        r.on_gang_dispatch(2, 8, 8, 2, 2, 0.25);
+        assert_eq!(r.gang_holds_placed, 3);
+        assert_eq!(r.gang_holds_expired, 2);
+        assert_eq!(r.gang_partial_dispatches, 0);
+        assert_eq!(r.tasks[2].servers_spanned, 2);
+        assert_eq!(r.tasks[2].span_excess, 0);
+        assert_eq!(r.tasks[2].fabric_cost, 0.25);
+        // a fragmented dispatch records its excess; a partial one trips the
+        // all-or-nothing alarm
+        r.on_gang_dispatch(2, 8, 8, 4, 2, 0.5);
+        assert_eq!(r.tasks[2].span_excess, 2);
+        r.on_gang_dispatch(2, 5, 8, 2, 2, 0.25);
+        assert_eq!(r.gang_partial_dispatches, 1);
     }
 
     #[test]

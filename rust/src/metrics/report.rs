@@ -30,6 +30,36 @@ impl ShardStat {
     }
 }
 
+/// Gang-lane counters (DESIGN.md §11). All zeros when the trace has no
+/// distributed jobs — the section is always present so results JSON stays
+/// byte-diffable across configurations of the same binary.
+#[derive(Debug, Clone, Default)]
+pub struct GangStat {
+    /// Distributed jobs admission routed to the gang lane.
+    pub gangs: usize,
+    pub completed: usize,
+    /// Gangs whose dispatch spanned more than one server.
+    pub cross_server: usize,
+    /// Highest server count any single gang spanned.
+    pub max_servers_spanned: usize,
+    /// Mean queueing delay (first dispatch − arrival) of gang tasks.
+    pub mean_wait_min: f64,
+    pub max_wait_min: f64,
+    /// Σ over gangs of (servers spanned − packing minimum): the placement
+    /// fragmentation the fabric-cost ranking is trying to minimize.
+    pub frag_excess: usize,
+    /// Mean fabric ring cost (`Fabric::gang_cost`, per-GB collective
+    /// transfer cost) over dispatched gangs — the `[fabric]` bandwidth
+    /// classes surface here.
+    pub mean_fabric_cost: f64,
+    /// Partial-hold lifecycle counters.
+    pub holds_placed: u64,
+    pub holds_expired: u64,
+    /// Dispatches violating all-or-nothing — MUST be zero, observable in
+    /// the results JSON (the §11 acceptance invariant).
+    pub partial_dispatches: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub label: String,
@@ -46,6 +76,8 @@ pub struct RunReport {
     /// Per-shard queueing delay and mapping throughput — one entry per
     /// configured coordinator shard (idle shards report zero tasks).
     pub per_shard: Vec<ShardStat>,
+    /// Gang-lane counters (zeros when the trace has no distributed jobs).
+    pub gang: GangStat,
 }
 
 impl RunReport {
@@ -63,6 +95,7 @@ impl RunReport {
             completed: r.completed_count(),
             total_tasks: r.tasks.len(),
             per_shard: shard_stats(r),
+            gang: gang_stats(r),
         }
     }
 
@@ -94,6 +127,19 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
+        let gang = json::obj(vec![
+            ("gangs", json::num(self.gang.gangs as f64)),
+            ("completed", json::num(self.gang.completed as f64)),
+            ("cross_server", json::num(self.gang.cross_server as f64)),
+            ("max_servers_spanned", json::num(self.gang.max_servers_spanned as f64)),
+            ("mean_wait_min", json::num(self.gang.mean_wait_min)),
+            ("max_wait_min", json::num(self.gang.max_wait_min)),
+            ("frag_excess", json::num(self.gang.frag_excess as f64)),
+            ("mean_fabric_cost", json::num(self.gang.mean_fabric_cost)),
+            ("holds_placed", json::num(self.gang.holds_placed as f64)),
+            ("holds_expired", json::num(self.gang.holds_expired as f64)),
+            ("partial_dispatches", json::num(self.gang.partial_dispatches as f64)),
+        ]);
         let shards = self
             .per_shard
             .iter()
@@ -119,8 +165,45 @@ impl RunReport {
             ("completed", json::num(self.completed as f64)),
             ("total_tasks", json::num(self.total_tasks as f64)),
             ("per_shard", json::arr(shards)),
+            ("gang", gang),
         ])
     }
+}
+
+/// Aggregate the recorder's per-task gang routing into the lane counters.
+fn gang_stats(r: &Recorder) -> GangStat {
+    let mut s = GangStat {
+        holds_placed: r.gang_holds_placed,
+        holds_expired: r.gang_holds_expired,
+        partial_dispatches: r.gang_partial_dispatches,
+        ..GangStat::default()
+    };
+    let mut wait_sum = 0.0f64;
+    let mut cost_sum = 0.0f64;
+    let mut waited = 0usize;
+    for t in r.tasks.iter().filter(|t| t.gang) {
+        s.gangs += 1;
+        if t.completed_s.is_some() {
+            s.completed += 1;
+        }
+        if t.servers_spanned > 1 {
+            s.cross_server += 1;
+        }
+        s.max_servers_spanned = s.max_servers_spanned.max(t.servers_spanned);
+        s.frag_excess += t.span_excess;
+        if let Some(d) = t.dispatched_s {
+            let w = d - t.arrival_s;
+            wait_sum += w;
+            cost_sum += t.fabric_cost;
+            waited += 1;
+            s.max_wait_min = s.max_wait_min.max(to_minutes(w));
+        }
+    }
+    if waited > 0 {
+        s.mean_wait_min = to_minutes(wait_sum / waited as f64);
+        s.mean_fabric_cost = cost_sum / waited as f64;
+    }
+    s
 }
 
 /// Aggregate the recorder's per-task shard routing into per-shard counters.
@@ -207,6 +290,45 @@ mod tests {
         assert!((rep.per_shard[1].mean_wait_min - 2.0).abs() < 1e-9);
         assert_eq!(rep.total_decisions(), 4);
         assert!((rep.per_shard[0].decisions_per_min(3.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_section_aggregates_lane_counters() {
+        let mut r = Recorder::new(3, 1);
+        // singleton
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 60.0);
+        // cross-server gang: waits 2 min, spans 2 of a min-1 packing
+        r.on_arrival(1, 0.0);
+        r.on_gang_arrival(1);
+        r.on_dispatch(1, 120.0);
+        r.on_gang_dispatch(1, 8, 8, 2, 1, 0.1);
+        r.on_completion(1, 500.0);
+        // second gang, never dispatched
+        r.on_arrival(2, 10.0);
+        r.on_gang_arrival(2);
+        r.on_gang_holds(5);
+        r.on_gang_holds_expired(2);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.gang.gangs, 2);
+        assert_eq!(rep.gang.completed, 1);
+        assert_eq!(rep.gang.cross_server, 1);
+        assert_eq!(rep.gang.max_servers_spanned, 2);
+        assert_eq!(rep.gang.frag_excess, 1);
+        assert!((rep.gang.mean_fabric_cost - 0.1).abs() < 1e-12);
+        assert!((rep.gang.mean_wait_min - 2.0).abs() < 1e-9);
+        assert!((rep.gang.max_wait_min - 2.0).abs() < 1e-9);
+        assert_eq!(rep.gang.holds_placed, 5);
+        assert_eq!(rep.gang.holds_expired, 2);
+        assert_eq!(rep.gang.partial_dispatches, 0);
+        let j = rep.to_json();
+        let g = j.get("gang").expect("gang section always present");
+        assert_eq!(g.f64_of("gangs"), 2.0);
+        assert_eq!(g.f64_of("partial_dispatches"), 0.0);
+        // a gang-free run still carries the (zeroed) section
+        let empty = RunReport::from_recorder("e", &Recorder::new(1, 1));
+        assert_eq!(empty.gang.gangs, 0);
+        assert_eq!(empty.to_json().get("gang").unwrap().f64_of("holds_placed"), 0.0);
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub enum Event {
     /// The recovery loop noticed an OOM error file (paper §4.2: CARMA
     /// "iteratively checks the error files"); small detection delay.
     RecoveryDetect(TaskId),
+    /// Periodic re-attempt at placing the head-of-lane gang (DESIGN.md §11).
+    GangRetry,
+    /// A gang's partial hold reached its TTL. Version-guarded: the second
+    /// field is the hold epoch the expiry was armed for — re-acquired holds
+    /// bump the epoch, so stale expiries are dropped.
+    GangHoldExpire(TaskId, u64),
 }
 
 #[derive(Debug)]

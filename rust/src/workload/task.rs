@@ -44,6 +44,11 @@ pub struct TaskSpec {
     pub features: TaskFeatures,
     /// Submission time (seconds into the trace).
     pub arrival_s: f64,
+    /// Distributed (gang-scheduled) job: all `n_gpus` workers must start
+    /// together — all-or-nothing placement, allowed to span servers over
+    /// the fabric (DESIGN.md §11). Non-gang multi-GPU tasks keep the
+    /// paper's server-local constraint.
+    pub gang: bool,
 }
 
 impl TaskSpec {
@@ -61,7 +66,20 @@ impl TaskSpec {
             membw: e.membw,
             features: e.features,
             arrival_s,
+            gang: false,
         }
+    }
+
+    /// Widen this task into a distributed data-parallel gang over
+    /// `n_gpus` workers. Per-GPU memory, SMACT and bandwidth demands stay
+    /// the workers' solo profile; `work_s` stays the per-worker wall time
+    /// (data parallelism splits the batch, not the epoch walltime model).
+    pub fn into_gang(mut self, n_gpus: usize) -> TaskSpec {
+        assert!(n_gpus >= 2, "a gang needs at least two workers");
+        self.n_gpus = n_gpus;
+        self.features.n_gpus = n_gpus as f64;
+        self.gang = true;
+        self
     }
 
     pub fn label(&self) -> String {

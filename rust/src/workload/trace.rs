@@ -69,6 +69,76 @@ pub fn trace_cluster(zoo: &ModelZoo, n_tasks: usize, total_gpus: usize, seed: u6
     )
 }
 
+/// Mixed gang + singleton trace (DESIGN.md §11): the cluster composition of
+/// [`trace_cluster`] with every `GANG_EVERY`-th submission widened into a
+/// distributed data-parallel job of `gang_gpus` workers (drawn from the
+/// heavy pool — the jobs that outgrow one server in multi-tenant traces,
+/// Jeon et al.). Gangs carry the `gang` flag: all-or-nothing placement,
+/// allowed to span servers. Fully deterministic from `seed`.
+pub fn trace_gang(
+    zoo: &ModelZoo,
+    n_tasks: usize,
+    total_gpus: usize,
+    gang_gpus: usize,
+    seed: u64,
+) -> TraceSpec {
+    assert!(n_tasks > 0 && total_gpus > 0);
+    assert!(
+        gang_gpus >= 2 && gang_gpus <= total_gpus,
+        "gang width {gang_gpus} must fit the {total_gpus}-GPU cluster"
+    );
+    let mut t = trace_cluster(zoo, n_tasks, total_gpus, seed ^ 0x6A16);
+    t.name = format!("trace-gang-{n_tasks}x{total_gpus}gpu-{gang_gpus}w");
+    let mut rng = Rng::new(seed ^ 0x6A16_0001);
+    let heavy = zoo.by_class("heavy");
+    assert!(!heavy.is_empty(), "no heavy zoo entries for gang jobs");
+    // clamp the first gang inside the trace so short traces (n <=
+    // GANG_EVERY/2) still carry at least one distributed job — a "gang
+    // trace" with zero gangs would silently test nothing
+    let first = (GANG_EVERY / 2).min(n_tasks - 1);
+    for i in (first..n_tasks).step_by(GANG_EVERY) {
+        let e = *rng.choice(&heavy);
+        let epochs = *rng.choice(&e.epochs);
+        let arrival = t.tasks[i].arrival_s;
+        t.tasks[i] = TaskSpec::from_zoo(i, e, epochs, arrival).into_gang(gang_gpus);
+    }
+    debug_assert!(t.tasks.iter().any(|task| task.gang));
+    t
+}
+
+/// Every k-th submission of [`trace_gang`] is a distributed job (~8 %).
+pub const GANG_EVERY: usize = 12;
+
+/// The server-local-only baseline of `repro gang_scale` (DESIGN.md §11):
+/// without cross-server gang scheduling, a distributed job must be shrunk
+/// to the largest single server — same total GPU-seconds of work, so a
+/// `gang_gpus`-wide job runs `gang_gpus / gpus_per_server` times longer on
+/// its reduced worker set. Singletons are untouched.
+pub fn server_localize(trace: &TraceSpec, gpus_per_server: usize) -> TraceSpec {
+    assert!(gpus_per_server >= 1);
+    let tasks = trace
+        .tasks
+        .iter()
+        .map(|t| {
+            if !t.gang || t.n_gpus <= gpus_per_server {
+                let mut t = t.clone();
+                t.gang = false;
+                return t;
+            }
+            let mut local = t.clone();
+            local.gang = false;
+            local.work_s = t.work_s * t.n_gpus as f64 / gpus_per_server as f64;
+            local.n_gpus = gpus_per_server;
+            local.features.n_gpus = gpus_per_server as f64;
+            local
+        })
+        .collect();
+    TraceSpec {
+        name: format!("{}-serverlocal", trace.name),
+        tasks,
+    }
+}
+
 fn compose(
     zoo: &ModelZoo,
     name: &str,
@@ -214,6 +284,54 @@ mod tests {
             a.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>(),
             c.tasks.iter().map(|t| t.name.clone()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn gang_trace_mixes_distributed_jobs() {
+        let t = trace_gang(&zoo(), 96, 16, 8, 42);
+        assert_eq!(t.tasks.len(), 96);
+        let gangs: Vec<_> = t.tasks.iter().filter(|t| t.gang).collect();
+        assert_eq!(gangs.len(), 8, "every {GANG_EVERY}th submission is a gang");
+        for g in &gangs {
+            assert_eq!(g.n_gpus, 8);
+            assert_eq!(g.features.n_gpus, 8.0, "features follow the widening");
+            assert_eq!(g.weight_class, WeightClass::Heavy);
+        }
+        // ids stay sequential and arrivals sorted (the engine relies on it)
+        for (i, task) in t.tasks.iter().enumerate() {
+            assert_eq!(task.id, i);
+        }
+        let arr: Vec<f64> = t.tasks.iter().map(|x| x.arrival_s).collect();
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        // deterministic by seed
+        let a = trace_gang(&zoo(), 96, 16, 8, 9);
+        let b = trace_gang(&zoo(), 96, 16, 8, 9);
+        assert_eq!(
+            a.tasks.iter().map(|t| (t.name.clone(), t.gang)).collect::<Vec<_>>(),
+            b.tasks.iter().map(|t| (t.name.clone(), t.gang)).collect::<Vec<_>>()
+        );
+        // short traces still carry at least one distributed job
+        let tiny = trace_gang(&zoo(), 3, 16, 8, 1);
+        assert_eq!(tiny.tasks.iter().filter(|t| t.gang).count(), 1);
+    }
+
+    #[test]
+    fn server_localize_conserves_gpu_seconds() {
+        let t = trace_gang(&zoo(), 96, 16, 8, 42);
+        let local = server_localize(&t, 4);
+        assert_eq!(local.tasks.len(), 96);
+        assert!(local.tasks.iter().all(|t| !t.gang), "baseline has no gangs");
+        assert!(local.tasks.iter().all(|t| t.n_gpus <= 4));
+        for (orig, loc) in t.tasks.iter().zip(&local.tasks) {
+            let orig_gpu_s = orig.work_s * orig.n_gpus as f64;
+            let loc_gpu_s = loc.work_s * loc.n_gpus as f64;
+            assert!((orig_gpu_s - loc_gpu_s).abs() < 1e-6, "{}", orig.label());
+            if orig.gang {
+                assert!((loc.work_s - 2.0 * orig.work_s).abs() < 1e-6);
+            } else {
+                assert_eq!(loc.work_s, orig.work_s);
+            }
+        }
     }
 
     #[test]

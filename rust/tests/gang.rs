@@ -1,0 +1,227 @@
+//! Gang-scheduling integration invariants (DESIGN.md §11): all-or-nothing
+//! atomicity (also under an OOM-heavy trace), reservation-TTL expiry
+//! releasing holds, no-starvation of large gangs under continuous
+//! single-GPU arrivals, and bit-determinism of the gang path across engine
+//! thread counts.
+
+use carma::config::schema::{
+    CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind, ShardAssign,
+};
+use carma::coordinator::carma::{run_trace, RunOutcome};
+use carma::estimators;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::task::TaskSpec;
+use carma::workload::trace::{server_localize, trace_gang, TraceSpec};
+
+const SERVERS: usize = 4;
+const GPUS: usize = 4;
+const TASKS: usize = 96;
+const GANG_GPUS: usize = 8;
+
+fn gang_cfg() -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(SERVERS, GPUS, 40.0);
+    c
+}
+
+fn run(c: CarmaConfig, trace: &TraceSpec) -> RunOutcome {
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_trace(c, est, trace, "gang-test")
+}
+
+#[test]
+fn gangs_span_servers_all_or_nothing() {
+    // 8-wide jobs on 4-GPU servers: they can only exist by spanning, and
+    // every dispatch must place the full worker set atomically
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, TASKS, SERVERS * GPUS, GANG_GPUS, 42);
+    let n_gangs = trace.tasks.iter().filter(|t| t.gang).count();
+    assert!(n_gangs > 0);
+    let out = run(gang_cfg(), &trace);
+    assert_eq!(out.report.completed, TASKS, "every task (gangs included) completes");
+    let g = &out.report.gang;
+    assert_eq!(g.gangs, n_gangs);
+    assert_eq!(g.completed, n_gangs);
+    assert_eq!(g.partial_dispatches, 0, "all-or-nothing is an invariant");
+    assert_eq!(g.cross_server, n_gangs, "8-wide gangs cannot fit one 4-GPU server");
+    assert!(g.max_servers_spanned >= 2);
+    // 8 GPUs over 4-GPU servers pack into 2 servers minimum; the fabric
+    // ranking should rarely need more, but never fewer
+    assert!(g.max_servers_spanned <= SERVERS);
+}
+
+#[test]
+fn gang_atomicity_survives_oom_heavy_trace() {
+    // blind round-robin, no preconditions, no estimator: the OOM/recovery
+    // machinery fires constantly — atomicity and completion must survive,
+    // and a crashed gang restarts whole (never a partial re-dispatch)
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, 48, SERVERS * GPUS, GANG_GPUS, 7);
+    let mut c = gang_cfg();
+    c.policy = PolicyKind::RoundRobin;
+    c.estimator = EstimatorKind::None;
+    c.safety_margin_gb = 0.0;
+    c.smact_cap = None;
+    let out = run(c, &trace);
+    assert_eq!(out.report.completed, 48, "recovery must finish every task");
+    assert!(out.report.oom_crashes > 0, "the blind trace should hit OOMs");
+    assert_eq!(out.report.gang.partial_dispatches, 0);
+    assert_eq!(out.recorder.failed_total, 0, "no task may exhaust its retry budget");
+}
+
+#[test]
+fn hold_ttl_expires_and_releases_gpus() {
+    // 2×2 cluster. Three long heavy singletons grab 3 of the 4 GPUs (they
+    // are too big to collocate), then a 4-wide gang arrives: it can only
+    // hold the leftover GPU, makes no further progress for far longer than
+    // the 30 s TTL, and its hold must be torn down (and later re-acquired)
+    // until the singletons drain. Everything still completes.
+    let zoo = ModelZoo::load();
+    let heavy: Vec<&_> = zoo
+        .entries
+        .iter()
+        .filter(|e| e.weight_class == "heavy" && e.n_gpus == 1 && e.mem_gb > 20.0)
+        .collect();
+    let seed_entry = heavy.first().expect("a heavy 1-GPU zoo model");
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    for id in 0..3 {
+        let mut t = TaskSpec::from_zoo(id, seed_entry, 1, 0.0);
+        t.work_s = 1800.0; // 30 min: many TTL windows
+        tasks.push(t);
+    }
+    let gang_entry = zoo
+        .entries
+        .iter()
+        .find(|e| e.weight_class == "heavy" && e.mem_gb > 20.0)
+        .unwrap();
+    let mut g = TaskSpec::from_zoo(3, gang_entry, 1, 0.0).into_gang(4);
+    g.work_s = 600.0;
+    tasks.push(g);
+    let trace = TraceSpec {
+        name: "ttl-test".into(),
+        tasks,
+    };
+
+    let mut c = gang_cfg();
+    c.cluster = ClusterConfig::homogeneous(2, 2, 40.0);
+    c.gang.hold_ttl_s = 30.0;
+    let out = run(c, &trace);
+    assert_eq!(out.report.completed, 4);
+    let gs = &out.report.gang;
+    assert_eq!(gs.gangs, 1);
+    assert!(gs.holds_placed > 0, "the gang must have taken partial holds");
+    assert!(
+        gs.holds_expired > 0,
+        "a stalled hold must be torn down at the TTL (placed {}, expired {})",
+        gs.holds_placed,
+        gs.holds_expired
+    );
+    assert_eq!(gs.partial_dispatches, 0);
+}
+
+#[test]
+fn large_gang_not_starved_by_continuous_singletons() {
+    // one 16-wide gang (the whole cluster) submitted early into a dense
+    // singleton stream: without reservations the gang could wait forever —
+    // the sticky-hold floor guarantees it eventually assembles all 16 GPUs
+    let zoo = ModelZoo::load();
+    let mut trace = trace_gang(&zoo, 80, SERVERS * GPUS, GANG_GPUS, 21);
+    // strip the generated gangs, then make task 8 a cluster-wide gang
+    for t in trace.tasks.iter_mut() {
+        if t.gang {
+            t.gang = false;
+            t.n_gpus = 1;
+            t.features.n_gpus = 1.0;
+        }
+    }
+    let idx = 8;
+    let arrival = trace.tasks[idx].arrival_s;
+    let entry = zoo
+        .entries
+        .iter()
+        .find(|e| e.weight_class == "heavy")
+        .unwrap();
+    trace.tasks[idx] = TaskSpec::from_zoo(idx, entry, 1, arrival).into_gang(SERVERS * GPUS);
+    let out = run(gang_cfg(), &trace);
+    assert_eq!(out.report.completed, 80, "the cluster-wide gang must not starve");
+    let gs = &out.report.gang;
+    assert_eq!(gs.gangs, 1);
+    assert_eq!(gs.completed, 1);
+    assert_eq!(gs.max_servers_spanned, SERVERS, "it needed every server");
+    assert_eq!(gs.partial_dispatches, 0);
+}
+
+#[test]
+fn gang_path_is_byte_identical_across_engine_threads() {
+    // the §10 guarantee extended to §11: gang placement, holds, TTL expiry
+    // and fabric speed factors all commit on the driver thread in
+    // (time, seq) order — 4 engine threads must reproduce the serial run's
+    // results JSON byte for byte, at 1 and 4 coordinator shards
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, TASKS, SERVERS * GPUS, GANG_GPUS, 13);
+    for shards in [1usize, 4] {
+        let mk = |threads: usize| {
+            let mut c = gang_cfg();
+            c.coordinator.shards = shards;
+            c.engine.threads = threads;
+            run(c, &trace)
+        };
+        let serial = mk(1);
+        let threaded = mk(4);
+        assert_eq!(serial.report.completed, TASKS, "{shards} shard(s)");
+        assert_eq!(serial.events, threaded.events, "{shards} shard(s): event streams");
+        assert_eq!(
+            serial.report.to_json().to_string_pretty(),
+            threaded.report.to_json().to_string_pretty(),
+            "{shards} shard(s): full results JSON must be byte-identical"
+        );
+        assert!(serial.report.gang.cross_server > 0);
+    }
+}
+
+#[test]
+fn locality_assignment_completes_with_home_server_affinity() {
+    // the topology-aware locality router (fabric home servers) must keep
+    // the multi-server sharded pipeline complete and deterministic
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, 64, SERVERS * GPUS, GANG_GPUS, 5);
+    let mk = || {
+        let mut c = gang_cfg();
+        c.coordinator.shards = 4;
+        c.coordinator.assign = ShardAssign::Locality;
+        run(c, &trace)
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.report.completed, 64);
+    assert_eq!(
+        a.report.trace_total_min.to_bits(),
+        b.report.trace_total_min.to_bits()
+    );
+    assert_eq!(a.events, b.events);
+}
+
+#[test]
+fn server_local_baseline_loses_to_gang_scheduling() {
+    // the gang_scale acceptance claim in unit form: same workload, gangs
+    // shrunk to one server at 2× wall time — the fabric-scheduled run must
+    // strictly beat it on makespan
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, TASKS, SERVERS * GPUS, GANG_GPUS, 42);
+    let local = server_localize(&trace, GPUS);
+    let gang = run(gang_cfg(), &trace);
+    let base = run(gang_cfg(), &local);
+    assert_eq!(base.report.completed, TASKS);
+    assert_eq!(base.report.gang.gangs, 0, "baseline has no gang-lane traffic");
+    assert!(
+        gang.report.trace_total_min < base.report.trace_total_min,
+        "gang {:.1} m must strictly beat server-local {:.1} m",
+        gang.report.trace_total_min,
+        base.report.trace_total_min
+    );
+}
