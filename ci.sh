@@ -88,6 +88,24 @@ if printf '%s\n' "$G" | grep -q '"cross_server": 0,'; then
 fi
 echo "gang smoke OK: byte-identical JSON, cross-server gangs, zero partial dispatches"
 
+step "placement smoke: fabric-aware singletons on/off --json at engine-threads {1,4}"
+PLACE_BASE=(run --servers 2 --gpus-per-server 4 --fabric-profile dual-island \
+    --estimator oracle --margin 2 --seed 7 --json)
+for MODE in on off; do
+    P1="$("$BIN" "${PLACE_BASE[@]}" --fabric-aware-singletons "$MODE")"
+    P4="$("$BIN" "${PLACE_BASE[@]}" --fabric-aware-singletons "$MODE" --engine-threads 4)"
+    if [ "$P1" != "$P4" ]; then
+        echo "DETERMINISM FAILURE: fabric-aware-singletons=$MODE diverged across engine threads" >&2
+        diff <(printf '%s\n' "$P1") <(printf '%s\n' "$P4") >&2 || true
+        exit 1
+    fi
+    if ! printf '%s\n' "$P1" | grep -q '"placement"'; then
+        echo "PLACEMENT FAILURE: results JSON lost the placement section (mode $MODE)" >&2
+        exit 1
+    fi
+done
+echo "placement smoke OK: byte-identical JSON across threads in both modes"
+
 step "bench smoke: 1-iteration bench binaries (bit-rot guard)"
 # write the smoke rows to a throwaway ledger — the repo-root BENCH_sim.json
 # accumulates real full-sweep measurements across PRs and must not be

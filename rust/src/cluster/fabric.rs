@@ -42,6 +42,18 @@ pub struct Fabric {
     gpu_island: Vec<usize>,
     /// Server owning each island.
     island_server: Vec<usize>,
+    /// Islands eligible for home-server affinity: the islands of power-
+    /// *alive* servers (a server whose idle floor already meets its
+    /// envelope can never host work, so cycling affinity onto it skews
+    /// every run after a power-down). Defaults to every island.
+    affinity_islands: Vec<usize>,
+    /// Distinct servers among `affinity_islands`.
+    alive_servers: usize,
+    /// Islands per server (indexed lookup — `server_islands` sits on the
+    /// per-decision placement path).
+    server_island_count: Vec<usize>,
+    /// GPUs per server (for [`Fabric::islands_matter`]).
+    server_gpu_count: Vec<usize>,
     n_servers: usize,
     /// Per-GB transfer cost (1/bandwidth) for each link class.
     cost_intra_island: f64,
@@ -59,10 +71,14 @@ impl Fabric {
         let mut gpu_server = Vec::with_capacity(topo.total_gpus());
         let mut gpu_island = Vec::with_capacity(topo.total_gpus());
         let mut island_server = Vec::new();
+        let mut server_island_count = Vec::with_capacity(topo.n_servers());
+        let mut server_gpu_count = Vec::with_capacity(topo.n_servers());
         for s in &topo.servers {
             let isl = cfg.island_gpus(s.cfg.n_gpus);
             let first_island = island_server.len();
             let n_islands = s.cfg.n_gpus.div_ceil(isl);
+            server_island_count.push(n_islands);
+            server_gpu_count.push(s.cfg.n_gpus);
             for _ in 0..n_islands {
                 island_server.push(s.id);
             }
@@ -79,6 +95,10 @@ impl Fabric {
         Fabric {
             gpu_server,
             gpu_island,
+            affinity_islands: (0..island_server.len()).collect(),
+            alive_servers: topo.n_servers(),
+            server_island_count,
+            server_gpu_count,
             island_server,
             n_servers: topo.n_servers(),
             cost_intra_island: intra,
@@ -100,6 +120,46 @@ impl Fabric {
 
     pub fn server_of(&self, gpu: usize) -> usize {
         self.gpu_server[gpu]
+    }
+
+    /// NVLink islands on one server (precomputed — this sits on the
+    /// per-decision placement path).
+    pub fn server_islands(&self, server: usize) -> usize {
+        self.server_island_count[server]
+    }
+
+    /// Can island structure influence a placement on this server at all?
+    /// Only when 1 < islands < GPUs: a single-island (nvlink) server's
+    /// island-aware decision is definitionally the island-blind one, and a
+    /// singleton-island (flat-pcie) server has no island that could host a
+    /// multi-GPU set. The placement core turns its fabric terms off
+    /// entirely when no admitted server passes this test, which is what
+    /// makes the `--fabric-aware-singletons` switch a STRUCTURAL no-op on
+    /// those substrates — NIC tie-breaks included (DESIGN.md §12).
+    pub fn islands_matter(&self, server: usize) -> bool {
+        let islands = self.server_island_count[server];
+        islands > 1 && islands < self.server_gpu_count[server]
+    }
+
+    /// Restrict home-server affinity to the power-alive servers
+    /// (`alive[s]` = server `s` can ever admit work under its envelope).
+    /// Affinity cycles the surviving islands; with fewer than two alive
+    /// servers no affinity remains and [`Fabric::home_server`] returns
+    /// `None` (the shard router falls back to hashing).
+    pub fn set_alive(&mut self, alive: &[bool]) {
+        debug_assert_eq!(alive.len(), self.n_servers);
+        self.affinity_islands = (0..self.island_server.len())
+            .filter(|&i| alive.get(self.island_server[i]).copied().unwrap_or(true))
+            .collect();
+        let mut seen = vec![false; self.n_servers];
+        self.alive_servers = 0;
+        for &i in &self.affinity_islands {
+            let s = self.island_server[i];
+            if !seen[s] {
+                seen[s] = true;
+                self.alive_servers += 1;
+            }
+        }
     }
 
     /// Link class connecting two GPUs.
@@ -126,10 +186,12 @@ impl Fabric {
         }
     }
 
-    /// Cost of a candidate gang placement: the ring-all-reduce
-    /// approximation — per-GB cost summed over consecutive pairs of the
-    /// id-sorted set (plus the wrap link). Lower = tighter placement.
-    pub fn gang_cost(&self, gpus: &[usize]) -> f64 {
+    /// Cost of ANY candidate GPU set — spanning gangs and server-local
+    /// singleton sets alike (the placement core's fabric term, DESIGN.md
+    /// §12): the ring-all-reduce approximation, per-GB cost summed over
+    /// consecutive pairs of the id-sorted set (plus the wrap link). Lower =
+    /// tighter placement; 0 for sets of fewer than two devices.
+    pub fn set_cost(&self, gpus: &[usize]) -> f64 {
         if gpus.len() < 2 {
             return 0.0;
         }
@@ -140,6 +202,20 @@ impl Fabric {
             cost += self.path_cost(w[0], w[1]);
         }
         cost + self.path_cost(sorted[0], sorted[sorted.len() - 1])
+    }
+
+    /// [`Fabric::set_cost`] under its historical gang-side name.
+    pub fn gang_cost(&self, gpus: &[usize]) -> f64 {
+        self.set_cost(gpus)
+    }
+
+    /// Distinct islands a GPU set touches (the singleton placement metric
+    /// beside `servers_spanned` for gangs).
+    pub fn islands_spanned(&self, gpus: &[usize]) -> usize {
+        let mut islands: Vec<usize> = gpus.iter().map(|&g| self.gpu_island[g]).collect();
+        islands.sort_unstable();
+        islands.dedup();
+        islands.len()
     }
 
     /// Distinct servers a GPU set touches.
@@ -159,13 +235,14 @@ impl Fabric {
     /// Home-server affinity for shard routing (DESIGN.md §11): arrivals
     /// cycle over fabric islands, islands belong to servers — so the
     /// `locality` strategy groups tasks by server topology rather than raw
-    /// id stickiness. `None` on a single-server cluster (no affinity: the
-    /// caller falls back to the sticky id-modulo rule).
+    /// id stickiness. Cycles only the islands of power-*alive* servers
+    /// ([`Fabric::set_alive`]); `None` when fewer than two alive servers
+    /// remain (no affinity: the caller falls back to hashed routing).
     pub fn home_server(&self, task: TaskId) -> Option<usize> {
-        if self.n_servers <= 1 {
+        if self.alive_servers <= 1 || self.affinity_islands.is_empty() {
             return None;
         }
-        Some(self.island_server[task % self.island_server.len()])
+        Some(self.island_server[self.affinity_islands[task % self.affinity_islands.len()]])
     }
 
     // -- link occupancy -----------------------------------------------------
@@ -279,6 +356,45 @@ mod tests {
         assert_eq!(f.home_server(4), Some(0));
         let single = fabric(FabricProfile::NvlinkIsland, 1, 4);
         assert_eq!(single.home_server(7), None, "no affinity on one server");
+    }
+
+    #[test]
+    fn set_cost_counts_island_crossings() {
+        // dual-island 1×4: pair inside island 0 rides NVLink; a split pair
+        // pays PCIe both ways — the singleton placement core ranks on this
+        let f = fabric(FabricProfile::DualIsland, 1, 4);
+        assert_eq!(f.server_islands(0), 2);
+        assert!(f.set_cost(&[0, 1]) < f.set_cost(&[1, 2]));
+        assert_eq!(f.set_cost(&[0, 1]), f.gang_cost(&[0, 1]), "gang_cost is the alias");
+        assert_eq!(f.islands_spanned(&[0, 1]), 1);
+        assert_eq!(f.islands_spanned(&[1, 2]), 2);
+        assert_eq!(f.islands_spanned(&[3]), 1);
+        let single = fabric(FabricProfile::NvlinkIsland, 2, 4);
+        assert_eq!(single.server_islands(0), 1);
+        assert_eq!(single.server_islands(1), 1);
+        // islands matter only strictly between 1 and the GPU count:
+        // dual-island yes; nvlink (1 island) and flat-pcie (all singleton
+        // islands) definitionally decide like the blind pipeline
+        assert!(f.islands_matter(0));
+        assert!(!single.islands_matter(0));
+        let flat = fabric(FabricProfile::FlatPcie, 1, 4);
+        assert_eq!(flat.server_islands(0), 4);
+        assert!(!flat.islands_matter(0));
+    }
+
+    #[test]
+    fn dead_servers_drop_out_of_affinity() {
+        // 3 servers, dual islands: 6 islands cycling servers 0,0,1,1,2,2.
+        // Server 1 powers down -> affinity cycles the 4 surviving islands.
+        let mut f = fabric(FabricProfile::DualIsland, 3, 4);
+        assert_eq!(f.home_server(2), Some(1));
+        f.set_alive(&[true, false, true]);
+        let homes: Vec<usize> = (0..4).map(|t| f.home_server(t).unwrap()).collect();
+        assert_eq!(homes, vec![0, 0, 2, 2]);
+        assert_eq!(f.home_server(4), Some(0), "cycle wraps over alive islands only");
+        // one alive server left: no affinity remains
+        f.set_alive(&[true, false, false]);
+        assert_eq!(f.home_server(0), None);
     }
 
     #[test]

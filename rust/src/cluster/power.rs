@@ -43,6 +43,19 @@ pub fn reserved_w(cfg: &PowerConfig, reserved_slots: usize) -> f64 {
     reserved_slots as f64 * (cfg.base_w - cfg.idle_w).max(0.0)
 }
 
+/// Whole power slots a headroom budget admits, capped at `max`. A
+/// non-positive per-slot draw means the envelope cannot bind — the cap
+/// alone limits. The one place the slot division lives: the gang planner's
+/// per-server contribution cap and the static gang ceiling both call it
+/// (DESIGN.md §12), so the two cannot drift.
+pub fn slots_in_headroom(headroom_w: f64, slot_w: f64, max: usize) -> usize {
+    if slot_w <= 0.0 {
+        max
+    } else {
+        (((headroom_w / slot_w).max(0.0).floor()) as usize).min(max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +104,16 @@ mod tests {
     fn active_but_low_util_above_idle() {
         let c = cfg();
         assert!(gpu_power_w(&c, 1, 0.0) > c.idle_w);
+    }
+
+    #[test]
+    fn headroom_slot_division() {
+        // 43 W slots (default): 100 W admits 2, capped by max, never negative
+        assert_eq!(slots_in_headroom(100.0, 43.0, 8), 2);
+        assert_eq!(slots_in_headroom(100.0, 43.0, 1), 1);
+        assert_eq!(slots_in_headroom(-10.0, 43.0, 8), 0);
+        // degenerate slot draw: the envelope cannot bind
+        assert_eq!(slots_in_headroom(5.0, 0.0, 8), 8);
     }
 
     #[test]

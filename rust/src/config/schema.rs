@@ -153,6 +153,11 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// How admission routes arriving tasks to shards.
     pub assign: ShardAssign,
+    /// Bounded work stealing (DESIGN.md §12): a mapper that idles a full
+    /// observation window beside a non-empty sibling queue steals at most
+    /// one task from the longest queue's tail. Off by default — sticky
+    /// routing is the seed behavior.
+    pub steal: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -160,6 +165,27 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             shards: 1,
             assign: ShardAssign::RoundRobin,
+            steal: false,
+        }
+    }
+}
+
+/// Placement-core configuration (TOML `[placement]`, DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementConfig {
+    /// Rank server-local multi-GPU singleton placements by island
+    /// boundaries and NVLink/PCIe ring cost, exactly like gangs
+    /// (`--fabric-aware-singletons`). The off switch byte-reproduces the
+    /// island-blind seed pipeline. On by default: single-island profiles
+    /// decide identically either way, so only genuinely multi-island
+    /// substrates (dual-island, custom `island_size`) change behavior.
+    pub fabric_aware_singletons: bool,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            fabric_aware_singletons: true,
         }
     }
 }
@@ -440,6 +466,7 @@ pub struct CarmaConfig {
     pub engine: EngineConfig,
     pub fabric: FabricConfig,
     pub gang: GangConfig,
+    pub placement: PlacementConfig,
     pub policy: PolicyKind,
     pub colloc: CollocationMode,
     pub estimator: EstimatorKind,
@@ -464,6 +491,7 @@ impl Default for CarmaConfig {
             engine: EngineConfig::default(),
             fabric: FabricConfig::default(),
             gang: GangConfig::default(),
+            placement: PlacementConfig::default(),
             policy: PolicyKind::Magm,
             colloc: CollocationMode::Mps,
             estimator: EstimatorKind::GpuMemNet,
@@ -596,6 +624,16 @@ impl CarmaConfig {
         if let Some(v) = doc.get("coordinator.assign").and_then(|v| v.as_str()) {
             self.coordinator.assign = ShardAssign::parse(v)
                 .ok_or_else(|| format!("unknown shard-assignment strategy '{v}'"))?;
+        }
+        if let Some(v) = doc.get("coordinator.steal") {
+            self.coordinator.steal = v
+                .as_bool()
+                .ok_or_else(|| format!("coordinator.steal must be a bool, got {v:?}"))?;
+        }
+        if let Some(v) = doc.get("placement.fabric_aware_singletons") {
+            self.placement.fabric_aware_singletons = v.as_bool().ok_or_else(|| {
+                format!("placement.fabric_aware_singletons must be a bool, got {v:?}")
+            })?;
         }
         if let Some(v) = doc.get("engine.threads").and_then(|v| v.as_i64()) {
             // range-checked centrally in validate(); only guard the
@@ -971,6 +1009,29 @@ mod tests {
         assert!(c.validate().is_ok());
         c.engine.threads = 65;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn placement_and_steal_sections_apply() {
+        // defaults: island-aware singletons on, stealing off
+        let c = CarmaConfig::default();
+        assert!(c.placement.fabric_aware_singletons);
+        assert!(!c.coordinator.steal);
+
+        let doc = toml::parse(
+            "[placement]\nfabric_aware_singletons = false\n[coordinator]\nsteal = true\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert!(!c.placement.fabric_aware_singletons);
+        assert!(c.coordinator.steal);
+
+        // non-bool values are config errors, not silent coercions
+        let doc = toml::parse("[placement]\nfabric_aware_singletons = 1\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[coordinator]\nsteal = \"yes\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
     }
 
     #[test]

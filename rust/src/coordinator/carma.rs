@@ -43,7 +43,8 @@ use crate::workload::trace::TraceSpec;
 
 use super::gang::{self, GangLane, GangPlan, ReservationBook};
 use super::monitor::Monitor;
-use super::policy::{self, GpuView, MappingRequest, Placement, Preconditions, ServerView};
+use super::placement;
+use super::policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 use super::shard::{Admission, MapPlan, Mapper, PlanOutcome};
 
 /// Seconds between memory-ramp stages (training warm-up allocations).
@@ -194,7 +195,20 @@ impl Carma {
             cluster.topo.admissible_ceilings(cfg.power.idle_w),
             gang_ceiling,
         );
-        let fabric = Fabric::new(&cluster.topo, &cfg.fabric);
+        let mut fabric = Fabric::new(&cluster.topo, &cfg.fabric);
+        // home-server affinity skips power-dead servers (a server whose
+        // idle floor meets its envelope can never admit work): after a
+        // "power-down" the locality router cycles the survivors only
+        let alive: Vec<bool> = cluster
+            .topo
+            .servers
+            .iter()
+            .map(|s| {
+                !s.power_cap_w
+                    .is_some_and(|cap| cfg.power.idle_w * s.cfg.n_gpus as f64 >= cap)
+            })
+            .collect();
+        fabric.set_alive(&alive);
         let book = ReservationBook::new(&cluster.topo);
         let tasks = trace
             .tasks
@@ -322,6 +336,7 @@ impl Carma {
             Event::RecoveryDetect(id) => self.on_recovery_detect(id),
             Event::GangRetry => self.on_gang_retry(),
             Event::GangHoldExpire(id, epoch) => self.on_gang_hold_expire(id, epoch),
+            Event::StealCheck(shard) => self.on_steal_check(shard),
         }
     }
 
@@ -351,6 +366,8 @@ impl Carma {
         let shard = self.admission.submit(id, &loads, home);
         self.recorder.on_assigned(id, shard);
         self.feed(shard);
+        // the new backlog may give an idle sibling something to steal
+        self.arm_steal_checks();
     }
 
     /// Per-shard load (queued + under observation) for least-loaded routing.
@@ -374,6 +391,10 @@ impl Carma {
             // observe the GPUs for one window before deciding (paper §4.1)
             self.engine
                 .schedule_in_on(lane(shard), self.cfg.monitor.window_s, Event::WindowDone(id));
+        } else {
+            // the shard just went idle with an empty queue: if a sibling
+            // has backlog, start the one-window starvation probe (§12)
+            self.arm_steal_checks();
         }
     }
 
@@ -400,6 +421,61 @@ impl Carma {
         if self.mappers[shard].ready() {
             self.attempt_map(shard);
         }
+    }
+
+    // -- bounded work stealing (DESIGN.md §12) -------------------------------
+
+    /// Arm a StealCheck one observation window out for every shard that is
+    /// idle with an empty queue while a sibling has stealable backlog. At
+    /// most one probe per shard is in flight; probes ride the shard's own
+    /// event lane, so stealing commits in `(time, seq)` order like every
+    /// other decision — determinism by construction.
+    fn arm_steal_checks(&mut self) {
+        if !self.cfg.coordinator.steal || self.mappers.len() < 2 {
+            return;
+        }
+        for shard in 0..self.mappers.len() {
+            if self.mappers[shard].selected.is_some()
+                || self.mappers[shard].steal_scheduled
+                || self.admission.queue_len(shard) > 0
+                || !self.admission.has_steal_victim(shard)
+            {
+                continue;
+            }
+            self.mappers[shard].steal_scheduled = true;
+            self.engine.schedule_in_on(
+                lane(shard),
+                self.cfg.monitor.window_s,
+                Event::StealCheck(shard),
+            );
+        }
+    }
+
+    /// The probe fired: if the shard is STILL idle-empty — it starved a
+    /// full observation window while work existed elsewhere — steal one
+    /// task from the longest sibling queue's tail and start observing it.
+    /// A shard that got work through the normal path meanwhile just lets
+    /// the probe lapse (re-armed on the next backlog growth).
+    fn on_steal_check(&mut self, shard: usize) {
+        self.mappers[shard].steal_scheduled = false;
+        if self.mappers[shard].selected.is_some() {
+            return;
+        }
+        if self.admission.queue_len(shard) > 0 {
+            self.feed(shard);
+            return;
+        }
+        let Some(victim) = self.admission.steal_victim(shard) else {
+            return;
+        };
+        let Some(id) = self.admission.steal_tail(victim, shard) else {
+            return;
+        };
+        self.recorder.on_stolen(id, shard);
+        self.mappers[shard].select(id);
+        self.tasks[id].state = RunState::Selected;
+        self.engine
+            .schedule_in_on(lane(shard), self.cfg.monitor.window_s, Event::WindowDone(id));
     }
 
     fn schedule_retry(&mut self, shard: usize) {
@@ -645,8 +721,9 @@ impl Carma {
             let pool = self.pool.as_ref().expect("pool checked above");
             let views_ref: &[ServerView] = &views;
             let jobs_ref = &jobs;
+            let fabric = self.placement_fabric();
             pool.map(jobs_ref.len(), &|i| {
-                compute_plan(views_ref, policy, pre, &jobs_ref[i], epoch, now_bits)
+                compute_plan(views_ref, policy, pre, fabric, &jobs_ref[i], epoch, now_bits)
             })
         };
         for (job, plan) in jobs.iter().zip(plans) {
@@ -683,6 +760,16 @@ impl Carma {
             smact_cap: self.cfg.smact_cap,
             min_free_gb: self.cfg.min_free_gb,
         }
+    }
+
+    /// The fabric handle the singleton placement core ranks with —
+    /// `None` under `--fabric-aware-singletons off`, which byte-reproduces
+    /// the island-blind seed pipeline (DESIGN.md §12).
+    fn placement_fabric(&self) -> Option<&Fabric> {
+        self.cfg
+            .placement
+            .fabric_aware_singletons
+            .then_some(&self.fabric)
     }
 
     /// Demand + placement-mode derivation for one task (paper §4.1/§5.4):
@@ -764,7 +851,15 @@ impl Carma {
             None => {
                 let job = self.plan_job(shard).expect("selected task plans");
                 let views = self.snapshot();
-                compute_plan(&views, self.cfg.policy, self.preconditions(), &job, epoch, now_bits)
+                compute_plan(
+                    &views,
+                    self.cfg.policy,
+                    self.preconditions(),
+                    self.placement_fabric(),
+                    &job,
+                    epoch,
+                    now_bits,
+                )
             }
         };
         match plan.outcome {
@@ -774,6 +869,15 @@ impl Carma {
                 self.mappers[shard].rr_cursor = cursor_out;
                 self.tasks[id].admitted_est_gb = plan.demand_gb;
                 self.tasks[id].pinned = plan.demoted;
+                // achieved interconnect cost of the singleton placement —
+                // recorded in BOTH island-blind and island-aware modes, so
+                // `repro placement_scale` can compare them head to head
+                self.recorder.on_singleton_dispatch(
+                    id,
+                    p.gpus.len(),
+                    self.fabric.set_cost(&p.gpus),
+                    self.fabric.islands_spanned(&p.gpus),
+                );
                 // clear BEFORE dispatch: a first-ramp OOM inside dispatch
                 // reaches kick_mappers, which must not re-enter this shard
                 // for the task it is mid-dispatching (clear emits no events,
@@ -1138,13 +1242,16 @@ impl Carma {
 }
 
 /// The pure mapping scan (runs on worker threads): preconditions + the
-/// O(GPUs) two-level policy selection over the shared snapshot. Everything
-/// here is a function of `(views, job)` only — no driver state — so the
-/// speculative and inline paths are the same code.
+/// O(GPUs) placement-core selection over the shared snapshot. Everything
+/// here is a function of `(views, fabric, job)` only — no mutable driver
+/// state — so the speculative and inline paths are the same code, and
+/// fabric-aware runs stay byte-identical at every thread count (the
+/// fabric's NIC occupancy only changes under `touch()`ed commits).
 fn compute_plan(
     views: &[ServerView],
     policy: PolicyKind,
     pre: Preconditions,
+    fabric: Option<&Fabric>,
     job: &PlanJob,
     epoch: u64,
     now_bits: u64,
@@ -1153,7 +1260,7 @@ fn compute_plan(
         Err(why) => PlanOutcome::Inadmissible(why),
         Ok(()) => {
             let mut cursor = job.cursor_in;
-            match policy::select_two_level(policy, views, job.req, pre, &mut cursor) {
+            match placement::select_singleton(policy, views, job.req, pre, &mut cursor, fabric) {
                 Some(p) => PlanOutcome::Place(p, cursor),
                 None => PlanOutcome::NoFit,
             }

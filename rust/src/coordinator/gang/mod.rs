@@ -26,16 +26,23 @@
 //! recorded in the run metrics. Per-server power envelopes are honored at
 //! *commit* time including reserved slots (`power::reserved_w`), so a
 //! gang dispatch can never overshoot the cap.
-
-use std::collections::BTreeMap;
+//!
+//! Since the placement-core extraction (DESIGN.md §12) the planner itself
+//! — eligibility, island packing, power-slot caps — lives in
+//! `coordinator::placement`, shared verbatim with the singleton mappers;
+//! this module keeps the gang-lifecycle state ([`ReservationBook`],
+//! [`GangLane`], the fail-fast ceiling) and re-exports [`plan_gang`].
 
 use crate::cluster::power;
 use crate::cluster::topology::ClusterTopology;
 use crate::config::schema::PowerConfig;
-use crate::coordinator::policy::{self, GpuView, MappingRequest, Preconditions, ServerView};
 use crate::sim::TaskId;
 
 pub use crate::cluster::Fabric;
+/// The gang planner itself lives in the shared placement core (DESIGN.md
+/// §12): one eligibility filter + candidate enumerator + power-slot cap
+/// for gangs AND singletons. Re-exported under its historical home.
+pub use crate::coordinator::placement::plan_gang;
 
 /// Per-GPU reservation ledger of pending gang holds. One gang is in the
 /// placing state at a time (the lane head), so holders never conflict —
@@ -85,11 +92,11 @@ impl ReservationBook {
     }
 
     /// Place a hold. The hold claims the whole device against newcomers
-    /// (`GpuView::held`), so no per-GPU demand needs tracking here —
-    /// `gang_eligible` re-validates the memory fit on held devices at
-    /// every attempt (an underestimating resident can outgrow what was
-    /// seen at acquisition). Panics on a double-hold — that is a scheduler
-    /// bug, not a recoverable condition.
+    /// (`GpuView::held`), so no per-GPU demand needs tracking here — the
+    /// placement core's eligibility filter (DESIGN.md §12) re-validates
+    /// the memory fit on held devices at every attempt (an underestimating
+    /// resident can outgrow what was seen at acquisition). Panics on a
+    /// double-hold — that is a scheduler bug, not a recoverable condition.
     pub fn hold(&mut self, gpu: usize, task: TaskId) {
         assert!(
             self.holder[gpu].is_none(),
@@ -176,99 +183,6 @@ pub enum GangPlan {
     Hold(Vec<usize>),
 }
 
-/// One placement attempt for the active gang: collect eligible GPUs under
-/// the same preconditions the singleton mappers use, cap each server's
-/// contribution by its power envelope (reserved slots included), and rank
-/// candidates by fabric cost — fewest servers, then fewest islands, then
-/// the quietest devices. Pure function of its inputs, so it is unit-
-/// testable without the simulator and trivially deterministic.
-pub fn plan_gang(
-    views: &[ServerView],
-    fabric: &Fabric,
-    book: &ReservationBook,
-    power_cfg: &PowerConfig,
-    req: MappingRequest,
-    pre: Preconditions,
-    task: TaskId,
-) -> GangPlan {
-    // per server: fabric-ranked eligible GPU ids, power-capped
-    let mut cands: Vec<(usize, Vec<usize>)> = Vec::new();
-    for s in views {
-        let own_slots = s
-            .gpus
-            .iter()
-            .filter(|v| book.holder(v.id) == Some(task))
-            .count();
-        let mut elig: Vec<&GpuView> = s
-            .gpus
-            .iter()
-            .filter(|v| gang_eligible(v, req, pre, book, task))
-            .collect();
-        if elig.is_empty() {
-            continue;
-        }
-        // islands with the most eligible devices first: a set that fills
-        // whole islands crosses the fewest links (fabric cost ranking)
-        let mut island_count: BTreeMap<usize, usize> = BTreeMap::new();
-        for v in &elig {
-            *island_count.entry(fabric.island_of(v.id)).or_insert(0) += 1;
-        }
-        elig.sort_by_key(|v| {
-            let island = fabric.island_of(v.id);
-            (
-                book.holder(v.id) != Some(task), // keep what we already hold
-                std::cmp::Reverse(island_count[&island]),
-                island,
-                v.n_tasks,
-                v.id,
-            )
-        });
-        // power envelope: adding k freshly-activated GPUs must keep the
-        // server under its cap; `s.power_w` already includes the reserve
-        // for our own holds, which the dispatch merely converts to real
-        // draw — so only slots beyond `own_slots` need headroom.
-        let k_max = match s.power_cap_w {
-            None => elig.len(),
-            Some(cap) => {
-                let slot_w = power::reserved_w(power_cfg, 1);
-                let extra = if slot_w <= 0.0 {
-                    elig.len()
-                } else {
-                    ((cap - s.power_w) / slot_w).max(0.0).floor() as usize
-                };
-                (own_slots + extra).min(elig.len())
-            }
-        };
-        elig.truncate(k_max);
-        if !elig.is_empty() {
-            cands.push((s.id, elig.iter().map(|v| v.id).collect()));
-        }
-    }
-
-    // fewest servers spanned: fill the best-stocked server first
-    cands.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
-    let available: usize = cands.iter().map(|(_, g)| g.len()).sum();
-    if available >= req.n_gpus {
-        let mut chosen = Vec::with_capacity(req.n_gpus);
-        'fill: for (_, gpus) in &cands {
-            for &g in gpus {
-                chosen.push(g);
-                if chosen.len() == req.n_gpus {
-                    break 'fill;
-                }
-            }
-        }
-        return GangPlan::Place(chosen);
-    }
-    // partial: claim everything eligible we do not hold yet
-    let new_holds: Vec<usize> = cands
-        .iter()
-        .flat_map(|(_, gpus)| gpus.iter().copied())
-        .filter(|&g| book.holder(g) != Some(task))
-        .collect();
-    GangPlan::Hold(new_holds)
-}
-
 /// Static best-case GPU capacity the gang scheduler can ever assemble: per
 /// server, zero if the server is MIG-partitioned (gangs target whole GPUs)
 /// or its idle draw already meets the power envelope, else its GPU count
@@ -294,53 +208,21 @@ pub fn gang_gpu_ceiling(
             let idle_floor = power_cfg.idle_w * s.cfg.n_gpus as f64;
             if idle_floor >= cap {
                 0
-            } else if slot_w <= 0.0 {
-                s.cfg.n_gpus
             } else {
-                (((cap - idle_floor) / slot_w).floor() as usize).min(s.cfg.n_gpus)
+                // same slot division as the planner's per-server cap
+                // (power::slots_in_headroom) — the static bound and the
+                // live bound cannot drift
+                power::slots_in_headroom(cap - idle_floor, slot_w, s.cfg.n_gpus)
             }
         })
         .sum()
-}
-
-/// Gang-worker eligibility. The gang's own holds block newcomers, but a
-/// resident that *underestimated* can still outgrow the capacity seen at
-/// acquisition (the same hazard that OOMs singletons, §4.2) — so a held
-/// device re-validates the demand fit and drops out of the dispatchable
-/// set while overfull, instead of committing the whole gang onto a
-/// known-doomed allocation; it stays held, and the fit recovers as the
-/// resident drains. An unheld device must be unpinned, non-MIG (gangs
-/// target whole GPUs), and pass the same preconditions + fit the singleton
-/// mappers apply — idle-only when the request is exclusive (recovery
-/// demotion).
-fn gang_eligible(
-    v: &GpuView,
-    req: MappingRequest,
-    pre: Preconditions,
-    book: &ReservationBook,
-    task: TaskId,
-) -> bool {
-    let fits = |v: &GpuView| {
-        req.demand_gb.is_none_or(|d| d <= v.free_gb + policy::FIT_SLACK_GB)
-    };
-    if book.holder(v.id) == Some(task) {
-        // preconditions were checked at acquisition; only the memory fit
-        // can regress underneath a hold (nothing new is admitted onto it)
-        return fits(v) && (!req.exclusive || v.n_tasks == 0);
-    }
-    if v.held || v.pinned || v.mig_enabled {
-        return false;
-    }
-    if req.exclusive {
-        return v.n_tasks == 0 && fits(v);
-    }
-    policy::passes(v, req, pre)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::schema::{ClusterConfig, FabricConfig, PowerConfig};
+    use crate::coordinator::policy::{GpuView, MappingRequest, Preconditions, ServerView};
 
     fn topo(servers: usize, gpus: usize) -> ClusterTopology {
         ClusterTopology::from_config(&ClusterConfig::homogeneous(servers, gpus, 40.0))

@@ -9,10 +9,16 @@
 //! global admission layer feeds N per-shard mapper workers whose
 //! observation windows overlap; `shards = 1` (the default) is the paper's
 //! serial pipeline, event-for-event.
+//!
+//! Every placement decision — singleton mappers and the gang lane alike —
+//! funnels through the fabric-aware placement core ([`placement`],
+//! DESIGN.md §12): one eligibility filter, one candidate enumerator, one
+//! cost model.
 
 pub mod carma;
 pub mod gang;
 pub mod monitor;
+pub mod placement;
 pub mod policy;
 pub mod queue;
 pub mod shard;
@@ -20,6 +26,7 @@ pub mod shard;
 pub use carma::{Carma, RunOutcome};
 pub use gang::{GangLane, GangPlan, ReservationBook};
 pub use monitor::Monitor;
+pub use placement::{CostModel, Requester, SetScore};
 pub use policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 pub use queue::TaskQueues;
 pub use shard::{Admission, Mapper};

@@ -1,0 +1,200 @@
+//! The pluggable cost model of the placement core (DESIGN.md §12).
+//!
+//! A candidate GPU set is scored on three lexicographic axes:
+//!
+//! 1. **fabric cost** — [`Fabric::set_cost`], the ring-all-reduce per-GB
+//!    transfer cost of the set: island boundaries and the NVLink/PCIe/NIC
+//!    bandwidth classes surface here. Absent (constant 0) in island-blind
+//!    mode, which is what byte-reproduces the seed ranking.
+//! 2. **policy term** — the per-GPU criterion of the configured policy
+//!    summed over the set in selection order: the OOM-risk term (MAGM
+//!    ranks by free memory, paper §4.3) or the utilization-cap term
+//!    (LUG/MUG rank by windowed SMACT).
+//! 3. **NIC occupancy** — the host server's uplink load, so among
+//!    placements equal on both axes above the quietest server wins:
+//!    landing beside a spanning gang's loaded NIC invites the contention
+//!    term of `interference::fabric_factor` onto future spanning work.
+//!
+//! Lexicographic rather than weighted: the fabric term only breaks into
+//! the decision when island structure actually differs between candidate
+//! sets, and a zeroed fabric + NIC term reduces the order to the seed's
+//! pure policy comparison — the two properties the `[placement]` off
+//! switch's byte-reproduction contract rests on.
+
+use crate::cluster::Fabric;
+use crate::config::schema::PolicyKind;
+use crate::coordinator::policy::{GpuView, ServerView};
+
+/// Scoring context: the policy supplies the risk/utilization term, the
+/// optional fabric supplies the interconnect terms. `fabric: None` is the
+/// island-blind (seed) model.
+pub struct CostModel<'a> {
+    pub policy: PolicyKind,
+    pub fabric: Option<&'a Fabric>,
+}
+
+/// One candidate set's score, compared lexicographically by
+/// [`SetScore::better_than`]. Full ties keep the earlier-enumerated
+/// candidate (servers ascending, the island-blind set before island
+/// sets), which pins determinism at every shard/thread count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SetScore {
+    pub fabric_cost: f64,
+    pub policy: f64,
+    pub nic_load: f64,
+}
+
+impl CostModel<'_> {
+    /// The per-GPU policy criterion (higher = better target).
+    pub fn gpu_term(&self, v: &GpuView) -> f64 {
+        match self.policy {
+            PolicyKind::Magm => v.free_gb,
+            PolicyKind::Lug => -v.smact_window,
+            PolicyKind::Mug => v.smact_window,
+            // cursor- and idleness-driven policies carry no criterion
+            PolicyKind::RoundRobin | PolicyKind::Exclusive => 0.0,
+        }
+    }
+
+    /// Score `set` (ids in selection order — the f64 sum order is part of
+    /// the bit-reproducibility contract) hosted on `server`.
+    pub fn score(&self, server: &ServerView, set: &[usize]) -> SetScore {
+        let policy: f64 = set
+            .iter()
+            .map(|&g| {
+                let v = server
+                    .gpus
+                    .iter()
+                    .find(|v| v.id == g)
+                    .expect("chosen gpu in view");
+                self.gpu_term(v)
+            })
+            .sum();
+        SetScore {
+            fabric_cost: self.fabric.map_or(0.0, |f| f.set_cost(set)),
+            policy,
+            nic_load: self.fabric.map_or(0.0, |f| f.nic_load(server.id)),
+        }
+    }
+}
+
+impl SetScore {
+    /// Strictly better: cheaper fabric, then stronger policy term, then a
+    /// quieter NIC. Equal scores return false — the first enumerated
+    /// candidate wins, exactly as the seed's strict `score > best` did.
+    pub fn better_than(&self, other: &SetScore) -> bool {
+        use std::cmp::Ordering;
+        match self.fabric_cost.total_cmp(&other.fabric_cost) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => match self.policy.total_cmp(&other.policy) {
+                Ordering::Greater => true,
+                Ordering::Less => false,
+                Ordering::Equal => self.nic_load < other.nic_load,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ClusterTopology;
+    use crate::config::schema::{ClusterConfig, FabricConfig, FabricProfile};
+
+    fn view(id: usize, server: usize, free: f64, smact: f64) -> GpuView {
+        GpuView {
+            id,
+            server,
+            free_gb: free,
+            smact_window: smact,
+            n_tasks: 1,
+            pinned: false,
+            held: false,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn server(id: usize, gpus: Vec<GpuView>) -> ServerView {
+        ServerView {
+            id,
+            power_w: 0.0,
+            power_cap_w: None,
+            gpus,
+        }
+    }
+
+    #[test]
+    fn blind_model_is_pure_policy_comparison() {
+        let s = server(0, vec![view(0, 0, 10.0, 0.2), view(1, 0, 30.0, 0.6)]);
+        let m = CostModel {
+            policy: PolicyKind::Magm,
+            fabric: None,
+        };
+        let a = m.score(&s, &[0]);
+        let b = m.score(&s, &[1]);
+        assert_eq!(a.fabric_cost, 0.0);
+        assert_eq!(a.nic_load, 0.0);
+        assert!(b.better_than(&a), "30 GB free beats 10");
+        assert!(!a.better_than(&b));
+        assert!(!a.better_than(&a), "ties are not better (first wins)");
+        let lug = CostModel {
+            policy: PolicyKind::Lug,
+            fabric: None,
+        };
+        assert!(lug.score(&s, &[0]).better_than(&lug.score(&s, &[1])));
+    }
+
+    #[test]
+    fn fabric_term_dominates_policy_term() {
+        // dual-island 1×4: islands {0,1} and {2,3}. The split pair has more
+        // free memory but crosses PCIe — the island pair must win.
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        let fabric = Fabric::new(
+            &topo,
+            &FabricConfig {
+                profile: FabricProfile::DualIsland,
+                ..FabricConfig::default()
+            },
+        );
+        let s = server(
+            0,
+            vec![
+                view(0, 0, 20.0, 0.1),
+                view(1, 0, 20.0, 0.1),
+                view(2, 0, 39.0, 0.1),
+                view(3, 0, 5.0, 0.1),
+            ],
+        );
+        let m = CostModel {
+            policy: PolicyKind::Magm,
+            fabric: Some(&fabric),
+        };
+        let island_pair = m.score(&s, &[0, 1]);
+        let split_pair = m.score(&s, &[2, 1]);
+        assert!(island_pair.fabric_cost < split_pair.fabric_cost);
+        assert!(split_pair.policy > island_pair.policy);
+        assert!(island_pair.better_than(&split_pair), "fabric axis ranks first");
+    }
+
+    #[test]
+    fn nic_occupancy_breaks_full_ties() {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(2, 2, 40.0));
+        let mut fabric = Fabric::new(&topo, &FabricConfig::default());
+        fabric.occupy_links(&[0, 2], 0.5); // both servers' NICs loaded…
+        fabric.release_links(&[2], 0.5); // …then server 1's released
+        let s0 = server(0, vec![view(0, 0, 10.0, 0.2), view(1, 0, 10.0, 0.2)]);
+        let s1 = server(1, vec![view(2, 1, 10.0, 0.2), view(3, 1, 10.0, 0.2)]);
+        let m = CostModel {
+            policy: PolicyKind::Magm,
+            fabric: Some(&fabric),
+        };
+        let on_loaded = m.score(&s0, &[0, 1]);
+        let on_quiet = m.score(&s1, &[2, 3]);
+        assert_eq!(on_loaded.fabric_cost, on_quiet.fabric_cost);
+        assert_eq!(on_loaded.policy, on_quiet.policy);
+        assert!(on_quiet.better_than(&on_loaded), "quiet NIC wins the tie");
+    }
+}

@@ -1,0 +1,194 @@
+//! The single eligibility filter of the placement core (DESIGN.md §12).
+//!
+//! Every placement path — the per-shard singleton mappers and the gang
+//! lane alike — answers "can this GPU host this request right now?" here.
+//! Before the extraction the answer lived in three places
+//! (`policy::passes`, the inline idle filter of `policy::exclusive`, and
+//! `gang::gang_eligible`) that had already drifted into duplicated
+//! MIG/pinned/held/fit checks; a fourth copy was inevitable. One
+//! predicate, one truth: the checks keep their exact seed semantics, so
+//! the island-blind pipeline stays byte-reproducible.
+
+use crate::coordinator::gang::ReservationBook;
+use crate::coordinator::policy::{GpuView, MappingRequest, Preconditions};
+use crate::sim::TaskId;
+
+/// Allocator-granularity slack for demand-vs-free comparisons: free memory
+/// is reported in whole MiB, so a demand derived from the exact configured
+/// capacity (e.g. the force-exclusive clamp to `mem_gb`) can sit up to one
+/// MiB above the reported value — without slack such a task never fits
+/// anywhere and the serial mapper livelocks.
+pub const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
+
+/// Who is asking. Singletons and gangs share every check; the two real
+/// differences — a gang may keep targeting its OWN holds (fit-only
+/// revalidation), and gangs never target MIG-partitioned devices — are
+/// carried here instead of being forked into parallel pipelines.
+#[derive(Clone, Copy)]
+pub enum Requester<'a> {
+    /// A shard mapper placing a server-local task.
+    Singleton,
+    /// The gang lane planning `task`, consulting the reservation book.
+    Gang {
+        book: &'a ReservationBook,
+        task: TaskId,
+    },
+}
+
+/// Can `v` host one worker of this request right now?
+///
+/// * A device the gang requester already holds re-validates only the
+///   memory fit (preconditions were checked at acquisition and nothing new
+///   is admitted onto a hold) — an underestimating resident can outgrow
+///   what was seen, and committing the gang onto it would be a known-
+///   doomed dispatch (§4.2); idle-only additionally under exclusive
+///   (recovery demotion).
+/// * A pinned or (foreign-)held device is never a target — the hold owns
+///   the whole device even under MIG, whose instances share the device
+///   allocator in the simulation.
+/// * MIG needs a free instance whose memory fits the (known) demand;
+///   instances dispatch exclusively (paper §4.4), so the preconditions do
+///   not apply. Gangs target whole GPUs only (DESIGN.md §11).
+/// * Exclusive requests need an idle device big enough for a known demand
+///   — on heterogeneous clusters an idle small GPU is not a valid
+///   exclusive target for a large task.
+/// * Everything else passes the paper's preconditions (SMACT cap, minimum
+///   free memory, §4.3) plus the demand fit.
+pub fn eligible(v: &GpuView, req: MappingRequest, pre: Preconditions, who: Requester) -> bool {
+    let fits = req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB);
+    if let Requester::Gang { book, task } = who {
+        if book.holder(v.id) == Some(task) {
+            return fits && (!req.exclusive || v.n_tasks == 0);
+        }
+        if v.mig_enabled {
+            return false;
+        }
+    }
+    if v.pinned || v.held {
+        return false;
+    }
+    if v.mig_enabled {
+        if v.mig_free_instance.is_none() {
+            return false;
+        }
+        return req
+            .demand_gb
+            .is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB);
+    }
+    if req.exclusive {
+        return v.n_tasks == 0 && fits;
+    }
+    if let Some(cap) = pre.smact_cap {
+        if v.smact_window > cap {
+            return false;
+        }
+    }
+    if let Some(min_free) = pre.min_free_gb {
+        if v.free_gb < min_free {
+            return false;
+        }
+    }
+    fits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, free: f64, smact: f64, n: usize) -> GpuView {
+        GpuView {
+            id,
+            server: 0,
+            free_gb: free,
+            smact_window: smact,
+            n_tasks: n,
+            pinned: false,
+            held: false,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn req(n: usize, demand: Option<f64>, exclusive: bool) -> MappingRequest {
+        MappingRequest {
+            n_gpus: n,
+            demand_gb: demand,
+            exclusive,
+        }
+    }
+
+    #[test]
+    fn preconditions_and_fit_for_singletons() {
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: Some(5.0),
+        };
+        let ok = view(0, 10.0, 0.5, 1);
+        assert!(eligible(&ok, req(1, Some(8.0), false), pre, Requester::Singleton));
+        let hot = view(1, 10.0, 0.9, 1);
+        assert!(!eligible(&hot, req(1, None, false), pre, Requester::Singleton));
+        let tight = view(2, 3.0, 0.1, 1);
+        assert!(!eligible(&tight, req(1, None, false), pre, Requester::Singleton));
+        let small = view(3, 6.0, 0.1, 1);
+        assert!(!eligible(&small, req(1, Some(8.0), false), Preconditions::default(), Requester::Singleton));
+    }
+
+    #[test]
+    fn exclusive_needs_idle_and_capacity() {
+        let idle = view(0, 40.0, 0.0, 0);
+        let busy = view(1, 40.0, 0.3, 1);
+        assert!(eligible(&idle, req(1, Some(10.0), true), Preconditions::default(), Requester::Singleton));
+        assert!(!eligible(&busy, req(1, None, true), Preconditions::default(), Requester::Singleton));
+        let small_idle = view(2, 8.0, 0.0, 0);
+        assert!(!eligible(&small_idle, req(1, Some(20.0), true), Preconditions::default(), Requester::Singleton));
+    }
+
+    #[test]
+    fn pinned_held_and_mig_rules() {
+        let mut pinned = view(0, 40.0, 0.0, 1);
+        pinned.pinned = true;
+        assert!(!eligible(&pinned, req(1, None, false), Preconditions::default(), Requester::Singleton));
+        let mut held = view(1, 40.0, 0.0, 0);
+        held.held = true;
+        assert!(!eligible(&held, req(1, None, true), Preconditions::default(), Requester::Singleton));
+        let mut mig = view(2, 40.0, 0.1, 1);
+        mig.mig_enabled = true;
+        mig.mig_free_instance = Some(1);
+        mig.mig_instance_mem_gb = 10.0;
+        assert!(eligible(&mig, req(1, Some(8.0), false), Preconditions::default(), Requester::Singleton));
+        assert!(!eligible(&mig, req(1, Some(12.0), false), Preconditions::default(), Requester::Singleton));
+        mig.mig_free_instance = None;
+        assert!(!eligible(&mig, req(1, None, false), Preconditions::default(), Requester::Singleton));
+    }
+
+    #[test]
+    fn gang_holds_revalidate_fit_only() {
+        use crate::cluster::topology::ClusterTopology;
+        use crate::config::schema::ClusterConfig;
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        let mut book = ReservationBook::new(&topo);
+        book.hold(0, 7);
+        let who = Requester::Gang { book: &book, task: 7 };
+        // own hold: the precondition-violating SMACT no longer matters…
+        let mut own = view(0, 10.0, 0.99, 1);
+        own.held = true;
+        let pre = Preconditions { smact_cap: Some(0.5), min_free_gb: None };
+        assert!(eligible(&own, req(4, Some(8.0), false), pre, who));
+        // …but a regressed memory fit drops it out of the dispatchable set
+        assert!(!eligible(&own, req(4, Some(12.0), false), pre, who));
+        // exclusive gangs additionally need the hold idle
+        assert!(!eligible(&own, req(4, Some(8.0), true), pre, who));
+        // a foreign hold or MIG device is never a gang target
+        let mut foreign = view(1, 40.0, 0.0, 0);
+        foreign.held = true;
+        assert!(!eligible(&foreign, req(4, None, false), pre, who));
+        let mut mig = view(2, 40.0, 0.0, 0);
+        mig.mig_enabled = true;
+        mig.mig_free_instance = Some(0);
+        mig.mig_instance_mem_gb = 20.0;
+        assert!(!eligible(&mig, req(4, None, false), pre, who));
+        assert!(eligible(&mig, req(4, None, false), pre, Requester::Singleton), "singletons may");
+    }
+}
+

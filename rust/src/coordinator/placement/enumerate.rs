@@ -1,0 +1,308 @@
+//! Deterministic candidate enumeration of the placement core (DESIGN.md
+//! §12): which GPU sets are even on the table for a request, in which
+//! order. Everything here is a pure function of the monitor snapshot, so
+//! candidates are identical on every shard and at every engine thread
+//! count — the cost model then ranks them, and full ties resolve to the
+//! earliest enumerated set.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{power, Fabric};
+use crate::config::schema::{PolicyKind, PowerConfig};
+use crate::coordinator::policy::{GpuView, MappingRequest, Preconditions, ServerView};
+
+use super::eligibility::{self, Requester};
+
+/// One server's eligible devices, in view (= ascending id) order.
+pub fn eligible_views<'a>(
+    s: &'a ServerView,
+    req: MappingRequest,
+    pre: Preconditions,
+    who: Requester,
+) -> Vec<&'a GpuView> {
+    s.gpus
+        .iter()
+        .filter(|v| eligibility::eligible(v, req, pre, who))
+        .collect()
+}
+
+/// The seed policy ordering (most-free / least-utilized / most-utilized
+/// first, ids break ties) — the island-blind ranking every candidate
+/// inherits within itself. Cursor- and idleness-driven policies keep view
+/// order.
+pub fn policy_order(elig: &mut [&GpuView], policy: PolicyKind) {
+    match policy {
+        PolicyKind::Magm => {
+            elig.sort_by(|a, b| b.free_gb.total_cmp(&a.free_gb).then(a.id.cmp(&b.id)))
+        }
+        PolicyKind::Lug => elig.sort_by(|a, b| {
+            a.smact_window
+                .total_cmp(&b.smact_window)
+                .then(a.id.cmp(&b.id))
+        }),
+        PolicyKind::Mug => elig.sort_by(|a, b| {
+            b.smact_window
+                .total_cmp(&a.smact_window)
+                .then(a.id.cmp(&b.id))
+        }),
+        PolicyKind::RoundRobin | PolicyKind::Exclusive => {}
+    }
+}
+
+/// Eligible-device histogram per island.
+fn island_histogram(elig: &[&GpuView], fabric: &Fabric) -> BTreeMap<usize, usize> {
+    let mut h = BTreeMap::new();
+    for v in elig {
+        *h.entry(fabric.island_of(v.id)).or_insert(0usize) += 1;
+    }
+    h
+}
+
+/// Island-packing order, shared verbatim between the gang planner and the
+/// island-aware singleton paths: devices the requester already holds
+/// first (keep what we have), then islands with the most eligible devices
+/// (a set that fills whole islands crosses the fewest links), then island
+/// id, then the quietest devices, then id.
+pub fn island_packed_order(elig: &mut [&GpuView], fabric: &Fabric, held_by_us: &dyn Fn(usize) -> bool) {
+    let count = island_histogram(elig, fabric);
+    elig.sort_by_key(|v| {
+        let island = fabric.island_of(v.id);
+        (
+            !held_by_us(v.id),
+            std::cmp::Reverse(count[&island]),
+            island,
+            v.n_tasks,
+            v.id,
+        )
+    });
+}
+
+/// Candidate GPU sets of one server for a sortable-policy request,
+/// enumeration order = preference order on full ties. Island-blind mode
+/// (`fabric: None`) emits exactly the seed candidate — the policy-ordered
+/// top-n. Island-aware mode appends one candidate per island that can
+/// host the whole request (the policy-ordered top-n *within* that island,
+/// islands ascending), so the cost model can trade a split set for an
+/// island-local one; sets identical to the seed candidate are skipped, so
+/// single-island servers enumerate exactly one candidate and bit-
+/// reproduce the blind decision.
+pub fn server_candidates(
+    s: &ServerView,
+    req: MappingRequest,
+    pre: Preconditions,
+    policy: PolicyKind,
+    fabric: Option<&Fabric>,
+    who: Requester,
+) -> Vec<Vec<usize>> {
+    let mut elig = eligible_views(s, req, pre, who);
+    if elig.len() < req.n_gpus {
+        return Vec::new();
+    }
+    policy_order(&mut elig, policy);
+    let blind: Vec<usize> = elig[..req.n_gpus].iter().map(|v| v.id).collect();
+    let mut cands = vec![blind];
+    if let Some(f) = fabric {
+        if req.n_gpus >= 2 && f.islands_matter(s.id) {
+            for (&island, &n) in island_histogram(&elig, f).iter() {
+                if n < req.n_gpus {
+                    continue;
+                }
+                let set: Vec<usize> = elig
+                    .iter()
+                    .filter(|v| f.island_of(v.id) == island)
+                    .take(req.n_gpus)
+                    .map(|v| v.id)
+                    .collect();
+                if !cands.contains(&set) {
+                    cands.push(set);
+                }
+            }
+        }
+    }
+    cands
+}
+
+/// Power-envelope cap on a server's contribution to a gang: adding k
+/// freshly-activated GPUs must keep the server under its cap. `s.power_w`
+/// already includes the reserve for the requester's own holds, which a
+/// dispatch merely converts to real draw — so only slots beyond
+/// `own_slots` need headroom (DESIGN.md §11).
+pub fn power_slot_cap(
+    s: &ServerView,
+    own_slots: usize,
+    power_cfg: &PowerConfig,
+    elig: usize,
+) -> usize {
+    match s.power_cap_w {
+        None => elig,
+        Some(cap) => {
+            let slot_w = power::reserved_w(power_cfg, 1);
+            let extra = power::slots_in_headroom(cap - s.power_w, slot_w, elig);
+            (own_slots + extra).min(elig)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ClusterTopology;
+    use crate::config::schema::{ClusterConfig, FabricConfig, FabricProfile};
+
+    fn view(id: usize, free: f64, smact: f64, n: usize) -> GpuView {
+        GpuView {
+            id,
+            server: 0,
+            free_gb: free,
+            smact_window: smact,
+            n_tasks: n,
+            pinned: false,
+            held: false,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn server(gpus: Vec<GpuView>) -> ServerView {
+        ServerView {
+            id: 0,
+            power_w: 0.0,
+            power_cap_w: None,
+            gpus,
+        }
+    }
+
+    fn req(n: usize, demand: Option<f64>) -> MappingRequest {
+        MappingRequest {
+            n_gpus: n,
+            demand_gb: demand,
+            exclusive: false,
+        }
+    }
+
+    fn dual_island() -> Fabric {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        Fabric::new(
+            &topo,
+            &FabricConfig {
+                profile: FabricProfile::DualIsland,
+                ..FabricConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn blind_mode_emits_exactly_the_seed_candidate() {
+        let s = server(vec![
+            view(0, 8.0, 0.1, 1),
+            view(1, 30.0, 0.1, 1),
+            view(2, 16.0, 0.1, 1),
+            view(3, 25.0, 0.1, 1),
+        ]);
+        let c = server_candidates(
+            &s,
+            req(2, Some(5.0)),
+            Preconditions::default(),
+            PolicyKind::Magm,
+            None,
+            Requester::Singleton,
+        );
+        assert_eq!(c, vec![vec![1, 3]], "policy-ordered top-2, nothing else");
+        // too few eligible -> no candidates at all
+        let c = server_candidates(
+            &s,
+            req(5, None),
+            Preconditions::default(),
+            PolicyKind::Magm,
+            None,
+            Requester::Singleton,
+        );
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn island_mode_appends_island_local_sets() {
+        let f = dual_island(); // islands {0,1} and {2,3}
+        let s = server(vec![
+            view(0, 20.0, 0.1, 1),
+            view(1, 22.0, 0.1, 1),
+            view(2, 39.0, 0.1, 1),
+            view(3, 5.0, 0.1, 1),
+        ]);
+        let c = server_candidates(
+            &s,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            PolicyKind::Magm,
+            Some(&f),
+            Requester::Singleton,
+        );
+        // blind top-2 = {2, 1} (39 + 22); island 0 = {1, 0}; island 1 = {2, 3}
+        assert_eq!(c, vec![vec![2, 1], vec![1, 0], vec![2, 3]]);
+        // an island too small to host the pair contributes nothing
+        let s = server(vec![view(0, 20.0, 0.1, 1), view(2, 39.0, 0.1, 1), view(3, 5.0, 0.1, 1)]);
+        let c = server_candidates(
+            &s,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            PolicyKind::Magm,
+            Some(&f),
+            Requester::Singleton,
+        );
+        assert_eq!(c, vec![vec![2, 0], vec![2, 3]], "island 0 has one device only");
+    }
+
+    #[test]
+    fn island_candidates_dedupe_against_blind() {
+        // single-island server: the island set IS the blind set — exactly
+        // one candidate may remain or the off-switch contract breaks
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        let f = Fabric::new(&topo, &FabricConfig::default());
+        let s = server(vec![view(0, 8.0, 0.1, 1), view(1, 30.0, 0.1, 1)]);
+        let c = server_candidates(
+            &s,
+            req(2, None),
+            Preconditions::default(),
+            PolicyKind::Magm,
+            Some(&f),
+            Requester::Singleton,
+        );
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn packing_order_matches_the_gang_ranking() {
+        let f = dual_island();
+        let views = [
+            view(0, 40.0, 0.1, 2),
+            view(1, 40.0, 0.1, 0),
+            view(2, 40.0, 0.1, 1),
+            view(3, 40.0, 0.1, 0),
+        ];
+        let mut elig: Vec<&GpuView> = views.iter().collect();
+        // no holds: fullest-island tie -> island id -> quietest -> id
+        island_packed_order(&mut elig, &f, &|_| false);
+        let order: Vec<usize> = elig.iter().map(|v| v.id).collect();
+        assert_eq!(order, vec![1, 0, 3, 2]);
+        // holding gpu 2 pulls it to the front regardless of island order
+        let mut elig: Vec<&GpuView> = views.iter().collect();
+        island_packed_order(&mut elig, &f, &|g| g == 2);
+        let order: Vec<usize> = elig.iter().map(|v| v.id).collect();
+        assert_eq!(order, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn power_slot_cap_counts_own_holds_as_free() {
+        let pw = PowerConfig::default(); // slot = 43 W
+        let mut s = server(vec![view(0, 40.0, 0.0, 0); 4]);
+        assert_eq!(power_slot_cap(&s, 0, &pw, 4), 4, "no cap -> all eligible");
+        s.power_cap_w = Some(300.0);
+        s.power_w = 250.0; // 50 W headroom -> 1 fresh slot
+        assert_eq!(power_slot_cap(&s, 0, &pw, 4), 1);
+        // two own holds already reserved in power_w: they ride along free
+        assert_eq!(power_slot_cap(&s, 2, &pw, 4), 3);
+        s.power_w = 320.0; // over the cap: only own holds remain
+        assert_eq!(power_slot_cap(&s, 2, &pw, 4), 2);
+    }
+}

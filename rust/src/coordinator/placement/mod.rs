@@ -1,0 +1,612 @@
+//! The fabric-aware placement core (DESIGN.md §12): ONE pipeline —
+//! eligibility → enumerate → cost → commit — behind every placement
+//! decision in the coordinator.
+//!
+//! Before this subsystem existed the coordinator ran two divergent
+//! pipelines: `policy::select_two_level` placed server-local (singleton)
+//! tasks island-blind, while `gang::plan_gang` ranked gang candidates by
+//! fabric cost — duplicating the precondition checks, the power-slot math
+//! and the candidate ranking between them. Both are now thin callers of
+//! this module:
+//!
+//! * [`eligibility`] — the single per-GPU filter (MIG instances, pinned
+//!   residents, gang holds, power-implied idleness, SMACT/memory
+//!   preconditions, demand fit) shared by singletons and gangs;
+//! * [`enumerate`] — the deterministic candidate enumerator: per-server
+//!   policy-ordered sets, island-local alternatives on multi-island
+//!   servers, the gang island-packing order, per-server power-slot caps;
+//! * [`cost`] — the pluggable [`CostModel`]: OOM-risk / utilization
+//!   policy term + fabric ring cost + NIC occupancy, compared
+//!   lexicographically.
+//!
+//! **Byte-reproduction contract.** With `fabric: None` (the
+//! `--fabric-aware-singletons off` switch) every function here reproduces
+//! the seed pipeline bit-for-bit: the enumerator emits exactly the seed
+//! candidate, the cost model's fabric and NIC terms are constant zero, and
+//! the comparison degenerates to the seed's strict policy ordering. With
+//! `fabric: Some(_)` the contract is structural: [`select_singleton`]
+//! drops the handle for any decision where no admitted server has
+//! `Fabric::islands_matter` (1 < islands < GPUs) — so single-island
+//! (nvlink) and singleton-island (flat-pcie) substrates decide identically
+//! either way, NIC tie-breaks included, and only genuinely multi-island
+//! substrates (dual-island, custom `island_size`) can diverge.
+//!
+//! **Determinism.** Everything is a pure function of the monitor snapshot
+//! (no clocks, no RNG, no maps with nondeterministic iteration); f64
+//! comparisons use `total_cmp` and sums run in enumeration order, so the
+//! speculative (worker-thread) and inline paths of DESIGN.md §10 compute
+//! identical plans at every shard and thread count.
+
+pub mod cost;
+pub mod eligibility;
+pub mod enumerate;
+
+pub use cost::{CostModel, SetScore};
+pub use eligibility::Requester;
+
+use crate::cluster::Fabric;
+use crate::config::schema::{PolicyKind, PowerConfig};
+use crate::coordinator::gang::{GangPlan, ReservationBook};
+use crate::coordinator::policy::{
+    GpuView, MappingRequest, Placement, Preconditions, ServerView,
+};
+use crate::sim::TaskId;
+
+/// Flat (single device pool) selection — the per-server scan the
+/// two-level mapping builds on, and the public seed API of
+/// `policy::select_gpus`. `rr_cursor` carries Round-Robin state across
+/// calls. Returns None when no eligible set exists right now.
+pub fn select_flat(
+    policy: PolicyKind,
+    views: &[GpuView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+) -> Option<Placement> {
+    if req.exclusive || policy == PolicyKind::Exclusive {
+        return exclusive_flat(views, req, pre);
+    }
+
+    let mut eligible: Vec<&GpuView> = views
+        .iter()
+        .filter(|v| eligibility::eligible(v, req, pre, Requester::Singleton))
+        .collect();
+    if eligible.len() < req.n_gpus {
+        return None;
+    }
+
+    if policy == PolicyKind::RoundRobin {
+        // cyclic order over the ids actually present, starting at the
+        // cursor — ids need not be contiguous or 0-based (per-server
+        // slices carry global ids)
+        let mut ids: Vec<usize> = views.iter().map(|v| v.id).collect();
+        ids.sort_unstable();
+        let start = ids.iter().position(|&id| id >= *rr_cursor).unwrap_or(0);
+        let mut chosen = Vec::new();
+        for off in 0..ids.len() {
+            let id = ids[(start + off) % ids.len()];
+            if eligible.iter().any(|v| v.id == id) {
+                chosen.push(id);
+                if chosen.len() == req.n_gpus {
+                    *rr_cursor = id + 1;
+                    break;
+                }
+            }
+        }
+        if chosen.len() < req.n_gpus {
+            return None;
+        }
+        return Some(placement(views, chosen));
+    }
+
+    enumerate::policy_order(&mut eligible, policy);
+    Some(placement(
+        views,
+        eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+    ))
+}
+
+/// Two-level cluster selection for server-local (singleton) tasks: filter
+/// servers (power envelope, capacity), enumerate candidate GPU sets per
+/// surviving server, rank them with the [`CostModel`], commit the best.
+/// `fabric: None` is the island-blind seed decision; `fabric: Some(_)`
+/// additionally ranks by island boundaries and NVLink/PCIe cost exactly
+/// like the gang planner does. Multi-GPU requests never span servers.
+pub fn select_singleton(
+    policy: PolicyKind,
+    servers: &[ServerView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+    fabric: Option<&Fabric>,
+) -> Option<Placement> {
+    let admitted: Vec<&ServerView> = servers.iter().filter(|s| s.admits(req)).collect();
+    if admitted.is_empty() {
+        return None;
+    }
+
+    // island-aware ranking only where island structure can matter at all:
+    // a cluster of single-island (nvlink) and singleton-island (flat-pcie)
+    // servers decides identically to the blind pipeline BY CONSTRUCTION —
+    // including the NIC tie-break, which must not leak divergence into
+    // substrates the off-switch contract promises unchanged (§12)
+    let fabric = fabric.filter(|f| admitted.iter().any(|s| f.islands_matter(s.id)));
+
+    if req.exclusive || policy == PolicyKind::Exclusive {
+        // lowest-id admitted server with enough idle targets
+        let excl = MappingRequest {
+            exclusive: true,
+            ..req
+        };
+        return admitted
+            .iter()
+            .find_map(|s| exclusive_on_server(s, excl, pre, fabric));
+    }
+
+    if policy == PolicyKind::RoundRobin {
+        return select_round_robin(&admitted, req, pre, rr_cursor, fabric);
+    }
+
+    // sortable policies (MAGM / LUG / MUG): enumerate candidates per
+    // admitted server, score each, keep the strictly best — ties go to
+    // the earliest enumerated (servers ascending, blind set first)
+    let model = CostModel { policy, fabric };
+    let mut best: Option<(SetScore, Placement)> = None;
+    for s in &admitted {
+        for cand in
+            enumerate::server_candidates(s, req, pre, policy, fabric, Requester::Singleton)
+        {
+            let score = model.score(s, &cand);
+            if best.as_ref().is_none_or(|(b, _)| score.better_than(b)) {
+                best = Some((score, placement(&s.gpus, cand)));
+            }
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// One all-or-nothing placement attempt for a gang (DESIGN.md §11),
+/// running entirely on the shared core: collect eligible GPUs under the
+/// same filter the singleton mappers use, cap each server's contribution
+/// by its power envelope (reserved slots included), rank candidates in
+/// island-packing order — fewest servers, then fullest islands, then the
+/// quietest devices — and either place the full worker set or propose new
+/// holds on everything eligible. Pure function of its inputs.
+pub fn plan_gang(
+    views: &[ServerView],
+    fabric: &Fabric,
+    book: &ReservationBook,
+    power_cfg: &PowerConfig,
+    req: MappingRequest,
+    pre: Preconditions,
+    task: TaskId,
+) -> GangPlan {
+    let who = Requester::Gang { book, task };
+    // per server: fabric-ranked eligible GPU ids, power-capped
+    let mut cands: Vec<(usize, Vec<usize>)> = Vec::new();
+    for s in views {
+        let own_slots = s
+            .gpus
+            .iter()
+            .filter(|v| book.holder(v.id) == Some(task))
+            .count();
+        let mut elig = enumerate::eligible_views(s, req, pre, who);
+        if elig.is_empty() {
+            continue;
+        }
+        enumerate::island_packed_order(&mut elig, fabric, &|g| book.holder(g) == Some(task));
+        let k_max = enumerate::power_slot_cap(s, own_slots, power_cfg, elig.len());
+        elig.truncate(k_max);
+        if !elig.is_empty() {
+            cands.push((s.id, elig.iter().map(|v| v.id).collect()));
+        }
+    }
+
+    // fewest servers spanned: fill the best-stocked server first
+    cands.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+    let available: usize = cands.iter().map(|(_, g)| g.len()).sum();
+    if available >= req.n_gpus {
+        let mut chosen = Vec::with_capacity(req.n_gpus);
+        'fill: for (_, gpus) in &cands {
+            for &g in gpus {
+                chosen.push(g);
+                if chosen.len() == req.n_gpus {
+                    break 'fill;
+                }
+            }
+        }
+        return GangPlan::Place(chosen);
+    }
+    // partial: claim everything eligible we do not hold yet
+    let new_holds: Vec<usize> = cands
+        .iter()
+        .flat_map(|(_, gpus)| gpus.iter().copied())
+        .filter(|&g| book.holder(g) != Some(task))
+        .collect();
+    GangPlan::Hold(new_holds)
+}
+
+/// Exclusive placement over a flat device pool: idle devices only (or
+/// free MIG instances when MIG is on), first `n_gpus` in view order — the
+/// seed behavior, byte-for-byte.
+fn exclusive_flat(views: &[GpuView], req: MappingRequest, pre: Preconditions) -> Option<Placement> {
+    let excl = MappingRequest {
+        exclusive: true,
+        ..req
+    };
+    let idle: Vec<usize> = views
+        .iter()
+        .filter(|v| eligibility::eligible(v, excl, pre, Requester::Singleton))
+        .map(|v| v.id)
+        .take(req.n_gpus)
+        .collect();
+    if idle.len() < req.n_gpus {
+        return None;
+    }
+    Some(placement(views, idle))
+}
+
+/// Exclusive placement on one server. Island-blind: first `n_gpus` idle
+/// devices in view order (seed). Island-aware on a multi-island server:
+/// the idle devices in island-packing order, so an exclusive pair lands
+/// inside one island when any island can host it.
+fn exclusive_on_server(
+    s: &ServerView,
+    excl: MappingRequest,
+    pre: Preconditions,
+    fabric: Option<&Fabric>,
+) -> Option<Placement> {
+    let mut idle = enumerate::eligible_views(s, excl, pre, Requester::Singleton);
+    if idle.len() < excl.n_gpus {
+        return None;
+    }
+    if let Some(f) = fabric {
+        if excl.n_gpus >= 2 && f.islands_matter(s.id) {
+            enumerate::island_packed_order(&mut idle, f, &|_| false);
+        }
+    }
+    let ids: Vec<usize> = idle[..excl.n_gpus].iter().map(|v| v.id).collect();
+    Some(placement(&s.gpus, ids))
+}
+
+/// Cluster-wide Round-Robin: cycle over eligible GPUs cluster-wide; the
+/// first pick fixes the host server, the remaining GPUs of a multi-GPU
+/// request come from that same server — cyclically in blind mode (seed),
+/// same-island-first on a multi-island host in island-aware mode.
+fn select_round_robin(
+    admitted: &[&ServerView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+    fabric: Option<&Fabric>,
+) -> Option<Placement> {
+    let mut flat: Vec<&GpuView> = admitted
+        .iter()
+        .flat_map(|s| s.gpus.iter())
+        .filter(|v| eligibility::eligible(v, req, pre, Requester::Singleton))
+        .collect();
+    flat.sort_unstable_by_key(|v| v.id);
+    if flat.is_empty() {
+        return None;
+    }
+    let start = flat.iter().position(|v| v.id >= *rr_cursor).unwrap_or(0);
+    for off in 0..flat.len() {
+        let first = flat[(start + off) % flat.len()];
+        let host = admitted.iter().find(|s| s.id == first.server)?;
+        // island-aware completion only where island structure can actually
+        // influence the pick: the host's islands must matter AND the
+        // eligible partners must be island-MIXED relative to the first
+        // pick — with all partners on the first pick's island or none, the
+        // island order degenerates to the cyclic one, so the seed path
+        // below keeps its exact cursor semantics.
+        if let Some(f) = fabric.filter(|f| req.n_gpus >= 2 && f.islands_matter(host.id)) {
+            // `flat` already holds every eligible device cluster-wide —
+            // the host's partners are its slice of it, minus the first pick
+            let partners: Vec<&GpuView> = flat
+                .iter()
+                .filter(|v| v.server == host.id && v.id != first.id)
+                .copied()
+                .collect();
+            let first_island = f.island_of(first.id);
+            let same = partners.iter().any(|v| f.island_of(v.id) == first_island);
+            let diff = partners.iter().any(|v| f.island_of(v.id) != first_island);
+            if same && diff {
+                if let Some(p) = rr_complete_on_island(host, first, partners, req, f, rr_cursor)
+                {
+                    return Some(p);
+                }
+                continue;
+            }
+        }
+        let mut cursor = first.id; // the first pick itself starts the cycle
+        if let Some(p) = select_flat(PolicyKind::RoundRobin, &host.gpus, req, pre, &mut cursor) {
+            *rr_cursor = cursor;
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Island-aware completion of a multi-GPU Round-Robin pick: the cursor
+/// fixed the first device; partners come from the host's other eligible
+/// devices, same-island first, then cyclic id order from the first pick —
+/// the cycle semantics survive while the set stays island-tight whenever
+/// the host allows it. The cursor resumes right after the FIRST pick (it
+/// tracks the rotation of first picks; partners are island-guided, not
+/// cycle-guided), so consecutive decisions keep rotating across devices.
+fn rr_complete_on_island(
+    host: &ServerView,
+    first: &GpuView,
+    mut partners: Vec<&GpuView>,
+    req: MappingRequest,
+    fabric: &Fabric,
+    rr_cursor: &mut usize,
+) -> Option<Placement> {
+    if partners.len() + 1 < req.n_gpus {
+        return None;
+    }
+    // cyclic position from the first pick over the host's id-sorted cycle
+    let mut ids: Vec<usize> = host.gpus.iter().map(|v| v.id).collect();
+    ids.sort_unstable();
+    let n_ids = ids.len();
+    let pos0 = ids.iter().position(|&id| id == first.id).expect("first on host");
+    let cyc = |id: usize| -> usize {
+        let p = ids.iter().position(|&x| x == id).expect("gpu on host");
+        (p + n_ids - pos0) % n_ids
+    };
+    let first_island = fabric.island_of(first.id);
+    partners.sort_by_key(|v| (fabric.island_of(v.id) != first_island, cyc(v.id)));
+    let mut chosen = vec![first.id];
+    chosen.extend(partners[..req.n_gpus - 1].iter().map(|v| v.id));
+    *rr_cursor = first.id + 1;
+    Some(placement(&host.gpus, chosen))
+}
+
+/// Materialize a chosen id set against its views (MIG instance lookup).
+fn placement(views: &[GpuView], gpus: Vec<usize>) -> Placement {
+    let instances = gpus
+        .iter()
+        .map(|&g| {
+            let v = views.iter().find(|v| v.id == g).unwrap();
+            if v.mig_enabled {
+                v.mig_free_instance
+            } else {
+                None
+            }
+        })
+        .collect();
+    Placement { gpus, instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ClusterTopology;
+    use crate::config::schema::{ClusterConfig, FabricConfig, FabricProfile};
+
+    fn view(id: usize, server: usize, free: f64, smact: f64, n: usize) -> GpuView {
+        GpuView {
+            id,
+            server,
+            free_gb: free,
+            smact_window: smact,
+            n_tasks: n,
+            pinned: false,
+            held: false,
+            mig_free_instance: None,
+            mig_instance_mem_gb: 0.0,
+            mig_enabled: false,
+        }
+    }
+
+    fn sview(id: usize, gpus: Vec<GpuView>) -> ServerView {
+        ServerView {
+            id,
+            power_w: 0.0,
+            power_cap_w: None,
+            gpus,
+        }
+    }
+
+    fn req(n: usize, demand: Option<f64>) -> MappingRequest {
+        MappingRequest {
+            n_gpus: n,
+            demand_gb: demand,
+            exclusive: false,
+        }
+    }
+
+    fn dual_island(servers: usize, gpus: usize) -> Fabric {
+        let topo =
+            ClusterTopology::from_config(&ClusterConfig::homogeneous(servers, gpus, 40.0));
+        Fabric::new(
+            &topo,
+            &FabricConfig {
+                profile: FabricProfile::DualIsland,
+                ..FabricConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn island_aware_pair_lands_inside_one_island() {
+        // the ISSUE's acceptance shape: dual-island server, the two
+        // most-free GPUs straddle the PCIe bridge — blind MAGM splits the
+        // pair, the fabric-aware core keeps it on NVLink
+        let f = dual_island(1, 4);
+        let servers = [sview(
+            0,
+            vec![
+                view(0, 0, 20.0, 0.1, 1),
+                view(1, 0, 22.0, 0.1, 1),
+                view(2, 0, 39.0, 0.1, 1),
+                view(3, 0, 5.0, 0.1, 1),
+            ],
+        )];
+        let mut rr = 0;
+        let blind = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+            None,
+        )
+        .unwrap();
+        assert_eq!(blind.gpus, vec![2, 1], "blind: top free memory, split");
+        let aware = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+            Some(&f),
+        )
+        .unwrap();
+        // both islands can host the pair; equal ring cost, so the policy
+        // term picks the roomier island (39 + 5 > 22 + 20)
+        assert_eq!(aware.gpus, vec![2, 3], "aware: best island-local pair");
+        assert_eq!(f.islands_spanned(&aware.gpus), 1);
+        assert!(f.set_cost(&aware.gpus) < f.set_cost(&blind.gpus));
+    }
+
+    #[test]
+    fn aware_falls_back_to_split_when_no_island_fits() {
+        let f = dual_island(1, 4);
+        // only one eligible device per island: the pair must split — and
+        // then it must be the seed (blind) pair, not something new
+        let servers = [sview(
+            0,
+            vec![view(0, 0, 30.0, 0.1, 1), view(2, 0, 25.0, 0.1, 1)],
+        )];
+        let mut rr = 0;
+        let aware = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+            Some(&f),
+        )
+        .unwrap();
+        assert_eq!(aware.gpus, vec![0, 2]);
+    }
+
+    #[test]
+    fn single_gpu_requests_ignore_islands() {
+        let f = dual_island(2, 4);
+        let servers = [
+            sview(0, (0..4).map(|g| view(g, 0, 10.0 + g as f64, 0.1, 1)).collect()),
+            sview(1, (4..8).map(|g| view(g, 1, 30.0 - g as f64, 0.1, 1)).collect()),
+        ];
+        let mut rr1 = 0;
+        let mut rr2 = 0;
+        let blind = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(1, None),
+            Preconditions::default(),
+            &mut rr1,
+            None,
+        );
+        let aware = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(1, None),
+            Preconditions::default(),
+            &mut rr2,
+            Some(&f),
+        );
+        assert_eq!(blind, aware, "n=1 sets have zero ring cost everywhere");
+    }
+
+    #[test]
+    fn exclusive_pair_packs_an_island() {
+        let f = dual_island(1, 4);
+        // gpu 1 busy: island 0 can't host an idle pair, island 1 can —
+        // blind exclusive would take {0, 2} (first idle in id order)
+        let servers = [sview(
+            0,
+            vec![
+                view(0, 0, 40.0, 0.0, 0),
+                view(1, 0, 40.0, 0.3, 1),
+                view(2, 0, 40.0, 0.0, 0),
+                view(3, 0, 40.0, 0.0, 0),
+            ],
+        )];
+        let excl = MappingRequest {
+            n_gpus: 2,
+            demand_gb: Some(8.0),
+            exclusive: true,
+        };
+        let mut rr = 0;
+        let blind =
+            select_singleton(PolicyKind::Magm, &servers, excl, Preconditions::default(), &mut rr, None)
+                .unwrap();
+        assert_eq!(blind.gpus, vec![0, 2]);
+        let aware = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            excl,
+            Preconditions::default(),
+            &mut rr,
+            Some(&f),
+        )
+        .unwrap();
+        assert_eq!(aware.gpus, vec![2, 3], "the fully-idle island hosts the pair");
+    }
+
+    #[test]
+    fn round_robin_pair_stays_on_the_first_picks_island() {
+        let f = dual_island(1, 4);
+        let servers = [sview(0, (0..4).map(|g| view(g, 0, 40.0, 0.0, 0)).collect())];
+        // cursor at 2: blind RR would take {2, 3}; island-aware the same —
+        // but from cursor 1 blind takes {1, 2} (split) while aware keeps
+        // the pair with 1's island partner 0
+        let mut rr = 1;
+        let blind = select_singleton(
+            PolicyKind::RoundRobin,
+            &servers,
+            req(2, None),
+            Preconditions::default(),
+            &mut rr,
+            None,
+        )
+        .unwrap();
+        assert_eq!(blind.gpus, vec![1, 2]);
+        let mut rr = 1;
+        let aware = select_singleton(
+            PolicyKind::RoundRobin,
+            &servers,
+            req(2, None),
+            Preconditions::default(),
+            &mut rr,
+            Some(&f),
+        )
+        .unwrap();
+        assert_eq!(aware.gpus, vec![1, 0], "partner from island 0, not across");
+        assert_eq!(rr, 2, "cursor rotates past the first pick");
+    }
+
+    #[test]
+    fn cross_server_tie_prefers_quiet_nic() {
+        let mut f = dual_island(2, 4);
+        f.occupy_links(&[0, 4], 0.7); // both NICs loaded…
+        f.release_links(&[4], 0.7); // …server 1's released again
+        let mk = |sid: usize, base: usize| {
+            sview(sid, (base..base + 4).map(|g| view(g, sid, 20.0, 0.1, 1)).collect())
+        };
+        let servers = [mk(0, 0), mk(1, 4)];
+        let mut rr = 0;
+        let aware = select_singleton(
+            PolicyKind::Magm,
+            &servers,
+            req(2, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+            Some(&f),
+        )
+        .unwrap();
+        assert_eq!(aware.gpus, vec![4, 5], "identical sets otherwise: quiet NIC wins");
+    }
+}

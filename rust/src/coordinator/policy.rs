@@ -3,10 +3,16 @@
 //! (power envelope, enough GPUs for the request) followed by the per-GPU
 //! policy over the surviving servers' devices.
 //!
-//! Pure selection logic over monitor snapshots, so every policy is unit- and
+//! This module owns the view/request TYPES and the seed-stable selection
+//! API; the selection LOGIC lives in the shared placement core
+//! (`coordinator::placement`, DESIGN.md §12) — [`select_gpus`] and
+//! [`select_two_level`] are thin island-blind callers of it, which is the
+//! byte-reproduction contract of `--fabric-aware-singletons off`. Pure
+//! functions over monitor snapshots, so every policy is unit- and
 //! property-testable without the simulator.
 
 use crate::config::schema::PolicyKind;
+use crate::coordinator::placement;
 
 /// What the mapper knows about one GPU at decision time.
 #[derive(Debug, Clone, Copy)]
@@ -101,73 +107,7 @@ pub fn select_gpus(
     pre: Preconditions,
     rr_cursor: &mut usize,
 ) -> Option<Placement> {
-    if req.exclusive || policy == PolicyKind::Exclusive {
-        return exclusive(views, req);
-    }
-
-    let mut eligible: Vec<&GpuView> = views.iter().filter(|v| passes(v, req, pre)).collect();
-    if eligible.len() < req.n_gpus {
-        return None;
-    }
-
-    match policy {
-        PolicyKind::RoundRobin => {
-            // cyclic order over the ids actually present, starting at the
-            // cursor — ids need not be contiguous or 0-based (per-server
-            // slices carry global ids)
-            let mut ids: Vec<usize> = views.iter().map(|v| v.id).collect();
-            ids.sort_unstable();
-            let start = ids.iter().position(|&id| id >= *rr_cursor).unwrap_or(0);
-            let mut chosen = Vec::new();
-            for off in 0..ids.len() {
-                let id = ids[(start + off) % ids.len()];
-                if eligible.iter().any(|v| v.id == id) {
-                    chosen.push(id);
-                    if chosen.len() == req.n_gpus {
-                        *rr_cursor = id + 1;
-                        break;
-                    }
-                }
-            }
-            if chosen.len() < req.n_gpus {
-                return None;
-            }
-            Some(placement(views, chosen))
-        }
-        PolicyKind::Magm => {
-            // most available GPU memory first (paper: minimizes OOM odds)
-            eligible.sort_by(|a, b| b.free_gb.total_cmp(&a.free_gb).then(a.id.cmp(&b.id)));
-            Some(placement(
-                views,
-                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
-            ))
-        }
-        PolicyKind::Lug => {
-            // least utilized first (minimizes interference)
-            eligible.sort_by(|a, b| {
-                a.smact_window
-                    .total_cmp(&b.smact_window)
-                    .then(a.id.cmp(&b.id))
-            });
-            Some(placement(
-                views,
-                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
-            ))
-        }
-        PolicyKind::Mug => {
-            // most utilized first (consolidation; keeps idle GPUs idle)
-            eligible.sort_by(|a, b| {
-                b.smact_window
-                    .total_cmp(&a.smact_window)
-                    .then(a.id.cmp(&b.id))
-            });
-            Some(placement(
-                views,
-                eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
-            ))
-        }
-        PolicyKind::Exclusive => unreachable!(),
-    }
+    placement::select_flat(policy, views, req, pre, rr_cursor)
 }
 
 /// Two-level cluster mapping (DESIGN.md §8): filter servers (power
@@ -205,167 +145,14 @@ pub fn select_two_level(
     pre: Preconditions,
     rr_cursor: &mut usize,
 ) -> Option<Placement> {
-    let admitted: Vec<&ServerView> = servers.iter().filter(|s| s.admits(req)).collect();
-    if admitted.is_empty() {
-        return None;
-    }
-
-    if req.exclusive || policy == PolicyKind::Exclusive {
-        // lowest-id admitted server with enough idle targets
-        return admitted.iter().find_map(|s| exclusive(&s.gpus, req));
-    }
-
-    if policy == PolicyKind::RoundRobin {
-        // cycle over eligible GPUs cluster-wide; the first pick fixes the
-        // host server, the remaining GPUs of a multi-GPU request come from
-        // that same server
-        let mut flat: Vec<&GpuView> = admitted
-            .iter()
-            .flat_map(|s| s.gpus.iter())
-            .filter(|v| passes(v, req, pre))
-            .collect();
-        flat.sort_unstable_by_key(|v| v.id);
-        if flat.is_empty() {
-            return None;
-        }
-        let start = flat.iter().position(|v| v.id >= *rr_cursor).unwrap_or(0);
-        for off in 0..flat.len() {
-            let first = flat[(start + off) % flat.len()];
-            let host = admitted.iter().find(|s| s.id == first.server)?;
-            let mut cursor = first.id; // the first pick itself starts the cycle
-            if let Some(p) =
-                select_gpus(PolicyKind::RoundRobin, &host.gpus, req, pre, &mut cursor)
-            {
-                *rr_cursor = cursor;
-                return Some(p);
-            }
-        }
-        return None;
-    }
-
-    // sortable policies (MAGM / LUG / MUG): per-server candidate via the
-    // single-server policy, then the best server by the same criterion
-    // summed over its chosen GPUs; ties go to the lower server id
-    let mut best: Option<(f64, Placement)> = None;
-    for s in &admitted {
-        let mut throwaway = 0usize;
-        let Some(p) = select_gpus(policy, &s.gpus, req, pre, &mut throwaway) else {
-            continue;
-        };
-        let score: f64 = p
-            .gpus
-            .iter()
-            .map(|&g| {
-                let v = s.gpus.iter().find(|v| v.id == g).expect("chosen gpu in view");
-                match policy {
-                    PolicyKind::Magm => v.free_gb,
-                    PolicyKind::Lug => -v.smact_window,
-                    PolicyKind::Mug => v.smact_window,
-                    PolicyKind::RoundRobin | PolicyKind::Exclusive => unreachable!(),
-                }
-            })
-            .sum();
-        if best.as_ref().is_none_or(|(b, _)| score > *b) {
-            best = Some((score, p));
-        }
-    }
-    best.map(|(_, p)| p)
+    placement::select_singleton(policy, servers, req, pre, rr_cursor, None)
 }
 
-/// Allocator-granularity slack for demand-vs-free comparisons: free memory
-/// is reported in whole MiB, so a demand derived from the exact configured
-/// capacity (e.g. the force-exclusive clamp to `mem_gb`) can sit up to one
-/// MiB above the reported value — without slack such a task never fits
-/// anywhere and the serial mapper livelocks.
-pub(crate) const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
-
-pub(crate) fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
-    if v.pinned || v.held {
-        // exclusively-held GPU — by a pinned resident (recovery demotion)
-        // or by a pending gang's reservation (§11) — is never a placement
-        // target. Checked before the MIG branch: MIG instances share the
-        // device's allocator in the simulation, so a newcomer on a sibling
-        // instance could still re-crash the pinned task's ramp.
-        return false;
-    }
-    if v.mig_enabled {
-        // MIG: needs a free instance whose memory fits the (known) demand;
-        // instances are dispatched exclusively (paper §4.4)
-        let Some(_) = v.mig_free_instance else {
-            return false;
-        };
-        if let Some(d) = req.demand_gb {
-            if d > v.mig_instance_mem_gb + FIT_SLACK_GB {
-                return false;
-            }
-        }
-        return true;
-    }
-    if let Some(cap) = pre.smact_cap {
-        if v.smact_window > cap {
-            return false;
-        }
-    }
-    if let Some(min_free) = pre.min_free_gb {
-        if v.free_gb < min_free {
-            return false;
-        }
-    }
-    if let Some(d) = req.demand_gb {
-        if v.free_gb + FIT_SLACK_GB < d {
-            return false;
-        }
-    }
-    true
-}
-
-fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
-    // idle GPUs only (or free MIG instances when MIG is on); the device must
-    // also be big enough for a known demand — on heterogeneous clusters an
-    // idle small GPU is not a valid exclusive target for a large task
-    let idle: Vec<usize> = views
-        .iter()
-        .filter(|v| {
-            if v.pinned || v.held {
-                // a pinned resident or a pending gang owns the whole device
-                // (shared allocator even under MIG) — not an exclusive
-                // target either
-                return false;
-            }
-            if v.mig_enabled {
-                v.mig_free_instance.is_some()
-                    && req.demand_gb.is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB)
-            } else {
-                v.n_tasks == 0 && req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB)
-            }
-        })
-        .map(|v| v.id)
-        .take(req.n_gpus)
-        .collect();
-    if idle.len() < req.n_gpus {
-        return None;
-    }
-    Some(placement(views, idle))
-}
-
-fn placement(views: &[GpuView], gpus: Vec<usize>) -> Placement {
-    let instances = gpus
-        .iter()
-        .map(|&g| {
-            let v = views.iter().find(|v| v.id == g).unwrap();
-            if v.mig_enabled {
-                v.mig_free_instance
-            } else {
-                None
-            }
-        })
-        .collect();
-    Placement { gpus, instances }
-}
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::placement::eligibility::FIT_SLACK_GB;
 
     fn view(id: usize, free: f64, smact: f64, n: usize) -> GpuView {
         GpuView {

@@ -45,6 +45,19 @@ impl TaskQueues {
     pub fn recovery_len(&self) -> usize {
         self.recovery.len()
     }
+
+    pub fn main_len(&self) -> usize {
+        self.main.len()
+    }
+
+    /// Remove and return the TAIL of the primary queue — the most recently
+    /// submitted task (work stealing, DESIGN.md §12). Taking the tail
+    /// leaves the relative order of every remaining task untouched, so
+    /// per-shard FIFO holds for non-stolen tasks; recovery tasks are never
+    /// stolen (recovery re-queues stay on the shard that owns the task).
+    pub fn steal_tail(&mut self) -> Option<TaskId> {
+        self.main.pop_back()
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +84,25 @@ mod tests {
         assert_eq!(q.pop_next(), Some((9, true)));
         assert_eq!(q.pop_next(), Some((1, false)));
         assert_eq!(q.recovery_len(), 0);
+    }
+
+    #[test]
+    fn steal_takes_the_tail_and_preserves_fifo() {
+        let mut q = TaskQueues::new();
+        for t in 1..=4 {
+            q.submit(t);
+        }
+        q.submit_recovery(9);
+        assert_eq!(q.main_len(), 4);
+        assert_eq!(q.steal_tail(), Some(4), "newest task is stolen");
+        // remaining order untouched; recovery still drains first, unstolen
+        assert_eq!(q.pop_next(), Some((9, true)));
+        assert_eq!(q.pop_next(), Some((1, false)));
+        assert_eq!(q.pop_next(), Some((2, false)));
+        assert_eq!(q.pop_next(), Some((3, false)));
+        q.submit_recovery(8);
+        assert_eq!(q.steal_tail(), None, "recovery queue is never stealable");
+        assert_eq!(q.pop_next(), Some((8, true)));
     }
 
     #[test]

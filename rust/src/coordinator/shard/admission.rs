@@ -7,7 +7,11 @@
 //! strategy) and stays there — recovery re-queues return to the same
 //! shard's higher-priority queue, so FIFO order and recovery priority hold
 //! *within* a shard exactly as the paper's single queue pair did
-//! (§4.1/§4.2). Tasks flagged `gang` bypass the shards entirely: they join
+//! (§4.1/§4.2). One bounded exception (DESIGN.md §12, `[coordinator]
+//! steal`): an idle mapper that has starved a full observation window may
+//! steal the TAIL of the longest sibling primary queue — taking the
+//! newest task leaves every remaining task's relative order intact, and
+//! the stolen task re-homes to the thief for the rest of its lifetime. Tasks flagged `gang` bypass the shards entirely: they join
 //! the gang lane, a single FIFO (+ recovery priority) queue drained by the
 //! driver's all-or-nothing gang scheduler (DESIGN.md §11). Admission also
 //! owns the static scheduling ceilings (largest admissible GPU count /
@@ -19,6 +23,17 @@ use crate::config::schema::ShardAssign;
 use crate::sim::TaskId;
 
 use crate::coordinator::queue::TaskQueues;
+
+/// SplitMix64 finalizer — the no-affinity `locality` fallback hash. A raw
+/// `id % shards` routes every arithmetic stride in the trace onto the same
+/// few shards; the mixer spreads ids uniformly while staying a pure,
+/// seedless function of the id (deterministic across runs and restarts).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
 
 #[derive(Debug)]
 pub struct Admission {
@@ -93,9 +108,14 @@ impl Admission {
             }
             // server-topology-aware stickiness: tasks sharing a home server
             // land on the same mapper, so its observation windows and RR
-            // cursor stay warm for that server's devices; id-modulo remains
-            // the fallback when the fabric offers no affinity
-            ShardAssign::Locality => home.unwrap_or(id) % n,
+            // cursor stay warm for that server's devices. With no affinity
+            // (single alive server) the fallback *hashes* the id: raw
+            // id-modulo correlates with every stride pattern in the trace
+            // and skews routing, e.g. after a power-down thins the cycle
+            ShardAssign::Locality => match home {
+                Some(h) => h % n,
+                None => (splitmix64(id as u64) % n as u64) as usize,
+            },
         };
         self.shard_of[id] = Some(shard);
         self.queues[shard].submit(id);
@@ -123,6 +143,39 @@ impl Admission {
     /// Next task for shard `shard`: recovery queue first, then FIFO primary.
     pub fn pop_next(&mut self, shard: usize) -> Option<(TaskId, bool)> {
         self.queues[shard].pop_next()
+    }
+
+    /// Longest sibling *primary* queue — the steal victim for an idle
+    /// `thief` shard (DESIGN.md §12). Ties go to the lowest shard id;
+    /// `None` when no sibling has stealable (non-recovery) backlog.
+    pub fn steal_victim(&self, thief: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (len, shard)
+        for s in 0..self.queues.len() {
+            if s == thief {
+                continue;
+            }
+            let len = self.queues[s].main_len();
+            if len > 0 && best.is_none_or(|(bl, _)| len > bl) {
+                best = Some((len, s));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Steal the tail of `victim`'s primary queue — the most recently
+    /// submitted task — and re-home it to `thief`: its window, ramp and
+    /// completion events ride the thief's lane from here on, and a later
+    /// recovery re-queue returns to the thief (stickiness follows the
+    /// steal). FIFO for every task remaining on the victim is untouched.
+    pub fn steal_tail(&mut self, victim: usize, thief: usize) -> Option<TaskId> {
+        let id = self.queues[victim].steal_tail()?;
+        self.shard_of[id] = Some(thief);
+        Some(id)
+    }
+
+    /// Any sibling of `thief` has stealable backlog right now.
+    pub fn has_steal_victim(&self, thief: usize) -> bool {
+        self.steal_victim(thief).is_some()
     }
 
     /// Next gang off the dedicated lane (recovery first, then FIFO).
@@ -206,11 +259,53 @@ mod tests {
     }
 
     #[test]
-    fn locality_is_sticky_by_task_id_without_affinity() {
+    fn locality_is_sticky_by_hashed_id_without_affinity() {
+        // no affinity -> splitmix64(id) % shards: sticky for a given id,
+        // but uncorrelated with arithmetic strides in the trace (the old
+        // raw id-modulo skewed routing whenever home_server thinned out)
         let mut a = adm(4, ShardAssign::Locality);
-        assert_eq!(a.submit(5, &[0; 4], None), 1);
-        assert_eq!(a.submit(8, &[0; 4], None), 0);
-        assert_eq!(a.submit(11, &[0; 4], None), 3);
+        assert_eq!(a.submit(5, &[0; 4], None), 2);
+        assert_eq!(a.submit(8, &[0; 4], None), 2);
+        assert_eq!(a.submit(11, &[0; 4], None), 1);
+        // hashing spreads a contiguous id range across every shard
+        let mut b = adm(4, ShardAssign::Locality);
+        let mut hit = [false; 4];
+        for id in 0..16 {
+            hit[b.submit(id, &[0; 4], None)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "16 sequential ids must reach all 4 shards");
+    }
+
+    #[test]
+    fn stealing_takes_longest_sibling_tail_and_rehomes() {
+        let mut a = adm(3, ShardAssign::Locality);
+        // shard 0: tasks 0,3,6 — shard 1: 1,4 — shard 2: empty (thief)
+        for id in [0usize, 3, 6] {
+            a.submit(id, &[0; 3], Some(0));
+        }
+        for id in [1usize, 4] {
+            a.submit(id, &[0; 3], Some(1));
+        }
+        assert_eq!(a.steal_victim(2), Some(0), "longest primary queue");
+        assert!(a.has_steal_victim(2));
+        assert_eq!(a.steal_tail(0, 2), Some(6), "tail = newest task");
+        assert_eq!(a.shard_of(6), Some(2), "stolen task re-homes to the thief");
+        // victim's FIFO is untouched
+        assert_eq!(a.pop_next(0), Some((0, false)));
+        assert_eq!(a.pop_next(0), Some((3, false)));
+        assert_eq!(a.pop_next(0), None);
+        // ties go to the lowest shard id
+        let mut t = adm(3, ShardAssign::RoundRobin);
+        t.submit(0, &[0; 3], None); // shard 0
+        t.submit(1, &[0; 3], None); // shard 1
+        assert_eq!(t.steal_victim(2), Some(0));
+        // recovery backlog alone is not stealable
+        let mut r = adm(2, ShardAssign::RoundRobin);
+        r.submit(0, &[0; 2], None);
+        assert_eq!(r.pop_next(0), Some((0, false)));
+        r.submit_recovery(0);
+        assert_eq!(r.steal_victim(1), None);
+        assert!(!r.has_steal_victim(1));
     }
 
     #[test]

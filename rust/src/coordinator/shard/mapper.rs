@@ -63,6 +63,9 @@ pub struct Mapper {
     pub window_done: bool,
     /// A RetryMapping event for this shard is already in flight.
     pub retry_scheduled: bool,
+    /// A StealCheck event for this shard is already in flight (at most one
+    /// pending steal probe per shard, DESIGN.md §12).
+    pub steal_scheduled: bool,
     /// Round-Robin policy cursor — per shard, so concurrent mappers keep
     /// independent cycles (with one shard this is the old global cursor).
     pub rr_cursor: usize,

@@ -1,0 +1,237 @@
+//! Placement-scale study (DESIGN.md §12): what fabric-aware singleton
+//! placement buys over the island-blind baseline.
+//!
+//! Fixed substrate (4 servers × 4 GPUs on the `dual-island` profile, so
+//! every server has two NVLink islands bridged by PCIe), a 96-task trace
+//! where every 3rd submission is a server-local 2-GPU model
+//! (`workload::trace::trace_pairs`). Two systems, same binary:
+//!
+//! * **island-aware** — `--fabric-aware-singletons on` (the default): the
+//!   placement core ranks candidate GPU sets by ring cost, so pairs land
+//!   inside one island whenever any island can host them;
+//! * **island-blind** — `--fabric-aware-singletons off`: the seed
+//!   pipeline, byte-for-byte — pairs take the top-2 devices of the policy
+//!   order regardless of the PCIe bridge between them.
+//!
+//! The study asserts the acceptance criterion: island-aware placement
+//! STRICTLY reduces the mean achieved fabric cost of multi-GPU singleton
+//! dispatches, with byte-identical results JSON across engine threads
+//! {1, 4} at shards {1, 4} in both modes (the §10 guarantee on the new
+//! path). Makespans are reported beside the costs; the comparison row is
+//! appended to the `BENCH_sim.json` perf ledger.
+
+use std::time::Instant;
+
+use crate::bench;
+use crate::config::schema::{
+    CarmaConfig, ClusterConfig, EstimatorKind, FabricProfile, PolicyKind,
+};
+use crate::coordinator::carma::run_trace;
+use crate::estimators;
+use crate::metrics::report::RunReport;
+use crate::util::json::{self, Json};
+use crate::workload::trace::{trace_pairs, TraceSpec};
+
+use super::common::{save_json, zoo, DEFAULT_SEED};
+
+pub const SERVERS: usize = 4;
+pub const GPUS_PER_SERVER: usize = 4;
+pub const TASKS: usize = 96;
+/// Every 3rd submission is a 2-GPU server-local model.
+pub const PAIR_EVERY: usize = 3;
+const SHARD_SWEEP: &[usize] = &[1, 4];
+const THREAD_SWEEP: &[usize] = &[1, 4];
+
+fn cfg(aware: bool, shards: usize, threads: usize, artifacts_dir: &str) -> CarmaConfig {
+    let mut cfg = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    cfg.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    cfg.fabric.profile = FabricProfile::DualIsland;
+    cfg.placement.fabric_aware_singletons = aware;
+    cfg.coordinator.shards = shards;
+    cfg.engine.threads = threads;
+    cfg.artifacts_dir = artifacts_dir.to_string();
+    cfg
+}
+
+struct Row {
+    system: &'static str,
+    shards: usize,
+    threads: usize,
+    report: RunReport,
+    events: u64,
+    wall_s: f64,
+}
+
+fn one_run(
+    system: &'static str,
+    aware: bool,
+    trace: &TraceSpec,
+    shards: usize,
+    threads: usize,
+    artifacts_dir: &str,
+) -> Result<Row, String> {
+    let c = cfg(aware, shards, threads, artifacts_dir);
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    let label = format!("{system}/{shards}-shard/{threads}-thread");
+    let t0 = Instant::now();
+    let out = run_trace(c, est, trace, &label);
+    let wall_s = t0.elapsed().as_secs_f64();
+    if out.report.completed != out.report.total_tasks {
+        return Err(format!(
+            "{label}: {}/{} tasks completed",
+            out.report.completed, out.report.total_tasks
+        ));
+    }
+    if out.report.placement.multi_gpu_singletons == 0 {
+        return Err(format!("{label}: no multi-GPU singleton ever dispatched"));
+    }
+    Ok(Row {
+        system,
+        shards,
+        threads,
+        report: out.report,
+        events: out.events,
+        wall_s,
+    })
+}
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    println!(
+        "Placement scale: {SERVERS}×{GPUS_PER_SERVER} GPUs (dual-island), {TASKS} tasks \
+         (every {PAIR_EVERY}rd a 2-GPU pair), seed {DEFAULT_SEED}\n\
+         (MAGM+MPS+oracle; island-aware vs island-blind singleton placement)\n"
+    );
+    println!(
+        "{:<28} {:>7} {:>8} {:>9} {:>9} {:>7} {:>11} {:>12} {:>9}",
+        "system", "shards", "threads", "total(m)", "wait(m)", "pairs", "in-island", "mean-fcost", "wall(s)"
+    );
+
+    let z = zoo();
+    let total_gpus = SERVERS * GPUS_PER_SERVER;
+    let trace = trace_pairs(&z, TASKS, total_gpus, PAIR_EVERY, DEFAULT_SEED);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &(system, aware) in &[("island-aware", true), ("island-blind", false)] {
+        for &shards in SHARD_SWEEP {
+            let mut json_bits: Option<String> = None;
+            for &threads in THREAD_SWEEP {
+                let row = one_run(system, aware, &trace, shards, threads, artifacts_dir)?;
+                print_row(&row);
+                // the §10 guarantee on the placement core: engine threads
+                // change wall-clock only — results JSON must be byte-equal
+                let j = row.report.to_json().to_string_pretty();
+                match &json_bits {
+                    None => json_bits = Some(j),
+                    Some(prev) => {
+                        if *prev != j {
+                            return Err(format!(
+                                "{system}/{shards} shards: {threads} engine threads \
+                                 changed the results"
+                            ));
+                        }
+                    }
+                }
+                rows.push(row);
+            }
+        }
+    }
+
+    let aware = &rows[0].report;
+    let blind = rows
+        .iter()
+        .find(|r| r.system == "island-blind")
+        .expect("blind rows exist");
+    let (ap, bp) = (&aware.placement, &blind.report.placement);
+    println!(
+        "\n  island-aware: {}/{} pairs island-local (mean fabric cost {:.5});\n  \
+         island-blind: {}/{} (mean {:.5}); makespan {:.1} m vs {:.1} m",
+        ap.single_island,
+        ap.multi_gpu_singletons,
+        ap.mean_fabric_cost,
+        bp.single_island,
+        bp.multi_gpu_singletons,
+        bp.mean_fabric_cost,
+        aware.trace_total_min,
+        blind.report.trace_total_min,
+    );
+    // the acceptance criterion: island-aware placement strictly reduces
+    // the mean achieved interconnect cost of multi-GPU singletons
+    if ap.mean_fabric_cost >= bp.mean_fabric_cost {
+        return Err(format!(
+            "island-aware placement must strictly reduce mean fabric cost: \
+             {:.6} !< {:.6}",
+            ap.mean_fabric_cost, bp.mean_fabric_cost
+        ));
+    }
+    if ap.single_island < bp.single_island {
+        return Err(format!(
+            "island-aware placement produced fewer island-local pairs than blind: \
+             {} < {}",
+            ap.single_island, bp.single_island
+        ));
+    }
+
+    let out_rows: Vec<Json> = rows
+        .iter()
+        .map(|row| {
+            let mut j = row.report.to_json();
+            j.set("system", json::s(row.system));
+            j.set("shards", json::num(row.shards as f64));
+            j.set("threads", json::num(row.threads as f64));
+            j.set("events", json::num(row.events as f64));
+            j.set("wall_s", json::num(row.wall_s));
+            j
+        })
+        .collect();
+    save_json("placement_scale", artifacts_dir, &json::arr(out_rows));
+
+    // perf-ledger row: island-blind vs island-aware makespan + cost on the
+    // dual-island profile (BENCH_sim.json accumulates across PRs)
+    bench::save_bench_section(
+        "placement_scale",
+        vec![json::obj(vec![
+            ("profile", json::s("dual-island")),
+            ("servers", json::num(SERVERS as f64)),
+            ("gpus_per_server", json::num(GPUS_PER_SERVER as f64)),
+            ("tasks", json::num(TASKS as f64)),
+            ("seed", json::num(DEFAULT_SEED as f64)),
+            ("aware_total_min", json::num(aware.trace_total_min)),
+            ("blind_total_min", json::num(blind.report.trace_total_min)),
+            ("aware_mean_fabric_cost", json::num(ap.mean_fabric_cost)),
+            ("blind_mean_fabric_cost", json::num(bp.mean_fabric_cost)),
+            ("aware_single_island", json::num(ap.single_island as f64)),
+            ("blind_single_island", json::num(bp.single_island as f64)),
+            ("pairs", json::num(ap.multi_gpu_singletons as f64)),
+        ])],
+    );
+
+    println!(
+        "\nReading: ranking candidate GPU sets by ring cost keeps 2-GPU tasks\n\
+         inside one NVLink island whenever an island can host them — the same\n\
+         structural greedy the gang planner uses — so collectives stop paying\n\
+         the PCIe bridge, at byte-identical determinism across shard and\n\
+         thread counts in both modes."
+    );
+    Ok(())
+}
+
+fn print_row(row: &Row) {
+    let p = &row.report.placement;
+    println!(
+        "{:<28} {:>7} {:>8} {:>9.1} {:>9.1} {:>7} {:>11} {:>12.5} {:>9.2}",
+        row.system,
+        row.shards,
+        row.threads,
+        row.report.trace_total_min,
+        row.report.avg_waiting_min,
+        p.multi_gpu_singletons,
+        p.single_island,
+        p.mean_fabric_cost,
+        row.wall_s,
+    );
+}

@@ -27,7 +27,7 @@ use carma::workload::trace::{trace_60, trace_90, trace_cluster, trace_gang};
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
-    "fabric-profile", "gang-hold-ttl", "seed", "config",
+    "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
 ];
 
 fn main() {
@@ -83,6 +83,13 @@ fn usage() {
          \x20 --fabric-profile P nvlink-island|flat-pcie|dual-island interconnect model\n\
          \x20                    (default nvlink-island; see [fabric] in carma.toml)\n\
          \x20 --gang-hold-ttl S  gang partial-hold TTL in seconds (default 120)\n\
+         \x20 --fabric-aware-singletons on|off\n\
+         \x20                    rank server-local multi-GPU placements by island/fabric\n\
+         \x20                    cost like gangs (default on; off = island-blind seed\n\
+         \x20                    pipeline, byte-identical; DESIGN.md §12)\n\
+         \x20 --steal            bounded work stealing: an idle mapper that starves one\n\
+         \x20                    observation window steals the longest sibling queue's\n\
+         \x20                    tail (default off; deterministic, per-shard FIFO kept)\n\
          \x20 --json             print the run report as JSON only (determinism diffing)\n\
          \x20 --seed N           trace seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\
@@ -182,6 +189,21 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
         // positivity is enforced by cfg.validate() below
         cfg.gang.hold_ttl_s = t;
     }
+    if let Some(v) = args.opt("fabric-aware-singletons") {
+        cfg.placement.fabric_aware_singletons = match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            // off byte-reproduces the island-blind seed pipeline (§12)
+            "off" | "false" | "0" => false,
+            other => {
+                return Err(format!(
+                    "--fabric-aware-singletons expects on|off, got '{other}'"
+                ))
+            }
+        };
+    }
+    if args.flag("steal") {
+        cfg.coordinator.steal = true;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
     }
@@ -262,13 +284,19 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
     if shards > 1 {
         println!();
         for s in &out.report.per_shard {
+            let stolen = if s.steals > 0 {
+                format!(", {} stolen", s.steals)
+            } else {
+                String::new()
+            };
             println!(
-                "  shard {:>2}: {:>4} tasks, {:>4} decisions ({:.2}/min), mean wait {:.1} m",
+                "  shard {:>2}: {:>4} tasks, {:>4} decisions ({:.2}/min), mean wait {:.1} m{}",
                 s.shard,
                 s.tasks,
                 s.decisions,
                 s.decisions_per_min(out.report.trace_total_min),
-                s.mean_wait_min
+                s.mean_wait_min,
+                stolen,
             );
         }
     }
@@ -286,6 +314,14 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
             g.holds_expired,
             g.holds_placed,
             g.partial_dispatches,
+        );
+    }
+    let p = &out.report.placement;
+    if p.multi_gpu_singletons > 0 {
+        println!(
+            "\n  placement: {}/{} multi-GPU singletons island-local, \
+             mean fabric cost {:.5} GB⁻¹·s (max {:.5})",
+            p.single_island, p.multi_gpu_singletons, p.mean_fabric_cost, p.max_fabric_cost,
         );
     }
     println!("\n{} simulation events processed", out.events);

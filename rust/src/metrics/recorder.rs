@@ -28,10 +28,19 @@ pub struct TaskTiming {
     /// Spanned servers beyond the packing minimum at dispatch — the
     /// placement-fragmentation count of this gang.
     pub span_excess: usize,
-    /// Fabric ring cost of the placed set (`Fabric::gang_cost`): per-GB
+    /// Fabric ring cost of the placed set (`Fabric::set_cost`): per-GB
     /// collective transfer cost, a function of the `[fabric]` bandwidth
     /// classes and how many islands/servers the placement crosses.
+    /// Recorded for gang AND singleton dispatches (DESIGN.md §12).
     pub fabric_cost: f64,
+    /// GPUs of the (last) dispatch (singleton bookkeeping: the placement
+    /// section aggregates multi-GPU singletons only).
+    pub placed_gpus: usize,
+    /// NVLink islands the (last) singleton dispatch spanned.
+    pub islands_spanned: usize,
+    /// Shard that stole this task off its original queue, if any
+    /// (DESIGN.md §12; `assigned_shard` keeps the original routing).
+    pub stolen_by: Option<usize>,
 }
 
 /// Collects everything the evaluation section reports.
@@ -143,6 +152,28 @@ impl Recorder {
         tt.servers_spanned = spanned;
         tt.span_excess = spanned.saturating_sub(min_span);
         tt.fabric_cost = fabric_cost;
+    }
+
+    /// A singleton (server-local) task dispatched onto `placed` GPUs at
+    /// achieved fabric ring cost `fabric_cost` across `islands` islands
+    /// (DESIGN.md §12). Recorded on every dispatch regardless of the
+    /// island-aware switch, so blind and aware runs compare head to head.
+    pub fn on_singleton_dispatch(
+        &mut self,
+        task: TaskId,
+        placed: usize,
+        fabric_cost: f64,
+        islands: usize,
+    ) {
+        let tt = &mut self.tasks[task];
+        tt.placed_gpus = placed;
+        tt.fabric_cost = fabric_cost;
+        tt.islands_spanned = islands;
+    }
+
+    /// Shard `thief` stole this task off its original queue (§12).
+    pub fn on_stolen(&mut self, task: TaskId, thief: usize) {
+        self.tasks[task].stolen_by = Some(thief);
     }
 
     pub fn on_gang_holds(&mut self, n: u64) {
@@ -318,6 +349,22 @@ mod tests {
         assert_eq!(r.tasks[2].span_excess, 2);
         r.on_gang_dispatch(2, 5, 8, 2, 2, 0.25);
         assert_eq!(r.gang_partial_dispatches, 1);
+    }
+
+    #[test]
+    fn singleton_placement_and_steal_hooks() {
+        let mut r = Recorder::new(2, 1);
+        r.on_singleton_dispatch(0, 2, 0.0625, 2);
+        assert_eq!(r.tasks[0].placed_gpus, 2);
+        assert_eq!(r.tasks[0].islands_spanned, 2);
+        assert!((r.tasks[0].fabric_cost - 0.0625).abs() < 1e-12);
+        // a recovery re-dispatch overwrites with the newest placement
+        r.on_singleton_dispatch(0, 2, 0.007, 1);
+        assert_eq!(r.tasks[0].islands_spanned, 1);
+        r.on_assigned(1, 0);
+        r.on_stolen(1, 3);
+        assert_eq!(r.tasks[1].stolen_by, Some(3));
+        assert_eq!(r.tasks[1].assigned_shard, Some(0), "original routing kept");
     }
 
     #[test]

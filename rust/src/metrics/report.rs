@@ -10,13 +10,17 @@ use super::recorder::Recorder;
 #[derive(Debug, Clone)]
 pub struct ShardStat {
     pub shard: usize,
-    /// Tasks admission routed to this shard.
+    /// Tasks admission routed to this shard (original routing — a later
+    /// steal does not reattribute the task).
     pub tasks: usize,
     /// Mapping decisions this shard's mapper dispatched (re-dispatches
     /// after recovery included).
     pub decisions: u64,
     /// Mean queueing delay (first dispatch − arrival) of this shard's tasks.
     pub mean_wait_min: f64,
+    /// Tasks this shard stole off sibling queues (DESIGN.md §12; zero
+    /// unless `[coordinator] steal` is on).
+    pub steals: u64,
 }
 
 impl ShardStat {
@@ -60,6 +64,23 @@ pub struct GangStat {
     pub partial_dispatches: u64,
 }
 
+/// Singleton placement counters (DESIGN.md §12). Always present — zeros
+/// when the trace has no multi-GPU server-local tasks — so results JSON
+/// stays byte-diffable across configurations of the same binary. The
+/// achieved fabric cost is recorded in island-blind and island-aware runs
+/// alike, which is what `repro placement_scale` compares.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementStat {
+    /// Multi-GPU (≥ 2 device) server-local tasks that dispatched.
+    pub multi_gpu_singletons: usize,
+    /// Of those, dispatches that landed entirely inside one NVLink island.
+    pub single_island: usize,
+    /// Mean achieved fabric ring cost (`Fabric::set_cost`) over their
+    /// LAST dispatches — the gang section's `mean_fabric_cost` twin.
+    pub mean_fabric_cost: f64,
+    pub max_fabric_cost: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub label: String,
@@ -78,6 +99,8 @@ pub struct RunReport {
     pub per_shard: Vec<ShardStat>,
     /// Gang-lane counters (zeros when the trace has no distributed jobs).
     pub gang: GangStat,
+    /// Singleton placement counters (zeros without multi-GPU singletons).
+    pub placement: PlacementStat,
 }
 
 impl RunReport {
@@ -96,6 +119,7 @@ impl RunReport {
             total_tasks: r.tasks.len(),
             per_shard: shard_stats(r),
             gang: gang_stats(r),
+            placement: placement_stats(r),
         }
     }
 
@@ -127,6 +151,18 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
+        let placement = json::obj(vec![
+            (
+                "multi_gpu_singletons",
+                json::num(self.placement.multi_gpu_singletons as f64),
+            ),
+            ("single_island", json::num(self.placement.single_island as f64)),
+            (
+                "mean_fabric_cost",
+                json::num(self.placement.mean_fabric_cost),
+            ),
+            ("max_fabric_cost", json::num(self.placement.max_fabric_cost)),
+        ]);
         let gang = json::obj(vec![
             ("gangs", json::num(self.gang.gangs as f64)),
             ("completed", json::num(self.gang.completed as f64)),
@@ -149,6 +185,7 @@ impl RunReport {
                     ("tasks", json::num(s.tasks as f64)),
                     ("decisions", json::num(s.decisions as f64)),
                     ("mean_wait_min", json::num(s.mean_wait_min)),
+                    ("steals", json::num(s.steals as f64)),
                 ])
             })
             .collect();
@@ -166,8 +203,30 @@ impl RunReport {
             ("total_tasks", json::num(self.total_tasks as f64)),
             ("per_shard", json::arr(shards)),
             ("gang", gang),
+            ("placement", placement),
         ])
     }
+}
+
+/// Aggregate the recorder's per-task singleton placement records: the
+/// achieved-interconnect-cost view of every multi-GPU server-local
+/// dispatch (1-GPU placements always cost zero and would only dilute the
+/// mean the `placement_scale` comparison rests on).
+fn placement_stats(r: &Recorder) -> PlacementStat {
+    let mut s = PlacementStat::default();
+    let mut cost_sum = 0.0f64;
+    for t in r.tasks.iter().filter(|t| !t.gang && t.placed_gpus >= 2) {
+        s.multi_gpu_singletons += 1;
+        if t.islands_spanned <= 1 {
+            s.single_island += 1;
+        }
+        cost_sum += t.fabric_cost;
+        s.max_fabric_cost = s.max_fabric_cost.max(t.fabric_cost);
+    }
+    if s.multi_gpu_singletons > 0 {
+        s.mean_fabric_cost = cost_sum / s.multi_gpu_singletons as f64;
+    }
+    s
 }
 
 /// Aggregate the recorder's per-task gang routing into the lane counters.
@@ -231,6 +290,11 @@ fn shard_stats(r: &Recorder) -> Vec<ShardStat> {
                     waited += 1;
                 }
             }
+            let steals = r
+                .tasks
+                .iter()
+                .filter(|t| t.stolen_by == Some(s))
+                .count() as u64;
             ShardStat {
                 shard: s,
                 tasks,
@@ -240,6 +304,7 @@ fn shard_stats(r: &Recorder) -> Vec<ShardStat> {
                 } else {
                     to_minutes(wait_sum / waited as f64)
                 },
+                steals,
             }
         })
         .collect()
@@ -329,6 +394,49 @@ mod tests {
         let empty = RunReport::from_recorder("e", &Recorder::new(1, 1));
         assert_eq!(empty.gang.gangs, 0);
         assert_eq!(empty.to_json().get("gang").unwrap().f64_of("holds_placed"), 0.0);
+    }
+
+    #[test]
+    fn placement_section_aggregates_multi_gpu_singletons() {
+        let mut r = Recorder::new(4, 1);
+        // 1-GPU singleton: zero-cost by definition, excluded from the mean
+        r.on_singleton_dispatch(0, 1, 0.0, 1);
+        // island-local pair and a split pair
+        r.on_singleton_dispatch(1, 2, 0.01, 1);
+        r.on_singleton_dispatch(2, 2, 0.07, 2);
+        // a gang never counts here even with a recorded cost
+        r.on_gang_arrival(3);
+        r.on_gang_dispatch(3, 8, 8, 2, 2, 0.5);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.placement.multi_gpu_singletons, 2);
+        assert_eq!(rep.placement.single_island, 1);
+        assert!((rep.placement.mean_fabric_cost - 0.04).abs() < 1e-12);
+        assert!((rep.placement.max_fabric_cost - 0.07).abs() < 1e-12);
+        let j = rep.to_json();
+        let p = j.get("placement").expect("placement section always present");
+        assert_eq!(p.f64_of("multi_gpu_singletons"), 2.0);
+        assert_eq!(p.f64_of("single_island"), 1.0);
+        // a run without multi-GPU singletons still carries the section
+        let empty = RunReport::from_recorder("e", &Recorder::new(1, 1));
+        assert_eq!(empty.placement.multi_gpu_singletons, 0);
+        assert_eq!(empty.placement.mean_fabric_cost, 0.0);
+        assert!(empty.to_json().get("placement").is_some());
+    }
+
+    #[test]
+    fn steals_attribute_to_the_thief_shard() {
+        let mut r = Recorder::new(3, 1);
+        r.n_shards = 2;
+        r.on_arrival(0, 0.0);
+        r.on_assigned(0, 0);
+        r.on_stolen(0, 1); // shard 1 stole it off shard 0's queue
+        r.on_dispatch(0, 90.0);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.per_shard[0].tasks, 1, "original routing attribution");
+        assert_eq!(rep.per_shard[0].steals, 0);
+        assert_eq!(rep.per_shard[1].steals, 1);
+        let j = rep.to_json();
+        assert!(j.to_string_pretty().contains("\"steals\""));
     }
 
     #[test]

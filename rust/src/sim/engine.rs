@@ -44,6 +44,11 @@ pub enum Event {
     /// field is the hold epoch the expiry was armed for — re-acquired holds
     /// bump the epoch, so stale expiries are dropped.
     GangHoldExpire(TaskId, u64),
+    /// The named shard's mapper has idled one full observation window
+    /// beside a non-empty sibling queue (DESIGN.md §12): on commit it may
+    /// steal one task from the longest sibling queue's tail. Event-ordered
+    /// like everything else, so stealing is deterministic by construction.
+    StealCheck(usize),
 }
 
 #[derive(Debug)]

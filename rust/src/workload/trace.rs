@@ -109,6 +109,36 @@ pub fn trace_gang(
 /// Every k-th submission of [`trace_gang`] is a distributed job (~8 %).
 pub const GANG_EVERY: usize = 12;
 
+/// Pair-heavy cluster trace (`repro placement_scale`, DESIGN.md §12): the
+/// [`trace_cluster`] composition with every `every`-th submission replaced
+/// by a server-local multi-GPU model from the zoo (the 2-GPU heavies), so
+/// island-aware singleton placement has enough multi-GPU decisions to
+/// measure. The replacements stay ordinary singletons — no `gang` flag;
+/// they must fit one server. Fully deterministic from `seed`.
+pub fn trace_pairs(
+    zoo: &ModelZoo,
+    n_tasks: usize,
+    total_gpus: usize,
+    every: usize,
+    seed: u64,
+) -> TraceSpec {
+    assert!(n_tasks > 0 && every >= 1);
+    let mut t = trace_cluster(zoo, n_tasks, total_gpus, seed ^ 0x9A13);
+    t.name = format!("trace-pairs-{n_tasks}x{total_gpus}gpu");
+    let mut rng = Rng::new(seed ^ 0x9A13_0001);
+    let multi: Vec<&crate::workload::model_zoo::ZooEntry> =
+        zoo.entries.iter().filter(|e| e.n_gpus >= 2).collect();
+    assert!(!multi.is_empty(), "no multi-GPU zoo entries for pair traces");
+    for i in (0..n_tasks).step_by(every) {
+        let e = *rng.choice(&multi);
+        let epochs = *rng.choice(&e.epochs);
+        let arrival = t.tasks[i].arrival_s;
+        t.tasks[i] = TaskSpec::from_zoo(i, e, epochs, arrival);
+    }
+    debug_assert!(t.tasks.iter().any(|task| task.n_gpus >= 2));
+    t
+}
+
 /// The server-local-only baseline of `repro gang_scale` (DESIGN.md §11):
 /// without cross-server gang scheduling, a distributed job must be shrunk
 /// to the largest single server — same total GPU-seconds of work, so a
@@ -313,6 +343,27 @@ mod tests {
         // short traces still carry at least one distributed job
         let tiny = trace_gang(&zoo(), 3, 16, 8, 1);
         assert_eq!(tiny.tasks.iter().filter(|t| t.gang).count(), 1);
+    }
+
+    #[test]
+    fn pair_trace_mixes_multi_gpu_singletons() {
+        let t = trace_pairs(&zoo(), 60, 8, 3, 42);
+        assert_eq!(t.tasks.len(), 60);
+        let pairs: Vec<_> = t.tasks.iter().filter(|t| t.n_gpus >= 2).collect();
+        assert!(pairs.len() >= 20, "every 3rd submission is multi-GPU");
+        assert!(t.tasks.iter().all(|t| !t.gang), "pairs are singletons, not gangs");
+        for (i, task) in t.tasks.iter().enumerate() {
+            assert_eq!(task.id, i);
+        }
+        let arr: Vec<f64> = t.tasks.iter().map(|x| x.arrival_s).collect();
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        // deterministic by seed
+        let a = trace_pairs(&zoo(), 60, 8, 3, 9);
+        let b = trace_pairs(&zoo(), 60, 8, 3, 9);
+        assert_eq!(
+            a.tasks.iter().map(|t| (t.name.clone(), t.n_gpus)).collect::<Vec<_>>(),
+            b.tasks.iter().map(|t| (t.name.clone(), t.n_gpus)).collect::<Vec<_>>()
+        );
     }
 
     #[test]

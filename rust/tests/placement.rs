@@ -1,0 +1,746 @@
+//! Placement-core acceptance tests (DESIGN.md §12, ISSUE 5):
+//!
+//! (a) `--fabric-aware-singletons off` byte-reproduces the SEED pipeline —
+//!     proved two ways: a property test against a verbatim copy of the
+//!     seed selection code (kept here as the reference model), and full
+//!     trace runs across policies × shards {1,4} × threads {1,4} whose
+//!     results JSON must be byte-identical across engine thread counts;
+//! (b) with the switch on, a 2-GPU singleton on a dual-island server
+//!     lands inside one island (and the blind pipeline demonstrably
+//!     splits the same pair);
+//! (c) gang planning is unchanged by the refactor — property-tested
+//!     against a verbatim copy of the seed `plan_gang`;
+//! plus the bounded work-stealing satellite: starved shards steal the
+//! longest sibling queue's tail, deterministically, behind
+//! `[coordinator] steal`.
+
+use carma::config::schema::{
+    CarmaConfig, ClusterConfig, EstimatorKind, FabricConfig, FabricProfile, PolicyKind,
+    PowerConfig, ShardAssign,
+};
+use carma::coordinator::carma::{run_trace, RunOutcome};
+use carma::coordinator::gang::{plan_gang, GangPlan, ReservationBook};
+use carma::coordinator::policy::{
+    select_two_level, GpuView, MappingRequest, Placement, Preconditions, ServerView,
+};
+use carma::cluster::topology::ClusterTopology;
+use carma::cluster::Fabric;
+use carma::estimators;
+use carma::sim::TaskId;
+use carma::testkit;
+use carma::util::rng::Rng;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::task::TaskSpec;
+use carma::workload::trace::{trace_pairs, TraceSpec};
+
+/// Verbatim copy of the SEED selection pipeline (pre-refactor
+/// `coordinator/policy.rs` and `coordinator/gang/mod.rs`), kept as the
+/// reference model for the byte-reproduction contract. Production code
+/// must never call this — it exists so test (a)/(c) can diff the unified
+/// core against what the seed actually computed.
+mod seed_reference {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    const FIT_SLACK_GB: f64 = 1.0 / 1024.0;
+
+    fn passes(v: &GpuView, req: MappingRequest, pre: Preconditions) -> bool {
+        if v.pinned || v.held {
+            return false;
+        }
+        if v.mig_enabled {
+            let Some(_) = v.mig_free_instance else {
+                return false;
+            };
+            if let Some(d) = req.demand_gb {
+                if d > v.mig_instance_mem_gb + FIT_SLACK_GB {
+                    return false;
+                }
+            }
+            return true;
+        }
+        if let Some(cap) = pre.smact_cap {
+            if v.smact_window > cap {
+                return false;
+            }
+        }
+        if let Some(min_free) = pre.min_free_gb {
+            if v.free_gb < min_free {
+                return false;
+            }
+        }
+        if let Some(d) = req.demand_gb {
+            if v.free_gb + FIT_SLACK_GB < d {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn exclusive(views: &[GpuView], req: MappingRequest) -> Option<Placement> {
+        let idle: Vec<usize> = views
+            .iter()
+            .filter(|v| {
+                if v.pinned || v.held {
+                    return false;
+                }
+                if v.mig_enabled {
+                    v.mig_free_instance.is_some()
+                        && req
+                            .demand_gb
+                            .is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB)
+                } else {
+                    v.n_tasks == 0
+                        && req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB)
+                }
+            })
+            .map(|v| v.id)
+            .take(req.n_gpus)
+            .collect();
+        if idle.len() < req.n_gpus {
+            return None;
+        }
+        Some(placement(views, idle))
+    }
+
+    fn placement(views: &[GpuView], gpus: Vec<usize>) -> Placement {
+        let instances = gpus
+            .iter()
+            .map(|&g| {
+                let v = views.iter().find(|v| v.id == g).unwrap();
+                if v.mig_enabled {
+                    v.mig_free_instance
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Placement { gpus, instances }
+    }
+
+    pub fn select_gpus(
+        policy: PolicyKind,
+        views: &[GpuView],
+        req: MappingRequest,
+        pre: Preconditions,
+        rr_cursor: &mut usize,
+    ) -> Option<Placement> {
+        if req.exclusive || policy == PolicyKind::Exclusive {
+            return exclusive(views, req);
+        }
+        let mut eligible: Vec<&GpuView> =
+            views.iter().filter(|v| passes(v, req, pre)).collect();
+        if eligible.len() < req.n_gpus {
+            return None;
+        }
+        match policy {
+            PolicyKind::RoundRobin => {
+                let mut ids: Vec<usize> = views.iter().map(|v| v.id).collect();
+                ids.sort_unstable();
+                let start = ids.iter().position(|&id| id >= *rr_cursor).unwrap_or(0);
+                let mut chosen = Vec::new();
+                for off in 0..ids.len() {
+                    let id = ids[(start + off) % ids.len()];
+                    if eligible.iter().any(|v| v.id == id) {
+                        chosen.push(id);
+                        if chosen.len() == req.n_gpus {
+                            *rr_cursor = id + 1;
+                            break;
+                        }
+                    }
+                }
+                if chosen.len() < req.n_gpus {
+                    return None;
+                }
+                Some(placement(views, chosen))
+            }
+            PolicyKind::Magm => {
+                eligible
+                    .sort_by(|a, b| b.free_gb.total_cmp(&a.free_gb).then(a.id.cmp(&b.id)));
+                Some(placement(
+                    views,
+                    eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+                ))
+            }
+            PolicyKind::Lug => {
+                eligible.sort_by(|a, b| {
+                    a.smact_window
+                        .total_cmp(&b.smact_window)
+                        .then(a.id.cmp(&b.id))
+                });
+                Some(placement(
+                    views,
+                    eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+                ))
+            }
+            PolicyKind::Mug => {
+                eligible.sort_by(|a, b| {
+                    b.smact_window
+                        .total_cmp(&a.smact_window)
+                        .then(a.id.cmp(&b.id))
+                });
+                Some(placement(
+                    views,
+                    eligible[..req.n_gpus].iter().map(|v| v.id).collect(),
+                ))
+            }
+            PolicyKind::Exclusive => unreachable!(),
+        }
+    }
+
+    pub fn select_two_level(
+        policy: PolicyKind,
+        servers: &[ServerView],
+        req: MappingRequest,
+        pre: Preconditions,
+        rr_cursor: &mut usize,
+    ) -> Option<Placement> {
+        let admitted: Vec<&ServerView> = servers.iter().filter(|s| s.admits(req)).collect();
+        if admitted.is_empty() {
+            return None;
+        }
+        if req.exclusive || policy == PolicyKind::Exclusive {
+            return admitted.iter().find_map(|s| exclusive(&s.gpus, req));
+        }
+        if policy == PolicyKind::RoundRobin {
+            let mut flat: Vec<&GpuView> = admitted
+                .iter()
+                .flat_map(|s| s.gpus.iter())
+                .filter(|v| passes(v, req, pre))
+                .collect();
+            flat.sort_unstable_by_key(|v| v.id);
+            if flat.is_empty() {
+                return None;
+            }
+            let start = flat.iter().position(|v| v.id >= *rr_cursor).unwrap_or(0);
+            for off in 0..flat.len() {
+                let first = flat[(start + off) % flat.len()];
+                let host = admitted.iter().find(|s| s.id == first.server)?;
+                let mut cursor = first.id;
+                if let Some(p) =
+                    select_gpus(PolicyKind::RoundRobin, &host.gpus, req, pre, &mut cursor)
+                {
+                    *rr_cursor = cursor;
+                    return Some(p);
+                }
+            }
+            return None;
+        }
+        let mut best: Option<(f64, Placement)> = None;
+        for s in &admitted {
+            let mut throwaway = 0usize;
+            let Some(p) = select_gpus(policy, &s.gpus, req, pre, &mut throwaway) else {
+                continue;
+            };
+            let score: f64 = p
+                .gpus
+                .iter()
+                .map(|&g| {
+                    let v = s.gpus.iter().find(|v| v.id == g).expect("chosen gpu");
+                    match policy {
+                        PolicyKind::Magm => v.free_gb,
+                        PolicyKind::Lug => -v.smact_window,
+                        PolicyKind::Mug => v.smact_window,
+                        PolicyKind::RoundRobin | PolicyKind::Exclusive => unreachable!(),
+                    }
+                })
+                .sum();
+            if best.as_ref().is_none_or(|(b, _)| score > *b) {
+                best = Some((score, p));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    fn gang_eligible(
+        v: &GpuView,
+        req: MappingRequest,
+        pre: Preconditions,
+        book: &ReservationBook,
+        task: TaskId,
+    ) -> bool {
+        let fits =
+            |v: &GpuView| req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB);
+        if book.holder(v.id) == Some(task) {
+            return fits(v) && (!req.exclusive || v.n_tasks == 0);
+        }
+        if v.held || v.pinned || v.mig_enabled {
+            return false;
+        }
+        if req.exclusive {
+            return v.n_tasks == 0 && fits(v);
+        }
+        passes(v, req, pre)
+    }
+
+    pub fn plan_gang(
+        views: &[ServerView],
+        fabric: &Fabric,
+        book: &ReservationBook,
+        power_cfg: &PowerConfig,
+        req: MappingRequest,
+        pre: Preconditions,
+        task: TaskId,
+    ) -> GangPlan {
+        let mut cands: Vec<(usize, Vec<usize>)> = Vec::new();
+        for s in views {
+            let own_slots = s
+                .gpus
+                .iter()
+                .filter(|v| book.holder(v.id) == Some(task))
+                .count();
+            let mut elig: Vec<&GpuView> = s
+                .gpus
+                .iter()
+                .filter(|v| gang_eligible(v, req, pre, book, task))
+                .collect();
+            if elig.is_empty() {
+                continue;
+            }
+            let mut island_count: BTreeMap<usize, usize> = BTreeMap::new();
+            for v in &elig {
+                *island_count.entry(fabric.island_of(v.id)).or_insert(0) += 1;
+            }
+            elig.sort_by_key(|v| {
+                let island = fabric.island_of(v.id);
+                (
+                    book.holder(v.id) != Some(task),
+                    std::cmp::Reverse(island_count[&island]),
+                    island,
+                    v.n_tasks,
+                    v.id,
+                )
+            });
+            let k_max = match s.power_cap_w {
+                None => elig.len(),
+                Some(cap) => {
+                    let slot_w = carma::cluster::power::reserved_w(power_cfg, 1);
+                    let extra = if slot_w <= 0.0 {
+                        elig.len()
+                    } else {
+                        ((cap - s.power_w) / slot_w).max(0.0).floor() as usize
+                    };
+                    (own_slots + extra).min(elig.len())
+                }
+            };
+            elig.truncate(k_max);
+            if !elig.is_empty() {
+                cands.push((s.id, elig.iter().map(|v| v.id).collect()));
+            }
+        }
+        cands.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+        let available: usize = cands.iter().map(|(_, g)| g.len()).sum();
+        if available >= req.n_gpus {
+            let mut chosen = Vec::with_capacity(req.n_gpus);
+            'fill: for (_, gpus) in &cands {
+                for &g in gpus {
+                    chosen.push(g);
+                    if chosen.len() == req.n_gpus {
+                        break 'fill;
+                    }
+                }
+            }
+            return GangPlan::Place(chosen);
+        }
+        let new_holds: Vec<usize> = cands
+            .iter()
+            .flat_map(|(_, gpus)| gpus.iter().copied())
+            .filter(|&g| book.holder(g) != Some(task))
+            .collect();
+        GangPlan::Hold(new_holds)
+    }
+}
+
+// -- random-cluster generator -----------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Scenario {
+    n_servers: usize,
+    gpus_per: usize,
+    servers: Vec<ServerView>,
+    req: MappingRequest,
+    pre: Preconditions,
+    cursor: usize,
+    /// GPUs held by "our" gang task (id 7) vs a foreign holder (id 99).
+    own_holds: Vec<usize>,
+    foreign_holds: Vec<usize>,
+}
+
+fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
+    let n_servers = 1 + size % 3;
+    let gpus_per = 2 + size % 3;
+    let mut own_holds = Vec::new();
+    let mut foreign_holds = Vec::new();
+    let mut servers = Vec::new();
+    let mut gid = 0usize;
+    for sid in 0..n_servers {
+        let mut gpus = Vec::new();
+        for _ in 0..gpus_per {
+            let mig = rng.bool(0.15);
+            let held = rng.bool(0.2);
+            if held {
+                if rng.bool(0.5) {
+                    own_holds.push(gid);
+                } else {
+                    foreign_holds.push(gid);
+                }
+            }
+            gpus.push(GpuView {
+                id: gid,
+                server: sid,
+                free_gb: rng.range_f64(0.0, 40.0),
+                smact_window: rng.f64(),
+                n_tasks: rng.range_usize(0, 4),
+                pinned: rng.bool(0.1),
+                held,
+                mig_free_instance: if mig && rng.bool(0.7) {
+                    Some(rng.range_usize(0, 2))
+                } else {
+                    None
+                },
+                mig_instance_mem_gb: rng.range_f64(5.0, 20.0),
+                mig_enabled: mig,
+            });
+            gid += 1;
+        }
+        let capped = rng.bool(0.3);
+        servers.push(ServerView {
+            id: sid,
+            power_w: rng.range_f64(100.0, 1400.0),
+            power_cap_w: capped.then(|| rng.range_f64(200.0, 1300.0)),
+            gpus,
+        });
+    }
+    Scenario {
+        n_servers,
+        gpus_per,
+        servers,
+        req: MappingRequest {
+            n_gpus: 1 + size % 3,
+            demand_gb: rng.bool(0.6).then(|| rng.range_f64(1.0, 30.0)),
+            exclusive: rng.bool(0.2),
+        },
+        pre: Preconditions {
+            smact_cap: rng.bool(0.7).then(|| rng.f64()),
+            min_free_gb: rng.bool(0.4).then(|| rng.range_f64(0.0, 20.0)),
+        },
+        cursor: rng.range_usize(0, n_servers * gpus_per + 2),
+        own_holds,
+        foreign_holds,
+    }
+}
+
+#[test]
+fn off_switch_matches_seed_reference_for_all_policies() {
+    // test (a), model half: the unified core with fabric off must equal
+    // the seed pipeline on every input — placement AND cursor
+    let gen = |rng: &mut Rng, size: usize| gen_scenario(rng, size);
+    testkit::forall(&gen, |sc: &Scenario| {
+        for policy in [
+            PolicyKind::Exclusive,
+            PolicyKind::RoundRobin,
+            PolicyKind::Magm,
+            PolicyKind::Lug,
+            PolicyKind::Mug,
+        ] {
+            let mut cur_new = sc.cursor;
+            let mut cur_ref = sc.cursor;
+            let new = select_two_level(policy, &sc.servers, sc.req, sc.pre, &mut cur_new);
+            let reference =
+                seed_reference::select_two_level(policy, &sc.servers, sc.req, sc.pre, &mut cur_ref);
+            if new != reference {
+                return Err(format!(
+                    "{policy:?}: core {new:?} != seed {reference:?} (req {:?})",
+                    sc.req
+                ));
+            }
+            if cur_new != cur_ref {
+                return Err(format!(
+                    "{policy:?}: cursor diverged {cur_new} != {cur_ref}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gang_planning_is_unchanged_by_the_refactor() {
+    // test (c), model half: plan_gang (now a thin placement-core caller)
+    // must equal the seed gang planner on every input, every profile
+    let gen = |rng: &mut Rng, size: usize| {
+        let sc = gen_scenario(rng, size);
+        let profile = *rng.choice(&[
+            FabricProfile::NvlinkIsland,
+            FabricProfile::FlatPcie,
+            FabricProfile::DualIsland,
+        ]);
+        let width = 2 + size % 6;
+        (sc, profile, width)
+    };
+    testkit::forall(&gen, |(sc, profile, width): &(Scenario, FabricProfile, usize)| {
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(
+            sc.n_servers,
+            sc.gpus_per,
+            40.0,
+        ));
+        let fabric = Fabric::new(
+            &topo,
+            &FabricConfig {
+                profile: *profile,
+                ..FabricConfig::default()
+            },
+        );
+        let mut book = ReservationBook::new(&topo);
+        for &g in &sc.own_holds {
+            book.hold(g, 7);
+        }
+        for &g in &sc.foreign_holds {
+            book.hold(g, 99);
+        }
+        let req = MappingRequest {
+            n_gpus: *width,
+            ..sc.req
+        };
+        let new = plan_gang(&sc.servers, &fabric, &book, &PowerConfig::default(), req, sc.pre, 7);
+        let reference = seed_reference::plan_gang(
+            &sc.servers,
+            &fabric,
+            &book,
+            &PowerConfig::default(),
+            req,
+            sc.pre,
+            7,
+        );
+        if new != reference {
+            return Err(format!("core {new:?} != seed {reference:?} (req {req:?})"));
+        }
+        Ok(())
+    });
+}
+
+// -- full-trace determinism + behavior --------------------------------------
+
+fn base_cfg(profile: FabricProfile, aware: bool, shards: usize, threads: usize) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.fabric.profile = profile;
+    c.placement.fabric_aware_singletons = aware;
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    c
+}
+
+fn run(c: CarmaConfig, trace: &TraceSpec) -> RunOutcome {
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_trace(c, est, trace, "placement-test")
+}
+
+#[test]
+fn off_switch_is_deterministic_across_policies_shards_threads() {
+    // test (a), trace half: with the switch off, every (policy, shards)
+    // combination is byte-identical across engine threads {1,4} — the seed
+    // pipeline's §10 guarantee survives the extraction
+    let zoo = ModelZoo::load();
+    let trace = trace_pairs(&zoo, 48, 8, 3, 11);
+    for policy in [PolicyKind::Magm, PolicyKind::Lug, PolicyKind::RoundRobin] {
+        for shards in [1usize, 4] {
+            let mut jsons = Vec::new();
+            for threads in [1usize, 4] {
+                let mut c = base_cfg(FabricProfile::DualIsland, false, shards, threads);
+                c.policy = policy;
+                let out = run(c, &trace);
+                assert_eq!(out.report.completed, 48, "{policy:?}/{shards}/{threads}");
+                jsons.push(out.report.to_json().to_string_pretty());
+            }
+            assert_eq!(
+                jsons[0], jsons[1],
+                "{policy:?}/{shards} shards: threads must not change results"
+            );
+        }
+    }
+}
+
+#[test]
+fn aware_mode_is_deterministic_and_beats_blind_on_fabric_cost() {
+    // the acceptance criterion at test scale: island-aware mean achieved
+    // fabric cost strictly below island-blind on the dual-island profile,
+    // byte-identical across threads in both modes
+    let zoo = ModelZoo::load();
+    let trace = trace_pairs(&zoo, 48, 8, 3, 11);
+    let mut mean_cost = Vec::new();
+    for aware in [true, false] {
+        let mut jsons = Vec::new();
+        for threads in [1usize, 4] {
+            let out = run(base_cfg(FabricProfile::DualIsland, aware, 4, threads), &trace);
+            assert_eq!(out.report.completed, 48);
+            assert!(out.report.placement.multi_gpu_singletons > 0);
+            jsons.push(out.report.to_json().to_string_pretty());
+            if threads == 1 {
+                mean_cost.push(out.report.placement.mean_fabric_cost);
+            }
+        }
+        assert_eq!(jsons[0], jsons[1], "aware={aware}: thread-count determinism");
+    }
+    assert!(
+        mean_cost[0] < mean_cost[1],
+        "island-aware {:.6} must strictly beat blind {:.6}",
+        mean_cost[0],
+        mean_cost[1]
+    );
+}
+
+#[test]
+fn single_island_and_flat_profiles_are_unchanged_by_the_switch() {
+    // on nvlink-island substrates the island-aware decision is
+    // definitionally the blind one; on flat-pcie every server-local set
+    // costs the same (all links cross the switch), so the decision — and
+    // crucially the Round-Robin cursor — must match too: the switch is a
+    // byte-level no-op on both
+    let zoo = ModelZoo::load();
+    let trace = trace_pairs(&zoo, 48, 8, 3, 11);
+    for profile in [FabricProfile::NvlinkIsland, FabricProfile::FlatPcie] {
+        for policy in [PolicyKind::Magm, PolicyKind::RoundRobin] {
+            let mk = |aware: bool| {
+                let mut c = base_cfg(profile, aware, 4, 1);
+                c.policy = policy;
+                run(c, &trace)
+            };
+            let on = mk(true);
+            let off = mk(false);
+            assert_eq!(
+                on.report.to_json().to_string_pretty(),
+                off.report.to_json().to_string_pretty(),
+                "{profile:?}/{policy:?}: switch must be a no-op"
+            );
+            assert_eq!(on.events, off.events, "{profile:?}/{policy:?}");
+        }
+    }
+
+    // the hard case: spanning gangs load NICs, so a naive NIC tie-break
+    // could divert policy-score ties between single-island servers — the
+    // islands_matter gate must keep even gang traces byte-identical
+    let gang_trace = carma::workload::trace::trace_gang(&zoo, 48, 16, 8, 7);
+    let mk_gang = |aware: bool| {
+        let mut c = base_cfg(FabricProfile::NvlinkIsland, aware, 4, 1);
+        c.cluster = ClusterConfig::homogeneous(4, 4, 40.0);
+        run(c, &gang_trace)
+    };
+    let on = mk_gang(true);
+    let off = mk_gang(false);
+    assert!(on.report.gang.cross_server > 0, "gangs must actually span (NIC load)");
+    assert_eq!(
+        on.report.to_json().to_string_pretty(),
+        off.report.to_json().to_string_pretty(),
+        "nvlink + spanning gangs: the switch must still be a byte-level no-op"
+    );
+}
+
+#[test]
+fn dual_island_pair_lands_inside_one_island() {
+    // test (b) in driver form: a 1-GPU task occupies one island-0 device,
+    // then a 2-GPU task arrives. Blind MAGM takes the two most-free
+    // devices — which straddle the bridge — while the aware core keeps
+    // the pair inside the fully-free island.
+    let zoo = ModelZoo::load();
+    let single = zoo
+        .entries
+        .iter()
+        .find(|e| e.n_gpus == 1)
+        .expect("single-GPU zoo entry");
+    let pair = zoo
+        .entries
+        .iter()
+        .find(|e| e.n_gpus == 2)
+        .expect("2-GPU zoo entry");
+    let trace = TraceSpec {
+        name: "one-pair".into(),
+        tasks: vec![
+            TaskSpec::from_zoo(0, single, single.epochs[0], 0.0),
+            TaskSpec::from_zoo(1, pair, pair.epochs[0], 10.0),
+        ],
+    };
+    let mk = |aware: bool| {
+        let mut c = base_cfg(FabricProfile::DualIsland, aware, 1, 1);
+        c.cluster = ClusterConfig::homogeneous(1, 4, 40.0);
+        run(c, &trace)
+    };
+    let aware = mk(true);
+    assert_eq!(aware.report.completed, 2);
+    assert_eq!(aware.report.placement.multi_gpu_singletons, 1);
+    assert_eq!(
+        aware.report.placement.single_island, 1,
+        "aware: the pair must land inside one island"
+    );
+    assert_eq!(aware.recorder.tasks[1].islands_spanned, 1);
+    let blind = mk(false);
+    assert_eq!(blind.report.completed, 2);
+    assert_eq!(
+        blind.recorder.tasks[1].islands_spanned, 2,
+        "blind: top-2 free devices straddle the PCIe bridge"
+    );
+    assert!(
+        aware.recorder.tasks[1].fabric_cost < blind.recorder.tasks[1].fabric_cost,
+        "achieved cost must drop when the pair stays on NVLink"
+    );
+}
+
+// -- work stealing -----------------------------------------------------------
+
+#[test]
+fn starved_shards_steal_the_longest_sibling_tail() {
+    // locality routing on a 2-server cluster homes every task onto shards
+    // {0, 1}; shards 2 and 3 would idle forever. With stealing on they
+    // must pick up backlog — deterministically, with everything finishing.
+    let zoo = ModelZoo::load();
+    let trace = trace_pairs(&zoo, 64, 8, 4, 7);
+    let mk = |steal: bool, threads: usize| {
+        let mut c = base_cfg(FabricProfile::NvlinkIsland, true, 4, threads);
+        c.coordinator.assign = ShardAssign::Locality;
+        c.coordinator.steal = steal;
+        run(c, &trace)
+    };
+    let off = mk(false, 1);
+    assert_eq!(off.report.completed, 64);
+    assert_eq!(
+        off.report.per_shard.iter().map(|s| s.steals).sum::<u64>(),
+        0,
+        "stealing must stay off by default"
+    );
+    assert_eq!(off.report.per_shard[2].tasks + off.report.per_shard[3].tasks, 0);
+
+    let on = mk(true, 1);
+    assert_eq!(on.report.completed, 64);
+    let steals: u64 = on.report.per_shard.iter().map(|s| s.steals).sum();
+    assert!(steals > 0, "starved shards must steal from the backlog");
+    assert!(
+        on.report.per_shard[2].steals + on.report.per_shard[3].steals > 0,
+        "the permanently-unrouted shards must be among the thieves"
+    );
+    assert!(
+        on.report.avg_waiting_min < off.report.avg_waiting_min,
+        "stealing must cut queueing delay when half the mappers starve: \
+         {:.2} !< {:.2}",
+        on.report.avg_waiting_min,
+        off.report.avg_waiting_min
+    );
+
+    // deterministic: repeat run bit-identical, and threads {1,4} byte-equal
+    let again = mk(true, 1);
+    assert_eq!(
+        on.report.to_json().to_string_pretty(),
+        again.report.to_json().to_string_pretty()
+    );
+    assert_eq!(on.events, again.events);
+    let threaded = mk(true, 4);
+    assert_eq!(
+        on.report.to_json().to_string_pretty(),
+        threaded.report.to_json().to_string_pretty(),
+        "stealing must stay byte-deterministic under the parallel engine"
+    );
+}
