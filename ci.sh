@@ -106,15 +106,48 @@ for MODE in on off; do
 done
 echo "placement smoke OK: byte-identical JSON across threads in both modes"
 
-step "bench smoke: 1-iteration bench binaries (bit-rot guard)"
-# write the smoke rows to a throwaway ledger — the repo-root BENCH_sim.json
-# accumulates real full-sweep measurements across PRs and must not be
-# clobbered by the 1-iteration subset
-SMOKE_JSON="$(mktemp -t carma-bench-smoke-XXXXXX.json)"
-CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench cluster_scale
-CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench shard_scale
-CARMA_BENCH_SMOKE=1 CARMA_BENCH_JSON="$SMOKE_JSON" cargo bench --bench gang_scale
-rm -f "$SMOKE_JSON"
+step "service smoke: open-loop --arrivals, shed accounting + thread determinism"
+for KIND in poisson diurnal burst; do
+    SVC_BASE=(run --servers 2 --gpus-per-server 4 --arrivals "$KIND" --rate 40 \
+        --duration 420 --queue-cap 2 --shards 4 --estimator oracle --margin 2 \
+        --seed 7 --json)
+    S1="$("$BIN" "${SVC_BASE[@]}")"
+    S4="$("$BIN" "${SVC_BASE[@]}" --engine-threads 4)"
+    if [ "$S1" != "$S4" ]; then
+        echo "DETERMINISM FAILURE: --arrivals $KIND diverged across engine threads" >&2
+        diff <(printf '%s\n' "$S1") <(printf '%s\n' "$S4") >&2 || true
+        exit 1
+    fi
+    if printf '%s\n' "$S1" | grep -q '"shed": 0,'; then
+        echo "SERVICE FAILURE: saturating $KIND rate shed nothing" >&2
+        exit 1
+    fi
+done
+# low offered rate against a deep queue: the shedder must stay silent
+LOW="$("$BIN" run --servers 2 --gpus-per-server 4 --arrivals poisson --rate 1 \
+    --duration 420 --queue-cap 64 --estimator oracle --margin 2 --seed 7 --json)"
+if ! printf '%s\n' "$LOW" | grep -q '"shed": 0,'; then
+    echo "SERVICE FAILURE: low-rate run shed arrivals" >&2
+    exit 1
+fi
+echo "service smoke OK: byte-identical JSON across threads, sheds only under saturation"
+
+step "perf ledger: bench smokes + scale repros write real BENCH_sim.json rows"
+# 1-iteration smokes measure real (if noisy) rows; they land in the repo-root
+# ledger so the perf trajectory stays populated every CI run
+CARMA_BENCH_SMOKE=1 cargo bench --bench cluster_scale
+CARMA_BENCH_SMOKE=1 cargo bench --bench shard_scale
+CARMA_BENCH_SMOKE=1 cargo bench --bench gang_scale
+# the scale studies append their own comparison sections
+"$BIN" repro placement_scale
+"$BIN" repro service_scale
+for SECTION in shard_scale placement_scale service_scale; do
+    if ! grep -q "\"$SECTION\"" BENCH_sim.json; then
+        echo "LEDGER FAILURE: BENCH_sim.json is missing the $SECTION section" >&2
+        exit 1
+    fi
+done
+echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale and service_scale"
 
 echo
 echo "CI green."

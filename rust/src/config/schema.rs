@@ -456,6 +456,70 @@ impl Default for MonitorConfig {
     }
 }
 
+/// Arrival process of the open-loop service mode (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson process at the configured mean rate.
+    Poisson,
+    /// Sine-modulated (diurnal) non-homogeneous Poisson process.
+    Diurnal,
+    /// Flash crowd: base-rate Poisson with a 5x burst window mid-run.
+    Burst,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "poisson" => ArrivalKind::Poisson,
+            "diurnal" | "sine" => ArrivalKind::Diurnal,
+            "burst" | "bursty" | "flash" => ArrivalKind::Burst,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::Burst => "burst",
+        }
+    }
+}
+
+/// Open-loop service-mode configuration (TOML `[service]`,
+/// `--arrivals/--rate/--duration`; DESIGN.md §13). `arrivals = None` is the
+/// closed-loop batch simulator — the seed behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// `Some(kind)` switches the run to arrival-driven service mode.
+    pub arrivals: Option<ArrivalKind>,
+    /// Mean offered load in tasks per minute (the diurnal/burst processes
+    /// modulate around this base).
+    pub rate_per_min: f64,
+    /// Length of the arrival window in simulated seconds; tasks queued when
+    /// intake closes still drain to completion.
+    pub duration_s: f64,
+    /// Bounded per-shard queue depth: an arrival routed to a full shard is
+    /// shed deterministically (newest-first), and intake backpressures when
+    /// every shard sits at the cap.
+    pub queue_cap: usize,
+    /// Arrival-stream seed: the generator is a pure function of
+    /// `(kind, rate, duration, seed)`, independent of shards/threads.
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            arrivals: None,
+            rate_per_min: 6.0,
+            duration_s: 3600.0,
+            queue_cap: 16,
+            seed: 1,
+        }
+    }
+}
+
 /// Full CARMA configuration. `Default` = the paper's §4.4 default setup:
 /// MAGM + GPUMemNet + SMACT<=80% + MPS, no memory precondition.
 #[derive(Debug, Clone)]
@@ -479,6 +543,7 @@ pub struct CarmaConfig {
     pub monitor: MonitorConfig,
     pub power: PowerConfig,
     pub interference: InterferenceConfig,
+    pub service: ServiceConfig,
     pub artifacts_dir: String,
 }
 
@@ -501,6 +566,7 @@ impl Default for CarmaConfig {
             monitor: MonitorConfig::default(),
             power: PowerConfig::default(),
             interference: InterferenceConfig::default(),
+            service: ServiceConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -724,6 +790,30 @@ impl CarmaConfig {
         if let Some(v) = f64_of("interference.membw_alpha") {
             self.interference.membw_alpha = v;
         }
+        if let Some(v) = doc.get("service.arrivals").and_then(|v| v.as_str()) {
+            self.service.arrivals = if v.eq_ignore_ascii_case("off") {
+                None
+            } else {
+                Some(
+                    ArrivalKind::parse(v)
+                        .ok_or_else(|| format!("unknown arrival process '{v}'"))?,
+                )
+            };
+        }
+        if let Some(v) = f64_of("service.rate_per_min") {
+            self.service.rate_per_min = v;
+        }
+        if let Some(v) = f64_of("service.duration_s") {
+            self.service.duration_s = v;
+        }
+        if let Some(v) = doc.get("service.queue_cap").and_then(|v| v.as_i64()) {
+            self.service.queue_cap = usize::try_from(v)
+                .map_err(|_| format!("service.queue_cap must be positive, got {v}"))?;
+        }
+        if let Some(v) = doc.get("service.seed").and_then(|v| v.as_i64()) {
+            self.service.seed = u64::try_from(v)
+                .map_err(|_| format!("service.seed must be non-negative, got {v}"))?;
+        }
         if let Some(v) = doc.get("artifacts_dir").and_then(|v| v.as_str()) {
             self.artifacts_dir = v.to_string();
         }
@@ -818,6 +908,26 @@ impl CarmaConfig {
         }
         if self.monitor.window_s < self.monitor.sample_period_s {
             return Err("monitor.window_s must be >= sample period".into());
+        }
+        if self.service.rate_per_min <= 0.0 {
+            return Err(format!(
+                "service.rate_per_min must be positive, got {}",
+                self.service.rate_per_min
+            ));
+        }
+        if self.service.duration_s <= 0.0 {
+            return Err(format!(
+                "service.duration_s must be positive, got {}",
+                self.service.duration_s
+            ));
+        }
+        // the cap bounds per-shard queue depth; 0 would shed every arrival
+        // and a huge cap defeats the point of bounded admission
+        if !(1..=1_000_000).contains(&self.service.queue_cap) {
+            return Err(format!(
+                "service.queue_cap must be in 1..=1000000, got {}",
+                self.service.queue_cap
+            ));
         }
         Ok(())
     }
@@ -1032,6 +1142,43 @@ mod tests {
         assert!(CarmaConfig::default().apply(&doc).is_err());
         let doc = toml::parse("[coordinator]\nsteal = \"yes\"\n").unwrap();
         assert!(CarmaConfig::default().apply(&doc).is_err());
+    }
+
+    #[test]
+    fn service_section_applies() {
+        // the default stays the closed-loop batch simulator
+        let c = CarmaConfig::default();
+        assert_eq!(c.service.arrivals, None);
+
+        let doc = toml::parse(
+            "[service]\narrivals = \"diurnal\"\nrate_per_min = 12.0\n\
+             duration_s = 900.0\nqueue_cap = 4\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.service.arrivals, Some(ArrivalKind::Diurnal));
+        assert_eq!(c.service.rate_per_min, 12.0);
+        assert_eq!(c.service.duration_s, 900.0);
+        assert_eq!(c.service.queue_cap, 4);
+
+        // "off" switches back to closed loop
+        let doc = toml::parse("[service]\narrivals = \"off\"\n").unwrap();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.service.arrivals, None);
+
+        // typo'd processes and non-positive knobs are config errors
+        let doc = toml::parse("[service]\narrivals = \"pareto\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[service]\nrate_per_min = 0.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[service]\nduration_s = -10.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[service]\nqueue_cap = 0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        assert_eq!(ArrivalKind::parse("BURSTY"), Some(ArrivalKind::Burst));
+        assert_eq!(ArrivalKind::parse("poisson"), Some(ArrivalKind::Poisson));
+        assert_eq!(ArrivalKind::Diurnal.name(), "diurnal");
     }
 
     #[test]

@@ -38,8 +38,9 @@ use crate::sim::parallel::{resolve_threads, WorkerPool};
 use crate::sim::{Engine, Event, TaskId};
 use crate::util::units::GIB;
 use crate::workload::memsim;
+use crate::workload::model_zoo::ModelZoo;
 use crate::workload::task::TaskSpec;
-use crate::workload::trace::TraceSpec;
+use crate::workload::trace::{ArrivalGen, TraceSpec};
 
 use super::gang::{self, GangLane, GangPlan, ReservationBook};
 use super::monitor::Monitor;
@@ -74,6 +75,10 @@ enum RunState {
     /// or crashed more than MAX_OOM_RETRIES times — surfaced to the user
     /// instead of looping forever.
     Failed,
+    /// Rejected at admission by the open-loop load shedder (DESIGN.md §13):
+    /// the arrival found its routed shard's bounded queue full. Terminal —
+    /// a shed task never queues, runs, or recovers.
+    Shed,
 }
 
 /// Bounded recovery (paper §6 lists "more adaptive recovery methods" as
@@ -170,17 +175,44 @@ pub struct Carma {
     gang_lane: GangLane,
     /// Pending gang holds (per-GPU reservations the mappers must respect).
     book: ReservationBook,
+    /// Open-loop service mode (DESIGN.md §13): the streaming arrival
+    /// generator. `None` = closed-loop trace replay (the default).
+    arrival_gen: Option<ArrivalGen>,
+    /// The drawn-but-not-yet-arrived submission: exactly one arrival event
+    /// is in flight at a time, and its spec waits here until the
+    /// `ServiceArrival` commits on the driver thread — which is what keeps
+    /// the arrival stream byte-identical at every shard/thread count.
+    pending_arrival: Option<TaskSpec>,
+    /// True while the generator may still emit (run loops must not exit on
+    /// an all-done task set before intake closes).
+    intake_open: bool,
 }
 
 impl Carma {
     pub fn new(cfg: CarmaConfig, estimator: Box<dyn MemoryEstimator>, trace: &TraceSpec) -> Carma {
         let cluster = Cluster::new(ClusterTopology::from_config(&cfg.cluster));
         let n = trace.tasks.len();
+        let service = cfg.service.arrivals.is_some();
+        assert!(
+            !service || n == 0,
+            "open-loop service mode streams its own arrivals; pass an empty trace"
+        );
+        // expected offered load sizes the event lanes when the trace is
+        // empty (open-loop runs grow the task set as arrivals commit)
+        let n_est = if service {
+            n.max((cfg.service.rate_per_min / 60.0 * cfg.service.duration_s).ceil() as usize)
+        } else {
+            n
+        };
         let monitor = Monitor::new(cluster.n_gpus(), cfg.monitor.window_s);
         let shards = cfg.coordinator.shards;
         let threads = resolve_threads(cfg.engine.threads);
         let mut recorder = Recorder::new(n, cluster.n_gpus());
         recorder.n_shards = shards;
+        if service {
+            recorder.open_loop = true;
+            recorder.util_window_s = cfg.monitor.window_s;
+        }
         // gang fail-fast ceiling: best-case assemblable whole-GPU capacity,
         // intersected per server (MIG partitioning, power-dead servers and
         // power-slot headroom all on the same server subset) — a gang wider
@@ -188,13 +220,16 @@ impl Carma {
         // (DESIGN.md §11)
         let gang_ceiling =
             gang::gang_gpu_ceiling(&cluster.topo, &cfg.power, cfg.cluster.power_cap_w);
-        let admission = Admission::new(
+        let mut admission = Admission::new(
             shards,
             n,
             cfg.coordinator.assign,
             cluster.topo.admissible_ceilings(cfg.power.idle_w),
             gang_ceiling,
         );
+        if service {
+            admission = admission.with_queue_cap(cfg.service.queue_cap);
+        }
         let mut fabric = Fabric::new(&cluster.topo, &cfg.fabric);
         // home-server affinity skips power-dead servers (a server whose
         // idle floor meets its envelope can never admit work): after a
@@ -230,6 +265,15 @@ impl Carma {
                 pinned: false,
             })
             .collect();
+        let arrival_gen = cfg.service.arrivals.map(|kind| {
+            ArrivalGen::new(
+                &ModelZoo::load(),
+                kind,
+                cfg.service.rate_per_min,
+                cfg.service.duration_s,
+                cfg.service.seed,
+            )
+        });
         Carma {
             cfg,
             // lane 0 carries the arrival bulk + monitor/recovery traffic;
@@ -237,8 +281,8 @@ impl Carma {
             // churn (~8 events per task in flight across reschedules)
             engine: Engine::with_lane_capacities(
                 1 + shards,
-                2 * n + 16,
-                (8 * n) / shards.max(1) + 16,
+                2 * n_est + 16,
+                (8 * n_est) / shards.max(1) + 16,
             ),
             cluster,
             tasks,
@@ -255,6 +299,9 @@ impl Carma {
             fabric,
             gang_lane: GangLane::new(),
             book,
+            intake_open: arrival_gen.is_some(),
+            arrival_gen,
+            pending_arrival: None,
         }
     }
 
@@ -264,10 +311,16 @@ impl Carma {
     }
 
     /// Run the whole trace to completion; returns the paper's metric set.
+    /// In open-loop service mode the trace is empty and arrivals stream in
+    /// from the generator instead (DESIGN.md §13).
     pub fn run(mut self, label: &str) -> RunOutcome {
-        for t in &self.tasks {
-            self.engine
-                .schedule(t.spec.arrival_s, Event::TaskArrival(t.spec.id));
+        if self.intake_open {
+            self.schedule_next_arrival();
+        } else {
+            for t in &self.tasks {
+                self.engine
+                    .schedule(t.spec.arrival_s, Event::TaskArrival(t.spec.id));
+            }
         }
         self.engine
             .schedule_in(self.cfg.monitor.sample_period_s, Event::MonitorSample);
@@ -277,6 +330,7 @@ impl Carma {
         } else {
             self.run_serial();
         }
+        assert!(!self.intake_open, "run ended with the arrival stream open");
         assert_eq!(
             self.done_count,
             self.tasks.len(),
@@ -289,11 +343,19 @@ impl Carma {
         }
     }
 
+    /// All work drained AND no further arrivals can come — the only state
+    /// the run loops may exit in. `done_count == tasks.len()` alone is not
+    /// enough in open-loop mode: the current task set can be fully done
+    /// while the next arrival is still in flight.
+    fn drained(&self) -> bool {
+        !self.intake_open && self.done_count == self.tasks.len()
+    }
+
     fn run_serial(&mut self) {
         while let Some((_, ev)) = self.engine.pop() {
             self.count_event();
             self.handle_event(ev);
-            if self.done_count == self.tasks.len() {
+            if self.drained() {
                 break;
             }
         }
@@ -310,7 +372,7 @@ impl Carma {
             for (_, ev) in buf.drain(..) {
                 self.count_event();
                 self.handle_event(ev);
-                if self.done_count == self.tasks.len() {
+                if self.drained() {
                     break 'quantum;
                 }
             }
@@ -337,6 +399,7 @@ impl Carma {
             Event::GangRetry => self.on_gang_retry(),
             Event::GangHoldExpire(id, epoch) => self.on_gang_hold_expire(id, epoch),
             Event::StealCheck(shard) => self.on_steal_check(shard),
+            Event::ServiceArrival => self.on_service_arrival(),
         }
     }
 
@@ -368,6 +431,99 @@ impl Carma {
         self.feed(shard);
         // the new backlog may give an idle sibling something to steal
         self.arm_steal_checks();
+    }
+
+    // -- open-loop service mode (DESIGN.md §13) ------------------------------
+
+    /// Draw the next submission from the arrival generator and schedule its
+    /// `ServiceArrival` on the global lane; close the intake when the
+    /// generator's window ends. Exactly one arrival is in flight at a time,
+    /// and the generator only advances here — on the driver thread, in
+    /// commit order — so the stream is identical at every thread count.
+    fn schedule_next_arrival(&mut self) {
+        let Some(gen) = self.arrival_gen.as_mut() else {
+            self.intake_open = false;
+            return;
+        };
+        match gen.next_task() {
+            Some(spec) => {
+                let t = spec.arrival_s;
+                self.pending_arrival = Some(spec);
+                self.engine.schedule(t, Event::ServiceArrival);
+            }
+            None => self.intake_open = false,
+        }
+    }
+
+    /// An open-loop arrival commits: materialize the pending spec as a new
+    /// task, run it through bounded admission — shed at the door if every
+    /// shard's queue sits at the cap, shed on per-shard backpressure if the
+    /// routed shard is full — then draw the next arrival.
+    fn on_service_arrival(&mut self) {
+        let Some(spec) = self.pending_arrival.take() else {
+            return;
+        };
+        let id = spec.id;
+        debug_assert_eq!(id, self.tasks.len(), "arrival ids must be sequential");
+        let remaining = spec.work_s;
+        self.tasks.push(TaskRun {
+            spec,
+            state: RunState::Pending,
+            gpus: Vec::new(),
+            instances: Vec::new(),
+            segs: Vec::new(),
+            ramp: Vec::new(),
+            next_ramp: 0,
+            remaining_s: remaining,
+            speed: 0.0,
+            last_progress_t: 0.0,
+            version: 0,
+            in_recovery: false,
+            admitted_est_gb: None,
+            pinned: false,
+        });
+        self.recorder.ensure_task(id);
+        let t = self.engine.now();
+        self.recorder.on_arrival(id, t);
+        self.tasks[id].state = RunState::Queued;
+        if self.tasks[id].spec.gang {
+            // the generator emits singletons only, but route a gang the
+            // closed-loop way if one ever shows up (gangs are never shed:
+            // the bounded queues guard the shard mappers, not the gang lane)
+            self.recorder.on_gang_arrival(id);
+            self.admission.submit_gang(id);
+            self.feed_gang();
+            self.schedule_next_arrival();
+            return;
+        }
+        if self.admission.saturated() {
+            // cluster-wide ceiling: every shard's queue is at the cap —
+            // shed at the door, before routing
+            self.shed(id, true);
+        } else {
+            let loads = self.shard_loads();
+            let home = self.fabric.home_server(id);
+            match self.admission.try_submit(id, &loads, home) {
+                Ok(shard) => {
+                    self.recorder.on_assigned(id, shard);
+                    self.feed(shard);
+                    self.arm_steal_checks();
+                }
+                // per-shard backpressure: the routed shard is full (routing
+                // is not retried — sticky/locality semantics stay intact)
+                Err(_) => self.shed(id, false),
+            }
+        }
+        self.schedule_next_arrival();
+    }
+
+    /// Deterministic load shedding: the newest arrival is the one dropped,
+    /// terminally. Sheds count toward `done_count` so drain/termination
+    /// accounting holds.
+    fn shed(&mut self, id: TaskId, at_door: bool) {
+        self.tasks[id].state = RunState::Shed;
+        self.recorder.on_shed(id, self.engine.now(), at_door);
+        self.done_count += 1;
     }
 
     /// Per-shard load (queued + under observation) for least-loaded routing.
@@ -1215,7 +1371,10 @@ impl Carma {
             self.monitor.push(g, now, smact);
             self.recorder.on_sample(g, now, dt, mem, smact, power);
         }
-        if self.done_count < self.tasks.len() {
+        // keep sampling while work remains OR the intake can still emit:
+        // open-loop idle gaps must stay covered so utilization windows keep
+        // closing on schedule (DESIGN.md §13)
+        if self.done_count < self.tasks.len() || self.intake_open {
             self.engine.schedule_in(dt, Event::MonitorSample);
         }
     }
@@ -1369,6 +1528,25 @@ pub fn run_trace(
     label: &str,
 ) -> RunOutcome {
     Carma::new(cfg, estimator, trace).run(label)
+}
+
+/// Convenience: run one configuration in open-loop service mode
+/// (`cfg.service.arrivals` selects the process; DESIGN.md §13). Arrivals
+/// stream from the seeded generator instead of a pre-materialized trace.
+pub fn run_service(
+    cfg: CarmaConfig,
+    estimator: Box<dyn MemoryEstimator>,
+    label: &str,
+) -> RunOutcome {
+    assert!(
+        cfg.service.arrivals.is_some(),
+        "run_service needs cfg.service.arrivals set"
+    );
+    let empty = TraceSpec {
+        name: "service".to_string(),
+        tasks: Vec::new(),
+    };
+    Carma::new(cfg, estimator, &empty).run(label)
 }
 
 /// Label helper used by the experiments: "MAGM+MPS+GPUMemNet(80%,5GB)".
@@ -1648,5 +1826,77 @@ mod tests {
         assert_eq!(run_label(&c, "GPUMemNet"), "MAGM+MPS+GPUMemNet(80%,5GB)");
         c.policy = PolicyKind::Exclusive;
         assert!(run_label(&c, "none").starts_with("Exclusive"));
+    }
+
+    fn service_cfg(
+        kind: crate::config::schema::ArrivalKind,
+        rate_per_min: f64,
+        duration_s: f64,
+        queue_cap: usize,
+    ) -> (CarmaConfig, Box<dyn MemoryEstimator>) {
+        use crate::config::schema::ClusterConfig;
+        let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        c.cluster = ClusterConfig::homogeneous(1, 4, 40.0);
+        c.safety_margin_gb = 2.0;
+        c.service.arrivals = Some(kind);
+        c.service.rate_per_min = rate_per_min;
+        c.service.duration_s = duration_s;
+        c.service.queue_cap = queue_cap;
+        (c, e)
+    }
+
+    #[test]
+    fn open_loop_low_rate_completes_without_sheds() {
+        use crate::config::schema::ArrivalKind;
+        // ~20 offered tasks against a cap of 64: the queue can never fill,
+        // so nothing may be shed and everything admitted must finish
+        let (c, e) = service_cfg(ArrivalKind::Poisson, 1.0, 1200.0, 64);
+        let out = run_service(c, e, "svc-low");
+        assert!(out.recorder.tasks.len() > 1, "generator must emit tasks");
+        assert_eq!(out.recorder.shed_total, 0, "low rate must not shed");
+        assert_eq!(out.report.completed + out.recorder.failed_total as usize,
+                   out.recorder.tasks.len());
+        assert!(out.report.service.open_loop);
+        assert!(out.report.service.util_windows > 0, "windows must close");
+    }
+
+    #[test]
+    fn open_loop_saturating_rate_sheds_terminally() {
+        use crate::config::schema::ArrivalKind;
+        // ~300 offered tasks against one shard capped at 2: most arrivals
+        // must shed, and a shed task is terminal — never dispatched
+        let (c, e) = service_cfg(ArrivalKind::Burst, 60.0, 300.0, 2);
+        let out = run_service(c, e, "svc-hot");
+        assert!(out.recorder.shed_total > 0, "saturation must shed");
+        let mut terminal = 0usize;
+        for t in &out.recorder.tasks {
+            if t.shed_s.is_some() {
+                assert!(t.dispatched_s.is_none(), "shed task was dispatched");
+                assert!(t.completed_s.is_none(), "shed task completed");
+                terminal += 1;
+            }
+        }
+        assert_eq!(terminal as u64, out.recorder.shed_total);
+        assert!(
+            out.report.service.rejection_rate > 0.0
+                && out.report.service.rejection_rate < 1.0
+        );
+    }
+
+    #[test]
+    fn open_loop_run_is_deterministic_across_repeats() {
+        use crate::config::schema::ArrivalKind;
+        let mk = || {
+            let (c, e) = service_cfg(ArrivalKind::Diurnal, 12.0, 600.0, 4);
+            run_service(c, e, "svc-det")
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(
+            a.report.to_json().to_string_pretty(),
+            b.report.to_json().to_string_pretty(),
+            "open-loop JSON must be byte-identical across repeats"
+        );
+        assert_eq!(a.events, b.events);
     }
 }

@@ -47,6 +47,12 @@ pub struct Admission {
     shard_of: Vec<Option<usize>>,
     /// Round-robin routing cursor (fresh arrivals only).
     rr_next: usize,
+    /// Bounded per-shard queue depth (open-loop service mode, DESIGN.md
+    /// §13): an arrival routed to a shard already holding this many queued
+    /// tasks is shed. `None` = unbounded intake — the closed-loop seed
+    /// behavior. Recovery re-queues bypass the cap: the task is already
+    /// admitted and holds progress.
+    queue_cap: Option<usize>,
     /// Static ceilings from `ClusterTopology::admissible_ceilings`:
     /// (max GPUs on one admissible server, max memory one target offers).
     max_gpus: usize,
@@ -72,6 +78,7 @@ impl Admission {
             gang: TaskQueues::new(),
             shard_of: vec![None; n_tasks],
             rr_next: 0,
+            queue_cap: None,
             max_gpus: ceilings.0,
             max_target_gb: ceilings.1,
             max_cluster_gpus: cluster_gpus,
@@ -82,20 +89,24 @@ impl Admission {
         self.queues.len()
     }
 
-    /// Route an arriving singleton task to a shard and enqueue it.
-    /// `mapper_load[s]` is shard `s`'s current load (queued + under
-    /// observation), consulted by the least-loaded strategy. `home` is the
-    /// task's home-server affinity from the fabric model (DESIGN.md §11),
-    /// consulted by the locality strategy — `None` (no affinity, e.g. a
-    /// single-server cluster) falls back to sticky id-modulo routing.
-    pub fn submit(&mut self, id: TaskId, mapper_load: &[usize], home: Option<usize>) -> usize {
+    /// Bound every shard's queue depth (open-loop service mode, DESIGN.md
+    /// §13). Closed-loop runs never call this — intake stays unbounded,
+    /// byte-preserving the seed behavior.
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        assert!(cap >= 1, "a zero queue cap would shed every arrival");
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Pure routing decision — which shard `submit` would pick, with no
+    /// state change. Split out so bounded intake can shed an arrival
+    /// without advancing the round-robin cursor (a shed must leave the
+    /// router exactly as it found it, or shard routing would depend on how
+    /// many tasks were dropped before this one).
+    fn route(&self, id: TaskId, mapper_load: &[usize], home: Option<usize>) -> usize {
         let n = self.queues.len();
-        let shard = match self.strategy {
-            ShardAssign::RoundRobin => {
-                let s = self.rr_next % n;
-                self.rr_next += 1;
-                s
-            }
+        match self.strategy {
+            ShardAssign::RoundRobin => self.rr_next % n,
             ShardAssign::LeastLoaded => {
                 debug_assert_eq!(mapper_load.len(), n);
                 let mut best = 0usize;
@@ -116,10 +127,66 @@ impl Admission {
                 Some(h) => h % n,
                 None => (splitmix64(id as u64) % n as u64) as usize,
             },
-        };
+        }
+    }
+
+    /// Commit an accepted routing decision: advance the cursor, record the
+    /// sticky home shard and enqueue.
+    fn commit(&mut self, id: TaskId, shard: usize) {
+        if matches!(self.strategy, ShardAssign::RoundRobin) {
+            self.rr_next += 1;
+        }
+        if id >= self.shard_of.len() {
+            // open-loop intake: ids stream in unbounded, grow the map
+            self.shard_of.resize(id + 1, None);
+        }
         self.shard_of[id] = Some(shard);
         self.queues[shard].submit(id);
+    }
+
+    /// Route an arriving singleton task to a shard and enqueue it.
+    /// `mapper_load[s]` is shard `s`'s current load (queued + under
+    /// observation), consulted by the least-loaded strategy. `home` is the
+    /// task's home-server affinity from the fabric model (DESIGN.md §11),
+    /// consulted by the locality strategy — `None` (no affinity, e.g. a
+    /// single-server cluster) falls back to sticky id-modulo routing.
+    pub fn submit(&mut self, id: TaskId, mapper_load: &[usize], home: Option<usize>) -> usize {
+        let shard = self.route(id, mapper_load, home);
+        self.commit(id, shard);
         shard
+    }
+
+    /// Bounded intake (open-loop service mode, DESIGN.md §13): route
+    /// exactly like [`submit`], but shed the arrival — leaving the router
+    /// untouched — when the routed shard's queue already sits at the cap.
+    /// The shed policy is newest-first by construction: the task that
+    /// finds the queue full is the one dropped, deterministically.
+    pub fn try_submit(
+        &mut self,
+        id: TaskId,
+        mapper_load: &[usize],
+        home: Option<usize>,
+    ) -> Result<usize, &'static str> {
+        let shard = self.route(id, mapper_load, home);
+        if self.backpressured(shard) {
+            return Err("routed shard's queue at capacity");
+        }
+        self.commit(id, shard);
+        Ok(shard)
+    }
+
+    /// The named shard's queue sits at the configured cap (always `false`
+    /// with unbounded intake).
+    pub fn backpressured(&self, shard: usize) -> bool {
+        self.queue_cap
+            .is_some_and(|cap| self.queues[shard].len() >= cap)
+    }
+
+    /// Every shard sits at the cap — the cluster-wide backpressure signal:
+    /// the intake sheds at the door without consulting the router.
+    pub fn saturated(&self) -> bool {
+        self.queue_cap
+            .is_some_and(|cap| self.queues.iter().all(|q| q.len() >= cap))
     }
 
     /// Enqueue an arriving gang task on the dedicated lane (DESIGN.md §11).
@@ -130,7 +197,12 @@ impl Admission {
     /// Re-queue an OOM-crashed task with priority (paper §4.2) on the shard
     /// that already owns it — recovery never migrates a task.
     pub fn submit_recovery(&mut self, id: TaskId) -> usize {
-        let shard = self.shard_of[id].expect("recovery of a never-admitted task");
+        let shard = self
+            .shard_of
+            .get(id)
+            .copied()
+            .flatten()
+            .expect("recovery of a never-admitted task");
         self.queues[shard].submit_recovery(id);
         shard
     }
@@ -383,6 +455,47 @@ mod tests {
         assert!(a.admissible(8, None, true).is_ok());
         assert!(a.admissible(9, None, true).is_err());
         assert!(a.admissible(5, Some(40.5), true).is_err(), "demand cap still applies");
+    }
+
+    #[test]
+    fn bounded_intake_sheds_at_cap_without_moving_the_cursor() {
+        let mut a = adm(2, ShardAssign::RoundRobin).with_queue_cap(1);
+        assert_eq!(a.try_submit(0, &[0; 2], None), Ok(0));
+        assert_eq!(a.try_submit(1, &[0; 2], None), Ok(1));
+        // both shards at cap: saturated, and the next arrival is shed
+        assert!(a.backpressured(0) && a.backpressured(1));
+        assert!(a.saturated());
+        assert!(a.try_submit(2, &[0; 2], None).is_err());
+        assert_eq!(a.shard_of(2), None, "a shed task never gets a home shard");
+        assert_eq!(a.len(), 2);
+        // the shed did NOT advance the round-robin cursor: after shard 0
+        // drains, the next accepted arrival routes to shard 0 again
+        assert_eq!(a.pop_next(0), Some((0, false)));
+        assert!(!a.saturated());
+        assert_eq!(a.try_submit(3, &[0; 2], None), Ok(0));
+    }
+
+    #[test]
+    fn recovery_bypasses_the_queue_cap() {
+        let mut a = adm(1, ShardAssign::RoundRobin).with_queue_cap(1);
+        assert_eq!(a.try_submit(0, &[0], None), Ok(0));
+        assert_eq!(a.pop_next(0), Some((0, false)));
+        assert_eq!(a.try_submit(1, &[0], None), Ok(0));
+        // shard 0 is at cap; the crashed task still re-queues with priority
+        assert!(a.backpressured(0));
+        assert_eq!(a.submit_recovery(0), 0);
+        assert_eq!(a.pop_next(0), Some((0, true)));
+    }
+
+    #[test]
+    fn open_intake_grows_the_shard_map() {
+        // n_tasks = 16 at construction, but open-loop ids stream past it
+        let mut a = adm(2, ShardAssign::Locality);
+        assert!(a.try_submit(40, &[0; 2], None).is_ok());
+        assert!(a.shard_of(40).is_some());
+        assert_eq!(a.shard_of(39), None);
+        // unbounded intake never backpressures
+        assert!(!a.backpressured(0) && !a.saturated());
     }
 
     #[test]

@@ -69,7 +69,9 @@ fn one_run(
 ) -> Result<Row, String> {
     let c = cfg(shards, threads, artifacts_dir);
     let est = estimators::build(c.estimator, artifacts_dir)?;
-    let label = format!("{system}/{shards}-shard/{threads}-thread");
+    // threads stay OUT of the label: the label is embedded in the results
+    // JSON, and the thread sweep asserts that JSON is byte-identical
+    let label = format!("{system}/{shards}-shard");
     let t0 = Instant::now();
     let out = run_trace(c, est, trace, &label);
     let wall_s = t0.elapsed().as_secs_f64();

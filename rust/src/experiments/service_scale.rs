@@ -1,0 +1,265 @@
+//! Service-scale study (DESIGN.md §13): open-loop arrival-driven scheduling
+//! with bounded admission and load shedding.
+//!
+//! Fixed substrate (4 servers × 4 GPUs, MAGM+MPS+oracle), three arrival
+//! processes — homogeneous Poisson, diurnal (sine-modulated) and bursty
+//! flash-crowd — each swept over coordinator shards {1, 4} × engine
+//! threads {1, 4} at a **saturating** offered rate against a small
+//! per-shard queue cap, plus one low-rate control run per process.
+//!
+//! The study asserts the acceptance criteria:
+//!
+//! * the results JSON is byte-identical across engine threads within every
+//!   (process, shards) cell — the §10 guarantee extended over the arrival
+//!   generator, the shed path and the windowed steady-state metrics;
+//! * the saturating rate sheds a nonzero number of arrivals under every
+//!   process, and every shed is terminal (never dispatched);
+//! * the low-rate control sheds nothing and completes everything admitted.
+//!
+//! The per-process steady-state summary is appended to the `BENCH_sim.json`
+//! perf ledger under `service_scale`.
+
+use std::time::Instant;
+
+use crate::bench;
+use crate::config::schema::{ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
+use crate::coordinator::carma::run_service;
+use crate::estimators;
+use crate::metrics::report::RunReport;
+use crate::util::json::{self, Json};
+
+use super::common::{save_json, DEFAULT_SEED};
+
+pub const SERVERS: usize = 4;
+pub const GPUS_PER_SERVER: usize = 4;
+/// Saturating offered load: well beyond what 16 GPUs drain with a
+/// per-shard queue cap of 4, so the shedder must engage.
+pub const HOT_RATE_PER_MIN: f64 = 60.0;
+/// Control load: a handful of tasks against a deep queue — nothing sheds.
+pub const LOW_RATE_PER_MIN: f64 = 1.0;
+pub const DURATION_S: f64 = 600.0;
+pub const HOT_QUEUE_CAP: usize = 4;
+const LOW_QUEUE_CAP: usize = 64;
+const KINDS: &[ArrivalKind] = &[ArrivalKind::Poisson, ArrivalKind::Diurnal, ArrivalKind::Burst];
+const SHARD_SWEEP: &[usize] = &[1, 4];
+const THREAD_SWEEP: &[usize] = &[1, 4];
+
+fn cfg(
+    kind: ArrivalKind,
+    rate_per_min: f64,
+    queue_cap: usize,
+    shards: usize,
+    threads: usize,
+    artifacts_dir: &str,
+) -> CarmaConfig {
+    let mut cfg = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    cfg.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    cfg.coordinator.shards = shards;
+    cfg.engine.threads = threads;
+    cfg.service.arrivals = Some(kind);
+    cfg.service.rate_per_min = rate_per_min;
+    cfg.service.duration_s = DURATION_S;
+    cfg.service.queue_cap = queue_cap;
+    cfg.service.seed = DEFAULT_SEED;
+    cfg.artifacts_dir = artifacts_dir.to_string();
+    cfg
+}
+
+struct Row {
+    kind: ArrivalKind,
+    rate_per_min: f64,
+    shards: usize,
+    threads: usize,
+    report: RunReport,
+    events: u64,
+    wall_s: f64,
+}
+
+fn one_run(
+    kind: ArrivalKind,
+    rate_per_min: f64,
+    queue_cap: usize,
+    shards: usize,
+    threads: usize,
+    artifacts_dir: &str,
+) -> Result<Row, String> {
+    let c = cfg(kind, rate_per_min, queue_cap, shards, threads, artifacts_dir);
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    // threads stay OUT of the label: the label is embedded in the results
+    // JSON, and the thread sweep asserts that JSON is byte-identical
+    let label = format!("{}/{shards}-shard", kind.name());
+    let t0 = Instant::now();
+    let out = run_service(c, est, &label);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = &out.report.service;
+    if !s.open_loop {
+        return Err(format!("{label}: report is not flagged open-loop"));
+    }
+    if s.offered == 0 {
+        return Err(format!("{label}: the generator emitted no arrivals"));
+    }
+    // every offered task must be terminal: completed, failed, or shed
+    let terminal = out.report.completed + out.recorder.failed_total as usize + s.shed as usize;
+    if terminal != s.offered {
+        return Err(format!(
+            "{label}: {terminal} terminal of {} offered — the drain leaked tasks",
+            s.offered
+        ));
+    }
+    // a shed task is terminal at the door: it can never have dispatched
+    for t in &out.recorder.tasks {
+        if t.shed_s.is_some() && t.dispatched_s.is_some() {
+            return Err(format!("{label}: a shed task was also dispatched"));
+        }
+    }
+    Ok(Row {
+        kind,
+        rate_per_min,
+        shards,
+        threads,
+        report: out.report,
+        events: out.events,
+        wall_s,
+    })
+}
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    println!(
+        "Service scale: {SERVERS}×{GPUS_PER_SERVER} GPUs, open-loop arrivals for {DURATION_S:.0}s, \
+         seed {DEFAULT_SEED}\n\
+         (MAGM+MPS+oracle; saturating {HOT_RATE_PER_MIN:.0}/min vs control {LOW_RATE_PER_MIN:.0}/min, \
+         queue cap {HOT_QUEUE_CAP} vs {LOW_QUEUE_CAP})\n"
+    );
+    println!(
+        "{:<24} {:>7} {:>8} {:>8} {:>6} {:>7} {:>8} {:>9} {:>9} {:>9}",
+        "process", "shards", "threads", "offered", "shed", "reject", "p50(s)", "p99(s)", "smact", "wall(s)"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &kind in KINDS {
+        for &shards in SHARD_SWEEP {
+            let mut json_bits: Option<String> = None;
+            for &threads in THREAD_SWEEP {
+                let row = one_run(
+                    kind,
+                    HOT_RATE_PER_MIN,
+                    HOT_QUEUE_CAP,
+                    shards,
+                    threads,
+                    artifacts_dir,
+                )?;
+                print_row(&row);
+                // the §10 guarantee over the open-loop path: engine threads
+                // change wall-clock only — results JSON must be byte-equal
+                let j = row.report.to_json().to_string_pretty();
+                match &json_bits {
+                    None => json_bits = Some(j),
+                    Some(prev) => {
+                        if *prev != j {
+                            return Err(format!(
+                                "{}/{shards} shards: {threads} engine threads changed \
+                                 the open-loop results",
+                                kind.name()
+                            ));
+                        }
+                    }
+                }
+                if row.report.service.shed == 0 {
+                    return Err(format!(
+                        "{}/{shards} shards: saturating rate shed nothing",
+                        kind.name()
+                    ));
+                }
+                rows.push(row);
+            }
+        }
+        // low-rate control: the queue never fills, so nothing may shed
+        let control = one_run(kind, LOW_RATE_PER_MIN, LOW_QUEUE_CAP, 1, 1, artifacts_dir)?;
+        print_row(&control);
+        if control.report.service.shed != 0 {
+            return Err(format!(
+                "{}: low-rate control shed {} arrivals",
+                kind.name(),
+                control.report.service.shed
+            ));
+        }
+        rows.push(control);
+    }
+
+    let out_rows: Vec<Json> = rows
+        .iter()
+        .map(|row| {
+            let mut j = row.report.to_json();
+            j.set("process", json::s(row.kind.name()));
+            j.set("rate_per_min", json::num(row.rate_per_min));
+            j.set("shards", json::num(row.shards as f64));
+            j.set("threads", json::num(row.threads as f64));
+            j.set("events", json::num(row.events as f64));
+            j.set("wall_s", json::num(row.wall_s));
+            j
+        })
+        .collect();
+    save_json("service_scale", artifacts_dir, &json::arr(out_rows));
+
+    // perf-ledger rows: one steady-state summary per arrival process at the
+    // saturating rate (BENCH_sim.json accumulates across PRs)
+    let ledger: Vec<Json> = KINDS
+        .iter()
+        .map(|&kind| {
+            let r = rows
+                .iter()
+                .find(|r| r.kind == kind && r.rate_per_min == HOT_RATE_PER_MIN)
+                .expect("hot rows exist");
+            let s = &r.report.service;
+            json::obj(vec![
+                ("process", json::s(kind.name())),
+                ("servers", json::num(SERVERS as f64)),
+                ("gpus_per_server", json::num(GPUS_PER_SERVER as f64)),
+                ("rate_per_min", json::num(HOT_RATE_PER_MIN)),
+                ("duration_s", json::num(DURATION_S)),
+                ("queue_cap", json::num(HOT_QUEUE_CAP as f64)),
+                ("seed", json::num(DEFAULT_SEED as f64)),
+                ("offered", json::num(s.offered as f64)),
+                ("shed", json::num(s.shed as f64)),
+                ("rejection_rate", json::num(s.rejection_rate)),
+                ("queue_delay_p50_s", json::num(s.queue_delay_p50_s)),
+                ("queue_delay_p99_s", json::num(s.queue_delay_p99_s)),
+                ("win_smact_mean", json::num(s.win_smact_mean)),
+                ("events", json::num(r.events as f64)),
+                ("wall_s", json::num(r.wall_s)),
+            ])
+        })
+        .collect();
+    bench::save_bench_section("service_scale", ledger);
+
+    println!(
+        "\nReading: the open-loop intake turns the simulator into a service —\n\
+         arrivals stream from a seeded generator, bounded per-shard queues\n\
+         shed deterministically under saturation, and the steady-state\n\
+         summary (rejection rate, queueing-delay percentiles, windowed\n\
+         utilization) stays byte-identical at every shard and thread count."
+    );
+    Ok(())
+}
+
+fn print_row(row: &Row) {
+    let s = &row.report.service;
+    println!(
+        "{:<24} {:>7} {:>8} {:>8} {:>6} {:>7.3} {:>8.1} {:>9.1} {:>9.3} {:>9.2}",
+        format!("{}@{:.0}/min", row.kind.name(), row.rate_per_min),
+        row.shards,
+        row.threads,
+        s.offered,
+        s.shed,
+        s.rejection_rate,
+        s.queue_delay_p50_s,
+        s.queue_delay_p99_s,
+        s.win_smact_mean,
+        row.wall_s,
+    );
+}

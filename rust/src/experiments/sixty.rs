@@ -2,10 +2,28 @@
 //! its energy accounting (§5.6).
 
 use crate::config::schema::{CollocationMode, EstimatorKind, PolicyKind};
+use crate::coordinator::carma::RunOutcome;
+use crate::metrics::report::RunReport;
 use crate::util::json;
 use crate::workload::trace::trace_60;
 
 use super::common::{exclusive, run_grid, save_json, save_results, zoo, RunCfg, DEFAULT_SEED};
+
+/// The exclusive baseline (first row) and the GPUMemNet run (last row) of a
+/// comparison grid. A grid edit that leaves fewer than two runs must surface
+/// as a proper error — the old `out.last().unwrap()` aborted the whole repro
+/// sweep on an empty grid instead.
+fn first_last(out: &[(String, RunOutcome)]) -> Result<(&RunReport, &RunReport), String> {
+    if out.len() < 2 {
+        return Err(format!(
+            "comparison grid needs at least 2 runs (baseline + candidate), got {}",
+            out.len()
+        ));
+    }
+    let first = out.first().expect("len checked");
+    let last = out.last().expect("len checked");
+    Ok((&first.1.report, &last.1.report))
+}
 
 fn grid() -> Vec<RunCfg> {
     vec![
@@ -36,8 +54,7 @@ pub fn table6(artifacts_dir: &str) -> Result<(), String> {
     for (label, o) in &out {
         println!("{:<44} {:>12}", label, o.report.oom_crashes);
     }
-    let excl = &out[0].1.report;
-    let gmn = &out[7].1.report;
+    let (excl, gmn) = first_last(&out)?;
     assert_eq!(excl.oom_crashes, 0);
     println!(
         "\nGPUMemNet run: {} OOMs (paper: 1, the fewest among collocating runs)",
@@ -54,8 +71,7 @@ pub fn fig11(artifacts_dir: &str) -> Result<(), String> {
     let out = run_grid(&trace, &grid(), artifacts_dir);
     save_results("fig11", artifacts_dir, &out);
 
-    let excl = &out[0].1.report;
-    let gmn = &out[7].1.report;
+    let (excl, gmn) = first_last(&out)?;
     println!(
         "\nMAGM+GPUMemNet(80%) vs Exclusive: total {:+.1}% (paper: -26.7%), exec {:+.1}% \
          (paper: increases), waiting {:+.1}% (paper: large reduction)",
@@ -89,8 +105,7 @@ pub fn table7(artifacts_dir: &str) -> Result<(), String> {
     for (label, o) in &out {
         println!("{:<44} {:>22.2}", label, o.report.energy_mj);
     }
-    let excl = &out[0].1.report;
-    let gmn = out.last().unwrap().1.report.clone();
+    let (excl, gmn) = first_last(&out)?;
     let red = (excl.energy_mj - gmn.energy_mj) / excl.energy_mj * 100.0;
     println!(
         "\nMAGM+GPUMemNet on MPS: {:.2} MJ vs Exclusive {:.2} MJ = -{red:.1}% \
@@ -107,4 +122,34 @@ pub fn table7(artifacts_dir: &str) -> Result<(), String> {
         ]),
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::Recorder;
+
+    fn outcome(label: &str) -> (String, RunOutcome) {
+        let r = Recorder::new(0, 0);
+        let report = RunReport::from_recorder(label, &r);
+        (label.to_string(), RunOutcome { report, recorder: r, events: 0 })
+    }
+
+    #[test]
+    fn first_last_rejects_degenerate_grids() {
+        // regression: table7 used `out.last().unwrap()` and aborted on an
+        // empty grid; degenerate grids must be errors, not panics
+        let empty: Vec<(String, RunOutcome)> = Vec::new();
+        assert!(first_last(&empty).is_err());
+        let one = vec![outcome("only")];
+        assert!(first_last(&one).is_err());
+    }
+
+    #[test]
+    fn first_last_picks_the_grid_ends() {
+        let grid = vec![outcome("excl"), outcome("mid"), outcome("gmn")];
+        let (first, last) = first_last(&grid).expect("3-run grid is valid");
+        assert_eq!(first.label, "excl");
+        assert_eq!(last.label, "gmn");
+    }
 }

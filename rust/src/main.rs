@@ -6,6 +6,7 @@
 //!             [--colloc mps] [--smact 0.8] [--min-free 5] [--margin 2]
 //!             [--servers N] [--gpus-per-server G] [--power-cap W]
 //!             [--shards K] [--shard-assign round-robin|least-loaded|locality]
+//!             [--arrivals poisson|diurnal|burst] [--rate R] [--duration S]
 //!             [--seed N] [--config carma.toml]
 //! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
 //! carma zoo                                        (print the Table 3 zoo)
@@ -13,10 +14,10 @@
 
 use carma::cli;
 use carma::config::schema::{
-    CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, PolicyKind, ServerConfig,
-    ShardAssign,
+    ArrivalKind, CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, PolicyKind,
+    ServerConfig, ShardAssign,
 };
-use carma::coordinator::carma::{run_label, run_trace};
+use carma::coordinator::carma::{run_label, run_service, run_trace};
 use carma::estimators;
 use carma::experiments;
 use carma::metrics::report::RunReport;
@@ -28,6 +29,7 @@ const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
     "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
+    "arrivals", "rate", "duration", "queue-cap",
 ];
 
 fn main() {
@@ -90,8 +92,17 @@ fn usage() {
          \x20 --steal            bounded work stealing: an idle mapper that starves one\n\
          \x20                    observation window steals the longest sibling queue's\n\
          \x20                    tail (default off; deterministic, per-shard FIFO kept)\n\
+         \x20 --arrivals A       poisson|diurnal|burst|off: open-loop service mode —\n\
+         \x20                    arrivals stream from a seeded generator instead of a\n\
+         \x20                    pre-materialized trace, with bounded admission + load\n\
+         \x20                    shedding (default off; DESIGN.md §13)\n\
+         \x20 --rate R           mean offered load in tasks/minute (default 6)\n\
+         \x20 --duration S       arrival window in simulated seconds (default 3600;\n\
+         \x20                    queued work still drains to completion after it closes)\n\
+         \x20 --queue-cap N      per-shard bounded queue depth; arrivals routed to a\n\
+         \x20                    full shard are shed (default 16)\n\
          \x20 --json             print the run report as JSON only (determinism diffing)\n\
-         \x20 --seed N           trace seed (default 42)\n\
+         \x20 --seed N           trace + arrival-stream seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\
          \x20 --trace gangN      N-task mixed trace with distributed (gang) jobs\n\n\
          EXPERIMENTS: {}",
@@ -204,8 +215,31 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
     if args.flag("steal") {
         cfg.coordinator.steal = true;
     }
+    if let Some(a) = args.opt("arrivals") {
+        cfg.service.arrivals = if a.eq_ignore_ascii_case("off") {
+            None
+        } else {
+            Some(ArrivalKind::parse(a).ok_or_else(|| {
+                format!("unknown arrival process '{a}' (poisson|diurnal|burst|off)")
+            })?)
+        };
+    }
+    if let Some(r) = args.opt_f64("rate").map_err(|e| e.to_string())? {
+        // positivity is enforced by cfg.validate() below
+        cfg.service.rate_per_min = r;
+    }
+    if let Some(d) = args.opt_f64("duration").map_err(|e| e.to_string())? {
+        cfg.service.duration_s = d;
+    }
+    if let Some(c) = args.opt_u64("queue-cap").map_err(|e| e.to_string())? {
+        // range (1..=1000000) is enforced by cfg.validate() below
+        cfg.service.queue_cap = c as usize;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
+        // --seed seeds the whole run: trace generators AND the open-loop
+        // arrival stream (a TOML [service] seed is still overridable here)
+        cfg.service.seed = s;
     }
     cfg.artifacts_dir = artifacts_dir(args);
     cfg.validate()?;
@@ -214,6 +248,9 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
 
 fn cmd_run(args: &cli::Args) -> Result<(), String> {
     let cfg = build_config(args)?;
+    if cfg.service.arrivals.is_some() {
+        return cmd_run_service(args, cfg);
+    }
     let zoo = ModelZoo::load();
     let total_gpus = cfg.cluster.total_gpus();
     let trace = match args.opt("trace") {
@@ -324,6 +361,64 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
             p.single_island, p.multi_gpu_singletons, p.mean_fabric_cost, p.max_fabric_cost,
         );
     }
+    println!("\n{} simulation events processed", out.events);
+    Ok(())
+}
+
+/// Open-loop service mode (`--arrivals`, DESIGN.md §13): arrival-driven
+/// scheduling with bounded admission and load shedding.
+fn cmd_run_service(args: &cli::Args, cfg: CarmaConfig) -> Result<(), String> {
+    if args.opt("trace").is_some() {
+        return Err("--trace and --arrivals are mutually exclusive (open-loop \
+                    service mode streams its own arrivals)"
+            .into());
+    }
+    let kind = cfg.service.arrivals.expect("checked by caller");
+    let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
+    let label = format!("{}/{}", run_label(&cfg, est.name()), kind.name());
+    let json_only = args.flag("json");
+    if json_only {
+        let out = run_service(cfg, est, &label);
+        let mut j = out.report.to_json();
+        j.set("events", carma::util::json::num(out.events as f64));
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "running {} open-loop ({} arrivals at {:.1}/min for {:.0}s, queue cap {}, \
+         {} server(s) / {} GPUs, {} shard(s), {} engine thread(s), seed {})\n",
+        label,
+        kind.name(),
+        cfg.service.rate_per_min,
+        cfg.service.duration_s,
+        cfg.service.queue_cap,
+        cfg.cluster.n_servers(),
+        cfg.cluster.total_gpus(),
+        cfg.coordinator.shards,
+        cfg.engine.threads,
+        cfg.service.seed,
+    );
+    let out = run_service(cfg, est, &label);
+    println!("{}", RunReport::header());
+    println!("{}", out.report.row());
+    let s = &out.report.service;
+    println!(
+        "\n  service: {} offered, {} shed ({} at the door), rejection rate {:.3}\n\
+         \x20          queue delay p50 {:.1}s  p99 {:.1}s  p99.9 {:.1}s\n\
+         \x20          {} util windows, SMACT mean {:.3} peak {:.3}, mem mean {:.1} GB peak {:.1} GB",
+        s.offered,
+        s.shed,
+        s.shed_at_door,
+        s.rejection_rate,
+        s.queue_delay_p50_s,
+        s.queue_delay_p99_s,
+        s.queue_delay_p999_s,
+        s.util_windows,
+        s.win_smact_mean,
+        s.win_smact_peak,
+        s.win_mem_mean_gb,
+        s.win_mem_peak_gb,
+    );
     println!("\n{} simulation events processed", out.events);
     Ok(())
 }

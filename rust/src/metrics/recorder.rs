@@ -41,6 +41,10 @@ pub struct TaskTiming {
     /// Shard that stole this task off its original queue, if any
     /// (DESIGN.md §12; `assigned_shard` keeps the original routing).
     pub stolen_by: Option<usize>,
+    /// Shed at intake by the bounded admission layer (open-loop service
+    /// mode, DESIGN.md §13). Terminal: a shed task never queues, dispatches
+    /// or runs — `dispatched_s`/`completed_s` stay `None`.
+    pub shed_s: Option<f64>,
 }
 
 /// Collects everything the evaluation section reports.
@@ -69,6 +73,24 @@ pub struct Recorder {
     pub last_completion_s: f64,
     /// Keep every k-th monitor sample in the timeline (1 Hz base rate).
     pub timeline_stride: u64,
+    /// Open-loop service mode active (DESIGN.md §13) — reported so the
+    /// JSON distinguishes a batch run's zeros from a quiet service run.
+    pub open_loop: bool,
+    /// Arrivals dropped at intake by the bounded admission layer.
+    pub shed_total: u64,
+    /// Subset of `shed_total` dropped at the door while every shard sat at
+    /// the cap (cluster-wide backpressure rather than one unlucky route).
+    pub shed_at_door: u64,
+    /// Sliding utilization windows (DESIGN.md §13): window length in
+    /// seconds; 0.0 disables windowing — the closed-loop default.
+    pub util_window_s: f64,
+    /// Completed windows: (window_end_t, mean SMACT, mean mem GB), each a
+    /// GPU-time-weighted mean over one window.
+    pub util_windows: Vec<(f64, f64, f64)>,
+    win_smact_acc: f64,
+    win_mem_acc: f64,
+    win_time_acc: f64,
+    win_start_s: f64,
     sample_count: u64,
     integrated_until: f64,
 }
@@ -90,8 +112,25 @@ impl Recorder {
             first_arrival_s: None,
             last_completion_s: 0.0,
             timeline_stride: 15,
+            open_loop: false,
+            shed_total: 0,
+            shed_at_door: 0,
+            util_window_s: 0.0,
+            util_windows: Vec::new(),
+            win_smact_acc: 0.0,
+            win_mem_acc: 0.0,
+            win_time_acc: 0.0,
+            win_start_s: 0.0,
             sample_count: 0,
         integrated_until: 0.0,
+        }
+    }
+
+    /// Open-loop intake: extend the per-task table to cover `task` (ids
+    /// stream in sequentially; closed-loop runs pre-size in `new`).
+    pub fn ensure_task(&mut self, task: TaskId) {
+        if task >= self.tasks.len() {
+            self.tasks.resize(task + 1, TaskTiming::default());
         }
     }
 
@@ -126,6 +165,17 @@ impl Recorder {
     /// Task permanently failed (unschedulable / retry budget exhausted).
     pub fn on_failed(&mut self, _task: TaskId) {
         self.failed_total += 1;
+    }
+
+    /// Intake shed `task` at time `t` (open-loop service mode, DESIGN.md
+    /// §13). `at_door` = dropped under cluster-wide backpressure (every
+    /// shard at the cap) rather than one full routed queue.
+    pub fn on_shed(&mut self, task: TaskId, t: f64, at_door: bool) {
+        self.tasks[task].shed_s = Some(t);
+        self.shed_total += 1;
+        if at_door {
+            self.shed_at_door += 1;
+        }
     }
 
     /// Admission routed `task` to the gang lane (DESIGN.md §11).
@@ -212,6 +262,26 @@ impl Recorder {
                 smact,
                 power_w,
             });
+        }
+        if self.util_window_s > 0.0 {
+            self.win_smact_acc += smact * dt;
+            self.win_mem_acc += mem_used_gb * dt;
+            if gpu + 1 == self.energy_j.len() {
+                self.win_time_acc += dt;
+                if t - self.win_start_s >= self.util_window_s - 1e-9 {
+                    let denom =
+                        (self.win_time_acc * self.energy_j.len() as f64).max(1e-9);
+                    self.util_windows.push((
+                        t,
+                        self.win_smact_acc / denom,
+                        self.win_mem_acc / denom,
+                    ));
+                    self.win_smact_acc = 0.0;
+                    self.win_mem_acc = 0.0;
+                    self.win_time_acc = 0.0;
+                    self.win_start_s = t;
+                }
+            }
         }
         if gpu + 1 == self.energy_j.len() {
             self.integrated_until = t;
@@ -375,6 +445,53 @@ mod tests {
         r.on_oom(2);
         assert_eq!(r.oom_total, 3);
         assert_eq!(r.tasks[1].oom_crashes, 2);
+    }
+
+    #[test]
+    fn shed_lifecycle_and_open_growth() {
+        let mut r = Recorder::new(0, 1);
+        assert!(!r.open_loop);
+        r.ensure_task(0);
+        r.on_arrival(0, 5.0);
+        r.ensure_task(1);
+        r.on_arrival(1, 7.0);
+        r.on_shed(1, 7.0, false);
+        r.ensure_task(2);
+        r.on_arrival(2, 9.0);
+        r.on_shed(2, 9.0, true);
+        assert_eq!(r.tasks.len(), 3);
+        assert_eq!(r.shed_total, 2);
+        assert_eq!(r.shed_at_door, 1);
+        assert_eq!(r.tasks[0].shed_s, None);
+        assert_eq!(r.tasks[1].shed_s, Some(7.0));
+        // shed tasks never dispatch: waiting/JCT aggregates skip them
+        r.on_dispatch(0, 20.0);
+        r.on_completion(0, 40.0);
+        assert_eq!(r.avg_waiting_s(), 15.0);
+        assert_eq!(r.completed_count(), 1);
+        // re-ensuring an existing id is a no-op
+        r.ensure_task(1);
+        assert_eq!(r.tasks.len(), 3);
+    }
+
+    #[test]
+    fn utilization_windows_close_on_schedule() {
+        let mut r = Recorder::new(1, 2);
+        r.util_window_s = 10.0;
+        for i in 0..100 {
+            let t = (i + 1) as f64;
+            r.on_sample(0, t, 1.0, 8.0, 0.6, 200.0);
+            r.on_sample(1, t, 1.0, 4.0, 0.2, 100.0);
+        }
+        assert_eq!(r.util_windows.len(), 10);
+        for &(_, smact, mem) in &r.util_windows {
+            assert!((smact - 0.4).abs() < 1e-9, "window smact {smact}");
+            assert!((mem - 6.0).abs() < 1e-9, "window mem {mem}");
+        }
+        // windowing off by default: no accumulation
+        let mut q = Recorder::new(1, 1);
+        q.on_sample(0, 1.0, 1.0, 1.0, 0.5, 60.0);
+        assert!(q.util_windows.is_empty());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Run report: the metric set every paper experiment prints.
 
 use crate::util::json::{self, Json};
+use crate::util::stats::percentile;
 use crate::util::units::to_minutes;
 
 use super::recorder::Recorder;
@@ -81,6 +82,38 @@ pub struct PlacementStat {
     pub max_fabric_cost: f64,
 }
 
+/// Steady-state service counters (open-loop mode, DESIGN.md §13). Always
+/// present — zeros/batch values in closed-loop runs — so results JSON stays
+/// byte-diffable across configurations of the same binary. The queueing-
+/// delay percentiles are computed over every dispatched task in either
+/// mode, so the keys are always populated.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStat {
+    /// Open-loop service run (arrival-driven intake with bounded queues).
+    pub open_loop: bool,
+    /// Tasks the arrival process offered (= total_tasks in open mode).
+    pub offered: usize,
+    /// Arrivals dropped at intake by the bounded admission layer.
+    pub shed: u64,
+    /// Subset of `shed` dropped under cluster-wide backpressure (every
+    /// shard at the queue cap).
+    pub shed_at_door: u64,
+    /// shed / offered (0 when nothing was offered).
+    pub rejection_rate: f64,
+    /// Queueing delay (first dispatch − arrival) percentiles, seconds.
+    pub queue_delay_p50_s: f64,
+    pub queue_delay_p99_s: f64,
+    pub queue_delay_p999_s: f64,
+    /// Completed sliding utilization windows (0 in closed-loop runs).
+    pub util_windows: usize,
+    /// Mean / peak of the per-window GPU-time-weighted SMACT means.
+    pub win_smact_mean: f64,
+    pub win_smact_peak: f64,
+    /// Mean / peak of the per-window memory means (GB per GPU).
+    pub win_mem_mean_gb: f64,
+    pub win_mem_peak_gb: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub label: String,
@@ -101,6 +134,9 @@ pub struct RunReport {
     pub gang: GangStat,
     /// Singleton placement counters (zeros without multi-GPU singletons).
     pub placement: PlacementStat,
+    /// Steady-state service counters (zeros in closed-loop batch runs,
+    /// except the queue-delay percentiles which are always computed).
+    pub service: ServiceStat,
 }
 
 impl RunReport {
@@ -120,6 +156,7 @@ impl RunReport {
             per_shard: shard_stats(r),
             gang: gang_stats(r),
             placement: placement_stats(r),
+            service: service_stats(r),
         }
     }
 
@@ -189,6 +226,21 @@ impl RunReport {
                 ])
             })
             .collect();
+        let service = json::obj(vec![
+            ("open_loop", json::num(if self.service.open_loop { 1.0 } else { 0.0 })),
+            ("offered", json::num(self.service.offered as f64)),
+            ("shed", json::num(self.service.shed as f64)),
+            ("shed_at_door", json::num(self.service.shed_at_door as f64)),
+            ("rejection_rate", json::num(self.service.rejection_rate)),
+            ("queue_delay_p50_s", json::num(self.service.queue_delay_p50_s)),
+            ("queue_delay_p99_s", json::num(self.service.queue_delay_p99_s)),
+            ("queue_delay_p999_s", json::num(self.service.queue_delay_p999_s)),
+            ("util_windows", json::num(self.service.util_windows as f64)),
+            ("win_smact_mean", json::num(self.service.win_smact_mean)),
+            ("win_smact_peak", json::num(self.service.win_smact_peak)),
+            ("win_mem_mean_gb", json::num(self.service.win_mem_mean_gb)),
+            ("win_mem_peak_gb", json::num(self.service.win_mem_peak_gb)),
+        ]);
         json::obj(vec![
             ("label", json::s(&self.label)),
             ("trace_total_min", json::num(self.trace_total_min)),
@@ -204,6 +256,7 @@ impl RunReport {
             ("per_shard", json::arr(shards)),
             ("gang", gang),
             ("placement", placement),
+            ("service", service),
         ])
     }
 }
@@ -225,6 +278,45 @@ fn placement_stats(r: &Recorder) -> PlacementStat {
     }
     if s.multi_gpu_singletons > 0 {
         s.mean_fabric_cost = cost_sum / s.multi_gpu_singletons as f64;
+    }
+    s
+}
+
+/// Aggregate the recorder's service-mode counters (DESIGN.md §13). The
+/// queueing-delay percentiles cover every dispatched task in either mode;
+/// shed counters and utilization windows are only nonzero in open-loop
+/// runs (closed-loop recorders never shed and keep windowing off).
+fn service_stats(r: &Recorder) -> ServiceStat {
+    let delays: Vec<f64> = r
+        .tasks
+        .iter()
+        .filter_map(|t| t.dispatched_s.map(|d| d - t.arrival_s))
+        .collect();
+    let offered = r.tasks.len();
+    let mut s = ServiceStat {
+        open_loop: r.open_loop,
+        offered,
+        shed: r.shed_total,
+        shed_at_door: r.shed_at_door,
+        rejection_rate: if offered == 0 {
+            0.0
+        } else {
+            r.shed_total as f64 / offered as f64
+        },
+        queue_delay_p50_s: percentile(&delays, 50.0),
+        queue_delay_p99_s: percentile(&delays, 99.0),
+        queue_delay_p999_s: percentile(&delays, 99.9),
+        util_windows: r.util_windows.len(),
+        ..ServiceStat::default()
+    };
+    if !r.util_windows.is_empty() {
+        let n = r.util_windows.len() as f64;
+        for &(_, smact, mem) in &r.util_windows {
+            s.win_smact_mean += smact / n;
+            s.win_smact_peak = s.win_smact_peak.max(smact);
+            s.win_mem_mean_gb += mem / n;
+            s.win_mem_peak_gb = s.win_mem_peak_gb.max(mem);
+        }
     }
     s
 }
@@ -421,6 +513,67 @@ mod tests {
         assert_eq!(empty.placement.multi_gpu_singletons, 0);
         assert_eq!(empty.placement.mean_fabric_cost, 0.0);
         assert!(empty.to_json().get("placement").is_some());
+    }
+
+    #[test]
+    fn service_section_always_present_with_percentiles() {
+        // closed-loop run: section exists, sheds zero, percentiles real
+        let mut r = Recorder::new(3, 1);
+        for (task, arr, disp) in [(0usize, 0.0, 10.0), (1, 0.0, 30.0), (2, 5.0, 105.0)] {
+            r.on_arrival(task, arr);
+            r.on_dispatch(task, disp);
+        }
+        let rep = RunReport::from_recorder("t", &r);
+        assert!(!rep.service.open_loop);
+        assert_eq!(rep.service.offered, 3);
+        assert_eq!(rep.service.shed, 0);
+        assert_eq!(rep.service.rejection_rate, 0.0);
+        // delays 10, 30, 100 -> p50 = 30, p99 interpolates toward 100
+        assert!((rep.service.queue_delay_p50_s - 30.0).abs() < 1e-9);
+        assert!(rep.service.queue_delay_p99_s > 98.0);
+        assert!(rep.service.queue_delay_p999_s >= rep.service.queue_delay_p99_s);
+        let j = rep.to_json();
+        let svc = j.get("service").expect("service section always present");
+        assert_eq!(svc.f64_of("open_loop"), 0.0);
+        assert_eq!(svc.f64_of("queue_delay_p50_s"), 30.0);
+        // even an empty run carries every percentile key
+        let empty = RunReport::from_recorder("e", &Recorder::new(0, 1));
+        let ej = empty.to_json();
+        let es = ej.get("service").unwrap();
+        for key in ["queue_delay_p50_s", "queue_delay_p99_s", "queue_delay_p999_s"] {
+            assert_eq!(es.f64_of(key), 0.0, "{key} missing or nonzero");
+        }
+    }
+
+    #[test]
+    fn service_section_reports_sheds_and_windows() {
+        let mut r = Recorder::new(4, 2);
+        r.open_loop = true;
+        r.util_window_s = 10.0;
+        for task in 0..4usize {
+            r.on_arrival(task, task as f64);
+        }
+        r.on_dispatch(0, 8.0);
+        r.on_shed(2, 2.0, false);
+        r.on_shed(3, 3.0, true);
+        for i in 0..20 {
+            let t = (i + 1) as f64;
+            r.on_sample(0, t, 1.0, 10.0, 0.8, 250.0);
+            r.on_sample(1, t, 1.0, 2.0, 0.4, 120.0);
+        }
+        let rep = RunReport::from_recorder("svc", &r);
+        assert!(rep.service.open_loop);
+        assert_eq!(rep.service.offered, 4);
+        assert_eq!(rep.service.shed, 2);
+        assert_eq!(rep.service.shed_at_door, 1);
+        assert!((rep.service.rejection_rate - 0.5).abs() < 1e-12);
+        assert_eq!(rep.service.util_windows, 2);
+        assert!((rep.service.win_smact_mean - 0.6).abs() < 1e-9);
+        assert!((rep.service.win_smact_peak - 0.6).abs() < 1e-9);
+        assert!((rep.service.win_mem_mean_gb - 6.0).abs() < 1e-9);
+        let j = rep.to_json();
+        assert_eq!(j.get("service").unwrap().f64_of("shed"), 2.0);
+        assert_eq!(j.get("service").unwrap().f64_of("open_loop"), 1.0);
     }
 
     #[test]

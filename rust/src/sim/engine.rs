@@ -49,6 +49,14 @@ pub enum Event {
     /// steal one task from the longest sibling queue's tail. Event-ordered
     /// like everything else, so stealing is deterministic by construction.
     StealCheck(usize),
+    /// Open-loop service mode (DESIGN.md §13): the streaming arrival
+    /// generator's next submission reaches the intake at this timestamp.
+    /// The task's spec is held by the coordinator (not the event) so the
+    /// event stays `Eq`; handling it admits the task and draws + schedules
+    /// the following arrival, always on the driver thread in commit order —
+    /// which keeps the arrival stream byte-identical at any shard or
+    /// thread count.
+    ServiceArrival,
 }
 
 #[derive(Debug)]

@@ -12,9 +12,10 @@
 //! Arrivals are bursty (Philly-like): geometric burst sizes at exponential
 //! gaps, fully deterministic from the seed.
 
+use crate::config::schema::ArrivalKind;
 use crate::util::rng::Rng;
 
-use super::model_zoo::ModelZoo;
+use super::model_zoo::{ModelZoo, ZooEntry};
 use super::task::TaskSpec;
 
 #[derive(Debug, Clone)]
@@ -166,6 +167,139 @@ pub fn server_localize(trace: &TraceSpec, gpus_per_server: usize) -> TraceSpec {
     TraceSpec {
         name: format!("{}-serverlocal", trace.name),
         tasks,
+    }
+}
+
+/// Diurnal modulation of [`ArrivalGen`]: rate(t) = base × (1 + A·sin(2πt/P)).
+pub const DIURNAL_AMPLITUDE: f64 = 0.8;
+/// Period of the diurnal sine (a compressed "day" of one simulated hour).
+pub const DIURNAL_PERIOD_S: f64 = 3600.0;
+/// Rate multiplier inside the flash-crowd window of the burst process.
+pub const BURST_FACTOR: f64 = 5.0;
+/// The burst window spans [0.5, 0.625] of the arrival duration.
+pub const BURST_START_FRAC: f64 = 0.5;
+pub const BURST_END_FRAC: f64 = 0.625;
+
+/// Streaming arrival generator for the open-loop service mode (DESIGN.md
+/// §13): draws one submission at a time instead of materializing a trace
+/// upfront, so the coordinator can run arrival-driven for as long as the
+/// configured duration without holding a task list in memory.
+///
+/// All three processes are thinned Poisson: candidate gaps are exponential
+/// at the process's peak rate and each candidate is accepted with
+/// probability `rate(t)/peak`, which realizes the exact non-homogeneous
+/// process while staying byte-deterministic from the seed — the draw
+/// sequence depends only on the seed, never on shard or thread count.
+/// Model composition follows the paper's 65/27/8 light/medium/heavy mix.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    kind: ArrivalKind,
+    /// Mean offered load in tasks per second (`--rate` is per minute).
+    rate_per_s: f64,
+    duration_s: f64,
+    rng: Rng,
+    t: f64,
+    next_id: usize,
+    light: Vec<ZooEntry>,
+    medium: Vec<ZooEntry>,
+    heavy: Vec<ZooEntry>,
+}
+
+impl ArrivalGen {
+    pub fn new(
+        zoo: &ModelZoo,
+        kind: ArrivalKind,
+        rate_per_min: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> ArrivalGen {
+        assert!(rate_per_min > 0.0 && duration_s > 0.0);
+        let clone_pool = |class: &str| -> Vec<ZooEntry> {
+            let pool: Vec<ZooEntry> = zoo.by_class(class).into_iter().cloned().collect();
+            assert!(!pool.is_empty(), "no zoo entries of class {class}");
+            pool
+        };
+        ArrivalGen {
+            kind,
+            rate_per_s: rate_per_min / 60.0,
+            duration_s,
+            rng: Rng::new(seed ^ 0x5E21_0A11),
+            t: 0.0,
+            next_id: 0,
+            light: clone_pool("light"),
+            medium: clone_pool("medium"),
+            heavy: clone_pool("heavy"),
+        }
+    }
+
+    /// Instantaneous offered rate at time `t` (tasks per second).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self.kind {
+            ArrivalKind::Poisson => self.rate_per_s,
+            ArrivalKind::Diurnal => {
+                let phase = 2.0 * std::f64::consts::PI * t / DIURNAL_PERIOD_S;
+                self.rate_per_s * (1.0 + DIURNAL_AMPLITUDE * phase.sin())
+            }
+            ArrivalKind::Burst => {
+                let (lo, hi) = self.burst_window();
+                if t >= lo && t < hi {
+                    self.rate_per_s * BURST_FACTOR
+                } else {
+                    self.rate_per_s
+                }
+            }
+        }
+    }
+
+    /// Peak of `rate_at` over the run — the thinning envelope.
+    fn peak_rate(&self) -> f64 {
+        match self.kind {
+            ArrivalKind::Poisson => self.rate_per_s,
+            ArrivalKind::Diurnal => self.rate_per_s * (1.0 + DIURNAL_AMPLITUDE),
+            ArrivalKind::Burst => self.rate_per_s * BURST_FACTOR,
+        }
+    }
+
+    /// The flash-crowd interval of the burst process (empty-rate processes
+    /// report it too — handy for assertions and plots).
+    pub fn burst_window(&self) -> (f64, f64) {
+        (
+            BURST_START_FRAC * self.duration_s,
+            BURST_END_FRAC * self.duration_s,
+        )
+    }
+
+    /// How many tasks this generator has emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.next_id
+    }
+
+    /// Draw the next submission, or `None` once the arrival window closes.
+    /// Times are nondecreasing; ids are sequential from 0.
+    pub fn next_task(&mut self) -> Option<TaskSpec> {
+        loop {
+            self.t += self.rng.exponential(1.0 / self.peak_rate());
+            if self.t > self.duration_s {
+                return None;
+            }
+            // thinning: accept with rate(t)/peak — exact for the
+            // non-homogeneous process, trivially exact for Poisson
+            if self.rng.f64() < self.rate_at(self.t) / self.peak_rate() {
+                let u = self.rng.f64();
+                let pool = if u < 0.65 {
+                    &self.light
+                } else if u < 0.92 {
+                    &self.medium
+                } else {
+                    &self.heavy
+                };
+                let e = self.rng.choice(pool).clone();
+                let epochs = *self.rng.choice(&e.epochs);
+                let id = self.next_id;
+                self.next_id += 1;
+                return Some(TaskSpec::from_zoo(id, &e, epochs, self.t));
+            }
+        }
     }
 }
 
@@ -383,6 +517,102 @@ mod tests {
                 assert_eq!(loc.work_s, orig.work_s);
             }
         }
+    }
+
+    #[test]
+    fn arrival_gen_times_nondecreasing_ids_sequential() {
+        let z = zoo();
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Diurnal, ArrivalKind::Burst] {
+            let mut g = ArrivalGen::new(&z, kind, 30.0, 4000.0, 42);
+            let mut last_t = 0.0f64;
+            let mut n = 0usize;
+            while let Some(task) = g.next_task() {
+                assert!(task.arrival_s >= last_t, "{kind:?} went backwards");
+                assert!(task.arrival_s <= 4000.0);
+                assert_eq!(task.id, n);
+                last_t = task.arrival_s;
+                n += 1;
+            }
+            assert!(n > 100, "{kind:?} emitted only {n} tasks");
+            assert_eq!(g.emitted(), n);
+            // the window stays closed once drained
+            assert!(g.next_task().is_none());
+        }
+    }
+
+    #[test]
+    fn arrival_gen_deterministic_by_seed() {
+        let z = zoo();
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Diurnal, ArrivalKind::Burst] {
+            let drain = |seed: u64| {
+                let mut g = ArrivalGen::new(&z, kind, 20.0, 2000.0, seed);
+                let mut out = Vec::new();
+                while let Some(t) = g.next_task() {
+                    out.push((t.name.clone(), t.arrival_s.to_bits()));
+                }
+                out
+            };
+            assert_eq!(drain(9), drain(9), "{kind:?} not reproducible");
+            assert_ne!(drain(9), drain(10), "{kind:?} ignores the seed");
+        }
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_within_5pct() {
+        // rate 60/min = 1/s -> mean gap must land within 5% of 1 s over 1e5
+        // draws (the statistical error at that sample size is ~0.3%)
+        let z = zoo();
+        let mut g = ArrivalGen::new(&z, ArrivalKind::Poisson, 60.0, 200_000.0, 11);
+        let mut prev = 0.0f64;
+        let mut gaps = 0usize;
+        let mut sum = 0.0f64;
+        while gaps < 100_000 {
+            let t = g.next_task().expect("window shorter than 1e5 draws").arrival_s;
+            sum += t - prev;
+            prev = t;
+            gaps += 1;
+        }
+        let mean = sum / gaps as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean inter-arrival {mean}s");
+    }
+
+    #[test]
+    fn burst_window_exceeds_3x_base_rate() {
+        let z = zoo();
+        let rate_per_min = 30.0; // base 0.5/s
+        let mut g = ArrivalGen::new(&z, ArrivalKind::Burst, rate_per_min, 4000.0, 17);
+        let (lo, hi) = g.burst_window();
+        assert!((lo, hi) == (2000.0, 2500.0));
+        let mut inside = 0usize;
+        let mut outside = 0usize;
+        while let Some(t) = g.next_task() {
+            if t.arrival_s >= lo && t.arrival_s < hi {
+                inside += 1;
+            } else {
+                outside += 1;
+            }
+        }
+        let base = rate_per_min / 60.0;
+        let in_rate = inside as f64 / (hi - lo);
+        let out_rate = outside as f64 / (4000.0 - (hi - lo));
+        assert!(
+            in_rate > 3.0 * base,
+            "in-window rate {in_rate}/s !> 3x base {base}/s"
+        );
+        assert!(out_rate < 1.5 * base, "off-window rate {out_rate}/s inflated");
+    }
+
+    #[test]
+    fn diurnal_rate_modulates_around_base() {
+        let z = zoo();
+        let g = ArrivalGen::new(&z, ArrivalKind::Diurnal, 60.0, 7200.0, 1);
+        // sine peak at t = P/4, trough at 3P/4
+        let peak = g.rate_at(DIURNAL_PERIOD_S / 4.0);
+        let trough = g.rate_at(3.0 * DIURNAL_PERIOD_S / 4.0);
+        assert!((peak - 1.8).abs() < 1e-9, "peak {peak}");
+        assert!((trough - 0.2).abs() < 1e-9, "trough {trough}");
+        let p = ArrivalGen::new(&z, ArrivalKind::Poisson, 60.0, 7200.0, 1);
+        assert_eq!(p.rate_at(123.0), 1.0);
     }
 
     #[test]
