@@ -132,6 +132,44 @@ if ! printf '%s\n' "$LOW" | grep -q '"shed": 0,'; then
 fi
 echo "service smoke OK: byte-identical JSON across threads, sheds only under saturation"
 
+step "obs smoke: --trace-out byte-diff across engine threads, provenance + exposition"
+TRACE_DIR="$(mktemp -d)"
+OBS_BASE=(run --servers 2 --gpus-per-server 4 --shards 4 --estimator oracle --margin 2 \
+    --seed 7 --json --explain-sample 16)
+O1="$("$BIN" "${OBS_BASE[@]}" --trace-out "$TRACE_DIR/t1.jsonl")"
+O4="$("$BIN" "${OBS_BASE[@]}" --trace-out "$TRACE_DIR/t4.jsonl" --engine-threads 4)"
+if ! cmp -s "$TRACE_DIR/t1.jsonl" "$TRACE_DIR/t4.jsonl"; then
+    echo "DETERMINISM FAILURE: event trace diverged across engine threads" >&2
+    diff "$TRACE_DIR/t1.jsonl" "$TRACE_DIR/t4.jsonl" | head -n 20 >&2 || true
+    exit 1
+fi
+if [ "$O1" != "$O4" ]; then
+    echo "DETERMINISM FAILURE: traced runs' results JSON diverged across engine threads" >&2
+    exit 1
+fi
+if ! grep -q '"ev":"decision"' "$TRACE_DIR/t1.jsonl"; then
+    echo "OBS FAILURE: --explain-sample emitted no decision records" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$O1" | grep -q '"placement_decisions"'; then
+    echo "OBS FAILURE: results JSON lost the placement_decisions section" >&2
+    exit 1
+fi
+# --profile prints to stderr only: the compared stdout JSON must not move
+P="$("$BIN" "${OBS_BASE[@]}" --profile 2>/dev/null)"
+if [ "$O1" != "$P" ]; then
+    echo "OBS FAILURE: --profile changed the results JSON" >&2
+    exit 1
+fi
+"$BIN" run --servers 2 --gpus-per-server 4 --estimator oracle --margin 2 --seed 7 \
+    --metrics-out "$TRACE_DIR/m.prom" >/dev/null
+if ! grep -q '^carma_offered_total' "$TRACE_DIR/m.prom"; then
+    echo "OBS FAILURE: metrics exposition lacks carma_offered_total" >&2
+    exit 1
+fi
+rm -rf "$TRACE_DIR"
+echo "obs smoke OK: byte-identical trace across threads, provenance + exposition present"
+
 step "perf ledger: bench smokes + scale repros write real BENCH_sim.json rows"
 # 1-iteration smokes measure real (if noisy) rows; they land in the repo-root
 # ledger so the perf trajectory stays populated every CI run
@@ -141,13 +179,16 @@ CARMA_BENCH_SMOKE=1 cargo bench --bench gang_scale
 # the scale studies append their own comparison sections
 "$BIN" repro placement_scale
 "$BIN" repro service_scale
-for SECTION in shard_scale placement_scale service_scale; do
+# observability tax: smoke mode keeps the run short and the gate wide — the
+# dedicated 5% gate needs a quiet machine (`carma repro obs_overhead`)
+CARMA_BENCH_SMOKE=1 "$BIN" repro obs_overhead
+for SECTION in shard_scale placement_scale service_scale obs_overhead; do
     if ! grep -q "\"$SECTION\"" BENCH_sim.json; then
         echo "LEDGER FAILURE: BENCH_sim.json is missing the $SECTION section" >&2
         exit 1
     fi
 done
-echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale and service_scale"
+echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale and obs_overhead"
 
 echo
 echo "CI green."

@@ -520,6 +520,78 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Per-GPU timeline retention of the recorder (TOML `[obs] timeline`,
+/// `--timeline`; DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TimelineMode {
+    /// Full-fidelity timelines at the seed stride (one point per 15
+    /// monitor samples) — what fig12-style utilization plots consume.
+    On,
+    /// One point per observation window (`monitor.window_s /
+    /// sample_period_s` samples). The default: keeps long service runs at
+    /// O(duration / window) points per GPU instead of O(duration).
+    Sparse,
+    /// No timeline retention at all — the service-sweep setting; in
+    /// open-loop runs this also switches the recorder to streaming
+    /// aggregation (no per-task timing vector).
+    Off,
+}
+
+impl TimelineMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "on" | "full" => TimelineMode::On,
+            "sparse" | "window" => TimelineMode::Sparse,
+            "off" | "none" => TimelineMode::Off,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimelineMode::On => "on",
+            TimelineMode::Sparse => "sparse",
+            TimelineMode::Off => "off",
+        }
+    }
+}
+
+/// Observability configuration (TOML `[obs]`, `--trace-out /
+/// --explain-sample / --metrics-out / --profile / --timeline`;
+/// DESIGN.md §14). Everything here is off by default except the sparse
+/// timeline: observability must never change scheduling outcomes, only
+/// expose them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// `Some(path)` streams one JSONL record per lifecycle commit to
+    /// `path`, in deterministic `(time, seq)` commit order.
+    pub trace_out: Option<String>,
+    /// Emit every Nth committed placement decision as a `decision` trace
+    /// record with full provenance (0 = off). Counted over committed
+    /// decisions, so the sample is thread-count independent.
+    pub explain_sample: u64,
+    /// `Some(path)` writes a Prometheus-style text exposition of final
+    /// counters/gauges/sketches after the run.
+    pub metrics_out: Option<String>,
+    /// Per-phase wall-clock profiling of the engine driver. The profile is
+    /// printed to stderr and never enters byte-compared artifacts.
+    pub profile: bool,
+    /// Per-GPU timeline retention policy.
+    pub timeline: TimelineMode,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace_out: None,
+            explain_sample: 0,
+            metrics_out: None,
+            profile: false,
+            timeline: TimelineMode::Sparse,
+        }
+    }
+}
+
 /// Full CARMA configuration. `Default` = the paper's §4.4 default setup:
 /// MAGM + GPUMemNet + SMACT<=80% + MPS, no memory precondition.
 #[derive(Debug, Clone)]
@@ -544,6 +616,7 @@ pub struct CarmaConfig {
     pub power: PowerConfig,
     pub interference: InterferenceConfig,
     pub service: ServiceConfig,
+    pub obs: ObsConfig,
     pub artifacts_dir: String,
 }
 
@@ -567,6 +640,7 @@ impl Default for CarmaConfig {
             power: PowerConfig::default(),
             interference: InterferenceConfig::default(),
             service: ServiceConfig::default(),
+            obs: ObsConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -813,6 +887,25 @@ impl CarmaConfig {
         if let Some(v) = doc.get("service.seed").and_then(|v| v.as_i64()) {
             self.service.seed = u64::try_from(v)
                 .map_err(|_| format!("service.seed must be non-negative, got {v}"))?;
+        }
+        if let Some(v) = doc.get("obs.trace_out").and_then(|v| v.as_str()) {
+            self.obs.trace_out = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = doc.get("obs.explain_sample").and_then(|v| v.as_i64()) {
+            self.obs.explain_sample = u64::try_from(v)
+                .map_err(|_| format!("obs.explain_sample must be >= 0, got {v}"))?;
+        }
+        if let Some(v) = doc.get("obs.metrics_out").and_then(|v| v.as_str()) {
+            self.obs.metrics_out = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = doc.get("obs.profile") {
+            self.obs.profile = v
+                .as_bool()
+                .ok_or_else(|| format!("obs.profile must be a bool, got {v:?}"))?;
+        }
+        if let Some(v) = doc.get("obs.timeline").and_then(|v| v.as_str()) {
+            self.obs.timeline = TimelineMode::parse(v)
+                .ok_or_else(|| format!("unknown timeline mode '{v}' (on|sparse|off)"))?;
         }
         if let Some(v) = doc.get("artifacts_dir").and_then(|v| v.as_str()) {
             self.artifacts_dir = v.to_string();
@@ -1179,6 +1272,47 @@ mod tests {
         assert_eq!(ArrivalKind::parse("BURSTY"), Some(ArrivalKind::Burst));
         assert_eq!(ArrivalKind::parse("poisson"), Some(ArrivalKind::Poisson));
         assert_eq!(ArrivalKind::Diurnal.name(), "diurnal");
+    }
+
+    #[test]
+    fn obs_section_applies() {
+        // defaults: everything off except the sparse timeline
+        let c = CarmaConfig::default();
+        assert_eq!(c.obs.trace_out, None);
+        assert_eq!(c.obs.explain_sample, 0);
+        assert_eq!(c.obs.metrics_out, None);
+        assert!(!c.obs.profile);
+        assert_eq!(c.obs.timeline, TimelineMode::Sparse);
+
+        let doc = toml::parse(
+            "[obs]\ntrace_out = \"/tmp/t.jsonl\"\nexplain_sample = 100\n\
+             metrics_out = \"/tmp/m.prom\"\nprofile = true\ntimeline = \"off\"\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.obs.trace_out.as_deref(), Some("/tmp/t.jsonl"));
+        assert_eq!(c.obs.explain_sample, 100);
+        assert_eq!(c.obs.metrics_out.as_deref(), Some("/tmp/m.prom"));
+        assert!(c.obs.profile);
+        assert_eq!(c.obs.timeline, TimelineMode::Off);
+
+        // empty paths switch the sinks back off
+        let doc = toml::parse("[obs]\ntrace_out = \"\"\nmetrics_out = \"\"\n").unwrap();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.obs.trace_out, None);
+        assert_eq!(c.obs.metrics_out, None);
+
+        // typo'd modes and negative sampling are config errors
+        let doc = toml::parse("[obs]\ntimeline = \"dense\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[obs]\nexplain_sample = -5\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[obs]\nprofile = \"yes\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        assert_eq!(TimelineMode::parse("window"), Some(TimelineMode::Sparse));
+        assert_eq!(TimelineMode::parse("full"), Some(TimelineMode::On));
+        assert_eq!(TimelineMode::Off.name(), "off");
     }
 
     #[test]

@@ -30,12 +30,14 @@ use crate::cluster::fabric::Fabric;
 use crate::cluster::gpu::ResidentTask;
 use crate::cluster::power::{self, gpu_power_w};
 use crate::cluster::topology::{Cluster, ClusterTopology};
-use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, TimelineMode};
 use crate::estimators::MemoryEstimator;
-use crate::metrics::recorder::Recorder;
+use crate::metrics::recorder::{DecisionOutcome, Recorder};
 use crate::metrics::report::RunReport;
+use crate::obs::{Phase, Profiler, TraceSink};
 use crate::sim::parallel::{resolve_threads, WorkerPool};
 use crate::sim::{Engine, Event, TaskId};
+use crate::util::json::{self, Json};
 use crate::util::units::GIB;
 use crate::workload::memsim;
 use crate::workload::model_zoo::ModelZoo;
@@ -44,7 +46,7 @@ use crate::workload::trace::{ArrivalGen, TraceSpec};
 
 use super::gang::{self, GangLane, GangPlan, ReservationBook};
 use super::monitor::Monitor;
-use super::placement;
+use super::placement::{self, Explain, RejectReason};
 use super::policy::{GpuView, MappingRequest, Placement, Preconditions, ServerView};
 use super::shard::{Admission, MapPlan, Mapper, PlanOutcome};
 
@@ -118,6 +120,11 @@ pub struct RunOutcome {
     pub recorder: Recorder,
     /// Simulation events processed (throughput accounting, `benches/`).
     pub events: u64,
+    /// Engine self-profile (`--profile`, DESIGN.md §14). Wall-clock data
+    /// lives HERE — a dedicated field printed to stderr — and never inside
+    /// `report`, so byte-compared artifacts stay timing-free by structure,
+    /// not by discipline.
+    pub profile: Option<Json>,
 }
 
 /// Inputs of one shard's speculative mapping scan — everything the pure
@@ -186,6 +193,15 @@ pub struct Carma {
     /// True while the generator may still emit (run loops must not exit on
     /// an all-done task set before intake closes).
     intake_open: bool,
+    /// Streaming event-trace sink (`--trace-out`, DESIGN.md §14). Fed only
+    /// from the driver thread at commit points, so the byte stream is
+    /// identical at every engine-thread count for free.
+    trace: Option<TraceSink>,
+    /// Emit a full `decision` provenance record every Nth mapping decision
+    /// (0 = never; the aggregate report section is always on).
+    explain_sample: u64,
+    /// Per-phase wall-clock + pool occupancy self-profiler (`--profile`).
+    profiler: Profiler,
 }
 
 impl Carma {
@@ -213,6 +229,30 @@ impl Carma {
             recorder.open_loop = true;
             recorder.util_window_s = cfg.monitor.window_s;
         }
+        // timeline retention (DESIGN.md §14): `on` keeps the seed's dense
+        // stride, `sparse` keeps ~one point per monitoring window, `off`
+        // keeps none. Open-loop runs with `off` additionally drop the
+        // per-task timing vector: terminal events fold into streaming
+        // aggregates, so recorder memory is O(buckets + GPUs + in-flight).
+        recorder.timeline_stride = match cfg.obs.timeline {
+            TimelineMode::On => 15,
+            TimelineMode::Sparse => {
+                ((cfg.monitor.window_s / cfg.monitor.sample_period_s).round() as u64).max(1)
+            }
+            TimelineMode::Off => 0,
+        };
+        if service && cfg.obs.timeline == TimelineMode::Off {
+            recorder.enable_stream();
+        }
+        let trace_sink = cfg.obs.trace_out.as_deref().and_then(|p| match TraceSink::create(p) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("carma: --trace-out {p}: {e} (tracing disabled)");
+                None
+            }
+        });
+        let explain_sample = cfg.obs.explain_sample;
+        let profiler = Profiler::new(cfg.obs.profile);
         // gang fail-fast ceiling: best-case assemblable whole-GPU capacity,
         // intersected per server (MIG partitioning, power-dead servers and
         // power-slot headroom all on the same server subset) — a gang wider
@@ -302,6 +342,9 @@ impl Carma {
             intake_open: arrival_gen.is_some(),
             arrival_gen,
             pending_arrival: None,
+            trace: trace_sink,
+            explain_sample,
+            profiler,
         }
     }
 
@@ -336,10 +379,26 @@ impl Carma {
             self.tasks.len(),
             "trace ended with unfinished tasks (queue deadlock?)"
         );
+        // fold any straggling in-flight timings BEFORE the report reads the
+        // streaming aggregates (no-op in full-recording mode)
+        self.recorder.finalize();
+        if let Some(t) = self.trace.as_mut() {
+            t.flush();
+        }
+        if let Some(path) = self.cfg.obs.metrics_out.as_deref() {
+            if let Err(e) = std::fs::write(path, self.recorder.registry().render()) {
+                eprintln!("carma: --metrics-out {path}: {e}");
+            }
+        }
+        let profile = self.profiler.enabled().then(|| {
+            self.profiler
+                .to_json(self.processed, self.pool.as_ref().map(|p| p.occupancy()))
+        });
         RunOutcome {
             report: RunReport::from_recorder(label, &self.recorder),
             recorder: self.recorder,
             events: self.processed,
+            profile,
         }
     }
 
@@ -352,9 +411,15 @@ impl Carma {
     }
 
     fn run_serial(&mut self) {
-        while let Some((_, ev)) = self.engine.pop() {
+        loop {
+            let t0 = self.profiler.start();
+            let popped = self.engine.pop();
+            self.profiler.add(Phase::FrontierDrain, t0);
+            let Some((_, ev)) = popped else { break };
             self.count_event();
+            let t1 = self.profiler.start();
             self.handle_event(ev);
+            self.profiler.add(Phase::SerialCommit, t1);
             if self.drained() {
                 break;
             }
@@ -367,11 +432,19 @@ impl Carma {
     /// order exactly as the serial loop would.
     fn run_parallel(&mut self) {
         let mut buf: Vec<(f64, Event)> = Vec::new();
-        'quantum: while self.engine.pop_frontier(&mut buf) > 0 {
+        'quantum: loop {
+            let t0 = self.profiler.start();
+            let drained = self.engine.pop_frontier(&mut buf);
+            self.profiler.add(Phase::FrontierDrain, t0);
+            if drained == 0 {
+                break;
+            }
             self.preplan_frontier(&buf);
             for (_, ev) in buf.drain(..) {
                 self.count_event();
+                let t1 = self.profiler.start();
                 self.handle_event(ev);
+                self.profiler.add(Phase::SerialCommit, t1);
                 if self.drained() {
                     break 'quantum;
                 }
@@ -410,17 +483,42 @@ impl Carma {
         self.views_cache = None;
     }
 
+    /// Emit one trace record at the current simulated time. The field
+    /// closure only runs when tracing is on, so a disabled trace costs one
+    /// branch per call site. Called exclusively from commit-side handlers
+    /// (driver thread, `(time, seq)` order) — never from speculative plans —
+    /// which is what makes the byte stream thread-count invariant.
+    fn trace_event(&mut self, kind: &str, fields: impl FnOnce() -> Vec<(&'static str, Json)>) {
+        if self.trace.is_none() {
+            return;
+        }
+        let now = self.engine.now();
+        if let Some(t) = self.trace.as_mut() {
+            t.emit(now, kind, fields());
+        }
+    }
+
     // -- event handlers -----------------------------------------------------
 
     fn on_arrival(&mut self, id: TaskId) {
         let t = self.engine.now();
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
-        if self.tasks[id].spec.gang {
+        let gang = self.tasks[id].spec.gang;
+        self.trace_event("arrival", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("gang", json::num(u64::from(gang) as f64)),
+            ]
+        });
+        if gang {
             // distributed jobs bypass the shards: dedicated lane + the
             // all-or-nothing gang scheduler (DESIGN.md §11)
             self.recorder.on_gang_arrival(id);
             self.admission.submit_gang(id);
+            self.trace_event("route", || {
+                vec![("task", json::num(id as f64)), ("lane", json::s("gang"))]
+            });
             self.feed_gang();
             return;
         }
@@ -428,6 +526,9 @@ impl Carma {
         let home = self.fabric.home_server(id);
         let shard = self.admission.submit(id, &loads, home);
         self.recorder.on_assigned(id, shard);
+        self.trace_event("route", || {
+            vec![("task", json::num(id as f64)), ("shard", json::num(shard as f64))]
+        });
         self.feed(shard);
         // the new backlog may give an idle sibling something to steal
         self.arm_steal_checks();
@@ -486,12 +587,22 @@ impl Carma {
         let t = self.engine.now();
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
-        if self.tasks[id].spec.gang {
+        let gang = self.tasks[id].spec.gang;
+        self.trace_event("arrival", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("gang", json::num(u64::from(gang) as f64)),
+            ]
+        });
+        if gang {
             // the generator emits singletons only, but route a gang the
             // closed-loop way if one ever shows up (gangs are never shed:
             // the bounded queues guard the shard mappers, not the gang lane)
             self.recorder.on_gang_arrival(id);
             self.admission.submit_gang(id);
+            self.trace_event("route", || {
+                vec![("task", json::num(id as f64)), ("lane", json::s("gang"))]
+            });
             self.feed_gang();
             self.schedule_next_arrival();
             return;
@@ -506,6 +617,9 @@ impl Carma {
             match self.admission.try_submit(id, &loads, home) {
                 Ok(shard) => {
                     self.recorder.on_assigned(id, shard);
+                    self.trace_event("route", || {
+                        vec![("task", json::num(id as f64)), ("shard", json::num(shard as f64))]
+                    });
                     self.feed(shard);
                     self.arm_steal_checks();
                 }
@@ -523,6 +637,12 @@ impl Carma {
     fn shed(&mut self, id: TaskId, at_door: bool) {
         self.tasks[id].state = RunState::Shed;
         self.recorder.on_shed(id, self.engine.now(), at_door);
+        self.trace_event("shed", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("at_door", json::num(u64::from(at_door) as f64)),
+            ]
+        });
         self.done_count += 1;
     }
 
@@ -628,6 +748,13 @@ impl Carma {
             return;
         };
         self.recorder.on_stolen(id, shard);
+        self.trace_event("steal", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("thief", json::num(shard as f64)),
+                ("victim", json::num(victim as f64)),
+            ]
+        });
         self.mappers[shard].select(id);
         self.tasks[id].state = RunState::Selected;
         self.engine
@@ -721,6 +848,14 @@ impl Carma {
                 }
                 self.recorder
                     .on_gang_dispatch(id, gpus.len(), req.n_gpus, spanned, min_span, cost);
+                self.trace_event("gang_dispatch", || {
+                    vec![
+                        ("task", json::num(id as f64)),
+                        ("gpus", json::num(gpus.len() as f64)),
+                        ("servers", json::num(spanned as f64)),
+                        ("cost", json::num(cost)),
+                    ]
+                });
                 self.tasks[id].admitted_est_gb = req.demand_gb;
                 self.tasks[id].pinned = demoted;
                 // clear BEFORE dispatch (same re-entrancy rule as the shard
@@ -739,6 +874,12 @@ impl Carma {
                 if !new_holds.is_empty() {
                     self.touch();
                     self.recorder.on_gang_holds(new_holds.len() as u64);
+                    self.trace_event("gang_hold", || {
+                        vec![
+                            ("task", json::num(id as f64)),
+                            ("holds", json::num(new_holds.len() as f64)),
+                        ]
+                    });
                     for &g in &new_holds {
                         self.book.hold(g, id);
                     }
@@ -790,6 +931,12 @@ impl Carma {
         if !freed.is_empty() {
             self.touch();
             self.recorder.on_gang_holds_expired(freed.len() as u64);
+            self.trace_event("gang_hold_expire", || {
+                vec![
+                    ("task", json::num(id as f64)),
+                    ("freed", json::num(freed.len() as f64)),
+                ]
+            });
             // the released devices are fair game for waiting singletons
             self.kick_mappers();
         }
@@ -873,6 +1020,7 @@ impl Carma {
         let now_bits = self.engine.now().to_bits();
         let policy = self.cfg.policy;
         let pre = self.preconditions();
+        let t0 = self.profiler.start();
         let plans: Vec<MapPlan> = {
             let pool = self.pool.as_ref().expect("pool checked above");
             let views_ref: &[ServerView] = &views;
@@ -882,6 +1030,7 @@ impl Carma {
                 compute_plan(views_ref, policy, pre, fabric, &jobs_ref[i], epoch, now_bits)
             })
         };
+        self.profiler.add(Phase::SpeculativePlan, t0);
         for (job, plan) in jobs.iter().zip(plans) {
             self.mappers[job.shard].plan = Some(plan);
         }
@@ -936,7 +1085,7 @@ impl Carma {
     /// Shared verbatim by the serial and speculative paths — one source of
     /// truth, so the two cannot drift.
     fn mapping_request(&self, id: TaskId) -> (MappingRequest, bool) {
-        let crashes = self.recorder.tasks[id].oom_crashes;
+        let crashes = self.recorder.oom_crashes_of(id);
         let spec = &self.tasks[id].spec;
         let max_mem = self.cluster.topo.max_server_mem_gb();
         let raw_est = self.estimator.estimate_gb(spec);
@@ -1018,6 +1167,55 @@ impl Carma {
                 )
             }
         };
+        // decision provenance (DESIGN.md §14): the explanation rides the
+        // committed plan, so discarded speculative scans never count
+        let outcome_kind = match &plan.outcome {
+            PlanOutcome::Place(..) => DecisionOutcome::Placed,
+            PlanOutcome::NoFit => DecisionOutcome::NoFit,
+            PlanOutcome::Inadmissible(_) => DecisionOutcome::Inadmissible,
+        };
+        self.recorder.on_decision(outcome_kind, &plan.explain);
+        if self.explain_sample > 0
+            && (self.recorder.decisions.decisions - 1) % self.explain_sample == 0
+        {
+            let ex = plan.explain.clone();
+            let outcome_name = match outcome_kind {
+                DecisionOutcome::Placed => "place",
+                DecisionOutcome::NoFit => "no_fit",
+                DecisionOutcome::Inadmissible => "inadmissible",
+            };
+            self.trace_event("decision", || {
+                let mut f = vec![
+                    ("task", json::num(id as f64)),
+                    ("shard", json::num(shard as f64)),
+                    ("outcome", json::s(outcome_name)),
+                    ("servers_admitted", json::num(ex.servers_admitted as f64)),
+                    ("servers_rejected", json::num(ex.servers_rejected as f64)),
+                    ("gpus_eligible", json::num(ex.gpus_eligible as f64)),
+                    ("candidates", json::num(ex.candidates as f64)),
+                    (
+                        "rejects",
+                        json::obj(
+                            RejectReason::ALL
+                                .iter()
+                                .map(|r| (r.name(), json::num(ex.rejects[r.index()] as f64)))
+                                .collect(),
+                        ),
+                    ),
+                ];
+                if let Some(w) = &ex.winner {
+                    f.push((
+                        "winner",
+                        json::obj(vec![
+                            ("fabric_cost", json::num(w.fabric_cost)),
+                            ("policy", json::num(w.policy)),
+                            ("nic_load", json::num(w.nic_load)),
+                        ]),
+                    ));
+                }
+                f
+            });
+        }
         match plan.outcome {
             PlanOutcome::Inadmissible(why) => self.fail_task(id, why),
             PlanOutcome::NoFit => self.schedule_retry(shard),
@@ -1049,6 +1247,9 @@ impl Carma {
         eprintln!("carma: task {} failed permanently: {why}", self.tasks[id].spec.label());
         self.tasks[id].state = RunState::Failed;
         self.recorder.on_failed(id);
+        self.trace_event("fail", || {
+            vec![("task", json::num(id as f64)), ("why", json::s(why))]
+        });
         self.done_count += 1;
         if self.tasks[id].spec.gang {
             if self.gang_lane.active == Some(id) {
@@ -1079,6 +1280,7 @@ impl Carma {
                 return c.views.clone();
             }
         }
+        let t0 = self.profiler.start();
         let n_servers = self.cluster.servers.len();
         let views: Vec<ServerView> = {
             let cluster = &self.cluster;
@@ -1095,6 +1297,7 @@ impl Carma {
                     .collect(),
             }
         };
+        self.profiler.add(Phase::SnapshotBuild, t0);
         let views = Arc::new(views);
         self.views_cache = Some(ViewsCache {
             epoch: self.state_epoch,
@@ -1109,6 +1312,15 @@ impl Carma {
         self.touch();
         let now = self.engine.now();
         self.recorder.on_dispatch(id, now);
+        self.trace_event("dispatch", || {
+            vec![
+                ("task", json::num(id as f64)),
+                (
+                    "gpus",
+                    json::arr(p.gpus.iter().map(|&g| json::num(g as f64)).collect()),
+                ),
+            ]
+        });
 
         // staircase memory ramp: memsim's segment shape scaled so the total
         // equals the task's true peak memory (paper Table 3 ground truth)
@@ -1207,7 +1419,13 @@ impl Carma {
         task.version += 1; // invalidate any scheduled completion
         task.remaining_s = task.spec.work_s; // restart from scratch
         task.in_recovery = true;
-        let crashes = self.recorder.tasks[id].oom_crashes;
+        let crashes = self.recorder.oom_crashes_of(id);
+        self.trace_event("oom", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("crashes", json::num(crashes as f64)),
+            ]
+        });
         if crashes > MAX_OOM_RETRIES {
             self.fail_task(id, "exceeded OOM retry budget");
             // the failed task's memory was released above — the gang lane
@@ -1233,6 +1451,7 @@ impl Carma {
             return;
         }
         self.tasks[id].state = RunState::Queued;
+        self.trace_event("recovery", || vec![("task", json::num(id as f64))]);
         if self.tasks[id].spec.gang {
             self.admission.submit_gang_recovery(id);
             self.feed_gang();
@@ -1280,6 +1499,7 @@ impl Carma {
         self.tasks[id].state = RunState::Done;
         self.done_count += 1;
         self.recorder.on_completion(id, self.engine.now());
+        self.trace_event("complete", || vec![("task", json::num(id as f64))]);
         // the gang lane gets first claim on the freed devices (§11), then
         // the singleton mappers sweep
         self.kick_gang();
@@ -1415,13 +1635,18 @@ fn compute_plan(
     epoch: u64,
     now_bits: u64,
 ) -> MapPlan {
-    let outcome = match job.admissible {
-        Err(why) => PlanOutcome::Inadmissible(why),
+    let (outcome, explain) = match job.admissible {
+        // statically unschedulable: the placement core never ran, so there
+        // is no census to report
+        Err(why) => (PlanOutcome::Inadmissible(why), Explain::default()),
         Ok(()) => {
             let mut cursor = job.cursor_in;
-            match placement::select_singleton(policy, views, job.req, pre, &mut cursor, fabric) {
-                Some(p) => PlanOutcome::Place(p, cursor),
-                None => PlanOutcome::NoFit,
+            let (pick, ex) = placement::select_singleton_explained(
+                policy, views, job.req, pre, &mut cursor, fabric,
+            );
+            match pick {
+                Some(p) => (PlanOutcome::Place(p, cursor), ex),
+                None => (PlanOutcome::NoFit, ex),
             }
         }
     };
@@ -1433,6 +1658,7 @@ fn compute_plan(
         demand_gb: job.req.demand_gb,
         demoted: job.demoted,
         outcome,
+        explain,
     }
 }
 
@@ -1898,5 +2124,52 @@ mod tests {
             "open-loop JSON must be byte-identical across repeats"
         );
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn stream_mode_service_run_keeps_no_per_task_state() {
+        use crate::config::schema::ArrivalKind;
+        // `[obs] timeline = "off"` in open-loop mode flips the recorder to
+        // streaming aggregation: no per-task vector, no timeline points,
+        // yet the report sections stay populated (DESIGN.md §14)
+        let (mut c, e) = service_cfg(ArrivalKind::Poisson, 6.0, 600.0, 4);
+        c.obs.timeline = TimelineMode::Off;
+        let out = run_service(c, e, "svc-stream");
+        assert!(out.recorder.stream(), "service + timeline off must stream");
+        assert!(out.recorder.tasks.is_empty(), "per-task vector must stay empty");
+        assert!(
+            out.recorder.timelines.iter().all(|t| t.is_empty()),
+            "timeline off must keep no points"
+        );
+        assert!(out.report.total_tasks > 0, "offered count survives streaming");
+        assert_eq!(
+            out.report.completed
+                + out.recorder.failed_total as usize
+                + out.recorder.shed_total as usize,
+            out.report.total_tasks,
+            "every offered task must reach a terminal state"
+        );
+        // the report JSON still carries every section, including percentiles
+        let j = out.report.to_json();
+        assert!(j.get("service").is_some());
+        assert!(j.get("placement_decisions").is_some());
+    }
+
+    #[test]
+    fn decision_provenance_populates_report() {
+        let zoo = ModelZoo::load();
+        let trace = trace_90(&zoo, 1);
+        let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        c.safety_margin_gb = 2.0;
+        let out = run_trace(c, e, &trace, "prov");
+        let d = &out.report.decisions;
+        assert!(d.decisions >= 90, "every mapping attempt must be counted");
+        assert!(d.placed >= 90, "every task dispatches at least once");
+        assert_eq!(d.inadmissible, 0);
+        assert!(
+            d.servers_admitted + d.servers_rejected >= d.decisions,
+            "per-decision server census must cover at least one server each"
+        );
+        assert!(out.report.to_json().get("placement_decisions").is_some());
     }
 }

@@ -35,6 +35,59 @@ pub enum Requester<'a> {
     },
 }
 
+/// Which filter cut a GPU out of the eligible set (DESIGN.md §14 decision
+/// provenance). One variant per rejecting check of [`classify`], in check
+/// order; the discriminant doubles as the index into per-reason count
+/// arrays (`Explain::rejects`, the report's `placement_decisions.rejects`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// A gang requester targeting a MIG-partitioned device (gangs take
+    /// whole GPUs only, DESIGN.md §11).
+    GangMig = 0,
+    /// Pinned resident (recovery demotion) or a foreign gang hold.
+    PinnedOrHeld = 1,
+    /// MIG device with no free instance.
+    MigBusy = 2,
+    /// Exclusive request on a non-idle device.
+    NotIdle = 3,
+    /// Windowed SMACT above the precondition cap (paper §4.3).
+    SmactCap = 4,
+    /// Free memory below the precondition floor (paper §4.3).
+    MinFree = 5,
+    /// The (estimated) demand does not fit the free memory — device-level,
+    /// MIG-instance-level, or the fit revalidation of a gang's own hold.
+    NoFit = 6,
+}
+
+impl RejectReason {
+    pub const COUNT: usize = 7;
+    pub const ALL: [RejectReason; RejectReason::COUNT] = [
+        RejectReason::GangMig,
+        RejectReason::PinnedOrHeld,
+        RejectReason::MigBusy,
+        RejectReason::NotIdle,
+        RejectReason::SmactCap,
+        RejectReason::MinFree,
+        RejectReason::NoFit,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::GangMig => "gang_mig",
+            RejectReason::PinnedOrHeld => "pinned_or_held",
+            RejectReason::MigBusy => "mig_busy",
+            RejectReason::NotIdle => "not_idle",
+            RejectReason::SmactCap => "smact_cap",
+            RejectReason::MinFree => "min_free",
+            RejectReason::NoFit => "no_fit",
+        }
+    }
+}
+
 /// Can `v` host one worker of this request right now?
 ///
 /// * A device the gang requester already holds re-validates only the
@@ -55,40 +108,72 @@ pub enum Requester<'a> {
 /// * Everything else passes the paper's preconditions (SMACT cap, minimum
 ///   free memory, §4.3) plus the demand fit.
 pub fn eligible(v: &GpuView, req: MappingRequest, pre: Preconditions, who: Requester) -> bool {
+    classify(v, req, pre, who).is_none()
+}
+
+/// [`eligible`] with provenance: `None` = the device can host the request,
+/// `Some(reason)` names the FIRST filter that cut it (check order is fixed,
+/// so the per-reason counts are deterministic). This is the one
+/// implementation — `eligible` is `classify(..).is_none()` — so the
+/// provenance can never drift from the decision.
+pub fn classify(
+    v: &GpuView,
+    req: MappingRequest,
+    pre: Preconditions,
+    who: Requester,
+) -> Option<RejectReason> {
     let fits = req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB);
     if let Requester::Gang { book, task } = who {
         if book.holder(v.id) == Some(task) {
-            return fits && (!req.exclusive || v.n_tasks == 0);
+            if !fits {
+                return Some(RejectReason::NoFit);
+            }
+            if req.exclusive && v.n_tasks > 0 {
+                return Some(RejectReason::NotIdle);
+            }
+            return None;
         }
         if v.mig_enabled {
-            return false;
+            return Some(RejectReason::GangMig);
         }
     }
     if v.pinned || v.held {
-        return false;
+        return Some(RejectReason::PinnedOrHeld);
     }
     if v.mig_enabled {
         if v.mig_free_instance.is_none() {
-            return false;
+            return Some(RejectReason::MigBusy);
         }
-        return req
+        return if req
             .demand_gb
-            .is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB);
+            .is_none_or(|d| d <= v.mig_instance_mem_gb + FIT_SLACK_GB)
+        {
+            None
+        } else {
+            Some(RejectReason::NoFit)
+        };
     }
     if req.exclusive {
-        return v.n_tasks == 0 && fits;
+        if v.n_tasks > 0 {
+            return Some(RejectReason::NotIdle);
+        }
+        return if fits { None } else { Some(RejectReason::NoFit) };
     }
     if let Some(cap) = pre.smact_cap {
         if v.smact_window > cap {
-            return false;
+            return Some(RejectReason::SmactCap);
         }
     }
     if let Some(min_free) = pre.min_free_gb {
         if v.free_gb < min_free {
-            return false;
+            return Some(RejectReason::MinFree);
         }
     }
-    fits
+    if fits {
+        None
+    } else {
+        Some(RejectReason::NoFit)
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +274,58 @@ mod tests {
         mig.mig_instance_mem_gb = 20.0;
         assert!(!eligible(&mig, req(4, None, false), pre, who));
         assert!(eligible(&mig, req(4, None, false), pre, Requester::Singleton), "singletons may");
+    }
+
+    #[test]
+    fn classify_names_the_first_failing_filter() {
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: Some(5.0),
+        };
+        let hot = view(0, 10.0, 0.9, 1);
+        assert_eq!(
+            classify(&hot, req(1, None, false), pre, Requester::Singleton),
+            Some(RejectReason::SmactCap)
+        );
+        let tight = view(1, 3.0, 0.1, 1);
+        assert_eq!(
+            classify(&tight, req(1, None, false), pre, Requester::Singleton),
+            Some(RejectReason::MinFree)
+        );
+        let small = view(2, 6.0, 0.1, 1);
+        assert_eq!(
+            classify(&small, req(1, Some(8.0), false), Preconditions::default(), Requester::Singleton),
+            Some(RejectReason::NoFit)
+        );
+        let busy = view(3, 40.0, 0.3, 1);
+        assert_eq!(
+            classify(&busy, req(1, None, true), Preconditions::default(), Requester::Singleton),
+            Some(RejectReason::NotIdle)
+        );
+        let mut pinned = view(4, 40.0, 0.0, 1);
+        pinned.pinned = true;
+        assert_eq!(
+            classify(&pinned, req(1, None, false), Preconditions::default(), Requester::Singleton),
+            Some(RejectReason::PinnedOrHeld)
+        );
+        let mut mig = view(5, 40.0, 0.1, 1);
+        mig.mig_enabled = true;
+        assert_eq!(
+            classify(&mig, req(1, None, false), Preconditions::default(), Requester::Singleton),
+            Some(RejectReason::MigBusy)
+        );
+        let ok = view(6, 10.0, 0.5, 1);
+        assert_eq!(classify(&ok, req(1, Some(8.0), false), pre, Requester::Singleton), None);
+    }
+
+    #[test]
+    fn reject_reason_index_and_names_are_stable() {
+        for (i, r) in RejectReason::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i, "{:?} discriminant drifted", r);
+        }
+        let names: std::collections::BTreeSet<_> =
+            RejectReason::ALL.iter().map(|r| r.name()).collect();
+        assert_eq!(names.len(), RejectReason::COUNT, "duplicate reason name");
     }
 }
 

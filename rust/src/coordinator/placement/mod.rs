@@ -42,7 +42,7 @@ pub mod eligibility;
 pub mod enumerate;
 
 pub use cost::{CostModel, SetScore};
-pub use eligibility::Requester;
+pub use eligibility::{RejectReason, Requester};
 
 use crate::cluster::Fabric;
 use crate::config::schema::{PolicyKind, PowerConfig};
@@ -106,6 +106,30 @@ pub fn select_flat(
     ))
 }
 
+/// Provenance of one singleton placement decision (DESIGN.md §14): who was
+/// filtered out and why, how many candidate sets were ranked, and the
+/// winning candidate's lexicographic cost terms. Filled by
+/// [`select_singleton_explained`] from the same snapshot the decision used,
+/// so the explanation can never disagree with the commit. Plain counters —
+/// `Send`, cheap to clone, deterministic (census runs in view order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Explain {
+    /// Servers whose `admits` gate passed.
+    pub servers_admitted: usize,
+    /// Servers cut by the admission gate (power envelope / capacity).
+    pub servers_rejected: usize,
+    /// GPUs on admitted servers that survived every eligibility filter.
+    pub gpus_eligible: usize,
+    /// Per-reason reject counts, indexed by [`RejectReason::index`].
+    pub rejects: [u64; RejectReason::COUNT],
+    /// Candidate GPU sets actually ranked (sortable policies enumerate
+    /// many; exclusive/RR commit the first workable set, so 0 or 1).
+    pub candidates: usize,
+    /// The committed candidate's score terms (sortable policies only —
+    /// exclusive/RR pick positionally and never compute a score).
+    pub winner: Option<SetScore>,
+}
+
 /// Two-level cluster selection for server-local (singleton) tasks: filter
 /// servers (power envelope, capacity), enumerate candidate GPU sets per
 /// surviving server, rank them with the [`CostModel`], commit the best.
@@ -120,9 +144,27 @@ pub fn select_singleton(
     rr_cursor: &mut usize,
     fabric: Option<&Fabric>,
 ) -> Option<Placement> {
+    select_singleton_explained(policy, servers, req, pre, rr_cursor, fabric).0
+}
+
+/// [`select_singleton`] plus decision provenance. The placement result is
+/// identical — the explanation is a read-only census over the same views
+/// (the per-GPU reject classification re-runs [`eligibility::classify`],
+/// which IS the filter the enumerator applies).
+pub fn select_singleton_explained(
+    policy: PolicyKind,
+    servers: &[ServerView],
+    req: MappingRequest,
+    pre: Preconditions,
+    rr_cursor: &mut usize,
+    fabric: Option<&Fabric>,
+) -> (Option<Placement>, Explain) {
+    let mut ex = Explain::default();
     let admitted: Vec<&ServerView> = servers.iter().filter(|s| s.admits(req)).collect();
+    ex.servers_admitted = admitted.len();
+    ex.servers_rejected = servers.len() - admitted.len();
     if admitted.is_empty() {
-        return None;
+        return (None, ex);
     }
 
     // island-aware ranking only where island structure can matter at all:
@@ -132,19 +174,38 @@ pub fn select_singleton(
     // substrates the off-switch contract promises unchanged (§12)
     let fabric = fabric.filter(|f| admitted.iter().any(|s| f.islands_matter(s.id)));
 
-    if req.exclusive || policy == PolicyKind::Exclusive {
-        // lowest-id admitted server with enough idle targets
-        let excl = MappingRequest {
+    // per-GPU census under the EFFECTIVE request (the exclusive paths
+    // upgrade the request before filtering, and so must the census)
+    let eff = if req.exclusive || policy == PolicyKind::Exclusive {
+        MappingRequest {
             exclusive: true,
             ..req
-        };
-        return admitted
+        }
+    } else {
+        req
+    };
+    for s in &admitted {
+        for v in &s.gpus {
+            match eligibility::classify(v, eff, pre, Requester::Singleton) {
+                None => ex.gpus_eligible += 1,
+                Some(r) => ex.rejects[r.index()] += 1,
+            }
+        }
+    }
+
+    if req.exclusive || policy == PolicyKind::Exclusive {
+        // lowest-id admitted server with enough idle targets
+        let p = admitted
             .iter()
-            .find_map(|s| exclusive_on_server(s, excl, pre, fabric));
+            .find_map(|s| exclusive_on_server(s, eff, pre, fabric));
+        ex.candidates = usize::from(p.is_some());
+        return (p, ex);
     }
 
     if policy == PolicyKind::RoundRobin {
-        return select_round_robin(&admitted, req, pre, rr_cursor, fabric);
+        let p = select_round_robin(&admitted, req, pre, rr_cursor, fabric);
+        ex.candidates = usize::from(p.is_some());
+        return (p, ex);
     }
 
     // sortable policies (MAGM / LUG / MUG): enumerate candidates per
@@ -156,13 +217,15 @@ pub fn select_singleton(
         for cand in
             enumerate::server_candidates(s, req, pre, policy, fabric, Requester::Singleton)
         {
+            ex.candidates += 1;
             let score = model.score(s, &cand);
             if best.as_ref().is_none_or(|(b, _)| score.better_than(b)) {
                 best = Some((score, placement(&s.gpus, cand)));
             }
         }
     }
-    best.map(|(_, p)| p)
+    ex.winner = best.as_ref().map(|(sc, _)| *sc);
+    (best.map(|(_, p)| p), ex)
 }
 
 /// One all-or-nothing placement attempt for a gang (DESIGN.md §11),
@@ -586,6 +649,68 @@ mod tests {
         .unwrap();
         assert_eq!(aware.gpus, vec![1, 0], "partner from island 0, not across");
         assert_eq!(rr, 2, "cursor rotates past the first pick");
+    }
+
+    #[test]
+    fn explained_matches_plain_and_counts_the_census() {
+        let servers = [sview(
+            0,
+            vec![
+                view(0, 0, 20.0, 0.1, 1),
+                view(1, 0, 2.0, 0.1, 1),  // demand won't fit
+                view(2, 0, 39.0, 0.9, 1), // over the SMACT cap
+                view(3, 0, 30.0, 0.1, 1),
+            ],
+        )];
+        let pre = Preconditions {
+            smact_cap: Some(0.8),
+            min_free_gb: None,
+        };
+        let mut rr1 = 0;
+        let mut rr2 = 0;
+        let plain =
+            select_singleton(PolicyKind::Magm, &servers, req(1, Some(4.0)), pre, &mut rr1, None);
+        let (p, ex) = select_singleton_explained(
+            PolicyKind::Magm,
+            &servers,
+            req(1, Some(4.0)),
+            pre,
+            &mut rr2,
+            None,
+        );
+        assert_eq!(p, plain, "explanation must not perturb the decision");
+        assert_eq!(ex.servers_admitted, 1);
+        assert_eq!(ex.servers_rejected, 0);
+        assert_eq!(ex.gpus_eligible, 2);
+        assert_eq!(ex.rejects[RejectReason::NoFit.index()], 1);
+        assert_eq!(ex.rejects[RejectReason::SmactCap.index()], 1);
+        assert!(ex.candidates >= 1);
+        let w = ex.winner.expect("sortable policy records the winning score");
+        assert_eq!(w.fabric_cost, 0.0, "blind mode: fabric term is zero");
+    }
+
+    #[test]
+    fn explained_exclusive_census_uses_the_upgraded_request() {
+        // Exclusive policy upgrades the request before filtering; a busy
+        // device must therefore count as not_idle, not as eligible.
+        let servers = [sview(
+            0,
+            vec![view(0, 0, 40.0, 0.0, 0), view(1, 0, 40.0, 0.3, 1)],
+        )];
+        let mut rr = 0;
+        let (p, ex) = select_singleton_explained(
+            PolicyKind::Exclusive,
+            &servers,
+            req(1, Some(4.0)),
+            Preconditions::default(),
+            &mut rr,
+            None,
+        );
+        assert!(p.is_some());
+        assert_eq!(ex.gpus_eligible, 1);
+        assert_eq!(ex.rejects[RejectReason::NotIdle.index()], 1);
+        assert_eq!(ex.candidates, 1, "exclusive commits the first workable set");
+        assert!(ex.winner.is_none(), "positional paths never score");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! byte-identical to serial ones. `Mapper` is plain owned data (`Send`), so
 //! plan inputs can cross threads freely.
 
+use crate::coordinator::placement::Explain;
 use crate::coordinator::policy::Placement;
 use crate::sim::TaskId;
 
@@ -51,6 +52,11 @@ pub struct MapPlan {
     /// Final-retry recovery demotion: dispatch pinned-exclusive (§4.2).
     pub demoted: bool,
     pub outcome: PlanOutcome,
+    /// Decision provenance from the placement core (DESIGN.md §14) —
+    /// plain counters, computed on the same snapshot as `outcome` and
+    /// recorded at commit time only (a discarded plan discards its
+    /// explanation with it).
+    pub explain: Explain,
 }
 
 /// A mapper's shard index is its position in the driver's mapper vector
@@ -144,6 +150,7 @@ mod tests {
             demand_gb: Some(10.0),
             demoted: false,
             outcome: PlanOutcome::NoFit,
+            explain: Explain::default(),
         };
         let mut m = Mapper::new();
         m.select(3);

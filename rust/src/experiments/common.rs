@@ -1,7 +1,7 @@
 //! Shared experiment plumbing: run configurations, comparison printing,
 //! JSON/CSV emission under `artifacts/results/`.
 
-use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
+use crate::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind, TimelineMode};
 use crate::coordinator::carma::{run_label, run_trace, RunOutcome};
 use crate::estimators;
 use crate::metrics::report::RunReport;
@@ -61,6 +61,9 @@ impl RunCfg {
             ..CarmaConfig::default()
         };
         c.seed = DEFAULT_SEED;
+        // figure-producing runs keep the seed's dense timeline (fig12 plots
+        // it); ad-hoc CLI runs default to the sparse retention instead
+        c.obs.timeline = TimelineMode::On;
         c
     }
 }

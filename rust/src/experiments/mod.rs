@@ -7,6 +7,7 @@
 pub mod cluster_scale; // beyond the paper: N-server scaling sweep
 pub mod common;
 pub mod gang_scale; // beyond the paper: fabric-aware gang scheduling (DESIGN.md §11)
+pub mod obs_overhead; // beyond the paper: observability tax gate (DESIGN.md §14)
 pub mod placement_scale; // beyond the paper: island-aware singleton placement (DESIGN.md §12)
 pub mod service_scale; // beyond the paper: open-loop service mode + load shedding (DESIGN.md §13)
 pub mod shard_scale; // beyond the paper: sharded-coordinator sweep (DESIGN.md §9)
@@ -22,7 +23,7 @@ pub mod table5; // table5 + fig10
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
     "fig10", "table6", "fig11", "fig12", "table7", "cluster_scale", "shard_scale",
-    "gang_scale", "placement_scale", "service_scale",
+    "gang_scale", "placement_scale", "service_scale", "obs_overhead",
 ];
 
 /// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
@@ -49,6 +50,7 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
         "gang_scale" => gang_scale::run(artifacts_dir),
         "placement_scale" => placement_scale::run(artifacts_dir),
         "service_scale" => service_scale::run(artifacts_dir),
+        "obs_overhead" => obs_overhead::run(artifacts_dir),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

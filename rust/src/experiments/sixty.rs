@@ -132,7 +132,7 @@ mod tests {
     fn outcome(label: &str) -> (String, RunOutcome) {
         let r = Recorder::new(0, 0);
         let report = RunReport::from_recorder(label, &r);
-        (label.to_string(), RunOutcome { report, recorder: r, events: 0 })
+        (label.to_string(), RunOutcome { report, recorder: r, events: 0, profile: None })
     }
 
     #[test]

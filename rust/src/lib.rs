@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod estimators;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;

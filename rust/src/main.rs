@@ -7,6 +7,8 @@
 //!             [--servers N] [--gpus-per-server G] [--power-cap W]
 //!             [--shards K] [--shard-assign round-robin|least-loaded|locality]
 //!             [--arrivals poisson|diurnal|burst] [--rate R] [--duration S]
+//!             [--trace-out t.jsonl] [--explain-sample N] [--metrics-out m.prom]
+//!             [--profile] [--timeline on|sparse|off]
 //!             [--seed N] [--config carma.toml]
 //! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
 //! carma zoo                                        (print the Table 3 zoo)
@@ -15,9 +17,9 @@
 use carma::cli;
 use carma::config::schema::{
     ArrivalKind, CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, PolicyKind,
-    ServerConfig, ShardAssign,
+    ServerConfig, ShardAssign, TimelineMode,
 };
-use carma::coordinator::carma::{run_label, run_service, run_trace};
+use carma::coordinator::carma::{run_label, run_service, run_trace, RunOutcome};
 use carma::estimators;
 use carma::experiments;
 use carma::metrics::report::RunReport;
@@ -30,6 +32,7 @@ const VALUE_OPTS: &[&str] = &[
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
     "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
     "arrivals", "rate", "duration", "queue-cap",
+    "trace-out", "explain-sample", "metrics-out", "timeline",
 ];
 
 fn main() {
@@ -102,6 +105,18 @@ fn usage() {
          \x20 --queue-cap N      per-shard bounded queue depth; arrivals routed to a\n\
          \x20                    full shard are shed (default 16)\n\
          \x20 --json             print the run report as JSON only (determinism diffing)\n\
+         \x20 --trace-out PATH   stream one JSONL record per lifecycle commit to PATH\n\
+         \x20                    (deterministic (time, seq) order — byte-identical at\n\
+         \x20                    any shard/thread count; DESIGN.md §14)\n\
+         \x20 --explain-sample N emit every Nth committed placement decision as a\n\
+         \x20                    `decision` trace record with full provenance (0 = off)\n\
+         \x20 --metrics-out PATH write final counters/sketches as a Prometheus-style\n\
+         \x20                    text exposition after the run\n\
+         \x20 --profile          per-phase engine wall-clock profile + worker-pool\n\
+         \x20                    occupancy, printed to stderr (never in results JSON)\n\
+         \x20 --timeline M       on|sparse|off per-GPU timeline retention (default\n\
+         \x20                    sparse = one point per observation window; off also\n\
+         \x20                    streams service-mode task aggregation, O(1) memory)\n\
          \x20 --seed N           trace + arrival-stream seed (default 42)\n\
          \x20 --config FILE      carma.toml overriding the defaults\n\
          \x20 --trace gangN      N-task mixed trace with distributed (gang) jobs\n\n\
@@ -112,6 +127,15 @@ fn usage() {
 
 fn artifacts_dir(args: &cli::Args) -> String {
     args.opt("artifacts").unwrap_or("artifacts").to_string()
+}
+
+/// `--profile` output goes to stderr only: stdout may carry the `--json`
+/// report that determinism smokes byte-compare, and wall-clock timings
+/// must never leak into it (DESIGN.md §14).
+fn print_profile(out: &RunOutcome) {
+    if let Some(p) = &out.profile {
+        eprintln!("profile: {}", p.to_string_pretty());
+    }
 }
 
 fn cmd_repro(args: &cli::Args) -> Result<(), String> {
@@ -235,6 +259,22 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
         // range (1..=1000000) is enforced by cfg.validate() below
         cfg.service.queue_cap = c as usize;
     }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.obs.trace_out = if p.is_empty() { None } else { Some(p.to_string()) };
+    }
+    if let Some(n) = args.opt_u64("explain-sample").map_err(|e| e.to_string())? {
+        cfg.obs.explain_sample = n;
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.obs.metrics_out = if p.is_empty() { None } else { Some(p.to_string()) };
+    }
+    if args.flag("profile") {
+        cfg.obs.profile = true;
+    }
+    if let Some(m) = args.opt("timeline") {
+        cfg.obs.timeline = TimelineMode::parse(m)
+            .ok_or_else(|| format!("unknown timeline mode '{m}' (on|sparse|off)"))?;
+    }
     if let Some(s) = args.opt_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = s;
         // --seed seeds the whole run: trace generators AND the open-loop
@@ -302,6 +342,7 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
         let mut j = out.report.to_json();
         j.set("events", carma::util::json::num(out.events as f64));
         println!("{}", j.to_string_pretty());
+        print_profile(&out);
         return Ok(());
     }
     println!(
@@ -362,6 +403,7 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
         );
     }
     println!("\n{} simulation events processed", out.events);
+    print_profile(&out);
     Ok(())
 }
 
@@ -382,6 +424,7 @@ fn cmd_run_service(args: &cli::Args, cfg: CarmaConfig) -> Result<(), String> {
         let mut j = out.report.to_json();
         j.set("events", carma::util::json::num(out.events as f64));
         println!("{}", j.to_string_pretty());
+        print_profile(&out);
         return Ok(());
     }
     println!(
@@ -420,6 +463,7 @@ fn cmd_run_service(args: &cli::Args, cfg: CarmaConfig) -> Result<(), String> {
         s.win_mem_peak_gb,
     );
     println!("\n{} simulation events processed", out.events);
+    print_profile(&out);
     Ok(())
 }
 

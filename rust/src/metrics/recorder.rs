@@ -1,5 +1,29 @@
 //! Run-time metric collection (paper §5.1.3).
+//!
+//! Two collection modes (DESIGN.md §14):
+//!
+//! * **Full** (closed-loop default): one [`TaskTiming`] per task, report
+//!   aggregates computed over the vector. Exact, O(tasks) memory.
+//! * **Stream** (open-loop service runs with `[obs] timeline = "off"`,
+//!   via [`Recorder::enable_stream`]): only *in-flight* tasks keep a
+//!   [`TaskTiming`] (a `BTreeMap` keyed by id); every terminal event
+//!   (completion, shed, permanent failure) folds the record into
+//!   [`StreamAgg`] running sums and drops it. Memory is O(in-flight +
+//!   histogram buckets + GPUs) no matter how many tasks the arrival
+//!   process offers. [`Recorder::finalize`] folds the stragglers so the
+//!   report covers tasks still queued at the horizon, exactly like the
+//!   full-mode aggregation does.
+//!
+//! Queue-delay and JCT percentiles come from [`LogHistogram`] sketches in
+//! BOTH modes (±5% relative error, `obs::sketch`), so the report keys
+//! cannot drift between modes. Stream-mode means run in terminal-event
+//! order rather than task-id order, which can differ in the last float
+//! bits from full mode — within one mode they are deterministic.
 
+use std::collections::BTreeMap;
+
+use crate::coordinator::placement::{Explain, RejectReason};
+use crate::obs::{LogHistogram, Registry};
 use crate::sim::TaskId;
 
 /// One downsampled monitoring sample for one GPU (drives Fig. 12).
@@ -47,6 +71,167 @@ pub struct TaskTiming {
     pub shed_s: Option<f64>,
 }
 
+/// How a committed mapping decision resolved (the three [`PlanOutcome`]
+/// shapes, minus the plan bookkeeping).
+///
+/// [`PlanOutcome`]: crate::coordinator::shard::mapper::PlanOutcome
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionOutcome {
+    Placed,
+    NoFit,
+    Inadmissible,
+}
+
+/// Aggregated decision provenance (DESIGN.md §14): every committed
+/// singleton mapping decision folds its [`Explain`] census here, so the
+/// report's `placement_decisions` section can say *why* the cluster looked
+/// the way it did — how many GPUs each eligibility filter cut, how many
+/// candidate sets were ranked — without keeping per-decision state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecisionAgg {
+    /// Mapping decisions committed (every `attempt_map` resolution).
+    pub decisions: u64,
+    pub placed: u64,
+    pub no_fit: u64,
+    pub inadmissible: u64,
+    /// Σ servers passing / failing the admission gate per decision.
+    pub servers_admitted: u64,
+    pub servers_rejected: u64,
+    /// Σ GPUs surviving every eligibility filter per decision.
+    pub gpus_eligible: u64,
+    /// Σ candidate GPU sets ranked per decision.
+    pub candidates: u64,
+    /// Σ per-reason eligibility rejects, indexed by [`RejectReason::index`].
+    pub rejects: [u64; RejectReason::COUNT],
+}
+
+impl DecisionAgg {
+    pub fn record(&mut self, outcome: DecisionOutcome, ex: &Explain) {
+        self.decisions += 1;
+        match outcome {
+            DecisionOutcome::Placed => self.placed += 1,
+            DecisionOutcome::NoFit => self.no_fit += 1,
+            DecisionOutcome::Inadmissible => self.inadmissible += 1,
+        }
+        self.servers_admitted += ex.servers_admitted as u64;
+        self.servers_rejected += ex.servers_rejected as u64;
+        self.gpus_eligible += ex.gpus_eligible as u64;
+        self.candidates += ex.candidates as u64;
+        for (acc, n) in self.rejects.iter_mut().zip(ex.rejects.iter()) {
+            *acc += n;
+        }
+    }
+}
+
+/// Per-shard running sums for stream mode — the fields `report::shard_stats`
+/// needs, folded at terminal events instead of scanned at the end.
+#[derive(Debug, Clone, Default)]
+pub struct ShardAgg {
+    pub tasks: usize,
+    pub decisions: u64,
+    pub wait_sum: f64,
+    pub waited: usize,
+    pub steals: u64,
+}
+
+/// Stream-mode running aggregates: everything the report computes by
+/// scanning `Recorder::tasks`, kept as O(shards) sums instead. Fields
+/// mirror the full-mode aggregation in `metrics::report` one for one.
+#[derive(Debug, Clone, Default)]
+pub struct StreamAgg {
+    /// Arrivals offered (stream-mode stand-in for `tasks.len()`).
+    pub arrivals: u64,
+    pub completed: u64,
+    pub wait_sum: f64,
+    pub waited: u64,
+    pub exec_sum: f64,
+    pub execed: u64,
+    pub jct_sum: f64,
+    pub jcted: u64,
+    pub per_shard: Vec<ShardAgg>,
+    // gang lane (report::gang_stats)
+    pub gangs: usize,
+    pub gang_completed: usize,
+    pub cross_server: usize,
+    pub max_servers_spanned: usize,
+    pub frag_excess: usize,
+    pub gang_wait_sum: f64,
+    pub gang_cost_sum: f64,
+    pub gang_waited: usize,
+    pub gang_max_wait_s: f64,
+    // singleton placement (report::placement_stats)
+    pub multi_gpu_singletons: usize,
+    pub single_island: usize,
+    pub place_cost_sum: f64,
+    pub place_max_cost: f64,
+}
+
+impl StreamAgg {
+    fn shard_mut(&mut self, shard: usize) -> &mut ShardAgg {
+        if shard >= self.per_shard.len() {
+            self.per_shard.resize_with(shard + 1, ShardAgg::default);
+        }
+        &mut self.per_shard[shard]
+    }
+
+    /// Fold one finished (or abandoned) task record — the exact per-task
+    /// contributions `report::{shard,gang,placement}_stats` and the
+    /// recorder's mean aggregates read off the full-mode vector.
+    fn fold(&mut self, t: &TaskTiming) {
+        if let Some(d) = t.dispatched_s {
+            let w = d - t.arrival_s;
+            self.wait_sum += w;
+            self.waited += 1;
+            if let Some(c) = t.completed_s {
+                self.exec_sum += c - d;
+                self.execed += 1;
+            }
+        }
+        if let Some(c) = t.completed_s {
+            self.jct_sum += c - t.arrival_s;
+            self.jcted += 1;
+            self.completed += 1;
+        }
+        if let Some(s) = t.assigned_shard {
+            let e = self.shard_mut(s);
+            e.tasks += 1;
+            e.decisions += t.dispatches as u64;
+            if let Some(d) = t.dispatched_s {
+                e.wait_sum += d - t.arrival_s;
+                e.waited += 1;
+            }
+        }
+        if let Some(thief) = t.stolen_by {
+            self.shard_mut(thief).steals += 1;
+        }
+        if t.gang {
+            self.gangs += 1;
+            if t.completed_s.is_some() {
+                self.gang_completed += 1;
+            }
+            if t.servers_spanned > 1 {
+                self.cross_server += 1;
+            }
+            self.max_servers_spanned = self.max_servers_spanned.max(t.servers_spanned);
+            self.frag_excess += t.span_excess;
+            if let Some(d) = t.dispatched_s {
+                let w = d - t.arrival_s;
+                self.gang_wait_sum += w;
+                self.gang_cost_sum += t.fabric_cost;
+                self.gang_waited += 1;
+                self.gang_max_wait_s = self.gang_max_wait_s.max(w);
+            }
+        } else if t.placed_gpus >= 2 {
+            self.multi_gpu_singletons += 1;
+            if t.islands_spanned <= 1 {
+                self.single_island += 1;
+            }
+            self.place_cost_sum += t.fabric_cost;
+            self.place_max_cost = self.place_max_cost.max(t.fabric_cost);
+        }
+    }
+}
+
 /// Collects everything the evaluation section reports.
 #[derive(Debug)]
 pub struct Recorder {
@@ -87,6 +272,20 @@ pub struct Recorder {
     /// Completed windows: (window_end_t, mean SMACT, mean mem GB), each a
     /// GPU-time-weighted mean over one window.
     pub util_windows: Vec<(f64, f64, f64)>,
+    /// Queue-delay (first dispatch − arrival) sketch, fed in both modes —
+    /// the report's `queue_delay_p*` keys read percentiles off it.
+    pub queue_delay: LogHistogram,
+    /// Job-completion-time sketch (completion − arrival), both modes.
+    pub jct: LogHistogram,
+    /// Aggregated decision provenance (`placement_decisions` section).
+    pub decisions: DecisionAgg,
+    /// Stream mode on: per-task records live only while in flight.
+    stream: bool,
+    /// In-flight task records (stream mode only), keyed by task id — a
+    /// BTreeMap so iteration (finalize) is deterministic.
+    live: BTreeMap<TaskId, TaskTiming>,
+    /// Stream-mode running aggregates (complete only after `finalize`).
+    pub agg: StreamAgg,
     win_smact_acc: f64,
     win_mem_acc: f64,
     win_time_acc: f64,
@@ -117,6 +316,12 @@ impl Recorder {
             shed_at_door: 0,
             util_window_s: 0.0,
             util_windows: Vec::new(),
+            queue_delay: LogHistogram::default(),
+            jct: LogHistogram::default(),
+            decisions: DecisionAgg::default(),
+            stream: false,
+            live: BTreeMap::new(),
+            agg: StreamAgg::default(),
             win_smact_acc: 0.0,
             win_mem_acc: 0.0,
             win_time_acc: 0.0,
@@ -126,22 +331,97 @@ impl Recorder {
         }
     }
 
+    /// Switch to stream collection (DESIGN.md §14) — open-loop service
+    /// runs with the timeline off call this before the first arrival.
+    /// Per-task records then live only while the task is in flight.
+    pub fn enable_stream(&mut self) {
+        assert!(
+            self.tasks.is_empty(),
+            "stream mode must be enabled before any task is recorded"
+        );
+        self.stream = true;
+    }
+
+    /// Stream collection active (the report aggregates off `agg`, not
+    /// `tasks`).
+    pub fn stream(&self) -> bool {
+        self.stream
+    }
+
+    /// Tasks the arrival process offered: the per-task table in full mode,
+    /// the arrival counter in stream mode (where the table stays empty).
+    pub fn offered(&self) -> usize {
+        if self.stream {
+            self.agg.arrivals as usize
+        } else {
+            self.tasks.len()
+        }
+    }
+
+    /// OOM crashes recorded against `task` so far (0 once folded — the
+    /// coordinator only asks while the task is in flight).
+    pub fn oom_crashes_of(&self, task: TaskId) -> u32 {
+        if self.stream {
+            self.live.get(&task).map_or(0, |t| t.oom_crashes)
+        } else {
+            self.tasks[task].oom_crashes
+        }
+    }
+
+    /// The live record for `task`: the table slot in full mode, the
+    /// in-flight map entry in stream mode.
+    fn timing_mut(&mut self, task: TaskId) -> &mut TaskTiming {
+        if self.stream {
+            self.live.entry(task).or_default()
+        } else {
+            &mut self.tasks[task]
+        }
+    }
+
+    /// Stream mode: fold `task`'s record into the running aggregates and
+    /// drop it. No-op in full mode or for an already-folded id.
+    fn fold_terminal(&mut self, task: TaskId) {
+        if !self.stream {
+            return;
+        }
+        if let Some(t) = self.live.remove(&task) {
+            self.agg.fold(&t);
+        }
+    }
+
+    /// Fold every still-in-flight record (tasks queued or running at the
+    /// horizon) so the stream aggregates cover exactly what a full-mode
+    /// scan would. Call once, after the last event. Full mode: no-op.
+    pub fn finalize(&mut self) {
+        if !self.stream {
+            return;
+        }
+        let leftovers: Vec<TaskId> = self.live.keys().copied().collect();
+        for task in leftovers {
+            self.fold_terminal(task);
+        }
+    }
+
     /// Open-loop intake: extend the per-task table to cover `task` (ids
     /// stream in sequentially; closed-loop runs pre-size in `new`).
+    /// Stream mode keeps no table — records appear on first touch.
     pub fn ensure_task(&mut self, task: TaskId) {
-        if task >= self.tasks.len() {
+        if !self.stream && task >= self.tasks.len() {
             self.tasks.resize(task + 1, TaskTiming::default());
         }
     }
 
     pub fn on_arrival(&mut self, task: TaskId, t: f64) {
-        self.tasks[task].arrival_s = t;
+        self.timing_mut(task).arrival_s = t;
         self.first_arrival_s = Some(self.first_arrival_s.map_or(t, |x: f64| x.min(t)));
+        if self.stream {
+            self.agg.arrivals += 1;
+        }
     }
 
     /// Admission routed `task` to `shard` (recorded once, at first intake).
     pub fn on_assigned(&mut self, task: TaskId, shard: usize) {
-        let tt = &mut self.tasks[task];
+        let tt = self.timing_mut(task);
         if tt.assigned_shard.is_none() {
             tt.assigned_shard = Some(shard);
         }
@@ -152,35 +432,52 @@ impl Recorder {
         // queue before execution first begins); re-dispatches after OOM only
         // bump the decision counter. map_or keeps this total: a re-dispatch
         // recorded before the first set is just taken as the first.
-        let tt = &mut self.tasks[task];
+        let tt = self.timing_mut(task);
         tt.dispatches += 1;
+        let first = tt.dispatched_s.is_none();
         tt.dispatched_s = Some(tt.dispatched_s.map_or(t, |d| d.min(t)));
+        if first {
+            let delay = (t - tt.arrival_s).max(0.0);
+            self.queue_delay.record(delay);
+        }
     }
 
     pub fn on_completion(&mut self, task: TaskId, t: f64) {
-        self.tasks[task].completed_s = Some(t);
+        let tt = self.timing_mut(task);
+        tt.completed_s = Some(t);
+        let jct = (t - tt.arrival_s).max(0.0);
+        self.jct.record(jct);
         self.last_completion_s = self.last_completion_s.max(t);
+        self.fold_terminal(task);
     }
 
     /// Task permanently failed (unschedulable / retry budget exhausted).
-    pub fn on_failed(&mut self, _task: TaskId) {
+    pub fn on_failed(&mut self, task: TaskId) {
         self.failed_total += 1;
+        self.fold_terminal(task);
     }
 
     /// Intake shed `task` at time `t` (open-loop service mode, DESIGN.md
     /// §13). `at_door` = dropped under cluster-wide backpressure (every
     /// shard at the cap) rather than one full routed queue.
     pub fn on_shed(&mut self, task: TaskId, t: f64, at_door: bool) {
-        self.tasks[task].shed_s = Some(t);
+        self.timing_mut(task).shed_s = Some(t);
         self.shed_total += 1;
         if at_door {
             self.shed_at_door += 1;
         }
+        self.fold_terminal(task);
+    }
+
+    /// A committed mapping decision with its provenance census
+    /// (DESIGN.md §14).
+    pub fn on_decision(&mut self, outcome: DecisionOutcome, ex: &Explain) {
+        self.decisions.record(outcome, ex);
     }
 
     /// Admission routed `task` to the gang lane (DESIGN.md §11).
     pub fn on_gang_arrival(&mut self, task: TaskId) {
-        self.tasks[task].gang = true;
+        self.timing_mut(task).gang = true;
     }
 
     /// A gang dispatched: `placed` GPUs of `requested` across `spanned`
@@ -198,7 +495,7 @@ impl Recorder {
         if placed != requested {
             self.gang_partial_dispatches += 1;
         }
-        let tt = &mut self.tasks[task];
+        let tt = self.timing_mut(task);
         tt.servers_spanned = spanned;
         tt.span_excess = spanned.saturating_sub(min_span);
         tt.fabric_cost = fabric_cost;
@@ -215,7 +512,7 @@ impl Recorder {
         fabric_cost: f64,
         islands: usize,
     ) {
-        let tt = &mut self.tasks[task];
+        let tt = self.timing_mut(task);
         tt.placed_gpus = placed;
         tt.fabric_cost = fabric_cost;
         tt.islands_spanned = islands;
@@ -223,7 +520,7 @@ impl Recorder {
 
     /// Shard `thief` stole this task off its original queue (§12).
     pub fn on_stolen(&mut self, task: TaskId, thief: usize) {
-        self.tasks[task].stolen_by = Some(thief);
+        self.timing_mut(task).stolen_by = Some(thief);
     }
 
     pub fn on_gang_holds(&mut self, n: u64) {
@@ -235,7 +532,7 @@ impl Recorder {
     }
 
     pub fn on_oom(&mut self, task: TaskId) {
-        self.tasks[task].oom_crashes += 1;
+        self.timing_mut(task).oom_crashes += 1;
         self.oom_total += 1;
     }
 
@@ -255,7 +552,8 @@ impl Recorder {
         if gpu == 0 {
             self.sample_count += 1;
         }
-        if self.sample_count % self.timeline_stride == 0 {
+        // stride 0 = timeline off ([obs] timeline = "off"): no points kept
+        if self.timeline_stride > 0 && self.sample_count % self.timeline_stride == 0 {
             self.timelines[gpu].push(TimelinePoint {
                 t,
                 mem_used_gb,
@@ -295,12 +593,18 @@ impl Recorder {
     }
 
     pub fn avg_waiting_s(&self) -> f64 {
+        if self.stream {
+            return ratio(self.agg.wait_sum, self.agg.waited);
+        }
         avg(self.tasks.iter().filter_map(|t| {
             t.dispatched_s.map(|d| d - t.arrival_s)
         }))
     }
 
     pub fn avg_execution_s(&self) -> f64 {
+        if self.stream {
+            return ratio(self.agg.exec_sum, self.agg.execed);
+        }
         avg(self.tasks.iter().filter_map(|t| {
             match (t.dispatched_s, t.completed_s) {
                 (Some(d), Some(c)) => Some(c - d),
@@ -310,6 +614,9 @@ impl Recorder {
     }
 
     pub fn avg_jct_s(&self) -> f64 {
+        if self.stream {
+            return ratio(self.agg.jct_sum, self.agg.jcted);
+        }
         avg(self.tasks.iter().filter_map(|t| {
             t.completed_s.map(|c| c - t.arrival_s)
         }))
@@ -332,7 +639,72 @@ impl Recorder {
     }
 
     pub fn completed_count(&self) -> usize {
+        if self.stream {
+            return self.agg.completed as usize;
+        }
         self.tasks.iter().filter(|t| t.completed_s.is_some()).count()
+    }
+
+    /// Prometheus-style metric registry over the run's counters, gauges
+    /// and sketches — rendered to `--metrics-out` (DESIGN.md §14).
+    pub fn registry(&self) -> Registry {
+        let mut reg = Registry::new();
+        reg.counter(
+            "carma_offered_total",
+            "Tasks the arrival process offered",
+            self.offered() as f64,
+        );
+        reg.counter(
+            "carma_completed_total",
+            "Tasks that ran to completion",
+            self.completed_count() as f64,
+        );
+        reg.counter(
+            "carma_shed_total",
+            "Arrivals dropped at intake by the bounded admission layer",
+            self.shed_total as f64,
+        );
+        reg.counter(
+            "carma_oom_total",
+            "OOM crashes across all tasks",
+            self.oom_total as f64,
+        );
+        reg.counter(
+            "carma_failed_total",
+            "Tasks permanently failed",
+            self.failed_total as f64,
+        );
+        reg.counter(
+            "carma_decisions_total",
+            "Singleton mapping decisions committed",
+            self.decisions.decisions as f64,
+        );
+        reg.counter(
+            "carma_energy_joules_total",
+            "Total GPU energy integrated over the run",
+            self.total_energy_mj() * 1e6,
+        );
+        reg.gauge(
+            "carma_mean_smact",
+            "Mean SM activity across GPUs over the trace",
+            self.mean_smact(),
+        );
+        reg.gauge(
+            "carma_mean_mem_used_gb",
+            "Mean used GPU memory (GB per GPU) over the trace",
+            self.mean_mem_used_gb(),
+        );
+        reg.histogram(
+            "carma_queue_delay_seconds",
+            "Queueing delay (first dispatch - arrival)",
+            &self.queue_delay,
+        );
+        reg.histogram(
+            "carma_jct_seconds",
+            "Job completion time (completion - arrival)",
+            &self.jct,
+        );
+        reg
     }
 }
 
@@ -342,6 +714,14 @@ fn avg(it: impl Iterator<Item = f64>) -> f64 {
         0.0
     } else {
         v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+fn ratio(sum: f64, n: u64) -> f64 {
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
     }
 }
 
@@ -502,5 +882,111 @@ mod tests {
             r.on_sample(0, i as f64, 1.0, 1.0, 0.1, 60.0);
         }
         assert_eq!(r.timelines[0].len(), 10);
+    }
+
+    #[test]
+    fn timeline_stride_zero_keeps_no_points() {
+        let mut r = Recorder::new(1, 1);
+        r.timeline_stride = 0;
+        for i in 0..100 {
+            r.on_sample(0, i as f64, 1.0, 1.0, 0.1, 60.0);
+        }
+        assert!(r.timelines[0].is_empty());
+        // the integrals are untouched by the timeline switch
+        assert!(r.total_energy_mj() > 0.0);
+    }
+
+    #[test]
+    fn queue_delay_and_jct_sketches_feed_in_full_mode() {
+        let mut r = Recorder::new(2, 1);
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 30.0);
+        r.on_dispatch(0, 500.0); // re-dispatch: NOT a second delay sample
+        r.on_completion(0, 600.0);
+        r.on_arrival(1, 10.0);
+        r.on_dispatch(1, 20.0);
+        assert_eq!(r.queue_delay.count(), 2);
+        assert_eq!(r.jct.count(), 1);
+        // ±5% sketch guarantee around the nearest-rank order statistics
+        // (delays sorted [10, 30]: p50 rank rounds to the second element)
+        assert!((r.queue_delay.percentile(50.0) - 30.0).abs() <= 30.0 * 0.06);
+        assert!((r.jct.percentile(50.0) - 600.0).abs() <= 600.0 * 0.06);
+    }
+
+    #[test]
+    fn stream_mode_folds_terminals_and_matches_full_aggregates() {
+        let mut full = Recorder::new(3, 1);
+        let mut st = Recorder::new(0, 1);
+        st.enable_stream();
+        assert!(st.stream());
+        for r in [&mut full, &mut st] {
+            r.ensure_task(0);
+            r.on_arrival(0, 0.0);
+            r.on_assigned(0, 0);
+            r.on_dispatch(0, 60.0);
+            r.on_completion(0, 300.0);
+            r.ensure_task(1);
+            r.on_arrival(1, 10.0);
+            r.on_assigned(1, 1);
+            r.on_shed(1, 10.0, true);
+            r.ensure_task(2);
+            r.on_arrival(2, 20.0);
+            r.on_assigned(2, 0);
+            r.on_dispatch(2, 80.0); // still running at the horizon
+        }
+        // in-flight record answers queries, folded ones are gone
+        assert_eq!(st.oom_crashes_of(2), 0);
+        st.finalize();
+        full.finalize(); // full mode: no-op
+        assert!(st.tasks.is_empty(), "stream keeps no per-task table");
+        assert!(st.live.is_empty(), "finalize drains the in-flight map");
+        assert_eq!(st.offered(), full.offered());
+        assert_eq!(st.completed_count(), full.completed_count());
+        assert!((st.avg_waiting_s() - full.avg_waiting_s()).abs() < 1e-9);
+        assert!((st.avg_jct_s() - full.avg_jct_s()).abs() < 1e-9);
+        assert!((st.avg_execution_s() - full.avg_execution_s()).abs() < 1e-9);
+        assert_eq!(st.shed_total, 1);
+        assert_eq!(st.agg.per_shard.len(), 2);
+        assert_eq!(st.agg.per_shard[0].tasks, 2);
+        assert_eq!(st.agg.per_shard[1].tasks, 1);
+        assert_eq!(st.queue_delay.count(), full.queue_delay.count());
+    }
+
+    #[test]
+    fn decision_provenance_aggregates() {
+        let mut r = Recorder::new(1, 1);
+        let mut ex = Explain::default();
+        ex.servers_admitted = 2;
+        ex.servers_rejected = 1;
+        ex.gpus_eligible = 5;
+        ex.candidates = 3;
+        ex.rejects[RejectReason::NoFit.index()] = 2;
+        r.on_decision(DecisionOutcome::Placed, &ex);
+        r.on_decision(DecisionOutcome::NoFit, &ex);
+        assert_eq!(r.decisions.decisions, 2);
+        assert_eq!(r.decisions.placed, 1);
+        assert_eq!(r.decisions.no_fit, 1);
+        assert_eq!(r.decisions.inadmissible, 0);
+        assert_eq!(r.decisions.servers_admitted, 4);
+        assert_eq!(r.decisions.gpus_eligible, 10);
+        assert_eq!(r.decisions.candidates, 6);
+        assert_eq!(r.decisions.rejects[RejectReason::NoFit.index()], 4);
+    }
+
+    #[test]
+    fn registry_renders_the_core_series() {
+        let mut r = Recorder::new(1, 1);
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 30.0);
+        r.on_completion(0, 90.0);
+        let text = r.registry().render();
+        for series in [
+            "carma_offered_total",
+            "carma_completed_total",
+            "carma_queue_delay_seconds_bucket",
+            "carma_jct_seconds_count",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
     }
 }

@@ -1,10 +1,10 @@
 //! Run report: the metric set every paper experiment prints.
 
+use crate::coordinator::placement::RejectReason;
 use crate::util::json::{self, Json};
-use crate::util::stats::percentile;
 use crate::util::units::to_minutes;
 
-use super::recorder::Recorder;
+use super::recorder::{DecisionAgg, Recorder};
 
 /// Per-shard counters of the sharded coordinator (DESIGN.md §9). A serial
 /// run reports exactly one entry (shard 0).
@@ -137,6 +137,10 @@ pub struct RunReport {
     /// Steady-state service counters (zeros in closed-loop batch runs,
     /// except the queue-delay percentiles which are always computed).
     pub service: ServiceStat,
+    /// Aggregated decision provenance (DESIGN.md §14): outcome counts and
+    /// the eligibility-filter census summed over every committed singleton
+    /// mapping decision. Always present, zeros when nothing was decided.
+    pub decisions: DecisionAgg,
 }
 
 impl RunReport {
@@ -152,11 +156,12 @@ impl RunReport {
             mean_smact: r.mean_smact(),
             mean_mem_used_gb: r.mean_mem_used_gb(),
             completed: r.completed_count(),
-            total_tasks: r.tasks.len(),
+            total_tasks: r.offered(),
             per_shard: shard_stats(r),
             gang: gang_stats(r),
             placement: placement_stats(r),
             service: service_stats(r),
+            decisions: r.decisions.clone(),
         }
     }
 
@@ -241,6 +246,29 @@ impl RunReport {
             ("win_mem_mean_gb", json::num(self.service.win_mem_mean_gb)),
             ("win_mem_peak_gb", json::num(self.service.win_mem_peak_gb)),
         ]);
+        let rejects = json::obj(
+            RejectReason::ALL
+                .iter()
+                .map(|r| (r.name(), json::num(self.decisions.rejects[r.index()] as f64)))
+                .collect(),
+        );
+        let decisions = json::obj(vec![
+            ("decisions", json::num(self.decisions.decisions as f64)),
+            ("placed", json::num(self.decisions.placed as f64)),
+            ("no_fit", json::num(self.decisions.no_fit as f64)),
+            ("inadmissible", json::num(self.decisions.inadmissible as f64)),
+            (
+                "servers_admitted",
+                json::num(self.decisions.servers_admitted as f64),
+            ),
+            (
+                "servers_rejected",
+                json::num(self.decisions.servers_rejected as f64),
+            ),
+            ("gpus_eligible", json::num(self.decisions.gpus_eligible as f64)),
+            ("candidates", json::num(self.decisions.candidates as f64)),
+            ("rejects", rejects),
+        ]);
         json::obj(vec![
             ("label", json::s(&self.label)),
             ("trace_total_min", json::num(self.trace_total_min)),
@@ -256,6 +284,7 @@ impl RunReport {
             ("per_shard", json::arr(shards)),
             ("gang", gang),
             ("placement", placement),
+            ("placement_decisions", decisions),
             ("service", service),
         ])
     }
@@ -266,6 +295,18 @@ impl RunReport {
 /// dispatch (1-GPU placements always cost zero and would only dilute the
 /// mean the `placement_scale` comparison rests on).
 fn placement_stats(r: &Recorder) -> PlacementStat {
+    if r.stream() {
+        return PlacementStat {
+            multi_gpu_singletons: r.agg.multi_gpu_singletons,
+            single_island: r.agg.single_island,
+            mean_fabric_cost: if r.agg.multi_gpu_singletons == 0 {
+                0.0
+            } else {
+                r.agg.place_cost_sum / r.agg.multi_gpu_singletons as f64
+            },
+            max_fabric_cost: r.agg.place_max_cost,
+        };
+    }
     let mut s = PlacementStat::default();
     let mut cost_sum = 0.0f64;
     for t in r.tasks.iter().filter(|t| !t.gang && t.placed_gpus >= 2) {
@@ -283,16 +324,14 @@ fn placement_stats(r: &Recorder) -> PlacementStat {
 }
 
 /// Aggregate the recorder's service-mode counters (DESIGN.md §13). The
-/// queueing-delay percentiles cover every dispatched task in either mode;
-/// shed counters and utilization windows are only nonzero in open-loop
-/// runs (closed-loop recorders never shed and keep windowing off).
+/// queueing-delay percentiles come from the recorder's streaming
+/// `LogHistogram` sketch in both collection modes — O(buckets) state, ±5%
+/// relative error vs the nearest-rank order statistic (`obs::sketch`) —
+/// covering every first dispatch. Shed counters and utilization windows
+/// are only nonzero in open-loop runs (closed-loop recorders never shed
+/// and keep windowing off).
 fn service_stats(r: &Recorder) -> ServiceStat {
-    let delays: Vec<f64> = r
-        .tasks
-        .iter()
-        .filter_map(|t| t.dispatched_s.map(|d| d - t.arrival_s))
-        .collect();
-    let offered = r.tasks.len();
+    let offered = r.offered();
     let mut s = ServiceStat {
         open_loop: r.open_loop,
         offered,
@@ -303,9 +342,9 @@ fn service_stats(r: &Recorder) -> ServiceStat {
         } else {
             r.shed_total as f64 / offered as f64
         },
-        queue_delay_p50_s: percentile(&delays, 50.0),
-        queue_delay_p99_s: percentile(&delays, 99.0),
-        queue_delay_p999_s: percentile(&delays, 99.9),
+        queue_delay_p50_s: r.queue_delay.percentile(50.0),
+        queue_delay_p99_s: r.queue_delay.percentile(99.0),
+        queue_delay_p999_s: r.queue_delay.percentile(99.9),
         util_windows: r.util_windows.len(),
         ..ServiceStat::default()
     };
@@ -329,6 +368,19 @@ fn gang_stats(r: &Recorder) -> GangStat {
         partial_dispatches: r.gang_partial_dispatches,
         ..GangStat::default()
     };
+    if r.stream() {
+        s.gangs = r.agg.gangs;
+        s.completed = r.agg.gang_completed;
+        s.cross_server = r.agg.cross_server;
+        s.max_servers_spanned = r.agg.max_servers_spanned;
+        s.frag_excess = r.agg.frag_excess;
+        if r.agg.gang_waited > 0 {
+            s.mean_wait_min = to_minutes(r.agg.gang_wait_sum / r.agg.gang_waited as f64);
+            s.mean_fabric_cost = r.agg.gang_cost_sum / r.agg.gang_waited as f64;
+        }
+        s.max_wait_min = to_minutes(r.agg.gang_max_wait_s);
+        return s;
+    }
     let mut wait_sum = 0.0f64;
     let mut cost_sum = 0.0f64;
     let mut waited = 0usize;
@@ -361,6 +413,29 @@ fn gang_stats(r: &Recorder) -> GangStat {
 /// Covers every configured shard — idle shards report zero tasks rather
 /// than vanishing (least-loaded routing can leave trailing shards unused).
 fn shard_stats(r: &Recorder) -> Vec<ShardStat> {
+    if r.stream() {
+        let n_shards = r.agg.per_shard.len().max(r.n_shards);
+        return (0..n_shards)
+            .map(|s| {
+                let a = r.agg.per_shard.get(s);
+                let (tasks, decisions, wait_sum, waited, steals) = a.map_or(
+                    (0, 0, 0.0, 0, 0),
+                    |a| (a.tasks, a.decisions, a.wait_sum, a.waited, a.steals),
+                );
+                ShardStat {
+                    shard: s,
+                    tasks,
+                    decisions,
+                    mean_wait_min: if waited == 0 {
+                        0.0
+                    } else {
+                        to_minutes(wait_sum / waited as f64)
+                    },
+                    steals,
+                }
+            })
+            .collect();
+    }
     let n_shards = r
         .tasks
         .iter()
@@ -528,14 +603,15 @@ mod tests {
         assert_eq!(rep.service.offered, 3);
         assert_eq!(rep.service.shed, 0);
         assert_eq!(rep.service.rejection_rate, 0.0);
-        // delays 10, 30, 100 -> p50 = 30, p99 interpolates toward 100
-        assert!((rep.service.queue_delay_p50_s - 30.0).abs() < 1e-9);
-        assert!(rep.service.queue_delay_p99_s > 98.0);
-        assert!(rep.service.queue_delay_p999_s >= rep.service.queue_delay_p99_s);
+        // delays 10, 30, 100: sketch percentiles land within ±5% of the
+        // nearest-rank order statistics (p50 -> 30, p99/p999 -> 100)
+        assert!((rep.service.queue_delay_p50_s - 30.0).abs() <= 30.0 * 0.06);
+        assert!((rep.service.queue_delay_p99_s - 100.0).abs() <= 100.0 * 0.06);
+        assert!(rep.service.queue_delay_p999_s >= rep.service.queue_delay_p99_s - 1e-9);
         let j = rep.to_json();
         let svc = j.get("service").expect("service section always present");
         assert_eq!(svc.f64_of("open_loop"), 0.0);
-        assert_eq!(svc.f64_of("queue_delay_p50_s"), 30.0);
+        assert!((svc.f64_of("queue_delay_p50_s") - 30.0).abs() <= 30.0 * 0.06);
         // even an empty run carries every percentile key
         let empty = RunReport::from_recorder("e", &Recorder::new(0, 1));
         let ej = empty.to_json();
@@ -574,6 +650,71 @@ mod tests {
         let j = rep.to_json();
         assert_eq!(j.get("service").unwrap().f64_of("shed"), 2.0);
         assert_eq!(j.get("service").unwrap().f64_of("open_loop"), 1.0);
+    }
+
+    #[test]
+    fn placement_decisions_section_always_present() {
+        use crate::coordinator::placement::Explain;
+        use crate::metrics::recorder::DecisionOutcome;
+        let mut r = Recorder::new(1, 1);
+        let mut ex = Explain::default();
+        ex.servers_admitted = 1;
+        ex.gpus_eligible = 3;
+        ex.candidates = 2;
+        ex.rejects[RejectReason::SmactCap.index()] = 1;
+        r.on_decision(DecisionOutcome::Placed, &ex);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.decisions.decisions, 1);
+        let j = rep.to_json();
+        let d = j.get("placement_decisions").expect("section always present");
+        assert_eq!(d.f64_of("decisions"), 1.0);
+        assert_eq!(d.f64_of("placed"), 1.0);
+        assert_eq!(d.f64_of("gpus_eligible"), 3.0);
+        let rej = d.get("rejects").expect("per-reason reject counts");
+        assert_eq!(rej.f64_of("smact_cap"), 1.0);
+        assert_eq!(rej.f64_of("no_fit"), 0.0);
+        // a decision-free run still carries the zeroed section
+        let empty = RunReport::from_recorder("e", &Recorder::new(0, 1));
+        let ej = empty.to_json();
+        assert_eq!(
+            ej.get("placement_decisions").unwrap().f64_of("decisions"),
+            0.0
+        );
+    }
+
+    #[test]
+    fn stream_recorder_report_matches_full_mode_sections() {
+        let mut full = Recorder::new(2, 1);
+        let mut st = Recorder::new(0, 1);
+        st.enable_stream();
+        for r in [&mut full, &mut st] {
+            r.open_loop = true;
+            r.n_shards = 2;
+            r.ensure_task(0);
+            r.on_arrival(0, 0.0);
+            r.on_assigned(0, 0);
+            r.on_dispatch(0, 30.0);
+            r.on_singleton_dispatch(0, 2, 0.01, 1);
+            r.on_completion(0, 90.0);
+            r.ensure_task(1);
+            r.on_arrival(1, 5.0);
+            r.on_shed(1, 5.0, true);
+            r.finalize();
+        }
+        let rf = RunReport::from_recorder("x", &full);
+        let rs = RunReport::from_recorder("x", &st);
+        assert_eq!(rs.total_tasks, rf.total_tasks);
+        assert_eq!(rs.completed, rf.completed);
+        assert_eq!(rs.service.shed, rf.service.shed);
+        assert_eq!(rs.service.offered, rf.service.offered);
+        assert_eq!(rs.service.queue_delay_p50_s, rf.service.queue_delay_p50_s);
+        assert_eq!(rs.placement.multi_gpu_singletons, rf.placement.multi_gpu_singletons);
+        assert_eq!(rs.placement.single_island, rf.placement.single_island);
+        assert_eq!(rs.per_shard.len(), rf.per_shard.len());
+        assert_eq!(rs.per_shard[0].tasks, rf.per_shard[0].tasks);
+        assert_eq!(rs.per_shard[0].decisions, rf.per_shard[0].decisions);
+        assert!((rs.avg_jct_min - rf.avg_jct_min).abs() < 1e-9);
+        assert!((rs.gang.mean_wait_min - rf.gang.mean_wait_min).abs() < 1e-9);
     }
 
     #[test]

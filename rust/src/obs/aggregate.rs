@@ -1,0 +1,65 @@
+//! The one shared exact-aggregate implementation (DESIGN.md §14).
+//!
+//! `metrics/recorder.rs` (lifecycle means) and `metrics/report.rs`
+//! (section aggregation) both used private ad-hoc collect-and-reduce
+//! helpers; `util::stats::percentile` now delegates here too, so exactly
+//! one sort-and-interpolate exists in the tree. The sketch error-bound
+//! tests use these as their ground-truth reference.
+
+/// Mean over an iterator of samples; `0.0` when the iterator is empty.
+pub fn mean_of(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0u64);
+    for x in it {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Exact percentile with linear interpolation between order statistics;
+/// `p` in `[0, 100]`, `0.0` on empty input. O(n log n) — the materialized
+/// reference path; streaming consumers use [`crate::obs::LogHistogram`].
+pub fn percentile_exact(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_matches_slice_mean() {
+        assert_eq!(mean_of(std::iter::empty()), 0.0);
+        assert!((mean_of([1.0, 2.0, 6.0].into_iter()) - 3.0).abs() < 1e-12);
+        // filtered iterators — the recorder's lifecycle-mean shape
+        let xs = [Some(2.0), None, Some(4.0)];
+        assert!((mean_of(xs.iter().copied().flatten()) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_exact_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_exact(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_exact(&xs, 0.0), 0.0);
+        assert_eq!(percentile_exact(&xs, 100.0), 10.0);
+        assert_eq!(percentile_exact(&[], 50.0), 0.0);
+        // unsorted input sorts internally
+        assert_eq!(percentile_exact(&[5.0, 1.0, 3.0], 50.0), 3.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Streaming observability core (DESIGN.md §14).
+//!
+//! Four zero-dependency layers feeding off the driver thread's serial
+//! commit order, so every artifact inherits the engine's byte-determinism
+//! contract (DESIGN.md §10) for free:
+//!
+//! * [`trace`] — deterministic JSONL event trace (`--trace-out`): one
+//!   record per lifecycle commit, `(time, seq)` ordered, byte-identical at
+//!   every shard and engine-thread count;
+//! * [`sketch`] — log-bucketed streaming histograms: percentiles from
+//!   O(buckets) state with a bounded, documented relative error — the
+//!   replacement for materialized collect-and-sort percentile paths;
+//! * [`registry`] — counter/gauge/histogram registry with a
+//!   Prometheus-style text exposition writer (`--metrics-out`), groundwork
+//!   for the future daemon mode;
+//! * [`profile`] — the engine self-profiler (`--profile`): per-phase
+//!   wall-clock timing + worker-pool occupancy. Wall-clock data is
+//!   *structurally* excluded from the determinism boundary: it lives on
+//!   `RunOutcome::profile` (stderr only), never inside `RunReport`.
+//!
+//! [`aggregate`] holds the one shared exact mean/percentile implementation
+//! (recorder + report + sketch reference tests all call it).
+
+pub mod aggregate;
+pub mod profile;
+pub mod registry;
+pub mod sketch;
+pub mod trace;
+
+pub use aggregate::{mean_of, percentile_exact};
+pub use profile::{Phase, Profiler};
+pub use registry::Registry;
+pub use sketch::LogHistogram;
+pub use trace::TraceSink;

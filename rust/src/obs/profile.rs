@@ -1,0 +1,176 @@
+//! Engine self-profiler (DESIGN.md §14): per-phase wall-clock timing and
+//! worker-pool occupancy behind `--profile`.
+//!
+//! Wall-clock data is nondeterministic by nature, and the determinism
+//! contract (DESIGN.md §10) byte-compares results JSON across runs — so
+//! profile output is *structurally* separated from the report: it lives in
+//! `RunOutcome::profile` (a dedicated field the CLI prints to stderr),
+//! never inside `RunReport::to_json`. A disabled profiler records nothing
+//! and costs one branch per phase boundary.
+
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// The driver's instrumented phases (DESIGN.md §10 pipeline stages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `Engine::pop_frontier` — draining one time quantum off the lanes.
+    FrontierDrain = 0,
+    /// Per-server `ServerView` snapshot construction.
+    SnapshotBuild = 1,
+    /// Speculative `MapPlan` computation on the worker pool.
+    SpeculativePlan = 2,
+    /// Serial event handling + dispatch commits on the driver thread.
+    SerialCommit = 3,
+}
+
+const PHASE_KEYS: [&str; 4] = [
+    "frontier_drain_s",
+    "snapshot_build_s",
+    "speculative_plan_s",
+    "serial_commit_s",
+];
+
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    enabled: bool,
+    secs: [f64; 4],
+    calls: [u64; 4],
+    born: Instant,
+}
+
+impl Profiler {
+    pub fn new(enabled: bool) -> Self {
+        Profiler {
+            enabled,
+            secs: [0.0; 4],
+            calls: [0; 4],
+            born: Instant::now(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Phase-entry timestamp; `None` when disabled (the `add` no-op pair).
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Account the elapsed time since `start()` to `phase`.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.secs[phase as usize] += t0.elapsed().as_secs_f64();
+            self.calls[phase as usize] += 1;
+        }
+    }
+
+    pub fn phase_secs(&self, phase: Phase) -> f64 {
+        self.secs[phase as usize]
+    }
+
+    /// Profile section for `RunOutcome::profile` (stderr only — never part
+    /// of the byte-compared report). `pool` is `(threads, rounds,
+    /// caller_jobs, worker_jobs)` from the worker pool's occupancy
+    /// counters; `events` the engine's processed-event total.
+    pub fn to_json(&self, events: u64, pool: Option<(usize, u64, u64, u64)>) -> Json {
+        let wall_s = self.born.elapsed().as_secs_f64();
+        let mut phases = Vec::with_capacity(4);
+        for (i, key) in PHASE_KEYS.iter().enumerate() {
+            phases.push((*key, json::num(self.secs[i])));
+        }
+        let mut j = json::obj(vec![
+            ("phases", json::obj(phases)),
+            (
+                "phase_calls",
+                json::obj(
+                    PHASE_KEYS
+                        .iter()
+                        .enumerate()
+                        .map(|(i, k)| (k.trim_end_matches("_s"), json::num(self.calls[i] as f64)))
+                        .collect(),
+                ),
+            ),
+            ("wall_s", json::num(wall_s)),
+            ("events", json::num(events as f64)),
+            (
+                "events_per_sec",
+                json::num(if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 }),
+            ),
+        ]);
+        if let Some((threads, rounds, caller_jobs, worker_jobs)) = pool {
+            let total_jobs = caller_jobs + worker_jobs;
+            j.set(
+                "pool",
+                json::obj(vec![
+                    ("threads", json::num(threads as f64)),
+                    ("rounds", json::num(rounds as f64)),
+                    ("jobs", json::num(total_jobs as f64)),
+                    ("caller_jobs", json::num(caller_jobs as f64)),
+                    ("worker_jobs", json::num(worker_jobs as f64)),
+                    (
+                        "worker_share",
+                        json::num(if total_jobs > 0 {
+                            worker_jobs as f64 / total_jobs as f64
+                        } else {
+                            0.0
+                        }),
+                    ),
+                ]),
+            );
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let mut p = Profiler::new(false);
+        assert!(!p.enabled());
+        let t0 = p.start();
+        assert!(t0.is_none());
+        p.add(Phase::FrontierDrain, t0);
+        assert_eq!(p.phase_secs(Phase::FrontierDrain), 0.0);
+    }
+
+    #[test]
+    fn enabled_profiler_accumulates_phases() {
+        let mut p = Profiler::new(true);
+        for _ in 0..3 {
+            let t0 = p.start();
+            assert!(t0.is_some());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            p.add(Phase::SerialCommit, t0);
+        }
+        assert!(p.phase_secs(Phase::SerialCommit) >= 0.004);
+        assert_eq!(p.phase_secs(Phase::SnapshotBuild), 0.0);
+        let j = p.to_json(1000, Some((4, 10, 6, 14)));
+        assert!(j.get("phases").unwrap().f64_of("serial_commit_s") > 0.0);
+        assert_eq!(j.get("phase_calls").unwrap().f64_of("serial_commit"), 3.0);
+        assert!(j.f64_of("wall_s") > 0.0);
+        assert_eq!(j.f64_of("events"), 1000.0);
+        let pool = j.get("pool").unwrap();
+        assert_eq!(pool.f64_of("jobs"), 20.0);
+        assert!((pool.f64_of("worker_share") - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_json_without_pool_omits_the_section() {
+        let p = Profiler::new(true);
+        let j = p.to_json(0, None);
+        assert!(j.get("pool").is_none());
+        assert_eq!(j.f64_of("events_per_sec"), 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Counter/gauge/histogram registry with Prometheus-style text exposition
+//! (DESIGN.md §14) — the `--metrics-out` writer and the groundwork for the
+//! future daemon mode's scrape endpoint.
+//!
+//! The registry is write-once per run: the driver populates it from final
+//! recorder state after the drain, then renders the exposition. Metrics
+//! render in registration order; values use the same integer-aware number
+//! formatting as the JSON writer, so the file is deterministic for a
+//! deterministic run.
+
+use super::sketch::LogHistogram;
+
+enum Sample {
+    Scalar(f64),
+    Histogram(Vec<(f64, u64)>, f64, u64), // cumulative buckets, sum, count
+}
+
+struct Metric {
+    name: String,
+    help: String,
+    kind: &'static str,
+    sample: Sample,
+}
+
+#[derive(Default)]
+pub struct Registry {
+    metrics: Vec<Metric>,
+}
+
+/// Integer-aware float formatting (mirrors the JSON writer: whole numbers
+/// print without a trailing `.0`).
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, "counter", Sample::Scalar(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, "gauge", Sample::Scalar(v));
+    }
+
+    /// Register a [`LogHistogram`] as a Prometheus histogram: cumulative
+    /// `_bucket{le=...}` series from the sketch's log buckets, plus `_sum`
+    /// and `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &LogHistogram) {
+        self.push(
+            name,
+            help,
+            "histogram",
+            Sample::Histogram(h.cumulative_buckets(), h.sum(), h.count()),
+        );
+    }
+
+    fn push(&mut self, name: &str, help: &str, kind: &'static str, sample: Sample) {
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            sample,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Render the Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for m in &self.metrics {
+            out.push_str(&format!("# HELP {} {}\n", m.name, m.help));
+            out.push_str(&format!("# TYPE {} {}\n", m.name, m.kind));
+            match &m.sample {
+                Sample::Scalar(v) => {
+                    out.push_str(&format!("{} {}\n", m.name, fmt_num(*v)));
+                }
+                Sample::Histogram(buckets, sum, count) => {
+                    for (le, cum) in buckets {
+                        out.push_str(&format!(
+                            "{}_bucket{{le=\"{}\"}} {}\n",
+                            m.name,
+                            fmt_num(*le),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", m.name, count));
+                    out.push_str(&format!("{}_sum {}\n", m.name, fmt_num(*sum)));
+                    out.push_str(&format!("{}_count {}\n", m.name, count));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_and_gauges() {
+        let mut r = Registry::new();
+        r.counter("carma_tasks_total", "Tasks offered to the intake.", 128.0);
+        r.gauge("carma_mean_smact", "Run-mean SMACT utilization.", 0.625);
+        assert_eq!(r.len(), 2);
+        let text = r.render();
+        assert!(text.contains("# HELP carma_tasks_total Tasks offered to the intake.\n"));
+        assert!(text.contains("# TYPE carma_tasks_total counter\n"));
+        assert!(text.contains("\ncarma_tasks_total 128\n"));
+        assert!(text.contains("# TYPE carma_mean_smact gauge\n"));
+        assert!(text.contains("carma_mean_smact 0.625\n"));
+    }
+
+    #[test]
+    fn renders_histogram_with_cumulative_buckets() {
+        let mut h = LogHistogram::default();
+        for v in [10.0, 30.0, 30.0, 100.0] {
+            h.record(v);
+        }
+        let mut r = Registry::new();
+        r.histogram("carma_queue_delay_seconds", "Queueing delay.", &h);
+        let text = r.render();
+        assert!(text.contains("# TYPE carma_queue_delay_seconds histogram\n"));
+        assert!(text.contains("carma_queue_delay_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("carma_queue_delay_seconds_sum 170\n"));
+        assert!(text.contains("carma_queue_delay_seconds_count 4\n"));
+        // cumulative counts never decrease across the bucket lines
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.contains("_bucket{le=") && !l.contains("+Inf"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(!cums.is_empty());
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]), "{cums:?}");
+    }
+
+    #[test]
+    fn render_is_deterministic_and_ordered() {
+        let build = || {
+            let mut r = Registry::new();
+            r.counter("b_second", "b", 2.0);
+            r.counter("a_first", "a", 1.0);
+            r.render()
+        };
+        let text = build();
+        assert_eq!(text, build());
+        // registration order, not name order
+        assert!(text.find("b_second").unwrap() < text.find("a_first").unwrap());
+        assert!(Registry::new().is_empty());
+        assert_eq!(Registry::new().render(), "");
+    }
+}

@@ -1,0 +1,314 @@
+//! Log-bucketed streaming histogram (DESIGN.md §14).
+//!
+//! A DDSketch-style quantile sketch over positive samples: bucket `i`
+//! covers `(γ^(i-1), γ^i]` with `γ = (1+α)/(1-α)`, so the bucket midpoint
+//! `2·γ^i/(γ+1)` is within relative error `α` of every sample the bucket
+//! holds. Percentile queries resolve the *nearest-rank* order statistic to
+//! its bucket midpoint, giving the documented guarantee:
+//!
+//! > `percentile(p)` is within `±α` (default 5%) relative error of the
+//! > order statistic whose rank is `round(p/100 · (n-1))`.
+//!
+//! State is O(buckets): a `BTreeMap` keyed by bucket index (deterministic
+//! iteration), a zero-bucket for samples `≤ 1e-9`, and running
+//! count/sum/min/max. Everything is a pure function of the recorded
+//! multiset — feeding it in the engine's commit order keeps every derived
+//! report value byte-identical at any shard or thread count.
+
+use std::collections::BTreeMap;
+
+/// Default relative-error target (±5%).
+pub const DEFAULT_ALPHA: f64 = 0.05;
+
+/// Samples at or below this threshold land in the zero bucket (queueing
+/// delays of exactly zero, degenerate durations).
+const ZERO_EPS: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    alpha: f64,
+    gamma: f64,
+    ln_gamma: f64,
+    /// Bucket index → sample count; index `i` covers `(γ^(i-1), γ^i]`.
+    buckets: BTreeMap<i32, u64>,
+    /// Samples `≤ ZERO_EPS` (reported as exactly 0.0).
+    zero: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new(DEFAULT_ALPHA)
+    }
+}
+
+impl LogHistogram {
+    /// Sketch with relative-error target `alpha` in `(0, 1)`.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha out of (0,1): {alpha}");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        LogHistogram {
+            alpha,
+            gamma,
+            ln_gamma: gamma.ln(),
+            buckets: BTreeMap::new(),
+            zero: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Documented relative-error bound of this sketch's percentiles.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Record one sample. Negative samples clamp into the zero bucket —
+    /// the recorded quantities (delays, durations) are non-negative by
+    /// construction, so a negative value is a caller bug we keep visible
+    /// in `min` rather than silently dropping.
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= ZERO_EPS {
+            self.zero += 1;
+        } else {
+            let idx = (v.ln() / self.ln_gamma).ceil() as i32;
+            *self.buckets.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Number of live buckets (the O(buckets) memory bound).
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len() + usize::from(self.zero > 0)
+    }
+
+    /// Estimate of the `p`-th percentile (`p` in `[0, 100]`): the bucket
+    /// midpoint of the nearest-rank order statistic (see module docs for
+    /// the ±α guarantee). `0.0` on an empty sketch.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64).round() as u64;
+        if rank < self.zero {
+            return 0.0;
+        }
+        let mut cum = self.zero;
+        for (&idx, &n) in &self.buckets {
+            cum += n;
+            if rank < cum {
+                return self.midpoint(idx);
+            }
+        }
+        // rank == count-1 rounding edge: the last bucket
+        self.buckets
+            .iter()
+            .next_back()
+            .map_or(0.0, |(&idx, _)| self.midpoint(idx))
+    }
+
+    /// Midpoint estimate for bucket `idx` covering `(γ^(idx-1), γ^idx]`.
+    fn midpoint(&self, idx: i32) -> f64 {
+        2.0 * self.gamma.powi(idx) / (self.gamma + 1.0)
+    }
+
+    /// Cumulative bucket view for Prometheus-style exposition: ascending
+    /// `(upper_bound, cumulative_count)` pairs, zero bucket first.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.n_buckets());
+        let mut cum = 0u64;
+        if self.zero > 0 {
+            cum += self.zero;
+            out.push((ZERO_EPS, cum));
+        }
+        for (&idx, &n) in &self.buckets {
+            cum += n;
+            out.push((self.gamma.powi(idx), cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::aggregate::percentile_exact;
+
+    /// The documented property: the sketch percentile must sit within ±α
+    /// of the nearest-rank order statistic.
+    fn assert_within_bound(xs: &[f64], p: f64) {
+        let mut h = LogHistogram::default();
+        for &x in xs {
+            h.record(x);
+        }
+        let got = h.percentile(p);
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        let truth = sorted[rank];
+        if truth <= ZERO_EPS {
+            assert_eq!(got, 0.0, "p{p} of {xs:?}");
+        } else {
+            let rel = (got - truth).abs() / truth;
+            assert!(rel <= h.alpha() + 1e-12, "p{p}: got {got}, truth {truth}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn empty_sketch_is_all_zero() {
+        let h = LogHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.n_buckets(), 0);
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn percentiles_within_documented_error() {
+        // spans seconds-scale delays, mixed magnitudes and heavy ties
+        let uniform: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.5).collect();
+        let ties: Vec<f64> = (0..500).map(|i| if i % 2 == 0 { 30.0 } else { 10.0 }).collect();
+        let wide: Vec<f64> = (0..300).map(|i| 1e-3 * 10f64.powi((i % 9) as i32)).collect();
+        for xs in [&uniform, &ties, &wide] {
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                assert_within_bound(xs, p);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_distributions_stay_bounded() {
+        // two far-apart modes: nearest-rank semantics keep the estimate on
+        // a real order statistic instead of interpolating into the gap
+        let bimodal: Vec<f64> = (0..100)
+            .map(|i| if i < 50 { 1.0 } else { 1_000_000.0 })
+            .collect();
+        for p in [0.0, 49.0, 50.0, 51.0, 99.0, 100.0] {
+            assert_within_bound(&bimodal, p);
+        }
+        // single sample, zeros, and a geometric cascade
+        assert_within_bound(&[42.0], 50.0);
+        let with_zeros: Vec<f64> = (0..50).map(|i| if i < 10 { 0.0 } else { i as f64 }).collect();
+        for p in [0.0, 10.0, 50.0, 99.0] {
+            assert_within_bound(&with_zeros, p);
+        }
+        let cascade: Vec<f64> = (0..64).map(|i| 2f64.powi(i % 32)).collect();
+        for p in [25.0, 50.0, 75.0, 99.9] {
+            assert_within_bound(&cascade, p);
+        }
+    }
+
+    #[test]
+    fn nearest_rank_tracks_exact_on_dense_data() {
+        // on dense data, nearest-rank and interpolated percentiles agree to
+        // within one sample spacing — the sketch must then agree with the
+        // exact interpolated value to ~α as well
+        let xs: Vec<f64> = (1..=10_000).map(|i| (i as f64).sqrt()).collect();
+        let mut h = LogHistogram::default();
+        for &x in &xs {
+            h.record(x);
+        }
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let exact = percentile_exact(&xs, p);
+            let rel = (h.percentile(p) - exact).abs() / exact;
+            assert!(rel <= h.alpha() + 0.01, "p{p}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_p() {
+        let mut h = LogHistogram::default();
+        for i in 0..1000 {
+            h.record((i as f64 * 37.0) % 501.0 + 0.1);
+        }
+        let ps = [0.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0];
+        let vs: Vec<f64> = ps.iter().map(|&p| h.percentile(p)).collect();
+        assert!(vs.windows(2).all(|w| w[0] <= w[1] + 1e-12), "{vs:?}");
+    }
+
+    #[test]
+    fn memory_is_bounded_by_buckets_not_samples() {
+        let mut h = LogHistogram::default();
+        for i in 0..1_000_000u64 {
+            // delays from 1 ms to ~1000 s
+            h.record(0.001 + (i % 100_000) as f64 * 0.01);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        // ln(1e6 dynamic range)/ln(γ) ≈ 140 buckets max at α = 0.05
+        assert!(h.n_buckets() < 200, "{} buckets", h.n_buckets());
+    }
+
+    #[test]
+    fn aggregates_and_cumulative_view() {
+        let mut h = LogHistogram::default();
+        for v in [0.0, 10.0, 30.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 140.0).abs() < 1e-12);
+        assert!((h.mean() - 35.0).abs() < 1e-12);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 100.0);
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.first().map(|c| c.1), Some(1), "zero bucket first");
+        assert_eq!(cum.last().map(|c| c.1), Some(4), "cumulative reaches count");
+        assert!(cum.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn deterministic_for_a_given_multiset_order() {
+        let feed = |order: &[f64]| {
+            let mut h = LogHistogram::default();
+            for &x in order {
+                h.record(x);
+            }
+            (0..=100).map(|p| h.percentile(p as f64).to_bits()).collect::<Vec<_>>()
+        };
+        let a = feed(&[5.0, 1.0, 250.0, 1.0, 19.5]);
+        let b = feed(&[5.0, 1.0, 250.0, 1.0, 19.5]);
+        assert_eq!(a, b);
+    }
+}

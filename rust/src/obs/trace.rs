@@ -1,0 +1,137 @@
+//! Deterministic streaming event trace (DESIGN.md §14): one JSONL record
+//! per lifecycle commit, written from the driver thread in `(time, seq)`
+//! commit order.
+//!
+//! Every record carries the simulated timestamp `t`, the sink's own
+//! monotone sequence number `seq` (a pure function of commit order — NOT
+//! wall clock), and the event kind `ev`; per-kind payload fields ride
+//! alongside. Because the driver commits serially in the engine's total
+//! order (DESIGN.md §10), the byte stream is identical at every shard and
+//! engine-thread count — `tests/obs.rs` proves it. Keys inside a record
+//! sort alphabetically (the JSON writer is `BTreeMap`-backed), which is
+//! deterministic by construction.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use crate::util::json::{self, Json};
+
+pub struct TraceSink {
+    w: BufWriter<File>,
+    path: String,
+    seq: u64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("path", &self.path)
+            .field("seq", &self.seq)
+            .finish()
+    }
+}
+
+impl TraceSink {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &str) -> Result<TraceSink, String> {
+        let f = File::create(path).map_err(|e| format!("cannot create trace file {path}: {e}"))?;
+        Ok(TraceSink {
+            w: BufWriter::new(f),
+            path: path.to_string(),
+            seq: 0,
+        })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.seq
+    }
+
+    /// Append one record: `{"ev": kind, "seq": N, "t": t_s, ...fields}`.
+    /// Write errors degrade to stderr warnings — tracing must never alter
+    /// the scheduling outcome of a run.
+    pub fn emit(&mut self, t_s: f64, kind: &str, fields: Vec<(&str, Json)>) {
+        let mut rec = json::obj(fields);
+        rec.set("t", json::num(t_s));
+        rec.set("seq", json::num(self.seq as f64));
+        rec.set("ev", json::s(kind));
+        self.seq += 1;
+        let line = rec.to_string_compact();
+        if writeln!(self.w, "{line}").is_err() {
+            eprintln!("carma obs: trace write to {} failed", self.path);
+        }
+    }
+
+    /// Flush buffered records to disk (also runs on drop).
+    pub fn flush(&mut self) {
+        if self.w.flush().is_err() {
+            eprintln!("carma obs: trace flush to {} failed", self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("carma_obs_{}_{name}", std::process::id()));
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn emits_jsonl_records_in_order() {
+        let path = tmp("emit.jsonl");
+        {
+            let mut sink = TraceSink::create(&path).unwrap();
+            sink.emit(0.0, "arrival", vec![("task", json::num(0.0))]);
+            sink.emit(
+                60.0,
+                "dispatch",
+                vec![("task", json::num(0.0)), ("gpus", json::num(2.0))],
+            );
+            assert_eq!(sink.records(), 2);
+            sink.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.str_of("ev"), "arrival");
+        assert_eq!(first.f64_of("seq"), 0.0);
+        assert_eq!(first.f64_of("t"), 0.0);
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.str_of("ev"), "dispatch");
+        assert_eq!(second.f64_of("seq"), 1.0);
+        assert_eq!(second.f64_of("gpus"), 2.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn identical_emission_gives_identical_bytes() {
+        let write_one = |path: &str| {
+            let mut sink = TraceSink::create(path).unwrap();
+            for i in 0..50 {
+                sink.emit(i as f64 * 0.5, "tick", vec![("task", json::num(i as f64))]);
+            }
+            sink.flush();
+        };
+        let (a, b) = (tmp("bytes_a.jsonl"), tmp("bytes_b.jsonl"));
+        write_one(&a);
+        write_one(&b);
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn create_fails_cleanly_on_bad_path() {
+        let err = TraceSink::create("/nonexistent-dir-zzz/trace.jsonl");
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("cannot create trace file"));
+    }
+}

@@ -17,7 +17,7 @@
 //! completion latch, which is what makes the lifetime erasure sound.
 
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -58,6 +58,12 @@ struct Shared {
     start: Condvar,
     /// The `map` caller parks here until `finished == n`.
     done: Condvar,
+    /// Occupancy counters for the `--profile` report (obs::profile):
+    /// rounds dispatched, jobs run by the caller, jobs run by workers.
+    /// Relaxed — read only after the run drains, never for synchronization.
+    rounds: AtomicU64,
+    caller_jobs: AtomicU64,
+    worker_jobs: AtomicU64,
 }
 
 struct Slot {
@@ -90,6 +96,9 @@ impl WorkerPool {
             }),
             start: Condvar::new(),
             done: Condvar::new(),
+            rounds: AtomicU64::new(0),
+            caller_jobs: AtomicU64::new(0),
+            worker_jobs: AtomicU64::new(0),
         });
         let handles = (1..threads.max(1))
             .map(|i| {
@@ -108,6 +117,18 @@ impl WorkerPool {
         self.handles.len() + 1
     }
 
+    /// Occupancy counters since pool creation: `(threads, rounds,
+    /// caller_jobs, worker_jobs)`. Inline rounds (no workers, or `n <= 1`)
+    /// count toward `caller_jobs`.
+    pub fn occupancy(&self) -> (usize, u64, u64, u64) {
+        (
+            self.threads(),
+            self.shared.rounds.load(Ordering::Relaxed),
+            self.shared.caller_jobs.load(Ordering::Relaxed),
+            self.shared.worker_jobs.load(Ordering::Relaxed),
+        )
+    }
+
     /// Run `f(0), f(1), …, f(n-1)` across the pool (the calling thread
     /// participates) and return the results in index order. Blocks until
     /// every index has completed. `f` runs concurrently from several
@@ -120,7 +141,9 @@ impl WorkerPool {
         if n == 0 {
             return Vec::new();
         }
+        self.shared.rounds.fetch_add(1, Ordering::Relaxed);
         if self.handles.is_empty() || n == 1 {
+            self.shared.caller_jobs.fetch_add(n as u64, Ordering::Relaxed);
             return (0..n).map(f).collect();
         }
 
@@ -158,7 +181,7 @@ impl WorkerPool {
         }
 
         // participate in the round
-        run_round(&round);
+        run_round(&round, &self.shared.caller_jobs);
 
         // wait for stragglers (workers notify under the slot lock when the
         // finished counter reaches n, so this check-then-wait cannot miss)
@@ -180,14 +203,17 @@ impl WorkerPool {
 }
 
 /// Claim and execute indices of `round` until it is drained, signalling the
-/// completion latch for the final index.
+/// completion latch for the final index. Each executed job bumps `jobs`
+/// (this thread's occupancy counter) *before* the Release on `finished`,
+/// so a caller that has observed `finished == n` also sees every
+/// occupancy increment of the round.
 ///
 /// A panicking job aborts the process: unwinding would either free the
 /// caller's results buffer while other threads still write through raw
 /// pointers into it (caller-side panic) or strand the completion latch
 /// short of `n` forever (worker-side panic). The jobs are pure, seeded
 /// simulation reads — a panic in one is a bug, never data-dependent flow.
-fn run_round(round: &RoundState) {
+fn run_round(round: &RoundState, jobs: &AtomicU64) {
     let n = round.desc.n;
     loop {
         let i = round.next.fetch_add(1, Ordering::Relaxed);
@@ -203,6 +229,7 @@ fn run_round(round: &RoundState) {
             eprintln!("carma sim worker: parallel job panicked — aborting");
             std::process::abort();
         }
+        jobs.fetch_add(1, Ordering::Relaxed);
         round.finished.fetch_add(1, Ordering::Release);
     }
 }
@@ -225,7 +252,7 @@ fn worker_loop(shared: &Shared) {
                 slot = shared.start.wait(slot).expect("pool wait");
             }
         };
-        run_round(&round);
+        run_round(&round, &shared.worker_jobs);
         if round.finished.load(Ordering::Acquire) >= round.desc.n {
             // this worker may have completed the final index — wake the
             // caller. Taking the slot lock orders the notify after the
@@ -330,6 +357,25 @@ mod tests {
         let a = pool.map(64, &|i| (i as u64).wrapping_mul(0x9E37_79B9));
         let b = pool.map(64, &|i| (i as u64).wrapping_mul(0x9E37_79B9));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn occupancy_counts_rounds_and_jobs() {
+        let pool = WorkerPool::new(1);
+        pool.map(5, &|i| i);
+        pool.map(3, &|i| i);
+        let (threads, rounds, caller, workers) = pool.occupancy();
+        assert_eq!((threads, rounds, caller, workers), (1, 2, 8, 0));
+
+        let pool = WorkerPool::new(4);
+        for _ in 0..10 {
+            pool.map(64, &|i| i * 3);
+        }
+        let (threads, rounds, caller, workers) = pool.occupancy();
+        assert_eq!(threads, 4);
+        assert_eq!(rounds, 10);
+        // every job ran exactly once, split between caller and workers
+        assert_eq!(caller + workers, 640);
     }
 
     #[test]

@@ -124,6 +124,16 @@ impl Json {
         out
     }
 
+    /// Single-line form for streaming sinks (one JSONL record per line —
+    /// DESIGN.md §14). Same writer as [`to_string_pretty`], no padding.
+    ///
+    /// [`to_string_pretty`]: Json::to_string_pretty
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {
@@ -436,6 +446,15 @@ mod tests {
         let v = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo ✓");
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let v = Json::parse(r#"{"a": [1, 2.5, "x"], "b": {"c": true, "d": null}}"#).unwrap();
+        let c = v.to_string_compact();
+        assert!(!c.contains('\n') && !c.contains(": "), "{c}");
+        assert_eq!(c, r#"{"a":[1,2.5,"x"],"b":{"c":true,"d":null}}"#);
+        assert_eq!(Json::parse(&c).unwrap(), v);
     }
 
     #[test]

@@ -57,21 +57,10 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile with linear interpolation; `p` in [0, 100].
+/// Percentile with linear interpolation; `p` in [0, 100]. Delegates to the
+/// one shared implementation in `obs::aggregate` (DESIGN.md §14).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
-    }
+    crate::obs::aggregate::percentile_exact(xs, p)
 }
 
 pub fn median(xs: &[f64]) -> f64 {

@@ -1,0 +1,244 @@
+//! Observability integration invariants (DESIGN.md §14): the streaming
+//! event trace is byte-identical at every engine-thread count, covers the
+//! whole task lifecycle including the shed and OOM paths, the profiler's
+//! wall-clock data is structurally excluded from byte-compared artifacts,
+//! and the metric sketches honour their documented error bound.
+
+use carma::config::schema::{
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind, TimelineMode,
+};
+use carma::coordinator::carma::{run_service, run_trace, RunOutcome};
+use carma::estimators;
+use carma::obs::LogHistogram;
+use carma::util::json::Json;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{trace_60, trace_cluster};
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("carma_obs_{}_{name}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn cluster_run(shards: usize, threads: usize, trace_out: Option<String>) -> RunOutcome {
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 64, 8, 13);
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    c.obs.trace_out = trace_out;
+    c.obs.explain_sample = 8;
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_trace(c, est, &trace, "obs")
+}
+
+#[test]
+fn trace_is_byte_identical_across_engine_threads() {
+    // the §10 guarantee extended to the trace sink: at a FIXED shard count,
+    // engine threads change wall-clock only — the emitted byte stream
+    // (including sampled decision records) must match exactly
+    for shards in [1usize, 4] {
+        let mut bytes: Option<Vec<u8>> = None;
+        for threads in [1usize, 4] {
+            let path = tmp(&format!("bytes_{shards}s_{threads}t"));
+            let out = cluster_run(shards, threads, Some(path.clone()));
+            let b = std::fs::read(&path).expect("trace file written");
+            let _ = std::fs::remove_file(&path);
+            assert_eq!(out.report.completed, 64);
+            assert!(!b.is_empty(), "trace must not be empty");
+            match &bytes {
+                None => bytes = Some(b),
+                Some(prev) => assert_eq!(
+                    prev, &b,
+                    "{shards} shards: {threads} engine threads changed the trace bytes"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_covers_the_lifecycle_in_commit_order() {
+    let path = tmp("lifecycle");
+    let out = cluster_run(4, 1, Some(path.clone()));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(out.report.completed, 64);
+    for ev in [
+        "\"ev\":\"arrival\"",
+        "\"ev\":\"route\"",
+        "\"ev\":\"dispatch\"",
+        "\"ev\":\"decision\"",
+        "\"ev\":\"complete\"",
+    ] {
+        assert!(text.contains(ev), "trace must contain {ev}");
+    }
+    assert_eq!(
+        text.matches("\"ev\":\"complete\"").count(),
+        64,
+        "every completion must be traced"
+    );
+    // one compact JSON record per line, (t, seq) in commit order
+    let mut last_t = f64::NEG_INFINITY;
+    let mut last_seq = -1i64;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every trace line parses as JSON");
+        let t = j.f64_of("t");
+        let seq = j.f64_of("seq") as i64;
+        assert!(seq > last_seq, "seq must strictly increase");
+        assert!(t >= last_t, "time must never go backward");
+        last_t = t;
+        last_seq = seq;
+    }
+}
+
+#[test]
+fn oom_and_recovery_paths_are_traced() {
+    let zoo = ModelZoo::load();
+    let trace = trace_60(&zoo, 1);
+    let path = tmp("oom");
+    let mut c = CarmaConfig {
+        policy: PolicyKind::RoundRobin,
+        estimator: EstimatorKind::None,
+        ..Default::default()
+    };
+    c.smact_cap = None; // blind collocation: OOMs are guaranteed
+    c.obs.trace_out = Some(path.clone());
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    let out = run_trace(c, est, &trace, "rr-blind-obs");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(out.report.oom_crashes > 0, "the blind run must OOM");
+    assert!(text.contains("\"ev\":\"oom\""), "OOMs must be traced");
+    assert!(text.contains("\"ev\":\"recovery\""), "recovery must be traced");
+}
+
+fn service_run(threads: usize, trace_out: Option<String>) -> RunOutcome {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(1, 4, 40.0);
+    c.coordinator.shards = 2;
+    c.engine.threads = threads;
+    c.service.arrivals = Some(ArrivalKind::Burst);
+    c.service.rate_per_min = 60.0;
+    c.service.duration_s = 300.0;
+    c.service.queue_cap = 2;
+    c.obs.trace_out = trace_out;
+    // stream-mode recorder: the long-run memory configuration
+    c.obs.timeline = TimelineMode::Off;
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_service(c, est, "svc-obs")
+}
+
+#[test]
+fn shed_path_is_traced_and_thread_invariant_in_stream_mode() {
+    let mut bytes: Option<Vec<u8>> = None;
+    for threads in [1usize, 4] {
+        let path = tmp(&format!("svc_{threads}t"));
+        let out = service_run(threads, Some(path.clone()));
+        let b = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(out.recorder.stream(), "service + timeline off must stream");
+        assert!(out.recorder.tasks.is_empty(), "no per-task vector in stream mode");
+        assert!(out.recorder.shed_total > 0, "saturation must shed");
+        let text = std::str::from_utf8(&b).unwrap();
+        assert!(text.contains("\"ev\":\"shed\""), "sheds must be traced");
+        // the report still carries every aggregate section
+        let j = out.report.to_json();
+        assert!(j.get("service").is_some());
+        assert!(j.get("placement_decisions").is_some());
+        match &bytes {
+            None => bytes = Some(b),
+            Some(prev) => assert_eq!(
+                prev, &b,
+                "open-loop trace bytes changed with {threads} engine threads"
+            ),
+        }
+    }
+}
+
+#[test]
+fn profile_is_structurally_excluded_from_compared_artifacts() {
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 24, 8, 5);
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.coordinator.shards = 4;
+    c.engine.threads = 4;
+    c.obs.profile = true;
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    let out = run_trace(c, est, &trace, "profiled");
+
+    let profile = out.profile.expect("--profile must populate RunOutcome::profile");
+    let ptxt = profile.to_string_pretty();
+    for key in [
+        "frontier_drain_s",
+        "snapshot_build_s",
+        "speculative_plan_s",
+        "serial_commit_s",
+        "wall_s",
+        "events_per_sec",
+    ] {
+        assert!(ptxt.contains(key), "profile must report {key}");
+    }
+    // the byte-compared artifact must carry NO wall-clock key — determinism
+    // by structure, not by discipline
+    let report = out.report.to_json().to_string_pretty();
+    for key in [
+        "frontier_drain_s",
+        "snapshot_build_s",
+        "speculative_plan_s",
+        "serial_commit_s",
+        "wall_s",
+        "events_per_sec",
+    ] {
+        assert!(!report.contains(key), "report leaked timing key {key}");
+    }
+    // and the profiler is off unless asked for
+    let out2 = cluster_run(1, 1, None);
+    assert!(out2.profile.is_none(), "profile must default to off");
+}
+
+#[test]
+fn sketch_percentiles_stay_within_documented_error() {
+    // deterministic LCG sample spanning 0.01..~1000s, vs exact
+    // nearest-rank order statistics: ±5% relative error documented, 6%
+    // asserted (bucket-midpoint slack)
+    let mut h = LogHistogram::default();
+    let mut vals = Vec::new();
+    let mut x = 12345u64;
+    for _ in 0..5000 {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let v = ((x >> 33) % 100_000) as f64 / 100.0 + 0.01;
+        h.record(v);
+        vals.push(v);
+    }
+    vals.sort_by(f64::total_cmp);
+    for p in [50.0, 90.0, 99.0, 99.9] {
+        let rank = ((p / 100.0) * (vals.len() - 1) as f64).round() as usize;
+        let exact = vals[rank];
+        let approx = h.percentile(p);
+        assert!(
+            (approx - exact).abs() <= exact * 0.06 + 1e-9,
+            "p{p}: sketch {approx} vs exact {exact}"
+        );
+    }
+}
