@@ -170,6 +170,39 @@ fi
 rm -rf "$TRACE_DIR"
 echo "obs smoke OK: byte-identical trace across threads, provenance + exposition present"
 
+step "chaos smoke: --faults mixed fixed seed, byte-diff across engine threads"
+CHAOS_DIR="$(mktemp -d)"
+CHAOS_BASE=(run --servers 2 --gpus-per-server 4 --shards 4 --estimator oracle --margin 2 \
+    --seed 7 --faults mixed --fault-rate 30 --fault-seed 7 --json)
+X1="$("$BIN" "${CHAOS_BASE[@]}" --trace-out "$CHAOS_DIR/c1.jsonl")"
+X4="$("$BIN" "${CHAOS_BASE[@]}" --trace-out "$CHAOS_DIR/c4.jsonl" --engine-threads 4)"
+if [ "$X1" != "$X4" ]; then
+    echo "DETERMINISM FAILURE: fault-injected results JSON diverged across engine threads" >&2
+    diff <(printf '%s\n' "$X1") <(printf '%s\n' "$X4") >&2 || true
+    exit 1
+fi
+if ! cmp -s "$CHAOS_DIR/c1.jsonl" "$CHAOS_DIR/c4.jsonl"; then
+    echo "DETERMINISM FAILURE: fault-injected event trace diverged across engine threads" >&2
+    diff "$CHAOS_DIR/c1.jsonl" "$CHAOS_DIR/c4.jsonl" | head -n 20 >&2 || true
+    exit 1
+fi
+if ! printf '%s\n' "$X1" | grep -q '"resilience"'; then
+    echo "CHAOS FAILURE: results JSON lost the resilience section" >&2
+    exit 1
+fi
+if ! grep -q '"ev":"fault"' "$CHAOS_DIR/c1.jsonl"; then
+    echo "CHAOS FAILURE: --faults mixed emitted no fault records" >&2
+    exit 1
+fi
+# fault-free runs must still carry the (zeroed) resilience section
+Z="$("$BIN" run --servers 2 --gpus-per-server 4 --estimator oracle --margin 2 --seed 7 --json)"
+if ! printf '%s\n' "$Z" | grep -q '"resilience"'; then
+    echo "CHAOS FAILURE: fault-free results JSON lost the resilience section" >&2
+    exit 1
+fi
+rm -rf "$CHAOS_DIR"
+echo "chaos smoke OK: byte-identical fault run across threads, resilience section always present"
+
 step "perf ledger: bench smokes + scale repros write real BENCH_sim.json rows"
 # 1-iteration smokes measure real (if noisy) rows; they land in the repo-root
 # ledger so the perf trajectory stays populated every CI run
@@ -182,13 +215,15 @@ CARMA_BENCH_SMOKE=1 cargo bench --bench gang_scale
 # observability tax: smoke mode keeps the run short and the gate wide — the
 # dedicated 5% gate needs a quiet machine (`carma repro obs_overhead`)
 CARMA_BENCH_SMOKE=1 "$BIN" repro obs_overhead
-for SECTION in shard_scale placement_scale service_scale obs_overhead; do
+# chaos ledger: goodput degradation vs offered fault rate (smoke = 2 rates)
+CARMA_BENCH_SMOKE=1 "$BIN" repro chaos_scale
+for SECTION in shard_scale placement_scale service_scale obs_overhead chaos_scale; do
     if ! grep -q "\"$SECTION\"" BENCH_sim.json; then
         echo "LEDGER FAILURE: BENCH_sim.json is missing the $SECTION section" >&2
         exit 1
     fi
 done
-echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale and obs_overhead"
+echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale, obs_overhead and chaos_scale"
 
 echo
 echo "CI green."

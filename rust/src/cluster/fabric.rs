@@ -61,6 +61,12 @@ pub struct Fabric {
     cost_cross_server: f64,
     /// Aggregate membw demand of running gangs on each server's NIC.
     nic_load: Vec<f64>,
+    /// Per-server link-health multiplier (DESIGN.md §15): 1.0 healthy,
+    /// `faults.degrade_factor` while a `LinkFault` is outstanding. Scales
+    /// the NIC path cost and divides gang speed. Exactly 1.0 means every
+    /// fabric expression reduces to its fault-free value bit-for-bit, so
+    /// runs without faults stay byte-identical to pre-chaos builds.
+    link_degrade: Vec<f64>,
     /// Contention slope / per-extra-server sync penalty (from `[fabric]`).
     contention_alpha: f64,
     cross_penalty: f64,
@@ -105,6 +111,7 @@ impl Fabric {
             cost_cross_island: 1.0 / cfg.pcie_gbps,
             cost_cross_server: 1.0 / cfg.nic_gbps,
             nic_load: vec![0.0; topo.n_servers()],
+            link_degrade: vec![1.0; topo.n_servers()],
             contention_alpha: cfg.contention_alpha,
             cross_penalty: cfg.cross_penalty,
         }
@@ -176,13 +183,20 @@ impl Fabric {
     }
 
     /// Per-GB transfer cost between two GPUs (0 for the same device).
+    /// Cross-server paths pay each endpoint's NIC separately, scaled by
+    /// that server's link-health multiplier — a degraded uplink makes every
+    /// placement through it look proportionally worse to the placement
+    /// core, which is how fault avoidance steers gangs around flaky links.
     pub fn path_cost(&self, a: usize, b: usize) -> f64 {
         match self.link_class(a, b) {
             LinkClass::Local => 0.0,
             LinkClass::NvLink => self.cost_intra_island,
             LinkClass::Pcie => self.cost_cross_island,
             // cross-server traffic leaves one NIC and enters another
-            LinkClass::Nic => 2.0 * self.cost_cross_server,
+            LinkClass::Nic => {
+                self.cost_cross_server
+                    * (self.link_degrade[self.gpu_server[a]] + self.link_degrade[self.gpu_server[b]])
+            }
         }
     }
 
@@ -266,6 +280,22 @@ impl Fabric {
         self.nic_load[server]
     }
 
+    // -- link health (DESIGN.md §15) ----------------------------------------
+
+    /// Set one server's link-health multiplier: 1.0 = healthy, >1.0 = a
+    /// `LinkFault` is outstanding (per-GB NIC cost scales up, gang speed
+    /// scales down). Called only from commit-side fault handlers, so the
+    /// time-varying costs stay deterministic at any thread count.
+    pub fn set_link_degrade(&mut self, server: usize, factor: f64) {
+        debug_assert!(factor >= 1.0, "degrade factor below healthy: {factor}");
+        self.link_degrade[server] = factor;
+    }
+
+    /// Current link-health multiplier of a server (1.0 when healthy).
+    pub fn link_degrade(&self, server: usize) -> f64 {
+        self.link_degrade[server]
+    }
+
     /// Speed factor of a *running* gang on this placement: the cross-server
     /// synchronization penalty plus NIC contention from other gangs sharing
     /// any of its uplinks (`interference::fabric_factor`). 1.0 for
@@ -276,10 +306,15 @@ impl Fabric {
             return 1.0;
         }
         let mut other = 0.0f64;
+        let mut worst_degrade = 1.0f64;
         for &s in &spanned {
             other = other.max((self.nic_load[s] - own_membw).max(0.0));
+            worst_degrade = worst_degrade.max(self.link_degrade[s]);
         }
+        // the slowest uplink paces the collective: divide by the worst
+        // link-health multiplier (exactly 1.0 when every link is healthy)
         interference::fabric_factor(spanned.len(), other, self.cross_penalty, self.contention_alpha)
+            / worst_degrade
     }
 
     /// Sorted distinct servers of a GPU set.
@@ -418,5 +453,28 @@ mod tests {
         assert_eq!(f.nic_load(0), 0.0);
         // server-local placements never pay fabric costs
         assert_eq!(f.gang_speed_factor(&[0, 1, 2, 3], 0.9), 1.0);
+    }
+
+    #[test]
+    fn link_degradation_scales_costs_and_speed() {
+        let mut f = fabric(FabricProfile::NvlinkIsland, 2, 4);
+        let gang = [0usize, 1, 4, 5];
+        let healthy_cost = f.path_cost(0, 4);
+        let healthy_speed = f.gang_speed_factor(&gang, 0.4);
+        // degrade server 1's uplink 4x: cross-server paths touching it get
+        // pricier, the spanning gang slows, intra-server paths are untouched
+        f.set_link_degrade(1, 4.0);
+        assert_eq!(f.link_degrade(1), 4.0);
+        assert!(f.path_cost(0, 4) > healthy_cost);
+        assert_eq!(f.path_cost(0, 1), fabric(FabricProfile::NvlinkIsland, 2, 4).path_cost(0, 1));
+        let degraded_speed = f.gang_speed_factor(&gang, 0.4);
+        assert!(
+            degraded_speed < healthy_speed,
+            "degraded uplink must slow the gang: {degraded_speed} !< {healthy_speed}"
+        );
+        // repair restores the fault-free numbers bit-for-bit
+        f.set_link_degrade(1, 1.0);
+        assert_eq!(f.path_cost(0, 4).to_bits(), healthy_cost.to_bits());
+        assert_eq!(f.gang_speed_factor(&gang, 0.4).to_bits(), healthy_speed.to_bits());
     }
 }

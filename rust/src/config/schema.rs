@@ -520,6 +520,89 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Fault-injection profile (TOML `[faults]`, `--faults`; DESIGN.md §15):
+/// which fault kinds the seeded chaos schedule draws.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultProfile {
+    /// No fault injection — the default; byte-preserves fault-free runs.
+    None,
+    /// XID-style single-device losses only.
+    Gpu,
+    /// Whole-server power losses only (all residents killed).
+    Server,
+    /// NIC/interconnect degradations only (no kills, time-varying costs).
+    Link,
+    /// All three kinds (GPU-loss weighted heaviest, Jeon et al.).
+    Mixed,
+}
+
+impl FaultProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => FaultProfile::None,
+            "gpu" => FaultProfile::Gpu,
+            "server" => FaultProfile::Server,
+            "link" => FaultProfile::Link,
+            "mixed" | "all" => FaultProfile::Mixed,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultProfile::None => "none",
+            FaultProfile::Gpu => "gpu",
+            FaultProfile::Server => "server",
+            FaultProfile::Link => "link",
+            FaultProfile::Mixed => "mixed",
+        }
+    }
+}
+
+/// Fault-injection configuration (TOML `[faults]`,
+/// `--faults/--fault-rate/--fault-seed`; DESIGN.md §15). The schedule is a
+/// pure function of this struct and the cluster shape (`sim::faults`), so
+/// fault runs stay byte-deterministic at every shard/thread count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    pub profile: FaultProfile,
+    /// Mean strikes per simulated hour across the whole cluster.
+    pub rate_per_hour: f64,
+    /// Injection window in simulated seconds: no strike lands after this
+    /// (repairs may). Must not exceed `service.duration_s` in open-loop
+    /// runs — faults outside the arrival window would hit a drained idle
+    /// cluster and silently measure nothing.
+    pub duration_s: f64,
+    /// Mean repair time per kind (seconds, exponential around the mean).
+    pub gpu_repair_s: f64,
+    pub server_repair_s: f64,
+    pub link_repair_s: f64,
+    /// Per-cause relaunch budget: a task interrupted by faults more than
+    /// this many times is failed (the OOM retry budget's fault twin).
+    pub max_relaunches: u32,
+    /// NIC-cost multiplier a degraded server's links carry until repair.
+    pub degrade_factor: f64,
+    /// Schedule seed: the generator is pure in `(profile, rate, duration,
+    /// seed, cluster shape)`, independent of shards/threads.
+    pub seed: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            profile: FaultProfile::None,
+            rate_per_hour: 12.0,
+            duration_s: 3600.0,
+            gpu_repair_s: 300.0,
+            server_repair_s: 600.0,
+            link_repair_s: 120.0,
+            max_relaunches: 3,
+            degrade_factor: 4.0,
+            seed: 1,
+        }
+    }
+}
+
 /// Per-GPU timeline retention of the recorder (TOML `[obs] timeline`,
 /// `--timeline`; DESIGN.md §14).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -616,6 +699,7 @@ pub struct CarmaConfig {
     pub power: PowerConfig,
     pub interference: InterferenceConfig,
     pub service: ServiceConfig,
+    pub faults: FaultsConfig,
     pub obs: ObsConfig,
     pub artifacts_dir: String,
 }
@@ -640,6 +724,7 @@ impl Default for CarmaConfig {
             power: PowerConfig::default(),
             interference: InterferenceConfig::default(),
             service: ServiceConfig::default(),
+            faults: FaultsConfig::default(),
             obs: ObsConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -888,6 +973,36 @@ impl CarmaConfig {
             self.service.seed = u64::try_from(v)
                 .map_err(|_| format!("service.seed must be non-negative, got {v}"))?;
         }
+        if let Some(v) = doc.get("faults.profile").and_then(|v| v.as_str()) {
+            self.faults.profile = FaultProfile::parse(v)
+                .ok_or_else(|| format!("unknown fault profile '{v}' (none|gpu|server|link|mixed)"))?;
+        }
+        if let Some(v) = f64_of("faults.rate_per_hour") {
+            self.faults.rate_per_hour = v;
+        }
+        if let Some(v) = f64_of("faults.duration_s") {
+            self.faults.duration_s = v;
+        }
+        if let Some(v) = f64_of("faults.gpu_repair_s") {
+            self.faults.gpu_repair_s = v;
+        }
+        if let Some(v) = f64_of("faults.server_repair_s") {
+            self.faults.server_repair_s = v;
+        }
+        if let Some(v) = f64_of("faults.link_repair_s") {
+            self.faults.link_repair_s = v;
+        }
+        if let Some(v) = doc.get("faults.max_relaunches").and_then(|v| v.as_i64()) {
+            self.faults.max_relaunches = u32::try_from(v)
+                .map_err(|_| format!("faults.max_relaunches must be >= 0, got {v}"))?;
+        }
+        if let Some(v) = f64_of("faults.degrade_factor") {
+            self.faults.degrade_factor = v;
+        }
+        if let Some(v) = doc.get("faults.seed").and_then(|v| v.as_i64()) {
+            self.faults.seed = u64::try_from(v)
+                .map_err(|_| format!("faults.seed must be non-negative, got {v}"))?;
+        }
         if let Some(v) = doc.get("obs.trace_out").and_then(|v| v.as_str()) {
             self.obs.trace_out = if v.is_empty() { None } else { Some(v.to_string()) };
         }
@@ -1021,6 +1136,74 @@ impl CarmaConfig {
                 "service.queue_cap must be in 1..=1000000, got {}",
                 self.service.queue_cap
             ));
+        }
+        // cross-section contradiction checks (DESIGN.md §15): a gang whose
+        // holds always expire before its own retry cadence can never make
+        // progress — the two knobs fight each other by construction
+        if self.gang.hold_ttl_s < self.gang.retry_s {
+            return Err(format!(
+                "gang.hold_ttl_s ({}) must be >= gang.retry_s ({}) — holds would \
+                 always expire before the gang retries",
+                self.gang.hold_ttl_s, self.gang.retry_s
+            ));
+        }
+        if self.faults.profile != FaultProfile::None {
+            if self.faults.rate_per_hour < 0.0 {
+                return Err(format!(
+                    "faults.rate_per_hour must be >= 0, got {}",
+                    self.faults.rate_per_hour
+                ));
+            }
+            if self.faults.rate_per_hour > 100_000.0 {
+                return Err(format!(
+                    "faults.rate_per_hour must be <= 100000 (the event storm would \
+                     drown the scheduler), got {}",
+                    self.faults.rate_per_hour
+                ));
+            }
+            if self.faults.duration_s <= 0.0 {
+                return Err(format!(
+                    "faults.duration_s must be positive, got {}",
+                    self.faults.duration_s
+                ));
+            }
+            for (name, v) in [
+                ("faults.gpu_repair_s", self.faults.gpu_repair_s),
+                ("faults.server_repair_s", self.faults.server_repair_s),
+                ("faults.link_repair_s", self.faults.link_repair_s),
+            ] {
+                if v <= 0.0 {
+                    return Err(format!("{name} must be positive, got {v}"));
+                }
+            }
+            if self.faults.degrade_factor < 1.0 {
+                return Err(format!(
+                    "faults.degrade_factor must be >= 1 (a degraded link cannot get \
+                     faster), got {}",
+                    self.faults.degrade_factor
+                ));
+            }
+            // an injection window past the arrival window strikes a drained
+            // idle cluster: the run "survives" faults it never experienced
+            if self.service.arrivals.is_some() && self.faults.duration_s > self.service.duration_s
+            {
+                return Err(format!(
+                    "faults.duration_s ({}) must not exceed service.duration_s ({}) — \
+                     faults after intake closes would hit an idle cluster",
+                    self.faults.duration_s, self.service.duration_s
+                ));
+            }
+            // server faults quarantine whole boxes; a single-server cluster
+            // with server faults on is guaranteed to strand every task
+            if self.cluster.n_servers() == 1
+                && matches!(self.faults.profile, FaultProfile::Server)
+            {
+                return Err(
+                    "faults.profile = \"server\" on a single-server cluster would \
+                     quarantine the only server — use gpu/link/mixed or add servers"
+                        .into(),
+                );
+            }
         }
         Ok(())
     }
@@ -1313,6 +1496,72 @@ mod tests {
         assert_eq!(TimelineMode::parse("window"), Some(TimelineMode::Sparse));
         assert_eq!(TimelineMode::parse("full"), Some(TimelineMode::On));
         assert_eq!(TimelineMode::Off.name(), "off");
+    }
+
+    #[test]
+    fn faults_section_applies() {
+        // the default stays fault-free
+        let c = CarmaConfig::default();
+        assert_eq!(c.faults.profile, FaultProfile::None);
+
+        let doc = toml::parse(
+            "[cluster]\nservers = 2\n[faults]\nprofile = \"mixed\"\nrate_per_hour = 30.0\n\
+             duration_s = 1200.0\ngpu_repair_s = 90.0\nmax_relaunches = 5\n\
+             degrade_factor = 2.5\nseed = 9\n",
+        )
+        .unwrap();
+        let mut c = CarmaConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.faults.profile, FaultProfile::Mixed);
+        assert_eq!(c.faults.rate_per_hour, 30.0);
+        assert_eq!(c.faults.duration_s, 1200.0);
+        assert_eq!(c.faults.gpu_repair_s, 90.0);
+        assert_eq!(c.faults.max_relaunches, 5);
+        assert_eq!(c.faults.degrade_factor, 2.5);
+        assert_eq!(c.faults.seed, 9);
+
+        // typo'd profiles and nonsense knobs are config errors
+        let doc = toml::parse("[faults]\nprofile = \"cosmic-rays\"\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[faults]\nprofile = \"gpu\"\nduration_s = -5.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[faults]\nprofile = \"gpu\"\ngpu_repair_s = 0.0\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        let doc = toml::parse("[faults]\nprofile = \"link\"\ndegrade_factor = 0.5\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
+        assert_eq!(FaultProfile::parse("MIXED"), Some(FaultProfile::Mixed));
+        assert_eq!(FaultProfile::parse("off"), Some(FaultProfile::None));
+        assert_eq!(FaultProfile::Server.name(), "server");
+    }
+
+    #[test]
+    fn contradictory_sections_rejected_at_load() {
+        // fault window past the arrival window: survives faults it never saw
+        let doc = toml::parse(
+            "[service]\narrivals = \"poisson\"\nduration_s = 600.0\n\
+             [faults]\nprofile = \"gpu\"\nduration_s = 1200.0\n",
+        )
+        .unwrap();
+        let err = CarmaConfig::default().apply(&doc).unwrap_err();
+        assert!(err.contains("must not exceed service.duration_s"), "{err}");
+
+        // equal windows are fine
+        let doc = toml::parse(
+            "[service]\narrivals = \"poisson\"\nduration_s = 600.0\n\
+             [faults]\nprofile = \"gpu\"\nduration_s = 600.0\n",
+        )
+        .unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_ok());
+
+        // server faults on a single-server cluster strand everything
+        let doc = toml::parse("[faults]\nprofile = \"server\"\n").unwrap();
+        let err = CarmaConfig::default().apply(&doc).unwrap_err();
+        assert!(err.contains("single-server"), "{err}");
+
+        // gang holds that always expire before the retry cadence
+        let doc = toml::parse("[gang]\nhold_ttl_s = 5.0\nretry_s = 15.0\n").unwrap();
+        let err = CarmaConfig::default().apply(&doc).unwrap_err();
+        assert!(err.contains("hold_ttl_s"), "{err}");
     }
 
     #[test]

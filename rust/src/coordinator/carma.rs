@@ -35,6 +35,7 @@ use crate::estimators::MemoryEstimator;
 use crate::metrics::recorder::{DecisionOutcome, Recorder};
 use crate::metrics::report::RunReport;
 use crate::obs::{Phase, Profiler, TraceSink};
+use crate::sim::faults::{self, FaultKind, FaultRecord};
 use crate::sim::parallel::{resolve_threads, WorkerPool};
 use crate::sim::{Engine, Event, TaskId};
 use crate::util::json::{self, Json};
@@ -112,6 +113,41 @@ struct TaskRun {
     /// its GPUs exclusively — no collocation is admitted onto them — so the
     /// last permitted attempt cannot be re-crashed by a newcomer's ramp.
     pinned: bool,
+    /// Fault-kill relaunch counter (the OOM retry budget's fault twin,
+    /// DESIGN.md §15): a task interrupted more than
+    /// `cfg.faults.max_relaunches` times fails permanently.
+    fault_relaunches: u32,
+    /// Cause of the most recent kill, consumed by recovery detection to
+    /// label the re-queue (`relaunch` record vs the OOM `recovery` one).
+    last_fault: Option<FaultKind>,
+}
+
+/// Per-domain outage counters (DESIGN.md §15). Overlapping faults on one
+/// domain stack: a device is quarantined — invisible to placement — while
+/// its own counter or its server's counter is non-zero, and rolls back to
+/// healthy only when the last outstanding repair lands. Link outages
+/// degrade (fabric costs up, gangs slow) without quarantining.
+struct Health {
+    gpu_outages: Vec<u32>,
+    server_outages: Vec<u32>,
+    link_outages: Vec<u32>,
+}
+
+impl Health {
+    fn new(n_gpus: usize, n_servers: usize) -> Health {
+        Health {
+            gpu_outages: vec![0; n_gpus],
+            server_outages: vec![0; n_servers],
+            link_outages: vec![0; n_servers],
+        }
+    }
+
+    /// Quarantined ⇒ filtered out by `RejectReason::Unhealthy` before any
+    /// other eligibility check — even the holder of a gang reservation
+    /// must not dispatch onto dead hardware.
+    fn quarantined(&self, gpu: usize, server: usize) -> bool {
+        self.gpu_outages[gpu] > 0 || self.server_outages[server] > 0
+    }
 }
 
 /// Outcome of a full trace run.
@@ -182,6 +218,14 @@ pub struct Carma {
     gang_lane: GangLane,
     /// Pending gang holds (per-GPU reservations the mappers must respect).
     book: ReservationBook,
+    /// Materialized fault schedule (DESIGN.md §15): `FaultStrike(i)` /
+    /// `FaultRepair(i)` events index into this vector — the
+    /// `ServiceArrival` pattern, the coordinator owns the payload so the
+    /// event type stays `Eq`.
+    faults: Vec<FaultRecord>,
+    /// Per-domain outage counters feeding the `Unhealthy` placement filter
+    /// and the time-varying fabric degradation.
+    health: Health,
     /// Open-loop service mode (DESIGN.md §13): the streaming arrival
     /// generator. `None` = closed-loop trace replay (the default).
     arrival_gen: Option<ArrivalGen>,
@@ -285,6 +329,13 @@ impl Carma {
             .collect();
         fabric.set_alive(&alive);
         let book = ReservationBook::new(&cluster.topo);
+        // deterministic chaos (DESIGN.md §15): the whole fault schedule is
+        // a pure function of `(profile, rate, duration, seed, shape)`,
+        // materialized here and enqueued as ordinary global-lane events in
+        // `run()` — never drawn mid-run, so fault runs stay byte-identical
+        // at every shard/thread count
+        let faults = faults::generate(&cfg.faults, cluster.n_gpus(), cluster.n_servers());
+        let health = Health::new(cluster.n_gpus(), cluster.n_servers());
         let tasks = trace
             .tasks
             .iter()
@@ -303,6 +354,8 @@ impl Carma {
                 in_recovery: false,
                 admitted_est_gb: None,
                 pinned: false,
+                fault_relaunches: 0,
+                last_fault: None,
             })
             .collect();
         let arrival_gen = cfg.service.arrivals.map(|kind| {
@@ -316,12 +369,13 @@ impl Carma {
         });
         Carma {
             cfg,
-            // lane 0 carries the arrival bulk + monitor/recovery traffic;
-            // each shard lane sees its share of the window/ramp/completion
+            // lane 0 carries the arrival bulk + monitor/recovery traffic +
+            // the full fault schedule (strike and repair per record); each
+            // shard lane sees its share of the window/ramp/completion
             // churn (~8 events per task in flight across reschedules)
             engine: Engine::with_lane_capacities(
                 1 + shards,
-                2 * n_est + 16,
+                2 * n_est + 2 * faults.len() + 16,
                 (8 * n_est) / shards.max(1) + 16,
             ),
             cluster,
@@ -339,6 +393,8 @@ impl Carma {
             fabric,
             gang_lane: GangLane::new(),
             book,
+            faults,
+            health,
             intake_open: arrival_gen.is_some(),
             arrival_gen,
             pending_arrival: None,
@@ -367,6 +423,15 @@ impl Carma {
         }
         self.engine
             .schedule_in(self.cfg.monitor.sample_period_s, Event::MonitorSample);
+        // the fault schedule — strikes AND repairs — goes in up front on
+        // the global lane (DESIGN.md §15); the generator guarantees
+        // `t_repair > t_strike`, so the `(time, seq)` merge order never
+        // repairs a fault before it lands
+        for i in 0..self.faults.len() {
+            let (strike, repair) = (self.faults[i].t_strike, self.faults[i].t_repair);
+            self.engine.schedule(strike, Event::FaultStrike(i));
+            self.engine.schedule(repair, Event::FaultRepair(i));
+        }
 
         if self.pool.is_some() {
             self.run_parallel();
@@ -473,6 +538,8 @@ impl Carma {
             Event::GangHoldExpire(id, epoch) => self.on_gang_hold_expire(id, epoch),
             Event::StealCheck(shard) => self.on_steal_check(shard),
             Event::ServiceArrival => self.on_service_arrival(),
+            Event::FaultStrike(i) => self.on_fault_strike(i),
+            Event::FaultRepair(i) => self.on_fault_repair(i),
         }
     }
 
@@ -582,6 +649,8 @@ impl Carma {
             in_recovery: false,
             admitted_est_gb: None,
             pinned: false,
+            fault_relaunches: 0,
+            last_fault: None,
         });
         self.recorder.ensure_task(id);
         let t = self.engine.now();
@@ -1288,12 +1357,13 @@ impl Carma {
             let tasks = &self.tasks;
             let cfg = &self.cfg;
             let book = &self.book;
+            let health = &self.health;
             match self.pool.as_ref() {
                 Some(pool) if n_servers >= 2 => pool.map(n_servers, &|i| {
-                    build_server_view(cluster, monitor, tasks, cfg, book, i, now)
+                    build_server_view(cluster, monitor, tasks, cfg, book, health, i, now)
                 }),
                 _ => (0..n_servers)
-                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, book, i, now))
+                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, book, health, i, now))
                     .collect(),
             }
         };
@@ -1451,7 +1521,20 @@ impl Carma {
             return;
         }
         self.tasks[id].state = RunState::Queued;
-        self.trace_event("recovery", || vec![("task", json::num(id as f64))]);
+        // a fault-killed task re-queues as a `relaunch` (cause attached);
+        // the OOM path keeps its original `recovery` record
+        match self.tasks[id].last_fault.take() {
+            Some(kind) => {
+                self.recorder.on_fault_relaunch();
+                self.trace_event("relaunch", || {
+                    vec![
+                        ("task", json::num(id as f64)),
+                        ("cause", json::s(kind.name())),
+                    ]
+                });
+            }
+            None => self.trace_event("recovery", || vec![("task", json::num(id as f64))]),
+        }
         if self.tasks[id].spec.gang {
             self.admission.submit_gang_recovery(id);
             self.feed_gang();
@@ -1459,6 +1542,203 @@ impl Carma {
         }
         let shard = self.admission.submit_recovery(id);
         self.feed(shard);
+    }
+
+    // -- fault injection + failure-domain recovery (DESIGN.md §15) -----------
+
+    /// Global GPU ids owned by `server`.
+    fn server_gpus(&self, server: usize) -> Vec<usize> {
+        let s = &self.cluster.topo.servers[server];
+        (s.gpu_offset..s.gpu_offset + s.cfg.n_gpus).collect()
+    }
+
+    /// Running tasks resident on any of `gpus`, deduped ascending — the
+    /// deterministic kill order for a domain loss.
+    fn residents_of(&self, gpus: &[usize]) -> Vec<TaskId> {
+        let mut ids: Vec<TaskId> = gpus
+            .iter()
+            .flat_map(|&g| self.cluster.gpu(g).resident.iter().map(|r| r.task))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Devices whose speeds may shift when server `server`'s uplinks
+    /// change: its own GPUs plus every running gang's (spanning gangs pay
+    /// the degraded-link factor wherever their members sit).
+    fn link_affected_gpus(&self, server: usize) -> Vec<usize> {
+        let mut gpus = self.server_gpus(server);
+        gpus.extend(self.other_gang_gpus(usize::MAX));
+        gpus
+    }
+
+    fn trace_quarantine(&mut self, domain: &'static str, target: usize, state: &'static str) {
+        self.trace_event("quarantine", || {
+            vec![
+                ("domain", json::s(domain)),
+                ("target", json::num(target as f64)),
+                ("state", json::s(state)),
+            ]
+        });
+    }
+
+    /// Tear down every gang reservation held by the named holders: a gang
+    /// cannot dispatch onto dead hardware, so its partial holds return to
+    /// the pool immediately (the TTL teardown's fault twin — same release
+    /// path, no expiry budget spent).
+    fn invalidate_holders(&mut self, holders: Vec<TaskId>) {
+        for id in holders {
+            let freed = self.book.release_all(id);
+            if freed.is_empty() {
+                continue;
+            }
+            self.touch();
+            self.recorder.on_holds_invalidated(freed.len() as u64);
+            self.trace_event("holds_invalidated", || {
+                vec![
+                    ("task", json::num(id as f64)),
+                    ("freed", json::num(freed.len() as f64)),
+                ]
+            });
+            // the gang stays lane-active; its next attempt re-plans around
+            // the quarantined devices
+            self.schedule_gang_retry();
+        }
+    }
+
+    /// A scheduled fault lands (paper §4.2's failure model generalized,
+    /// DESIGN.md §15): health rolls forward, resident work on the failed
+    /// domain dies into the recovery lane, reservations on it dissolve,
+    /// and link faults re-price the fabric instead of killing anything.
+    fn on_fault_strike(&mut self, i: usize) {
+        let rec = self.faults[i].clone();
+        self.recorder.on_fault(rec.kind);
+        self.trace_event("fault", || {
+            vec![
+                ("kind", json::s(rec.kind.name())),
+                ("target", json::num(rec.target as f64)),
+                ("downtime_s", json::num(rec.downtime_s())),
+            ]
+        });
+        self.touch();
+        match rec.kind {
+            FaultKind::Gpu => {
+                let g = rec.target;
+                self.health.gpu_outages[g] += 1;
+                if self.health.gpu_outages[g] == 1 {
+                    self.trace_quarantine("gpu", g, "quarantined");
+                }
+                let holders: Vec<TaskId> = self.book.holder(g).into_iter().collect();
+                self.invalidate_holders(holders);
+                for id in self.residents_of(&[g]) {
+                    self.fault_kill(id, FaultKind::Gpu);
+                }
+            }
+            FaultKind::Server => {
+                let s = rec.target;
+                self.health.server_outages[s] += 1;
+                if self.health.server_outages[s] == 1 {
+                    self.trace_quarantine("server", s, "quarantined");
+                }
+                let holders = self.book.holders_on_server(s);
+                self.invalidate_holders(holders);
+                let gpus = self.server_gpus(s);
+                for id in self.residents_of(&gpus) {
+                    self.fault_kill(id, FaultKind::Server);
+                }
+            }
+            FaultKind::Link => {
+                let s = rec.target;
+                self.health.link_outages[s] += 1;
+                self.fabric
+                    .set_link_degrade(s, self.cfg.faults.degrade_factor);
+                self.trace_quarantine("link", s, "degraded");
+                let affected = self.link_affected_gpus(s);
+                self.recompute_speeds(&affected);
+            }
+        }
+        // surviving capacity re-ranks: gang lane first, then the mappers
+        self.kick_gang();
+        self.kick_mappers();
+    }
+
+    /// The indexed fault's repair completes: outage counters roll back
+    /// (overlapping faults keep the domain down until the LAST repair),
+    /// degraded links restore to exactly factor 1.0 — bit-reproducing the
+    /// fault-free fabric arithmetic — and waiting work gets a kick.
+    fn on_fault_repair(&mut self, i: usize) {
+        let rec = self.faults[i].clone();
+        self.touch();
+        let mut gpu_seconds = 0.0;
+        match rec.kind {
+            FaultKind::Gpu => {
+                self.health.gpu_outages[rec.target] -= 1;
+                gpu_seconds = rec.downtime_s();
+            }
+            FaultKind::Server => {
+                let s = rec.target;
+                self.health.server_outages[s] -= 1;
+                gpu_seconds = rec.downtime_s() * self.cluster.topo.servers[s].cfg.n_gpus as f64;
+            }
+            FaultKind::Link => {
+                let s = rec.target;
+                self.health.link_outages[s] -= 1;
+                if self.health.link_outages[s] == 0 {
+                    self.fabric.set_link_degrade(s, 1.0);
+                }
+                let affected = self.link_affected_gpus(s);
+                self.recompute_speeds(&affected);
+            }
+        }
+        self.recorder.on_fault_repair(rec.downtime_s(), gpu_seconds);
+        self.trace_event("repair", || {
+            vec![
+                ("kind", json::s(rec.kind.name())),
+                ("target", json::num(rec.target as f64)),
+            ]
+        });
+        // restored capacity: the gang lane gets first claim, as everywhere
+        self.kick_gang();
+        self.kick_mappers();
+    }
+
+    /// Kill a Running task because its failure domain died — the OOM
+    /// crash path generalized (DESIGN.md §15): all progress is lost, every
+    /// member GPU releases (a gang relaunches all-or-nothing by
+    /// construction — one `TaskRun` spans all members), and the task
+    /// re-queues through recovery detection with exponential backoff under
+    /// a per-cause relaunch budget.
+    fn fault_kill(&mut self, id: TaskId, kind: FaultKind) {
+        if self.tasks[id].state != RunState::Running {
+            return;
+        }
+        self.recorder.on_fault_interruption(kind);
+        self.trace_event("detect", || {
+            vec![
+                ("task", json::num(id as f64)),
+                ("cause", json::s(kind.name())),
+            ]
+        });
+        self.release(id);
+        let task = &mut self.tasks[id];
+        task.state = RunState::Crashed;
+        task.version += 1; // invalidate any scheduled completion
+        task.remaining_s = task.spec.work_s; // restart from scratch
+        task.in_recovery = true;
+        task.fault_relaunches += 1;
+        task.last_fault = Some(kind);
+        let n = task.fault_relaunches;
+        if n > self.cfg.faults.max_relaunches {
+            self.recorder.on_fault_failed();
+            self.tasks[id].last_fault = None;
+            self.fail_task(id, "exceeded fault relaunch budget");
+            return;
+        }
+        // same exponential backoff ladder as the OOM path: a task whose
+        // domain keeps dying waits 2× longer before each re-queue
+        let backoff = RECOVERY_DETECT_S * (1u64 << (n - 1).min(6)) as f64;
+        self.engine.schedule_in(backoff, Event::RecoveryDetect(id));
     }
 
     /// Free all segments + residency of a task and update speeds.
@@ -1672,6 +1952,7 @@ fn build_server_view(
     tasks: &[TaskRun],
     cfg: &CarmaConfig,
     book: &ReservationBook,
+    health: &Health,
     server: usize,
     now: f64,
 ) -> ServerView {
@@ -1690,6 +1971,7 @@ fn build_server_view(
                 n_tasks: g.n_tasks(),
                 pinned: g.resident.iter().any(|r| tasks[r.task].pinned),
                 held: book.is_held(g.id),
+                unhealthy: health.quarantined(g.id, spec.id),
                 mig_free_instance: inst,
                 mig_instance_mem_gb: inst
                     .map(|i| g.capacity_gb() * g.mig_slices[i])
@@ -2026,6 +2308,7 @@ mod tests {
         assert_sync::<TaskRun>();
         assert_sync::<ReservationBook>();
         assert_sync::<Fabric>();
+        assert_sync::<Health>();
         fn assert_send<T: Send>() {}
         assert_send::<PlanJob>();
     }
@@ -2043,6 +2326,50 @@ mod tests {
         assert_eq!(out.report.completed, 60, "adaptive recovery must finish every task");
         assert!(out.report.oom_crashes > 0);
         assert_eq!(out.recorder.failed_total, 0, "no task may fail its retry budget");
+    }
+
+    #[test]
+    fn gpu_faults_interrupt_and_conserve_tasks() {
+        use crate::config::schema::FaultProfile;
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 1);
+        let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        c.safety_margin_gb = 2.0;
+        c.faults.profile = FaultProfile::Gpu;
+        c.faults.rate_per_hour = 60.0;
+        let out = run_trace(c, e, &trace, "chaos-gpu");
+        let res = &out.report.resilience;
+        assert!(res.faults_gpu > 0, "schedule must strike inside the window");
+        // conservation invariant: every offered task terminal
+        assert_eq!(
+            out.report.completed
+                + out.recorder.failed_total as usize
+                + out.recorder.shed_total as usize,
+            out.recorder.tasks.len()
+        );
+        assert!(out.report.to_json().get("resilience").is_some());
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic_across_repeats() {
+        use crate::config::schema::FaultProfile;
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 2);
+        let mk = || {
+            let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+            c.safety_margin_gb = 2.0;
+            c.faults.profile = FaultProfile::Mixed;
+            c.faults.rate_per_hour = 30.0;
+            run_trace(c, e, &trace, "chaos-det")
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(
+            a.report.to_json().to_string_pretty(),
+            b.report.to_json().to_string_pretty(),
+            "fault runs must be byte-identical across repeats"
+        );
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -107,6 +107,21 @@ impl ReservationBook {
         self.server_slots[self.server_of[gpu]] += 1;
     }
 
+    /// Tasks holding at least one GPU on `server`, deduplicated and sorted.
+    /// The fault path (DESIGN.md §15) uses this to invalidate every hold on
+    /// a dead server — a reservation on quarantined hardware would wedge
+    /// the gang lane until the TTL fired, and the power accounting would
+    /// keep charging slots to a box that cannot dispatch.
+    pub fn holders_on_server(&self, server: usize) -> Vec<TaskId> {
+        let mut out: Vec<TaskId> = (0..self.holder.len())
+            .filter(|&g| self.server_of[g] == server)
+            .filter_map(|g| self.holder[g])
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// Release every hold `task` owns; returns the freed GPU ids.
     pub fn release_all(&mut self, task: TaskId) -> Vec<usize> {
         let mut freed = Vec::new();
@@ -241,6 +256,7 @@ mod tests {
             n_tasks: n,
             pinned: false,
             held: false,
+            unhealthy: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
@@ -282,6 +298,8 @@ mod tests {
         assert_eq!(b.server_slots(0), 1);
         assert_eq!(b.server_slots(1), 1);
         assert_eq!(b.holds_of(9), 2);
+        assert_eq!(b.holders_on_server(0), vec![9]);
+        assert_eq!(b.holders_on_server(1), vec![9]);
         let freed = b.release_all(9);
         assert_eq!(freed, vec![1, 5]);
         assert_eq!(b.total(), 0);

@@ -57,10 +57,14 @@ pub enum RejectReason {
     /// The (estimated) demand does not fit the free memory — device-level,
     /// MIG-instance-level, or the fit revalidation of a gang's own hold.
     NoFit = 6,
+    /// Quarantined by an outstanding fault (DESIGN.md §15): the device or
+    /// its server is down. Checked before every other filter — even the
+    /// holder of a gang reservation must not dispatch onto dead hardware.
+    Unhealthy = 7,
 }
 
 impl RejectReason {
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
     pub const ALL: [RejectReason; RejectReason::COUNT] = [
         RejectReason::GangMig,
         RejectReason::PinnedOrHeld,
@@ -69,6 +73,7 @@ impl RejectReason {
         RejectReason::SmactCap,
         RejectReason::MinFree,
         RejectReason::NoFit,
+        RejectReason::Unhealthy,
     ];
 
     pub fn index(self) -> usize {
@@ -84,6 +89,7 @@ impl RejectReason {
             RejectReason::SmactCap => "smact_cap",
             RejectReason::MinFree => "min_free",
             RejectReason::NoFit => "no_fit",
+            RejectReason::Unhealthy => "unhealthy",
         }
     }
 }
@@ -122,6 +128,13 @@ pub fn classify(
     pre: Preconditions,
     who: Requester,
 ) -> Option<RejectReason> {
+    // health first: a quarantined device is not a target for ANYONE —
+    // not even the gang holding a reservation on it (the hold is being
+    // invalidated by the fault path; racing a dispatch onto it would
+    // commit work to hardware that just died)
+    if v.unhealthy {
+        return Some(RejectReason::Unhealthy);
+    }
     let fits = req.demand_gb.is_none_or(|d| d <= v.free_gb + FIT_SLACK_GB);
     if let Requester::Gang { book, task } = who {
         if book.holder(v.id) == Some(task) {
@@ -189,6 +202,7 @@ mod tests {
             n_tasks: n,
             pinned: false,
             held: false,
+            unhealthy: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
@@ -316,6 +330,33 @@ mod tests {
         );
         let ok = view(6, 10.0, 0.5, 1);
         assert_eq!(classify(&ok, req(1, Some(8.0), false), pre, Requester::Singleton), None);
+    }
+
+    #[test]
+    fn unhealthy_beats_every_other_filter() {
+        use crate::cluster::topology::ClusterTopology;
+        use crate::config::schema::ClusterConfig;
+        // an otherwise perfect device is cut by health alone
+        let mut down = view(0, 40.0, 0.0, 0);
+        down.unhealthy = true;
+        assert_eq!(
+            classify(&down, req(1, Some(8.0), false), Preconditions::default(), Requester::Singleton),
+            Some(RejectReason::Unhealthy)
+        );
+        // even the gang HOLDING the device must not dispatch onto it
+        let topo = ClusterTopology::from_config(&ClusterConfig::homogeneous(1, 4, 40.0));
+        let mut book = ReservationBook::new(&topo);
+        book.hold(0, 7);
+        down.held = true;
+        assert_eq!(
+            classify(
+                &down,
+                req(4, Some(8.0), false),
+                Preconditions::default(),
+                Requester::Gang { book: &book, task: 7 }
+            ),
+            Some(RejectReason::Unhealthy)
+        );
     }
 
     #[test]

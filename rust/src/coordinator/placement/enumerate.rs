@@ -158,6 +158,7 @@ mod tests {
             n_tasks: n,
             pinned: false,
             held: false,
+            unhealthy: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,

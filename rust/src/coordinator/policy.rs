@@ -36,6 +36,10 @@ pub struct GpuView {
     /// must backfill *around* it, never onto it — otherwise continuous
     /// arrivals could erode the capacity the gang already accumulated.
     pub held: bool,
+    /// The device or its server is quarantined by an outstanding fault
+    /// (DESIGN.md §15): never a placement target until repaired. Checked
+    /// before every other eligibility filter.
+    pub unhealthy: bool,
     /// MIG: a free instance index if one exists (None when MIG off or full).
     pub mig_free_instance: Option<usize>,
     /// MIG: memory capacity of that free instance.
@@ -123,7 +127,7 @@ pub fn select_gpus(
 ///
 /// let gpu = |id, server, free_gb| GpuView {
 ///     id, server, free_gb,
-///     smact_window: 0.2, n_tasks: 1, pinned: false, held: false,
+///     smact_window: 0.2, n_tasks: 1, pinned: false, held: false, unhealthy: false,
 ///     mig_free_instance: None, mig_instance_mem_gb: 0.0, mig_enabled: false,
 /// };
 /// let servers = [
@@ -163,6 +167,7 @@ mod tests {
             n_tasks: n,
             pinned: false,
             held: false,
+            unhealthy: false,
             mig_free_instance: None,
             mig_instance_mem_gb: 0.0,
             mig_enabled: false,
@@ -346,6 +351,7 @@ mod tests {
             n_tasks: 1,
             pinned: true,
             held: false,
+            unhealthy: false,
             mig_free_instance: Some(1),
             mig_instance_mem_gb: 10.0,
             mig_enabled: true,
@@ -406,6 +412,7 @@ mod tests {
             n_tasks: 1,
             pinned: false,
             held: false,
+            unhealthy: false,
             mig_free_instance: Some(1),
             mig_instance_mem_gb: 10.0,
             mig_enabled: true,

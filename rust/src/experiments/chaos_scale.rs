@@ -1,0 +1,247 @@
+//! Chaos-scale study (DESIGN.md §15): goodput degradation under seeded
+//! fault injection.
+//!
+//! Fixed substrate (2 servers × 4 GPUs, MAGM+MPS+oracle, 64-task trace),
+//! the `mixed` fault profile swept over strike rates {0, 6, 30, 120} per
+//! hour at a fixed fault seed. One rate additionally sweeps coordinator
+//! shards {1, 4} × engine threads {1, 4} and byte-compares the results
+//! JSON — the §10 determinism guarantee extended over fault strikes,
+//! domain kills, health roll-backs and time-varying fabric costs.
+//!
+//! The study asserts the acceptance criteria:
+//!
+//! * conservation under every fault schedule: `completed + failed + shed
+//!   == offered` — a mid-run domain kill leaves no task non-terminal;
+//! * the zero-rate control reports a zeroed `resilience` section and
+//!   goodput 1.0 (fault machinery off ⇒ byte-preserved fault-free run);
+//! * within each shard count, engine threads never change the bytes.
+//!
+//! The per-rate summary (goodput vs offered rate, interruptions, MTTR,
+//! availability) is appended to the `BENCH_sim.json` ledger under
+//! `chaos_scale`; ci.sh fails if the section goes missing.
+
+use std::time::Instant;
+
+use crate::bench;
+use crate::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind};
+use crate::coordinator::carma::{run_trace, RunOutcome};
+use crate::estimators;
+use crate::util::json::{self, Json};
+use crate::workload::trace::trace_cluster;
+
+use super::common::{save_json, zoo, DEFAULT_SEED};
+
+pub const SERVERS: usize = 2;
+pub const GPUS_PER_SERVER: usize = 4;
+pub const TASKS: usize = 64;
+/// Fixed fault seed: the sweep varies the rate only, so rows stay
+/// comparable run-to-run and PR-to-PR.
+pub const FAULT_SEED: u64 = 7;
+const RATE_SWEEP: &[f64] = &[0.0, 6.0, 30.0, 120.0];
+/// The rate whose cell runs the shards × threads determinism grid.
+const GRID_RATE: f64 = 30.0;
+const SHARD_SWEEP: &[usize] = &[1, 4];
+const THREAD_SWEEP: &[usize] = &[1, 4];
+
+fn cfg(rate_per_hour: f64, shards: usize, threads: usize, artifacts_dir: &str) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.seed = DEFAULT_SEED;
+    c.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    c.faults.profile = if rate_per_hour > 0.0 {
+        FaultProfile::Mixed
+    } else {
+        FaultProfile::None
+    };
+    c.faults.rate_per_hour = rate_per_hour;
+    c.faults.seed = FAULT_SEED;
+    c.artifacts_dir = artifacts_dir.to_string();
+    c
+}
+
+struct Row {
+    rate_per_hour: f64,
+    shards: usize,
+    threads: usize,
+    out: RunOutcome,
+    wall_s: f64,
+}
+
+fn one_run(
+    rate_per_hour: f64,
+    shards: usize,
+    threads: usize,
+    artifacts_dir: &str,
+) -> Result<Row, String> {
+    let c = cfg(rate_per_hour, shards, threads, artifacts_dir);
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    let trace = trace_cluster(&zoo(), TASKS, SERVERS * GPUS_PER_SERVER, DEFAULT_SEED);
+    // threads stay OUT of the label: the label is embedded in the results
+    // JSON, and the thread sweep asserts that JSON is byte-identical
+    let label = format!("chaos@{rate_per_hour:.0}/h/{shards}-shard");
+    let t0 = Instant::now();
+    let out = run_trace(c, est, &trace, &label);
+    let wall_s = t0.elapsed().as_secs_f64();
+    // conservation under any fault schedule: every offered task terminal
+    let offered = out.recorder.offered();
+    let terminal = out.report.completed
+        + out.recorder.failed_total as usize
+        + out.recorder.shed_total as usize;
+    if terminal != offered {
+        return Err(format!(
+            "{label}: {terminal} terminal of {offered} offered — a fault \
+             schedule leaked non-terminal tasks"
+        ));
+    }
+    Ok(Row {
+        rate_per_hour,
+        shards,
+        threads,
+        out,
+        wall_s,
+    })
+}
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    let rates: &[f64] = if bench::smoke_mode() {
+        &RATE_SWEEP[..2]
+    } else {
+        RATE_SWEEP
+    };
+    println!(
+        "Chaos scale: {SERVERS}×{GPUS_PER_SERVER} GPUs, {TASKS} tasks, mixed faults, \
+         trace seed {DEFAULT_SEED}, fault seed {FAULT_SEED}\n\
+         (MAGM+MPS+oracle; strike-rate sweep {rates:?}/hour)\n"
+    );
+    println!(
+        "{:<18} {:>7} {:>8} {:>8} {:>7} {:>10} {:>8} {:>9} {:>8} {:>8}",
+        "rate/h", "shards", "threads", "strikes", "kills", "relaunches", "failed", "goodput", "avail", "wall(s)"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &rate in rates {
+        let row = one_run(rate, 1, 1, artifacts_dir)?;
+        print_row(&row);
+        let res = &row.out.report.resilience;
+        if rate == 0.0 {
+            // fault machinery off: the section must be present AND zeroed,
+            // and nothing may fail (the fault-free baseline is untouched)
+            if res.faults_gpu + res.faults_server + res.faults_link != 0 {
+                return Err("zero-rate control reported injected faults".into());
+            }
+            if (res.goodput - 1.0).abs() > 1e-12 {
+                return Err(format!(
+                    "zero-rate control goodput {} != 1.0 — the fault-free \
+                     baseline regressed",
+                    res.goodput
+                ));
+            }
+        } else if res.faults_gpu + res.faults_server + res.faults_link == 0 {
+            return Err(format!("rate {rate}/h injected no faults"));
+        }
+        rows.push(row);
+    }
+
+    // determinism grid at one rate: within each shard count the results
+    // JSON must be byte-identical at every engine thread count
+    for &shards in SHARD_SWEEP {
+        let mut json_bits: Option<String> = None;
+        for &threads in THREAD_SWEEP {
+            let row = one_run(GRID_RATE, shards, threads, artifacts_dir)?;
+            print_row(&row);
+            let j = row.out.report.to_json().to_string_pretty();
+            match &json_bits {
+                None => json_bits = Some(j),
+                Some(prev) => {
+                    if *prev != j {
+                        return Err(format!(
+                            "{shards} shards: {threads} engine threads changed \
+                             the fault-run results"
+                        ));
+                    }
+                }
+            }
+            rows.push(row);
+        }
+    }
+
+    let out_rows: Vec<Json> = rows
+        .iter()
+        .map(|row| {
+            let mut j = row.out.report.to_json();
+            j.set("fault_rate_per_hour", json::num(row.rate_per_hour));
+            j.set("shards", json::num(row.shards as f64));
+            j.set("threads", json::num(row.threads as f64));
+            j.set("events", json::num(row.out.events as f64));
+            j.set("wall_s", json::num(row.wall_s));
+            j
+        })
+        .collect();
+    save_json("chaos_scale", artifacts_dir, &json::arr(out_rows));
+
+    // perf-ledger rows: goodput degradation vs offered fault rate (the
+    // serial sweep cells; BENCH_sim.json accumulates across PRs)
+    let ledger: Vec<Json> = rows
+        .iter()
+        .filter(|r| r.shards == 1 && r.threads == 1)
+        .map(|r| {
+            let res = &r.out.report.resilience;
+            json::obj(vec![
+                ("fault_rate_per_hour", json::num(r.rate_per_hour)),
+                ("servers", json::num(SERVERS as f64)),
+                ("gpus_per_server", json::num(GPUS_PER_SERVER as f64)),
+                ("tasks", json::num(TASKS as f64)),
+                ("seed", json::num(DEFAULT_SEED as f64)),
+                ("fault_seed", json::num(FAULT_SEED as f64)),
+                (
+                    "strikes",
+                    json::num((res.faults_gpu + res.faults_server + res.faults_link) as f64),
+                ),
+                (
+                    "interruptions",
+                    json::num((res.interruptions_gpu + res.interruptions_server) as f64),
+                ),
+                ("relaunches", json::num(res.relaunches as f64)),
+                ("fault_failed", json::num(res.fault_failed as f64)),
+                ("mttr_s", json::num(res.mttr_s)),
+                ("availability", json::num(res.availability)),
+                ("goodput", json::num(res.goodput)),
+                ("events", json::num(r.out.events as f64)),
+                ("wall_s", json::num(r.wall_s)),
+            ])
+        })
+        .collect();
+    bench::save_bench_section("chaos_scale", ledger);
+
+    println!(
+        "\nReading: seeded chaos turns resilience into a measured quantity —\n\
+         goodput degrades with the offered fault rate while conservation\n\
+         (completed + failed + shed == offered) holds under every schedule,\n\
+         and the whole fault pipeline stays byte-deterministic at any\n\
+         shard/thread count."
+    );
+    Ok(())
+}
+
+fn print_row(row: &Row) {
+    let res = &row.out.report.resilience;
+    println!(
+        "{:<18} {:>7} {:>8} {:>8} {:>7} {:>10} {:>8} {:>9.3} {:>8.4} {:>8.2}",
+        format!("mixed@{:.0}/h", row.rate_per_hour),
+        row.shards,
+        row.threads,
+        res.faults_gpu + res.faults_server + res.faults_link,
+        res.interruptions_gpu + res.interruptions_server,
+        res.relaunches,
+        res.fault_failed,
+        res.goodput,
+        res.availability,
+        row.wall_s,
+    );
+}

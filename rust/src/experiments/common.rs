@@ -109,8 +109,9 @@ pub fn save_json(name: &str, artifacts_dir: &str, value: &Json) {
     let dir = format!("{artifacts_dir}/results");
     let _ = std::fs::create_dir_all(&dir);
     let path = format!("{dir}/{name}.json");
-    if std::fs::write(&path, value.to_string_pretty()).is_ok() {
-        println!("  -> {path}");
+    match std::fs::write(&path, value.to_string_pretty()) {
+        Ok(()) => println!("  -> {path}"),
+        Err(e) => eprintln!("  !! could not write {path}: {e}"),
     }
 }
 
@@ -124,8 +125,9 @@ pub fn save_csv(name: &str, artifacts_dir: &str, header: &str, rows: &[String]) 
         text.push_str(r);
         text.push('\n');
     }
-    if std::fs::write(&path, text).is_ok() {
-        println!("  -> {path}");
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("  -> {path}"),
+        Err(e) => eprintln!("  !! could not write {path}: {e}"),
     }
 }
 

@@ -4,6 +4,7 @@
 //! `carma repro <id>` and drops machine-readable output under
 //! `artifacts/results/` (DESIGN.md §4 maps ids to modules).
 
+pub mod chaos_scale; // beyond the paper: fault injection + goodput degradation (DESIGN.md §15)
 pub mod cluster_scale; // beyond the paper: N-server scaling sweep
 pub mod common;
 pub mod gang_scale; // beyond the paper: fabric-aware gang scheduling (DESIGN.md §11)
@@ -23,7 +24,7 @@ pub mod table5; // table5 + fig10
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
     "fig10", "table6", "fig11", "fig12", "table7", "cluster_scale", "shard_scale",
-    "gang_scale", "placement_scale", "service_scale", "obs_overhead",
+    "gang_scale", "placement_scale", "service_scale", "obs_overhead", "chaos_scale",
 ];
 
 /// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
@@ -51,6 +52,7 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
         "placement_scale" => placement_scale::run(artifacts_dir),
         "service_scale" => service_scale::run(artifacts_dir),
         "obs_overhead" => obs_overhead::run(artifacts_dir),
+        "chaos_scale" => chaos_scale::run(artifacts_dir),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

@@ -7,6 +7,7 @@
 //!             [--servers N] [--gpus-per-server G] [--power-cap W]
 //!             [--shards K] [--shard-assign round-robin|least-loaded|locality]
 //!             [--arrivals poisson|diurnal|burst] [--rate R] [--duration S]
+//!             [--faults none|gpu|server|link|mixed] [--fault-rate R] [--fault-seed N]
 //!             [--trace-out t.jsonl] [--explain-sample N] [--metrics-out m.prom]
 //!             [--profile] [--timeline on|sparse|off]
 //!             [--seed N] [--config carma.toml]
@@ -16,8 +17,8 @@
 
 use carma::cli;
 use carma::config::schema::{
-    ArrivalKind, CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, PolicyKind,
-    ServerConfig, ShardAssign, TimelineMode,
+    ArrivalKind, CarmaConfig, CollocationMode, EstimatorKind, FabricProfile, FaultProfile,
+    PolicyKind, ServerConfig, ShardAssign, TimelineMode,
 };
 use carma::coordinator::carma::{run_label, run_service, run_trace, RunOutcome};
 use carma::estimators;
@@ -32,6 +33,7 @@ const VALUE_OPTS: &[&str] = &[
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
     "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
     "arrivals", "rate", "duration", "queue-cap",
+    "faults", "fault-rate", "fault-seed",
     "trace-out", "explain-sample", "metrics-out", "timeline",
 ];
 
@@ -104,6 +106,12 @@ fn usage() {
          \x20                    queued work still drains to completion after it closes)\n\
          \x20 --queue-cap N      per-shard bounded queue depth; arrivals routed to a\n\
          \x20                    full shard are shed (default 16)\n\
+         \x20 --faults P         none|gpu|server|link|mixed: seeded fault injection —\n\
+         \x20                    device loss, server power loss, link degradation with\n\
+         \x20                    repair times; byte-deterministic at any shard/thread\n\
+         \x20                    count (default none; DESIGN.md §15)\n\
+         \x20 --fault-rate R     mean strikes per simulated hour (default 12)\n\
+         \x20 --fault-seed N     fault-schedule seed, independent of --seed (default 1)\n\
          \x20 --json             print the run report as JSON only (determinism diffing)\n\
          \x20 --trace-out PATH   stream one JSONL record per lifecycle commit to PATH\n\
          \x20                    (deterministic (time, seq) order — byte-identical at\n\
@@ -258,6 +266,17 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
     if let Some(c) = args.opt_u64("queue-cap").map_err(|e| e.to_string())? {
         // range (1..=1000000) is enforced by cfg.validate() below
         cfg.service.queue_cap = c as usize;
+    }
+    if let Some(f) = args.opt("faults") {
+        cfg.faults.profile = FaultProfile::parse(f)
+            .ok_or_else(|| format!("unknown fault profile '{f}' (none|gpu|server|link|mixed)"))?;
+    }
+    if let Some(r) = args.opt_f64("fault-rate").map_err(|e| e.to_string())? {
+        // range (0..=100000) is enforced by cfg.validate() below
+        cfg.faults.rate_per_hour = r;
+    }
+    if let Some(s) = args.opt_u64("fault-seed").map_err(|e| e.to_string())? {
+        cfg.faults.seed = s;
     }
     if let Some(p) = args.opt("trace-out") {
         cfg.obs.trace_out = if p.is_empty() { None } else { Some(p.to_string()) };
@@ -415,7 +434,10 @@ fn cmd_run_service(args: &cli::Args, cfg: CarmaConfig) -> Result<(), String> {
                     service mode streams its own arrivals)"
             .into());
     }
-    let kind = cfg.service.arrivals.expect("checked by caller");
+    let kind = cfg
+        .service
+        .arrivals
+        .ok_or("service mode needs --arrivals poisson|diurnal|burst")?;
     let est = estimators::build(cfg.estimator, &cfg.artifacts_dir)?;
     let label = format!("{}/{}", run_label(&cfg, est.name()), kind.name());
     let json_only = args.flag("json");

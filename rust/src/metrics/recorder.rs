@@ -24,6 +24,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::placement::{Explain, RejectReason};
 use crate::obs::{LogHistogram, Registry};
+use crate::sim::faults::FaultKind;
 use crate::sim::TaskId;
 
 /// One downsampled monitoring sample for one GPU (drives Fig. 12).
@@ -279,6 +280,27 @@ pub struct Recorder {
     pub jct: LogHistogram,
     /// Aggregated decision provenance (`placement_decisions` section).
     pub decisions: DecisionAgg,
+    /// Fault-injection counters (DESIGN.md §15) — plain running sums, so
+    /// they work identically in full and stream collection modes and feed
+    /// the report's always-present `resilience` section (all zero when
+    /// faults are off). Strikes indexed Gpu/Server/Link.
+    pub faults_injected: [u64; 3],
+    /// Resident tasks killed by a fault, indexed by the striking kind
+    /// (link faults kill nothing — index 2 stays zero by construction).
+    pub fault_interruptions: [u64; 3],
+    /// Fault-cause re-queues admitted back into the scheduler.
+    pub fault_relaunches: u64,
+    /// Tasks permanently failed because the per-cause relaunch budget ran
+    /// out (subset of `failed_total`).
+    pub fault_failed: u64,
+    /// Completed repairs and their summed outage time (MTTR numerator).
+    pub fault_repairs: u64,
+    pub repair_time_sum_s: f64,
+    /// GPU-seconds of quarantined capacity (availability denominator uses
+    /// `n_gpus × trace_total_s`).
+    pub downtime_gpu_s: f64,
+    /// Gang reservations invalidated because their server died.
+    pub holds_invalidated: u64,
     /// Stream mode on: per-task records live only while in flight.
     stream: bool,
     /// In-flight task records (stream mode only), keyed by task id — a
@@ -319,6 +341,14 @@ impl Recorder {
             queue_delay: LogHistogram::default(),
             jct: LogHistogram::default(),
             decisions: DecisionAgg::default(),
+            faults_injected: [0; 3],
+            fault_interruptions: [0; 3],
+            fault_relaunches: 0,
+            fault_failed: 0,
+            fault_repairs: 0,
+            repair_time_sum_s: 0.0,
+            downtime_gpu_s: 0.0,
+            holds_invalidated: 0,
             stream: false,
             live: BTreeMap::new(),
             agg: StreamAgg::default(),
@@ -536,6 +566,43 @@ impl Recorder {
         self.oom_total += 1;
     }
 
+    // -- fault / resilience hooks (DESIGN.md §15) ---------------------------
+
+    /// A scheduled fault struck.
+    pub fn on_fault(&mut self, kind: FaultKind) {
+        self.faults_injected[kind_index(kind)] += 1;
+    }
+
+    /// A resident task was killed by a `kind` fault.
+    pub fn on_fault_interruption(&mut self, kind: FaultKind) {
+        self.fault_interruptions[kind_index(kind)] += 1;
+    }
+
+    /// A fault-killed task was re-queued for another attempt.
+    pub fn on_fault_relaunch(&mut self) {
+        self.fault_relaunches += 1;
+    }
+
+    /// A fault-killed task exhausted its relaunch budget (the caller also
+    /// records the generic `on_failed`).
+    pub fn on_fault_failed(&mut self) {
+        self.fault_failed += 1;
+    }
+
+    /// A fault repaired after `downtime_s`, having quarantined
+    /// `gpu_seconds` of capacity (0 for link faults — degraded devices
+    /// keep serving).
+    pub fn on_fault_repair(&mut self, downtime_s: f64, gpu_seconds: f64) {
+        self.fault_repairs += 1;
+        self.repair_time_sum_s += downtime_s;
+        self.downtime_gpu_s += gpu_seconds;
+    }
+
+    /// Gang reservations invalidated because their server died.
+    pub fn on_holds_invalidated(&mut self, n: u64) {
+        self.holds_invalidated += n;
+    }
+
     /// Integrate one monitoring interval `dt` for GPU `gpu`.
     pub fn on_sample(
         &mut self,
@@ -694,6 +761,31 @@ impl Recorder {
             "Mean used GPU memory (GB per GPU) over the trace",
             self.mean_mem_used_gb(),
         );
+        reg.counter(
+            "carma_fault_strikes_total",
+            "Fault-injection strikes committed (all kinds)",
+            self.faults_injected.iter().sum::<u64>() as f64,
+        );
+        reg.counter(
+            "carma_fault_interruptions_total",
+            "Resident tasks killed by faults",
+            self.fault_interruptions.iter().sum::<u64>() as f64,
+        );
+        reg.counter(
+            "carma_fault_relaunches_total",
+            "Fault-cause re-queues admitted back into the scheduler",
+            self.fault_relaunches as f64,
+        );
+        reg.counter(
+            "carma_fault_repairs_total",
+            "Completed fault repairs",
+            self.fault_repairs as f64,
+        );
+        reg.counter(
+            "carma_fault_downtime_gpu_seconds_total",
+            "GPU-seconds of quarantined capacity",
+            self.downtime_gpu_s,
+        );
         reg.histogram(
             "carma_queue_delay_seconds",
             "Queueing delay (first dispatch - arrival)",
@@ -705,6 +797,15 @@ impl Recorder {
             &self.jct,
         );
         reg
+    }
+}
+
+/// Index of a fault kind in the per-kind counter arrays (Gpu/Server/Link).
+pub fn kind_index(kind: FaultKind) -> usize {
+    match kind {
+        FaultKind::Gpu => 0,
+        FaultKind::Server => 1,
+        FaultKind::Link => 2,
     }
 }
 
@@ -950,6 +1051,41 @@ mod tests {
         assert_eq!(st.agg.per_shard[0].tasks, 2);
         assert_eq!(st.agg.per_shard[1].tasks, 1);
         assert_eq!(st.queue_delay.count(), full.queue_delay.count());
+    }
+
+    #[test]
+    fn fault_counters_accumulate_by_kind() {
+        let mut r = Recorder::new(1, 4);
+        r.on_fault(FaultKind::Gpu);
+        r.on_fault(FaultKind::Gpu);
+        r.on_fault(FaultKind::Server);
+        r.on_fault(FaultKind::Link);
+        assert_eq!(r.faults_injected, [2, 1, 1]);
+        r.on_fault_interruption(FaultKind::Server);
+        r.on_fault_interruption(FaultKind::Server);
+        r.on_fault_interruption(FaultKind::Gpu);
+        assert_eq!(r.fault_interruptions, [1, 2, 0]);
+        r.on_fault_relaunch();
+        r.on_fault_relaunch();
+        r.on_fault_failed();
+        assert_eq!(r.fault_relaunches, 2);
+        assert_eq!(r.fault_failed, 1);
+        r.on_fault_repair(300.0, 300.0);
+        r.on_fault_repair(100.0, 400.0); // server fault: 4 GPUs down
+        assert_eq!(r.fault_repairs, 2);
+        assert!((r.repair_time_sum_s - 400.0).abs() < 1e-12);
+        assert!((r.downtime_gpu_s - 700.0).abs() < 1e-12);
+        r.on_holds_invalidated(3);
+        assert_eq!(r.holds_invalidated, 3);
+        let text = r.registry().render();
+        for series in [
+            "carma_fault_strikes_total 4",
+            "carma_fault_interruptions_total 3",
+            "carma_fault_relaunches_total 2",
+            "carma_fault_repairs_total 2",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
     }
 
     #[test]

@@ -114,6 +114,37 @@ pub struct ServiceStat {
     pub win_mem_peak_gb: f64,
 }
 
+/// Fault-injection and recovery counters (DESIGN.md §15). Always present
+/// — all zeros (availability 1.0) when faults are off — so results JSON
+/// stays byte-diffable across configurations of the same binary.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceStat {
+    /// Fault strikes committed, by kind.
+    pub faults_gpu: u64,
+    pub faults_server: u64,
+    pub faults_link: u64,
+    /// Resident tasks killed, by the striking fault's kind (link faults
+    /// degrade but never kill).
+    pub interruptions_gpu: u64,
+    pub interruptions_server: u64,
+    /// Fault-cause re-queues admitted back into the scheduler.
+    pub relaunches: u64,
+    /// Tasks permanently failed on an exhausted relaunch budget.
+    pub fault_failed: u64,
+    /// Completed repairs and their mean outage (MTTR).
+    pub repairs: u64,
+    pub mttr_s: f64,
+    /// GPU-seconds of quarantined capacity over the run.
+    pub downtime_gpu_s: f64,
+    /// 1 − downtime / (GPUs × trace length): fraction of capacity-time
+    /// that stayed placeable. Exactly 1.0 without faults.
+    pub availability: f64,
+    /// completed / offered — the survival headline under chaos.
+    pub goodput: f64,
+    /// Gang reservations invalidated because their server died.
+    pub holds_invalidated: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub label: String,
@@ -141,6 +172,9 @@ pub struct RunReport {
     /// the eligibility-filter census summed over every committed singleton
     /// mapping decision. Always present, zeros when nothing was decided.
     pub decisions: DecisionAgg,
+    /// Fault-injection and recovery counters (DESIGN.md §15): zeros with
+    /// availability 1.0 when faults are off.
+    pub resilience: ResilienceStat,
 }
 
 impl RunReport {
@@ -162,6 +196,7 @@ impl RunReport {
             placement: placement_stats(r),
             service: service_stats(r),
             decisions: r.decisions.clone(),
+            resilience: resilience_stats(r),
         }
     }
 
@@ -246,6 +281,30 @@ impl RunReport {
             ("win_mem_mean_gb", json::num(self.service.win_mem_mean_gb)),
             ("win_mem_peak_gb", json::num(self.service.win_mem_peak_gb)),
         ]);
+        let resilience = json::obj(vec![
+            ("faults_gpu", json::num(self.resilience.faults_gpu as f64)),
+            ("faults_server", json::num(self.resilience.faults_server as f64)),
+            ("faults_link", json::num(self.resilience.faults_link as f64)),
+            (
+                "interruptions_gpu",
+                json::num(self.resilience.interruptions_gpu as f64),
+            ),
+            (
+                "interruptions_server",
+                json::num(self.resilience.interruptions_server as f64),
+            ),
+            ("relaunches", json::num(self.resilience.relaunches as f64)),
+            ("fault_failed", json::num(self.resilience.fault_failed as f64)),
+            ("repairs", json::num(self.resilience.repairs as f64)),
+            ("mttr_s", json::num(self.resilience.mttr_s)),
+            ("downtime_gpu_s", json::num(self.resilience.downtime_gpu_s)),
+            ("availability", json::num(self.resilience.availability)),
+            ("goodput", json::num(self.resilience.goodput)),
+            (
+                "holds_invalidated",
+                json::num(self.resilience.holds_invalidated as f64),
+            ),
+        ]);
         let rejects = json::obj(
             RejectReason::ALL
                 .iter()
@@ -286,7 +345,43 @@ impl RunReport {
             ("placement", placement),
             ("placement_decisions", decisions),
             ("service", service),
+            ("resilience", resilience),
         ])
+    }
+}
+
+/// Aggregate the recorder's fault counters (DESIGN.md §15). Plain running
+/// sums in both collection modes; availability defaults to 1.0 on an empty
+/// trace (no time elapsed = nothing was lost).
+fn resilience_stats(r: &Recorder) -> ResilienceStat {
+    let offered = r.offered();
+    let capacity_s = r.energy_j.len() as f64 * r.trace_total_s();
+    ResilienceStat {
+        faults_gpu: r.faults_injected[0],
+        faults_server: r.faults_injected[1],
+        faults_link: r.faults_injected[2],
+        interruptions_gpu: r.fault_interruptions[0],
+        interruptions_server: r.fault_interruptions[1],
+        relaunches: r.fault_relaunches,
+        fault_failed: r.fault_failed,
+        repairs: r.fault_repairs,
+        mttr_s: if r.fault_repairs == 0 {
+            0.0
+        } else {
+            r.repair_time_sum_s / r.fault_repairs as f64
+        },
+        downtime_gpu_s: r.downtime_gpu_s,
+        availability: if capacity_s <= 0.0 {
+            1.0
+        } else {
+            (1.0 - r.downtime_gpu_s / capacity_s).max(0.0)
+        },
+        goodput: if offered == 0 {
+            0.0
+        } else {
+            r.completed_count() as f64 / offered as f64
+        },
+        holds_invalidated: r.holds_invalidated,
     }
 }
 
@@ -715,6 +810,51 @@ mod tests {
         assert_eq!(rs.per_shard[0].decisions, rf.per_shard[0].decisions);
         assert!((rs.avg_jct_min - rf.avg_jct_min).abs() < 1e-9);
         assert!((rs.gang.mean_wait_min - rf.gang.mean_wait_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resilience_section_always_present_and_zeroed_without_faults() {
+        use crate::sim::faults::FaultKind;
+        // fault-free run: section exists, zeros, availability exactly 1.0
+        let mut r = Recorder::new(1, 2);
+        r.on_arrival(0, 0.0);
+        r.on_dispatch(0, 10.0);
+        r.on_completion(0, 110.0);
+        let rep = RunReport::from_recorder("t", &r);
+        assert_eq!(rep.resilience.faults_gpu, 0);
+        assert_eq!(rep.resilience.availability, 1.0);
+        assert_eq!(rep.resilience.goodput, 1.0);
+        let j = rep.to_json();
+        let res = j.get("resilience").expect("resilience section always present");
+        assert_eq!(res.f64_of("relaunches"), 0.0);
+        assert_eq!(res.f64_of("availability"), 1.0);
+        // chaos run: counters flow through, MTTR and availability derive
+        let mut c = Recorder::new(2, 2);
+        c.on_arrival(0, 0.0);
+        c.on_dispatch(0, 10.0);
+        c.on_completion(0, 100.0); // trace 100 s × 2 GPUs = 200 GPU-s
+        c.on_arrival(1, 5.0);
+        c.on_fault(FaultKind::Gpu);
+        c.on_fault_interruption(FaultKind::Gpu);
+        c.on_fault_relaunch();
+        c.on_fault_repair(40.0, 40.0);
+        c.on_fault(FaultKind::Server);
+        c.on_fault_failed();
+        c.on_failed(1);
+        c.on_holds_invalidated(2);
+        let crep = RunReport::from_recorder("c", &c);
+        assert_eq!(crep.resilience.faults_gpu, 1);
+        assert_eq!(crep.resilience.faults_server, 1);
+        assert_eq!(crep.resilience.interruptions_gpu, 1);
+        assert_eq!(crep.resilience.relaunches, 1);
+        assert_eq!(crep.resilience.fault_failed, 1);
+        assert_eq!(crep.resilience.repairs, 1);
+        assert!((crep.resilience.mttr_s - 40.0).abs() < 1e-12);
+        assert!((crep.resilience.availability - 0.8).abs() < 1e-12);
+        assert!((crep.resilience.goodput - 0.5).abs() < 1e-12);
+        assert_eq!(crep.resilience.holds_invalidated, 2);
+        let cj = crep.to_json();
+        assert_eq!(cj.get("resilience").unwrap().f64_of("faults_gpu"), 1.0);
     }
 
     #[test]

@@ -57,6 +57,14 @@ pub enum Event {
     /// which keeps the arrival stream byte-identical at any shard or
     /// thread count.
     ServiceArrival,
+    /// Fault injection (DESIGN.md §15): the indexed entry of the run's
+    /// precomputed fault schedule strikes now. The payload is an index
+    /// into the coordinator-held `Vec<FaultRecord>` (the `ServiceArrival`
+    /// pattern: the coordinator owns the payload so the event stays `Eq`).
+    FaultStrike(usize),
+    /// The indexed fault's repair completes now; health states roll back
+    /// and quarantined capacity returns to the placement filter.
+    FaultRepair(usize),
 }
 
 #[derive(Debug)]

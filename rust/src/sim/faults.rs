@@ -1,0 +1,193 @@
+//! Deterministic fault-injection schedules (DESIGN.md §15).
+//!
+//! A fault schedule is a *pure function* of `(profile, rate, duration,
+//! seed, cluster shape)`: strikes arrive as a seeded Poisson process over
+//! the injection window, each strike picks a fault kind per the profile, a
+//! uniform target, and an exponential repair time — all from one private
+//! RNG stream, so the schedule never depends on scheduler state, shard
+//! count or thread count. The driver materializes the whole schedule up
+//! front and enqueues every strike and repair as ordinary `(time, seq)`
+//! engine events on the global lane, which is what keeps fault runs
+//! byte-identical at any parallelism (the same argument as the open-loop
+//! arrival generator, DESIGN.md §13).
+
+use crate::config::schema::{FaultProfile, FaultsConfig};
+use crate::util::rng::Rng;
+
+/// What failed. `Gpu` is an XID-style single-device loss, `Server` a power
+/// loss killing every resident task on the box, `Link` a NIC/interconnect
+/// degradation (no kills — running work slows, placement keeps working).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Gpu,
+    Server,
+    Link,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Gpu => "gpu",
+            FaultKind::Server => "server",
+            FaultKind::Link => "link",
+        }
+    }
+}
+
+/// One scheduled fault: strike and repair instants plus the target —
+/// a global GPU id for [`FaultKind::Gpu`], a server id otherwise.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub kind: FaultKind,
+    pub target: usize,
+    pub t_strike: f64,
+    pub t_repair: f64,
+}
+
+impl FaultRecord {
+    pub fn downtime_s(&self) -> f64 {
+        self.t_repair - self.t_strike
+    }
+}
+
+/// Repair times are exponential around the configured means but never
+/// instantaneous — a zero-length outage would be invisible to every
+/// counter while still churning the event queue.
+const MIN_REPAIR_S: f64 = 1.0;
+
+/// Generate the full fault schedule for a run. Pure: two calls with equal
+/// arguments return byte-identical schedules. Strikes are sorted by time
+/// (the Poisson clock is cumulative); an empty profile or zero rate yields
+/// an empty schedule.
+pub fn generate(cfg: &FaultsConfig, n_gpus: usize, n_servers: usize) -> Vec<FaultRecord> {
+    if cfg.profile == FaultProfile::None || cfg.rate_per_hour <= 0.0 || n_gpus == 0 {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xFA_017_0B5E);
+    let mean_gap_s = 3600.0 / cfg.rate_per_hour;
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(mean_gap_s);
+        if t > cfg.duration_s {
+            break;
+        }
+        let kind = match cfg.profile {
+            FaultProfile::None => unreachable!("filtered above"),
+            FaultProfile::Gpu => FaultKind::Gpu,
+            FaultProfile::Server => FaultKind::Server,
+            FaultProfile::Link => FaultKind::Link,
+            // mixed: device loss dominates real incident logs (Jeon et
+            // al.); whole-box and fabric outages split the remainder
+            FaultProfile::Mixed => {
+                let u = rng.f64();
+                if u < 0.5 {
+                    FaultKind::Gpu
+                } else if u < 0.75 {
+                    FaultKind::Server
+                } else {
+                    FaultKind::Link
+                }
+            }
+        };
+        let (target, mean_repair_s) = match kind {
+            FaultKind::Gpu => (rng.range_usize(0, n_gpus), cfg.gpu_repair_s),
+            FaultKind::Server => (rng.range_usize(0, n_servers), cfg.server_repair_s),
+            FaultKind::Link => (rng.range_usize(0, n_servers), cfg.link_repair_s),
+        };
+        let repair = rng.exponential(mean_repair_s).max(MIN_REPAIR_S);
+        out.push(FaultRecord {
+            kind,
+            target,
+            t_strike: t,
+            t_repair: t + repair,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(profile: FaultProfile, rate: f64, seed: u64) -> FaultsConfig {
+        FaultsConfig {
+            profile,
+            rate_per_hour: rate,
+            seed,
+            ..FaultsConfig::default()
+        }
+    }
+
+    #[test]
+    fn pure_function_of_seed() {
+        let c = cfg(FaultProfile::Mixed, 60.0, 7);
+        let a = generate(&c, 16, 4);
+        let b = generate(&c, 16, 4);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.target, y.target);
+            assert_eq!(x.t_strike.to_bits(), y.t_strike.to_bits());
+            assert_eq!(x.t_repair.to_bits(), y.t_repair.to_bits());
+        }
+        let c2 = cfg(FaultProfile::Mixed, 60.0, 8);
+        let other = generate(&c2, 16, 4);
+        assert_ne!(
+            a.iter().map(|r| r.t_strike.to_bits()).collect::<Vec<_>>(),
+            other.iter().map(|r| r.t_strike.to_bits()).collect::<Vec<_>>(),
+            "different seeds must draw different schedules"
+        );
+    }
+
+    #[test]
+    fn respects_window_targets_and_ordering() {
+        let mut c = cfg(FaultProfile::Mixed, 120.0, 3);
+        c.duration_s = 1800.0;
+        let sched = generate(&c, 8, 2);
+        assert!(!sched.is_empty());
+        let mut last = 0.0f64;
+        for r in &sched {
+            assert!(r.t_strike >= last, "strikes must be time-sorted");
+            assert!(r.t_strike <= c.duration_s, "strike outside the window");
+            assert!(r.t_repair > r.t_strike, "repair must follow the strike");
+            assert!(r.downtime_s() >= MIN_REPAIR_S);
+            match r.kind {
+                FaultKind::Gpu => assert!(r.target < 8),
+                FaultKind::Server | FaultKind::Link => assert!(r.target < 2),
+            }
+            last = r.t_strike;
+        }
+    }
+
+    #[test]
+    fn single_kind_profiles_only_emit_that_kind() {
+        for (profile, kind) in [
+            (FaultProfile::Gpu, FaultKind::Gpu),
+            (FaultProfile::Server, FaultKind::Server),
+            (FaultProfile::Link, FaultKind::Link),
+        ] {
+            let sched = generate(&cfg(profile, 60.0, 11), 8, 2);
+            assert!(!sched.is_empty());
+            assert!(sched.iter().all(|r| r.kind == kind), "{profile:?} leaked kinds");
+        }
+    }
+
+    #[test]
+    fn off_profile_and_zero_rate_are_empty() {
+        assert!(generate(&cfg(FaultProfile::None, 60.0, 1), 8, 2).is_empty());
+        assert!(generate(&cfg(FaultProfile::Mixed, 0.0, 1), 8, 2).is_empty());
+    }
+
+    #[test]
+    fn mixed_profile_covers_every_kind() {
+        let sched = generate(&cfg(FaultProfile::Mixed, 600.0, 5), 16, 4);
+        for kind in [FaultKind::Gpu, FaultKind::Server, FaultKind::Link] {
+            assert!(
+                sched.iter().any(|r| r.kind == kind),
+                "mixed schedule missing {kind:?}"
+            );
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! Stale completions are guarded by per-task versions.
 
 pub mod engine;
+pub mod faults;
 pub mod parallel;
 
 pub use engine::{Engine, Event, TaskId};

@@ -1,0 +1,257 @@
+//! Chaos integration invariants (DESIGN.md §15): seeded fault injection
+//! must preserve conservation (`completed + failed + shed == offered`)
+//! under every schedule, stay byte-deterministic at every shard/thread
+//! count, never dispatch work onto quarantined hardware, tear down gang
+//! reservations on dead servers, and keep gang placement all-or-nothing
+//! across member loss.
+
+use carma::config::schema::{
+    CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind,
+};
+use carma::coordinator::carma::{run_trace, RunOutcome};
+use carma::estimators;
+use carma::util::json::Json;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{trace_cluster, trace_gang};
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("carma_chaos_{}_{name}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+const SERVERS: usize = 2;
+const GPUS_PER_SERVER: usize = 4;
+
+fn chaos_cfg(profile: FaultProfile, rate: f64, fault_seed: u64) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    c.faults.profile = profile;
+    c.faults.rate_per_hour = rate;
+    c.faults.seed = fault_seed;
+    c
+}
+
+fn chaos_run(mut c: CarmaConfig, shards: usize, threads: usize, trace_out: Option<String>) -> RunOutcome {
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 48, SERVERS * GPUS_PER_SERVER, 11);
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    c.obs.trace_out = trace_out;
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    run_trace(c, est, &trace, "chaos")
+}
+
+/// `completed + failed + shed == offered` for a closed-loop run.
+fn assert_conservation(out: &RunOutcome, ctx: &str) {
+    let offered = out.recorder.offered();
+    let terminal = out.report.completed
+        + out.recorder.failed_total as usize
+        + out.recorder.shed_total as usize;
+    assert_eq!(
+        terminal, offered,
+        "{ctx}: {terminal} terminal of {offered} offered — a fault left tasks non-terminal"
+    );
+}
+
+#[test]
+fn conservation_holds_under_random_fault_schedules() {
+    // the core invariant, property-style: sweep fault seeds × profiles and
+    // assert every offered task reaches a terminal state under each
+    // schedule — kills mid-ramp, mid-run and mid-recovery included
+    for profile in [FaultProfile::Gpu, FaultProfile::Server, FaultProfile::Mixed] {
+        for fault_seed in [1u64, 2, 3] {
+            let out = chaos_run(chaos_cfg(profile, 45.0, fault_seed), 1, 1, None);
+            assert_conservation(&out, &format!("{profile:?}/seed{fault_seed}"));
+            let res = &out.report.resilience;
+            assert!(
+                res.faults_gpu + res.faults_server + res.faults_link > 0,
+                "{profile:?}/seed{fault_seed}: schedule must strike"
+            );
+        }
+    }
+}
+
+#[test]
+fn fault_runs_are_byte_identical_across_threads_and_shards() {
+    // the §10 guarantee extended over strikes, kills, health roll-backs
+    // and degraded fabric costs: at a FIXED shard count, engine threads
+    // change wall-clock only — results JSON AND trace bytes must match
+    for shards in [1usize, 4] {
+        let mut json_bits: Option<String> = None;
+        let mut trace_bits: Option<Vec<u8>> = None;
+        for threads in [1usize, 4] {
+            let path = tmp(&format!("det_{shards}s_{threads}t"));
+            let out = chaos_run(
+                chaos_cfg(FaultProfile::Mixed, 30.0, 5),
+                shards,
+                threads,
+                Some(path.clone()),
+            );
+            let b = std::fs::read(&path).expect("trace file written");
+            let _ = std::fs::remove_file(&path);
+            assert_conservation(&out, &format!("{shards}s/{threads}t"));
+            let j = out.report.to_json().to_string_pretty();
+            match &json_bits {
+                None => json_bits = Some(j),
+                Some(prev) => assert_eq!(
+                    prev, &j,
+                    "{shards} shards: {threads} threads changed the fault-run JSON"
+                ),
+            }
+            match &trace_bits {
+                None => trace_bits = Some(b),
+                Some(prev) => assert_eq!(
+                    prev, &b,
+                    "{shards} shards: {threads} threads changed the fault-run trace bytes"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn server_kill_leaves_no_task_non_terminal_and_no_dispatch_on_dead_hardware() {
+    // replay the trace as a health state machine: `fault`/`repair` records
+    // roll per-GPU outage counters forward, and every `dispatch` commit in
+    // between must target only healthy devices — holds on a dead server
+    // are invalidated rather than converted into placements
+    let path = tmp("server_kill");
+    let out = chaos_run(
+        chaos_cfg(FaultProfile::Server, 40.0, 2),
+        1,
+        1,
+        Some(path.clone()),
+    );
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_conservation(&out, "server-kill");
+    assert!(out.report.resilience.faults_server > 0, "servers must fail");
+
+    let server_gpus =
+        |s: usize| -> Vec<usize> { (s * GPUS_PER_SERVER..(s + 1) * GPUS_PER_SERVER).collect() };
+    let mut outages = vec![0i64; SERVERS * GPUS_PER_SERVER];
+    let mut saw_dispatch_during_outage_window = false;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("trace line parses");
+        let ev = j.str_of("ev").to_string();
+        match ev.as_str() {
+            "fault" | "repair" => {
+                let kind = j.str_of("kind").to_string();
+                let target = j.f64_of("target") as usize;
+                let delta = if ev == "fault" { 1 } else { -1 };
+                match kind.as_str() {
+                    "gpu" => outages[target] += delta,
+                    "server" => {
+                        for g in server_gpus(target) {
+                            outages[g] += delta;
+                        }
+                    }
+                    _ => {} // link: degraded, still placeable
+                }
+            }
+            "dispatch" => {
+                if let Some(gpus) = j.get("gpus").and_then(|g| g.as_arr()) {
+                    for g in gpus {
+                        let g = g.as_f64().unwrap() as usize;
+                        assert!(
+                            outages[g] <= 0,
+                            "dispatch onto quarantined GPU {g}: {line}"
+                        );
+                    }
+                }
+                if outages.iter().any(|&o| o > 0) {
+                    saw_dispatch_during_outage_window = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    // the check above must have had teeth: some dispatch committed while
+    // part of the cluster was down (and correctly avoided it)
+    assert!(
+        saw_dispatch_during_outage_window,
+        "no dispatch ever overlapped an outage — the avoidance check never engaged"
+    );
+}
+
+#[test]
+fn gang_atomicity_survives_member_loss() {
+    // 8-GPU gangs spanning both servers under server faults: member loss
+    // kills the whole gang (one TaskRun spans all members), relaunch is
+    // all-or-nothing, and dead-server reservations dissolve instead of
+    // dispatching partially
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, 36, SERVERS * GPUS_PER_SERVER, 2 * GPUS_PER_SERVER, 3);
+    let mut c = chaos_cfg(FaultProfile::Server, 60.0, 4);
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    c.coordinator.shards = 2;
+    let out = run_trace(c, est, &trace, "chaos-gang");
+    assert_conservation(&out, "gang-chaos");
+    assert!(out.report.resilience.faults_server > 0, "servers must fail");
+    assert!(
+        out.report.resilience.interruptions_server > 0,
+        "a server loss must interrupt resident work"
+    );
+    assert_eq!(
+        out.report.gang.partial_dispatches, 0,
+        "all-or-nothing violated under faults"
+    );
+    assert!(out.report.gang.gangs > 0, "the trace must contain gangs");
+}
+
+#[test]
+fn resilience_section_is_present_and_zeroed_without_faults() {
+    let out = chaos_run(chaos_cfg(FaultProfile::None, 0.0, 1), 1, 1, None);
+    assert_conservation(&out, "fault-free");
+    let j = out.report.to_json();
+    let res = j.get("resilience").expect("resilience section always present");
+    for key in [
+        "faults_gpu",
+        "faults_server",
+        "faults_link",
+        "interruptions_gpu",
+        "interruptions_server",
+        "relaunches",
+        "fault_failed",
+        "repairs",
+        "mttr_s",
+        "downtime_gpu_s",
+        "holds_invalidated",
+    ] {
+        assert_eq!(
+            res.f64_of(key), 0.0,
+            "fault-free run must zero resilience.{key}"
+        );
+    }
+    assert_eq!(res.f64_of("availability"), 1.0);
+    assert_eq!(res.f64_of("goodput"), 1.0, "fault-free goodput is 1.0");
+}
+
+#[test]
+fn fault_free_bytes_match_a_build_without_fault_config() {
+    // flipping the profile to None must byte-preserve the run vs simply
+    // never touching [faults] at all — the degrade factor's 1.0 identity
+    // and the empty schedule make chaos support free when off
+    let a = chaos_run(chaos_cfg(FaultProfile::None, 12.0, 9), 2, 1, None);
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    let b = chaos_run(c, 2, 1, None);
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty(),
+        "profile=none must byte-match an untouched config"
+    );
+    assert_eq!(a.events, b.events);
+}

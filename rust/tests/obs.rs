@@ -5,7 +5,7 @@
 //! and the metric sketches honour their documented error bound.
 
 use carma::config::schema::{
-    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind, TimelineMode,
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind, TimelineMode,
 };
 use carma::coordinator::carma::{run_service, run_trace, RunOutcome};
 use carma::estimators;
@@ -118,6 +118,64 @@ fn oom_and_recovery_paths_are_traced() {
     assert!(out.report.oom_crashes > 0, "the blind run must OOM");
     assert!(text.contains("\"ev\":\"oom\""), "OOMs must be traced");
     assert!(text.contains("\"ev\":\"recovery\""), "recovery must be traced");
+}
+
+#[test]
+fn fault_records_interleave_with_the_lifecycle_in_commit_order() {
+    // DESIGN.md §15: strikes, detections, health transitions, relaunches
+    // and repairs are ordinary engine events — they appear in the ONE
+    // (t, seq) stream, interleaved with dispatches and completions, not
+    // in a side channel
+    let zoo = ModelZoo::load();
+    let trace = trace_cluster(&zoo, 64, 8, 13);
+    let path = tmp("faults");
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.coordinator.shards = 2;
+    c.faults.profile = FaultProfile::Mixed;
+    c.faults.rate_per_hour = 60.0;
+    c.faults.seed = 3;
+    c.obs.trace_out = Some(path.clone());
+    let est = estimators::build(c.estimator, "artifacts").unwrap();
+    let out = run_trace(c, est, &trace, "chaos-obs");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let res = &out.report.resilience;
+    assert!(res.faults_gpu + res.faults_server + res.faults_link > 0);
+    assert!(
+        res.interruptions_gpu + res.interruptions_server > 0,
+        "strikes at 60/h on a saturated cluster must kill residents"
+    );
+    for ev in [
+        "\"ev\":\"fault\"",
+        "\"ev\":\"quarantine\"",
+        "\"ev\":\"detect\"",
+        "\"ev\":\"relaunch\"",
+        "\"ev\":\"repair\"",
+        // the lifecycle keeps flowing around the chaos
+        "\"ev\":\"dispatch\"",
+        "\"ev\":\"complete\"",
+    ] {
+        assert!(text.contains(ev), "fault trace must contain {ev}");
+    }
+    // the interleaved stream stays in strict (t, seq) commit order
+    let mut last_t = f64::NEG_INFINITY;
+    let mut last_seq = -1i64;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every trace line parses as JSON");
+        let t = j.f64_of("t");
+        let seq = j.f64_of("seq") as i64;
+        assert!(seq > last_seq, "seq must strictly increase across fault records");
+        assert!(t >= last_t, "time must never go backward across fault records");
+        last_t = t;
+        last_seq = seq;
+    }
 }
 
 fn service_run(threads: usize, trace_out: Option<String>) -> RunOutcome {

@@ -393,6 +393,7 @@ fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
                 n_tasks: rng.range_usize(0, 4),
                 pinned: rng.bool(0.1),
                 held,
+                unhealthy: false,
                 mig_free_instance: if mig && rng.bool(0.7) {
                     Some(rng.range_usize(0, 2))
                 } else {
