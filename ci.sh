@@ -200,8 +200,32 @@ if ! printf '%s\n' "$Z" | grep -q '"resilience"'; then
     echo "CHAOS FAILURE: fault-free results JSON lost the resilience section" >&2
     exit 1
 fi
-rm -rf "$CHAOS_DIR"
 echo "chaos smoke OK: byte-identical fault run across threads, resilience section always present"
+
+step "trace-analyze smoke: replay the chaos traces, zero violations, byte-diff across threads"
+# the analyzer exits non-zero on any invariant violation (DESIGN.md §16)
+T1="$("$BIN" trace analyze "$CHAOS_DIR/c1.jsonl")"
+T4="$("$BIN" trace analyze "$CHAOS_DIR/c4.jsonl")"
+if [ "$T1" != "$T4" ]; then
+    echo "DETERMINISM FAILURE: analyzer summary diverged across the thread-grid traces" >&2
+    diff <(printf '%s\n' "$T1") <(printf '%s\n' "$T4") >&2 || true
+    exit 1
+fi
+if ! printf '%s\n' "$T1" | grep -q '"violations": \[\]'; then
+    echo "TRACE FAILURE: the engine's own chaos trace replayed with violations" >&2
+    printf '%s\n' "$T1" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$T1" | grep -q '"time_accounting"'; then
+    echo "TRACE FAILURE: analyzer summary lost the time_accounting section" >&2
+    exit 1
+fi
+"$BIN" trace schema | grep -q '"gang_dispatch"' || {
+    echo "TRACE FAILURE: trace schema lost the gang_dispatch record" >&2
+    exit 1
+}
+rm -rf "$CHAOS_DIR"
+echo "trace-analyze smoke OK: clean replay, byte-identical summary, schema published"
 
 step "perf ledger: bench smokes + scale repros write real BENCH_sim.json rows"
 # 1-iteration smokes measure real (if noisy) rows; they land in the repo-root
@@ -217,13 +241,15 @@ CARMA_BENCH_SMOKE=1 cargo bench --bench gang_scale
 CARMA_BENCH_SMOKE=1 "$BIN" repro obs_overhead
 # chaos ledger: goodput degradation vs offered fault rate (smoke = 2 rates)
 CARMA_BENCH_SMOKE=1 "$BIN" repro chaos_scale
-for SECTION in shard_scale placement_scale service_scale obs_overhead chaos_scale; do
+# trace-analyze ledger: clean replay + sketch reproduction over shed/chaos traces
+CARMA_BENCH_SMOKE=1 "$BIN" repro trace_analyze
+for SECTION in shard_scale placement_scale service_scale obs_overhead chaos_scale trace_analyze; do
     if ! grep -q "\"$SECTION\"" BENCH_sim.json; then
         echo "LEDGER FAILURE: BENCH_sim.json is missing the $SECTION section" >&2
         exit 1
     fi
 done
-echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale, obs_overhead and chaos_scale"
+echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale, obs_overhead, chaos_scale and trace_analyze"
 
 echo
 echo "CI green."

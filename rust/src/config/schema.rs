@@ -656,6 +656,11 @@ pub struct ObsConfig {
     /// `Some(path)` writes a Prometheus-style text exposition of final
     /// counters/gauges/sketches after the run.
     pub metrics_out: Option<String>,
+    /// `Some(path)` writes the recorder's windowed utilization series
+    /// (window_end_s, mean SMACT, mean mem GB per window) as CSV after the
+    /// run. Turns on utilization windowing in closed-loop runs; works in
+    /// `timeline = off` stream mode (the windows are O(windows) state).
+    pub timeseries_out: Option<String>,
     /// Per-phase wall-clock profiling of the engine driver. The profile is
     /// printed to stderr and never enters byte-compared artifacts.
     pub profile: bool,
@@ -669,6 +674,7 @@ impl Default for ObsConfig {
             trace_out: None,
             explain_sample: 0,
             metrics_out: None,
+            timeseries_out: None,
             profile: false,
             timeline: TimelineMode::Sparse,
         }
@@ -1012,6 +1018,9 @@ impl CarmaConfig {
         }
         if let Some(v) = doc.get("obs.metrics_out").and_then(|v| v.as_str()) {
             self.obs.metrics_out = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = doc.get("obs.timeseries_out").and_then(|v| v.as_str()) {
+            self.obs.timeseries_out = if v.is_empty() { None } else { Some(v.to_string()) };
         }
         if let Some(v) = doc.get("obs.profile") {
             self.obs.profile = v
@@ -1464,12 +1473,14 @@ mod tests {
         assert_eq!(c.obs.trace_out, None);
         assert_eq!(c.obs.explain_sample, 0);
         assert_eq!(c.obs.metrics_out, None);
+        assert_eq!(c.obs.timeseries_out, None);
         assert!(!c.obs.profile);
         assert_eq!(c.obs.timeline, TimelineMode::Sparse);
 
         let doc = toml::parse(
             "[obs]\ntrace_out = \"/tmp/t.jsonl\"\nexplain_sample = 100\n\
-             metrics_out = \"/tmp/m.prom\"\nprofile = true\ntimeline = \"off\"\n",
+             metrics_out = \"/tmp/m.prom\"\ntimeseries_out = \"/tmp/u.csv\"\n\
+             profile = true\ntimeline = \"off\"\n",
         )
         .unwrap();
         let mut c = CarmaConfig::default();
@@ -1477,14 +1488,19 @@ mod tests {
         assert_eq!(c.obs.trace_out.as_deref(), Some("/tmp/t.jsonl"));
         assert_eq!(c.obs.explain_sample, 100);
         assert_eq!(c.obs.metrics_out.as_deref(), Some("/tmp/m.prom"));
+        assert_eq!(c.obs.timeseries_out.as_deref(), Some("/tmp/u.csv"));
         assert!(c.obs.profile);
         assert_eq!(c.obs.timeline, TimelineMode::Off);
 
         // empty paths switch the sinks back off
-        let doc = toml::parse("[obs]\ntrace_out = \"\"\nmetrics_out = \"\"\n").unwrap();
+        let doc = toml::parse(
+            "[obs]\ntrace_out = \"\"\nmetrics_out = \"\"\ntimeseries_out = \"\"\n",
+        )
+        .unwrap();
         c.apply(&doc).unwrap();
         assert_eq!(c.obs.trace_out, None);
         assert_eq!(c.obs.metrics_out, None);
+        assert_eq!(c.obs.timeseries_out, None);
 
         // typo'd modes and negative sampling are config errors
         let doc = toml::parse("[obs]\ntimeline = \"dense\"\n").unwrap();

@@ -273,6 +273,11 @@ impl Carma {
             recorder.open_loop = true;
             recorder.util_window_s = cfg.monitor.window_s;
         }
+        // a requested time-series artifact turns on utilization windowing
+        // in closed-loop runs too (service mode already windows)
+        if cfg.obs.timeseries_out.is_some() && recorder.util_window_s == 0.0 {
+            recorder.util_window_s = cfg.monitor.window_s;
+        }
         // timeline retention (DESIGN.md §14): `on` keeps the seed's dense
         // stride, `sparse` keeps ~one point per monitoring window, `off`
         // keeps none. Open-loop runs with `off` additionally drop the
@@ -413,6 +418,30 @@ impl Carma {
     /// In open-loop service mode the trace is empty and arrivals stream in
     /// from the generator instead (DESIGN.md §13).
     pub fn run(mut self, label: &str) -> RunOutcome {
+        // run-start `meta` record: the cluster shape the replay engine
+        // needs to expand server-domain faults into GPU ids and to compute
+        // utilization denominators from the trace alone (DESIGN.md §16).
+        // Same shard count → same bytes; threads never appear in the trace.
+        if self.trace.is_some() {
+            let total = self.cluster.n_gpus();
+            let servers: Vec<Json> = self
+                .cluster
+                .topo
+                .servers
+                .iter()
+                .map(|s| json::num(s.cfg.n_gpus as f64))
+                .collect();
+            let shards = self.cfg.coordinator.shards;
+            let seed = self.cfg.seed;
+            self.trace_event("meta", || {
+                vec![
+                    ("gpus", json::num(total as f64)),
+                    ("servers", json::arr(servers)),
+                    ("shards", json::num(shards as f64)),
+                    ("seed", json::num(seed as f64)),
+                ]
+            });
+        }
         if self.intake_open {
             self.schedule_next_arrival();
         } else {
@@ -449,6 +478,24 @@ impl Carma {
         self.recorder.finalize();
         if let Some(t) = self.trace.as_mut() {
             t.flush();
+        }
+        // copy the sink's loss counter BEFORE the registry renders and the
+        // report reads the recorder — `obs.trace_dropped` and
+        // `carma_trace_dropped_total` must both see it
+        if let Some(t) = self.trace.as_ref() {
+            self.recorder.trace_dropped = t.dropped();
+        }
+        // the recorder's windowed utilization series as a first-class
+        // artifact (`--timeseries-out`): plain running state, so it works
+        // identically in stream (timeline = off) and full modes
+        if let Some(path) = self.cfg.obs.timeseries_out.as_deref() {
+            let mut text = String::from("window_end_s,smact,mem_gb\n");
+            for &(t, smact, mem) in &self.recorder.util_windows {
+                text.push_str(&format!("{t},{smact},{mem}\n"));
+            }
+            if let Err(e) = std::fs::write(path, text) {
+                eprintln!("carma: --timeseries-out {path}: {e}");
+            }
         }
         if let Some(path) = self.cfg.obs.metrics_out.as_deref() {
             if let Err(e) = std::fs::write(path, self.recorder.registry().render()) {
@@ -572,10 +619,14 @@ impl Carma {
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
         let gang = self.tasks[id].spec.gang;
+        let n_gpus = self.tasks[id].spec.n_gpus;
         self.trace_event("arrival", || {
             vec![
                 ("task", json::num(id as f64)),
                 ("gang", json::num(u64::from(gang) as f64)),
+                // requested width: lets replay check gang atomicity
+                // (dispatch width == request) from the trace alone
+                ("n_gpus", json::num(n_gpus as f64)),
             ]
         });
         if gang {
@@ -657,10 +708,12 @@ impl Carma {
         self.recorder.on_arrival(id, t);
         self.tasks[id].state = RunState::Queued;
         let gang = self.tasks[id].spec.gang;
+        let n_gpus = self.tasks[id].spec.n_gpus;
         self.trace_event("arrival", || {
             vec![
                 ("task", json::num(id as f64)),
                 ("gang", json::num(u64::from(gang) as f64)),
+                ("n_gpus", json::num(n_gpus as f64)),
             ]
         });
         if gang {
@@ -733,6 +786,11 @@ impl Carma {
         if let Some((id, _rec)) = self.admission.pop_next(shard) {
             self.mappers[shard].select(id);
             self.tasks[id].state = RunState::Selected;
+            // queue → observation-window boundary: the span reconstruction
+            // splits queueing delay from window wait on this record
+            self.trace_event("select", || {
+                vec![("task", json::num(id as f64)), ("shard", json::num(shard as f64))]
+            });
             // observe the GPUs for one window before deciding (paper §4.1)
             self.engine
                 .schedule_in_on(lane(shard), self.cfg.monitor.window_s, Event::WindowDone(id));
@@ -826,6 +884,9 @@ impl Carma {
         });
         self.mappers[shard].select(id);
         self.tasks[id].state = RunState::Selected;
+        self.trace_event("select", || {
+            vec![("task", json::num(id as f64)), ("shard", json::num(shard as f64))]
+        });
         self.engine
             .schedule_in_on(lane(shard), self.cfg.monitor.window_s, Event::WindowDone(id));
     }
@@ -850,6 +911,9 @@ impl Carma {
         if let Some((id, _rec)) = self.admission.pop_next_gang() {
             self.gang_lane.select(id);
             self.tasks[id].state = RunState::Selected;
+            self.trace_event("select", || {
+                vec![("task", json::num(id as f64)), ("lane", json::s("gang"))]
+            });
             self.engine
                 .schedule_in(self.cfg.monitor.window_s, Event::WindowDone(id));
         }
@@ -943,10 +1007,16 @@ impl Carma {
                 if !new_holds.is_empty() {
                     self.touch();
                     self.recorder.on_gang_holds(new_holds.len() as u64);
+                    let held: Vec<Json> =
+                        new_holds.iter().map(|&g| json::num(g as f64)).collect();
                     self.trace_event("gang_hold", || {
                         vec![
                             ("task", json::num(id as f64)),
                             ("holds", json::num(new_holds.len() as f64)),
+                            // the held device ids: replay tracks the
+                            // reservation set to prove no foreign dispatch
+                            // ever lands on a held GPU
+                            ("gpus", json::arr(held)),
                         ]
                     });
                     for &g in &new_holds {
@@ -1000,10 +1070,12 @@ impl Carma {
         if !freed.is_empty() {
             self.touch();
             self.recorder.on_gang_holds_expired(freed.len() as u64);
+            let freed_ids: Vec<Json> = freed.iter().map(|&g| json::num(g as f64)).collect();
             self.trace_event("gang_hold_expire", || {
                 vec![
                     ("task", json::num(id as f64)),
                     ("freed", json::num(freed.len() as f64)),
+                    ("gpus", json::arr(freed_ids)),
                 ]
             });
             // the released devices are fair game for waiting singletons
@@ -1595,10 +1667,12 @@ impl Carma {
             }
             self.touch();
             self.recorder.on_holds_invalidated(freed.len() as u64);
+            let freed_ids: Vec<Json> = freed.iter().map(|&g| json::num(g as f64)).collect();
             self.trace_event("holds_invalidated", || {
                 vec![
                     ("task", json::num(id as f64)),
                     ("freed", json::num(freed.len() as f64)),
+                    ("gpus", json::arr(freed_ids)),
                 ]
             });
             // the gang stays lane-active; its next attempt re-plans around

@@ -12,6 +12,7 @@ pub mod obs_overhead; // beyond the paper: observability tax gate (DESIGN.md §1
 pub mod placement_scale; // beyond the paper: island-aware singleton placement (DESIGN.md §12)
 pub mod service_scale; // beyond the paper: open-loop service mode + load shedding (DESIGN.md §13)
 pub mod shard_scale; // beyond the paper: sharded-coordinator sweep (DESIGN.md §9)
+pub mod trace_analyze; // beyond the paper: trace-native analysis gates (DESIGN.md §16)
 pub mod estimation; // fig1, fig2, fig6, table1, fig3, fig4
 pub mod fig12;
 pub mod fig8;
@@ -25,6 +26,7 @@ pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
     "fig10", "table6", "fig11", "fig12", "table7", "cluster_scale", "shard_scale",
     "gang_scale", "placement_scale", "service_scale", "obs_overhead", "chaos_scale",
+    "trace_analyze",
 ];
 
 /// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
@@ -53,6 +55,7 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
         "service_scale" => service_scale::run(artifacts_dir),
         "obs_overhead" => obs_overhead::run(artifacts_dir),
         "chaos_scale" => chaos_scale::run(artifacts_dir),
+        "trace_analyze" => trace_analyze::run(artifacts_dir),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

@@ -1,0 +1,283 @@
+//! Trace-analysis reproduction study (DESIGN.md §16): does `carma trace
+//! analyze` recover the run's own report from the trace bytes alone?
+//!
+//! Two arms, each a traced run followed by a cold re-read of the JSONL
+//! file through the replay/span/series pipeline:
+//!
+//! * **service** — open-loop Poisson arrivals over 4×4 GPUs with a tight
+//!   queue cap, so the trace carries sheds and queueing delay;
+//! * **chaos** — 64-task closed-loop trace under `mixed` faults, so the
+//!   trace carries OOM crashes, strikes, quarantines and relaunches.
+//!
+//! For each arm the study asserts the §16 acceptance criteria:
+//!
+//! * the replay engine finds **zero** invariant violations and no
+//!   non-terminal tasks in a trace the engine itself wrote;
+//! * replayed conservation counters (offered / completed / shed) equal
+//!   the report's exactly, and the analyzer re-derives the report's
+//!   queue-delay percentiles and mean JCT within the documented sketch
+//!   tolerance (6%, the same bound the recorder tests use);
+//! * every task's span decomposition sums to its end-to-end JCT exactly
+//!   (≤ 1 µs residual after the float-residual fold).
+//!
+//! The per-arm summary (plus the analyzer's records/sec, the cost of
+//! consuming a trace) is appended to the `BENCH_sim.json` ledger under
+//! `trace_analyze`; ci.sh fails if the section goes missing.
+
+use std::time::Instant;
+
+use crate::bench;
+use crate::config::schema::{
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind, TimelineMode,
+};
+use crate::coordinator::carma::{run_service, run_trace, RunOutcome};
+use crate::estimators;
+use crate::obs::replay::{self, Analysis};
+use crate::util::json::{self, Json};
+use crate::workload::trace::trace_cluster;
+
+use super::common::{save_json, zoo, DEFAULT_SEED};
+
+const SERVERS: usize = 4;
+const GPUS_PER_SERVER: usize = 4;
+const RATE_PER_MIN: f64 = 60.0;
+const QUEUE_CAP: usize = 4;
+const CHAOS_TASKS: usize = 64;
+const CHAOS_RATE_PER_HOUR: f64 = 30.0;
+const FAULT_SEED: u64 = 7;
+/// Relative tolerance for sketch-derived statistics — the log-bucket
+/// width bound the recorder's own tests assert.
+const SKETCH_TOL: f64 = 0.06;
+/// Absolute ceiling on |decomposition total − JCT| per task.
+const EXACT_EPS: f64 = 1e-6;
+const WINDOW_S: f64 = 60.0;
+
+fn within_tol(got: f64, want: f64) -> bool {
+    (got - want).abs() <= want.abs().max(got.abs()) * SKETCH_TOL + 1e-9
+}
+
+fn service_cfg(artifacts_dir: &str, duration_s: f64, trace_path: &str) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(SERVERS, GPUS_PER_SERVER, 40.0);
+    c.coordinator.shards = 4;
+    c.service.arrivals = Some(ArrivalKind::Poisson);
+    c.service.rate_per_min = RATE_PER_MIN;
+    c.service.duration_s = duration_s;
+    c.service.queue_cap = QUEUE_CAP;
+    c.service.seed = DEFAULT_SEED;
+    c.artifacts_dir = artifacts_dir.to_string();
+    // stream mode on purpose: the analyzer must work off the trace alone,
+    // with no materialized timeline to lean on
+    c.obs.timeline = TimelineMode::Off;
+    c.obs.trace_out = Some(trace_path.to_string());
+    c
+}
+
+fn chaos_cfg(artifacts_dir: &str, trace_path: &str) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.seed = DEFAULT_SEED;
+    c.cluster = ClusterConfig::homogeneous(2, GPUS_PER_SERVER, 40.0);
+    c.coordinator.shards = 2;
+    c.faults.profile = FaultProfile::Mixed;
+    c.faults.rate_per_hour = CHAOS_RATE_PER_HOUR;
+    c.faults.seed = FAULT_SEED;
+    c.artifacts_dir = artifacts_dir.to_string();
+    c.obs.timeline = TimelineMode::Off;
+    c.obs.trace_out = Some(trace_path.to_string());
+    c
+}
+
+/// Analyze a trace, check every §16 gate against the run that wrote it,
+/// and return the ledger row.
+fn check_arm(
+    arm: &str,
+    trace_path: &str,
+    out: &RunOutcome,
+) -> Result<Json, String> {
+    let t0 = Instant::now();
+    let a: Analysis = replay::analyze_file(trace_path, WINDOW_S)
+        .map_err(|e| format!("{arm}: cannot read {trace_path}: {e}"))?;
+    let analyze_wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let rep = &a.replay;
+
+    // 1. the engine's own trace must replay clean
+    if !rep.ok() {
+        let first = &rep.violations[0];
+        return Err(format!(
+            "{arm}: {} invariant violation(s); first at seq {}: {}",
+            rep.violations.len(),
+            first.seq,
+            first.what
+        ));
+    }
+    if rep.non_terminal != 0 {
+        return Err(format!("{arm}: {} task(s) never reached a terminal state", rep.non_terminal));
+    }
+    if rep.seq_gaps != 0 {
+        return Err(format!("{arm}: trace has {} sequence gap(s)", rep.seq_gaps));
+    }
+
+    // 2. conservation counters must equal the report's, exactly
+    let r = &out.report;
+    if rep.offered != r.service.offered as u64 {
+        return Err(format!(
+            "{arm}: replay offered {} != report {}",
+            rep.offered, r.service.offered
+        ));
+    }
+    if rep.completed != r.completed as u64 {
+        return Err(format!(
+            "{arm}: replay completed {} != report {}",
+            rep.completed, r.completed
+        ));
+    }
+    if rep.shed != r.service.shed {
+        return Err(format!("{arm}: replay shed {} != report {}", rep.shed, r.service.shed));
+    }
+
+    // 3. sketch reproduction: same histogram family over the same value
+    //    stream, so percentiles land within the bucket-width tolerance
+    let qd_pairs = [
+        ("queue_delay_p50_s", a.queue_delay.percentile(50.0), r.service.queue_delay_p50_s),
+        ("queue_delay_p99_s", a.queue_delay.percentile(99.0), r.service.queue_delay_p99_s),
+        ("queue_delay_p999_s", a.queue_delay.percentile(99.9), r.service.queue_delay_p999_s),
+    ];
+    for (key, got, want) in qd_pairs {
+        if !within_tol(got, want) {
+            return Err(format!(
+                "{arm}: analyzer {key} {got:.4} vs report {want:.4} — outside the \
+                 {:.0}% sketch tolerance",
+                SKETCH_TOL * 100.0
+            ));
+        }
+    }
+    if a.queue_delay.count() != out.recorder.queue_delay.count() {
+        return Err(format!(
+            "{arm}: analyzer saw {} queue-delay samples, recorder {}",
+            a.queue_delay.count(),
+            out.recorder.queue_delay.count()
+        ));
+    }
+    let jct_mean_want = out.recorder.avg_jct_s();
+    let jct_mean_got = a.jct.mean();
+    if a.jct.count() > 0 && !within_tol(jct_mean_got, jct_mean_want) {
+        return Err(format!(
+            "{arm}: analyzer mean JCT {jct_mean_got:.3}s vs report {jct_mean_want:.3}s"
+        ));
+    }
+
+    // 4. time accounting is exact: spans partition [arrival, terminal]
+    let mut max_residual = 0.0f64;
+    for t in &a.spans.tasks {
+        let residual = (t.decomposition.total_s() - t.jct_s()).abs();
+        max_residual = max_residual.max(residual);
+        if residual > EXACT_EPS {
+            return Err(format!(
+                "{arm}: task {} decomposition sums to {:.9}s but JCT is {:.9}s",
+                t.task,
+                t.decomposition.total_s(),
+                t.jct_s()
+            ));
+        }
+    }
+
+    let records_per_s = rep.records as f64 / analyze_wall_s;
+    println!(
+        "{:<9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>10} {:>12.0} {:>12.2e}",
+        arm,
+        rep.records,
+        rep.offered,
+        rep.completed,
+        rep.shed,
+        rep.dispatches_during_outage,
+        rep.violations.len(),
+        records_per_s,
+        max_residual,
+    );
+
+    Ok(json::obj(vec![
+        ("arm", json::s(arm)),
+        ("records", json::num(rep.records as f64)),
+        ("offered", json::num(rep.offered as f64)),
+        ("completed", json::num(rep.completed as f64)),
+        ("shed", json::num(rep.shed as f64)),
+        ("dispatches", json::num(rep.dispatches as f64)),
+        (
+            "dispatches_during_outage",
+            json::num(rep.dispatches_during_outage as f64),
+        ),
+        ("violations", json::num(rep.violations.len() as f64)),
+        ("queue_delay_p50_s", json::num(a.queue_delay.percentile(50.0))),
+        ("report_queue_delay_p50_s", json::num(r.service.queue_delay_p50_s)),
+        ("queue_delay_p99_s", json::num(a.queue_delay.percentile(99.0))),
+        ("report_queue_delay_p99_s", json::num(r.service.queue_delay_p99_s)),
+        ("jct_mean_s", json::num(jct_mean_got)),
+        ("report_jct_mean_s", json::num(jct_mean_want)),
+        ("max_decomposition_residual_s", json::num(max_residual)),
+        ("makespan_s", json::num(a.spans.makespan_s)),
+        ("critical_path_hops", json::num(a.spans.critical_path.len() as f64)),
+        ("series_points", json::num(a.series.points.len() as f64)),
+        ("analyze_records_per_s", json::num(records_per_s)),
+        ("analyze_wall_s", json::num(analyze_wall_s)),
+    ]))
+}
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    let smoke = bench::smoke_mode();
+    let duration_s = if smoke { 240.0 } else { 1200.0 };
+    let _ = std::fs::create_dir_all(format!("{artifacts_dir}/results"));
+    println!(
+        "Trace analysis: replay + spans + series over engine-written traces \
+         (sketch tolerance {:.0}%{})\n",
+        SKETCH_TOL * 100.0,
+        if smoke { ", smoke" } else { "" }
+    );
+    println!(
+        "{:<9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>10} {:>12} {:>12}",
+        "arm", "records", "offered", "completed", "shed", "outage", "violations",
+        "records/s", "residual"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // service arm: sheds + queueing delay under saturating Poisson load
+    let svc_trace = format!("{artifacts_dir}/results/trace_analyze_service.jsonl");
+    let c = service_cfg(artifacts_dir, duration_s, &svc_trace);
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    let svc_out = run_service(c, est, "trace-analyze-service");
+    rows.push(check_arm("service", &svc_trace, &svc_out)?);
+
+    // chaos arm: OOM crashes, fault strikes, quarantines, relaunches
+    let chaos_trace = format!("{artifacts_dir}/results/trace_analyze_chaos.jsonl");
+    let c = chaos_cfg(artifacts_dir, &chaos_trace);
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    let trace = trace_cluster(&zoo(), CHAOS_TASKS, 2 * GPUS_PER_SERVER, DEFAULT_SEED);
+    let chaos_out = run_trace(c, est, &trace, "trace-analyze-chaos");
+    let res = &chaos_out.report.resilience;
+    if res.faults_gpu + res.faults_server + res.faults_link == 0 {
+        return Err("chaos arm injected no faults — the fault-path coverage is gone".into());
+    }
+    rows.push(check_arm("chaos", &chaos_trace, &chaos_out)?);
+
+    save_json("trace_analyze", artifacts_dir, &json::arr(rows.clone()));
+    bench::save_bench_section("trace_analyze", rows);
+
+    println!(
+        "\nReading: the trace is a sufficient statistic for the run — replay\n\
+         proves the lifecycle/health/conservation invariants over every\n\
+         record, the span decomposition accounts for each task's JCT to\n\
+         within float residue, and the analyzer's sketches land on the\n\
+         report's percentiles without touching the recorder."
+    );
+    Ok(())
+}

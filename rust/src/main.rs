@@ -13,6 +13,8 @@
 //!             [--seed N] [--config carma.toml]
 //! carma submit <script.carma> [--config carma.toml]   (parse + map one task)
 //! carma zoo                                        (print the Table 3 zoo)
+//! carma trace analyze <t.jsonl> [--window S] [--out PATH] [--format csv|json]
+//! carma trace schema                               (print the record schema)
 //! ```
 
 use carma::cli;
@@ -24,6 +26,8 @@ use carma::coordinator::carma::{run_label, run_service, run_trace, RunOutcome};
 use carma::estimators;
 use carma::experiments;
 use carma::metrics::report::RunReport;
+use carma::obs::replay;
+use carma::util::json;
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::submission;
 use carma::workload::trace::{trace_60, trace_90, trace_cluster, trace_gang};
@@ -34,7 +38,8 @@ const VALUE_OPTS: &[&str] = &[
     "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
     "arrivals", "rate", "duration", "queue-cap",
     "faults", "fault-rate", "fault-seed",
-    "trace-out", "explain-sample", "metrics-out", "timeline",
+    "trace-out", "explain-sample", "metrics-out", "timeline", "timeseries-out",
+    "window", "out", "format",
 ];
 
 fn main() {
@@ -52,6 +57,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("submit") => cmd_submit(&args),
         Some("zoo") => cmd_zoo(),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             usage();
             Ok(())
@@ -70,7 +76,13 @@ fn usage() {
          USAGE:\n  carma repro <id|all> [--artifacts DIR]     regenerate a paper table/figure\n\
          \x20 carma run [options]                        run one configuration over a trace\n\
          \x20 carma submit <script> [--config FILE]      parse a submission script + map it\n\
-         \x20 carma zoo                                  print the Table 3 model zoo\n\n\
+         \x20 carma zoo                                  print the Table 3 model zoo\n\
+         \x20 carma trace analyze <t.jsonl>              replay a --trace-out file: check\n\
+         \x20   [--window S] [--out P] [--format csv|json]  every invariant, rebuild spans/\n\
+         \x20                                            JCT accounting/percentiles/series\n\
+         \x20                                            (exit 1 on any violation)\n\
+         \x20 carma trace schema                         print the machine-readable trace\n\
+         \x20                                            record schema (DESIGN.md §16)\n\n\
          RUN OPTIONS:\n  --trace 60|90|N    paper trace, or an N-task cluster-scaled trace\n\
          \x20                    (default: 60 on a single server, 8×GPUs tasks on a multi-server cluster)\n\
          \x20 --policy P         exclusive|rr|magm|lug|mug (default magm)\n\
@@ -120,6 +132,10 @@ fn usage() {
          \x20                    `decision` trace record with full provenance (0 = off)\n\
          \x20 --metrics-out PATH write final counters/sketches as a Prometheus-style\n\
          \x20                    text exposition after the run\n\
+         \x20 --timeseries-out PATH\n\
+         \x20                    write the recorder's windowed utilization series as\n\
+         \x20                    CSV (window_end_s,smact,mem_gb) — works in stream\n\
+         \x20                    mode (--timeline off) too\n\
          \x20 --profile          per-phase engine wall-clock profile + worker-pool\n\
          \x20                    occupancy, printed to stderr (never in results JSON)\n\
          \x20 --timeline M       on|sparse|off per-GPU timeline retention (default\n\
@@ -286,6 +302,9 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
     }
     if let Some(p) = args.opt("metrics-out") {
         cfg.obs.metrics_out = if p.is_empty() { None } else { Some(p.to_string()) };
+    }
+    if let Some(p) = args.opt("timeseries-out") {
+        cfg.obs.timeseries_out = if p.is_empty() { None } else { Some(p.to_string()) };
     }
     if args.flag("profile") {
         cfg.obs.profile = true;
@@ -523,6 +542,67 @@ fn cmd_submit(args: &cli::Args) -> Result<(), String> {
         spec.work_s / 60.0
     );
     Ok(())
+}
+
+/// `carma trace <analyze|schema>` — the consume side of `--trace-out`
+/// (DESIGN.md §16). `analyze` replays the trace through the invariant
+/// engine, reconstructs spans/JCT accounting/percentiles/series, prints a
+/// deterministic summary JSON, and exits non-zero if any invariant failed
+/// (CI gates on that). `schema` prints the machine-readable record schema.
+fn cmd_trace(args: &cli::Args) -> Result<(), String> {
+    const USAGE: &str =
+        "usage: carma trace analyze <trace.jsonl> [--window S] [--out PATH] \
+         [--format csv|json] | carma trace schema";
+    match args.positional.first().map(String::as_str) {
+        Some("schema") => {
+            println!("{}", replay::schema_json().to_string_pretty());
+            Ok(())
+        }
+        Some("analyze") => {
+            let path = args.positional.get(1).ok_or(USAGE)?;
+            let window = args
+                .opt_f64("window")
+                .map_err(|e| e.to_string())?
+                .unwrap_or(60.0);
+            if window <= 0.0 {
+                return Err("--window must be > 0".into());
+            }
+            let a = replay::analyze_file(path, window).map_err(|e| format!("{path}: {e}"))?;
+            println!("{}", a.to_json().to_string_pretty());
+            if let Some(out) = args.opt("out") {
+                let format = args.opt("format").unwrap_or("csv");
+                let text = match format {
+                    // csv: just the derived time series (plotting-ready)
+                    "csv" => a.series.to_csv(),
+                    // json: the full reconstruction — summary, every task's
+                    // spans + decomposition, and the windowed series
+                    "json" => {
+                        let full = json::obj(vec![
+                            ("summary", a.to_json()),
+                            (
+                                "tasks",
+                                json::arr(a.spans.tasks.iter().map(|t| t.to_json()).collect()),
+                            ),
+                            ("series", a.series.to_json()),
+                        ]);
+                        let mut s = full.to_string_pretty();
+                        s.push('\n');
+                        s
+                    }
+                    other => return Err(format!("unknown --format '{other}' (csv|json)")),
+                };
+                std::fs::write(out, text).map_err(|e| format!("{out}: {e}"))?;
+            }
+            let v = a.replay.violations.len();
+            if v > 0 {
+                return Err(format!(
+                    "trace failed {v} invariant check(s) — see `violations` in the summary"
+                ));
+            }
+            Ok(())
+        }
+        _ => Err(USAGE.into()),
+    }
 }
 
 fn cmd_zoo() -> Result<(), String> {

@@ -301,6 +301,10 @@ pub struct Recorder {
     pub downtime_gpu_s: f64,
     /// Gang reservations invalidated because their server died.
     pub holds_invalidated: u64,
+    /// Trace records lost to failed writes (copied off the sink post-run;
+    /// 0 when tracing is off or healthy). Surfaced in the report `obs`
+    /// section and as `carma_trace_dropped_total`.
+    pub trace_dropped: u64,
     /// Stream mode on: per-task records live only while in flight.
     stream: bool,
     /// In-flight task records (stream mode only), keyed by task id — a
@@ -349,6 +353,7 @@ impl Recorder {
             repair_time_sum_s: 0.0,
             downtime_gpu_s: 0.0,
             holds_invalidated: 0,
+            trace_dropped: 0,
             stream: false,
             live: BTreeMap::new(),
             agg: StreamAgg::default(),
@@ -785,6 +790,11 @@ impl Recorder {
             "carma_fault_downtime_gpu_seconds_total",
             "GPU-seconds of quarantined capacity",
             self.downtime_gpu_s,
+        );
+        reg.counter(
+            "carma_trace_dropped_total",
+            "Trace records lost to failed writes",
+            self.trace_dropped as f64,
         );
         reg.histogram(
             "carma_queue_delay_seconds",

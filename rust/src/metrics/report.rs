@@ -175,6 +175,10 @@ pub struct RunReport {
     /// Fault-injection and recovery counters (DESIGN.md §15): zeros with
     /// availability 1.0 when faults are off.
     pub resilience: ResilienceStat,
+    /// Trace records lost to failed writes (`obs` section) — 0 when
+    /// tracing is off or healthy, non-zero flags an incomplete trace file
+    /// that `carma trace analyze` would under-count.
+    pub trace_dropped: u64,
 }
 
 impl RunReport {
@@ -197,6 +201,7 @@ impl RunReport {
             service: service_stats(r),
             decisions: r.decisions.clone(),
             resilience: resilience_stats(r),
+            trace_dropped: r.trace_dropped,
         }
     }
 
@@ -346,6 +351,11 @@ impl RunReport {
             ("placement_decisions", decisions),
             ("service", service),
             ("resilience", resilience),
+            // always present, like every section: 0 = no trace or no loss
+            (
+                "obs",
+                json::obj(vec![("trace_dropped", json::num(self.trace_dropped as f64))]),
+            ),
         ])
     }
 }

@@ -20,15 +20,32 @@
 //!
 //! [`aggregate`] holds the one shared exact mean/percentile implementation
 //! (recorder + report + sketch reference tests all call it).
+//!
+//! The consume side (DESIGN.md §16) turns any `--trace-out` file back into
+//! verified structure, all behind `carma trace`:
+//!
+//! * [`replay`] — streaming invariant engine: re-runs the lifecycle state
+//!   machine from the trace and checks order, schema, health, gang
+//!   atomicity, hold exclusivity, and task conservation;
+//! * [`spans`] — per-task causal spans + exact-sum JCT decomposition and
+//!   the makespan critical-path walk;
+//! * [`timeseries`] — windowed queue-depth/throughput/utilization series
+//!   derived from the trace alone (CSV/JSON export).
 
 pub mod aggregate;
 pub mod profile;
 pub mod registry;
+pub mod replay;
 pub mod sketch;
+pub mod spans;
+pub mod timeseries;
 pub mod trace;
 
 pub use aggregate::{mean_of, percentile_exact};
 pub use profile::{Phase, Profiler};
 pub use registry::Registry;
+pub use replay::{analyze_file, analyze_str, replay_file, replay_str, Analysis, Replay, ReplayReport};
 pub use sketch::LogHistogram;
+pub use spans::{SpanBuilder, SpanReport, TaskSpans};
+pub use timeseries::{TimeSeries, TimeSeriesBuilder};
 pub use trace::TraceSink;

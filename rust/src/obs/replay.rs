@@ -1,0 +1,1116 @@
+//! Trace replay: a streaming invariant engine over the JSONL event trace
+//! (DESIGN.md §16). Re-executes the driver's lifecycle state machine from
+//! the trace alone and checks, record by record, what the scheduler
+//! promised at commit time:
+//!
+//! * **order** — `(t, seq)` strictly increasing, `seq` consecutive from 0
+//!   (the sink numbers records even when a write fails, so a gap is a
+//!   dropped record, not reordering);
+//! * **schema** — every record kind and field matches [`SCHEMA`] (also
+//!   printed by `carma trace schema`);
+//! * **lifecycle** — transitions follow
+//!   `arrival → select → dispatch → {complete | oom/detect → recovery → …}`;
+//!   no dispatch of an unselected task, no double terminal;
+//! * **health** — no dispatch lands on a GPU inside an active fault
+//!   (quarantined device or dead server), mirroring the eligibility
+//!   filter's `Unhealthy` reject;
+//! * **holds** — no dispatch lands on a GPU held by another task's gang
+//!   reservation (`PinnedOrHeld`), and holds are released exactly once;
+//! * **gang atomicity** — a gang dispatch binds exactly the requested
+//!   width, all at one commit;
+//! * **conservation** — every offered task is accounted for:
+//!   `completed + failed + shed + non_terminal == offered`.
+//!
+//! `tests/chaos.rs` and `tests/obs.rs` run their replay assertions through
+//! this module; `carma trace analyze` fails its exit status on any
+//! violation so CI can gate on a trace file.
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+
+use crate::obs::sketch::LogHistogram;
+use crate::obs::spans::{SpanBuilder, SpanReport};
+use crate::obs::timeseries::{TimeSeries, TimeSeriesBuilder};
+use crate::util::json::{self, Json};
+
+// -- machine-readable schema (satellite: `carma trace schema`) --------------
+
+/// JSON value shape of a trace-record field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    Num,
+    Str,
+    /// Array of GPU ids / per-server counts.
+    NumArr,
+    Obj,
+}
+
+impl FieldType {
+    pub fn name(self) -> &'static str {
+        match self {
+            FieldType::Num => "number",
+            FieldType::Str => "string",
+            FieldType::NumArr => "number[]",
+            FieldType::Obj => "object",
+        }
+    }
+
+    fn matches(self, v: &Json) -> bool {
+        match self {
+            FieldType::Num => v.as_f64().is_some(),
+            FieldType::Str => v.as_str().is_some(),
+            FieldType::NumArr => v
+                .as_arr()
+                .is_some_and(|a| a.iter().all(|e| e.as_f64().is_some())),
+            FieldType::Obj => v.as_obj().is_some(),
+        }
+    }
+}
+
+/// One field of a trace record kind.
+#[derive(Debug, Clone, Copy)]
+pub struct FieldSpec {
+    pub name: &'static str,
+    pub ty: FieldType,
+    pub required: bool,
+    pub doc: &'static str,
+}
+
+const fn req(name: &'static str, ty: FieldType, doc: &'static str) -> FieldSpec {
+    FieldSpec { name, ty, required: true, doc }
+}
+
+const fn opt(name: &'static str, ty: FieldType, doc: &'static str) -> FieldSpec {
+    FieldSpec { name, ty, required: false, doc }
+}
+
+/// One trace record kind.
+#[derive(Debug, Clone, Copy)]
+pub struct RecordSpec {
+    pub ev: &'static str,
+    pub doc: &'static str,
+    pub fields: &'static [FieldSpec],
+}
+
+/// Fields every record carries.
+pub const COMMON_FIELDS: &[FieldSpec] = &[
+    req("t", FieldType::Num, "sim time of the commit, seconds"),
+    req("seq", FieldType::Num, "trace sequence number, consecutive from 0"),
+    req("ev", FieldType::Str, "record kind"),
+];
+
+/// Every record kind the driver emits, in rough lifecycle order. The
+/// `validate_record` checks and `carma trace schema` output both read
+/// this table, so the printed schema is the enforced schema.
+pub const SCHEMA: &[RecordSpec] = &[
+    RecordSpec {
+        ev: "meta",
+        doc: "run header: cluster shape and run parameters (first record)",
+        fields: &[
+            req("gpus", FieldType::Num, "total GPU count"),
+            req("servers", FieldType::NumArr, "per-server GPU counts, server id order"),
+            req("shards", FieldType::Num, "coordinator shard count"),
+            req("seed", FieldType::Num, "run seed"),
+        ],
+    },
+    RecordSpec {
+        ev: "arrival",
+        doc: "task offered to the coordinator",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("gang", FieldType::Num, "1 = gang (multi-GPU all-or-nothing) task"),
+            req("n_gpus", FieldType::Num, "requested width"),
+        ],
+    },
+    RecordSpec {
+        ev: "route",
+        doc: "admission routed the task to a shard or the gang lane",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            opt("shard", FieldType::Num, "destination shard (singleton path)"),
+            opt("lane", FieldType::Str, "\"gang\" (gang path)"),
+        ],
+    },
+    RecordSpec {
+        ev: "select",
+        doc: "mapper/gang lane pulled the task for observation + mapping",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            opt("shard", FieldType::Num, "selecting shard (singleton path)"),
+            opt("lane", FieldType::Str, "\"gang\" (gang path)"),
+        ],
+    },
+    RecordSpec {
+        ev: "steal",
+        doc: "idle shard stole queued work from a loaded sibling",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("thief", FieldType::Num, "stealing shard"),
+            req("victim", FieldType::Num, "shard stolen from"),
+        ],
+    },
+    RecordSpec {
+        ev: "decision",
+        doc: "placement decision provenance (sampled; see obs.explain_sample)",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("shard", FieldType::Num, "deciding shard"),
+            req("outcome", FieldType::Str, "dispatch | defer | fail"),
+            req("servers_admitted", FieldType::Num, "servers past admission"),
+            req("servers_rejected", FieldType::Num, "servers filtered out"),
+            req("gpus_eligible", FieldType::Num, "GPUs past eligibility"),
+            req("candidates", FieldType::Num, "scored placements"),
+            opt("rejects", FieldType::Obj, "eligibility reject histogram"),
+            opt("winner", FieldType::Obj, "winning placement features"),
+        ],
+    },
+    RecordSpec {
+        ev: "shed",
+        doc: "load shedding dropped the task (open-loop service mode)",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("at_door", FieldType::Num, "1 = shed at admission, 0 = queue overflow"),
+        ],
+    },
+    RecordSpec {
+        ev: "gang_hold",
+        doc: "gang lane reserved a partial GPU set while assembling",
+        fields: &[
+            req("task", FieldType::Num, "holding gang task"),
+            req("holds", FieldType::Num, "GPUs newly held"),
+            req("gpus", FieldType::NumArr, "the held device ids"),
+        ],
+    },
+    RecordSpec {
+        ev: "gang_hold_expire",
+        doc: "hold lease lapsed; reserved devices released",
+        fields: &[
+            req("task", FieldType::Num, "holding gang task"),
+            req("freed", FieldType::Num, "GPUs released"),
+            req("gpus", FieldType::NumArr, "the released device ids"),
+        ],
+    },
+    RecordSpec {
+        ev: "holds_invalidated",
+        doc: "fault on held hardware voided the gang's reservations",
+        fields: &[
+            req("task", FieldType::Num, "holding gang task"),
+            req("freed", FieldType::Num, "GPUs released"),
+            req("gpus", FieldType::NumArr, "the released device ids"),
+        ],
+    },
+    RecordSpec {
+        ev: "gang_dispatch",
+        doc: "gang admitted atomically; holds convert to placement",
+        fields: &[
+            req("task", FieldType::Num, "gang task id"),
+            req("gpus", FieldType::Num, "bound width (count, not ids)"),
+            req("servers", FieldType::Num, "servers spanned"),
+            req("cost", FieldType::Num, "fabric cost of the placement"),
+        ],
+    },
+    RecordSpec {
+        ev: "dispatch",
+        doc: "task bound to devices and started (follows gang_dispatch for gangs)",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("gpus", FieldType::NumArr, "bound device ids"),
+        ],
+    },
+    RecordSpec {
+        ev: "oom",
+        doc: "collocation OOM crash; progress lost",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("crashes", FieldType::Num, "cumulative OOM count for the task"),
+        ],
+    },
+    RecordSpec {
+        ev: "detect",
+        doc: "failure-domain death detected for a running task",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("cause", FieldType::Str, "gpu | server | link"),
+        ],
+    },
+    RecordSpec {
+        ev: "recovery",
+        doc: "OOM backoff elapsed; task re-queued",
+        fields: &[req("task", FieldType::Num, "task id")],
+    },
+    RecordSpec {
+        ev: "relaunch",
+        doc: "fault backoff elapsed; task re-queued",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("cause", FieldType::Str, "gpu | server | link"),
+        ],
+    },
+    RecordSpec {
+        ev: "complete",
+        doc: "task finished its work",
+        fields: &[req("task", FieldType::Num, "task id")],
+    },
+    RecordSpec {
+        ev: "fail",
+        doc: "task permanently failed (retry budget / unschedulable)",
+        fields: &[
+            req("task", FieldType::Num, "task id"),
+            req("why", FieldType::Str, "failure reason"),
+        ],
+    },
+    RecordSpec {
+        ev: "quarantine",
+        doc: "health monitor flipped a domain's state",
+        fields: &[
+            req("domain", FieldType::Str, "gpu | server | link"),
+            req("target", FieldType::Num, "domain id"),
+            req("state", FieldType::Str, "quarantined | degraded"),
+        ],
+    },
+    RecordSpec {
+        ev: "fault",
+        doc: "injected fault struck",
+        fields: &[
+            req("kind", FieldType::Str, "gpu | server | link"),
+            req("target", FieldType::Num, "GPU id for gpu faults, server id otherwise"),
+            req("downtime_s", FieldType::Num, "scheduled outage length"),
+        ],
+    },
+    RecordSpec {
+        ev: "repair",
+        doc: "fault repaired; capacity restored",
+        fields: &[
+            req("kind", FieldType::Str, "gpu | server | link"),
+            req("target", FieldType::Num, "GPU id for gpu faults, server id otherwise"),
+        ],
+    },
+];
+
+/// Look up a record kind in [`SCHEMA`].
+pub fn record_spec(ev: &str) -> Option<&'static RecordSpec> {
+    SCHEMA.iter().find(|s| s.ev == ev)
+}
+
+/// The schema as JSON — `carma trace schema` prints this, and
+/// `tests/trace_analysis.rs` machine-checks every emitted record against
+/// it, so docs and enforcement cannot drift apart.
+pub fn schema_json() -> Json {
+    let field = |f: &FieldSpec| {
+        json::obj(vec![
+            ("name", json::s(f.name)),
+            ("type", json::s(f.ty.name())),
+            ("required", json::num(u64::from(f.required) as f64)),
+            ("doc", json::s(f.doc)),
+        ])
+    };
+    json::obj(vec![
+        ("common_fields", json::arr(COMMON_FIELDS.iter().map(field).collect())),
+        (
+            "records",
+            json::arr(
+                SCHEMA
+                    .iter()
+                    .map(|s| {
+                        json::obj(vec![
+                            ("ev", json::s(s.ev)),
+                            ("doc", json::s(s.doc)),
+                            ("fields", json::arr(s.fields.iter().map(field).collect())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Check one parsed record against [`SCHEMA`]. `Err` is a human-readable
+/// description of the first problem found.
+pub fn validate_record(rec: &Json) -> Result<(), String> {
+    for f in COMMON_FIELDS {
+        let Some(v) = rec.get(f.name) else {
+            return Err(format!("missing common field `{}`", f.name));
+        };
+        if !f.ty.matches(v) {
+            return Err(format!("common field `{}` is not a {}", f.name, f.ty.name()));
+        }
+    }
+    let ev = rec.get("ev").and_then(Json::as_str).unwrap_or("");
+    let Some(spec) = record_spec(ev) else {
+        return Err(format!("unknown record kind `{ev}`"));
+    };
+    for f in spec.fields {
+        match rec.get(f.name) {
+            Some(v) => {
+                if !f.ty.matches(v) {
+                    return Err(format!("`{ev}.{}` is not a {}", f.name, f.ty.name()));
+                }
+            }
+            None if f.required => return Err(format!("`{ev}` missing field `{}`", f.name)),
+            None => {}
+        }
+    }
+    // routing records name exactly one destination
+    if (ev == "route" || ev == "select")
+        && rec.get("shard").is_none() == rec.get("lane").is_none()
+    {
+        return Err(format!("`{ev}` needs exactly one of `shard` | `lane`"));
+    }
+    Ok(())
+}
+
+// -- the invariant engine ---------------------------------------------------
+
+/// One invariant violation, anchored to the offending record.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub seq: u64,
+    pub t_s: f64,
+    pub what: String,
+}
+
+impl Violation {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seq", json::num(self.seq as f64)),
+            ("t_s", json::num(self.t_s)),
+            ("what", json::s(&self.what)),
+        ])
+    }
+}
+
+/// What the replay proved (or disproved) about a trace.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// Records parsed (malformed lines still count — they also violate).
+    pub records: u64,
+    pub offered: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub dispatches: u64,
+    /// Dispatches committed while at least one injected fault was active —
+    /// the chaos tests' "teeth" check that the scheduler keeps working
+    /// around dead hardware instead of stalling.
+    pub dispatches_during_outage: u64,
+    /// Tasks not terminal when the trace ended (truncated trace, or a
+    /// stuck task — the caller decides which it is).
+    pub non_terminal: u64,
+    /// Trace sequence gaps observed (each gap is also a violation; the
+    /// count equals records the sink dropped on write failure).
+    pub seq_gaps: u64,
+    pub last_t_s: f64,
+    pub violations: Vec<Violation>,
+}
+
+impl ReplayReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// `completed + failed + shed` — terminal tasks, for conservation
+    /// against `offered`.
+    pub fn terminal(&self) -> u64 {
+        self.completed + self.failed + self.shed
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("records", json::num(self.records as f64)),
+            ("offered", json::num(self.offered as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("failed", json::num(self.failed as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("dispatches", json::num(self.dispatches as f64)),
+            (
+                "dispatches_during_outage",
+                json::num(self.dispatches_during_outage as f64),
+            ),
+            ("non_terminal", json::num(self.non_terminal as f64)),
+            ("seq_gaps", json::num(self.seq_gaps as f64)),
+            ("last_t_s", json::num(self.last_t_s)),
+            (
+                "violations",
+                json::arr(self.violations.iter().map(Violation::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Life {
+    Queued,
+    Selected,
+    Running,
+    Crashed,
+    Done,
+}
+
+impl Life {
+    fn name(self) -> &'static str {
+        match self {
+            Life::Queued => "queued",
+            Life::Selected => "selected",
+            Life::Running => "running",
+            Life::Crashed => "crashed",
+            Life::Done => "terminal",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct TaskRec {
+    life: Life,
+    gang: bool,
+    n_gpus: u64,
+    running_gpus: Vec<u64>,
+}
+
+/// Streaming replay: [`feed`](Replay::feed) every record in file order,
+/// then [`finish`](Replay::finish). Violations accumulate in the report;
+/// the engine keeps replaying after one (a single bad record should not
+/// hide the rest of the trace).
+#[derive(Debug, Default)]
+pub struct Replay {
+    /// Per-server first GPU id + width, from `meta` (global ids are
+    /// assigned contiguously in server order).
+    server_base: Vec<(u64, u64)>,
+    total_gpus: u64,
+    saw_meta: bool,
+    tasks: BTreeMap<u64, TaskRec>,
+    /// GPU id → holding gang task.
+    held: BTreeMap<u64, u64>,
+    /// GPU id → active outage count (gpu faults + expanded server faults).
+    down: BTreeMap<u64, u64>,
+    /// Active fault count per (kind, target) — link faults live here too.
+    faults: BTreeMap<(String, u64), u64>,
+    last: Option<(f64, u64)>,
+    next_seq: u64,
+    report: ReplayReport,
+}
+
+impl Replay {
+    pub fn new() -> Replay {
+        Replay::default()
+    }
+
+    fn violate(&mut self, t: f64, seq: u64, what: String) {
+        self.report.violations.push(Violation { seq, t_s: t, what });
+    }
+
+    fn server_gpus(&self, server: u64) -> std::ops::Range<u64> {
+        match self.server_base.get(server as usize) {
+            Some(&(base, n)) => base..base + n,
+            None => 0..0,
+        }
+    }
+
+    /// Feed one raw JSONL line (parse + validate + replay).
+    pub fn feed_line(&mut self, line: &str) {
+        let line = line.trim();
+        if line.is_empty() {
+            return;
+        }
+        match Json::parse(line) {
+            Ok(rec) => self.feed(&rec),
+            Err(e) => {
+                self.report.records += 1;
+                let (t, seq) = self.last.unwrap_or((0.0, 0));
+                self.violate(t, seq, format!("unparseable record: {e:?}"));
+            }
+        }
+    }
+
+    /// Feed one parsed record.
+    pub fn feed(&mut self, rec: &Json) {
+        self.report.records += 1;
+        let t = rec.get("t").and_then(Json::as_f64).unwrap_or(0.0);
+        let seq = rec.get("seq").and_then(Json::as_u64).unwrap_or(0);
+        if let Err(e) = validate_record(rec) {
+            self.violate(t, seq, format!("schema: {e}"));
+            return;
+        }
+        // order: (t, seq) strictly increasing, seq consecutive
+        if let Some((lt, lseq)) = self.last {
+            if t < lt || (t == lt && seq <= lseq) {
+                self.violate(
+                    t,
+                    seq,
+                    format!("order: (t={t}, seq={seq}) after (t={lt}, seq={lseq})"),
+                );
+            }
+        }
+        if seq != self.next_seq {
+            if seq > self.next_seq {
+                self.report.seq_gaps += seq - self.next_seq;
+                self.violate(
+                    t,
+                    seq,
+                    format!(
+                        "gap: expected seq {}, got {seq} ({} record(s) dropped)",
+                        self.next_seq,
+                        seq - self.next_seq
+                    ),
+                );
+            }
+            // seq < next_seq is already an order violation above
+        }
+        self.next_seq = self.next_seq.max(seq) + 1;
+        self.last = Some((t, seq));
+        self.report.last_t_s = t;
+        let ev = rec.get("ev").and_then(Json::as_str).unwrap_or("");
+        let task = rec.get("task").and_then(Json::as_u64);
+        match ev {
+            "meta" => {
+                self.saw_meta = true;
+                self.total_gpus = rec.get("gpus").and_then(Json::as_u64).unwrap_or(0);
+                let mut base = 0;
+                self.server_base.clear();
+                if let Some(servers) = rec.get("servers").and_then(Json::as_arr) {
+                    for s in servers {
+                        let n = s.as_u64().unwrap_or(0);
+                        self.server_base.push((base, n));
+                        base += n;
+                    }
+                }
+                if base != self.total_gpus {
+                    self.violate(t, seq, format!(
+                        "meta: per-server GPUs sum to {base}, gpus says {}",
+                        self.total_gpus
+                    ));
+                }
+            }
+            "arrival" => {
+                let Some(id) = task else { return };
+                let gang = rec.get("gang").and_then(Json::as_u64) == Some(1);
+                let n_gpus = rec.get("n_gpus").and_then(Json::as_u64).unwrap_or(1);
+                let fresh = TaskRec {
+                    life: Life::Queued,
+                    gang,
+                    n_gpus,
+                    running_gpus: Vec::new(),
+                };
+                if self.tasks.insert(id, fresh).is_some() {
+                    self.violate(t, seq, format!("lifecycle: task {id} arrived twice"));
+                }
+                self.report.offered += 1;
+            }
+            "route" | "steal" | "decision" | "quarantine" | "gang_dispatch" => {
+                // annotations: no state change. gang_dispatch's width check
+                // happens on the `dispatch` record that carries the ids.
+                if let Some(id) = task {
+                    if !self.tasks.contains_key(&id) {
+                        self.violate(t, seq, format!("lifecycle: `{ev}` for unknown task {id}"));
+                    }
+                }
+            }
+            "select" => self.expect(t, seq, task, ev, &[Life::Queued], Life::Selected),
+            "shed" => {
+                self.expect(t, seq, task, ev, &[Life::Queued], Life::Done);
+                self.report.shed += 1;
+            }
+            "gang_hold" => {
+                let Some(id) = task else { return };
+                if let Some(gpus) = rec.get("gpus").and_then(Json::as_arr) {
+                    for g in gpus.iter().filter_map(Json::as_u64) {
+                        if let Some(&other) = self.held.get(&g) {
+                            self.violate(t, seq, format!(
+                                "holds: gang {id} holds GPU {g} already held by task {other}"
+                            ));
+                        }
+                        self.held.insert(g, id);
+                    }
+                }
+            }
+            "gang_hold_expire" | "holds_invalidated" => {
+                let Some(id) = task else { return };
+                if let Some(gpus) = rec.get("gpus").and_then(Json::as_arr) {
+                    for g in gpus.iter().filter_map(Json::as_u64) {
+                        if self.held.get(&g) != Some(&id) {
+                            self.violate(t, seq, format!(
+                                "holds: `{ev}` frees GPU {g} not held by task {id}"
+                            ));
+                        }
+                        self.held.remove(&g);
+                    }
+                }
+            }
+            "dispatch" => {
+                let Some(id) = task else { return };
+                let gpus: Vec<u64> = rec
+                    .get("gpus")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_u64).collect())
+                    .unwrap_or_default();
+                for &g in &gpus {
+                    if self.saw_meta && g >= self.total_gpus {
+                        self.violate(t, seq, format!("dispatch: task {id} onto unknown GPU {g}"));
+                    }
+                    if self.down.get(&g).copied().unwrap_or(0) > 0 {
+                        self.violate(t, seq, format!(
+                            "health: task {id} dispatched onto quarantined GPU {g}"
+                        ));
+                    }
+                    let holder = self.held.get(&g).copied();
+                    if let Some(h) = holder {
+                        if h != id {
+                            self.violate(t, seq, format!(
+                                "holds: task {id} dispatched onto GPU {g} held by gang {h}"
+                            ));
+                        }
+                    }
+                }
+                // the holder's own reservations convert to the placement
+                self.held.retain(|_, holder| *holder != id);
+                let gang_req = self.tasks.get(&id).map(|tr| (tr.gang, tr.n_gpus));
+                if let Some((true, n)) = gang_req {
+                    if gpus.len() as u64 != n {
+                        self.violate(t, seq, format!(
+                            "gang: task {id} requested {n} GPUs, dispatch bound {}",
+                            gpus.len()
+                        ));
+                    }
+                }
+                self.expect(t, seq, task, ev, &[Life::Selected], Life::Running);
+                if let Some(tr) = self.tasks.get_mut(&id) {
+                    tr.running_gpus = gpus;
+                }
+                self.report.dispatches += 1;
+                if self.faults.values().any(|&n| n > 0) {
+                    self.report.dispatches_during_outage += 1;
+                }
+            }
+            "oom" | "detect" => {
+                self.expect(t, seq, task, ev, &[Life::Running], Life::Crashed);
+                if let Some(tr) = task.and_then(|id| self.tasks.get_mut(&id)) {
+                    tr.running_gpus.clear();
+                }
+            }
+            "recovery" | "relaunch" => {
+                self.expect(t, seq, task, ev, &[Life::Crashed], Life::Queued)
+            }
+            "complete" => {
+                self.expect(t, seq, task, ev, &[Life::Running], Life::Done);
+                self.report.completed += 1;
+            }
+            "fail" => {
+                // legal from Selected (inadmissible / no-fit), Crashed
+                // (retry budget), or Queued (shed-adjacent edge paths) —
+                // never from Running (a running task must crash first)
+                self.expect(
+                    t,
+                    seq,
+                    task,
+                    ev,
+                    &[Life::Selected, Life::Crashed, Life::Queued],
+                    Life::Done,
+                );
+                if let Some(id) = task {
+                    // a failed gang abandons any reservations it still holds
+                    self.held.retain(|_, holder| *holder != id);
+                }
+                self.report.failed += 1;
+            }
+            "fault" => {
+                let kind = rec.get("kind").and_then(Json::as_str).unwrap_or("").to_string();
+                let target = rec.get("target").and_then(Json::as_u64).unwrap_or(0);
+                *self.faults.entry((kind.clone(), target)).or_insert(0) += 1;
+                let range = match kind.as_str() {
+                    "gpu" => target..target + 1,
+                    "server" => {
+                        if self.saw_meta && self.server_base.get(target as usize).is_none() {
+                            self.violate(t, seq, format!("fault: unknown server {target}"));
+                        }
+                        self.server_gpus(target)
+                    }
+                    _ => 0..0, // link: degrades the fabric, quarantines nothing
+                };
+                for g in range {
+                    *self.down.entry(g).or_insert(0) += 1;
+                }
+            }
+            "repair" => {
+                let kind = rec.get("kind").and_then(Json::as_str).unwrap_or("").to_string();
+                let target = rec.get("target").and_then(Json::as_u64).unwrap_or(0);
+                match self.faults.get_mut(&(kind.clone(), target)) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    _ => self.violate(t, seq, format!(
+                        "health: repair of {kind} {target} without an active fault"
+                    )),
+                }
+                let range = match kind.as_str() {
+                    "gpu" => target..target + 1,
+                    "server" => self.server_gpus(target),
+                    _ => 0..0,
+                };
+                for g in range {
+                    if let Some(n) = self.down.get_mut(&g) {
+                        *n = n.saturating_sub(1);
+                    }
+                }
+            }
+            _ => {} // unknown kinds already flagged by validate_record
+        }
+    }
+
+    fn expect(
+        &mut self,
+        t: f64,
+        seq: u64,
+        task: Option<u64>,
+        ev: &str,
+        from: &[Life],
+        to: Life,
+    ) {
+        let Some(id) = task else { return };
+        match self.tasks.get(&id).map(|tr| tr.life) {
+            Some(life) => {
+                if !from.contains(&life) {
+                    self.violate(t, seq, format!(
+                        "lifecycle: `{ev}` for task {id} while {}",
+                        life.name()
+                    ));
+                }
+                // always re-sync to the record's claim so one bad
+                // transition doesn't cascade into a violation per record
+                self.tasks.get_mut(&id).unwrap().life = to;
+            }
+            None => self.violate(t, seq, format!("lifecycle: `{ev}` for unknown task {id}")),
+        }
+    }
+
+    /// End of trace: conservation + structural checks, then the report.
+    pub fn finish(mut self) -> ReplayReport {
+        let (t, seq) = self.last.unwrap_or((0.0, 0));
+        self.report.non_terminal = self
+            .tasks
+            .values()
+            .filter(|tr| tr.life != Life::Done)
+            .count() as u64;
+        // structural conservation: the state machine itself guarantees
+        // terminal + non_terminal == offered unless the trace lied
+        if self.report.terminal() + self.report.non_terminal != self.report.offered {
+            let (c, f, s, n, o) = (
+                self.report.completed,
+                self.report.failed,
+                self.report.shed,
+                self.report.non_terminal,
+                self.report.offered,
+            );
+            self.report.violations.push(Violation {
+                seq,
+                t_s: t,
+                what: format!(
+                    "conservation: completed {c} + failed {f} + shed {s} + open {n} != offered {o}"
+                ),
+            });
+        }
+        self.report
+    }
+}
+
+/// Replay a whole trace held in memory.
+pub fn replay_str(text: &str) -> ReplayReport {
+    let mut r = Replay::new();
+    for line in text.lines() {
+        r.feed_line(line);
+    }
+    r.finish()
+}
+
+/// Replay a trace file without loading it whole (streaming line reader).
+pub fn replay_file(path: &str) -> std::io::Result<ReplayReport> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Replay::new();
+    for line in std::io::BufReader::new(f).lines() {
+        r.feed_line(&line?);
+    }
+    Ok(r.finish())
+}
+
+// -- the one-pass analyzer (`carma trace analyze`) --------------------------
+
+/// Everything `carma trace analyze` derives from a trace in one pass:
+/// the invariant replay, per-task spans + JCT decomposition, the windowed
+/// time series, and the same `LogHistogram` sketches the run report uses —
+/// fed the same values in the same order, so the analyzer's percentiles
+/// reproduce the report's within the documented sketch tolerance.
+#[derive(Debug)]
+pub struct Analysis {
+    pub replay: ReplayReport,
+    pub spans: SpanReport,
+    pub series: TimeSeries,
+    pub queue_delay: LogHistogram,
+    pub jct: LogHistogram,
+}
+
+impl Analysis {
+    /// Deterministic summary (stable key order, no timestamps, no paths) —
+    /// `ci.sh` byte-diffs this across engine-thread counts.
+    pub fn to_json(&self) -> Json {
+        let mut crit = Vec::new();
+        for h in &self.spans.critical_path {
+            crit.push(json::obj(vec![
+                ("task", json::num(h.task as f64)),
+                ("dispatch_s", json::num(h.dispatch_s)),
+                (
+                    "blocked_on",
+                    match &h.blocked_on {
+                        Some(k) => json::s(k),
+                        None => json::s(""),
+                    },
+                ),
+                (
+                    "via_task",
+                    json::num(h.via_task.map_or(-1.0, |v| v as f64)),
+                ),
+            ]));
+        }
+        json::obj(vec![
+            ("replay", self.replay.to_json()),
+            (
+                "jct",
+                json::obj(vec![
+                    ("count", json::num(self.jct.count() as f64)),
+                    ("mean_s", json::num(self.jct.mean())),
+                    ("p50_s", json::num(self.jct.percentile(50.0))),
+                    ("p99_s", json::num(self.jct.percentile(99.0))),
+                ]),
+            ),
+            (
+                "queue_delay",
+                json::obj(vec![
+                    ("count", json::num(self.queue_delay.count() as f64)),
+                    ("mean_s", json::num(self.queue_delay.mean())),
+                    ("p50_s", json::num(self.queue_delay.percentile(50.0))),
+                    ("p99_s", json::num(self.queue_delay.percentile(99.0))),
+                    ("p999_s", json::num(self.queue_delay.percentile(99.9))),
+                ]),
+            ),
+            ("makespan_s", json::num(self.spans.makespan_s)),
+            ("time_accounting", self.spans.total.to_json()),
+            ("critical_path", json::arr(crit)),
+            (
+                "series",
+                json::obj(vec![
+                    ("window_s", json::num(self.series.window_s)),
+                    ("points", json::num(self.series.points.len() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// One streaming pass over a trace: replay + spans + series + sketches.
+pub fn analyze_lines<I: Iterator<Item = String>>(lines: I, window_s: f64) -> Analysis {
+    let mut replay = Replay::new();
+    let mut spans = SpanBuilder::new();
+    let mut series = TimeSeriesBuilder::new(window_s);
+    for line in lines {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match Json::parse(trimmed) {
+            Ok(rec) => {
+                replay.feed(&rec);
+                spans.feed(&rec);
+                series.feed(&rec);
+            }
+            Err(_) => replay.feed_line(trimmed), // records the violation
+        }
+    }
+    let spans = spans.finish();
+    // the report's sketches, rebuilt: queue delay on every first dispatch,
+    // JCT on completions only (metrics/recorder.rs on_dispatch/on_completion)
+    let mut queue_delay = LogHistogram::default();
+    let mut jct = LogHistogram::default();
+    for t in &spans.tasks {
+        if let Some(d) = t.queue_delay_s() {
+            queue_delay.record(d);
+        }
+        if t.outcome == "complete" {
+            jct.record(t.jct_s().max(0.0));
+        }
+    }
+    Analysis {
+        replay: replay.finish(),
+        spans,
+        series,
+        queue_delay,
+        jct,
+    }
+}
+
+/// Analyze a trace held in memory.
+pub fn analyze_str(text: &str, window_s: f64) -> Analysis {
+    analyze_lines(text.lines().map(str::to_string), window_s)
+}
+
+/// Analyze a trace file (streaming).
+pub fn analyze_file(path: &str, window_s: f64) -> std::io::Result<Analysis> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = Vec::new(); // collected errors surface here, not mid-iterator
+    for line in std::io::BufReader::new(f).lines() {
+        lines.push(line?);
+    }
+    Ok(analyze_lines(lines.into_iter(), window_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLEAN: &str = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[2,2],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}
+{"ev":"route","t":1,"seq":2,"task":0,"shard":0}
+{"ev":"select","t":1,"seq":3,"task":0,"shard":0}
+{"ev":"dispatch","t":3,"seq":4,"task":0,"gpus":[0]}
+{"ev":"complete","t":50,"seq":5,"task":0}
+"#;
+
+    #[test]
+    fn clean_trace_replays_without_violations() {
+        let r = replay_str(CLEAN);
+        assert!(r.ok(), "violations: {:?}", r.violations);
+        assert_eq!((r.offered, r.completed, r.non_terminal), (1, 1, 0));
+        assert_eq!(r.terminal(), r.offered);
+        assert_eq!(r.seq_gaps, 0);
+    }
+
+    #[test]
+    fn dispatch_onto_dead_server_gpu_is_flagged() {
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[2,2],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}
+{"ev":"select","t":1,"seq":2,"task":0,"shard":0}
+{"ev":"fault","t":2,"seq":3,"kind":"server","target":1,"downtime_s":60}
+{"ev":"dispatch","t":3,"seq":4,"task":0,"gpus":[3]}
+{"ev":"complete","t":50,"seq":5,"task":0}
+"#;
+        let r = replay_str(trace);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(r.violations[0].what.contains("quarantined GPU 3"));
+        assert_eq!(r.dispatches_during_outage, 1);
+    }
+
+    #[test]
+    fn repair_lifts_the_quarantine() {
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[2,2],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}
+{"ev":"select","t":1,"seq":2,"task":0,"shard":0}
+{"ev":"fault","t":2,"seq":3,"kind":"gpu","target":0,"downtime_s":10}
+{"ev":"repair","t":12,"seq":4,"kind":"gpu","target":0}
+{"ev":"dispatch","t":13,"seq":5,"task":0,"gpus":[0]}
+{"ev":"complete","t":50,"seq":6,"task":0}
+"#;
+        let r = replay_str(trace);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.dispatches_during_outage, 0, "outage over before dispatch");
+    }
+
+    #[test]
+    fn foreign_dispatch_onto_held_gpu_is_flagged() {
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[4],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":1,"n_gpus":4}
+{"ev":"select","t":1,"seq":2,"task":0,"lane":"gang"}
+{"ev":"gang_hold","t":2,"seq":3,"task":0,"holds":2,"gpus":[0,1]}
+{"ev":"arrival","t":3,"seq":4,"task":1,"gang":0,"n_gpus":1}
+{"ev":"select","t":3,"seq":5,"task":1,"shard":0}
+{"ev":"dispatch","t":4,"seq":6,"task":1,"gpus":[1]}
+"#;
+        let r = replay_str(trace);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(r.violations[0].what.contains("held by gang 0"));
+        assert_eq!(r.non_terminal, 2);
+    }
+
+    #[test]
+    fn gang_atomicity_checks_dispatch_width() {
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[4],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":1,"n_gpus":4}
+{"ev":"select","t":1,"seq":2,"task":0,"lane":"gang"}
+{"ev":"dispatch","t":2,"seq":3,"task":0,"gpus":[0,1,2]}
+{"ev":"complete","t":50,"seq":4,"task":0}
+"#;
+        let r = replay_str(trace);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(r.violations[0].what.contains("requested 4 GPUs, dispatch bound 3"));
+    }
+
+    #[test]
+    fn seq_gap_counts_dropped_records() {
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[4],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":3,"task":0,"gang":0,"n_gpus":1}
+"#;
+        let r = replay_str(trace);
+        assert_eq!(r.seq_gaps, 2);
+        assert_eq!(r.violations.len(), 1);
+        assert!(r.violations[0].what.contains("gap"));
+    }
+
+    #[test]
+    fn lifecycle_violations_catch_illegal_transitions() {
+        // dispatch without select, complete twice
+        let trace = r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[4],"shards":1,"seed":7}
+{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}
+{"ev":"dispatch","t":2,"seq":2,"task":0,"gpus":[0]}
+{"ev":"complete","t":9,"seq":3,"task":0}
+{"ev":"complete","t":10,"seq":4,"task":0}
+"#;
+        let r = replay_str(trace);
+        assert_eq!(r.violations.len(), 3, "{:?}", r.violations);
+        assert!(r.violations[0].what.contains("while queued"));
+        assert!(r.violations[1].what.contains("while terminal"));
+        // the double-complete also double-counts, so conservation trips too
+        assert!(r.violations[2].what.contains("conservation"));
+    }
+
+    #[test]
+    fn schema_rejects_unknown_kinds_and_missing_fields() {
+        assert!(validate_record(&Json::parse(r#"{"ev":"nope","t":0,"seq":0}"#).unwrap())
+            .unwrap_err()
+            .contains("unknown record kind"));
+        assert!(validate_record(&Json::parse(r#"{"ev":"arrival","t":0,"seq":0,"task":1,"gang":0}"#).unwrap())
+            .unwrap_err()
+            .contains("missing field `n_gpus`"));
+        assert!(validate_record(
+            &Json::parse(r#"{"ev":"select","t":0,"seq":0,"task":1,"shard":0,"lane":"gang"}"#)
+                .unwrap()
+        )
+        .unwrap_err()
+        .contains("exactly one"));
+        assert!(validate_record(&Json::parse(CLEAN.lines().next().unwrap()).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn schema_json_covers_every_kind_once() {
+        let s = schema_json();
+        let recs = s.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), SCHEMA.len());
+        let mut kinds: Vec<&str> = recs
+            .iter()
+            .map(|r| r.get("ev").and_then(Json::as_str).unwrap())
+            .collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), SCHEMA.len(), "no duplicate kinds");
+    }
+
+    #[test]
+    fn analyze_reproduces_sketches_and_flags_nothing_on_clean_trace() {
+        let a = analyze_str(CLEAN, 30.0);
+        assert!(a.replay.ok());
+        assert_eq!(a.jct.count(), 1);
+        assert_eq!(a.queue_delay.count(), 1);
+        // sketch tolerance on a single sample: midpoint of its bucket
+        assert!((a.jct.percentile(50.0) - 49.0).abs() <= 49.0 * 0.06);
+        assert!((a.queue_delay.percentile(50.0) - 2.0).abs() <= 2.0 * 0.06);
+        assert_eq!(a.spans.makespan_s, 50.0);
+        assert!(!a.series.points.is_empty());
+        // stable output for ci byte-diffing
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            analyze_str(CLEAN, 30.0).to_json().to_string_compact()
+        );
+    }
+}

@@ -1,0 +1,626 @@
+//! Per-task causal span reconstruction from the event trace
+//! (DESIGN.md §16): rebuild each task's lifecycle as a contiguous chain of
+//! phase spans partitioning `[arrival, terminal]`, decompose its JCT into
+//! per-phase time, and walk the makespan's blocking chain backward.
+//!
+//! The span model mirrors the driver's lifecycle state machine exactly —
+//! every phase change the driver commits is also a trace record, so the
+//! spans are derivable from the trace alone:
+//!
+//! ```text
+//! arrival ──▶ Queued ──select──▶ Observe ──[gang_hold]──▶ GangHold
+//!                ▲                   │                        │
+//!                │                dispatch                 dispatch
+//!             recovery/              ▼                        ▼
+//!             relaunch ◀─backoff─ Running ──complete──▶ (terminal)
+//! ```
+//!
+//! `fail` closes from Observe (inadmissible) or Backoff (budget spent);
+//! `shed` closes from Queued at arrival time (zero-length life). Fault
+//! interruptions (`detect`) and OOM crashes both open a Backoff span —
+//! the relaunch/recovery gap the adaptive-backoff ladder inserts.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// A task's lifecycle phase between two consecutive trace commits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanPhase {
+    /// In an admission queue (initial, or re-queued after recovery).
+    Queued,
+    /// Selected by a mapper/gang lane: observation window + mapping wait.
+    Observe,
+    /// Gang only: partial reservations held while assembling the set.
+    GangHold,
+    /// Dispatched and running (interference-scaled progress).
+    Running,
+    /// Crashed (OOM or fault kill), waiting out the backoff ladder.
+    Backoff,
+}
+
+impl SpanPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::Queued => "queued",
+            SpanPhase::Observe => "observe",
+            SpanPhase::GangHold => "gang_hold",
+            SpanPhase::Running => "running",
+            SpanPhase::Backoff => "backoff",
+        }
+    }
+}
+
+/// One contiguous phase span. Spans of a task chain exactly:
+/// `spans[i].end_s == spans[i+1].start_s`, the first starts at arrival,
+/// the last ends at the terminal record — the partition property
+/// `tests/trace_analysis.rs` proves.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub phase: SpanPhase,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Per-phase JCT decomposition. The field sums equal
+/// `terminal_s - arrival_s` exactly: phase times are summed from the span
+/// chain and the (≤ few ulp) floating-point residual of re-associating the
+/// telescoping differences is folded into the largest phase, so
+/// `queued + observe + gang_hold + running + backoff == jct` bit-for-bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Decomposition {
+    pub queued_s: f64,
+    pub observe_s: f64,
+    pub gang_hold_s: f64,
+    pub running_s: f64,
+    pub backoff_s: f64,
+}
+
+impl Decomposition {
+    pub fn total_s(&self) -> f64 {
+        self.queued_s + self.observe_s + self.gang_hold_s + self.running_s + self.backoff_s
+    }
+
+    fn add(&mut self, phase: SpanPhase, d: f64) {
+        match phase {
+            SpanPhase::Queued => self.queued_s += d,
+            SpanPhase::Observe => self.observe_s += d,
+            SpanPhase::GangHold => self.gang_hold_s += d,
+            SpanPhase::Running => self.running_s += d,
+            SpanPhase::Backoff => self.backoff_s += d,
+        }
+    }
+
+    /// Fold the floating-point residual `jct - total` into the largest
+    /// component so the decomposition sums to `jct` exactly.
+    fn absorb_residual(&mut self, jct: f64) {
+        let residual = jct - self.total_s();
+        if residual == 0.0 {
+            return;
+        }
+        let fields = [
+            self.queued_s,
+            self.observe_s,
+            self.gang_hold_s,
+            self.running_s,
+            self.backoff_s,
+        ];
+        let mut imax = 0;
+        for (i, v) in fields.iter().enumerate() {
+            if *v > fields[imax] {
+                imax = i;
+            }
+        }
+        match imax {
+            0 => self.queued_s += residual,
+            1 => self.observe_s += residual,
+            2 => self.gang_hold_s += residual,
+            3 => self.running_s += residual,
+            _ => self.backoff_s += residual,
+        }
+    }
+
+    fn accumulate(&mut self, other: &Decomposition) {
+        self.queued_s += other.queued_s;
+        self.observe_s += other.observe_s;
+        self.gang_hold_s += other.gang_hold_s;
+        self.running_s += other.running_s;
+        self.backoff_s += other.backoff_s;
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("queued_s", json::num(self.queued_s)),
+            ("observe_s", json::num(self.observe_s)),
+            ("gang_hold_s", json::num(self.gang_hold_s)),
+            ("running_s", json::num(self.running_s)),
+            ("backoff_s", json::num(self.backoff_s)),
+        ])
+    }
+}
+
+/// One task's reconstructed lifecycle.
+#[derive(Debug, Clone)]
+pub struct TaskSpans {
+    pub task: u64,
+    pub gang: bool,
+    pub arrival_s: f64,
+    /// Terminal commit time; for a truncated trace (task never terminal)
+    /// this is the last event seen and `outcome` is `"open"`.
+    pub terminal_s: f64,
+    /// `"complete" | "fail" | "shed" | "open"`.
+    pub outcome: &'static str,
+    pub first_dispatch_s: Option<f64>,
+    pub dispatches: u64,
+    /// Fault/OOM interruptions (each one opens a Backoff child span).
+    pub interruptions: u64,
+    pub spans: Vec<Span>,
+    pub decomposition: Decomposition,
+    /// `(t, seq)` of every dispatch commit, for the critical-path walk.
+    pub dispatch_seqs: Vec<(f64, u64)>,
+}
+
+impl TaskSpans {
+    pub fn jct_s(&self) -> f64 {
+        self.terminal_s - self.arrival_s
+    }
+
+    /// Queueing delay as the report defines it: first dispatch − arrival.
+    pub fn queue_delay_s(&self) -> Option<f64> {
+        self.first_dispatch_s.map(|d| (d - self.arrival_s).max(0.0))
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("task", json::num(self.task as f64)),
+            ("gang", json::num(u64::from(self.gang) as f64)),
+            ("arrival_s", json::num(self.arrival_s)),
+            ("terminal_s", json::num(self.terminal_s)),
+            ("outcome", json::s(self.outcome)),
+            ("jct_s", json::num(self.jct_s())),
+            ("dispatches", json::num(self.dispatches as f64)),
+            ("interruptions", json::num(self.interruptions as f64)),
+            ("decomposition", self.decomposition.to_json()),
+            (
+                "spans",
+                json::arr(
+                    self.spans
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("phase", json::s(s.phase.name())),
+                                ("start_s", json::num(s.start_s)),
+                                ("end_s", json::num(s.end_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One hop of the makespan critical path: a dispatch attributed to the
+/// most recent capacity-release commit preceding it.
+#[derive(Debug, Clone)]
+pub struct CritHop {
+    pub task: u64,
+    pub dispatch_s: f64,
+    /// Release event kind this dispatch waited behind (`complete`, `oom`,
+    /// `detect`, `fail`, `repair`, `gang_hold_expire`, `holds_invalidated`)
+    /// — `None` when nothing released before it (front of the trace).
+    pub blocked_on: Option<String>,
+    /// The releasing task, when the release has one (`repair` does not).
+    pub via_task: Option<u64>,
+}
+
+/// The full span reconstruction of a trace.
+#[derive(Debug, Clone, Default)]
+pub struct SpanReport {
+    /// Per-task reconstructions, ascending task id.
+    pub tasks: Vec<TaskSpans>,
+    /// Last completion time over the trace (0 when nothing completed).
+    pub makespan_s: f64,
+    /// Backward blocking chain from the makespan task (newest hop first).
+    pub critical_path: Vec<CritHop>,
+    /// Aggregate decomposition over all terminal tasks.
+    pub total: Decomposition,
+}
+
+impl SpanReport {
+    pub fn task(&self, id: u64) -> Option<&TaskSpans> {
+        self.tasks
+            .binary_search_by_key(&id, |t| t.task)
+            .ok()
+            .map(|i| &self.tasks[i])
+    }
+}
+
+/// A capacity-release commit (candidate blocking event for the critical
+/// path walk), in `(t, seq)` trace order.
+#[derive(Debug, Clone)]
+struct Release {
+    t: f64,
+    seq: u64,
+    kind: &'static str,
+    task: Option<u64>,
+}
+
+#[derive(Debug)]
+struct TaskAcc {
+    gang: bool,
+    arrival_s: f64,
+    phase: SpanPhase,
+    phase_start_s: f64,
+    last_event_s: f64,
+    spans: Vec<Span>,
+    outcome: Option<&'static str>,
+    terminal_s: f64,
+    first_dispatch_s: Option<f64>,
+    dispatches: u64,
+    interruptions: u64,
+    /// `(t, seq)` of every dispatch, for the critical-path walk.
+    dispatch_seqs: Vec<(f64, u64)>,
+}
+
+impl TaskAcc {
+    fn transition(&mut self, to: SpanPhase, t: f64) {
+        if self.outcome.is_some() {
+            return; // ignore anything after a terminal record
+        }
+        if t > self.phase_start_s {
+            self.spans.push(Span {
+                phase: self.phase,
+                start_s: self.phase_start_s,
+                end_s: t,
+            });
+        }
+        self.phase = to;
+        self.phase_start_s = t;
+        self.last_event_s = t;
+    }
+
+    fn close(&mut self, outcome: &'static str, t: f64) {
+        if self.outcome.is_some() {
+            return;
+        }
+        if t > self.phase_start_s {
+            self.spans.push(Span {
+                phase: self.phase,
+                start_s: self.phase_start_s,
+                end_s: t,
+            });
+        }
+        self.outcome = Some(outcome);
+        self.terminal_s = t;
+        self.last_event_s = t;
+    }
+}
+
+/// Streaming builder: feed every parsed trace record in file order, then
+/// [`finish`](SpanBuilder::finish).
+#[derive(Debug, Default)]
+pub struct SpanBuilder {
+    tasks: BTreeMap<u64, TaskAcc>,
+    releases: Vec<Release>,
+}
+
+impl SpanBuilder {
+    pub fn new() -> SpanBuilder {
+        SpanBuilder::default()
+    }
+
+    pub fn feed(&mut self, rec: &Json) {
+        let Some(ev) = rec.get("ev").and_then(Json::as_str) else {
+            return;
+        };
+        let t = rec.get("t").and_then(Json::as_f64).unwrap_or(0.0);
+        let seq = rec.get("seq").and_then(Json::as_u64).unwrap_or(0);
+        let task = rec.get("task").and_then(Json::as_u64);
+        match ev {
+            "arrival" => {
+                let Some(id) = task else { return };
+                let gang = rec.get("gang").and_then(Json::as_u64).unwrap_or(0) == 1;
+                self.tasks.entry(id).or_insert_with(|| TaskAcc {
+                    gang,
+                    arrival_s: t,
+                    phase: SpanPhase::Queued,
+                    phase_start_s: t,
+                    last_event_s: t,
+                    spans: Vec::new(),
+                    outcome: None,
+                    terminal_s: t,
+                    first_dispatch_s: None,
+                    dispatches: 0,
+                    interruptions: 0,
+                    dispatch_seqs: Vec::new(),
+                });
+            }
+            "select" => self.with(task, |a| a.transition(SpanPhase::Observe, t)),
+            "gang_hold" => self.with(task, |a| {
+                if a.phase == SpanPhase::Observe {
+                    a.transition(SpanPhase::GangHold, t);
+                }
+            }),
+            "dispatch" => {
+                self.with(task, |a| {
+                    a.transition(SpanPhase::Running, t);
+                    a.first_dispatch_s.get_or_insert(t);
+                    a.dispatches += 1;
+                    a.dispatch_seqs.push((t, seq));
+                });
+            }
+            "oom" | "detect" => {
+                self.with(task, |a| {
+                    a.transition(SpanPhase::Backoff, t);
+                    a.interruptions += 1;
+                });
+                self.release(t, seq, if ev == "oom" { "oom" } else { "detect" }, task);
+            }
+            "recovery" | "relaunch" => self.with(task, |a| a.transition(SpanPhase::Queued, t)),
+            "complete" => {
+                self.with(task, |a| a.close("complete", t));
+                self.release(t, seq, "complete", task);
+            }
+            "fail" => {
+                self.with(task, |a| a.close("fail", t));
+                self.release(t, seq, "fail", task);
+            }
+            "shed" => self.with(task, |a| a.close("shed", t)),
+            "repair" => self.release(t, seq, "repair", None),
+            "gang_hold_expire" => self.release(t, seq, "gang_hold_expire", task),
+            "holds_invalidated" => self.release(t, seq, "holds_invalidated", task),
+            _ => {}
+        }
+    }
+
+    fn with(&mut self, task: Option<u64>, f: impl FnOnce(&mut TaskAcc)) {
+        if let Some(a) = task.and_then(|id| self.tasks.get_mut(&id)) {
+            f(a);
+        }
+    }
+
+    fn release(&mut self, t: f64, seq: u64, kind: &'static str, task: Option<u64>) {
+        self.releases.push(Release { t, seq, kind, task });
+    }
+
+    pub fn finish(self) -> SpanReport {
+        let mut tasks = Vec::with_capacity(self.tasks.len());
+        let mut total = Decomposition::default();
+        let mut makespan_s = 0.0;
+        let mut makespan_task: Option<u64> = None;
+        for (id, mut acc) in self.tasks {
+            let outcome = acc.outcome.unwrap_or_else(|| {
+                // truncated trace: close the open phase at the last event so
+                // the partition property still holds over what was seen
+                let t = acc.last_event_s;
+                if t > acc.phase_start_s {
+                    acc.spans.push(Span {
+                        phase: acc.phase,
+                        start_s: acc.phase_start_s,
+                        end_s: t,
+                    });
+                }
+                acc.terminal_s = t;
+                "open"
+            });
+            let mut decomposition = Decomposition::default();
+            for s in &acc.spans {
+                decomposition.add(s.phase, s.duration_s());
+            }
+            decomposition.absorb_residual(acc.terminal_s - acc.arrival_s);
+            if outcome != "open" {
+                total.accumulate(&decomposition);
+            }
+            if outcome == "complete" && acc.terminal_s > makespan_s {
+                makespan_s = acc.terminal_s;
+                makespan_task = Some(id);
+            }
+            tasks.push(TaskSpans {
+                task: id,
+                gang: acc.gang,
+                arrival_s: acc.arrival_s,
+                terminal_s: acc.terminal_s,
+                outcome,
+                first_dispatch_s: acc.first_dispatch_s,
+                dispatches: acc.dispatches,
+                interruptions: acc.interruptions,
+                spans: acc.spans,
+                decomposition,
+                dispatch_seqs: acc.dispatch_seqs,
+            })
+        }
+        let critical_path = critical_path(&tasks, &self.releases, makespan_task);
+        SpanReport {
+            tasks,
+            makespan_s,
+            critical_path,
+            total,
+        }
+    }
+}
+
+/// Backward walk from the makespan task: attribute its last dispatch to
+/// the most recent capacity-release commit strictly preceding it (by
+/// `(t, seq)`), hop to the releasing task, repeat. A heuristic causal
+/// chain — the release that most recently changed capacity before a
+/// dispatch is its most plausible unblocker — bounded at 64 hops and
+/// fully deterministic for a fixed trace (DESIGN.md §16).
+fn critical_path(
+    tasks: &[TaskSpans],
+    releases: &[Release],
+    makespan_task: Option<u64>,
+) -> Vec<CritHop> {
+    let find = |id: u64| tasks.binary_search_by_key(&id, |t| t.task).ok();
+    let mut path = Vec::new();
+    let mut cur = makespan_task;
+    let mut seen = std::collections::BTreeSet::new();
+    while let Some(id) = cur {
+        if path.len() >= 64 || !seen.insert(id) {
+            break;
+        }
+        let Some(i) = find(id) else { break };
+        let Some(&(dt, dseq)) = tasks[i].dispatch_seqs.last() else {
+            break;
+        };
+        // releases are pushed in (t, seq) trace order: last preceding wins
+        let blocking = releases
+            .iter()
+            .rev()
+            .find(|r| r.t < dt || (r.t == dt && r.seq < dseq));
+        let (blocked_on, via_task) = match blocking {
+            Some(r) => (Some(r.kind.to_string()), r.task.filter(|&v| v != id)),
+            None => (None, None),
+        };
+        path.push(CritHop {
+            task: id,
+            dispatch_s: dt,
+            blocked_on,
+            via_task,
+        });
+        cur = via_task;
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(line: &str) -> Json {
+        Json::parse(line).unwrap()
+    }
+
+    fn feed_all(lines: &[&str]) -> SpanReport {
+        let mut b = SpanBuilder::new();
+        for l in lines {
+            b.feed(&rec(l));
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn simple_lifecycle_partitions_exactly() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":0,"seq":0,"task":7,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"select","t":2,"seq":1,"task":7,"shard":0}"#,
+            r#"{"ev":"dispatch","t":10,"seq":2,"task":7,"gpus":[3]}"#,
+            r#"{"ev":"complete","t":100,"seq":3,"task":7}"#,
+        ]);
+        let t = r.task(7).unwrap();
+        assert_eq!(t.outcome, "complete");
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.spans[0].phase, SpanPhase::Queued);
+        assert_eq!(t.spans[1].phase, SpanPhase::Observe);
+        assert_eq!(t.spans[2].phase, SpanPhase::Running);
+        for w in t.spans.windows(2) {
+            assert_eq!(w[0].end_s, w[1].start_s, "no gaps, no overlaps");
+        }
+        assert_eq!(t.spans[0].start_s, t.arrival_s);
+        assert_eq!(t.spans[2].end_s, t.terminal_s);
+        let d = &t.decomposition;
+        assert_eq!(d.queued_s, 2.0);
+        assert_eq!(d.observe_s, 8.0);
+        assert_eq!(d.running_s, 90.0);
+        assert_eq!(d.total_s(), t.jct_s(), "decomposition sums exactly");
+        assert_eq!(t.queue_delay_s(), Some(10.0));
+        assert_eq!(r.makespan_s, 100.0);
+    }
+
+    #[test]
+    fn crash_recovery_opens_backoff_and_requeue_spans() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":0,"seq":0,"task":1,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"select","t":1,"seq":1,"task":1,"shard":0}"#,
+            r#"{"ev":"dispatch","t":5,"seq":2,"task":1,"gpus":[0]}"#,
+            r#"{"ev":"oom","t":20,"seq":3,"task":1,"crashes":1}"#,
+            r#"{"ev":"recovery","t":25,"seq":4,"task":1}"#,
+            r#"{"ev":"select","t":26,"seq":5,"task":1,"shard":0}"#,
+            r#"{"ev":"dispatch","t":30,"seq":6,"task":1,"gpus":[1]}"#,
+            r#"{"ev":"complete","t":60,"seq":7,"task":1}"#,
+        ]);
+        let t = r.task(1).unwrap();
+        let phases: Vec<&str> = t.spans.iter().map(|s| s.phase.name()).collect();
+        assert_eq!(
+            phases,
+            ["queued", "observe", "running", "backoff", "queued", "observe", "running"]
+        );
+        assert_eq!(t.interruptions, 1);
+        assert_eq!(t.dispatches, 2);
+        assert_eq!(t.decomposition.backoff_s, 5.0);
+        assert_eq!(t.decomposition.running_s, 45.0);
+        assert_eq!(t.decomposition.total_s(), t.jct_s());
+        assert_eq!(t.queue_delay_s(), Some(5.0), "first dispatch only");
+    }
+
+    #[test]
+    fn gang_hold_splits_the_observe_phase() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":0,"seq":0,"task":2,"gang":1,"n_gpus":4}"#,
+            r#"{"ev":"select","t":0,"seq":1,"task":2,"lane":"gang"}"#,
+            r#"{"ev":"gang_hold","t":8,"seq":2,"task":2,"holds":2,"gpus":[0,1]}"#,
+            r#"{"ev":"gang_dispatch","t":30,"seq":3,"task":2,"gpus":4,"servers":1,"cost":0}"#,
+            r#"{"ev":"dispatch","t":30,"seq":4,"task":2,"gpus":[0,1,2,3]}"#,
+            r#"{"ev":"complete","t":90,"seq":5,"task":2}"#,
+        ]);
+        let t = r.task(2).unwrap();
+        let phases: Vec<&str> = t.spans.iter().map(|s| s.phase.name()).collect();
+        assert_eq!(phases, ["observe", "gang_hold", "running"]);
+        assert_eq!(t.decomposition.gang_hold_s, 22.0);
+        assert_eq!(t.decomposition.queued_s, 0.0, "selected at arrival instant");
+        assert_eq!(t.decomposition.total_s(), t.jct_s());
+    }
+
+    #[test]
+    fn shed_is_a_zero_length_life() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":4,"seq":0,"task":9,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"shed","t":4,"seq":1,"task":9,"at_door":1}"#,
+        ]);
+        let t = r.task(9).unwrap();
+        assert_eq!(t.outcome, "shed");
+        assert!(t.spans.is_empty(), "zero-length phases are elided");
+        assert_eq!(t.jct_s(), 0.0);
+        assert_eq!(t.decomposition.total_s(), 0.0);
+    }
+
+    #[test]
+    fn critical_path_attributes_dispatch_to_preceding_release() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":0,"seq":0,"task":0,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"arrival","t":0,"seq":1,"task":1,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"select","t":0,"seq":2,"task":0,"shard":0}"#,
+            r#"{"ev":"dispatch","t":8,"seq":3,"task":0,"gpus":[0]}"#,
+            r#"{"ev":"select","t":8,"seq":4,"task":1,"shard":0}"#,
+            r#"{"ev":"complete","t":50,"seq":5,"task":0}"#,
+            r#"{"ev":"dispatch","t":50,"seq":6,"task":1,"gpus":[0]}"#,
+            r#"{"ev":"complete","t":120,"seq":7,"task":1}"#,
+        ]);
+        assert_eq!(r.makespan_s, 120.0);
+        assert_eq!(r.critical_path.len(), 2);
+        assert_eq!(r.critical_path[0].task, 1);
+        assert_eq!(r.critical_path[0].blocked_on.as_deref(), Some("complete"));
+        assert_eq!(r.critical_path[0].via_task, Some(0));
+        assert_eq!(r.critical_path[1].task, 0);
+        assert_eq!(r.critical_path[1].blocked_on, None, "front of the trace");
+    }
+
+    #[test]
+    fn truncated_trace_closes_open_tasks_as_open() {
+        let r = feed_all(&[
+            r#"{"ev":"arrival","t":0,"seq":0,"task":3,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"select","t":2,"seq":1,"task":3,"shard":0}"#,
+            r#"{"ev":"dispatch","t":6,"seq":2,"task":3,"gpus":[0]}"#,
+        ]);
+        let t = r.task(3).unwrap();
+        assert_eq!(t.outcome, "open");
+        assert_eq!(t.terminal_s, 6.0);
+        assert_eq!(t.decomposition.total_s(), t.jct_s());
+    }
+}

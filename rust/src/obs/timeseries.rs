@@ -1,0 +1,323 @@
+//! Windowed time-series derivation from the event trace (DESIGN.md §16):
+//! queue depth, in-flight tasks/GPUs, arrival/completion/shed rates and
+//! GPU utilization per fixed window, all recomputed from the JSONL stream
+//! alone. Exported as CSV or JSON by `carma trace analyze --out`.
+//!
+//! Everything here is a pure function of the trace bytes and the window
+//! length — no wall clock, no maps with nondeterministic order — so the
+//! output is byte-identical for a fixed trace at any engine-thread count
+//! (the trace itself already is, DESIGN.md §14).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// One completed window `(t_s - window_s, t_s]`. Counters are per-window;
+/// depth/occupancy fields are sampled at the window boundary.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SeriesPoint {
+    /// Window end, seconds.
+    pub t_s: f64,
+    pub arrivals: u64,
+    pub completions: u64,
+    pub sheds: u64,
+    /// Tasks waiting (queued, under observation, or backing off) at the
+    /// boundary.
+    pub queue_depth: u64,
+    /// Tasks running at the boundary.
+    pub running: u64,
+    /// Distinct GPU slots occupied by running tasks at the boundary
+    /// (collocated tasks count their device once each — this is placement
+    /// occupancy, not SMACT).
+    pub busy_gpus: u64,
+    /// `busy_gpus / total_gpus` (0 when the trace carries no `meta`).
+    pub util: f64,
+}
+
+impl SeriesPoint {
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{}",
+            self.t_s,
+            self.arrivals,
+            self.completions,
+            self.sheds,
+            self.queue_depth,
+            self.running,
+            self.busy_gpus,
+            self.util
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("t_s", json::num(self.t_s)),
+            ("arrivals", json::num(self.arrivals as f64)),
+            ("completions", json::num(self.completions as f64)),
+            ("sheds", json::num(self.sheds as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("running", json::num(self.running as f64)),
+            ("busy_gpus", json::num(self.busy_gpus as f64)),
+            ("util", json::num(self.util)),
+        ])
+    }
+}
+
+/// The derived series.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub window_s: f64,
+    pub points: Vec<SeriesPoint>,
+}
+
+pub const CSV_HEADER: &str = "t_s,arrivals,completions,sheds,queue_depth,running,busy_gpus,util";
+
+impl TimeSeries {
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for p in &self.points {
+            out.push_str(&p.csv_row());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("window_s", json::num(self.window_s)),
+            ("points", json::arr(self.points.iter().map(SeriesPoint::to_json).collect())),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TaskState {
+    Waiting,
+    Running(u64), // GPUs occupied
+    Terminal,
+}
+
+/// Streaming builder: feed every parsed trace record in file order, then
+/// [`finish`](TimeSeriesBuilder::finish). Windows close lazily as event
+/// time passes their boundary, so memory is O(tasks in flight + windows).
+#[derive(Debug)]
+pub struct TimeSeriesBuilder {
+    window_s: f64,
+    next_end_s: f64,
+    total_gpus: u64,
+    tasks: BTreeMap<u64, TaskState>,
+    waiting: u64,
+    running: u64,
+    busy_gpus: u64,
+    win_arrivals: u64,
+    win_completions: u64,
+    win_sheds: u64,
+    saw_event: bool,
+    last_t: f64,
+    points: Vec<SeriesPoint>,
+}
+
+impl TimeSeriesBuilder {
+    pub fn new(window_s: f64) -> TimeSeriesBuilder {
+        let w = if window_s > 0.0 { window_s } else { 60.0 };
+        TimeSeriesBuilder {
+            window_s: w,
+            next_end_s: w,
+            total_gpus: 0,
+            tasks: BTreeMap::new(),
+            waiting: 0,
+            running: 0,
+            busy_gpus: 0,
+            win_arrivals: 0,
+            win_completions: 0,
+            win_sheds: 0,
+            saw_event: false,
+            last_t: 0.0,
+            points: Vec::new(),
+        }
+    }
+
+    fn emit_boundary(&mut self) {
+        let util = if self.total_gpus > 0 {
+            self.busy_gpus as f64 / self.total_gpus as f64
+        } else {
+            0.0
+        };
+        self.points.push(SeriesPoint {
+            t_s: self.next_end_s,
+            arrivals: self.win_arrivals,
+            completions: self.win_completions,
+            sheds: self.win_sheds,
+            queue_depth: self.waiting,
+            running: self.running,
+            busy_gpus: self.busy_gpus,
+            util,
+        });
+        self.win_arrivals = 0;
+        self.win_completions = 0;
+        self.win_sheds = 0;
+        self.next_end_s += self.window_s;
+    }
+
+    pub fn feed(&mut self, rec: &Json) {
+        let Some(ev) = rec.get("ev").and_then(Json::as_str) else {
+            return;
+        };
+        let t = rec.get("t").and_then(Json::as_f64).unwrap_or(0.0);
+        // a record past the boundary closes every elapsed window first
+        // (boundary state = state after all records with t <= boundary)
+        while t > self.next_end_s {
+            self.emit_boundary();
+        }
+        self.saw_event = true;
+        self.last_t = self.last_t.max(t);
+        let task = rec.get("task").and_then(Json::as_u64);
+        match ev {
+            "meta" => {
+                self.total_gpus = rec.get("gpus").and_then(Json::as_u64).unwrap_or(0);
+            }
+            "arrival" => {
+                let Some(id) = task else { return };
+                if self.tasks.insert(id, TaskState::Waiting).is_none() {
+                    self.waiting += 1;
+                    self.win_arrivals += 1;
+                }
+            }
+            "dispatch" => {
+                let Some(id) = task else { return };
+                let n = rec.get("gpus").and_then(Json::as_arr).map_or(0, |a| a.len() as u64);
+                // any other state is a malformed trace — replay flags it
+                if let Some(TaskState::Waiting) = self.tasks.get(&id).copied() {
+                    self.waiting -= 1;
+                    self.running += 1;
+                    self.busy_gpus += n;
+                    self.tasks.insert(id, TaskState::Running(n));
+                }
+            }
+            "oom" | "detect" => {
+                let Some(id) = task else { return };
+                if let Some(TaskState::Running(n)) = self.tasks.get(&id).copied() {
+                    self.running -= 1;
+                    self.busy_gpus -= n;
+                    self.waiting += 1;
+                    self.tasks.insert(id, TaskState::Waiting);
+                }
+            }
+            "complete" | "fail" | "shed" => {
+                let Some(id) = task else { return };
+                match self.tasks.get(&id).copied() {
+                    Some(TaskState::Running(n)) => {
+                        self.running -= 1;
+                        self.busy_gpus -= n;
+                    }
+                    Some(TaskState::Waiting) => self.waiting -= 1,
+                    _ => return,
+                }
+                self.tasks.insert(id, TaskState::Terminal);
+                match ev {
+                    "complete" => self.win_completions += 1,
+                    "shed" => self.win_sheds += 1,
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    pub fn finish(mut self) -> TimeSeries {
+        // close through the last event so the series covers the whole run
+        if self.saw_event {
+            while self.next_end_s <= self.last_t {
+                self.emit_boundary();
+            }
+            self.emit_boundary();
+        }
+        TimeSeries {
+            window_s: self.window_s,
+            points: self.points,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(lines: &[&str], window_s: f64) -> TimeSeries {
+        let mut b = TimeSeriesBuilder::new(window_s);
+        for l in lines {
+            b.feed(&Json::parse(l).unwrap());
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn windows_sample_depth_and_count_rates() {
+        let s = series(
+            &[
+                r#"{"ev":"meta","t":0,"seq":0,"gpus":8,"servers":[4,4],"shards":1,"seed":1}"#,
+                r#"{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":2}"#,
+                r#"{"ev":"arrival","t":2,"seq":2,"task":1,"gang":0,"n_gpus":1}"#,
+                r#"{"ev":"dispatch","t":5,"seq":3,"task":0,"gpus":[0,1]}"#,
+                r#"{"ev":"complete","t":25,"seq":4,"task":0}"#,
+                r#"{"ev":"dispatch","t":25,"seq":5,"task":1,"gpus":[2]}"#,
+                r#"{"ev":"complete","t":38,"seq":6,"task":1}"#,
+            ],
+            10.0,
+        );
+        assert_eq!(s.points.len(), 4);
+        let p0 = &s.points[0]; // (0, 10]
+        assert_eq!((p0.arrivals, p0.queue_depth, p0.running, p0.busy_gpus), (2, 1, 1, 2));
+        assert_eq!(p0.util, 0.25);
+        let p2 = &s.points[2]; // (20, 30]: both completions and the re-dispatch
+        assert_eq!((p2.completions, p2.running, p2.busy_gpus), (1, 1, 1));
+        let p3 = &s.points[3]; // (30, 40]: drained
+        assert_eq!((p3.completions, p3.queue_depth, p3.running, p3.busy_gpus), (1, 0, 0, 0));
+        assert_eq!(p3.util, 0.0);
+    }
+
+    #[test]
+    fn shed_and_crash_paths_keep_occupancy_consistent() {
+        let s = series(
+            &[
+                r#"{"ev":"meta","t":0,"seq":0,"gpus":4,"servers":[4],"shards":1,"seed":1}"#,
+                r#"{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}"#,
+                r#"{"ev":"shed","t":1,"seq":2,"task":0,"at_door":1}"#,
+                r#"{"ev":"arrival","t":2,"seq":3,"task":1,"gang":0,"n_gpus":1}"#,
+                r#"{"ev":"dispatch","t":3,"seq":4,"task":1,"gpus":[0]}"#,
+                r#"{"ev":"oom","t":7,"seq":5,"task":1,"crashes":1}"#,
+                r#"{"ev":"recovery","t":12,"seq":6,"task":1}"#,
+                r#"{"ev":"dispatch","t":14,"seq":7,"task":1,"gpus":[1]}"#,
+                r#"{"ev":"complete","t":19,"seq":8,"task":1}"#,
+            ],
+            10.0,
+        );
+        assert_eq!(s.points.len(), 2);
+        let p0 = &s.points[0];
+        assert_eq!((p0.sheds, p0.queue_depth, p0.running, p0.busy_gpus), (1, 1, 0, 0));
+        let p1 = &s.points[1];
+        assert_eq!((p1.completions, p1.queue_depth, p1.running, p1.busy_gpus), (1, 0, 0, 0));
+    }
+
+    #[test]
+    fn csv_is_deterministic_and_headers_match() {
+        let lines = [
+            r#"{"ev":"meta","t":0,"seq":0,"gpus":2,"servers":[2],"shards":1,"seed":1}"#,
+            r#"{"ev":"arrival","t":1,"seq":1,"task":0,"gang":0,"n_gpus":1}"#,
+            r#"{"ev":"dispatch","t":2,"seq":2,"task":0,"gpus":[0]}"#,
+            r#"{"ev":"complete","t":65,"seq":3,"task":0}"#,
+        ];
+        let a = series(&lines, 60.0).to_csv();
+        let b = series(&lines, 60.0).to_csv();
+        assert_eq!(a, b);
+        assert!(a.starts_with(CSV_HEADER));
+        assert_eq!(a.lines().count(), 3, "header + two windows");
+    }
+
+    #[test]
+    fn empty_trace_yields_no_points() {
+        let s = series(&[], 60.0);
+        assert!(s.points.is_empty());
+    }
+}

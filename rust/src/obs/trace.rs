@@ -20,6 +20,12 @@ pub struct TraceSink {
     w: BufWriter<File>,
     path: String,
     seq: u64,
+    /// Records lost to failed writes (`emit` keeps the run going — tracing
+    /// must never alter a scheduling outcome). Surfaced post-run in the
+    /// report `obs` section and as `carma_trace_dropped_total`.
+    dropped: u64,
+    /// One stderr warning per sink, not one per lost record.
+    warned: bool,
 }
 
 impl std::fmt::Debug for TraceSink {
@@ -27,6 +33,7 @@ impl std::fmt::Debug for TraceSink {
         f.debug_struct("TraceSink")
             .field("path", &self.path)
             .field("seq", &self.seq)
+            .field("dropped", &self.dropped)
             .finish()
     }
 }
@@ -39,6 +46,8 @@ impl TraceSink {
             w: BufWriter::new(f),
             path: path.to_string(),
             seq: 0,
+            dropped: 0,
+            warned: false,
         })
     }
 
@@ -46,14 +55,32 @@ impl TraceSink {
         &self.path
     }
 
-    /// Records written so far.
+    /// Records written so far (sequence numbers are assigned even to
+    /// records whose write failed — `seq` stays a pure function of commit
+    /// order, never of I/O luck).
     pub fn records(&self) -> u64 {
         self.seq
     }
 
+    /// Records lost to failed writes or flushes.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn warn_once(&mut self, what: &str) {
+        if !self.warned {
+            eprintln!(
+                "carma obs: trace {what} to {} failed — counting drops, run continues",
+                self.path
+            );
+            self.warned = true;
+        }
+    }
+
     /// Append one record: `{"ev": kind, "seq": N, "t": t_s, ...fields}`.
-    /// Write errors degrade to stderr warnings — tracing must never alter
-    /// the scheduling outcome of a run.
+    /// Write errors degrade to a drop counter plus ONE stderr warning —
+    /// tracing must never alter the scheduling outcome of a run, and a dead
+    /// disk must not flood stderr at one line per commit.
     pub fn emit(&mut self, t_s: f64, kind: &str, fields: Vec<(&str, Json)>) {
         let mut rec = json::obj(fields);
         rec.set("t", json::num(t_s));
@@ -62,14 +89,18 @@ impl TraceSink {
         self.seq += 1;
         let line = rec.to_string_compact();
         if writeln!(self.w, "{line}").is_err() {
-            eprintln!("carma obs: trace write to {} failed", self.path);
+            self.dropped += 1;
+            self.warn_once("write");
         }
     }
 
-    /// Flush buffered records to disk (also runs on drop).
+    /// Flush buffered records to disk (also runs on drop). A failed flush
+    /// loses the buffered tail; count it as one drop so the report's
+    /// `obs.trace_dropped` never reads zero for a truncated file.
     pub fn flush(&mut self) {
         if self.w.flush().is_err() {
-            eprintln!("carma obs: trace flush to {} failed", self.path);
+            self.dropped += 1;
+            self.warn_once("flush");
         }
     }
 }
@@ -126,6 +157,23 @@ mod tests {
         assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
         std::fs::remove_file(&a).ok();
         std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn failed_writes_count_drops_instead_of_flooding_stderr() {
+        // /dev/full accepts the open but fails every write with ENOSPC:
+        // the sink must keep assigning seq numbers, count the loss, and
+        // leave the run alone
+        let Ok(mut sink) = TraceSink::create("/dev/full") else {
+            return; // exotic container without /dev/full: nothing to test
+        };
+        let big = "x".repeat(16 * 1024); // larger than the BufWriter buffer
+        sink.emit(0.0, "arrival", vec![("pad", json::s(&big))]);
+        sink.emit(1.0, "complete", vec![("pad", json::s(&big))]);
+        sink.flush();
+        assert_eq!(sink.records(), 2, "seq stays a pure function of commits");
+        assert!(sink.dropped() >= 1, "lost records must be counted");
     }
 
     #[test]

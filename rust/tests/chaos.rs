@@ -10,7 +10,7 @@ use carma::config::schema::{
 };
 use carma::coordinator::carma::{run_trace, RunOutcome};
 use carma::estimators;
-use carma::util::json::Json;
+use carma::obs::replay_str;
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::trace::{trace_cluster, trace_gang};
 
@@ -134,49 +134,16 @@ fn server_kill_leaves_no_task_non_terminal_and_no_dispatch_on_dead_hardware() {
     assert_conservation(&out, "server-kill");
     assert!(out.report.resilience.faults_server > 0, "servers must fail");
 
-    let server_gpus =
-        |s: usize| -> Vec<usize> { (s * GPUS_PER_SERVER..(s + 1) * GPUS_PER_SERVER).collect() };
-    let mut outages = vec![0i64; SERVERS * GPUS_PER_SERVER];
-    let mut saw_dispatch_during_outage_window = false;
-    for line in text.lines() {
-        let j = Json::parse(line).expect("trace line parses");
-        let ev = j.str_of("ev").to_string();
-        match ev.as_str() {
-            "fault" | "repair" => {
-                let kind = j.str_of("kind").to_string();
-                let target = j.f64_of("target") as usize;
-                let delta = if ev == "fault" { 1 } else { -1 };
-                match kind.as_str() {
-                    "gpu" => outages[target] += delta,
-                    "server" => {
-                        for g in server_gpus(target) {
-                            outages[g] += delta;
-                        }
-                    }
-                    _ => {} // link: degraded, still placeable
-                }
-            }
-            "dispatch" => {
-                if let Some(gpus) = j.get("gpus").and_then(|g| g.as_arr()) {
-                    for g in gpus {
-                        let g = g.as_f64().unwrap() as usize;
-                        assert!(
-                            outages[g] <= 0,
-                            "dispatch onto quarantined GPU {g}: {line}"
-                        );
-                    }
-                }
-                if outages.iter().any(|&o| o > 0) {
-                    saw_dispatch_during_outage_window = true;
-                }
-            }
-            _ => {}
-        }
-    }
-    // the check above must have had teeth: some dispatch committed while
+    let rep = replay_str(&text);
+    assert!(rep.ok(), "replay violations: {:#?}", rep.violations);
+    assert_eq!(
+        rep.non_terminal, 0,
+        "a server kill must leave no task non-terminal"
+    );
+    // the health check must have had teeth: some dispatch committed while
     // part of the cluster was down (and correctly avoided it)
     assert!(
-        saw_dispatch_during_outage_window,
+        rep.dispatches_during_outage > 0,
         "no dispatch ever overlapped an outage — the avoidance check never engaged"
     );
 }

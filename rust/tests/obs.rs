@@ -9,8 +9,7 @@ use carma::config::schema::{
 };
 use carma::coordinator::carma::{run_service, run_trace, RunOutcome};
 use carma::estimators;
-use carma::obs::LogHistogram;
-use carma::util::json::Json;
+use carma::obs::{replay_str, LogHistogram};
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::trace::{trace_60, trace_cluster};
 
@@ -85,18 +84,13 @@ fn trace_covers_the_lifecycle_in_commit_order() {
         64,
         "every completion must be traced"
     );
-    // one compact JSON record per line, (t, seq) in commit order
-    let mut last_t = f64::NEG_INFINITY;
-    let mut last_seq = -1i64;
-    for line in text.lines() {
-        let j = Json::parse(line).expect("every trace line parses as JSON");
-        let t = j.f64_of("t");
-        let seq = j.f64_of("seq") as i64;
-        assert!(seq > last_seq, "seq must strictly increase");
-        assert!(t >= last_t, "time must never go backward");
-        last_t = t;
-        last_seq = seq;
-    }
+    // the full invariant engine replays the trace clean: schema, strict
+    // (t, seq) commit order, lifecycle legality, conservation
+    let rep = replay_str(&text);
+    assert!(rep.ok(), "replay violations: {:#?}", rep.violations);
+    assert_eq!(rep.seq_gaps, 0, "the sink must not drop records");
+    assert_eq!(rep.completed, 64, "replay must recount every completion");
+    assert_eq!(rep.non_terminal, 0, "every offered task must reach a terminal state");
 }
 
 #[test]
@@ -164,18 +158,14 @@ fn fault_records_interleave_with_the_lifecycle_in_commit_order() {
     ] {
         assert!(text.contains(ev), "fault trace must contain {ev}");
     }
-    // the interleaved stream stays in strict (t, seq) commit order
-    let mut last_t = f64::NEG_INFINITY;
-    let mut last_seq = -1i64;
-    for line in text.lines() {
-        let j = Json::parse(line).expect("every trace line parses as JSON");
-        let t = j.f64_of("t");
-        let seq = j.f64_of("seq") as i64;
-        assert!(seq > last_seq, "seq must strictly increase across fault records");
-        assert!(t >= last_t, "time must never go backward across fault records");
-        last_t = t;
-        last_seq = seq;
-    }
+    // the interleaved stream replays clean through the invariant engine:
+    // strict (t, seq) order across fault records, no dispatch ever lands
+    // on quarantined hardware, and every task still terminates
+    let rep = replay_str(&text);
+    assert!(rep.ok(), "replay violations: {:#?}", rep.violations);
+    assert_eq!(rep.seq_gaps, 0);
+    assert_eq!(rep.non_terminal, 0, "fault schedules must not leak non-terminal tasks");
+    assert_eq!(rep.terminal(), rep.offered, "conservation under chaos");
 }
 
 fn service_run(threads: usize, trace_out: Option<String>) -> RunOutcome {

@@ -1,0 +1,269 @@
+//! Trace-native analysis invariants (DESIGN.md §16): the span
+//! reconstruction partitions every task's lifetime exactly, the JCT
+//! decomposition sums to the end-to-end time to within float residue, the
+//! analyzer's sketches reproduce the run report's percentiles across the
+//! shed, OOM and fault regimes, every record the engine emits passes the
+//! published schema, and synthetic trace corruption trips the invariant
+//! engine.
+
+use carma::config::schema::{
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind, TimelineMode,
+};
+use carma::coordinator::carma::{run_service, run_trace, RunOutcome};
+use carma::estimators;
+use carma::obs::replay::{analyze_str, replay_str, validate_record, Analysis};
+use carma::util::json::Json;
+use carma::workload::model_zoo::ModelZoo;
+use carma::workload::trace::{trace_60, trace_cluster};
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("carma_ta_{}_{name}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Run a configuration with `--trace-out`, hand back the trace text and
+/// the run outcome it must agree with.
+fn traced(
+    mut c: CarmaConfig,
+    name: &str,
+    run: impl FnOnce(CarmaConfig) -> RunOutcome,
+) -> (String, RunOutcome) {
+    let path = tmp(name);
+    c.obs.trace_out = Some(path.clone());
+    let out = run(c);
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let _ = std::fs::remove_file(&path);
+    (text, out)
+}
+
+/// Closed-loop cluster run: 64 tasks over 2×4 GPUs, MAGM+oracle.
+fn cluster_trace(name: &str, faults: Option<(FaultProfile, f64, u64)>) -> (String, RunOutcome) {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+    c.coordinator.shards = 2;
+    if let Some((profile, rate, seed)) = faults {
+        c.faults.profile = profile;
+        c.faults.rate_per_hour = rate;
+        c.faults.seed = seed;
+    }
+    traced(c, name, |c| {
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 64, 8, 13);
+        let est = estimators::build(c.estimator, "artifacts").unwrap();
+        run_trace(c, est, &trace, name)
+    })
+}
+
+/// Blind round-robin over the 60-task trace: guaranteed OOM crashes.
+fn oom_trace(name: &str) -> (String, RunOutcome) {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::RoundRobin,
+        estimator: EstimatorKind::None,
+        ..Default::default()
+    };
+    c.smact_cap = None;
+    traced(c, name, |c| {
+        let zoo = ModelZoo::load();
+        let trace = trace_60(&zoo, 1);
+        let est = estimators::build(c.estimator, "artifacts").unwrap();
+        run_trace(c, est, &trace, name)
+    })
+}
+
+/// Saturating open-loop burst over 1×4 GPUs with a tight cap: sheds.
+fn service_trace(name: &str) -> (String, RunOutcome) {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(1, 4, 40.0);
+    c.coordinator.shards = 2;
+    c.service.arrivals = Some(ArrivalKind::Burst);
+    c.service.rate_per_min = 60.0;
+    c.service.duration_s = 300.0;
+    c.service.queue_cap = 2;
+    c.obs.timeline = TimelineMode::Off;
+    traced(c, name, |c| {
+        let est = estimators::build(c.estimator, "artifacts").unwrap();
+        run_service(c, est, name)
+    })
+}
+
+/// Sketch-tolerance comparison: the documented ±5% bucket error, 6%
+/// asserted (same slack as the recorder's own tests).
+fn close(got: f64, want: f64) -> bool {
+    (got - want).abs() <= want.abs().max(got.abs()) * 0.06 + 1e-9
+}
+
+/// The cross-regime contract: clean replay, exact conservation against
+/// the report, sketch-faithful percentiles, exact span accounting.
+fn assert_analysis_matches_report(ctx: &str, a: &Analysis, out: &RunOutcome) {
+    let rep = &a.replay;
+    assert!(rep.ok(), "{ctx}: replay violations: {:#?}", rep.violations);
+    assert_eq!(rep.seq_gaps, 0, "{ctx}: trace has sequence gaps");
+    assert_eq!(rep.non_terminal, 0, "{ctx}: tasks left non-terminal");
+    let r = &out.report;
+    assert_eq!(rep.offered, r.service.offered as u64, "{ctx}: offered");
+    assert_eq!(rep.completed, r.completed as u64, "{ctx}: completed");
+    assert_eq!(rep.shed, r.service.shed, "{ctx}: shed");
+    assert_eq!(
+        a.queue_delay.count(),
+        out.recorder.queue_delay.count(),
+        "{ctx}: queue-delay sample count"
+    );
+    assert_eq!(a.jct.count(), r.completed as u64, "{ctx}: JCT sample count");
+    for (key, got, want) in [
+        ("p50", a.queue_delay.percentile(50.0), r.service.queue_delay_p50_s),
+        ("p99", a.queue_delay.percentile(99.0), r.service.queue_delay_p99_s),
+        ("p999", a.queue_delay.percentile(99.9), r.service.queue_delay_p999_s),
+    ] {
+        assert!(
+            close(got, want),
+            "{ctx}: analyzer queue-delay {key} {got} vs report {want}"
+        );
+    }
+    if a.jct.count() > 0 {
+        assert!(
+            close(a.jct.mean(), out.recorder.avg_jct_s()),
+            "{ctx}: analyzer mean JCT {} vs report {}",
+            a.jct.mean(),
+            out.recorder.avg_jct_s()
+        );
+    }
+}
+
+#[test]
+fn spans_partition_the_task_lifetime_with_exact_decomposition() {
+    let (text, _) = cluster_trace("partition", None);
+    let a = analyze_str(&text, 60.0);
+    assert!(a.replay.ok(), "replay violations: {:#?}", a.replay.violations);
+    assert!(!a.spans.tasks.is_empty());
+    for t in &a.spans.tasks {
+        // contiguous, gap-free, in order: a partition of [arrival, terminal]
+        assert!(!t.spans.is_empty(), "task {} has no spans", t.task);
+        assert_eq!(t.spans[0].start_s, t.arrival_s, "task {} first span", t.task);
+        for w in t.spans.windows(2) {
+            assert_eq!(
+                w[0].end_s, w[1].start_s,
+                "task {}: spans must be contiguous",
+                t.task
+            );
+        }
+        let last = t.spans.last().unwrap();
+        assert_eq!(last.end_s, t.terminal_s, "task {} last span", t.task);
+        for s in &t.spans {
+            assert!(s.end_s >= s.start_s, "task {}: negative span", t.task);
+        }
+        // the decomposition sums to the end-to-end JCT exactly
+        assert!(
+            (t.decomposition.total_s() - t.jct_s()).abs() <= 1e-6,
+            "task {}: decomposition {} != JCT {}",
+            t.task,
+            t.decomposition.total_s(),
+            t.jct_s()
+        );
+    }
+    // and the makespan is the last completion commit
+    let max_complete = a
+        .spans
+        .tasks
+        .iter()
+        .filter(|t| t.outcome == "complete")
+        .map(|t| t.terminal_s)
+        .fold(0.0f64, f64::max);
+    assert_eq!(a.spans.makespan_s, max_complete);
+}
+
+#[test]
+fn analyzer_reproduces_the_report_across_shed_oom_and_fault_regimes() {
+    let (text, out) = service_trace("svc");
+    assert!(out.recorder.shed_total > 0, "burst run must shed");
+    let a = analyze_str(&text, 60.0);
+    assert!(a.replay.shed > 0, "sheds must surface in the replay");
+    assert_analysis_matches_report("service", &a, &out);
+
+    let (text, out) = oom_trace("oom");
+    assert!(out.report.oom_crashes > 0, "blind run must OOM");
+    let a = analyze_str(&text, 60.0);
+    assert_analysis_matches_report("oom", &a, &out);
+    let interrupted = a.spans.tasks.iter().any(|t| t.interruptions > 0);
+    assert!(interrupted, "OOM crashes must open backoff spans");
+
+    let (text, out) = cluster_trace("faults", Some((FaultProfile::Mixed, 60.0, 3)));
+    let res = &out.report.resilience;
+    assert!(res.faults_gpu + res.faults_server + res.faults_link > 0);
+    let a = analyze_str(&text, 60.0);
+    assert_analysis_matches_report("faults", &a, &out);
+}
+
+#[test]
+fn every_emitted_record_passes_the_published_schema() {
+    let (text, _) = cluster_trace("schema", Some((FaultProfile::Mixed, 60.0, 3)));
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        let rec = Json::parse(line).expect("every trace line parses");
+        if let Err(e) = validate_record(&rec) {
+            panic!("emitted record fails its own schema: {e}\n  {line}");
+        }
+    }
+}
+
+#[test]
+fn synthetic_corruption_trips_the_invariant_engine() {
+    let (text, _) = cluster_trace("corrupt", None);
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > 10);
+    assert!(replay_str(&text).ok(), "the uncorrupted trace must be clean");
+
+    // dropping a mid-trace record leaves a sequence gap
+    let mut dropped = lines.clone();
+    dropped.remove(lines.len() / 2);
+    let rep = replay_str(&dropped.join("\n"));
+    assert!(rep.seq_gaps > 0, "a dropped record must count as a gap");
+    assert!(!rep.ok());
+
+    // swapping two adjacent records breaks strict (t, seq) order
+    let mut swapped = lines.clone();
+    swapped.swap(lines.len() / 2, lines.len() / 2 + 1);
+    assert!(!replay_str(&swapped.join("\n")).ok(), "out-of-order records must violate");
+
+    // duplicating a terminal record is an illegal lifecycle transition
+    let dup = lines
+        .iter()
+        .find(|l| l.contains("\"ev\":\"complete\""))
+        .expect("trace has completions");
+    let mut duped: Vec<String> = lines.iter().map(|s| s.to_string()).collect();
+    let mut forged = Json::parse(dup).unwrap();
+    let seq = forged.f64_of("seq");
+    let t = forged.f64_of("t");
+    forged.set("seq", carma::util::json::num(seq + 100_000.0));
+    forged.set("t", carma::util::json::num(t + 1e6));
+    duped.push(forged.to_string_compact());
+    assert!(
+        !replay_str(&duped.join("\n")).ok(),
+        "a double completion must violate the lifecycle"
+    );
+
+    // garbage bytes are a schema violation, not a crash
+    let mut garbled: Vec<String> = lines.iter().map(|s| s.to_string()).collect();
+    garbled.insert(lines.len() / 2, "{not json".to_string());
+    assert!(!replay_str(&garbled.join("\n")).ok(), "garbage must violate");
+}
+
+#[test]
+fn analysis_summary_is_byte_deterministic() {
+    // same trace bytes in -> same summary bytes out, twice over
+    let (text, _) = cluster_trace("det", Some((FaultProfile::Mixed, 60.0, 3)));
+    let a = analyze_str(&text, 60.0).to_json().to_string_compact();
+    let b = analyze_str(&text, 60.0).to_json().to_string_compact();
+    assert_eq!(a, b);
+}
