@@ -3,12 +3,43 @@
 //! `repro all` grid (~40 runs) stays interactive (DESIGN.md §Perf: the
 //! coordinator must never be the bottleneck).
 
-use carma::bench::{black_box, Bencher};
+use carma::bench::{black_box, smoke_mode, Bencher};
 use carma::config::schema::{CarmaConfig, CollocationMode, EstimatorKind, PolicyKind};
 use carma::coordinator::carma::run_trace;
 use carma::estimators;
+use carma::sim::{Engine, Event};
 use carma::workload::model_zoo::ModelZoo;
 use carma::workload::trace::{trace_60, trace_90};
+
+/// Arena event core under steady-state churn (DESIGN.md §17): a pre-sized
+/// engine cycling schedule/pop through the slot free list must stay
+/// allocation-free — the per-event cost here is the floor under every
+/// simulation bench below.
+fn bench_arena_event_core(b: &Bencher) {
+    println!("\n== arena event core (schedule/pop churn, pre-sized lanes) ==");
+    let depth = if smoke_mode() { 1_000 } else { 100_000 };
+    let mut e = Engine::with_lane_capacities(5, depth + 16, depth / 4 + 16);
+    // hold `depth` events pending so every cycle works a deep tournament
+    for i in 0..depth {
+        e.schedule_in_on(i % 5, 1.0 + i as f64, Event::TaskArrival(i));
+    }
+    let mut i = depth;
+    let r = b.bench(&format!("schedule_pop_churn_{depth}_pending"), || {
+        let (_, ev) = e.pop().expect("engine holds `depth` pending events");
+        black_box(&ev);
+        i += 1;
+        e.schedule_in_on(i % 5, 1.0 + (i % 97) as f64, Event::TaskArrival(i));
+    });
+    r.report();
+    r.report_throughput(1.0, "events");
+    let s = e.stats();
+    assert_eq!(s.lane_reallocs, 0, "churn bench must never grow a lane");
+    assert_eq!(s.arena_reallocs, 0, "churn bench must never grow the arena");
+    println!(
+        "  arena high water {} of {} slots, 0 reallocs",
+        s.arena_high_water, s.arena_capacity
+    );
+}
 
 fn main() {
     let b = Bencher::default();
@@ -52,6 +83,8 @@ fn main() {
         black_box(run_trace(cfg, e, &t60, "bench").report.completed);
     });
     r.report();
+
+    bench_arena_event_core(&b);
 
     println!("\n== trace generation ==");
     b.bench("trace_90_generation", || {

@@ -227,12 +227,44 @@ fi
 rm -rf "$CHAOS_DIR"
 echo "trace-analyze smoke OK: clean replay, byte-identical summary, schema published"
 
+step "delta-views smoke: incremental snapshots vs full rebuild, byte-for-byte"
+# DESIGN.md §17: per-server delta maintenance must be invisible in the
+# results — identical JSON with delta views on/off, serial or threaded
+DELTA_BASE=(run --servers 8 --gpus-per-server 4 --shards 4 --estimator oracle --margin 2 \
+    --seed 7 --json)
+V_ON1="$("$BIN" "${DELTA_BASE[@]}" --delta-views on)"
+V_ON4="$("$BIN" "${DELTA_BASE[@]}" --delta-views on --engine-threads 4)"
+V_OFF="$("$BIN" "${DELTA_BASE[@]}" --delta-views off)"
+if [ "$V_ON1" != "$V_ON4" ]; then
+    echo "DETERMINISM FAILURE: delta views diverged across engine threads" >&2
+    diff <(printf '%s\n' "$V_ON1") <(printf '%s\n' "$V_ON4") >&2 || true
+    exit 1
+fi
+if [ "$V_ON1" != "$V_OFF" ]; then
+    echo "DETERMINISM FAILURE: delta-maintained views diverged from full rebuild" >&2
+    diff <(printf '%s\n' "$V_ON1") <(printf '%s\n' "$V_OFF") >&2 || true
+    exit 1
+fi
+# open-loop too: the arrival stream + shed path under delta maintenance
+SVC_DELTA=(run --servers 2 --gpus-per-server 4 --arrivals poisson --rate 40 --duration 420 \
+    --queue-cap 2 --shards 4 --estimator oracle --margin 2 --seed 7 --json)
+W_ON4="$("$BIN" "${SVC_DELTA[@]}" --delta-views on --engine-threads 4)"
+W_OFF="$("$BIN" "${SVC_DELTA[@]}" --delta-views off)"
+if [ "$W_ON4" != "$W_OFF" ]; then
+    echo "DETERMINISM FAILURE: open-loop delta views diverged from full rebuild" >&2
+    diff <(printf '%s\n' "$W_ON4") <(printf '%s\n' "$W_OFF") >&2 || true
+    exit 1
+fi
+echo "delta-views smoke OK: byte-identical results with incremental and full-rebuild snapshots"
+
 step "perf ledger: bench smokes + scale repros write real BENCH_sim.json rows"
 # 1-iteration smokes measure real (if noisy) rows; they land in the repo-root
 # ledger so the perf trajectory stays populated every CI run
 CARMA_BENCH_SMOKE=1 cargo bench --bench cluster_scale
 CARMA_BENCH_SMOKE=1 cargo bench --bench shard_scale
 CARMA_BENCH_SMOKE=1 cargo bench --bench gang_scale
+# arena event core churn row (asserts 0 lane/arena reallocs internally)
+CARMA_BENCH_SMOKE=1 cargo bench --bench sim_throughput
 # the scale studies append their own comparison sections
 "$BIN" repro placement_scale
 "$BIN" repro service_scale
@@ -243,13 +275,17 @@ CARMA_BENCH_SMOKE=1 "$BIN" repro obs_overhead
 CARMA_BENCH_SMOKE=1 "$BIN" repro chaos_scale
 # trace-analyze ledger: clean replay + sketch reproduction over shed/chaos traces
 CARMA_BENCH_SMOKE=1 "$BIN" repro trace_analyze
-for SECTION in shard_scale placement_scale service_scale obs_overhead chaos_scale trace_analyze; do
+# engine-scale ledger: delta views vs full rebuild + arena/lane no-realloc and
+# recorder-memory assertions over the open-loop stream (gated ≥1.2x in smoke,
+# ≥2x on a dedicated run)
+CARMA_BENCH_SMOKE=1 "$BIN" repro engine_scale
+for SECTION in shard_scale placement_scale service_scale obs_overhead chaos_scale trace_analyze engine_scale; do
     if ! grep -q "\"$SECTION\"" BENCH_sim.json; then
         echo "LEDGER FAILURE: BENCH_sim.json is missing the $SECTION section" >&2
         exit 1
     fi
 done
-echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale, obs_overhead, chaos_scale and trace_analyze"
+echo "perf ledger OK: BENCH_sim.json carries shard_scale, placement_scale, service_scale, obs_overhead, chaos_scale, trace_analyze and engine_scale"
 
 echo
 echo "CI green."

@@ -201,11 +201,26 @@ pub struct EngineConfig {
     /// Threads the simulation engine runs on. 1 = serial (the default);
     /// 0 = auto (one per available core, capped at 8).
     pub threads: usize,
+    /// Delta view maintenance (DESIGN.md §17): commits invalidate only the
+    /// per-server views they touched, so a snapshot rebuild is O(touched
+    /// servers) instead of O(cluster). Decisions are value-identical either
+    /// way — `false` restores the full-rebuild baseline and exists for the
+    /// `engine_scale` comparison and for bisection.
+    pub delta_views: bool,
+    /// Paranoia hook for the differential property suite: after every
+    /// committed event, compare the delta-maintained views field-for-field
+    /// (floats bitwise) against a from-scratch rebuild and panic on any
+    /// divergence. Far too slow for real runs; not exposed on the CLI.
+    pub verify_views: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { threads: 1 }
+        EngineConfig {
+            threads: 1,
+            delta_views: true,
+            verify_views: false,
+        }
     }
 }
 
@@ -872,6 +887,11 @@ impl CarmaConfig {
             self.engine.threads = usize::try_from(v)
                 .map_err(|_| format!("engine.threads must be >= 0, got {v}"))?;
         }
+        if let Some(v) = doc.get("engine.delta_views") {
+            self.engine.delta_views = v
+                .as_bool()
+                .ok_or_else(|| format!("engine.delta_views must be a bool, got {v:?}"))?;
+        }
         if let Some(v) = doc.get("fabric.profile").and_then(|v| v.as_str()) {
             self.fabric.profile = FabricProfile::parse(v)
                 .ok_or_else(|| format!("unknown fabric profile '{v}'"))?;
@@ -1379,14 +1399,19 @@ mod tests {
 
     #[test]
     fn engine_section_sets_threads() {
-        // the default stays the serial engine
+        // the default stays the serial engine with delta views on
         let c = CarmaConfig::default();
         assert_eq!(c.engine.threads, 1);
+        assert!(c.engine.delta_views);
+        assert!(!c.engine.verify_views);
 
-        let doc = toml::parse("[engine]\nthreads = 4\n").unwrap();
+        let doc = toml::parse("[engine]\nthreads = 4\ndelta_views = false\n").unwrap();
         let mut c = CarmaConfig::default();
         c.apply(&doc).unwrap();
         assert_eq!(c.engine.threads, 4);
+        assert!(!c.engine.delta_views);
+        let doc = toml::parse("[engine]\ndelta_views = 3\n").unwrap();
+        assert!(CarmaConfig::default().apply(&doc).is_err());
 
         // 0 = auto-detect is a legal setting
         let doc = toml::parse("[engine]\nthreads = 0\n").unwrap();

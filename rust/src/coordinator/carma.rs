@@ -19,10 +19,18 @@
 //! per-shard mapper work — the O(GPUs) monitor-snapshot build and the
 //! policy scans — out across a [`WorkerPool`], and commits every result on
 //! this thread in strict `(time, seq)` order. Speculative plans are tagged
-//! with the `(state_epoch, now)` they were computed against and are
+//! with the `(state_epoch, quantum)` they were computed against and are
 //! discarded (and recomputed inline) whenever a commit moved the cluster
 //! under them, which is what makes a threaded run byte-identical to the
 //! serial one rather than merely statistically close.
+//!
+//! Snapshot maintenance is *incremental* (DESIGN.md §17): alongside the
+//! global `state_epoch` each server carries its own epoch, bumped only by
+//! commits that touch it. A dispatch on server `s` therefore rebuilds only
+//! `views[s]` on the next snapshot — the other servers' views carry
+//! forward by `Arc` bump. Plans still validate against the GLOBAL epoch (a
+//! mapping decision reads every server's view), so the narrowing changes
+//! which `ServerView`s get rebuilt, never which plans commit.
 
 use std::sync::Arc;
 
@@ -37,7 +45,7 @@ use crate::metrics::report::RunReport;
 use crate::obs::{Phase, Profiler, TraceSink};
 use crate::sim::faults::{self, FaultKind, FaultRecord};
 use crate::sim::parallel::{resolve_threads, WorkerPool};
-use crate::sim::{Engine, Event, TaskId};
+use crate::sim::{Engine, EngineStats, Event, TaskId};
 use crate::util::json::{self, Json};
 use crate::util::units::GIB;
 use crate::workload::memsim;
@@ -161,6 +169,45 @@ pub struct RunOutcome {
     /// `report`, so byte-compared artifacts stay timing-free by structure,
     /// not by discipline.
     pub profile: Option<Json>,
+    /// View-maintenance counters (DESIGN.md §17): how often the snapshot
+    /// cache hit, how many rebuilds were full vs delta, servers rebuilt vs
+    /// carried forward. Deterministic (no wall-clock), but kept out of the
+    /// report — they describe the engine, not the schedule.
+    pub view_stats: ViewStats,
+    /// Event-arena + lane-storage counters from the engine
+    /// ([`EngineStats`]): high-water marks and mid-run reallocation counts.
+    pub engine_stats: EngineStats,
+}
+
+/// Snapshot-maintenance counters (DESIGN.md §17), surfaced on
+/// [`RunOutcome`] and in the `--profile` JSON's `views` section.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ViewStats {
+    /// `snapshot()` calls satisfied entirely from cache (no server rebuilt).
+    pub snapshot_hits: u64,
+    /// Rebuilds that reconstructed every server view.
+    pub full_rebuilds: u64,
+    /// Rebuilds that spliced a strict subset of fresh views into the
+    /// carried-forward vector.
+    pub delta_applies: u64,
+    /// Total server views built from scratch.
+    pub servers_rebuilt: u64,
+    /// Total server views carried forward by `Arc` bump.
+    pub servers_reused: u64,
+    /// Differential checks run by the `verify_views` paranoia hook.
+    pub verified: u64,
+}
+
+impl ViewStats {
+    /// Fraction of snapshot requests (hit or rebuild) served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.snapshot_hits + self.full_rebuilds + self.delta_applies;
+        if total == 0 {
+            0.0
+        } else {
+            self.snapshot_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Inputs of one shard's speculative mapping scan — everything the pure
@@ -176,14 +223,23 @@ struct PlanJob {
     admissible: Result<(), &'static str>,
 }
 
-/// The `(epoch, now)`-keyed monitor snapshot the mapping scans read. Shared
-/// (`Arc`) so parallel plan rounds reference one copy, and cached so
-/// back-to-back attempts within an unchanged quantum — the common case in a
-/// `kick_mappers` sweep — skip the O(GPUs) rebuild entirely (this is also a
-/// serial-path win; DESIGN.md §10).
+/// The cached monitor snapshot the mapping scans read, tagged with the
+/// per-server epochs and the engine quantum it was built under. Shared
+/// (`Arc`) so parallel plan rounds reference one copy; under delta
+/// maintenance (DESIGN.md §17) a partial rebuild clones this vector —
+/// each carried-forward `ServerView` is an `Arc` bump — and splices in
+/// only the stale servers' fresh views.
 struct ViewsCache {
+    /// Global `state_epoch` at build time (the full-rebuild cache key when
+    /// `engine.delta_views` is off — the PR-3 baseline).
     epoch: u64,
-    now_bits: u64,
+    /// Per-server epochs at build time; server `s` is stale iff its live
+    /// epoch moved.
+    epochs: Vec<u64>,
+    /// Engine `(time, seq)` quantum at build time. Only power-capped
+    /// servers read the clock (instantaneous draw), so a quantum mismatch
+    /// alone staleness-marks just those.
+    quantum: u64,
     views: Arc<Vec<ServerView>>,
 }
 
@@ -204,12 +260,23 @@ pub struct Carma {
     /// separately so the parallel frontier drain cannot over-count events
     /// that were popped but never processed after the final completion).
     processed: u64,
-    /// Monotone state-version counter: bumped (`touch`) on every mutation
-    /// that can change a mapping decision's inputs — GPU residency,
-    /// allocations, ramp progress, pinning, holds, monitor samples.
-    /// Snapshot and plan validity are keyed on `(state_epoch, now)`.
+    /// Monotone state-version counter: bumped (the `touch_*` family) on
+    /// every mutation that can change a mapping decision's inputs — GPU
+    /// residency, allocations, ramp progress, pinning, holds, monitor
+    /// samples, fabric occupancy. Plan validity is keyed on
+    /// `(state_epoch, quantum)`.
     state_epoch: u64,
+    /// Per-server state versions (DESIGN.md §17): `server_epochs[s]` moves
+    /// only when a commit touches server `s`, so the snapshot rebuild can
+    /// narrow to exactly the touched views. Fabric-only commits bump the
+    /// global epoch without moving any of these.
+    server_epochs: Vec<u64>,
+    /// Precomputed GPU → owning-server table (`topo.server_of_gpu` is a
+    /// linear scan; `touch_gpus` runs on every dispatch/release).
+    server_of: Vec<usize>,
     views_cache: Option<ViewsCache>,
+    /// View-maintenance counters surfaced on [`RunOutcome`] / `--profile`.
+    view_stats: ViewStats,
     /// Worker pool of the parallel engine (None ⇒ serial, the default).
     pool: Option<WorkerPool>,
     /// Interconnect topology + NIC occupancy (DESIGN.md §11).
@@ -372,17 +439,38 @@ impl Carma {
                 cfg.service.seed,
             )
         });
+        // lane 0 carries the arrival bulk + monitor/recovery traffic + the
+        // full fault schedule (strike and repair per record); each shard
+        // lane sees its share of the window/ramp/completion churn (~8
+        // events per task in flight across reschedules). Closed-loop runs
+        // size on the trace length. Open-loop runs are bounded by the LIVE
+        // set instead — exactly one ServiceArrival is ever in flight and
+        // the bounded queues cap the backlog — so lane storage must not
+        // scale with total offered load (a million-task sweep would
+        // otherwise pre-allocate hundreds of MB up front). The min() keeps
+        // short service runs on the exact trace-length sizing.
+        let lane0_full = 2 * n_est + 2 * faults.len() + 16;
+        let per_lane_full = (8 * n_est) / shards.max(1) + 16;
+        let (lane0_cap, per_lane_cap) = if service {
+            // 64 pending events per device is generous slack: residency is
+            // memory-bounded at a handful of tasks per GPU, and each live
+            // task holds one ramp + one live completion + a tail of stale
+            // (version-guarded) completions awaiting their old etas
+            let live = 64 * cluster.n_gpus() + shards * cfg.service.queue_cap + 64;
+            (
+                lane0_full.min(2 * live + 2 * faults.len() + 16),
+                per_lane_full.min((8 * live) / shards.max(1) + 16),
+            )
+        } else {
+            (lane0_full, per_lane_full)
+        };
+        let server_of: Vec<usize> = (0..cluster.n_gpus())
+            .map(|g| cluster.topo.server_of_gpu(g))
+            .collect();
+        let n_servers = cluster.n_servers();
         Carma {
             cfg,
-            // lane 0 carries the arrival bulk + monitor/recovery traffic +
-            // the full fault schedule (strike and repair per record); each
-            // shard lane sees its share of the window/ramp/completion
-            // churn (~8 events per task in flight across reschedules)
-            engine: Engine::with_lane_capacities(
-                1 + shards,
-                2 * n_est + 2 * faults.len() + 16,
-                (8 * n_est) / shards.max(1) + 16,
-            ),
+            engine: Engine::with_lane_capacities(1 + shards, lane0_cap, per_lane_cap),
             cluster,
             tasks,
             admission,
@@ -393,7 +481,10 @@ impl Carma {
             done_count: 0,
             processed: 0,
             state_epoch: 0,
+            server_epochs: vec![0; n_servers],
+            server_of,
             views_cache: None,
+            view_stats: ViewStats::default(),
             pool: (threads > 1).then(|| WorkerPool::new(threads)),
             fabric,
             gang_lane: GangLane::new(),
@@ -502,15 +593,44 @@ impl Carma {
                 eprintln!("carma: --metrics-out {path}: {e}");
             }
         }
+        let engine_stats = self.engine.stats();
+        let vs = self.view_stats;
         let profile = self.profiler.enabled().then(|| {
+            // view-maintenance + arena counters ride the profile JSON
+            // (stderr only): deterministic, but engine-descriptive — they
+            // never belong in the byte-compared report
+            let extra = vec![
+                (
+                    "views",
+                    json::obj(vec![
+                        ("snapshot_hits", json::num(vs.snapshot_hits as f64)),
+                        ("full_rebuilds", json::num(vs.full_rebuilds as f64)),
+                        ("delta_applies", json::num(vs.delta_applies as f64)),
+                        ("servers_rebuilt", json::num(vs.servers_rebuilt as f64)),
+                        ("servers_reused", json::num(vs.servers_reused as f64)),
+                        ("cache_hit_rate", json::num(vs.hit_rate())),
+                    ]),
+                ),
+                (
+                    "arena",
+                    json::obj(vec![
+                        ("high_water", json::num(engine_stats.arena_high_water as f64)),
+                        ("capacity", json::num(engine_stats.arena_capacity as f64)),
+                        ("lane_reallocs", json::num(engine_stats.lane_reallocs as f64)),
+                        ("arena_reallocs", json::num(engine_stats.arena_reallocs as f64)),
+                    ]),
+                ),
+            ];
             self.profiler
-                .to_json(self.processed, self.pool.as_ref().map(|p| p.occupancy()))
+                .to_json(self.processed, self.pool.as_ref().map(|p| p.occupancy()), extra)
         });
         RunOutcome {
             report: RunReport::from_recorder(label, &self.recorder),
             recorder: self.recorder,
             events: self.processed,
             profile,
+            view_stats: vs,
+            engine_stats,
         }
     }
 
@@ -532,6 +652,9 @@ impl Carma {
             let t1 = self.profiler.start();
             self.handle_event(ev);
             self.profiler.add(Phase::SerialCommit, t1);
+            if self.cfg.engine.verify_views {
+                self.verify_views();
+            }
             if self.drained() {
                 break;
             }
@@ -557,6 +680,9 @@ impl Carma {
                 let t1 = self.profiler.start();
                 self.handle_event(ev);
                 self.profiler.add(Phase::SerialCommit, t1);
+                if self.cfg.engine.verify_views {
+                    self.verify_views();
+                }
                 if self.drained() {
                     break 'quantum;
                 }
@@ -590,11 +716,49 @@ impl Carma {
         }
     }
 
-    /// Mark the mapping-relevant simulation state as changed: invalidates
-    /// the shared snapshot and every speculative plan in flight.
-    fn touch(&mut self) {
+    // -- state-epoch maintenance (DESIGN.md §17) -----------------------------
+    //
+    // Every mutation that can change a mapping decision's inputs bumps the
+    // GLOBAL epoch — that is what invalidates speculative plans (a plan
+    // reads every server's view, so any commit anywhere must discard it).
+    // The PER-SERVER epochs are the delta-maintenance refinement: only the
+    // servers a commit actually touched are marked, so the next snapshot
+    // rebuilds exactly those views and carries the rest forward.
+
+    /// Cluster-wide change (monitor samples: every window shifted).
+    fn touch_all(&mut self) {
         self.state_epoch += 1;
-        self.views_cache = None;
+        for e in &mut self.server_epochs {
+            *e += 1;
+        }
+    }
+
+    /// One server's state changed (its health, typically).
+    fn touch_server(&mut self, s: usize) {
+        self.state_epoch += 1;
+        self.server_epochs[s] += 1;
+    }
+
+    /// The servers owning `gpus` changed — the common dispatch / release /
+    /// ramp / hold shape. Repeat servers may be bumped more than once;
+    /// staleness only needs the epoch to have *moved*.
+    fn touch_gpus(&mut self, gpus: &[usize]) {
+        self.state_epoch += 1;
+        let mut last = usize::MAX;
+        for &g in gpus {
+            let s = self.server_of[g];
+            if s != last {
+                self.server_epochs[s] += 1;
+                last = s;
+            }
+        }
+    }
+
+    /// Only the fabric changed (link degrade / restore): plans rank with
+    /// fabric costs and must invalidate, but no server view embeds fabric
+    /// state, so no rebuild is owed.
+    fn touch_fabric(&mut self) {
+        self.state_epoch += 1;
     }
 
     /// Emit one trace record at the current simulated time. The field
@@ -977,7 +1141,7 @@ impl Carma {
                 let cost = self.fabric.gang_cost(&gpus);
                 let freed = self.book.release_all(id);
                 if !freed.is_empty() {
-                    self.touch();
+                    self.touch_gpus(&freed);
                 }
                 self.recorder
                     .on_gang_dispatch(id, gpus.len(), req.n_gpus, spanned, min_span, cost);
@@ -1005,7 +1169,7 @@ impl Carma {
             }
             GangPlan::Hold(new_holds) => {
                 if !new_holds.is_empty() {
-                    self.touch();
+                    self.touch_gpus(&new_holds);
                     self.recorder.on_gang_holds(new_holds.len() as u64);
                     let held: Vec<Json> =
                         new_holds.iter().map(|&g| json::num(g as f64)).collect();
@@ -1068,7 +1232,7 @@ impl Carma {
         self.gang_lane.expiries += 1;
         let freed = self.book.release_all(id);
         if !freed.is_empty() {
-            self.touch();
+            self.touch_gpus(&freed);
             self.recorder.on_gang_holds_expired(freed.len() as u64);
             let freed_ids: Vec<Json> = freed.iter().map(|&g| json::num(g as f64)).collect();
             self.trace_event("gang_hold_expire", || {
@@ -1158,7 +1322,7 @@ impl Carma {
             return;
         }
         let epoch = self.state_epoch;
-        let now_bits = self.engine.now().to_bits();
+        let quantum = self.engine.quantum();
         let policy = self.cfg.policy;
         let pre = self.preconditions();
         let t0 = self.profiler.start();
@@ -1168,7 +1332,7 @@ impl Carma {
             let jobs_ref = &jobs;
             let fabric = self.placement_fabric();
             pool.map(jobs_ref.len(), &|i| {
-                compute_plan(views_ref, policy, pre, fabric, &jobs_ref[i], epoch, now_bits)
+                compute_plan(views_ref, policy, pre, fabric, &jobs_ref[i], epoch, quantum)
             })
         };
         self.profiler.add(Phase::SpeculativePlan, t0);
@@ -1291,8 +1455,8 @@ impl Carma {
     fn attempt_map(&mut self, shard: usize) {
         let Some(id) = self.mappers[shard].selected else { return };
         let epoch = self.state_epoch;
-        let now_bits = self.engine.now().to_bits();
-        let plan = match self.mappers[shard].take_valid_plan(epoch, now_bits, id) {
+        let quantum = self.engine.quantum();
+        let plan = match self.mappers[shard].take_valid_plan(epoch, quantum, id) {
             Some(p) => p,
             None => {
                 let job = self.plan_job(shard).expect("selected task plans");
@@ -1304,7 +1468,7 @@ impl Carma {
                     self.placement_fabric(),
                     &job,
                     epoch,
-                    now_bits,
+                    quantum,
                 )
             }
         };
@@ -1396,7 +1560,7 @@ impl Carma {
             if self.gang_lane.active == Some(id) {
                 let freed = self.book.release_all(id);
                 if !freed.is_empty() {
-                    self.touch();
+                    self.touch_gpus(&freed);
                 }
                 self.gang_lane.clear();
                 self.feed_gang();
@@ -1411,47 +1575,112 @@ impl Carma {
         }
     }
 
-    /// Build (or reuse) the `(epoch, now)` snapshot of per-server power and
-    /// per-GPU monitor views the mapping scans read. With a pool, the
-    /// per-server construction — the O(GPUs) hot path — fans out.
+    /// Build (or reuse) the snapshot of per-server power and per-GPU
+    /// monitor views the mapping scans read, maintained *incrementally*
+    /// (DESIGN.md §17): only servers whose epoch moved since the cached
+    /// build — plus, across a quantum boundary, the power-capped servers
+    /// whose instantaneous draw reads the clock — are rebuilt; the rest
+    /// carry forward by `Arc` bump. With `engine.delta_views` off, any
+    /// change rebuilds everything (the PR-3 baseline, kept as the
+    /// perf-comparison and bisection arm). With a pool, the per-server
+    /// construction — the O(GPUs) hot path — fans out.
     fn snapshot(&mut self) -> Arc<Vec<ServerView>> {
         let now = self.engine.now();
-        if let Some(c) = &self.views_cache {
-            if c.epoch == self.state_epoch && c.now_bits == now.to_bits() {
-                return c.views.clone();
-            }
+        let quantum = self.engine.quantum();
+        let n_servers = self.cluster.servers.len();
+        let stale: Vec<usize> = match &self.views_cache {
+            None => (0..n_servers).collect(),
+            Some(c) if self.cfg.engine.delta_views => (0..n_servers)
+                .filter(|&s| {
+                    c.epochs[s] != self.server_epochs[s]
+                        || (c.quantum != quantum
+                            && self.cluster.topo.servers[s].power_cap_w.is_some())
+                })
+                .collect(),
+            Some(c) if c.epoch == self.state_epoch && c.quantum == quantum => Vec::new(),
+            Some(_) => (0..n_servers).collect(),
+        };
+        if stale.is_empty() {
+            self.view_stats.snapshot_hits += 1;
+            return self.views_cache.as_ref().expect("hit implies a cache").views.clone();
         }
         let t0 = self.profiler.start();
-        let n_servers = self.cluster.servers.len();
-        let views: Vec<ServerView> = {
+        let fresh: Vec<ServerView> = {
             let cluster = &self.cluster;
             let monitor = &self.monitor;
             let tasks = &self.tasks;
             let cfg = &self.cfg;
             let book = &self.book;
             let health = &self.health;
+            let stale_ref = &stale;
             match self.pool.as_ref() {
-                Some(pool) if n_servers >= 2 => pool.map(n_servers, &|i| {
-                    build_server_view(cluster, monitor, tasks, cfg, book, health, i, now)
+                Some(pool) if stale.len() >= 2 => pool.map(stale.len(), &|i| {
+                    build_server_view(cluster, monitor, tasks, cfg, book, health, stale_ref[i], now)
                 }),
-                _ => (0..n_servers)
-                    .map(|i| build_server_view(cluster, monitor, tasks, cfg, book, health, i, now))
+                _ => stale
+                    .iter()
+                    .map(|&s| build_server_view(cluster, monitor, tasks, cfg, book, health, s, now))
                     .collect(),
             }
         };
+        let views = if stale.len() == n_servers {
+            self.view_stats.full_rebuilds += 1;
+            fresh
+        } else {
+            // splice the fresh views into the carried-forward vector: each
+            // reused `ServerView` clone is an `Arc` refcount bump, not a
+            // per-GPU copy
+            self.view_stats.delta_applies += 1;
+            let cache = self.views_cache.as_ref().expect("partial rebuild implies a cache");
+            let mut views: Vec<ServerView> = cache.views.as_ref().clone();
+            for (v, &s) in fresh.into_iter().zip(&stale) {
+                views[s] = v;
+            }
+            views
+        };
+        self.view_stats.servers_rebuilt += stale.len() as u64;
+        self.view_stats.servers_reused += (n_servers - stale.len()) as u64;
         self.profiler.add(Phase::SnapshotBuild, t0);
         let views = Arc::new(views);
         self.views_cache = Some(ViewsCache {
             epoch: self.state_epoch,
-            now_bits: now.to_bits(),
+            epochs: self.server_epochs.clone(),
+            quantum,
             views: views.clone(),
         });
         views
     }
 
+    /// Differential paranoia hook (`cfg.engine.verify_views`, the property
+    /// suite's backbone): rebuild every server view from scratch and
+    /// compare it field-for-field — floats by bits — against what
+    /// `snapshot()` serves. Any divergence means a `touch_*` call site
+    /// under-classified a commit; panic with enough context to find it.
+    /// Pure reads plus a deterministic cache fill, so enabling it cannot
+    /// change a run's schedule or artifacts.
+    fn verify_views(&mut self) {
+        let views = self.snapshot();
+        let now = self.engine.now();
+        for s in 0..self.cluster.servers.len() {
+            let fresh = build_server_view(
+                &self.cluster,
+                &self.monitor,
+                &self.tasks,
+                &self.cfg,
+                &self.book,
+                &self.health,
+                s,
+                now,
+            );
+            assert_view_eq(&views[s], &fresh, s, now);
+        }
+        self.view_stats.verified += 1;
+    }
+
     fn dispatch(&mut self, id: TaskId, p: Placement) {
-        // residency, reservations and pinning are about to change
-        self.touch();
+        // residency, reservations and pinning are about to change — on
+        // exactly the target devices' servers
+        self.touch_gpus(&p.gpus);
         let now = self.engine.now();
         self.recorder.on_dispatch(id, now);
         self.trace_event("dispatch", || {
@@ -1520,10 +1749,10 @@ impl Carma {
             Some(&b) => b,
             None => return,
         };
-        // free memory is about to shrink (or the task to crash)
-        self.touch();
-        let seg_mib = (seg_bytes / (1024.0 * 1024.0)).ceil().max(1.0) as u64;
         let gpus = self.tasks[id].gpus.clone();
+        // free memory is about to shrink (or the task to crash)
+        self.touch_gpus(&gpus);
+        let seg_mib = (seg_bytes / (1024.0 * 1024.0)).ceil().max(1.0) as u64;
         for (k, &g) in gpus.iter().enumerate() {
             // page-backed scatter allocation: a slab may span a few holes,
             // but shredded-beyond-repair free memory still OOMs (§4.2)
@@ -1665,7 +1894,7 @@ impl Carma {
             if freed.is_empty() {
                 continue;
             }
-            self.touch();
+            self.touch_gpus(&freed);
             self.recorder.on_holds_invalidated(freed.len() as u64);
             let freed_ids: Vec<Json> = freed.iter().map(|&g| json::num(g as f64)).collect();
             self.trace_event("holds_invalidated", || {
@@ -1695,10 +1924,10 @@ impl Carma {
                 ("downtime_s", json::num(rec.downtime_s())),
             ]
         });
-        self.touch();
         match rec.kind {
             FaultKind::Gpu => {
                 let g = rec.target;
+                self.touch_server(self.server_of[g]);
                 self.health.gpu_outages[g] += 1;
                 if self.health.gpu_outages[g] == 1 {
                     self.trace_quarantine("gpu", g, "quarantined");
@@ -1711,6 +1940,7 @@ impl Carma {
             }
             FaultKind::Server => {
                 let s = rec.target;
+                self.touch_server(s);
                 self.health.server_outages[s] += 1;
                 if self.health.server_outages[s] == 1 {
                     self.trace_quarantine("server", s, "quarantined");
@@ -1724,6 +1954,8 @@ impl Carma {
             }
             FaultKind::Link => {
                 let s = rec.target;
+                // link outages re-price the fabric; no view embeds it
+                self.touch_fabric();
                 self.health.link_outages[s] += 1;
                 self.fabric
                     .set_link_degrade(s, self.cfg.faults.degrade_factor);
@@ -1743,20 +1975,22 @@ impl Carma {
     /// fault-free fabric arithmetic — and waiting work gets a kick.
     fn on_fault_repair(&mut self, i: usize) {
         let rec = self.faults[i].clone();
-        self.touch();
         let mut gpu_seconds = 0.0;
         match rec.kind {
             FaultKind::Gpu => {
+                self.touch_server(self.server_of[rec.target]);
                 self.health.gpu_outages[rec.target] -= 1;
                 gpu_seconds = rec.downtime_s();
             }
             FaultKind::Server => {
                 let s = rec.target;
+                self.touch_server(s);
                 self.health.server_outages[s] -= 1;
                 gpu_seconds = rec.downtime_s() * self.cluster.topo.servers[s].cfg.n_gpus as f64;
             }
             FaultKind::Link => {
                 let s = rec.target;
+                self.touch_fabric();
                 self.health.link_outages[s] -= 1;
                 if self.health.link_outages[s] == 0 {
                     self.fabric.set_link_degrade(s, 1.0);
@@ -1817,8 +2051,8 @@ impl Carma {
 
     /// Free all segments + residency of a task and update speeds.
     fn release(&mut self, id: TaskId) {
-        self.touch();
         let gpus = self.tasks[id].gpus.clone();
+        self.touch_gpus(&gpus);
         let segs = std::mem::take(&mut self.tasks[id].segs);
         for (k, &g) in gpus.iter().enumerate() {
             for seg in &segs[k] {
@@ -1934,7 +2168,8 @@ impl Carma {
 
     fn on_monitor_sample(&mut self) {
         // the windowed-SMACT inputs of every future mapping decision change
-        self.touch();
+        // on every server at once
+        self.touch_all();
         let now = self.engine.now();
         let dt = self.cfg.monitor.sample_period_s;
         for g in 0..self.cluster.n_gpus() {
@@ -1979,7 +2214,7 @@ impl Carma {
 /// here is a function of `(views, fabric, job)` only — no mutable driver
 /// state — so the speculative and inline paths are the same code, and
 /// fabric-aware runs stay byte-identical at every thread count (the
-/// fabric's NIC occupancy only changes under `touch()`ed commits).
+/// fabric's NIC occupancy only changes under `touch_*`ed commits).
 fn compute_plan(
     views: &[ServerView],
     policy: PolicyKind,
@@ -1987,7 +2222,7 @@ fn compute_plan(
     fabric: Option<&Fabric>,
     job: &PlanJob,
     epoch: u64,
-    now_bits: u64,
+    quantum: u64,
 ) -> MapPlan {
     let (outcome, explain) = match job.admissible {
         // statically unschedulable: the placement core never ran, so there
@@ -2006,7 +2241,7 @@ fn compute_plan(
     };
     MapPlan {
         epoch,
-        now_bits,
+        quantum,
         task: job.task,
         cursor_in: job.cursor_in,
         demand_gb: job.req.demand_gb,
@@ -2077,7 +2312,48 @@ fn build_server_view(
         id: spec.id,
         power_w,
         power_cap_w: spec.power_cap_w,
-        gpus,
+        gpus: gpus.into(),
+    }
+}
+
+/// Field-for-field comparison of a cached vs freshly-built [`ServerView`]
+/// — floats by bits — for the `verify_views` differential hook.
+fn assert_view_eq(cached: &ServerView, fresh: &ServerView, server: usize, now: f64) {
+    let ctx = |field: &str| format!("verify_views: server {server} diverged on {field} at t={now}");
+    assert_eq!(cached.id, fresh.id, "{}", ctx("id"));
+    assert_eq!(cached.power_w.to_bits(), fresh.power_w.to_bits(), "{}", ctx("power_w"));
+    assert_eq!(
+        cached.power_cap_w.map(f64::to_bits),
+        fresh.power_cap_w.map(f64::to_bits),
+        "{}",
+        ctx("power_cap_w")
+    );
+    assert_eq!(cached.gpus.len(), fresh.gpus.len(), "{}", ctx("gpus.len"));
+    for (c, f) in cached.gpus.iter().zip(fresh.gpus.iter()) {
+        let gctx = |field: &str| {
+            format!("verify_views: server {server} gpu {} diverged on {field} at t={now}", f.id)
+        };
+        assert_eq!(c.id, f.id, "{}", gctx("id"));
+        assert_eq!(c.server, f.server, "{}", gctx("server"));
+        assert_eq!(c.free_gb.to_bits(), f.free_gb.to_bits(), "{}", gctx("free_gb"));
+        assert_eq!(
+            c.smact_window.to_bits(),
+            f.smact_window.to_bits(),
+            "{}",
+            gctx("smact_window")
+        );
+        assert_eq!(c.n_tasks, f.n_tasks, "{}", gctx("n_tasks"));
+        assert_eq!(c.pinned, f.pinned, "{}", gctx("pinned"));
+        assert_eq!(c.held, f.held, "{}", gctx("held"));
+        assert_eq!(c.unhealthy, f.unhealthy, "{}", gctx("unhealthy"));
+        assert_eq!(c.mig_free_instance, f.mig_free_instance, "{}", gctx("mig_free_instance"));
+        assert_eq!(
+            c.mig_instance_mem_gb.to_bits(),
+            f.mig_instance_mem_gb.to_bits(),
+            "{}",
+            gctx("mig_instance_mem_gb")
+        );
+        assert_eq!(c.mig_enabled, f.mig_enabled, "{}", gctx("mig_enabled"));
     }
 }
 
@@ -2554,6 +2830,82 @@ mod tests {
         let j = out.report.to_json();
         assert!(j.get("service").is_some());
         assert!(j.get("placement_decisions").is_some());
+    }
+
+    #[test]
+    fn delta_views_off_is_byte_identical_to_on() {
+        use crate::config::schema::ClusterConfig;
+        // the §17 off-switch contract: delta maintenance changes which
+        // views get rebuilt, never what any decision reads — so the full
+        // report must match to the byte with the optimization disabled
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 64, 8, 11);
+        let mk = |delta: bool| {
+            let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+            c.cluster = ClusterConfig::homogeneous(4, 2, 40.0);
+            c.safety_margin_gb = 2.0;
+            c.coordinator.shards = 4;
+            c.engine.delta_views = delta;
+            run_trace(c, e, &trace, "delta")
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert_eq!(on.events, off.events);
+        assert_eq!(
+            on.report.to_json().to_string_pretty(),
+            off.report.to_json().to_string_pretty(),
+            "delta views must not move a single report byte"
+        );
+        assert!(
+            on.view_stats.servers_reused > 0,
+            "a 4-server run must carry some views forward"
+        );
+        assert!(on.view_stats.delta_applies > 0, "narrow rebuilds must occur");
+        assert_eq!(
+            off.view_stats.delta_applies, 0,
+            "the off arm must only do full rebuilds"
+        );
+    }
+
+    #[test]
+    fn verify_views_hook_passes_on_a_full_run() {
+        use crate::config::schema::ClusterConfig;
+        // the differential checker replays every commit: any
+        // under-classified touch_* site panics inside the run
+        let zoo = ModelZoo::load();
+        let trace = trace_cluster(&zoo, 32, 8, 3);
+        let (mut c, e) = cfg(PolicyKind::Magm, EstimatorKind::Oracle);
+        c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+        c.safety_margin_gb = 2.0;
+        c.coordinator.shards = 2;
+        c.engine.verify_views = true;
+        let out = run_trace(c, e, &trace, "verify");
+        assert_eq!(out.report.completed, 32);
+        assert!(
+            out.view_stats.verified > 64,
+            "the hook must run after every committed event (got {})",
+            out.view_stats.verified
+        );
+    }
+
+    #[test]
+    fn open_loop_lanes_are_sized_by_live_set_not_offered_load() {
+        use crate::config::schema::ArrivalKind;
+        // ~600 offered tasks on 4 GPUs: lane storage must be bounded by
+        // the live set (device count × churn), never the offered total,
+        // and the pre-sizing must hold — no lane or arena realloc mid-run
+        let (c, e) = service_cfg(ArrivalKind::Poisson, 60.0, 600.0, 8);
+        let offered = (c.service.rate_per_min / 60.0 * c.service.duration_s) as usize;
+        let out = run_service(c, e, "svc-presize");
+        assert!(out.recorder.tasks.len() > offered / 2, "load must materialize");
+        assert_eq!(out.engine_stats.lane_reallocs, 0, "lanes re-allocated mid-run");
+        assert_eq!(out.engine_stats.arena_reallocs, 0, "arena re-allocated mid-run");
+        assert!(
+            out.engine_stats.arena_high_water < out.engine_stats.arena_capacity,
+            "high water {} must sit under the pre-sized capacity {}",
+            out.engine_stats.arena_high_water,
+            out.engine_stats.arena_capacity
+        );
     }
 
     #[test]

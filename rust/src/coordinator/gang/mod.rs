@@ -268,7 +268,7 @@ mod tests {
             id,
             power_w: 0.0,
             power_cap_w: None,
-            gpus,
+            gpus: gpus.into(),
         }
     }
 
@@ -361,10 +361,10 @@ mod tests {
         let mut b = ReservationBook::new(&topo(2, 4));
         let mut views = two_by_four();
         // only 3 GPUs can take the demand right now
-        for v in views[0].gpus.iter_mut().skip(2) {
+        for v in views[0].gpus_mut().iter_mut().skip(2) {
             v.free_gb = 1.0;
         }
-        for v in views[1].gpus.iter_mut().skip(1) {
+        for v in views[1].gpus_mut().iter_mut().skip(1) {
             v.free_gb = 1.0;
         }
         let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(6, Some(8.0)),
@@ -389,8 +389,8 @@ mod tests {
         b.hold(0, 99); // another gang's hold (defensive: lane
                                   // heads rotate, stale holds must block)
         let mut views = two_by_four();
-        views[0].gpus[0].held = true;
-        views[0].gpus[1].pinned = true;
+        views[0].gpus_mut()[0].held = true;
+        views[0].gpus_mut()[1].pinned = true;
         let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(8, Some(8.0)),
                              Preconditions::default(), 7);
         let GangPlan::Hold(new) = plan else { panic!("expected Hold") };
@@ -404,7 +404,7 @@ mod tests {
         let f = fabric(2, 4);
         let b = ReservationBook::new(&topo(2, 4));
         let mut views = two_by_four();
-        for v in views[0].gpus.iter_mut() {
+        for v in views[0].gpus_mut().iter_mut() {
             v.n_tasks = 1; // busy but roomy
         }
         let excl = MappingRequest {
@@ -495,7 +495,7 @@ mod tests {
         );
         let b = ReservationBook::new(&t);
         let mut views = vec![sview(0, (0..4).map(|g| view(g, 0, 40.0, 0)).collect())];
-        views[0].gpus[1].free_gb = 1.0; // island 0 = {0,1}: gpu 1 ineligible
+        views[0].gpus_mut()[1].free_gb = 1.0; // island 0 = {0,1}: gpu 1 ineligible
         let plan = plan_gang(&views, &f, &b, &PowerConfig::default(), req(2, Some(8.0)),
                              Preconditions::default(), 7);
         assert_eq!(plan, GangPlan::Place(vec![2, 3]), "whole island beats a split pair");

@@ -170,7 +170,7 @@ mod tests {
             id: 0,
             power_w: 0.0,
             power_cap_w: None,
-            gpus,
+            gpus: gpus.into(),
         }
     }
 

@@ -468,7 +468,7 @@ mod tests {
             id,
             power_w: 0.0,
             power_cap_w: None,
-            gpus,
+            gpus: gpus.into(),
         }
     }
 

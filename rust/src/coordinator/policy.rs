@@ -49,6 +49,11 @@ pub struct GpuView {
 
 /// What the mapper knows about one server at decision time (the first level
 /// of the two-level mapping).
+///
+/// The per-GPU views are behind an `Arc` so cloning a `ServerView` is a
+/// refcount bump: the delta-maintained snapshot (DESIGN.md §17) carries
+/// untouched servers forward from the previous snapshot without copying or
+/// re-allocating their GPU arrays.
 #[derive(Debug, Clone)]
 pub struct ServerView {
     pub id: usize,
@@ -56,11 +61,18 @@ pub struct ServerView {
     pub power_w: f64,
     /// Power envelope (W); a server drawing at/above it is filtered out.
     pub power_cap_w: Option<f64>,
-    /// Per-GPU views, global ids.
-    pub gpus: Vec<GpuView>,
+    /// Per-GPU views, global ids (shared, immutable once built).
+    pub gpus: std::sync::Arc<[GpuView]>,
 }
 
 impl ServerView {
+    /// Mutable access to the GPU views while this `ServerView` is still
+    /// uniquely owned (construction-time fixups and tests). Panics once the
+    /// view has been shared — published snapshots are immutable.
+    pub fn gpus_mut(&mut self) -> &mut [GpuView] {
+        std::sync::Arc::get_mut(&mut self.gpus).expect("ServerView.gpus is shared, not mutable")
+    }
+
     /// First-level filter: can this server accept the request at all?
     /// Multi-GPU tasks never span servers, so a server must own enough
     /// GPUs; a server at its power envelope takes no new work.
@@ -132,9 +144,9 @@ pub fn select_gpus(
 /// };
 /// let servers = [
 ///     ServerView { id: 0, power_w: 400.0, power_cap_w: None,
-///                  gpus: vec![gpu(0, 0, 10.0), gpu(1, 0, 12.0)] },
+///                  gpus: vec![gpu(0, 0, 10.0), gpu(1, 0, 12.0)].into() },
 ///     ServerView { id: 1, power_w: 400.0, power_cap_w: None,
-///                  gpus: vec![gpu(2, 1, 30.0), gpu(3, 1, 5.0)] },
+///                  gpus: vec![gpu(2, 1, 30.0), gpu(3, 1, 5.0)].into() },
 /// ];
 /// let req = MappingRequest { n_gpus: 1, demand_gb: Some(8.0), exclusive: false };
 /// let mut rr = 0;
@@ -182,7 +194,7 @@ mod tests {
             gpus: gpus.into_iter().map(|mut v| {
                 v.server = id;
                 v
-            }).collect(),
+            }).collect::<Vec<_>>().into(),
         }
     }
 

@@ -38,10 +38,16 @@ pub enum PlanOutcome {
 /// the plan and the serial recompute path runs instead (DESIGN.md §10).
 #[derive(Debug, Clone)]
 pub struct MapPlan {
-    /// Driver state-epoch the snapshot belonged to.
+    /// Driver state-epoch the snapshot belonged to. This stays the *global*
+    /// epoch even under delta view maintenance (DESIGN.md §17): a mapping
+    /// decision reads every server's view, so a commit on any server must
+    /// invalidate in-flight plans — only the snapshot *rebuild* narrows to
+    /// the touched servers.
     pub epoch: u64,
-    /// Simulated clock (bit pattern) the snapshot belonged to.
-    pub now_bits: u64,
+    /// Engine time quantum the snapshot belonged to — the discrete
+    /// `(time, seq)` frontier counter, not `now.to_bits()`, so numerically
+    /// equal but bit-distinct timestamps (`-0.0`) can't fail validation.
+    pub quantum: u64,
     /// Task the plan maps (must still be the shard's selected task).
     pub task: TaskId,
     /// RR cursor the scan started from (must be unchanged on commit).
@@ -109,12 +115,12 @@ impl Mapper {
         self.plan = None;
     }
 
-    /// Consume the cached plan if it matches the live `(epoch, now, task,
-    /// cursor)` state; a stale plan is dropped either way.
-    pub fn take_valid_plan(&mut self, epoch: u64, now_bits: u64, task: TaskId) -> Option<MapPlan> {
+    /// Consume the cached plan if it matches the live `(epoch, quantum,
+    /// task, cursor)` state; a stale plan is dropped either way.
+    pub fn take_valid_plan(&mut self, epoch: u64, quantum: u64, task: TaskId) -> Option<MapPlan> {
         let plan = self.plan.take()?;
         let valid = plan.epoch == epoch
-            && plan.now_bits == now_bits
+            && plan.quantum == quantum
             && plan.task == task
             && plan.cursor_in == self.rr_cursor;
         valid.then_some(plan)
@@ -144,7 +150,7 @@ mod tests {
     fn plan_validation_rejects_every_stale_dimension() {
         let plan = |cursor_in| MapPlan {
             epoch: 5,
-            now_bits: 42.0f64.to_bits(),
+            quantum: 42,
             task: 3,
             cursor_in,
             demand_gb: Some(10.0),
@@ -157,17 +163,17 @@ mod tests {
         m.window_done = true;
 
         m.plan = Some(plan(0));
-        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 3).is_some());
+        assert!(m.take_valid_plan(5, 42, 3).is_some());
         assert!(m.plan.is_none(), "plan is consumed");
 
         m.plan = Some(plan(0));
-        assert!(m.take_valid_plan(6, 42.0f64.to_bits(), 3).is_none(), "stale epoch");
+        assert!(m.take_valid_plan(6, 42, 3).is_none(), "stale epoch");
         m.plan = Some(plan(0));
-        assert!(m.take_valid_plan(5, 43.0f64.to_bits(), 3).is_none(), "clock moved");
+        assert!(m.take_valid_plan(5, 43, 3).is_none(), "clock moved");
         m.plan = Some(plan(0));
-        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 4).is_none(), "different task");
+        assert!(m.take_valid_plan(5, 42, 4).is_none(), "different task");
         m.plan = Some(plan(9));
-        assert!(m.take_valid_plan(5, 42.0f64.to_bits(), 3).is_none(), "cursor moved");
+        assert!(m.take_valid_plan(5, 42, 3).is_none(), "cursor moved");
         assert!(m.plan.is_none(), "stale plans are dropped, not kept");
     }
 

@@ -1,0 +1,436 @@
+//! Engine-scale study (DESIGN.md §17): delta-maintained cluster views +
+//! the arena event core under a million-task open-loop stream.
+//!
+//! Two arms over open-loop service mode, both `--timeline off`:
+//!
+//! * **million-task arm** — 16×4 GPUs, a saturating Poisson stream offering
+//!   ≥10⁶ arrivals (most shed at the bounded queues), swept over
+//!   delta-views {on, off} × shards {1, 4} × engine threads {1, 4}. This is
+//!   the scale proof: the recorder holds O(buckets + GPUs + in-flight)
+//!   memory (stream mode, no per-task rows, small `live_high_water`), the
+//!   pre-sized lanes and event arena never reallocate mid-run, and the
+//!   results JSON is byte-identical across every (delta, threads) cell of a
+//!   shard count.
+//!
+//! * **view-churn-heavy arm** — 512 servers × 2 GPUs, moderate arrivals at
+//!   a long observation window, so wall-clock is dominated by `ServerView`
+//!   maintenance: every dispatch/completion commit invalidates the
+//!   snapshot, and the full-rebuild baseline (delta off) pays O(cluster)
+//!   per invalidation where delta maintenance rebuilds only the touched
+//!   server. The study *gates* on the events/sec win of delta-on vs
+//!   delta-off here: ≥2× on a dedicated run, a narrower structural gate
+//!   under `CARMA_BENCH_SMOKE`.
+//!
+//! A third phase re-runs a short slice of the million-task stream with
+//! `--trace-out` and byte-compares the JSONL trace across engine threads
+//! {1, 4} (delta on) and against the delta-off baseline, per shard count.
+//!
+//! The summary is appended to the `BENCH_sim.json` ledger under
+//! `engine_scale`; ci.sh fails if the section goes missing.
+
+use std::time::Instant;
+
+use crate::bench;
+use crate::config::schema::{
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind, TimelineMode,
+};
+use crate::coordinator::carma::{run_service, RunOutcome};
+use crate::estimators;
+use crate::util::json::{self, Json};
+
+use super::common::{save_json, DEFAULT_SEED};
+
+const SHARD_SWEEP: &[usize] = &[1, 4];
+const THREAD_SWEEP: &[usize] = &[1, 4];
+
+// -- million-task arm (scale + memory + determinism) ------------------------
+const M_SERVERS: usize = 16;
+const M_GPUS_PER_SERVER: usize = 4;
+/// 10 500/min over 6 000 s offers ~1.05M arrivals — comfortably past the
+/// 10⁶ floor even under Poisson variance.
+const M_RATE_PER_MIN: f64 = 10_500.0;
+const M_QUEUE_CAP: usize = 4;
+
+// -- view-churn-heavy arm (the ≥2× gate) ------------------------------------
+/// Many small servers: a full rebuild touches 512 views, a delta apply
+/// rebuilds only the server the commit landed on.
+const C_SERVERS: usize = 512;
+const C_GPUS_PER_SERVER: usize = 2;
+/// Twice the mapping pipeline's drain capacity (shards / window), so the
+/// shard queues stay busy without the run degenerating into shed handling.
+const C_RATE_PER_MIN: f64 = 8.0;
+const C_QUEUE_CAP: usize = 64;
+/// Long window = long monitor sample period: cluster-wide `touch_all`
+/// invalidations stay rare relative to per-commit invalidations, which is
+/// exactly the regime delta maintenance targets.
+const C_WINDOW_S: f64 = 60.0;
+
+/// Dedicated-run gate on the delta-on vs delta-off events/sec ratio.
+const GATE: f64 = 2.0;
+/// Smoke gate: CI containers share cores — the smoke catches "delta views
+/// stopped winning at all", not the precise 2× claim.
+const SMOKE_GATE: f64 = 1.2;
+
+fn million_cfg(
+    shards: usize,
+    threads: usize,
+    delta: bool,
+    duration_s: f64,
+    artifacts_dir: &str,
+) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(M_SERVERS, M_GPUS_PER_SERVER, 40.0);
+    c.coordinator.shards = shards;
+    c.engine.threads = threads;
+    c.engine.delta_views = delta;
+    c.service.arrivals = Some(ArrivalKind::Poisson);
+    c.service.rate_per_min = M_RATE_PER_MIN;
+    c.service.duration_s = duration_s;
+    c.service.queue_cap = M_QUEUE_CAP;
+    c.service.seed = DEFAULT_SEED;
+    c.obs.timeline = TimelineMode::Off;
+    c.artifacts_dir = artifacts_dir.to_string();
+    c
+}
+
+fn churn_cfg(delta: bool, duration_s: f64, artifacts_dir: &str) -> CarmaConfig {
+    let mut c = CarmaConfig {
+        policy: PolicyKind::Magm,
+        estimator: EstimatorKind::Oracle,
+        safety_margin_gb: 2.0,
+        ..Default::default()
+    };
+    c.cluster = ClusterConfig::homogeneous(C_SERVERS, C_GPUS_PER_SERVER, 40.0);
+    c.coordinator.shards = 4;
+    c.engine.threads = 1;
+    c.engine.delta_views = delta;
+    c.monitor.window_s = C_WINDOW_S;
+    c.monitor.sample_period_s = C_WINDOW_S;
+    c.service.arrivals = Some(ArrivalKind::Poisson);
+    c.service.rate_per_min = C_RATE_PER_MIN;
+    c.service.duration_s = duration_s;
+    c.service.queue_cap = C_QUEUE_CAP;
+    c.service.seed = DEFAULT_SEED;
+    c.obs.timeline = TimelineMode::Off;
+    c.artifacts_dir = artifacts_dir.to_string();
+    c
+}
+
+fn one_run(c: CarmaConfig, label: &str, artifacts_dir: &str) -> Result<(RunOutcome, f64), String> {
+    let est = estimators::build(c.estimator, artifacts_dir)?;
+    let t0 = Instant::now();
+    let out = run_service(c, est, label);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok((out, wall_s))
+}
+
+/// Scale + memory assertions for one million-arm run: the recorder stayed
+/// in stream mode with no per-task rows and a live map bounded by the
+/// in-flight set, the pre-sized lanes/arena never grew, terminal
+/// accounting holds, and the ViewStats match the configured arm.
+fn check_million(out: &RunOutcome, label: &str, shards: usize, delta: bool) -> Result<(), String> {
+    let s = &out.report.service;
+    if !s.open_loop {
+        return Err(format!("{label}: report is not flagged open-loop"));
+    }
+    let terminal = out.report.completed + out.recorder.failed_total as usize + s.shed as usize;
+    if terminal != s.offered {
+        return Err(format!(
+            "{label}: {terminal} terminal of {} offered — the drain leaked tasks",
+            s.offered
+        ));
+    }
+    // recorder memory: O(buckets + GPUs + in-flight), never O(offered)
+    if !out.recorder.stream() {
+        return Err(format!("{label}: timeline off must run the stream recorder"));
+    }
+    if !out.recorder.tasks.is_empty() {
+        return Err(format!(
+            "{label}: stream mode materialized {} per-task timing rows",
+            out.recorder.tasks.len()
+        ));
+    }
+    let gpus = M_SERVERS * M_GPUS_PER_SERVER;
+    let live_bound = 4 * (gpus + shards * M_QUEUE_CAP + shards + 8);
+    let live = out.recorder.live_high_water;
+    if live == 0 || live > live_bound {
+        return Err(format!(
+            "{label}: in-flight map peaked at {live} (bound {live_bound}, \
+             offered {}) — recorder memory is not O(in-flight)",
+            s.offered
+        ));
+    }
+    // arena event core: the live-set pre-sizing must hold at 10⁶ arrivals
+    let es = &out.engine_stats;
+    if es.lane_reallocs != 0 || es.arena_reallocs != 0 {
+        return Err(format!(
+            "{label}: pre-sized engine grew mid-run ({} lane / {} arena reallocs, \
+             high water {} of {})",
+            es.lane_reallocs, es.arena_reallocs, es.arena_high_water, es.arena_capacity
+        ));
+    }
+    let vs = &out.view_stats;
+    if delta && vs.delta_applies == 0 && vs.snapshot_hits == 0 {
+        return Err(format!("{label}: delta views on, but every snapshot fully rebuilt"));
+    }
+    if !delta && vs.delta_applies != 0 {
+        return Err(format!(
+            "{label}: delta views off, but {} delta applies ran",
+            vs.delta_applies
+        ));
+    }
+    Ok(())
+}
+
+struct Cell {
+    shards: usize,
+    threads: usize,
+    delta: bool,
+    out: RunOutcome,
+    wall_s: f64,
+}
+
+fn cell_json(c: &Cell) -> Json {
+    let vs = &c.out.view_stats;
+    let es = &c.out.engine_stats;
+    let s = &c.out.report.service;
+    json::obj(vec![
+        ("arm", json::s("million")),
+        ("shards", json::num(c.shards as f64)),
+        ("threads", json::num(c.threads as f64)),
+        ("delta_views", json::num(u64::from(c.delta) as f64)),
+        ("offered", json::num(s.offered as f64)),
+        ("shed", json::num(s.shed as f64)),
+        ("events", json::num(c.out.events as f64)),
+        ("wall_s", json::num(c.wall_s)),
+        ("events_per_s", json::num(c.out.events as f64 / c.wall_s)),
+        ("snapshot_hits", json::num(vs.snapshot_hits as f64)),
+        ("full_rebuilds", json::num(vs.full_rebuilds as f64)),
+        ("delta_applies", json::num(vs.delta_applies as f64)),
+        ("servers_rebuilt", json::num(vs.servers_rebuilt as f64)),
+        ("servers_reused", json::num(vs.servers_reused as f64)),
+        ("cache_hit_rate", json::num(vs.hit_rate())),
+        ("arena_high_water", json::num(es.arena_high_water as f64)),
+        ("arena_capacity", json::num(es.arena_capacity as f64)),
+        ("live_high_water", json::num(c.out.recorder.live_high_water as f64)),
+    ])
+}
+
+pub fn run(artifacts_dir: &str) -> Result<(), String> {
+    let smoke = bench::smoke_mode();
+    let (m_dur, c_dur, t_dur, reps, gate, min_offered) = if smoke {
+        (150.0, 2400.0, 60.0, 2, SMOKE_GATE, 20_000usize)
+    } else {
+        (6000.0, 14_400.0, 300.0, 3, GATE, 1_000_000usize)
+    };
+    let _ = std::fs::create_dir_all(format!("{artifacts_dir}/results"));
+    println!(
+        "Engine scale: million-task arm {M_SERVERS}×{M_GPUS_PER_SERVER} GPUs at \
+         {M_RATE_PER_MIN:.0}/min for {m_dur:.0}s; churn arm {C_SERVERS}×{C_GPUS_PER_SERVER} \
+         GPUs at {C_RATE_PER_MIN:.0}/min for {c_dur:.0}s; seed {DEFAULT_SEED} \
+         (gate {gate:.1}x{})\n",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    // -- phase 1: the 10⁶-task sweep ------------------------------------
+    println!(
+        "{:<7} {:>8} {:>6} {:>9} {:>9} {:>10} {:>8} {:>8} {:>9} {:>8} {:>8}",
+        "shards", "threads", "delta", "offered", "events", "events/s", "hits", "rebuild",
+        "delta-app", "live-hw", "wall(s)"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    for &shards in SHARD_SWEEP {
+        // one reference serialization per shard count: every (delta,
+        // threads) cell must byte-reproduce it (DESIGN.md §10 + §17)
+        let mut json_bits: Option<String> = None;
+        for &delta in &[true, false] {
+            for &threads in THREAD_SWEEP {
+                let label = format!("engine-scale/{shards}-shard");
+                let c = million_cfg(shards, threads, delta, m_dur, artifacts_dir);
+                let (out, wall_s) = one_run(c, &label, artifacts_dir)?;
+                check_million(&out, &label, shards, delta)?;
+                if out.report.service.offered < min_offered {
+                    return Err(format!(
+                        "{label}: only {} arrivals offered (needs >= {min_offered})",
+                        out.report.service.offered
+                    ));
+                }
+                let j = out.report.to_json().to_string_pretty();
+                match &json_bits {
+                    None => json_bits = Some(j),
+                    Some(prev) => {
+                        if *prev != j {
+                            return Err(format!(
+                                "{shards} shards: delta={delta} threads={threads} \
+                                 changed the results JSON — determinism broken"
+                            ));
+                        }
+                    }
+                }
+                let vs = &out.view_stats;
+                println!(
+                    "{:<7} {:>8} {:>6} {:>9} {:>9} {:>10.0} {:>8} {:>8} {:>9} {:>8} {:>8.2}",
+                    shards,
+                    threads,
+                    if delta { "on" } else { "off" },
+                    out.report.service.offered,
+                    out.events,
+                    out.events as f64 / wall_s,
+                    vs.snapshot_hits,
+                    vs.full_rebuilds,
+                    vs.delta_applies,
+                    out.recorder.live_high_water,
+                    wall_s,
+                );
+                cells.push(Cell { shards, threads, delta, out, wall_s });
+            }
+        }
+    }
+
+    // -- phase 2: JSONL trace byte-identity ------------------------------
+    // a short slice of the same stream, traced: identical bytes across
+    // engine threads {1,4} with delta on, and vs the delta-off baseline
+    println!("\ntrace identity ({t_dur:.0}s traced slice):");
+    for &shards in SHARD_SWEEP {
+        let mut reference: Option<Vec<u8>> = None;
+        for &(delta, threads) in &[(true, 1usize), (true, 4usize), (false, 1usize)] {
+            let label = format!("engine-scale/{shards}-shard");
+            let path = format!(
+                "{artifacts_dir}/results/engine_scale_trace_{shards}s_{}_{threads}t.jsonl",
+                if delta { "on" } else { "off" }
+            );
+            let mut c = million_cfg(shards, threads, delta, t_dur, artifacts_dir);
+            c.obs.trace_out = Some(path.clone());
+            let (_out, _) = one_run(c, &label, artifacts_dir)?;
+            let bytes = std::fs::read(&path).map_err(|e| format!("{path}: {e}"))?;
+            match &reference {
+                None => reference = Some(bytes),
+                Some(prev) => {
+                    if *prev != bytes {
+                        return Err(format!(
+                            "{shards} shards: trace JSONL diverged at delta={delta} \
+                             threads={threads} ({path})"
+                        ));
+                    }
+                }
+            }
+        }
+        let n = reference.map(|b| b.len()).unwrap_or(0);
+        println!("  {shards} shard(s): {n} bytes identical across threads {{1,4}} and delta on/off");
+    }
+
+    // -- phase 3: the view-churn-heavy gate ------------------------------
+    println!("\nview-churn arm ({C_SERVERS} servers, best of {reps}):");
+    let mut rates = [0.0f64; 2]; // [on, off]
+    let mut churn_events = 0u64;
+    let mut churn_json: Option<String> = None;
+    let mut churn_stats: Vec<Json> = Vec::new();
+    for (slot, &delta) in [true, false].iter().enumerate() {
+        let label = "engine-churn/4-shard";
+        let mut best = 0.0f64;
+        let mut kept: Option<(RunOutcome, f64)> = None;
+        for rep in 0..reps {
+            let c = churn_cfg(delta, c_dur, artifacts_dir);
+            let (out, wall_s) = one_run(c, label, artifacts_dir)?;
+            if rep == 0 && churn_events == 0 {
+                churn_events = out.events;
+            }
+            if out.events != churn_events {
+                return Err(format!(
+                    "{label}: event count drifted ({} vs {churn_events}) — \
+                     delta views changed the simulation",
+                    out.events
+                ));
+            }
+            best = best.max(out.events as f64 / wall_s);
+            kept = Some((out, wall_s));
+        }
+        let (out, wall_s) = kept.expect("reps >= 1");
+        // delta maintenance must be invisible in the results
+        let j = out.report.to_json().to_string_pretty();
+        match &churn_json {
+            None => churn_json = Some(j),
+            Some(prev) => {
+                if *prev != j {
+                    return Err(
+                        "churn arm: delta on vs off changed the results JSON".to_string()
+                    );
+                }
+            }
+        }
+        let vs = &out.view_stats;
+        if delta && vs.servers_reused <= vs.servers_rebuilt {
+            return Err(format!(
+                "churn arm: delta views reused {} server views but rebuilt {} — \
+                 the workload is not view-churn-dominated",
+                vs.servers_reused, vs.servers_rebuilt
+            ));
+        }
+        println!(
+            "  delta {:<4} {:>9} events  {:>10.0} events/s  (rebuilt {} / reused {}, \
+             hit rate {:.3}, wall {:.2}s)",
+            if delta { "on" } else { "off" },
+            out.events,
+            best,
+            vs.servers_rebuilt,
+            vs.servers_reused,
+            vs.hit_rate(),
+            wall_s,
+        );
+        churn_stats.push(json::obj(vec![
+            ("delta_views", json::num(u64::from(delta) as f64)),
+            ("events", json::num(out.events as f64)),
+            ("best_events_per_s", json::num(best)),
+            ("snapshot_hits", json::num(vs.snapshot_hits as f64)),
+            ("full_rebuilds", json::num(vs.full_rebuilds as f64)),
+            ("delta_applies", json::num(vs.delta_applies as f64)),
+            ("servers_rebuilt", json::num(vs.servers_rebuilt as f64)),
+            ("servers_reused", json::num(vs.servers_reused as f64)),
+        ]));
+        rates[slot] = best;
+    }
+    let speedup = rates[0] / rates[1].max(1e-9);
+    println!("\ndelta-views speedup on the churn arm: {speedup:.2}x (gate {gate:.1}x)");
+
+    // -- ledger ----------------------------------------------------------
+    let mut rows: Vec<Json> = cells.iter().map(cell_json).collect();
+    rows.push(json::obj(vec![
+        ("arm", json::s("churn")),
+        ("servers", json::num(C_SERVERS as f64)),
+        ("gpus_per_server", json::num(C_GPUS_PER_SERVER as f64)),
+        ("rate_per_min", json::num(C_RATE_PER_MIN)),
+        ("duration_s", json::num(c_dur)),
+        ("window_s", json::num(C_WINDOW_S)),
+        ("reps", json::num(reps as f64)),
+        ("smoke", json::num(u64::from(smoke) as f64)),
+        ("events", json::num(churn_events as f64)),
+        ("delta_on_events_per_s", json::num(rates[0])),
+        ("delta_off_events_per_s", json::num(rates[1])),
+        ("speedup", json::num(speedup)),
+        ("gate", json::num(gate)),
+        ("arms", json::arr(churn_stats)),
+    ]));
+    save_json("engine_scale", artifacts_dir, &json::arr(rows.clone()));
+    bench::save_bench_section("engine_scale", rows);
+
+    if speedup < gate {
+        return Err(format!(
+            "delta-views speedup {speedup:.2}x is below the {gate:.1}x gate \
+             on the view-churn-heavy arm"
+        ));
+    }
+    println!(
+        "\nReading: per-server epoch tags turn snapshot invalidation from\n\
+         O(cluster) per commit into O(touched servers): a dispatch or\n\
+         completion rebuilds one ServerView and carries the other {} forward\n\
+         by Arc bump, while the arena event core keeps the million-task\n\
+         arrival stream allocation-free after startup.",
+        C_SERVERS - 1
+    );
+    Ok(())
+}

@@ -7,6 +7,7 @@
 pub mod chaos_scale; // beyond the paper: fault injection + goodput degradation (DESIGN.md §15)
 pub mod cluster_scale; // beyond the paper: N-server scaling sweep
 pub mod common;
+pub mod engine_scale; // beyond the paper: delta views + arena event core at 10⁶ tasks (DESIGN.md §17)
 pub mod gang_scale; // beyond the paper: fabric-aware gang scheduling (DESIGN.md §11)
 pub mod obs_overhead; // beyond the paper: observability tax gate (DESIGN.md §14)
 pub mod placement_scale; // beyond the paper: island-aware singleton placement (DESIGN.md §12)
@@ -26,7 +27,7 @@ pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "table1", "fig6", "fig8", "table4", "fig9", "table5",
     "fig10", "table6", "fig11", "fig12", "table7", "cluster_scale", "shard_scale",
     "gang_scale", "placement_scale", "service_scale", "obs_overhead", "chaos_scale",
-    "trace_analyze",
+    "trace_analyze", "engine_scale",
 ];
 
 /// Dispatch one experiment by id. `artifacts_dir` must contain the AOT
@@ -56,6 +57,7 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<(), String> {
         "obs_overhead" => obs_overhead::run(artifacts_dir),
         "chaos_scale" => chaos_scale::run(artifacts_dir),
         "trace_analyze" => trace_analyze::run(artifacts_dir),
+        "engine_scale" => engine_scale::run(artifacts_dir),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

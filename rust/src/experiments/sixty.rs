@@ -132,7 +132,15 @@ mod tests {
     fn outcome(label: &str) -> (String, RunOutcome) {
         let r = Recorder::new(0, 0);
         let report = RunReport::from_recorder(label, &r);
-        (label.to_string(), RunOutcome { report, recorder: r, events: 0, profile: None })
+        let out = RunOutcome {
+            report,
+            recorder: r,
+            events: 0,
+            profile: None,
+            view_stats: Default::default(),
+            engine_stats: Default::default(),
+        };
+        (label.to_string(), out)
     }
 
     #[test]

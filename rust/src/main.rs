@@ -35,7 +35,8 @@ use carma::workload::trace::{trace_60, trace_90, trace_cluster, trace_gang};
 const VALUE_OPTS: &[&str] = &[
     "artifacts", "trace", "policy", "estimator", "colloc", "smact", "min-free", "margin",
     "servers", "gpus-per-server", "power-cap", "shards", "shard-assign", "engine-threads",
-    "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "seed", "config",
+    "fabric-profile", "gang-hold-ttl", "fabric-aware-singletons", "delta-views",
+    "seed", "config",
     "arrivals", "rate", "duration", "queue-cap",
     "faults", "fault-rate", "fault-seed",
     "trace-out", "explain-sample", "metrics-out", "timeline", "timeseries-out",
@@ -106,6 +107,10 @@ fn usage() {
          \x20                    rank server-local multi-GPU placements by island/fabric\n\
          \x20                    cost like gangs (default on; off = island-blind seed\n\
          \x20                    pipeline, byte-identical; DESIGN.md §12)\n\
+         \x20 --delta-views on|off\n\
+         \x20                    incremental per-server snapshot maintenance: a commit\n\
+         \x20                    on server s rebuilds only views[s] (default on; off =\n\
+         \x20                    full rebuild on any change, byte-identical; DESIGN.md §17)\n\
          \x20 --steal            bounded work stealing: an idle mapper that starves one\n\
          \x20                    observation window steals the longest sibling queue's\n\
          \x20                    tail (default off; deterministic, per-shard FIFO kept)\n\
@@ -258,6 +263,15 @@ fn build_config(args: &cli::Args) -> Result<CarmaConfig, String> {
                     "--fabric-aware-singletons expects on|off, got '{other}'"
                 ))
             }
+        };
+    }
+    if let Some(v) = args.opt("delta-views") {
+        cfg.engine.delta_views = match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            // off rebuilds every ServerView on any state change (the PR-3
+            // global-invalidation pipeline) — byte-identical, just slower
+            "off" | "false" | "0" => false,
+            other => return Err(format!("--delta-views expects on|off, got '{other}'")),
         };
     }
     if args.flag("steal") {

@@ -310,6 +310,10 @@ pub struct Recorder {
     /// In-flight task records (stream mode only), keyed by task id — a
     /// BTreeMap so iteration (finalize) is deterministic.
     live: BTreeMap<TaskId, TaskTiming>,
+    /// Peak size of the in-flight map — the O(in-flight) memory claim of
+    /// stream mode (DESIGN.md §14/§17), asserted by `repro engine_scale`
+    /// over million-task sweeps.
+    pub live_high_water: usize,
     /// Stream-mode running aggregates (complete only after `finalize`).
     pub agg: StreamAgg,
     win_smact_acc: f64,
@@ -356,6 +360,7 @@ impl Recorder {
             trace_dropped: 0,
             stream: false,
             live: BTreeMap::new(),
+            live_high_water: 0,
             agg: StreamAgg::default(),
             win_smact_acc: 0.0,
             win_mem_acc: 0.0,
@@ -407,7 +412,9 @@ impl Recorder {
     /// in-flight map entry in stream mode.
     fn timing_mut(&mut self, task: TaskId) -> &mut TaskTiming {
         if self.stream {
-            self.live.entry(task).or_default()
+            self.live.entry(task).or_default();
+            self.live_high_water = self.live_high_water.max(self.live.len());
+            self.live.get_mut(&task).expect("just inserted")
         } else {
             &mut self.tasks[task]
         }
@@ -1051,6 +1058,10 @@ mod tests {
         full.finalize(); // full mode: no-op
         assert!(st.tasks.is_empty(), "stream keeps no per-task table");
         assert!(st.live.is_empty(), "finalize drains the in-flight map");
+        // each task reached a terminal fold (or the horizon) before the
+        // next arrived, so the in-flight map never held more than one
+        assert_eq!(st.live_high_water, 1, "peak in-flight map size");
+        assert_eq!(full.live_high_water, 0, "full mode never touches the map");
         assert_eq!(st.offered(), full.offered());
         assert_eq!(st.completed_count(), full.completed_count());
         assert!((st.avg_waiting_s() - full.avg_waiting_s()).abs() < 1e-9);

@@ -80,8 +80,15 @@ impl Profiler {
     /// Profile section for `RunOutcome::profile` (stderr only — never part
     /// of the byte-compared report). `pool` is `(threads, rounds,
     /// caller_jobs, worker_jobs)` from the worker pool's occupancy
-    /// counters; `events` the engine's processed-event total.
-    pub fn to_json(&self, events: u64, pool: Option<(usize, u64, u64, u64)>) -> Json {
+    /// counters; `events` the engine's processed-event total. `extra`
+    /// carries caller-built sections (view-maintenance counters, arena
+    /// high-water marks) so this module stays ignorant of driver types.
+    pub fn to_json(
+        &self,
+        events: u64,
+        pool: Option<(usize, u64, u64, u64)>,
+        extra: Vec<(&'static str, Json)>,
+    ) -> Json {
         let wall_s = self.born.elapsed().as_secs_f64();
         let mut phases = Vec::with_capacity(4);
         for (i, key) in PHASE_KEYS.iter().enumerate() {
@@ -127,6 +134,9 @@ impl Profiler {
                 ]),
             );
         }
+        for (key, section) in extra {
+            j.set(key, section);
+        }
         j
     }
 }
@@ -156,7 +166,8 @@ mod tests {
         }
         assert!(p.phase_secs(Phase::SerialCommit) >= 0.004);
         assert_eq!(p.phase_secs(Phase::SnapshotBuild), 0.0);
-        let j = p.to_json(1000, Some((4, 10, 6, 14)));
+        let j = p.to_json(1000, Some((4, 10, 6, 14)), vec![("views", json::obj(vec![("hits", json::num(7.0))]))]);
+        assert_eq!(j.get("views").unwrap().f64_of("hits"), 7.0);
         assert!(j.get("phases").unwrap().f64_of("serial_commit_s") > 0.0);
         assert_eq!(j.get("phase_calls").unwrap().f64_of("serial_commit"), 3.0);
         assert!(j.f64_of("wall_s") > 0.0);
@@ -169,7 +180,7 @@ mod tests {
     #[test]
     fn profile_json_without_pool_omits_the_section() {
         let p = Profiler::new(true);
-        let j = p.to_json(0, None);
+        let j = p.to_json(0, None, Vec::new());
         assert!(j.get("pool").is_none());
         assert_eq!(j.f64_of("events_per_sec"), 0.0);
     }

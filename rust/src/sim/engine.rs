@@ -67,11 +67,24 @@ pub enum Event {
     FaultRepair(usize),
 }
 
-#[derive(Debug)]
+/// Heap node: the event payload lives in the arena (`Engine::arena`), the
+/// heap only moves this 24-byte key around during sifts. `idx`/`gen` form a
+/// generational index into the arena: `gen` must match the slot's current
+/// generation, which catches any stale handle after a slot is recycled
+/// through the free list (debug builds assert it on pop).
+#[derive(Debug, Clone, Copy)]
 struct Entry {
     t: f64,
     seq: u64,
-    ev: Event,
+    idx: u32,
+    gen: u32,
+}
+
+/// One arena slot. `ev` is `None` while the slot sits on the free list.
+#[derive(Debug)]
+struct Slot {
+    gen: u32,
+    ev: Option<Event>,
 }
 
 impl PartialEq for Entry {
@@ -114,9 +127,40 @@ pub struct Engine {
     index: Vec<usize>,
     /// `pos[lane]` = the lane's slot in `index` (ABSENT when empty).
     pos: Vec<usize>,
+    /// Event arena: payloads live here exactly once; heap entries carry a
+    /// generational `(idx, gen)` handle. Slots are recycled through `free`,
+    /// so `arena.len()` only grows when more events are pending than ever
+    /// before — it doubles as the high-water mark of concurrent events.
+    arena: Vec<Slot>,
+    /// Recycled arena slot indices (LIFO: hot slots stay cache-warm).
+    free: Vec<u32>,
     now: f64,
     seq: u64,
     pops: u64,
+    /// Discrete time quantum: bumped every time a pop advances the clock to
+    /// a strictly later timestamp. Ties (and bit-distinct-but-equal floats
+    /// like `-0.0` vs `0.0`) share a quantum, which makes this the correct
+    /// cache key for time-derived state — `now.to_bits()` is not.
+    quantum: u64,
+    /// Lane-heap grows past their pre-sized capacity (perf regression
+    /// counter: a correctly pre-sized run never reallocates mid-run).
+    lane_reallocs: u64,
+    /// Arena grows past its pre-sized capacity.
+    arena_reallocs: u64,
+}
+
+/// Allocation-behavior counters for perf accounting (`--profile`, the
+/// `engine_scale` study and the pre-sizing regression tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Peak number of simultaneously pending events (arena slots ever used).
+    pub arena_high_water: usize,
+    /// Current arena capacity (pre-sized at construction).
+    pub arena_capacity: usize,
+    /// Times any lane heap grew beyond its pre-sized capacity.
+    pub lane_reallocs: u64,
+    /// Times the arena grew beyond its pre-sized capacity.
+    pub arena_reallocs: u64,
 }
 
 impl Default for Engine {
@@ -125,9 +169,14 @@ impl Default for Engine {
             lanes: vec![BinaryHeap::new()],
             index: Vec::with_capacity(1),
             pos: vec![ABSENT],
+            arena: Vec::new(),
+            free: Vec::new(),
             now: 0.0,
             seq: 0,
             pops: 0,
+            quantum: 0,
+            lane_reallocs: 0,
+            arena_reallocs: 0,
         }
     }
 }
@@ -143,6 +192,8 @@ impl Engine {
     pub fn with_capacity(n: usize) -> Self {
         Engine {
             lanes: vec![BinaryHeap::with_capacity(n)],
+            arena: Vec::with_capacity(n),
+            free: Vec::with_capacity(n),
             ..Self::default()
         }
     }
@@ -166,13 +217,20 @@ impl Engine {
         for _ in 1..n {
             lanes.push(BinaryHeap::with_capacity(per_lane));
         }
+        // the arena holds every pending event across all lanes
+        let total = lane0 + (n - 1) * per_lane;
         Engine {
             lanes,
             index: Vec::with_capacity(n),
             pos: vec![ABSENT; n],
+            arena: Vec::with_capacity(total),
+            free: Vec::with_capacity(total),
             now: 0.0,
             seq: 0,
             pops: 0,
+            quantum: 0,
+            lane_reallocs: 0,
+            arena_reallocs: 0,
         }
     }
 
@@ -187,6 +245,25 @@ impl Engine {
     /// Total events popped since construction (throughput accounting).
     pub fn events_processed(&self) -> u64 {
         self.pops
+    }
+
+    /// Discrete time quantum: increments exactly when a pop advances the
+    /// clock to a strictly later timestamp, so all events sharing one
+    /// timestamp — including bit-distinct-but-equal floats — share one
+    /// quantum. The coordinator keys time-derived caches on this instead of
+    /// `now.to_bits()`.
+    pub fn quantum(&self) -> u64 {
+        self.quantum
+    }
+
+    /// Allocation counters (pre-sizing regression accounting).
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            arena_high_water: self.arena.len(),
+            arena_capacity: self.arena.capacity(),
+            lane_reallocs: self.lane_reallocs,
+            arena_reallocs: self.arena_reallocs,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -215,10 +292,15 @@ impl Engine {
             self.now
         );
         self.seq += 1;
+        let (idx, gen) = self.alloc_slot(ev);
+        if self.lanes[lane].len() == self.lanes[lane].capacity() {
+            self.lane_reallocs += 1;
+        }
         self.lanes[lane].push(Entry {
             t: t.max(self.now),
             seq: self.seq,
-            ev,
+            idx,
+            gen,
         });
         // the lane's head can only get earlier (or stay) on push
         if self.pos[lane] == ABSENT {
@@ -245,9 +327,15 @@ impl Engine {
             self.sift_down(0);
         }
         debug_assert!(e.t >= self.now - 1e-9);
+        if e.t > self.now {
+            // strictly later timestamp: a new time quantum begins. Numeric
+            // comparison (not to_bits) so -0.0 / 0.0 share quantum 0.
+            self.quantum += 1;
+        }
         self.now = e.t.max(self.now);
         self.pops += 1;
-        Some((self.now, e.ev))
+        let ev = self.free_slot(e.idx, e.gen);
+        Some((self.now, ev))
     }
 
     /// Timestamp of the globally next event without popping it.
@@ -280,6 +368,41 @@ impl Engine {
             buf.push(e);
         }
         buf.len()
+    }
+
+    // -- event arena ---------------------------------------------------------
+
+    /// Store `ev` in a recycled (or fresh) arena slot; returns its handle.
+    #[inline]
+    fn alloc_slot(&mut self, ev: Event) -> (u32, u32) {
+        match self.free.pop() {
+            Some(idx) => {
+                let slot = &mut self.arena[idx as usize];
+                debug_assert!(slot.ev.is_none(), "free-listed slot is vacant");
+                slot.ev = Some(ev);
+                (idx, slot.gen)
+            }
+            None => {
+                if self.arena.len() == self.arena.capacity() {
+                    self.arena_reallocs += 1;
+                }
+                let idx = u32::try_from(self.arena.len()).expect("arena indices fit u32");
+                self.arena.push(Slot { gen: 0, ev: Some(ev) });
+                (idx, 0)
+            }
+        }
+    }
+
+    /// Take the event out of slot `idx`, retire the generation and recycle
+    /// the slot.
+    #[inline]
+    fn free_slot(&mut self, idx: u32, gen: u32) -> Event {
+        let slot = &mut self.arena[idx as usize];
+        debug_assert_eq!(slot.gen, gen, "stale generational handle on pop");
+        let ev = slot.ev.take().expect("popped entry points at a live slot");
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(idx);
+        ev
     }
 
     // -- tournament index maintenance ----------------------------------------
@@ -641,5 +764,95 @@ mod tests {
             last = t;
         }
         assert_eq!(e.events_processed(), 64);
+    }
+
+    #[test]
+    fn quantum_advances_only_on_strictly_later_times() {
+        let mut e = Engine::new();
+        e.schedule(0.0, Event::TaskArrival(0));
+        e.schedule(0.0, Event::TaskArrival(1));
+        e.schedule(1.0, Event::TaskArrival(2));
+        e.schedule(1.0, Event::TaskArrival(3));
+        e.schedule(2.5, Event::TaskArrival(4));
+        assert_eq!(e.quantum(), 0);
+        e.pop();
+        e.pop();
+        assert_eq!(e.quantum(), 0, "ties at t=0 share the initial quantum");
+        e.pop();
+        assert_eq!(e.quantum(), 1);
+        e.pop();
+        assert_eq!(e.quantum(), 1, "ties share a quantum");
+        e.pop();
+        assert_eq!(e.quantum(), 2);
+    }
+
+    #[test]
+    fn quantum_treats_negative_zero_as_equal_time() {
+        // regression for the snapshot cache-key fix: -0.0 and 0.0 have
+        // different bit patterns but are the same instant — keying a cache
+        // on now.to_bits() would silently rebuild between these two pops
+        let mut e = Engine::new();
+        assert_ne!((-0.0f64).to_bits(), 0.0f64.to_bits());
+        e.schedule(-0.0, Event::TaskArrival(0));
+        e.schedule(0.0, Event::TaskArrival(1));
+        e.pop();
+        let q0 = e.quantum();
+        e.pop();
+        assert_eq!(e.quantum(), q0, "-0.0 and 0.0 must share one quantum");
+        assert_eq!(e.quantum(), 0);
+    }
+
+    #[test]
+    fn arena_recycles_slots_and_reports_high_water() {
+        let mut e = Engine::with_capacity(8);
+        // steady-state schedule/pop cycles must reuse one slot forever
+        for i in 0..1_000 {
+            e.schedule_in(1.0, Event::TaskArrival(i));
+            e.pop();
+        }
+        assert_eq!(e.stats().arena_high_water, 1, "free list recycles the slot");
+        assert_eq!(e.stats().arena_reallocs, 0);
+        // high water follows the max number of simultaneously pending events
+        for i in 0..5 {
+            e.schedule_in(1.0, Event::TaskArrival(i));
+        }
+        while e.pop().is_some() {}
+        assert_eq!(e.stats().arena_high_water, 5);
+    }
+
+    #[test]
+    fn presized_engine_never_reallocates_under_load() {
+        // tournament + arena audit at scale: a correctly pre-sized engine
+        // must not grow any lane heap or the arena mid-run, and the merged
+        // stream must stay (time, seq)-ordered
+        use crate::util::rng::Rng;
+        const N: usize = 100_000;
+        let lanes = 5;
+        let per = N / lanes + 16;
+        let mut e = Engine::with_lane_capacities(lanes, per, per);
+        let mut rng = Rng::new(0xA11E);
+        let mut pending = 0usize;
+        let mut popped = 0usize;
+        let mut last = (0.0f64, 0u64);
+        let mut scheduled = 0usize;
+        while scheduled < N || pending > 0 {
+            if scheduled < N && (pending == 0 || rng.bool(0.55)) && pending < per {
+                let t = e.now() + (rng.range_usize(0, 16) as f64) * 0.125;
+                e.schedule_on(rng.range_usize(0, lanes), t, Event::TaskArrival(scheduled));
+                scheduled += 1;
+                pending += 1;
+            } else {
+                let (t, _) = e.pop().expect("pending events");
+                assert!(t >= last.0);
+                last = (t, 0);
+                popped += 1;
+                pending -= 1;
+            }
+        }
+        assert_eq!(popped, N);
+        let s = e.stats();
+        assert_eq!(s.lane_reallocs, 0, "pre-sized lanes must never grow");
+        assert_eq!(s.arena_reallocs, 0, "pre-sized arena must never grow");
+        assert!(s.arena_high_water <= per);
     }
 }

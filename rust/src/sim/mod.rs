@@ -10,5 +10,5 @@ pub mod engine;
 pub mod faults;
 pub mod parallel;
 
-pub use engine::{Engine, Event, TaskId};
+pub use engine::{Engine, EngineStats, Event, TaskId};
 pub use parallel::WorkerPool;

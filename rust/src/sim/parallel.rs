@@ -177,7 +177,20 @@ impl WorkerPool {
             let mut slot = self.shared.slot.lock().expect("pool lock");
             slot.generation += 1;
             slot.round = Some(round.clone());
-            self.shared.start.notify_all();
+            // wake only as many workers as there are jobs beyond the
+            // caller's own: delta view maintenance produces many tiny
+            // rounds (1-3 stale servers), and a full notify_all would pay
+            // len(pool) futile wakeups per round. Missed wakeups are safe:
+            // the caller drains every unclaimed index itself, and a busy
+            // worker re-checks the generation without needing a signal.
+            let helpers = (n - 1).min(self.handles.len());
+            if helpers == self.handles.len() {
+                self.shared.start.notify_all();
+            } else {
+                for _ in 0..helpers {
+                    self.shared.start.notify_one();
+                }
+            }
         }
 
         // participate in the round
@@ -337,6 +350,18 @@ mod tests {
             for (i, v) in out.iter().enumerate() {
                 assert_eq!(*v, round * 1_000 + i as u64);
             }
+        }
+    }
+
+    #[test]
+    fn tiny_rounds_on_wide_pools_complete() {
+        // rounds smaller than the pool (the delta-views snapshot pattern)
+        // must complete even though only a subset of workers is woken
+        let pool = WorkerPool::new(8);
+        for round in 0..500usize {
+            let n = 2 + round % 3;
+            let out = pool.map(n, &|i| i + round);
+            assert_eq!(out, (0..n).map(|i| i + round).collect::<Vec<_>>());
         }
     }
 

@@ -5,11 +5,13 @@
 //! interleavings under adaptive backoff and pinned demotion) and
 //! equal-timestamp arrival bursts (FIFO ties across the merge barrier).
 
-use carma::config::schema::{CarmaConfig, ClusterConfig, EstimatorKind, PolicyKind};
-use carma::coordinator::carma::{run_trace, RunOutcome};
+use carma::config::schema::{
+    ArrivalKind, CarmaConfig, ClusterConfig, EstimatorKind, FaultProfile, PolicyKind,
+};
+use carma::coordinator::carma::{run_service, run_trace, RunOutcome};
 use carma::estimators;
 use carma::workload::model_zoo::ModelZoo;
-use carma::workload::trace::{trace_cluster, TraceSpec};
+use carma::workload::trace::{trace_cluster, trace_gang, TraceSpec};
 
 fn run_with(
     threads: usize,
@@ -152,6 +154,107 @@ fn auto_thread_count_completes_and_matches() {
     let auto = run_with(0, 2, PolicyKind::Magm, EstimatorKind::Oracle, Some(0.8), 2.0, &trace);
     assert_eq!(serial.report.completed, 48);
     assert_byte_identical(&serial, &auto, "auto threads");
+}
+
+// -- delta-view differential property suite (DESIGN.md §17) -----------------
+//
+// `engine.verify_views` re-derives every `ServerView` from scratch after
+// EVERY commit and field-compares it (float bits included) against the
+// delta-maintained snapshot — the handlers panic on the first divergence.
+// Running it over traces that exercise each commit kind IS the differential
+// property test: delta-maintained views == from-scratch rebuild after every
+// dispatch, completion, OOM, shed, gang hold/expire, and fault
+// strike/repair, at every shard and thread count.
+
+#[test]
+fn delta_views_match_rebuild_under_gang_fault_and_oom_commits() {
+    // blind Round-Robin overload on 2×4 GPUs with distributed jobs and
+    // mixed fault injection: dispatch, completion, OOM release, gang
+    // hold/expire, and Gpu/Server/Link strike+repair commits all run under
+    // the per-commit differential check
+    let zoo = ModelZoo::load();
+    let trace = trace_gang(&zoo, 36, 8, 4, 13);
+    for &shards in &[1usize, 4] {
+        let mut json_bits: Option<String> = None;
+        for &threads in &[1usize, 4] {
+            let mut c = CarmaConfig {
+                policy: PolicyKind::RoundRobin,
+                estimator: EstimatorKind::None,
+                ..Default::default()
+            };
+            c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+            c.coordinator.shards = shards;
+            c.engine.threads = threads;
+            c.engine.verify_views = true;
+            c.faults.profile = FaultProfile::Mixed;
+            c.faults.rate_per_hour = 24.0;
+            let e = estimators::build(EstimatorKind::None, "artifacts").unwrap();
+            let out = run_trace(c, e, &trace, "delta-differential");
+            assert!(
+                out.view_stats.verified > 0,
+                "differential check never ran ({shards} shards, {threads} threads)"
+            );
+            assert!(
+                out.report.gang.gangs > 0,
+                "trace must exercise the gang lane"
+            );
+            let j = out.report.to_json().to_string_pretty();
+            match &json_bits {
+                None => json_bits = Some(j),
+                Some(prev) => assert_eq!(
+                    *prev, j,
+                    "{shards} shards: {threads} threads changed the verified run"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_views_match_rebuild_under_open_loop_shed_commits() {
+    // saturating open-loop arrivals against tiny bounded queues: the shed
+    // commit path (plus dispatch/completion churn) under the per-commit
+    // differential check, swept over shards × threads × delta on/off —
+    // every cell must produce the same verified bytes
+    for &shards in &[1usize, 4] {
+        let mut json_bits: Option<String> = None;
+        for &delta in &[true, false] {
+            for &threads in &[1usize, 4] {
+                let mut c = CarmaConfig {
+                    policy: PolicyKind::Magm,
+                    estimator: EstimatorKind::Oracle,
+                    smact_cap: Some(0.8),
+                    safety_margin_gb: 2.0,
+                    ..Default::default()
+                };
+                c.cluster = ClusterConfig::homogeneous(2, 4, 40.0);
+                c.coordinator.shards = shards;
+                c.engine.threads = threads;
+                c.engine.delta_views = delta;
+                c.engine.verify_views = true;
+                c.service.arrivals = Some(ArrivalKind::Poisson);
+                c.service.rate_per_min = 60.0;
+                c.service.duration_s = 600.0;
+                c.service.queue_cap = 2;
+                let e = estimators::build(EstimatorKind::Oracle, "artifacts").unwrap();
+                let out = run_service(c, e, "delta-differential-service");
+                assert!(out.view_stats.verified > 0, "differential check never ran");
+                assert!(
+                    out.report.service.shed > 0,
+                    "saturating rate must exercise the shed commit path"
+                );
+                let j = out.report.to_json().to_string_pretty();
+                match &json_bits {
+                    None => json_bits = Some(j),
+                    Some(prev) => assert_eq!(
+                        *prev, j,
+                        "{shards} shards: delta={delta} threads={threads} \
+                         changed the verified open-loop run"
+                    ),
+                }
+            }
+        }
+    }
 }
 
 #[test]

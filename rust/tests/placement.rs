@@ -409,7 +409,7 @@ fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
             id: sid,
             power_w: rng.range_f64(100.0, 1400.0),
             power_cap_w: capped.then(|| rng.range_f64(200.0, 1300.0)),
-            gpus,
+            gpus: gpus.into(),
         });
     }
     Scenario {
